@@ -1,0 +1,96 @@
+//! End-to-end driver (DESIGN.md headline experiment): k-means and GMM on a
+//! MixGaussian dataset across the three execution modes the paper
+//! compares — FM-IM (in-memory), FM-EM (out-of-core on the simulated SSD
+//! array) and the eager MLlib-like baseline — reporting runtime,
+//! throughput, peak memory and clustering quality (centroid recovery).
+//!
+//! Run: `cargo run --release --example kmeans_clustering -- [--n 500000] [--k 10]`
+
+use flashmatrix::algs;
+use flashmatrix::datasets;
+use flashmatrix::harness::{engine_for, Mode, Scale};
+use flashmatrix::util::cli::Args;
+
+fn main() -> flashmatrix::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    let mut s = Scale::default();
+    s.n = args.u64_or("n", 500_000);
+    s.iters = args.usize_or("iters", 5);
+    let k = args.usize_or("k", 10);
+    let p = 32u64;
+
+    println!("== FlashMatrix end-to-end: k-means + GMM on MixGaussian {}x{p}, k={k} ==", s.n);
+
+    let mut im_kmeans_secs = 0.0;
+    for mode in [Mode::FmIm, Mode::FmEm, Mode::MllibLike] {
+        // the eager baseline gets a 10x smaller input; times are
+        // normalized per row for comparability (see harness::fig6a)
+        let n = if mode == Mode::MllibLike { s.n / 10 } else { s.n };
+        let eng = engine_for(&s, mode, s.threads)?;
+        let t0 = std::time::Instant::now();
+        let (x, true_means) = datasets::mix_gaussian(&eng, n, p, k as u64, 8.0, 42, None)?;
+        let gen_secs = t0.elapsed().as_secs_f64();
+        eng.metrics.reset();
+
+        // ---- k-means
+        let t0 = std::time::Instant::now();
+        let km = algs::kmeans(&x, k, s.iters, 1)?;
+        let km_secs = t0.elapsed().as_secs_f64() * (s.n as f64 / n as f64);
+        if mode == Mode::FmIm {
+            im_kmeans_secs = km_secs;
+        }
+
+        // quality: every fitted centroid close to a true component mean
+        let mut worst = 0.0f64;
+        for ci in 0..k {
+            let best = (0..k)
+                .map(|t| {
+                    (0..p as usize)
+                        .map(|j| {
+                            let d = km.centroids.get(ci, j).as_f64() - true_means.get(t, j).as_f64();
+                            d * d
+                        })
+                        .sum::<f64>()
+                        .sqrt()
+                })
+                .fold(f64::INFINITY, f64::min);
+            worst = worst.max(best);
+        }
+
+        // ---- GMM (fewer iterations; it is ~k x heavier per pass)
+        let t0 = std::time::Instant::now();
+        let gm = algs::gmm(&x, k, 2, 1)?;
+        let gmm_secs = t0.elapsed().as_secs_f64() * (s.n as f64 / n as f64);
+
+        let m = eng.metrics.snapshot();
+        let gb = (s.n * p * 8) as f64 / 1e9;
+        println!("\n-- {} (dataset {:.1}s) --", mode.label(), gen_secs);
+        println!(
+            "  kmeans : {km_secs:7.2}s  ({:5.2} GB/s/iter)  wcss {:.3e} -> {:.3e}  worst-centroid-err {worst:.3}",
+            gb * s.iters as f64 / km_secs,
+            km.wcss.first().unwrap(),
+            km.wcss.last().unwrap(),
+        );
+        println!(
+            "  gmm    : {gmm_secs:7.2}s  loglik {:.4e} -> {:.4e}",
+            gm.loglik.first().unwrap(),
+            gm.loglik.last().unwrap()
+        );
+        println!(
+            "  io read {:.2} GB in {} reqs; peak tracked mem {:.2} GB; xla/native partitions {}/{}",
+            m.io_read_bytes as f64 / 1e9,
+            m.io_read_reqs,
+            m.mem_peak as f64 / 1e9,
+            m.xla_dispatches,
+            m.native_partitions
+        );
+        if mode == Mode::FmEm && im_kmeans_secs > 0.0 {
+            println!(
+                "  headline: EM kmeans at {:.0}% of IM performance",
+                100.0 * im_kmeans_secs / km_secs
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,50 @@
+//! Quickstart: the R-like `fmr` API in 60 lines.
+//!
+//! Mirrors the paper's programming model: build matrices with `fm.*`
+//! constructors, chain GenOp-backed operations lazily, and let the engine
+//! run everything in one fused, parallel pass when a result is needed.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use flashmatrix::dtype::Scalar;
+use flashmatrix::fmr::{Engine, FmMatrix};
+use flashmatrix::vudf::AggOp;
+use flashmatrix::EngineConfig;
+
+fn main() -> flashmatrix::Result<()> {
+    // An in-memory engine with default (fully-optimized) configuration.
+    let eng = Engine::new(EngineConfig::default())?;
+
+    // fm.runif.matrix(1e6, 4): a million-row random matrix. Nothing is
+    // computed yet — this is a virtual matrix.
+    let x = FmMatrix::runif_matrix(&eng, 1_000_000, 4, -1.0, 1.0, 42);
+
+    // R: y <- abs(x) + x^2 * 0.5       (still virtual: a 4-node DAG)
+    let y = x.abs()?.add(&x.sq()?.mul_scalar(0.5)?)?;
+
+    // R: sum(y) — a sink; the whole DAG fuses into ONE parallel pass.
+    let total = y.sum()?;
+    println!("sum(|x| + 0.5 x^2)  = {total:.3}");
+
+    // R: colSums(x^2) — another single fused pass.
+    let l2 = x.sq()?.col_sums()?;
+    println!("colSums(x^2)        = {:?}", l2.buf.to_f64_vec());
+
+    // Row reductions stay lazy (they keep the long dimension): chain them.
+    let row_norm = x.sq()?.row_sums()?.sqrt()?;
+    println!("max row norm        = {:.4}", row_norm.max()?);
+
+    // Generalized operators: count rows whose norm exceeds 1.
+    let big = row_norm.mapply_scalar(Scalar::F64(1.0), flashmatrix::vudf::BinOp::Gt, true)?;
+    let count = big.agg(AggOp::Sum)?.as_i64();
+    println!("rows with norm > 1  = {count}");
+
+    // Transpose is a zero-copy view; t(X) %*% X is the Gramian sink.
+    let g = x.crossprod(&x)?;
+    println!("gramian diag        = {:?}", (0..4).map(|i| g.get(i, i).as_f64()).collect::<Vec<_>>());
+
+    // Matrices are immutable; every op returned a new (virtual) matrix and
+    // dropped intermediates were garbage-collected automatically.
+    println!("engine peak memory  = {:.1} MB", eng.metrics.snapshot().mem_peak as f64 / 1e6);
+    Ok(())
+}

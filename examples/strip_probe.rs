@@ -1,0 +1,34 @@
+//! Perf probe: sensitivity of the fused pipeline to the CPU-level strip
+//! size (the paper's CPU-partition size, §III-B1). Used during the §Perf
+//! pass (EXPERIMENTS.md) to verify the 64 KiB default sits on the flat
+//! part of the curve.
+//!
+//! Run: `cargo run --release --example strip_probe`
+
+use flashmatrix::config::EngineConfig;
+use flashmatrix::datasets;
+use flashmatrix::fmr::Engine;
+
+fn main() {
+    for kb in [16usize, 64, 128, 256, 512, 1024] {
+        let eng = Engine::new(EngineConfig {
+            cpu_part_bytes: kb << 10,
+            xla_dispatch: false,
+            ..Default::default()
+        })
+        .unwrap();
+        let x = datasets::uniform(&eng, 800_000, 32, -1.0, 1.0, 3, None).unwrap();
+        let t0 = std::time::Instant::now();
+        for _ in 0..3 {
+            flashmatrix::algs::summary(&x).unwrap();
+        }
+        let su = t0.elapsed().as_secs_f64() / 3.0;
+        let t0 = std::time::Instant::now();
+        flashmatrix::algs::kmeans(&x, 10, 2, 1).unwrap();
+        let km = t0.elapsed().as_secs_f64();
+        println!(
+            "strip {kb:4} KiB: summary {su:.3}s ({:.2} GB/s)  kmeans(2 iter) {km:.3}s",
+            (800_000.0 * 32.0 * 8.0) / su / 1e9
+        );
+    }
+}

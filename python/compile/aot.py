@@ -1,0 +1,126 @@
+"""AOT compile path: lower every L2 model variant to HLO *text* artifacts.
+
+Emits artifacts/<name>.hlo.txt plus artifacts/manifest.json describing each
+artifact's input/output shapes and dtypes. The Rust runtime
+(rust/src/runtime/) reads the manifest, compiles each module on the PJRT CPU
+client on first use, and dispatches per-partition algorithm steps whose
+shapes match. Python never runs after this script.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` 0.1.6 crate binds) rejects (`proto.id() <=
+INT_MAX`); the text parser reassigns ids and round-trips cleanly. Lowering
+goes through stablehlo -> XlaComputation with return_tuple=True, so the Rust
+side always unwraps a tuple (Literal::to_tuple).
+
+Usage: (cd python && python -m compile.aot --out-dir ../artifacts)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+jax.config.update("jax_enable_x64", True)
+
+# Column widths the benches sweep (Fig 9) and cluster counts (Fig 10).
+P_SWEEP = [8, 16, 32, 64, 128, 256, 512]
+K_SWEEP = [2, 4, 8, 10, 16, 32, 64]
+DTYPE = jnp.float64
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=DTYPE):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _dtype_name(dt) -> str:
+    return jnp.dtype(dt).name
+
+
+def _shapes(tree):
+    return [
+        {"shape": list(x.shape), "dtype": _dtype_name(x.dtype)}
+        for x in jax.tree_util.tree_leaves(tree)
+    ]
+
+
+def build_variants():
+    """Yield (name, fn, input_specs, meta) for every artifact to emit."""
+    for p in P_SWEEP:
+        rows = model.io_rows_for(p)
+        x = _spec((rows, p))
+        yield (f"summary_p{p}", model.summary_step, (x,),
+               {"kind": "summary", "rows": rows, "p": p})
+        yield (f"gramian_p{p}", model.gramian_step, (x,),
+               {"kind": "gramian", "rows": rows, "p": p})
+        yield (f"gramian_centered_p{p}", model.gramian_centered_step,
+               (x, _spec((p,))),
+               {"kind": "gramian_centered", "rows": rows, "p": p})
+    p = 32
+    rows = model.io_rows_for(p)
+    x = _spec((rows, p))
+    for k in K_SWEEP:
+        yield (f"kmeans_p{p}_k{k}", model.kmeans_step, (x, _spec((k, p))),
+               {"kind": "kmeans", "rows": rows, "p": p, "k": k})
+        yield (f"gmm_p{p}_k{k}", model.gmm_estep,
+               (x, _spec((k, p)), _spec((k, p, p)), _spec((k,)), _spec((k,))),
+               {"kind": "gmm", "rows": rows, "p": p, "k": k})
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated artifact-name prefixes to emit")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    only = args.only.split(",") if args.only else None
+    manifest = []
+    for name, fn, specs, meta in build_variants():
+        if only and not any(name.startswith(o) for o in only):
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        out_tree = jax.eval_shape(fn, *specs)
+        manifest.append({
+            "name": name,
+            "file": fname,
+            "inputs": _shapes(specs),
+            "outputs": _shapes(out_tree),
+            **meta,
+        })
+        print(f"  {name}: {len(text)} chars, "
+              f"{len(manifest[-1]['inputs'])} in -> "
+              f"{len(manifest[-1]['outputs'])} out")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump({"elem_bytes": 8,
+                   "target_part_bytes": model.TARGET_PART_BYTES,
+                   "min_io_rows": model.MIN_IO_ROWS,
+                   "max_io_rows": model.MAX_IO_ROWS,
+                   "artifacts": manifest}, f, indent=1)
+    print(f"wrote {len(manifest)} artifacts + manifest.json to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

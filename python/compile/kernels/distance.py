@@ -1,0 +1,83 @@
+"""L1 Pallas kernel: fused pairwise-distance + argmin (k-means assignment).
+
+This is the paper's hottest loop — for every data point, the squared
+Euclidean distance to every centroid and the index of the nearest one
+(FlashMatrix expresses it as `fm.inner.prod` with (sub, sq-add) VUDFs
+followed by `fm.agg.row(min)`; the engine fuses them in CPU cache).
+
+Hardware adaptation (paper: SSD->DRAM->L1 streaming; here: HBM->VMEM tiles):
+  * the grid walks row tiles of X — one tile ≙ one CPU-level partition.
+    Each tile is resident in VMEM while *all* fused work (matmul, +norms,
+    min, argmin) completes, exactly the cache-fuse schedule of §III-F.
+  * the centroid matrix C (k×p, tiny) is mapped whole into VMEM and
+    revisited by every grid step — the analogue of the paper keeping the
+    per-iteration state matrices in CPU cache.
+  * distances are computed as ||x||² - 2·X@Cᵀ + ||c||² so the dominant
+    FLOPs are a (tile × p) @ (p × k) matmul that targets the MXU systolic
+    array; the elementwise epilogue (adds, min, argmin) is VPU work on an
+    already-resident tile.
+
+VMEM footprint per grid step (defaults tile=4096, p=32, k≤64, f64):
+  x tile 1 MiB + C ≤16 KiB + d tile ≤512 KiB + outputs ≤40 KiB ≈ 0.8 MiB,
+  comfortably under a 16 MiB VMEM budget; documented for DESIGN.md §Perf.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; correctness is validated through the interpret path and
+TPU efficiency is argued structurally (see DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE = 4096
+
+
+def _assign_kernel(x_ref, c_ref, assign_ref, mind_ref):
+    """One grid step: assignment for a (tile, p) row block of X.
+
+    x_ref: (tile, p) data tile; c_ref: (k, p) full centroid matrix;
+    assign_ref: (tile,) int32 out; mind_ref: (tile,) out.
+    """
+    x = x_ref[...]
+    c = c_ref[...]
+    # MXU path: the matmul dominates; norms + broadcast adds are epilogue.
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)  # (tile, 1)
+    c2 = jnp.sum(c * c, axis=1)  # (k,)
+    d = x2 - 2.0 * jnp.dot(x, c.T) + c2[None, :]  # (tile, k)
+    assign_ref[...] = jnp.argmin(d, axis=1).astype(jnp.int32)
+    mind_ref[...] = jnp.min(d, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def kmeans_assign(x: jnp.ndarray, c: jnp.ndarray, tile: int = DEFAULT_TILE):
+    """Fused assignment over a (rows, p) partition; rows % tile == 0.
+
+    Returns (assign (rows,) int32, mindist (rows,) x.dtype).
+    """
+    rows, p = x.shape
+    k = c.shape[0]
+    if rows % tile != 0:
+        raise ValueError(f"rows ({rows}) must be a multiple of tile ({tile})")
+    grid = (rows // tile,)
+    return pl.pallas_call(
+        _assign_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, p), lambda i: (i, 0)),
+            pl.BlockSpec((k, p), lambda i: (0, 0)),  # whole C every step
+        ],
+        out_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows,), jnp.int32),
+            jax.ShapeDtypeStruct((rows,), x.dtype),
+        ],
+        interpret=True,
+    )(x, c)

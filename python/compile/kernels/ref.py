@@ -1,0 +1,105 @@
+"""Pure-jnp reference oracles for the Pallas kernels and the L2 models.
+
+Everything here is the *specification*: simple, obviously-correct jnp code.
+`python/tests/` asserts the Pallas kernels and the jitted model functions
+match these within tolerance, and the Rust engine's native GenOp path is
+cross-checked against the same numbers through golden fixtures
+(tests/test_golden.py dumps vectors consumed by `rust/tests/`).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax.scipy.special
+
+
+def pairwise_sqdist(x: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """Squared Euclidean distance matrix.
+
+    x: (n, p) data points, c: (k, p) centroids -> (n, k).
+    Uses the expanded form ||x||^2 - 2 x.c + ||c||^2, the same formulation
+    the Pallas kernel uses so that the dominant FLOPs are a matmul.
+    """
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)  # (n, 1)
+    c2 = jnp.sum(c * c, axis=1)  # (k,)
+    return x2 - 2.0 * (x @ c.T) + c2[None, :]
+
+
+def kmeans_assign(x: jnp.ndarray, c: jnp.ndarray):
+    """Assignment step: nearest centroid index and its squared distance."""
+    d = pairwise_sqdist(x, c)
+    assign = jnp.argmin(d, axis=1).astype(jnp.int32)
+    mind = jnp.min(d, axis=1)
+    return assign, mind
+
+
+def kmeans_step(x: jnp.ndarray, c: jnp.ndarray):
+    """Full k-means partition step: per-cluster sums, counts, WCSS, assign.
+
+    Returns (sums (k,p), counts (k,), wcss scalar, assign (n,) i32).
+    The caller (one call per I/O-level partition) merges sums/counts/wcss
+    additively across partitions, then divides — the paper's sink-matrix
+    partial-aggregation merge.
+    """
+    assign, mind = kmeans_assign(x, c)
+    k = c.shape[0]
+    onehot = (assign[:, None] == jnp.arange(k)[None, :]).astype(x.dtype)
+    sums = onehot.T @ x  # (k, p)
+    counts = jnp.sum(onehot, axis=0)  # (k,)
+    wcss = jnp.sum(mind)
+    return sums, counts, wcss, assign
+
+
+def colstats(x: jnp.ndarray) -> jnp.ndarray:
+    """Fused multivariate summary pass.
+
+    Returns a (6, p) matrix with rows
+      0: column min        1: column max      2: column sum
+      3: column sum x^2    4: column sum |x|  5: column non-zero count
+    mean / variance / L1 / L2 norms derive from these plus the row count.
+    """
+    return jnp.stack(
+        [
+            jnp.min(x, axis=0),
+            jnp.max(x, axis=0),
+            jnp.sum(x, axis=0),
+            jnp.sum(x * x, axis=0),
+            jnp.sum(jnp.abs(x), axis=0),
+            jnp.sum((x != 0).astype(x.dtype), axis=0),
+        ]
+    )
+
+
+def gramian(x: jnp.ndarray):
+    """One-pass Gramian: (X^T X, column sums)."""
+    return x.T @ x, jnp.sum(x, axis=0)
+
+
+def gramian_centered(x: jnp.ndarray, mu: jnp.ndarray) -> jnp.ndarray:
+    """Second (centered) pass of the paper's two-pass correlation."""
+    xc = x - mu[None, :]
+    return xc.T @ xc
+
+
+def gmm_estep(x, means, prec, logdet, logw):
+    """GMM E-step sufficient statistics for one partition.
+
+    x: (n, p); means: (k, p); prec: (k, p, p) precision matrices;
+    logdet: (k,) log-determinants of the precisions; logw: (k,) log weights.
+
+    Returns (Nk (k,), Sk (k,p), SSk (k,p,p), loglik scalar):
+      resp_nk = softmax_k [ logw_k + 0.5 logdet_k - 0.5 maha_nk - p/2 log 2pi ]
+      Nk = sum_n resp, Sk = resp^T X, SSk_k = sum_n resp_nk x_n x_n^T,
+      loglik = sum_n logsumexp_k(...)
+    """
+    p = x.shape[1]
+    diff = x[:, None, :] - means[None, :, :]  # (n, k, p)
+    maha = jnp.einsum("nkp,kpq,nkq->nk", diff, prec, diff)
+    logp = logw[None, :] + 0.5 * logdet[None, :] - 0.5 * maha
+    logp = logp - 0.5 * p * jnp.log(jnp.asarray(2.0 * jnp.pi, dtype=x.dtype))
+    lse = jax.scipy.special.logsumexp(logp, axis=1)  # (n,)
+    resp = jnp.exp(logp - lse[:, None])  # (n, k)
+    nk = jnp.sum(resp, axis=0)
+    sk = resp.T @ x
+    ssk = jnp.einsum("nk,np,nq->kpq", resp, x, x)
+    return nk, sk, ssk, jnp.sum(lse)

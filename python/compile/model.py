@@ -1,0 +1,119 @@
+"""L2: the JAX compute graphs for the FlashMatrix algorithm hot spots.
+
+Each function here is the dense-FLOP inner step of one of the paper's five
+evaluation algorithms, expressed over ONE I/O-level partition (a row block
+of the tall-and-skinny data matrix). The Rust engine streams partitions and
+merges the returned partial aggregates — the exact split of work the paper
+describes in §III-F (per-thread partial aggregation + final merge).
+
+These functions play the role BLAS plays in the paper: `fm.inner.prod` and
+the fused per-partition pipelines dispatch to the AOT-compiled XLA
+executables of these graphs when an artifact with a matching shape exists
+(rust/src/runtime/); otherwise the engine's native VUDF path runs.
+
+Everything is jit-lowered once by aot.py; python never runs at request time.
+The Pallas kernels (kernels/) are called from here so they lower into the
+same HLO module.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import colstats as colstats_kernel
+from .kernels import distance
+
+
+def _tile_for(rows: int) -> int:
+    """Largest kernel row-tile dividing `rows` (artifact rows are powers of
+    two >= 2048, so this is DEFAULT_TILE there; small test blocks get one
+    tile)."""
+    return distance.DEFAULT_TILE if rows % distance.DEFAULT_TILE == 0 else rows
+
+
+def kmeans_step(x: jnp.ndarray, c: jnp.ndarray):
+    """k-means partition step on one row block.
+
+    x: (rows, p), c: (k, p) ->
+      sums (k, p), counts (k,), wcss (), assign (rows,) int32.
+    Assignment runs in the L1 Pallas kernel; the per-cluster accumulation
+    is a one-hot matmul so the whole step is MXU-dominated.
+    """
+    assign, mind = distance.kmeans_assign(x, c, tile=_tile_for(x.shape[0]))
+    k = c.shape[0]
+    onehot = (assign[:, None] == jnp.arange(k, dtype=jnp.int32)[None, :])
+    onehot = onehot.astype(x.dtype)
+    sums = onehot.T @ x
+    counts = jnp.sum(onehot, axis=0)
+    wcss = jnp.sum(mind)
+    return sums, counts, wcss, assign
+
+
+def summary_step(x: jnp.ndarray) -> jnp.ndarray:
+    """Multivariate-summary partition step: (6, p) accumulator block.
+
+    Runs entirely in the L1 Pallas colstats kernel.
+    """
+    return colstats_kernel.colstats(x, tile=_tile_for(x.shape[0]))
+
+
+def gramian_step(x: jnp.ndarray):
+    """One-pass Gramian partition step: (X^T X, colsums)."""
+    return x.T @ x, jnp.sum(x, axis=0)
+
+
+def gramian_centered_step(x: jnp.ndarray, mu: jnp.ndarray):
+    """Centered Gramian partition step (pass 2 of two-pass correlation)."""
+    xc = x - mu[None, :]
+    return (xc.T @ xc,)
+
+
+def gmm_estep(x, means, prec, logdet, logw):
+    """GMM E-step partition stats: (Nk, Sk, SSk, loglik).
+
+    Mahalanobis terms are expanded so the dominant work is matmuls:
+      maha_nk = x P_k x^T - 2 x (P_k mu_k) + mu_k P_k mu_k
+    (P_k symmetric), giving k (rows,p)@(p,p) products on the MXU instead
+    of an (n,k,p) broadcast subtract.
+    """
+    p = x.shape[1]
+    # (k, p, p) @ (k, p) -> (k, p)
+    pmu = jnp.einsum("kpq,kq->kp", prec, means)
+    # x P_k x^T diagonal: rows of (x @ P_k) * x summed — batched matmul.
+    xp = jnp.einsum("np,kpq->knq", x, prec)  # (k, n, p)
+    xpx = jnp.sum(xp * x[None, :, :], axis=2).T  # (n, k)
+    xpmu = x @ pmu.T  # (n, k)
+    mupmu = jnp.sum(pmu * means, axis=1)  # (k,)
+    maha = xpx - 2.0 * xpmu + mupmu[None, :]
+    logp = logw[None, :] + 0.5 * logdet[None, :] - 0.5 * maha
+    logp = logp - 0.5 * p * jnp.log(jnp.asarray(2.0 * jnp.pi, dtype=x.dtype))
+    mx = jnp.max(logp, axis=1, keepdims=True)
+    lse = (mx[:, 0] + jnp.log(jnp.sum(jnp.exp(logp - mx), axis=1)))
+    resp = jnp.exp(logp - lse[:, None])  # (n, k)
+    nk = jnp.sum(resp, axis=0)
+    sk = resp.T @ x
+    ssk = jnp.einsum("nk,np,nq->kpq", resp, x, x)
+    return nk, sk, ssk, jnp.sum(lse)
+
+
+# ---------------------------------------------------------------------------
+# Shared partition-shape formula.
+#
+# The Rust engine picks the I/O-level partition row count for a p-column f64
+# matrix as the largest power of two with rows*p*8 <= 8 MiB, clamped to
+# [1024, 65536] (matrix/partition.rs `io_rows_for`). aot.py uses this same
+# formula so every emitted artifact's input shape matches the partitions the
+# engine will feed it. Keep the two in sync (cross-checked by
+# rust/tests/manifest.rs against artifacts/manifest.json).
+# ---------------------------------------------------------------------------
+
+TARGET_PART_BYTES = 8 * 1024 * 1024
+MIN_IO_ROWS = 1024
+MAX_IO_ROWS = 65536
+
+
+def io_rows_for(p: int, elem_bytes: int = 8) -> int:
+    """Rows per I/O-level partition for a p-column matrix (power of two)."""
+    rows = TARGET_PART_BYTES // (elem_bytes * p)
+    pow2 = 1 << (rows.bit_length() - 1)
+    return max(MIN_IO_ROWS, min(MAX_IO_ROWS, pow2))

@@ -1,0 +1,91 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes and dtypes; every case asserts allclose against
+the reference. This is the core correctness signal for the kernels that
+end up inside the AOT artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import colstats, distance, ref
+
+jax.config.update("jax_enable_x64", True)
+
+DTYPES = [jnp.float32, jnp.float64]
+
+
+def _tol(dtype):
+    return dict(rtol=1e-4, atol=1e-4) if dtype == jnp.float32 else dict(
+        rtol=1e-10, atol=1e-10)
+
+
+@st.composite
+def assign_case(draw):
+    tile = draw(st.sampled_from([4, 8, 16]))
+    ntiles = draw(st.integers(1, 6))
+    p = draw(st.integers(1, 24))
+    k = draw(st.integers(1, 12))
+    dtype = draw(st.sampled_from(DTYPES))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return tile, ntiles * tile, p, k, dtype, seed
+
+
+@given(assign_case())
+@settings(max_examples=60, deadline=None)
+def test_kmeans_assign_matches_ref(case):
+    tile, rows, p, k, dtype, seed = case
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((rows, p)), dtype=dtype)
+    c = jnp.asarray(rng.standard_normal((k, p)), dtype=dtype)
+    a, d = distance.kmeans_assign(x, c, tile=tile)
+    a_ref, d_ref = ref.kmeans_assign(x, c)
+    # distances must match tightly; assignment may differ only on exact ties
+    np.testing.assert_allclose(d, d_ref, **_tol(dtype))
+    dist_full = ref.pairwise_sqdist(x, c)
+    picked = np.take_along_axis(
+        np.asarray(dist_full), np.asarray(a)[:, None], axis=1)[:, 0]
+    np.testing.assert_allclose(picked, np.asarray(d_ref), **_tol(dtype))
+
+
+@given(assign_case())
+@settings(max_examples=60, deadline=None)
+def test_colstats_matches_ref(case):
+    tile, rows, p, _k, dtype, seed = case
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((rows, p))
+    # inject exact zeros so the nnz accumulator is exercised
+    x[rng.random((rows, p)) < 0.1] = 0.0
+    x = jnp.asarray(x, dtype=dtype)
+    got = colstats.colstats(x, tile=tile)
+    want = ref.colstats(x)
+    np.testing.assert_allclose(got, want, **_tol(dtype))
+
+
+def test_assign_rejects_ragged_rows():
+    x = jnp.zeros((10, 3))
+    c = jnp.zeros((2, 3))
+    with pytest.raises(ValueError):
+        distance.kmeans_assign(x, c, tile=4)
+
+
+def test_colstats_constant_matrix():
+    x = jnp.full((32, 5), 3.5, dtype=jnp.float64)
+    got = np.asarray(colstats.colstats(x, tile=8))
+    np.testing.assert_allclose(got[0], 3.5)  # min
+    np.testing.assert_allclose(got[1], 3.5)  # max
+    np.testing.assert_allclose(got[2], 32 * 3.5)  # sum
+    np.testing.assert_allclose(got[3], 32 * 3.5**2)  # sumsq
+    np.testing.assert_allclose(got[5], 32.0)  # nnz
+
+
+def test_assign_exact_centroid_hit():
+    # points placed exactly on centroids must be assigned to them
+    c = jnp.asarray([[0.0, 0.0], [10.0, 10.0], [-5.0, 5.0]], jnp.float64)
+    x = jnp.tile(c, (4, 1))  # 12 rows
+    a, d = distance.kmeans_assign(x, c, tile=4)
+    np.testing.assert_array_equal(np.asarray(a), np.tile([0, 1, 2], 4))
+    np.testing.assert_allclose(np.asarray(d), 0.0, atol=1e-12)

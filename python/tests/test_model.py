@@ -1,0 +1,114 @@
+"""L2 correctness: the jitted model step functions vs the oracle (ref.py).
+
+These are the exact functions aot.py lowers to artifacts, so passing here
+plus an HLO round-trip (rust/tests/) validates the whole compile path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", True)
+
+TOL = dict(rtol=1e-9, atol=1e-9)
+
+
+def _rand_psd(rng, k, p):
+    """Random well-conditioned precision matrices + their logdets."""
+    a = rng.standard_normal((k, p, p)) * 0.3
+    prec = np.einsum("kpq,krq->kpr", a, a) + np.eye(p)[None] * 1.5
+    sign, logdet = np.linalg.slogdet(prec)
+    assert (sign > 0).all()
+    return jnp.asarray(prec), jnp.asarray(logdet)
+
+
+@st.composite
+def block_case(draw):
+    rows = draw(st.sampled_from([16, 64, 128]))
+    p = draw(st.integers(2, 16))
+    k = draw(st.integers(1, 8))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return rows, p, k, seed
+
+
+@given(block_case())
+@settings(max_examples=40, deadline=None)
+def test_kmeans_step_matches_ref(case):
+    rows, p, k, seed = case
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((rows, p)))
+    c = jnp.asarray(rng.standard_normal((k, p)))
+    sums, counts, wcss, assign = model.kmeans_step(x, c)
+    rsums, rcounts, rwcss, rassign = ref.kmeans_step(x, c)
+    np.testing.assert_allclose(sums, rsums, **TOL)
+    np.testing.assert_allclose(counts, rcounts, **TOL)
+    np.testing.assert_allclose(wcss, rwcss, **TOL)
+    np.testing.assert_array_equal(np.asarray(assign), np.asarray(rassign))
+    # invariants: counts sum to rows; sums consistent with assignment
+    assert float(jnp.sum(counts)) == rows
+
+
+@given(block_case())
+@settings(max_examples=30, deadline=None)
+def test_gmm_estep_matches_ref(case):
+    rows, p, k, seed = case
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((rows, p)))
+    means = jnp.asarray(rng.standard_normal((k, p)))
+    prec, logdet = _rand_psd(rng, k, p)
+    w = rng.random(k) + 0.1
+    logw = jnp.asarray(np.log(w / w.sum()))
+    nk, sk, ssk, ll = model.gmm_estep(x, means, prec, logdet, logw)
+    rnk, rsk, rssk, rll = ref.gmm_estep(x, means, prec, logdet, logw)
+    np.testing.assert_allclose(nk, rnk, **TOL)
+    np.testing.assert_allclose(sk, rsk, **TOL)
+    np.testing.assert_allclose(ssk, rssk, **TOL)
+    np.testing.assert_allclose(ll, rll, **TOL)
+    # responsibilities sum to 1 per row => Nk sums to rows
+    np.testing.assert_allclose(float(jnp.sum(nk)), rows, **TOL)
+
+
+@given(block_case())
+@settings(max_examples=30, deadline=None)
+def test_gramian_steps_match_ref(case):
+    rows, p, _k, seed = case
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((rows, p)))
+    xtx, cs = model.gramian_step(x)
+    rxtx, rcs = ref.gramian(x)
+    np.testing.assert_allclose(xtx, rxtx, **TOL)
+    np.testing.assert_allclose(cs, rcs, **TOL)
+    mu = cs / rows
+    (xtxc,) = model.gramian_centered_step(x, mu)
+    np.testing.assert_allclose(xtxc, ref.gramian_centered(x, mu), **TOL)
+    # centered Gramian == gramian - n * mu mu^T  (merge identity the Rust
+    # one-pass correlation relies on)
+    np.testing.assert_allclose(
+        xtxc, xtx - rows * jnp.outer(mu, mu), rtol=1e-8, atol=1e-8)
+
+
+def test_summary_step_uses_kernel_and_matches_ref():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((2048, 8))
+    x[rng.random(x.shape) < 0.05] = 0.0
+    x = jnp.asarray(x)
+    np.testing.assert_allclose(model.summary_step(x), ref.colstats(x), **TOL)
+
+
+def test_io_rows_formula():
+    # pinned values the Rust engine's partition.rs mirrors
+    assert model.io_rows_for(8) == 65536
+    assert model.io_rows_for(16) == 65536
+    assert model.io_rows_for(32) == 32768
+    assert model.io_rows_for(64) == 16384
+    assert model.io_rows_for(128) == 8192
+    assert model.io_rows_for(256) == 4096
+    assert model.io_rows_for(512) == 2048
+    for p in range(1, 600):
+        r = model.io_rows_for(p)
+        assert r & (r - 1) == 0  # power of two
+        assert 1024 <= r <= 65536

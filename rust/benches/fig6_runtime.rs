@@ -1,0 +1,17 @@
+//! Bench: Fig 6(a) runtime + Fig 6(b) memory — FM-IM vs FM-EM vs the
+//! MLlib-like baseline across all five algorithms.
+//!
+//! `cargo bench --bench fig6_runtime` (env FM_BENCH_N overrides rows).
+
+use flashmatrix::harness::{self, Scale};
+
+fn main() {
+    let mut s = Scale::default();
+    if let Ok(n) = std::env::var("FM_BENCH_N") {
+        s.n = n.parse().unwrap_or(s.n);
+    }
+    let t = harness::fig6a(&s).expect("fig6a");
+    t.print();
+    let t = harness::fig6b(&s).expect("fig6b");
+    t.print();
+}

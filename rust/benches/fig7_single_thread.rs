@@ -1,0 +1,20 @@
+//! Bench: Fig 7 — single-thread FlashMatrix (IM and EM) vs the R-style
+//! C/FORTRAN reference implementations, plus Fig 8's thread sweep.
+//!
+//! `cargo bench --bench fig7_single_thread`
+
+use flashmatrix::harness::{self, Scale};
+
+fn main() {
+    let mut s = Scale::default();
+    if let Ok(n) = std::env::var("FM_BENCH_N") {
+        s.n_small = n.parse().unwrap_or(s.n_small);
+    }
+    let t = harness::fig7(&s).expect("fig7");
+    t.print();
+    let max_t = std::thread::available_parallelism()
+        .map(|n| n.get() * 2)
+        .unwrap_or(4);
+    let t = harness::fig8(&s, max_t).expect("fig8");
+    t.print();
+}

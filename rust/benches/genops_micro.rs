@@ -1,0 +1,92 @@
+//! Microbenchmarks of the engine primitives: VUDF forms (vectorized vs
+//! per-element), fused vs eager pipelines, sink kinds, and the XLA vs
+//! native per-partition steps. These feed EXPERIMENTS.md §Perf.
+//!
+//! `cargo bench --bench genops_micro`
+
+use flashmatrix::config::EngineConfig;
+use flashmatrix::datasets;
+use flashmatrix::fmr::Engine;
+use flashmatrix::util::bench::{measure, Table};
+use flashmatrix::vudf::{AggOp, UnOp};
+
+fn main() {
+    let n: u64 = std::env::var("FM_BENCH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1_000_000);
+    let mut t = Table::new(format!("genops microbenchmarks, {n}x8 f64"));
+
+    for (label, vectorized) in [("vectorized", true), ("per-element", false)] {
+        let eng = Engine::new(EngineConfig {
+            vectorized_udf: vectorized,
+            xla_dispatch: false,
+            ..Default::default()
+        })
+        .unwrap();
+        let x = datasets::uniform(&eng, n, 8, -1.0, 1.0, 3, None).unwrap();
+        let s = measure(1, 5, || {
+            x.sapply(UnOp::Abs).unwrap().agg(AggOp::Sum).unwrap()
+        });
+        let gbps = (n * 8 * 8) as f64 / s.secs() / 1e9;
+        t.add_with(
+            format!("sapply+agg {label}"),
+            s.secs() * 1e3,
+            "ms",
+            vec![("GB/s".into(), gbps)],
+        );
+    }
+
+    for (label, fuse) in [("fused", true), ("eager", false)] {
+        let eng = Engine::new(EngineConfig {
+            fuse_mem: fuse,
+            fuse_cache: fuse,
+            xla_dispatch: false,
+            ..Default::default()
+        })
+        .unwrap();
+        let x = datasets::uniform(&eng, n, 8, -1.0, 1.0, 3, None).unwrap();
+        let s = measure(1, 5, || {
+            // 4-op chain: |x| + x^2 -> sum
+            x.abs()
+                .unwrap()
+                .add(&x.sq().unwrap())
+                .unwrap()
+                .sum()
+                .unwrap()
+        });
+        t.add(format!("4-op chain {label}"), s.secs() * 1e3, "ms");
+    }
+
+    // sink kinds at fixed input
+    let eng = Engine::new(EngineConfig {
+        xla_dispatch: false,
+        ..Default::default()
+    })
+    .unwrap();
+    let x = datasets::uniform(&eng, n, 8, -1.0, 1.0, 3, None).unwrap();
+    let s = measure(1, 5, || x.sum().unwrap());
+    t.add("agg full", s.secs() * 1e3, "ms");
+    let s = measure(1, 5, || x.col_sums().unwrap());
+    t.add("agg col", s.secs() * 1e3, "ms");
+    let s = measure(1, 5, || x.crossprod(&x).unwrap());
+    t.add("gramian (8x8)", s.secs() * 1e3, "ms");
+
+    // XLA vs native kmeans step, when artifacts exist
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        for (label, xla) in [("xla", true), ("native", false)] {
+            let eng = Engine::new(EngineConfig {
+                xla_dispatch: xla,
+                ..Default::default()
+            })
+            .unwrap();
+            let (x, _) = datasets::mix_gaussian(&eng, 131_072, 32, 10, 6.0, 42, None).unwrap();
+            let s = measure(1, 3, || {
+                flashmatrix::algs::kmeans(&x, 10, 1, 1).unwrap()
+            });
+            t.add(format!("kmeans step 131072x32 {label}"), s.secs() * 1e3, "ms");
+        }
+    }
+
+    t.print();
+}

@@ -1,0 +1,293 @@
+//! K-means clustering (Lloyd's algorithm, paper §IV-A).
+//!
+//! The GenOp path expresses one iteration exactly as the paper's R code
+//! would — and the whole iteration fuses into ONE streaming pass:
+//!
+//! ```text
+//! D      <- fm.mapply.col(fm.mapply.row(X %*% (-2 t(C)), colSums(C^2), +),
+//!                         rowSums(X^2), +)          # squared distances
+//! labels <- fm.agg.row(D, which.min) - 1
+//! sums   <- fm.groupby.row(X, labels, +)            # sink 1
+//! counts <- fm.groupby.row(1, labels, +)            # sink 2
+//! wcss   <- sum(fm.agg.row(D, min))                 # sink 3
+//! ```
+//!
+//! All three sinks share one scan of X (the paper's `fm.materialize` on
+//! several sinks); the M-step is a trivial host-side division. The XLA
+//! path dispatches the fused per-partition step to the kmeans artifact
+//! (Pallas distance kernel + one-hot matmul accumulation).
+
+use crate::dtype::Scalar;
+use crate::error::Result;
+use crate::fmr::FmMatrix;
+use crate::matrix::HostMat;
+use crate::runtime::HostTensor;
+use crate::vudf::{AggOp, BinOp};
+
+/// K-means output.
+#[derive(Clone, Debug)]
+pub struct KmeansResult {
+    /// Final centroids, k×p.
+    pub centroids: HostMat,
+    /// Within-cluster sum of squares per iteration (monotone decreasing).
+    pub wcss: Vec<f64>,
+    /// Points per cluster at the last iteration.
+    pub sizes: Vec<f64>,
+    pub iterations: usize,
+}
+
+/// Run `iters` Lloyd iterations from deterministic seeding (k rows of X
+/// sampled by hash of the seed).
+pub fn kmeans(x: &FmMatrix, k: usize, iters: usize, seed: u64) -> Result<KmeansResult> {
+    let p = x.ncol() as usize;
+    let mut c = init_centroids(x, k, seed)?;
+    let mut wcss_log = Vec::with_capacity(iters);
+    let mut sizes = vec![0.0; k];
+
+    let xla = super::xla_candidate(x, "kmeans", k as u64);
+    for _it in 0..iters {
+        let (sums, counts, wcss) = match &xla {
+            Some((svc, name)) => step_xla(x, svc, name, &c, k)?,
+            None => step_genop(x, &c, k)?,
+        };
+        // M-step (host): mean of assigned points; empty clusters keep
+        // their previous centroid (the standard Lloyd fallback).
+        for ci in 0..k {
+            if counts[ci] > 0.0 {
+                for j in 0..p {
+                    c.set(ci, j, Scalar::F64(sums[ci * p + j] / counts[ci]));
+                }
+            }
+        }
+        wcss_log.push(wcss);
+        sizes = counts;
+    }
+    Ok(KmeansResult {
+        centroids: c,
+        wcss: wcss_log,
+        sizes,
+        iterations: iters,
+    })
+}
+
+/// Deterministic greedy farthest-point initialization (k-means++-style):
+/// a hash-seeded first centroid, then k-1 rounds picking the sample row
+/// farthest from the chosen set. The candidate pool is the first I/O
+/// partition (one read), which is a uniform sample for our generators.
+pub fn init_centroids(x: &FmMatrix, k: usize, seed: u64) -> Result<HostMat> {
+    let p = x.ncol() as usize;
+    let d = super::dense_of(x)?;
+    let buf = d.partition_buf(0)?;
+    let prows = d.parts.rows_in(0) as usize;
+    // subsample candidates for O(cand * k) work
+    let cand_n = prows.min(4096);
+    let stride = (prows / cand_n).max(1);
+    let row_of = |ci: usize| ci * stride % prows;
+    let get = |r: usize, j: usize| buf.get(j * prows + r).as_f64();
+
+    let mut chosen: Vec<usize> = vec![(crate::exec::splitmix64_at(seed, 0) as usize) % prows];
+    let mut mind = vec![f64::INFINITY; cand_n];
+    while chosen.len() < k {
+        let last = *chosen.last().unwrap();
+        let mut best = (0usize, f64::NEG_INFINITY);
+        for ci in 0..cand_n {
+            let r = row_of(ci);
+            let mut dd = 0.0;
+            for j in 0..p {
+                let diff = get(r, j) - get(last, j);
+                dd += diff * diff;
+            }
+            if dd < mind[ci] {
+                mind[ci] = dd;
+            }
+            if mind[ci] > best.1 {
+                best = (r, mind[ci]);
+            }
+        }
+        chosen.push(best.0);
+    }
+    let mut c = HostMat::zeros(k, p, crate::dtype::DType::F64);
+    for (ci, &r) in chosen.iter().enumerate() {
+        for j in 0..p {
+            c.set(ci, j, buf.get(j * prows + r));
+        }
+    }
+    Ok(c)
+}
+
+/// One Lloyd iteration through GenOps (single fused pass, 3 sinks).
+fn step_genop(x: &FmMatrix, c: &HostMat, k: usize) -> Result<(Vec<f64>, Vec<f64>, f64)> {
+    let p = x.ncol() as usize;
+    // -2 * t(C): p×k host operand of the inner product
+    let mut ct2 = HostMat::zeros(p, k, crate::dtype::DType::F64);
+    let mut c2 = HostMat::zeros(1, k, crate::dtype::DType::F64);
+    for ci in 0..k {
+        let mut s = 0.0;
+        for j in 0..p {
+            let v = c.get(ci, j).as_f64();
+            ct2.set(j, ci, Scalar::F64(-2.0 * v));
+            s += v * v;
+        }
+        c2.set(0, ci, Scalar::F64(s));
+    }
+    let x2 = x.sq()?.row_sums()?; // n×1, stays lazy
+    let d = x
+        .inner_prod_small(&ct2, BinOp::Mul, AggOp::Sum)? // X @ -2C^T
+        .mapply_row(&c2, BinOp::Add)? // + ||c||²
+        .mapply_col(&x2, BinOp::Add)?; // + ||x||²
+    let labels = d
+        .which_min_row()?
+        .mapply_scalar(Scalar::I32(1), BinOp::Sub, true)?; // 0-based
+    let ones = FmMatrix::fill(&x.eng, Scalar::F64(1.0), x.nrow(), 1);
+    let mind = d.agg_row(AggOp::Min)?;
+
+    let sinks = vec![
+        x.groupby_row_sink(&labels, k, AggOp::Sum)?,
+        ones.groupby_row_sink(&labels, k, AggOp::Sum)?,
+        mind.agg_sink(AggOp::Sum),
+    ];
+    let rs = x.eng.materialize_sinks(&sinks)?;
+    let sums = rs[0].mat().to_row_major_f64(); // k×p row-major
+    let counts: Vec<f64> = rs[1].mat().buf.to_f64_vec();
+    let wcss = rs[2].scalar().as_f64();
+    Ok((sums, counts, wcss))
+}
+
+/// One Lloyd iteration through the XLA artifact (full partitions) + native
+/// tail steps, folded identically.
+fn step_xla(
+    x: &FmMatrix,
+    svc: &crate::runtime::XlaService,
+    name: &str,
+    c: &HostMat,
+    k: usize,
+) -> Result<(Vec<f64>, Vec<f64>, f64)> {
+    let d = super::dense_of(x)?;
+    let p = d.ncol() as usize;
+    let crm = c.to_row_major_f64();
+    let mut sums = vec![0.0; k * p];
+    let mut counts = vec![0.0; k];
+    let mut wcss = 0.0;
+    for i in 0..d.parts.n_parts() {
+        if d.parts.is_full(i) {
+            let (rows, rm) = super::partition_row_major(d, i)?;
+            x.eng
+                .metrics
+                .xla_dispatches
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            let out = svc.run(
+                name,
+                vec![
+                    HostTensor::f64(vec![rows, p], rm),
+                    HostTensor::f64(vec![k, p], crm.clone()),
+                ],
+            )?;
+            // outputs: sums (k,p), counts (k), wcss (), assign (rows)
+            for (a, b) in sums.iter_mut().zip(out[0].as_f64()?) {
+                *a += b;
+            }
+            for (a, b) in counts.iter_mut().zip(out[1].as_f64()?) {
+                *a += b;
+            }
+            wcss += out[2].as_f64()?[0];
+        } else {
+            let buf = d.partition_buf(i)?;
+            let (s, cnt, w, _a) =
+                super::steps::kmeans_step_native(&buf, d.parts.rows_in(i) as usize, p, c)?;
+            for (a, b) in sums.iter_mut().zip(s) {
+                *a += b;
+            }
+            for (a, b) in counts.iter_mut().zip(cnt) {
+                *a += b;
+            }
+            wcss += w;
+        }
+    }
+    Ok((sums, counts, wcss))
+}
+
+/// Final assignment of every point (one extra fused pass) — useful for
+/// downstream consumers; returns an n×1 i32 matrix of labels in 0..k.
+pub fn assign(x: &FmMatrix, c: &HostMat) -> Result<FmMatrix> {
+    let p = x.ncol() as usize;
+    let k = c.nrow;
+    let mut ct2 = HostMat::zeros(p, k, crate::dtype::DType::F64);
+    let mut c2 = HostMat::zeros(1, k, crate::dtype::DType::F64);
+    for ci in 0..k {
+        let mut s = 0.0;
+        for j in 0..p {
+            let v = c.get(ci, j).as_f64();
+            ct2.set(j, ci, Scalar::F64(-2.0 * v));
+            s += v * v;
+        }
+        c2.set(0, ci, Scalar::F64(s));
+    }
+    let d = x
+        .inner_prod_small(&ct2, BinOp::Mul, AggOp::Sum)?
+        .mapply_row(&c2, BinOp::Add)?;
+    // ||x||² is constant per row: argmin unaffected — skip it
+    d.which_min_row()?
+        .mapply_scalar(Scalar::I32(1), BinOp::Sub, true)?
+        .materialize()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineConfig;
+    use crate::fmr::Engine;
+
+    #[test]
+    fn kmeans_recovers_separated_clusters() {
+        let e = Engine::new(EngineConfig {
+            xla_dispatch: false,
+            chunk_bytes: 1 << 20,
+            target_part_bytes: 1 << 20,
+            ..Default::default()
+        })
+        .unwrap();
+        let (x, means) = crate::datasets::mix_gaussian(&e, 20_000, 4, 3, 12.0, 17, None).unwrap();
+        let r = kmeans(&x, 3, 8, 1).unwrap();
+        // WCSS must be monotone non-increasing
+        for w in r.wcss.windows(2) {
+            assert!(w[1] <= w[0] * (1.0 + 1e-9), "wcss increased: {w:?}");
+        }
+        // every found centroid must be close to a true mean
+        for ci in 0..3 {
+            let best = (0..3)
+                .map(|ti| {
+                    (0..4)
+                        .map(|j| {
+                            let d = r.centroids.get(ci, j).as_f64() - means.get(ti, j).as_f64();
+                            d * d
+                        })
+                        .sum::<f64>()
+                })
+                .fold(f64::INFINITY, f64::min);
+            assert!(best < 1.0, "centroid {ci} too far: {best}");
+        }
+        // cluster sizes roughly balanced (hash assignment is uniform)
+        for &s in &r.sizes {
+            assert!(s > 20_000.0 / 3.0 * 0.7 && s < 20_000.0 / 3.0 * 1.3);
+        }
+    }
+
+    #[test]
+    fn assign_labels_match_centroid_proximity() {
+        let e = Engine::new(EngineConfig {
+            xla_dispatch: false,
+            chunk_bytes: 1 << 20,
+            target_part_bytes: 1 << 20,
+            ..Default::default()
+        })
+        .unwrap();
+        let (x, _means) = crate::datasets::mix_gaussian(&e, 5000, 3, 2, 10.0, 23, None).unwrap();
+        let r = kmeans(&x, 2, 5, 2).unwrap();
+        let labels = assign(&x, &r.centroids).unwrap().to_host().unwrap();
+        // labels in range
+        for i in 0..labels.nrow {
+            let l = labels.get(i, 0).as_i64();
+            assert!((0..2).contains(&l));
+        }
+    }
+}

@@ -1,0 +1,242 @@
+//! Small dense linear algebra on host matrices (p ≤ a few hundred).
+//!
+//! The paper computes SVD as "Gramian + eigendecomposition" via external
+//! eigensolvers [35,36]; this substrate provides the eigensolver (cyclic
+//! Jacobi — simple, robust for symmetric p×p) plus the Cholesky pieces GMM
+//! needs (inverse + log-determinant of covariance matrices).
+
+use crate::error::{FmError, Result};
+use crate::matrix::HostMat;
+
+/// Symmetric eigendecomposition by cyclic Jacobi rotations.
+///
+/// Input: symmetric `a` (p×p, row-major). Returns `(eigenvalues,
+/// eigenvectors)` sorted by descending eigenvalue; eigenvector `i` is
+/// column `i` of the returned p×p row-major matrix.
+pub fn jacobi_eigen(a: &[f64], p: usize, max_sweeps: usize) -> Result<(Vec<f64>, Vec<f64>)> {
+    if a.len() != p * p {
+        return Err(FmError::Shape(format!(
+            "jacobi: expected {}x{} matrix",
+            p, p
+        )));
+    }
+    let mut m = a.to_vec();
+    // V = I
+    let mut v = vec![0.0; p * p];
+    for i in 0..p {
+        v[i * p + i] = 1.0;
+    }
+    let idx = |r: usize, c: usize| r * p + c;
+
+    for _sweep in 0..max_sweeps {
+        // off-diagonal Frobenius norm
+        let mut off = 0.0;
+        for r in 0..p {
+            for c in (r + 1)..p {
+                off += m[idx(r, c)] * m[idx(r, c)];
+            }
+        }
+        if off.sqrt() < 1e-12 {
+            break;
+        }
+        for r in 0..p {
+            for c in (r + 1)..p {
+                let apq = m[idx(r, c)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[idx(r, r)];
+                let aqq = m[idx(c, c)];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let cos = 1.0 / (t * t + 1.0).sqrt();
+                let sin = t * cos;
+                // rotate rows/cols r and c of m
+                for k in 0..p {
+                    let mrk = m[idx(r, k)];
+                    let mck = m[idx(c, k)];
+                    m[idx(r, k)] = cos * mrk - sin * mck;
+                    m[idx(c, k)] = sin * mrk + cos * mck;
+                }
+                for k in 0..p {
+                    let mkr = m[idx(k, r)];
+                    let mkc = m[idx(k, c)];
+                    m[idx(k, r)] = cos * mkr - sin * mkc;
+                    m[idx(k, c)] = sin * mkr + cos * mkc;
+                }
+                // accumulate V
+                for k in 0..p {
+                    let vkr = v[idx(k, r)];
+                    let vkc = v[idx(k, c)];
+                    v[idx(k, r)] = cos * vkr - sin * vkc;
+                    v[idx(k, c)] = sin * vkr + cos * vkc;
+                }
+            }
+        }
+    }
+
+    let mut order: Vec<usize> = (0..p).collect();
+    let evals: Vec<f64> = (0..p).map(|i| m[idx(i, i)]).collect();
+    order.sort_by(|&i, &j| evals[j].partial_cmp(&evals[i]).unwrap());
+    let sorted_vals: Vec<f64> = order.iter().map(|&i| evals[i]).collect();
+    let mut sorted_vecs = vec![0.0; p * p];
+    for (new_c, &old_c) in order.iter().enumerate() {
+        for r in 0..p {
+            sorted_vecs[idx(r, new_c)] = v[idx(r, old_c)];
+        }
+    }
+    Ok((sorted_vals, sorted_vecs))
+}
+
+/// Cholesky factorization of a symmetric positive-definite matrix
+/// (row-major). Returns the lower factor L with `a = L L^T`.
+pub fn cholesky(a: &[f64], p: usize) -> Result<Vec<f64>> {
+    let mut l = vec![0.0; p * p];
+    for i in 0..p {
+        for j in 0..=i {
+            let mut s = a[i * p + j];
+            for k in 0..j {
+                s -= l[i * p + k] * l[j * p + k];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return Err(FmError::Shape(format!(
+                        "cholesky: matrix not positive definite (pivot {i}: {s})"
+                    )));
+                }
+                l[i * p + i] = s.sqrt();
+            } else {
+                l[i * p + j] = s / l[j * p + j];
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Inverse and log-determinant of an SPD matrix via Cholesky.
+pub fn spd_inverse_logdet(a: &[f64], p: usize) -> Result<(Vec<f64>, f64)> {
+    let l = cholesky(a, p)?;
+    let logdet = 2.0 * (0..p).map(|i| l[i * p + i].ln()).sum::<f64>();
+    // invert L (lower triangular)
+    let mut linv = vec![0.0; p * p];
+    for i in 0..p {
+        linv[i * p + i] = 1.0 / l[i * p + i];
+        for j in 0..i {
+            let mut s = 0.0;
+            for k in j..i {
+                s -= l[i * p + k] * linv[k * p + j];
+            }
+            linv[i * p + j] = s / l[i * p + i];
+        }
+    }
+    // a^-1 = L^-T L^-1
+    let mut inv = vec![0.0; p * p];
+    for i in 0..p {
+        for j in 0..p {
+            let mut s = 0.0;
+            for k in i.max(j)..p {
+                s += linv[k * p + i] * linv[k * p + j];
+            }
+            inv[i * p + j] = s;
+        }
+    }
+    Ok((inv, logdet))
+}
+
+/// Row-major matmul of small host matrices: (m×k) @ (k×n).
+pub fn matmul_rm(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+    let mut out = vec![0.0; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let av = a[i * k + kk];
+            if av != 0.0 {
+                for j in 0..n {
+                    out[i * n + j] += av * b[kk * n + j];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Convenience: HostMat (col-major) -> row-major Vec.
+pub fn host_to_rm(h: &HostMat) -> Vec<f64> {
+    h.to_row_major_f64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jacobi_diagonalizes_known_matrix() {
+        // [[2,1],[1,2]] -> eigenvalues 3, 1; eigvecs (1,1)/√2, (1,-1)/√2
+        let (vals, vecs) = jacobi_eigen(&[2.0, 1.0, 1.0, 2.0], 2, 50).unwrap();
+        assert!((vals[0] - 3.0).abs() < 1e-10);
+        assert!((vals[1] - 1.0).abs() < 1e-10);
+        let v0 = (vecs[0], vecs[2]); // column 0
+        assert!((v0.0.abs() - (0.5f64).sqrt()).abs() < 1e-8);
+        assert!((v0.0 - v0.1).abs() < 1e-8); // equal components
+    }
+
+    #[test]
+    fn jacobi_reconstructs() {
+        // A = V diag(w) V^T for a random symmetric 5x5
+        let p = 5;
+        let mut a = vec![0.0; p * p];
+        for i in 0..p {
+            for j in 0..p {
+                let v = ((i * 31 + j * 17) % 13) as f64 / 13.0;
+                a[i * p + j] += v;
+                a[j * p + i] += v;
+            }
+        }
+        let (w, v) = jacobi_eigen(&a, p, 100).unwrap();
+        // rebuild
+        let mut rec = vec![0.0; p * p];
+        for i in 0..p {
+            for j in 0..p {
+                for k in 0..p {
+                    rec[i * p + j] += v[i * p + k] * w[k] * v[j * p + k];
+                }
+            }
+        }
+        for (x, y) in rec.iter().zip(a.iter()) {
+            assert!((x - y).abs() < 1e-8, "{x} vs {y}");
+        }
+        // eigenvalues descending
+        for k in 1..p {
+            assert!(w[k - 1] >= w[k] - 1e-12);
+        }
+    }
+
+    #[test]
+    fn spd_inverse_roundtrip() {
+        let p = 3;
+        // A = M M^T + I is SPD
+        let m = [1.0, 2.0, 0.5, 0.0, 1.0, -1.0, 2.0, 0.3, 0.7];
+        let mut a = vec![0.0; 9];
+        for i in 0..p {
+            for j in 0..p {
+                for k in 0..p {
+                    a[i * p + j] += m[i * p + k] * m[j * p + k];
+                }
+            }
+            a[i * p + i] += 1.0;
+        }
+        let (inv, logdet) = spd_inverse_logdet(&a, p).unwrap();
+        let prod = matmul_rm(&a, &inv, p, p, p);
+        for i in 0..p {
+            for j in 0..p {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((prod[i * p + j] - want).abs() < 1e-10);
+            }
+        }
+        assert!(logdet.is_finite());
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        assert!(cholesky(&[1.0, 2.0, 2.0, 1.0], 2).is_err());
+    }
+}

@@ -1,0 +1,84 @@
+//! The paper's evaluation algorithms (§IV-A), written against the `fmr`
+//! R-like interface, with an optional AOT-XLA fast path per partition.
+//!
+//! Each algorithm has two execution paths that produce identical results:
+//!
+//! 1. **GenOp path** — the algorithm exactly as the paper's R code would
+//!    express it: lazy GenOps fused into one streaming pass per logical
+//!    pass over the data, parallelized by the engine. Used always for
+//!    correctness, and exclusively when `xla_dispatch` is off.
+//! 2. **XLA path** — when the data matrix is dense f64 with the canonical
+//!    partitioning and `artifacts/manifest.json` has a matching module,
+//!    each *full* partition's step runs on the AOT-compiled XLA executable
+//!    (the role BLAS plays in the paper); tail partitions use the native
+//!    [`steps`] functions with the identical contract.
+
+pub mod correlation;
+pub mod gmm;
+pub mod kmeans;
+pub mod linalg;
+pub mod steps;
+pub mod summary;
+pub mod svd;
+
+pub use correlation::correlation;
+pub use gmm::{gmm, GmmResult};
+pub use kmeans::{kmeans, KmeansResult};
+pub use summary::{summary, SummaryResult};
+pub use svd::{svd, SvdResult};
+
+use crate::error::{FmError, Result};
+use crate::fmr::FmMatrix;
+use crate::matrix::{DenseData, MatrixData};
+use crate::runtime::XlaService;
+
+/// If `x` is eligible for artifact dispatch of `kind` (with cluster count
+/// `k`; 0 when not applicable), return the service and artifact name.
+pub(crate) fn xla_candidate(x: &FmMatrix, kind: &str, k: u64) -> Option<(XlaService, String)> {
+    if !x.eng.config.xla_dispatch || x.m.transposed {
+        return None;
+    }
+    if !x.eng.config.xla_kinds.iter().any(|k| k == kind || k == "all") {
+        return None;
+    }
+    let d = dense_of(x).ok()?;
+    if d.dtype != crate::dtype::DType::F64 {
+        return None;
+    }
+    if d.parts.io_rows != crate::matrix::io_rows_for(d.ncol()) {
+        return None;
+    }
+    let svc = x.eng.xla()?.clone();
+    let name = svc.lookup(kind, d.ncol(), k)?.name.clone();
+    Some((svc, name))
+}
+
+/// Dense backing of a (materialized) matrix.
+pub(crate) fn dense_of(x: &FmMatrix) -> Result<&DenseData> {
+    match &*x.m.data {
+        MatrixData::Dense(d) => Ok(d),
+        _ => Err(FmError::Shape(
+            "algorithm input must be materialized; call .materialize()".into(),
+        )),
+    }
+}
+
+/// Partition `i` of a dense f64 matrix as a row-major vector (the layout
+/// XLA literals use). Returns (rows, data).
+pub(crate) fn partition_row_major(d: &DenseData, i: usize) -> Result<(usize, Vec<f64>)> {
+    let buf = d.partition_buf(i)?;
+    let rows = d.parts.rows_in(i) as usize;
+    let p = d.ncol() as usize;
+    let v = match &buf {
+        crate::vudf::Buf::F64(v) => v,
+        _ => return Err(FmError::DType("expected f64 partition".into())),
+    };
+    let mut rm = vec![0.0f64; rows * p];
+    for j in 0..p {
+        let col = &v[j * rows..(j + 1) * rows];
+        for r in 0..rows {
+            rm[r * p + j] = col[r];
+        }
+    }
+    Ok((rows, rm))
+}

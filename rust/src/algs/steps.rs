@@ -1,0 +1,288 @@
+//! Native per-partition algorithm steps.
+//!
+//! These mirror the AOT artifacts' input/output contracts exactly
+//! (python/compile/model.py): same shapes, same row-major output order, so
+//! the algorithm drivers can mix XLA-dispatched full partitions with
+//! native tail partitions and fold the outputs identically. They are also
+//! the cross-check target for `rust/tests/golden.rs`.
+//!
+//! Inputs are col-major partition buffers straight from
+//! [`crate::matrix::DenseData::partition_buf`].
+
+use crate::error::{FmError, Result};
+use crate::matrix::HostMat;
+use crate::vudf::Buf;
+
+/// Fused column statistics of one partition -> row-major (6, p):
+/// `[min, max, sum, sumsq, sumabs, nnz]` per column (matches the Pallas
+/// colstats kernel).
+pub fn colstats_native(x: &Buf, rows: usize, p: usize) -> Result<Vec<f64>> {
+    let xv = as_f64(x, rows * p)?;
+    let mut out = vec![0.0; 6 * p];
+    for j in 0..p {
+        let col = &xv[j * rows..(j + 1) * rows];
+        let (mut mn, mut mx, mut s, mut ss, mut sa, mut nnz) =
+            (f64::INFINITY, f64::NEG_INFINITY, 0.0, 0.0, 0.0, 0.0);
+        for &v in col {
+            mn = mn.min(v);
+            mx = mx.max(v);
+            s += v;
+            ss += v * v;
+            sa += v.abs();
+            nnz += (v != 0.0) as u8 as f64;
+        }
+        out[j] = mn;
+        out[p + j] = mx;
+        out[2 * p + j] = s;
+        out[3 * p + j] = ss;
+        out[4 * p + j] = sa;
+        out[5 * p + j] = nnz;
+    }
+    Ok(out)
+}
+
+/// k-means partition step (matches the kmeans artifact):
+/// returns (sums row-major (k,p), counts (k), wcss, assign (rows) 0-based).
+pub fn kmeans_step_native(
+    x: &Buf,
+    rows: usize,
+    p: usize,
+    c: &HostMat,
+) -> Result<(Vec<f64>, Vec<f64>, f64, Vec<i32>)> {
+    let xv = as_f64(x, rows * p)?;
+    let k = c.nrow;
+    let crm = c.to_row_major_f64(); // (k, p)
+    let c2: Vec<f64> = (0..k)
+        .map(|ci| (0..p).map(|j| crm[ci * p + j] * crm[ci * p + j]).sum())
+        .collect();
+    let mut sums = vec![0.0; k * p];
+    let mut counts = vec![0.0; k];
+    let mut wcss = 0.0;
+    let mut assign = vec![0i32; rows];
+    for r in 0..rows {
+        // x2 for this row
+        let mut x2 = 0.0;
+        for j in 0..p {
+            let v = xv[j * rows + r];
+            x2 += v * v;
+        }
+        let mut best = f64::INFINITY;
+        let mut bi = 0usize;
+        for ci in 0..k {
+            let mut dot = 0.0;
+            for j in 0..p {
+                dot += xv[j * rows + r] * crm[ci * p + j];
+            }
+            let d = x2 - 2.0 * dot + c2[ci];
+            if d < best {
+                best = d;
+                bi = ci;
+            }
+        }
+        assign[r] = bi as i32;
+        counts[bi] += 1.0;
+        wcss += best;
+        for j in 0..p {
+            sums[bi * p + j] += xv[j * rows + r];
+        }
+    }
+    Ok((sums, counts, wcss, assign))
+}
+
+/// One-pass Gramian partition step: (xtx row-major (p,p), colsums (p)).
+pub fn gramian_native(x: &Buf, rows: usize, p: usize) -> Result<(Vec<f64>, Vec<f64>)> {
+    let xv = as_f64(x, rows * p)?;
+    let mut xtx = vec![0.0; p * p];
+    let mut cs = vec![0.0; p];
+    for i in 0..p {
+        let ci = &xv[i * rows..(i + 1) * rows];
+        cs[i] = ci.iter().sum();
+        for j in i..p {
+            let cj = &xv[j * rows..(j + 1) * rows];
+            let mut dot = 0.0;
+            for r in 0..rows {
+                dot += ci[r] * cj[r];
+            }
+            xtx[i * p + j] = dot;
+            xtx[j * p + i] = dot;
+        }
+    }
+    Ok((xtx, cs))
+}
+
+/// Centered Gramian partition step: xtx_c row-major (p,p).
+pub fn gramian_centered_native(x: &Buf, rows: usize, p: usize, mu: &[f64]) -> Result<Vec<f64>> {
+    let xv = as_f64(x, rows * p)?;
+    let mut xtx = vec![0.0; p * p];
+    for i in 0..p {
+        let ci = &xv[i * rows..(i + 1) * rows];
+        for j in i..p {
+            let cj = &xv[j * rows..(j + 1) * rows];
+            let mut dot = 0.0;
+            for r in 0..rows {
+                dot += (ci[r] - mu[i]) * (cj[r] - mu[j]);
+            }
+            xtx[i * p + j] = dot;
+            xtx[j * p + i] = dot;
+        }
+    }
+    Ok(xtx)
+}
+
+/// GMM E-step partition stats (matches the gmm artifact):
+/// (Nk (k), Sk row-major (k,p), SSk row-major (k,p,p), loglik).
+#[allow(clippy::too_many_arguments)]
+pub fn gmm_estep_native(
+    x: &Buf,
+    rows: usize,
+    p: usize,
+    means_rm: &[f64],  // (k, p)
+    prec_rm: &[f64],   // (k, p, p)
+    logdet: &[f64],    // (k)
+    logw: &[f64],      // (k)
+) -> Result<(Vec<f64>, Vec<f64>, Vec<f64>, f64)> {
+    let xv = as_f64(x, rows * p)?;
+    let k = logw.len();
+    // pmu_k = P_k mu_k ; mupmu_k = mu_k^T P_k mu_k
+    let mut pmu = vec![0.0; k * p];
+    let mut mupmu = vec![0.0; k];
+    for c in 0..k {
+        for i in 0..p {
+            let mut s = 0.0;
+            for j in 0..p {
+                s += prec_rm[c * p * p + i * p + j] * means_rm[c * p + j];
+            }
+            pmu[c * p + i] = s;
+        }
+        mupmu[c] = (0..p).map(|i| pmu[c * p + i] * means_rm[c * p + i]).sum();
+    }
+    let cst = -0.5 * p as f64 * (2.0 * std::f64::consts::PI).ln();
+
+    let mut nk = vec![0.0; k];
+    let mut sk = vec![0.0; k * p];
+    let mut ssk = vec![0.0; k * p * p];
+    let mut ll = 0.0;
+    let mut xrow = vec![0.0; p];
+    let mut logp = vec![0.0; k];
+    for r in 0..rows {
+        for j in 0..p {
+            xrow[j] = xv[j * rows + r];
+        }
+        for c in 0..k {
+            // x P x^T
+            let mut xpx = 0.0;
+            for i in 0..p {
+                let mut s = 0.0;
+                for j in 0..p {
+                    s += prec_rm[c * p * p + i * p + j] * xrow[j];
+                }
+                xpx += xrow[i] * s;
+            }
+            let xpm: f64 = (0..p).map(|i| xrow[i] * pmu[c * p + i]).sum();
+            let maha = xpx - 2.0 * xpm + mupmu[c];
+            logp[c] = logw[c] + 0.5 * logdet[c] - 0.5 * maha + cst;
+        }
+        let m = logp.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let se: f64 = logp.iter().map(|v| (v - m).exp()).sum();
+        let lse = m + se.ln();
+        ll += lse;
+        for c in 0..k {
+            let resp = (logp[c] - lse).exp();
+            nk[c] += resp;
+            for i in 0..p {
+                sk[c * p + i] += resp * xrow[i];
+                for j in 0..p {
+                    ssk[c * p * p + i * p + j] += resp * xrow[i] * xrow[j];
+                }
+            }
+        }
+    }
+    Ok((nk, sk, ssk, ll))
+}
+
+fn as_f64(x: &Buf, want: usize) -> Result<&[f64]> {
+    match x {
+        Buf::F64(v) if v.len() == want => Ok(v),
+        Buf::F64(v) => Err(FmError::Shape(format!(
+            "partition buffer has {} elements, want {want}",
+            v.len()
+        ))),
+        other => Err(FmError::DType(format!(
+            "native step requires f64 partitions, got {}",
+            other.dtype()
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtype::DType;
+
+    fn colmajor(rows: usize, p: usize, f: impl Fn(usize, usize) -> f64) -> Buf {
+        let mut b = Buf::alloc(DType::F64, rows * p);
+        for j in 0..p {
+            for r in 0..rows {
+                b.set(j * rows + r, crate::dtype::Scalar::F64(f(r, j)));
+            }
+        }
+        b
+    }
+
+    #[test]
+    fn colstats_simple() {
+        let x = colmajor(4, 2, |r, j| (r as f64 + 1.0) * if j == 0 { 1.0 } else { -1.0 });
+        let s = colstats_native(&x, 4, 2).unwrap();
+        assert_eq!(s[0], 1.0); // min col0
+        assert_eq!(s[1], -4.0); // min col1
+        assert_eq!(s[2 * 2], 10.0); // sum col0
+        assert_eq!(s[3 * 2 + 1], 30.0); // sumsq col1
+        assert_eq!(s[5 * 2], 4.0); // nnz col0
+    }
+
+    #[test]
+    fn kmeans_step_two_obvious_clusters() {
+        // points at 0 and at 10; centroids 0 and 10
+        let x = colmajor(4, 1, |r, _| if r < 2 { 0.0 } else { 10.0 });
+        let c = HostMat::from_rows_f64(&[vec![0.0], vec![10.0]]);
+        let (sums, counts, wcss, assign) = kmeans_step_native(&x, 4, 1, &c).unwrap();
+        assert_eq!(counts, vec![2.0, 2.0]);
+        assert_eq!(sums, vec![0.0, 20.0]);
+        assert_eq!(wcss, 0.0);
+        assert_eq!(assign, vec![0, 0, 1, 1]);
+    }
+
+    #[test]
+    fn gramian_matches_manual() {
+        let x = colmajor(3, 2, |r, j| (r + j) as f64);
+        let (xtx, cs) = gramian_native(&x, 3, 2).unwrap();
+        // col0 = [0,1,2], col1 = [1,2,3]
+        assert_eq!(cs, vec![3.0, 6.0]);
+        assert_eq!(xtx, vec![5.0, 8.0, 8.0, 14.0]);
+        let mu = [1.0, 2.0];
+        let xc = gramian_centered_native(&x, 3, 2, &mu).unwrap();
+        assert_eq!(xc, vec![2.0, 2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn gmm_estep_responsibilities_sum_to_rows() {
+        let rows = 8;
+        let p = 2;
+        let k = 2;
+        let x = colmajor(rows, p, |r, j| (r % 3) as f64 + j as f64);
+        let means = vec![0.0, 0.0, 2.0, 2.0];
+        let mut prec = vec![0.0; k * p * p];
+        for c in 0..k {
+            prec[c * 4] = 1.0;
+            prec[c * 4 + 3] = 1.0;
+        }
+        let logdet = vec![0.0, 0.0];
+        let logw = vec![(0.5f64).ln(), (0.5f64).ln()];
+        let (nk, sk, ssk, ll) =
+            gmm_estep_native(&x, rows, p, &means, &prec, &logdet, &logw).unwrap();
+        assert!((nk.iter().sum::<f64>() - rows as f64).abs() < 1e-9);
+        assert_eq!(sk.len(), k * p);
+        assert_eq!(ssk.len(), k * p * p);
+        assert!(ll.is_finite());
+    }
+}

@@ -1,0 +1,168 @@
+//! Multivariate statistical summary (paper §IV-A): column-wise min, max,
+//! mean, L1 norm, L2 norm, non-zero count and variance — all in ONE
+//! streaming pass (the six fused `fm.agg.col` sinks of the GenOp path, or
+//! the Pallas colstats kernel on the XLA path).
+
+use crate::dag::SinkResult;
+use crate::error::Result;
+use crate::fmr::FmMatrix;
+use crate::runtime::HostTensor;
+use crate::vudf::{AggOp, UnOp};
+
+/// Column-wise summary statistics.
+#[derive(Clone, Debug)]
+pub struct SummaryResult {
+    pub n: u64,
+    pub min: Vec<f64>,
+    pub max: Vec<f64>,
+    pub mean: Vec<f64>,
+    pub l1: Vec<f64>,
+    pub l2: Vec<f64>,
+    pub nnz: Vec<f64>,
+    pub var: Vec<f64>,
+}
+
+impl SummaryResult {
+    fn from_accumulators(
+        n: u64,
+        min: Vec<f64>,
+        max: Vec<f64>,
+        sum: Vec<f64>,
+        sumsq: Vec<f64>,
+        sumabs: Vec<f64>,
+        nnz: Vec<f64>,
+    ) -> SummaryResult {
+        let nf = n as f64;
+        let mean: Vec<f64> = sum.iter().map(|s| s / nf).collect();
+        let var = sumsq
+            .iter()
+            .zip(&mean)
+            .map(|(ss, m)| (ss - nf * m * m) / (nf - 1.0).max(1.0))
+            .collect();
+        let l2 = sumsq.iter().map(|s| s.sqrt()).collect();
+        SummaryResult {
+            n,
+            min,
+            max,
+            mean,
+            l1: sumabs,
+            l2,
+            nnz,
+            var,
+        }
+    }
+}
+
+/// Compute the summary of a tall matrix.
+pub fn summary(x: &FmMatrix) -> Result<SummaryResult> {
+    if let Some((svc, name)) = super::xla_candidate(x, "summary", 0) {
+        return summary_xla(x, &svc, &name);
+    }
+    summary_genop(x)
+}
+
+/// GenOp path: six `fm.agg.col` sinks over a shared scan (the paper's
+/// fused R implementation — Fig 5's pattern without the NA handling).
+pub fn summary_genop(x: &FmMatrix) -> Result<SummaryResult> {
+    let n = x.nrow();
+    let sq = x.sapply(UnOp::Sq)?;
+    let ab = x.sapply(UnOp::Abs)?;
+    let nz = x.sapply(UnOp::NotZero)?;
+    let sinks = vec![
+        x.agg_col_sink(AggOp::Min)?,
+        x.agg_col_sink(AggOp::Max)?,
+        x.agg_col_sink(AggOp::Sum)?,
+        sq.agg_col_sink(AggOp::Sum)?,
+        ab.agg_col_sink(AggOp::Sum)?,
+        nz.agg_col_sink(AggOp::Sum)?,
+    ];
+    let rs = x.eng.materialize_sinks(&sinks)?;
+    let take = |r: &SinkResult| -> Vec<f64> { r.mat().buf.to_f64_vec() };
+    Ok(SummaryResult::from_accumulators(
+        n,
+        take(&rs[0]),
+        take(&rs[1]),
+        take(&rs[2]),
+        take(&rs[3]),
+        take(&rs[4]),
+        take(&rs[5]),
+    ))
+}
+
+/// XLA path: the Pallas colstats kernel per full partition, native step for
+/// the tail, merged like any aVUDF combine.
+fn summary_xla(
+    x: &FmMatrix,
+    svc: &crate::runtime::XlaService,
+    name: &str,
+) -> Result<SummaryResult> {
+    let d = super::dense_of(x)?;
+    let p = d.ncol() as usize;
+    let mut min = vec![f64::INFINITY; p];
+    let mut max = vec![f64::NEG_INFINITY; p];
+    let mut sum = vec![0.0; p];
+    let mut sumsq = vec![0.0; p];
+    let mut sumabs = vec![0.0; p];
+    let mut nnz = vec![0.0; p];
+    for i in 0..d.parts.n_parts() {
+        let stats: Vec<f64> = if d.parts.is_full(i) {
+            let (rows, rm) = super::partition_row_major(d, i)?;
+            x.eng
+                .metrics
+                .xla_dispatches
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            let out = svc.run(name, vec![HostTensor::f64(vec![rows, p], rm)])?;
+            out[0].as_f64()?.to_vec()
+        } else {
+            let buf = d.partition_buf(i)?;
+            super::steps::colstats_native(&buf, d.parts.rows_in(i) as usize, p)?
+        };
+        for j in 0..p {
+            min[j] = min[j].min(stats[j]);
+            max[j] = max[j].max(stats[p + j]);
+            sum[j] += stats[2 * p + j];
+            sumsq[j] += stats[3 * p + j];
+            sumabs[j] += stats[4 * p + j];
+            nnz[j] += stats[5 * p + j];
+        }
+    }
+    Ok(SummaryResult::from_accumulators(
+        x.nrow(),
+        min,
+        max,
+        sum,
+        sumsq,
+        sumabs,
+        nnz,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineConfig;
+    use crate::fmr::Engine;
+
+    #[test]
+    fn summary_matches_manual() {
+        let e = Engine::new(EngineConfig {
+            xla_dispatch: false,
+            chunk_bytes: 1 << 20,
+            target_part_bytes: 1 << 20,
+            ..Default::default()
+        })
+        .unwrap();
+        let x = crate::datasets::uniform(&e, 10_000, 3, -1.0, 3.0, 13, None).unwrap();
+        let s = summary(&x).unwrap();
+        assert_eq!(s.n, 10_000);
+        for j in 0..3 {
+            assert!(s.min[j] >= -1.0 && s.min[j] < -0.9);
+            assert!(s.max[j] <= 3.0 && s.max[j] > 2.9);
+            assert!((s.mean[j] - 1.0).abs() < 0.1);
+            // var of U(-1,3) = 16/12 ≈ 1.333
+            assert!((s.var[j] - 4.0 / 3.0).abs() < 0.1);
+            assert_eq!(s.nnz[j], 10_000.0); // exact zeros have measure 0
+            assert!(s.l1[j] > 0.0 && s.l2[j] > 0.0);
+        }
+    }
+}

@@ -1,0 +1,161 @@
+//! Singular value decomposition of tall matrices (paper §IV-A): compute
+//! the Gramian `t(A) %*% A` (one pass), then the eigendecomposition of the
+//! small p×p Gramian (host-side cyclic Jacobi) to derive singular values
+//! and right singular vectors; optionally one more pass reconstructs the
+//! left singular vectors `U = A V Σ^{-1}` via `fm.inner.prod`.
+
+use crate::error::Result;
+use crate::fmr::FmMatrix;
+use crate::matrix::HostMat;
+use crate::runtime::HostTensor;
+use crate::vudf::{AggOp, BinOp};
+
+/// Truncated SVD result.
+#[derive(Clone, Debug)]
+pub struct SvdResult {
+    /// Singular values, descending (length nv).
+    pub sigma: Vec<f64>,
+    /// Right singular vectors, row-major p×nv.
+    pub v: Vec<f64>,
+    pub p: usize,
+    pub nv: usize,
+}
+
+/// Compute the top `nv` singular values/right vectors of a tall matrix.
+pub fn svd(x: &FmMatrix, nv: usize) -> Result<SvdResult> {
+    let p = x.ncol() as usize;
+    let nv = nv.min(p);
+
+    // one pass: Gramian
+    let g: Vec<f64> = if let Some((svc, name)) = super::xla_candidate(x, "gramian", 0) {
+        gramian_xla(x, &svc, &name)?
+    } else {
+        x.crossprod(x)?.to_row_major_f64()
+    };
+
+    // host: eigendecomposition of the p×p Gramian
+    let (vals, vecs) = super::linalg::jacobi_eigen(&g, p, 100)?;
+    let sigma: Vec<f64> = vals.iter().take(nv).map(|l| l.max(0.0).sqrt()).collect();
+    let mut v = vec![0.0; p * nv];
+    for r in 0..p {
+        for c in 0..nv {
+            v[r * nv + c] = vecs[r * p + c];
+        }
+    }
+    Ok(SvdResult { sigma, v, p, nv })
+}
+
+/// Optional extra pass: left singular vectors `U = A V Σ^{-1}` (n×nv,
+/// materialized through the engine).
+pub fn left_vectors(x: &FmMatrix, s: &SvdResult) -> Result<FmMatrix> {
+    let mut w = HostMat::zeros(s.p, s.nv, crate::dtype::DType::F64);
+    for r in 0..s.p {
+        for c in 0..s.nv {
+            let scale = if s.sigma[c] > 1e-300 { 1.0 / s.sigma[c] } else { 0.0 };
+            w.set(
+                r,
+                c,
+                crate::dtype::Scalar::F64(s.v[r * s.nv + c] * scale),
+            );
+        }
+    }
+    x.inner_prod_small(&w, BinOp::Mul, AggOp::Sum)?.materialize()
+}
+
+fn gramian_xla(
+    x: &FmMatrix,
+    svc: &crate::runtime::XlaService,
+    name: &str,
+) -> Result<Vec<f64>> {
+    let d = super::dense_of(x)?;
+    let p = d.ncol() as usize;
+    let mut acc = vec![0.0; p * p];
+    for i in 0..d.parts.n_parts() {
+        let part: Vec<f64> = if d.parts.is_full(i) {
+            let (rows, rm) = super::partition_row_major(d, i)?;
+            x.eng
+                .metrics
+                .xla_dispatches
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            let out = svc.run(name, vec![HostTensor::f64(vec![rows, p], rm)])?;
+            out[0].as_f64()?.to_vec()
+        } else {
+            let buf = d.partition_buf(i)?;
+            super::steps::gramian_native(&buf, d.parts.rows_in(i) as usize, p)?.0
+        };
+        for (a, b) in acc.iter_mut().zip(part) {
+            *a += b;
+        }
+    }
+    Ok(acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineConfig;
+    use crate::fmr::Engine;
+
+    fn eng() -> std::sync::Arc<Engine> {
+        Engine::new(EngineConfig {
+            xla_dispatch: false,
+            chunk_bytes: 1 << 20,
+            target_part_bytes: 1 << 20,
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn svd_of_orthogonal_columns() {
+        let e = eng();
+        // two orthogonal columns with known norms: sigma = norms
+        let x = crate::datasets::from_fn(&e, 4096, 2, None, |r, j| {
+            let s = if r % 2 == 0 { 1.0 } else { -1.0 };
+            if j == 0 {
+                2.0 * s
+            } else if r % 4 < 2 {
+                3.0
+            } else {
+                -3.0
+            }
+        })
+        .unwrap();
+        let s = svd(&x, 2).unwrap();
+        // column norms: 2*sqrt(n), 3*sqrt(n)
+        let n = 4096f64;
+        assert!((s.sigma[0] - 3.0 * n.sqrt()).abs() / s.sigma[0] < 1e-9);
+        assert!((s.sigma[1] - 2.0 * n.sqrt()).abs() / s.sigma[1] < 1e-9);
+    }
+
+    #[test]
+    fn singular_values_match_frobenius() {
+        let e = eng();
+        let x = crate::datasets::uniform(&e, 5000, 6, -1.0, 1.0, 3, None).unwrap();
+        let s = svd(&x, 6).unwrap();
+        // sum sigma_i^2 == ||X||_F^2
+        let fro = x.sq().unwrap().sum().unwrap();
+        let ss: f64 = s.sigma.iter().map(|v| v * v).sum();
+        assert!((fro - ss).abs() / fro < 1e-9);
+        // descending
+        for i in 1..6 {
+            assert!(s.sigma[i - 1] >= s.sigma[i] - 1e-12);
+        }
+    }
+
+    #[test]
+    fn left_vectors_are_orthonormal() {
+        let e = eng();
+        let x = crate::datasets::uniform(&e, 3000, 4, -1.0, 1.0, 8, None).unwrap();
+        let s = svd(&x, 3).unwrap();
+        let u = left_vectors(&x, &s).unwrap();
+        // t(U) U = I (3x3)
+        let g = u.crossprod(&u).unwrap().to_row_major_f64();
+        for i in 0..3 {
+            for j in 0..3 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((g[i * 3 + j] - want).abs() < 1e-8, "{i},{j}: {}", g[i * 3 + j]);
+            }
+        }
+    }
+}

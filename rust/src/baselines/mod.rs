@@ -1,0 +1,13 @@
+//! Comparison baselines (DESIGN.md §Substitutions).
+//!
+//! * **MLlib-like** — not code here: the engine run with
+//!   [`crate::config::EngineConfig::mllib_like`] (eager materialization of
+//!   every op, per-element boxed UDF calls, fresh allocation per op, no
+//!   XLA). Fig 6's comparison uses exactly the same algorithm sources.
+//! * **R reference** ([`reference`]) — single-threaded, eager,
+//!   temp-allocating implementations in the style of R's C/FORTRAN
+//!   backends: each logical matrix op materializes a full temporary, ops
+//!   run one after another (no fusion, no partitioning), one thread.
+//!   These are the Fig 7 comparators.
+
+pub mod reference;

@@ -1,0 +1,327 @@
+//! Single-threaded eager reference implementations (the "R C/FORTRAN"
+//! comparators of Fig 7).
+//!
+//! Style rules, mirroring how R's interpreter drives its C backends:
+//! every operation allocates and fills a full n×p temporary before the
+//! next op starts (no fusion), everything is one thread, data is one flat
+//! column-major `Vec<f64>`. The algorithms match [`crate::algs`]
+//! numerically (same formulas), so the comparison isolates the *execution
+//! model*, exactly as the paper's Fig 7 does.
+
+use crate::algs::linalg;
+use crate::error::Result;
+use crate::matrix::HostMat;
+
+/// Column-major n×p host matrix for the reference path.
+pub struct RefMat {
+    pub n: usize,
+    pub p: usize,
+    pub data: Vec<f64>,
+}
+
+impl RefMat {
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        self.data[c * self.n + r]
+    }
+
+    /// Export an engine matrix for the reference baselines.
+    pub fn from_fm(x: &crate::fmr::FmMatrix) -> Result<RefMat> {
+        let h = x.to_host()?;
+        Ok(RefMat {
+            n: h.nrow,
+            p: h.ncol,
+            data: h.buf.to_f64_vec(),
+        })
+    }
+
+    fn col(&self, c: usize) -> &[f64] {
+        &self.data[c * self.n..(c + 1) * self.n]
+    }
+}
+
+/// Summary: min/max/mean/L1/L2/nnz/var per column — each statistic is its
+/// own full pass with its own temporaries (R: `apply(x, 2, min)`, `x^2`,
+/// `colSums`, ...).
+pub fn summary_ref(x: &RefMat) -> (Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>) {
+    let (n, p) = (x.n, x.p);
+    let mut min = vec![f64::INFINITY; p];
+    let mut max = vec![f64::NEG_INFINITY; p];
+    for c in 0..p {
+        for &v in x.col(c) {
+            min[c] = min[c].min(v);
+        }
+    }
+    for c in 0..p {
+        for &v in x.col(c) {
+            max[c] = max[c].max(v);
+        }
+    }
+    // x^2 temporary (the eager allocation R would make)
+    let sq: Vec<f64> = x.data.iter().map(|v| v * v).collect();
+    let absx: Vec<f64> = x.data.iter().map(|v| v.abs()).collect();
+    let nz: Vec<f64> = x.data.iter().map(|v| (*v != 0.0) as u8 as f64).collect();
+    let colsum = |d: &[f64]| -> Vec<f64> {
+        (0..p).map(|c| d[c * n..(c + 1) * n].iter().sum()).collect()
+    };
+    let sum = colsum(&x.data);
+    let sumsq = colsum(&sq);
+    let l1 = colsum(&absx);
+    let nnz = colsum(&nz);
+    let mean: Vec<f64> = sum.iter().map(|s| s / n as f64).collect();
+    let var: Vec<f64> = sumsq
+        .iter()
+        .zip(&mean)
+        .map(|(ss, m)| (ss - n as f64 * m * m) / (n as f64 - 1.0).max(1.0))
+        .collect();
+    let l2: Vec<f64> = sumsq.iter().map(|s| s.sqrt()).collect();
+    (min, max, mean, l1, l2, nnz, var)
+}
+
+/// Correlation: center (full temporary), then `crossprod` (the dgemm call
+/// R's `cor` ends up in), then normalize.
+pub fn correlation_ref(x: &RefMat) -> Vec<f64> {
+    let (n, p) = (x.n, x.p);
+    let mean: Vec<f64> = (0..p)
+        .map(|c| x.col(c).iter().sum::<f64>() / n as f64)
+        .collect();
+    // centered copy (eager)
+    let mut xc = vec![0.0; n * p];
+    for c in 0..p {
+        for r in 0..n {
+            xc[c * n + r] = x.get(r, c) - mean[c];
+        }
+    }
+    let mut g = vec![0.0; p * p];
+    for i in 0..p {
+        for j in i..p {
+            let (ci, cj) = (&xc[i * n..(i + 1) * n], &xc[j * n..(j + 1) * n]);
+            let dot: f64 = ci.iter().zip(cj).map(|(a, b)| a * b).sum();
+            g[i * p + j] = dot;
+            g[j * p + i] = dot;
+        }
+    }
+    let mut corr = vec![0.0; p * p];
+    for i in 0..p {
+        for j in 0..p {
+            let d = (g[i * p + i] * g[j * p + j]).sqrt();
+            corr[i * p + j] = if d > 0.0 { g[i * p + j] / d } else { 0.0 };
+        }
+    }
+    corr
+}
+
+/// SVD via Gramian + Jacobi (same math as `algs::svd`, eager layout).
+pub fn svd_ref(x: &RefMat, nv: usize) -> Result<(Vec<f64>, Vec<f64>)> {
+    let (n, p) = (x.n, x.p);
+    let mut g = vec![0.0; p * p];
+    for i in 0..p {
+        for j in i..p {
+            let dot: f64 = x.col(i).iter().zip(x.col(j)).map(|(a, b)| a * b).sum();
+            g[i * p + j] = dot;
+            g[j * p + i] = dot;
+        }
+    }
+    let _ = n;
+    let (vals, vecs) = linalg::jacobi_eigen(&g, p, 100)?;
+    let sigma: Vec<f64> = vals.iter().take(nv).map(|l| l.max(0.0).sqrt()).collect();
+    Ok((sigma, vecs))
+}
+
+/// Lloyd k-means, eager: a full n×k distance matrix is materialized every
+/// iteration (R's `dist`-style memory behaviour).
+pub fn kmeans_ref(x: &RefMat, init: &HostMat, iters: usize) -> (HostMat, Vec<f64>) {
+    let (n, p) = (x.n, x.p);
+    let k = init.nrow;
+    let mut c: Vec<f64> = init.to_row_major_f64();
+    let mut wcss_log = Vec::new();
+    for _ in 0..iters {
+        // full distance matrix (eager, n×k)
+        let mut dist = vec![0.0; n * k];
+        for ci in 0..k {
+            for r in 0..n {
+                let mut d = 0.0;
+                for j in 0..p {
+                    let diff = x.get(r, j) - c[ci * p + j];
+                    d += diff * diff;
+                }
+                dist[ci * n + r] = d;
+            }
+        }
+        let mut sums = vec![0.0; k * p];
+        let mut counts = vec![0.0; k];
+        let mut wcss = 0.0;
+        for r in 0..n {
+            let mut best = f64::INFINITY;
+            let mut bi = 0;
+            for ci in 0..k {
+                if dist[ci * n + r] < best {
+                    best = dist[ci * n + r];
+                    bi = ci;
+                }
+            }
+            counts[bi] += 1.0;
+            wcss += best;
+            for j in 0..p {
+                sums[bi * p + j] += x.get(r, j);
+            }
+        }
+        for ci in 0..k {
+            if counts[ci] > 0.0 {
+                for j in 0..p {
+                    c[ci * p + j] = sums[ci * p + j] / counts[ci];
+                }
+            }
+        }
+        wcss_log.push(wcss);
+    }
+    (HostMat::from_row_major_f64(k, p, &c), wcss_log)
+}
+
+/// Full-covariance GMM EM, eager: n×k responsibility matrix materialized
+/// per iteration (mclust-style memory behaviour).
+pub fn gmm_ref(x: &RefMat, init_means: &HostMat, iters: usize) -> Result<(HostMat, Vec<f64>)> {
+    let (n, p) = (x.n, x.p);
+    let k = init_means.nrow;
+    let mut means = init_means.to_row_major_f64();
+    let mut prec = vec![0.0; k * p * p];
+    for c in 0..k {
+        for i in 0..p {
+            prec[c * p * p + i * p + i] = 1.0;
+        }
+    }
+    let mut logdet = vec![0.0; k];
+    let mut logw = vec![(1.0 / k as f64).ln(); k];
+    let cst = -0.5 * p as f64 * (2.0 * std::f64::consts::PI).ln();
+    let mut ll_log = Vec::new();
+
+    for _ in 0..iters {
+        // eager responsibilities
+        let mut resp = vec![0.0; n * k];
+        let mut ll = 0.0;
+        let mut logp = vec![0.0; k];
+        for r in 0..n {
+            for c in 0..k {
+                let mut maha = 0.0;
+                for i in 0..p {
+                    let di = x.get(r, i) - means[c * p + i];
+                    let mut s = 0.0;
+                    for j in 0..p {
+                        s += prec[c * p * p + i * p + j] * (x.get(r, j) - means[c * p + j]);
+                    }
+                    maha += di * s;
+                }
+                logp[c] = logw[c] + 0.5 * logdet[c] - 0.5 * maha + cst;
+            }
+            let m = logp.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let se: f64 = logp.iter().map(|v| (v - m).exp()).sum();
+            let lse = m + se.ln();
+            ll += lse;
+            for c in 0..k {
+                resp[c * n + r] = (logp[c] - lse).exp();
+            }
+        }
+        ll_log.push(ll);
+        // M-step
+        for c in 0..k {
+            let rcol = &resp[c * n..(c + 1) * n];
+            let nc: f64 = rcol.iter().sum::<f64>().max(1e-12);
+            logw[c] = (nc / n as f64).ln();
+            for j in 0..p {
+                means[c * p + j] =
+                    (0..n).map(|r| rcol[r] * x.get(r, j)).sum::<f64>() / nc;
+            }
+            let mut cov = vec![0.0; p * p];
+            for r in 0..n {
+                for i in 0..p {
+                    let di = x.get(r, i) - means[c * p + i];
+                    for j in 0..p {
+                        cov[i * p + j] += rcol[r] * di * (x.get(r, j) - means[c * p + j]);
+                    }
+                }
+            }
+            for v in cov.iter_mut() {
+                *v /= nc;
+            }
+            for i in 0..p {
+                cov[i * p + i] += 1e-6;
+            }
+            let (inv, ld) = linalg::spd_inverse_logdet(&cov, p)?;
+            prec[c * p * p..(c + 1) * p * p].copy_from_slice(&inv);
+            logdet[c] = -ld;
+        }
+    }
+    Ok((HostMat::from_row_major_f64(k, p, &means), ll_log))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineConfig;
+    use crate::fmr::Engine;
+
+    fn eng() -> std::sync::Arc<Engine> {
+        Engine::new(EngineConfig {
+            xla_dispatch: false,
+            chunk_bytes: 1 << 20,
+            target_part_bytes: 1 << 20,
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn reference_summary_matches_engine() {
+        let e = eng();
+        let x = crate::datasets::uniform(&e, 6000, 3, -2.0, 2.0, 77, None).unwrap();
+        let s = crate::algs::summary(&x).unwrap();
+        let r = RefMat::from_fm(&x).unwrap();
+        let (min, max, mean, l1, l2, nnz, var) = summary_ref(&r);
+        for j in 0..3 {
+            assert!((s.min[j] - min[j]).abs() < 1e-12);
+            assert!((s.max[j] - max[j]).abs() < 1e-12);
+            assert!((s.mean[j] - mean[j]).abs() < 1e-10);
+            assert!((s.l1[j] - l1[j]).abs() < 1e-7);
+            assert!((s.l2[j] - l2[j]).abs() < 1e-9);
+            assert_eq!(s.nnz[j], nnz[j]);
+            assert!((s.var[j] - var[j]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn reference_correlation_matches_engine() {
+        let e = eng();
+        let x = crate::datasets::spectral_like(&e, 4000, 4, 9, None).unwrap();
+        let a = crate::algs::correlation(&x).unwrap();
+        let r = RefMat::from_fm(&x).unwrap();
+        let b = correlation_ref(&r);
+        for (u, v) in a.corr.iter().zip(&b) {
+            assert!((u - v).abs() < 1e-9, "{u} vs {v}");
+        }
+    }
+
+    #[test]
+    fn reference_kmeans_matches_engine_wcss() {
+        let e = eng();
+        let (x, _) = crate::datasets::mix_gaussian(&e, 6000, 3, 3, 10.0, 5, None).unwrap();
+        let init = crate::algs::kmeans::init_centroids(&x, 3, 1).unwrap();
+        let eng_r = crate::algs::kmeans(&x, 3, 4, 1).unwrap();
+        let r = RefMat::from_fm(&x).unwrap();
+        let (_c, wcss) = kmeans_ref(&r, &init, 4);
+        for (a, b) in eng_r.wcss.iter().zip(&wcss) {
+            assert!((a - b).abs() / b.max(1.0) < 1e-9, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn reference_gmm_matches_engine_loglik() {
+        let e = eng();
+        let (x, _) = crate::datasets::mix_gaussian(&e, 3000, 2, 2, 8.0, 13, None).unwrap();
+        let init = crate::algs::kmeans::init_centroids(&x, 2, 3).unwrap();
+        let eng_r = crate::algs::gmm(&x, 2, 3, 3).unwrap();
+        let r = RefMat::from_fm(&x).unwrap();
+        let (_m, ll) = gmm_ref(&r, &init, 3).unwrap();
+        for (a, b) in eng_r.loglik.iter().zip(&ll) {
+            assert!((a - b).abs() / b.abs().max(1.0) < 1e-8, "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,189 @@
+//! Engine configuration.
+//!
+//! Every optimization the paper evaluates (Fig 11/12 ablations) and every
+//! baseline mode (the eager "MLlib-like" engine of Fig 6) is a point in
+//! this configuration space, so all benches exercise the same code paths.
+
+use std::path::PathBuf;
+
+/// Where materialized matrices live.
+#[derive(Clone, Debug, PartialEq)]
+pub enum StorageKind {
+    /// Everything in DRAM (FM-IM in the paper's figures).
+    InMem,
+    /// Large matrices on "SSDs" (FM-EM): file-backed streaming store.
+    External,
+}
+
+/// Simulated SSD-array bandwidth model (substitution for the paper's
+/// 24-SSD SAFS array; see DESIGN.md §Substitutions). `None` disables
+/// throttling and the local disk's real speed applies.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ThrottleConfig {
+    /// Aggregate read bandwidth budget in bytes/sec.
+    pub read_bytes_per_sec: u64,
+    /// Aggregate write bandwidth budget in bytes/sec.
+    pub write_bytes_per_sec: u64,
+}
+
+/// Engine-wide configuration. Defaults reproduce the fully-optimized
+/// FlashMatrix configuration of the paper.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Worker threads for materialization (paper: 48; default: all cores).
+    pub threads: usize,
+    /// Storage for matrices created by `fmr` constructors.
+    pub storage: StorageKind,
+    /// Directory for external-memory matrix files.
+    pub data_dir: PathBuf,
+    /// Fixed memory-chunk size in bytes (paper default: 64 MiB).
+    pub chunk_bytes: usize,
+    /// Recycle freed chunks instead of releasing to the OS
+    /// (Fig 11 "mem-alloc" optimization).
+    pub recycle_chunks: bool,
+    /// Fuse DAG operations within main memory: one streaming pass per DAG
+    /// instead of one per operation (Fig 11 "mem-fuse"). Off = the eager,
+    /// materialize-every-op engine (the MLlib-like baseline).
+    pub fuse_mem: bool,
+    /// Pipeline CPU-level partitions through the whole DAG so intermediates
+    /// stay in CPU cache (Fig 11 "cache-fuse"). Requires `fuse_mem`.
+    pub fuse_cache: bool,
+    /// Vectorized UDFs (paper §III-D). Off = one boxed function call per
+    /// element (Fig 12 ablation).
+    pub vectorized_udf: bool,
+    /// Dispatch per-partition algorithm steps to AOT XLA artifacts when an
+    /// artifact with a matching shape exists (the paper's BLAS dispatch).
+    pub xla_dispatch: bool,
+    /// Which artifact kinds dispatch to XLA. Default is the measured-win
+    /// set for this CPU testbed (EXPERIMENTS.md §Perf: the einsum-heavy GMM
+    /// E-step is ~2x faster under XLA; the other steps are faster native).
+    /// `"all"` enables every kind (used by tests and TPU-like targets).
+    pub xla_kinds: Vec<String>,
+    /// Directory containing `manifest.json` + `*.hlo.txt` artifacts.
+    pub artifacts_dir: PathBuf,
+    /// Target I/O-level partition size in bytes (paper: "order of MBs").
+    /// Kept in sync with python/compile/model.py::io_rows_for.
+    pub target_part_bytes: usize,
+    /// Bandwidth throttle for the external store (None = raw disk).
+    pub throttle: Option<ThrottleConfig>,
+    /// CPU-level partition budget in bytes (fits L1/L2; paper: KBs).
+    pub cpu_part_bytes: usize,
+    /// Number of simulated NUMA nodes for partition→worker affinity.
+    pub numa_nodes: usize,
+    /// Columns of the explicit matrix cache for EM matrices (0 = no cache).
+    pub em_cache_cols: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            threads: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+            storage: StorageKind::InMem,
+            data_dir: PathBuf::from("data"),
+            chunk_bytes: 64 << 20,
+            recycle_chunks: true,
+            fuse_mem: true,
+            fuse_cache: true,
+            vectorized_udf: true,
+            xla_dispatch: true,
+            xla_kinds: vec!["gmm".to_string()],
+            artifacts_dir: PathBuf::from("artifacts"),
+            target_part_bytes: 8 << 20,
+            throttle: None,
+            cpu_part_bytes: 64 << 10,
+            numa_nodes: 1,
+            em_cache_cols: 0,
+        }
+    }
+}
+
+impl EngineConfig {
+    /// The eager, per-element baseline standing in for Spark MLlib
+    /// (DESIGN.md §Substitutions): every matrix operation materializes
+    /// separately, UDFs are boxed per-element calls, fresh allocation per
+    /// op, no XLA fast path for the generic GenOps.
+    pub fn mllib_like() -> Self {
+        EngineConfig {
+            fuse_mem: false,
+            fuse_cache: false,
+            vectorized_udf: false,
+            recycle_chunks: false,
+            xla_dispatch: false,
+            ..Default::default()
+        }
+    }
+
+    /// Fully-optimized in-memory configuration (FM-IM).
+    pub fn fm_im() -> Self {
+        Self::default()
+    }
+
+    /// Fully-optimized external-memory configuration (FM-EM).
+    pub fn fm_em(data_dir: impl Into<PathBuf>) -> Self {
+        EngineConfig {
+            storage: StorageKind::External,
+            data_dir: data_dir.into(),
+            ..Default::default()
+        }
+    }
+
+    /// Validate cross-field invariants.
+    pub fn validate(&self) -> crate::Result<()> {
+        if self.threads == 0 {
+            return Err(crate::FmError::Config("threads must be > 0".into()));
+        }
+        if self.fuse_cache && !self.fuse_mem {
+            return Err(crate::FmError::Config(
+                "fuse_cache requires fuse_mem".into(),
+            ));
+        }
+        if self.chunk_bytes < self.target_part_bytes {
+            return Err(crate::FmError::Config(format!(
+                "chunk_bytes ({}) must be >= target_part_bytes ({})",
+                self.chunk_bytes, self.target_part_bytes
+            )));
+        }
+        if self.numa_nodes == 0 {
+            return Err(crate::FmError::Config("numa_nodes must be > 0".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        EngineConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn mllib_like_disables_optimizations() {
+        let c = EngineConfig::mllib_like();
+        assert!(!c.fuse_mem && !c.fuse_cache && !c.vectorized_udf);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn cache_fuse_requires_mem_fuse() {
+        let c = EngineConfig {
+            fuse_mem: false,
+            fuse_cache: true,
+            ..Default::default()
+        };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn zero_threads_rejected() {
+        let c = EngineConfig {
+            threads: 0,
+            ..Default::default()
+        };
+        assert!(c.validate().is_err());
+    }
+}

@@ -1,0 +1,291 @@
+//! Lazy evaluation: virtual matrices and the operation DAG (paper §III-E).
+//!
+//! Every GenOp returns a *virtual matrix* — a [`VNode`] recording the
+//! computation and `Arc` references to its parent matrices. A chain of
+//! GenOps therefore builds a DAG bottom-up for free; nothing executes until
+//! [`crate::exec`] materializes target matrices / sinks, at which point the
+//! whole DAG runs as **one** partition-streaming pass (operation fusion).
+//!
+//! Two node classes mirror the paper's:
+//! * *elementwise* nodes keep the DAG's shared long dimension (`fm.sapply`,
+//!   `fm.mapply*`, per-row reductions on tall matrices, inner products with
+//!   a small right operand, casts, cbind) and can feed further nodes;
+//! * *sink* nodes ([`SinkSpec`]) end a DAG (`fm.agg`, `fm.agg.col`,
+//!   `fm.groupby.row`, wide×tall inner products); their outputs are small
+//!   host matrices produced by per-thread partial aggregation + merge
+//!   (§III-F).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::dtype::{DType, Scalar};
+use crate::error::{FmError, Result};
+use crate::matrix::{HostMat, Matrix, MatrixData};
+use crate::vudf::{AggOp, BinOp, CustomVudf, UnOp};
+
+/// Unary op reference: built-in (enum fast path) or registered custom VUDF.
+#[derive(Clone)]
+pub enum UnFn {
+    Builtin(UnOp),
+    Custom(Arc<dyn CustomVudf>),
+}
+
+impl UnFn {
+    pub fn out_dtype(&self, input: DType) -> DType {
+        match self {
+            UnFn::Builtin(op) => op.out_dtype(input),
+            UnFn::Custom(c) => c.out_dtype(input),
+        }
+    }
+}
+
+impl std::fmt::Debug for UnFn {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            UnFn::Builtin(op) => write!(f, "{op:?}"),
+            UnFn::Custom(c) => write!(f, "custom:{}", c.name()),
+        }
+    }
+}
+
+/// A virtual matrix: shape + recorded computation.
+pub struct VNode {
+    /// Canonical rows — the DAG long dimension.
+    pub nrow: u64,
+    pub ncol: u64,
+    pub dtype: DType,
+    pub kind: VKind,
+}
+
+/// The recorded computation of a virtual matrix.
+pub enum VKind {
+    /// Every element equals a constant (e.g. `fm.rep.int`).
+    Fill(Scalar),
+    /// One-column sequence by global row index: `start + step*row`
+    /// (`fm.seq.int`).
+    Seq { start: f64, step: f64 },
+    /// Counter-based uniform randomness: element (r,j) derives from
+    /// `splitmix64_at(seed, r*ncol + j)` — partition-order independent
+    /// (`fm.runif.matrix`).
+    RandU { seed: u64, lo: f64, hi: f64 },
+    /// Counter-based normal randomness via Box-Muller
+    /// (`fm.rnorm.matrix`).
+    RandN { seed: u64, mean: f64, sd: f64 },
+    /// `fm.sapply`.
+    Sapply { a: Matrix, op: UnFn },
+    /// `fm.mapply` (elementwise, both operands share the long dim).
+    Mapply { a: Matrix, b: Matrix, op: BinOp },
+    /// `fm.mapply` against a scalar (vector ⊕ scalar forms).
+    MapplyScalar {
+        a: Matrix,
+        s: Scalar,
+        op: BinOp,
+        /// true: `f(a, s)` (bVUDF2); false: `f(s, a)` (bVUDF3).
+        scalar_right: bool,
+    },
+    /// `fm.mapply.row`: combine each row with a small host vector
+    /// (len = ncol).
+    MapplyRow { a: Matrix, w: HostMat, op: BinOp },
+    /// `fm.mapply.col`: combine each column with an n×1 matrix sharing the
+    /// long dimension (itself possibly virtual — this is what lets whole
+    /// normalization pipelines fuse).
+    MapplyCol { a: Matrix, v: Matrix, op: BinOp },
+    /// `fm.agg.row` on a tall matrix: per-row reduction, n×1 output —
+    /// stays in the DAG (paper §III-E "first type").
+    RowAgg { a: Matrix, op: AggOp },
+    /// Per-row index of the extreme value (1-based like R's which.min);
+    /// i32 output. Backs `fm.agg.row(which.min/which.max)`.
+    RowArgExtreme { a: Matrix, max: bool },
+    /// Generalized inner product with a *small* right operand
+    /// (tall n×p ⊗ small p×q -> tall n×q): `fm.inner.prod(A, B, f1, f2)`.
+    InnerSmall {
+        a: Matrix,
+        b: HostMat,
+        f1: BinOp,
+        f2: AggOp,
+    },
+    /// Lazy element-type cast.
+    Cast { a: Matrix, to: DType },
+    /// Column concatenation of same-long-dim nodes (`fm.cbind` within a
+    /// DAG).
+    ColBind(Vec<Matrix>),
+    /// Select one column of a node as an n×1 matrix (`A[, j]`).
+    SelectCol { a: Matrix, col: u64 },
+}
+
+impl VKind {
+    /// Parent matrices (DAG edges).
+    pub fn parents(&self) -> Vec<&Matrix> {
+        match self {
+            VKind::Fill(_) | VKind::Seq { .. } | VKind::RandU { .. } | VKind::RandN { .. } => {
+                vec![]
+            }
+            VKind::Sapply { a, .. }
+            | VKind::MapplyScalar { a, .. }
+            | VKind::MapplyRow { a, .. }
+            | VKind::RowAgg { a, .. }
+            | VKind::RowArgExtreme { a, .. }
+            | VKind::InnerSmall { a, .. }
+            | VKind::Cast { a, .. }
+            | VKind::SelectCol { a, .. } => vec![a],
+            VKind::Mapply { a, b, .. } => vec![a, b],
+            VKind::MapplyCol { a, v, .. } => vec![a, v],
+            VKind::ColBind(ms) => ms.iter().collect(),
+        }
+    }
+}
+
+/// Sink kinds: DAG-terminating aggregations (different long dimension).
+pub enum SinkKind {
+    /// `fm.agg`: whole-matrix reduction to one scalar.
+    AggFull(AggOp),
+    /// `fm.agg.col` on a tall matrix: per-column reduction -> 1×ncol.
+    AggCol(AggOp),
+    /// `fm.groupby.row`: rows grouped by an n×1 i32 label matrix (values in
+    /// `0..k`), reduced per group -> k×ncol. Labels may be virtual and are
+    /// evaluated in the same fused pass (k-means' one-pass update).
+    GroupByRow { labels: Matrix, k: usize, op: AggOp },
+    /// Wide×tall generalized inner product `fm.inner.prod(t(A), B, f1,f2)`
+    /// -> ncol(A)×ncol(B). Both operands share the long dimension. The
+    /// Gramian (t(X)·X) and GMM sufficient statistics use this.
+    InnerWideTall { right: Matrix, f1: BinOp, f2: AggOp },
+}
+
+/// A sink: source matrix (virtual or dense) + terminal aggregation.
+pub struct SinkSpec {
+    pub source: Matrix,
+    pub kind: SinkKind,
+}
+
+/// Result of materializing one sink.
+#[derive(Clone, Debug)]
+pub enum SinkResult {
+    Scalar(Scalar),
+    Mat(HostMat),
+}
+
+impl SinkResult {
+    pub fn scalar(&self) -> Scalar {
+        match self {
+            SinkResult::Scalar(s) => *s,
+            SinkResult::Mat(_) => panic!("sink produced a matrix, not a scalar"),
+        }
+    }
+
+    pub fn mat(&self) -> &HostMat {
+        match self {
+            SinkResult::Mat(m) => m,
+            SinkResult::Scalar(_) => panic!("sink produced a scalar, not a matrix"),
+        }
+    }
+}
+
+/// Depth-first collection of the unique nodes reachable from `roots`, in
+/// topological (parents-before-children) order. Nodes are deduplicated by
+/// `Arc` pointer identity, so diamonds evaluate once (§III-E: "a matrix
+/// node can be used by multiple computation nodes").
+pub fn topo_order(roots: &[Matrix]) -> Vec<Matrix> {
+    let mut seen: HashMap<usize, ()> = HashMap::new();
+    let mut order = Vec::new();
+    fn visit(m: &Matrix, seen: &mut HashMap<usize, ()>, order: &mut Vec<Matrix>) {
+        let key = m.data_ptr();
+        if seen.contains_key(&key) {
+            return;
+        }
+        seen.insert(key, ());
+        if let MatrixData::Virtual(v) = &*m.data {
+            for p in v.kind.parents() {
+                visit(p, seen, order);
+            }
+        }
+        order.push(m.canonical());
+    }
+    for r in roots {
+        visit(r, &mut seen, &mut order);
+    }
+    order
+}
+
+/// Validate that every node reachable from `roots` shares one long
+/// dimension (§III-E requires it of a DAG).
+pub fn validate_long_dim(roots: &[Matrix]) -> Result<u64> {
+    let order = topo_order(roots);
+    let mut long: Option<u64> = None;
+    for m in &order {
+        let n = m.data.nrow();
+        match long {
+            None => long = Some(n),
+            Some(l) if l != n => {
+                return Err(FmError::Shape(format!(
+                    "DAG long-dimension mismatch: {l} vs {n}"
+                )))
+            }
+            _ => {}
+        }
+    }
+    long.ok_or_else(|| FmError::Shape("empty DAG".into()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fill(nrow: u64, ncol: u64) -> Matrix {
+        Matrix::new(MatrixData::Virtual(VNode {
+            nrow,
+            ncol,
+            dtype: DType::F64,
+            kind: VKind::Fill(Scalar::F64(1.0)),
+        }))
+    }
+
+    fn mapply(a: &Matrix, b: &Matrix) -> Matrix {
+        Matrix::new(MatrixData::Virtual(VNode {
+            nrow: a.nrow(),
+            ncol: a.ncol(),
+            dtype: DType::F64,
+            kind: VKind::Mapply {
+                a: a.clone(),
+                b: b.clone(),
+                op: BinOp::Add,
+            },
+        }))
+    }
+
+    #[test]
+    fn topo_dedups_diamond() {
+        let x = fill(100, 2);
+        let a = mapply(&x, &x); // diamond on x
+        let b = mapply(&a, &x);
+        let order = topo_order(&[b.clone()]);
+        assert_eq!(order.len(), 3); // x, a, b — x once
+        assert_eq!(order[0].data_ptr(), x.data_ptr());
+        assert_eq!(order[2].data_ptr(), b.data_ptr());
+    }
+
+    #[test]
+    fn long_dim_validated() {
+        let x = fill(100, 2);
+        let y = fill(100, 2);
+        assert_eq!(validate_long_dim(&[mapply(&x, &y)]).unwrap(), 100);
+        let z = fill(50, 2);
+        // building the bad node directly — validation must catch it
+        let bad = mapply(&x, &z);
+        assert!(validate_long_dim(&[bad]).is_err());
+    }
+
+    #[test]
+    fn parents_enumerated() {
+        let x = fill(10, 1);
+        let v = VNode {
+            nrow: 10,
+            ncol: 1,
+            dtype: DType::F64,
+            kind: VKind::Sapply {
+                a: x.clone(),
+                op: UnFn::Builtin(UnOp::Abs),
+            },
+        };
+        assert_eq!(v.kind.parents().len(), 1);
+    }
+}

@@ -1,0 +1,253 @@
+//! Dataset generators (paper Table V, substituted per DESIGN.md).
+//!
+//! * [`mix_gaussian`] — the paper's MixGaussian-1B generative model at
+//!   configurable scale: k multivariate Gaussians with identity covariance
+//!   and distinct means.
+//! * [`spectral_like`] — stands in for Friendster-32 (65M×32 graph
+//!   eigenvectors): correlated columns with per-column decaying scale, the
+//!   shape k-means/GMM costs depend on.
+//! * [`uniform`] / [`golden_uniform`] — random-65M-style matrices; the
+//!   golden variant reproduces byte-for-byte the fixture inputs of
+//!   `python/tests/test_golden.py` (same SplitMix64 stream).
+//!
+//! All generators are **counter-based** (value = f(seed, row, col)), so
+//! partitions materialize deterministically in any order on any thread
+//! count, and the Python oracle can regenerate identical matrices from the
+//! seed alone.
+
+use std::sync::Arc;
+
+use crate::dtype::{DType, Scalar};
+use crate::error::Result;
+use crate::exec::{splitmix64_at, u64_to_unit_f64};
+use crate::fmr::{Engine, FmMatrix};
+use crate::matrix::{DenseBuilder, HostMat, Matrix, Partitioning};
+use crate::vudf::Buf;
+use crate::StorageKind;
+
+/// Materialize an `n x p` f64 matrix from an element function
+/// `f(row, col) -> f64`, honoring the engine's storage kind. `name` makes
+/// the on-disk file persistent (EM datasets are reusable across runs).
+pub fn from_fn(
+    eng: &Arc<Engine>,
+    n: u64,
+    p: u64,
+    name: Option<&str>,
+    f: impl Fn(u64, u64) -> f64 + Sync,
+) -> Result<FmMatrix> {
+    let parts = Partitioning::new(n, p);
+    let builder = match eng.config.storage {
+        StorageKind::InMem => DenseBuilder::new_mem(DType::F64, parts.clone(), &eng.pool)?,
+        StorageKind::External => DenseBuilder::new_ext(
+            DType::F64,
+            parts.clone(),
+            &eng.config.data_dir,
+            name,
+            eng.config.em_cache_cols as u64,
+            Arc::clone(&eng.ssd),
+            Arc::clone(&eng.metrics),
+        )?,
+    };
+    // parallel generation: partitions are independent
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let n_parts = parts.n_parts();
+    let threads = eng.config.threads.max(1).min(n_parts.max(1));
+    let err: std::sync::Mutex<Option<crate::FmError>> = std::sync::Mutex::new(None);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= n_parts {
+                    break;
+                }
+                let (r0, r1) = parts.part_rows(i);
+                let prows = (r1 - r0) as usize;
+                let mut buf = Buf::alloc(DType::F64, prows * p as usize);
+                for j in 0..p {
+                    for r in 0..prows {
+                        buf.set(j as usize * prows + r, Scalar::F64(f(r0 + r as u64, j)));
+                    }
+                }
+                if let Err(e) = builder.write_partition_buf(i, &buf) {
+                    let mut g = err.lock().unwrap();
+                    if g.is_none() {
+                        *g = Some(e);
+                    }
+                    break;
+                }
+            });
+        }
+    });
+    if let Some(e) = err.into_inner().unwrap() {
+        return Err(e);
+    }
+    Ok(FmMatrix {
+        eng: Arc::clone(eng),
+        m: Matrix::from_dense(builder.finish()),
+    })
+}
+
+/// Uniform [lo, hi) matrix, counter-based by (row, col).
+pub fn uniform(
+    eng: &Arc<Engine>,
+    n: u64,
+    p: u64,
+    lo: f64,
+    hi: f64,
+    seed: u64,
+    name: Option<&str>,
+) -> Result<FmMatrix> {
+    from_fn(eng, n, p, name, |r, c| {
+        lo + (hi - lo) * u64_to_unit_f64(splitmix64_at(seed, r * p + c))
+    })
+}
+
+/// The exact input-matrix convention of `python/tests/test_golden.py`:
+/// `x = uniform01(stream)[r*p+c] * scale + shift`, with |x| < zero_clip
+/// snapped to 0 to exercise nnz counting.
+pub fn golden_uniform(
+    eng: &Arc<Engine>,
+    n: u64,
+    p: u64,
+    seed: u64,
+    scale: f64,
+    shift: f64,
+    zero_clip: f64,
+) -> Result<FmMatrix> {
+    from_fn(eng, n, p, None, |r, c| {
+        let v = u64_to_unit_f64(splitmix64_at(seed, r * p + c)) * scale + shift;
+        if v.abs() < zero_clip {
+            0.0
+        } else {
+            v
+        }
+    })
+}
+
+/// Standard normal via Box-Muller on two counter-based uniforms.
+#[inline]
+pub fn normal_at(seed: u64, idx: u64) -> f64 {
+    let u1 = u64_to_unit_f64(splitmix64_at(seed, idx * 2)).max(1e-300);
+    let u2 = u64_to_unit_f64(splitmix64_at(seed, idx * 2 + 1));
+    (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+}
+
+/// The MixGaussian model: `k` components with identity covariance and
+/// means drawn from `N(0, sep^2)` per coordinate; each row is assigned a
+/// component by hash. Returns the matrix and the true component means
+/// (k×p) for quality evaluation.
+pub fn mix_gaussian(
+    eng: &Arc<Engine>,
+    n: u64,
+    p: u64,
+    k: u64,
+    sep: f64,
+    seed: u64,
+    name: Option<&str>,
+) -> Result<(FmMatrix, HostMat)> {
+    // component means: deterministic from the seed
+    let mut means = HostMat::zeros(k as usize, p as usize, DType::F64);
+    for c in 0..k {
+        for j in 0..p {
+            let z = normal_at(seed ^ 0x00C0_FFEE, c * p + j);
+            means.set(c as usize, j as usize, Scalar::F64(sep * z));
+        }
+    }
+    let means_ref = &means;
+    let x = from_fn(eng, n, p, name, move |r, j| {
+        let comp = (splitmix64_at(seed ^ 0x5EED_CAFE, r) % k) as usize;
+        means_ref.get(comp, j as usize).as_f64() + normal_at(seed, r * p + j)
+    })?;
+    Ok((x, means))
+}
+
+/// Friendster-32 stand-in: column j has scale `1/(1+j)` (spectral decay)
+/// plus a low-rank structure that gives the columns correlation, so
+/// clustering has non-trivial geometry.
+pub fn spectral_like(
+    eng: &Arc<Engine>,
+    n: u64,
+    p: u64,
+    seed: u64,
+    name: Option<&str>,
+) -> Result<FmMatrix> {
+    from_fn(eng, n, p, name, move |r, j| {
+        let scale = 1.0 / (1.0 + j as f64);
+        // 4 latent factors shared across columns -> correlated columns
+        let mut v = 0.0;
+        for f in 0..4u64 {
+            let load = u64_to_unit_f64(splitmix64_at(seed ^ 0xFAC7, f * p + j)) - 0.5;
+            v += load * normal_at(seed ^ (0xB00 + f), r);
+        }
+        scale * (v + 0.25 * normal_at(seed, r * p + j))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineConfig;
+
+    fn eng() -> Arc<Engine> {
+        Engine::new(EngineConfig {
+            xla_dispatch: false,
+            chunk_bytes: 1 << 22,
+            target_part_bytes: 1 << 20,
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn uniform_is_deterministic_and_bounded() {
+        let e = eng();
+        let a = uniform(&e, 5000, 4, -1.0, 1.0, 9, None).unwrap();
+        let b = uniform(&e, 5000, 4, -1.0, 1.0, 9, None).unwrap();
+        assert_eq!(a.to_host().unwrap(), b.to_host().unwrap());
+        assert!(a.max().unwrap() < 1.0);
+        assert!(a.min().unwrap() >= -1.0);
+        // mean of U(-1,1) ~ 0
+        assert!(a.sum().unwrap().abs() / 20_000.0 < 0.05);
+    }
+
+    #[test]
+    fn mix_gaussian_centers_separate() {
+        let e = eng();
+        let (x, means) = mix_gaussian(&e, 20_000, 4, 3, 8.0, 11, None).unwrap();
+        assert_eq!(means.nrow, 3);
+        // column means of x should be a convex combination of the
+        // component means — bounded by the extreme component means
+        let cm = x.col_means().unwrap();
+        for j in 0..4 {
+            let lo = (0..3)
+                .map(|c| means.get(c, j).as_f64())
+                .fold(f64::INFINITY, f64::min);
+            let hi = (0..3)
+                .map(|c| means.get(c, j).as_f64())
+                .fold(f64::NEG_INFINITY, f64::max);
+            let m = cm.buf.get(j).as_f64();
+            assert!(m > lo - 1.0 && m < hi + 1.0, "col {j}: {m} not in [{lo},{hi}]");
+        }
+    }
+
+    #[test]
+    fn spectral_columns_decay() {
+        let e = eng();
+        let x = spectral_like(&e, 30_000, 8, 5, None).unwrap();
+        // variance of col 0 must exceed variance of col 7 (scale decay)
+        let sq = x.sq().unwrap();
+        let ss = sq.col_sums().unwrap();
+        assert!(ss.buf.get(0).as_f64() > 4.0 * ss.buf.get(7).as_f64());
+    }
+
+    #[test]
+    fn generation_matches_virtual_randu() {
+        // datasets::uniform must agree with the lazy VKind::RandU node
+        // (same counter-based stream)
+        let e = eng();
+        let a = uniform(&e, 3000, 3, 0.0, 2.0, 21, None).unwrap();
+        let v = FmMatrix::runif_matrix(&e, 3000, 3, 0.0, 2.0, 21);
+        let d = a.sub(&v).unwrap().abs().unwrap().max().unwrap();
+        assert_eq!(d, 0.0);
+    }
+}

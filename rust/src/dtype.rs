@@ -1,0 +1,259 @@
+//! Element types, promotion rules and scalar values.
+//!
+//! FlashMatrix matrices are typed containers of primitive elements. Binary
+//! GenOps require both operands to share an element type; when they differ
+//! the engine inserts a lazy cast on the smaller type (paper §III-D: "If a
+//! GenOp gets two matrices with different element types, it first casts the
+//! element type of one matrix to match the other").
+
+/// Primitive element types supported by the engine.
+///
+/// `Bool` is stored as one byte (R's logical); promotion order follows R:
+/// Bool < I32 < I64 < F32 < F64.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DType {
+    Bool,
+    I32,
+    I64,
+    F32,
+    F64,
+}
+
+impl DType {
+    /// Size of one element in bytes.
+    pub fn size(self) -> usize {
+        match self {
+            DType::Bool => 1,
+            DType::I32 | DType::F32 => 4,
+            DType::I64 | DType::F64 => 8,
+        }
+    }
+
+    /// Rank in the promotion lattice.
+    fn rank(self) -> u8 {
+        match self {
+            DType::Bool => 0,
+            DType::I32 => 1,
+            DType::I64 => 2,
+            DType::F32 => 3,
+            DType::F64 => 4,
+        }
+    }
+
+    /// Common type two operands promote to.
+    pub fn promote(a: DType, b: DType) -> DType {
+        // I64 + F32 promotes to F64 (R promotes integer to double);
+        // otherwise the higher rank wins.
+        if (a == DType::I64 && b == DType::F32) || (a == DType::F32 && b == DType::I64) {
+            return DType::F64;
+        }
+        if a.rank() >= b.rank() {
+            a
+        } else {
+            b
+        }
+    }
+
+    pub fn is_float(self) -> bool {
+        matches!(self, DType::F32 | DType::F64)
+    }
+
+    pub fn is_int(self) -> bool {
+        matches!(self, DType::I32 | DType::I64)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::Bool => "bool",
+            DType::I32 => "i32",
+            DType::I64 => "i64",
+            DType::F32 => "f32",
+            DType::F64 => "f64",
+        }
+    }
+}
+
+impl std::fmt::Display for DType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A typed scalar value (the `c` of `fm.agg`, constants in expressions,
+/// fill values of constant virtual matrices).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Scalar {
+    Bool(bool),
+    I32(i32),
+    I64(i64),
+    F32(f32),
+    F64(f64),
+}
+
+impl Scalar {
+    pub fn dtype(self) -> DType {
+        match self {
+            Scalar::Bool(_) => DType::Bool,
+            Scalar::I32(_) => DType::I32,
+            Scalar::I64(_) => DType::I64,
+            Scalar::F32(_) => DType::F32,
+            Scalar::F64(_) => DType::F64,
+        }
+    }
+
+    /// Lossy conversion to f64 (for display and float kernels).
+    pub fn as_f64(self) -> f64 {
+        match self {
+            Scalar::Bool(b) => b as u8 as f64,
+            Scalar::I32(v) => v as f64,
+            Scalar::I64(v) => v as f64,
+            Scalar::F32(v) => v as f64,
+            Scalar::F64(v) => v,
+        }
+    }
+
+    /// Lossy conversion to i64.
+    pub fn as_i64(self) -> i64 {
+        match self {
+            Scalar::Bool(b) => b as i64,
+            Scalar::I32(v) => v as i64,
+            Scalar::I64(v) => v,
+            Scalar::F32(v) => v as i64,
+            Scalar::F64(v) => v as i64,
+        }
+    }
+
+    pub fn as_bool(self) -> bool {
+        match self {
+            Scalar::Bool(b) => b,
+            Scalar::I32(v) => v != 0,
+            Scalar::I64(v) => v != 0,
+            Scalar::F32(v) => v != 0.0,
+            Scalar::F64(v) => v != 0.0,
+        }
+    }
+
+    /// Cast to a target dtype (R-style numeric coercion).
+    pub fn cast(self, to: DType) -> Scalar {
+        match to {
+            DType::Bool => Scalar::Bool(self.as_bool()),
+            DType::I32 => Scalar::I32(self.as_i64() as i32),
+            DType::I64 => Scalar::I64(self.as_i64()),
+            DType::F32 => Scalar::F32(self.as_f64() as f32),
+            DType::F64 => Scalar::F64(self.as_f64()),
+        }
+    }
+}
+
+impl From<f64> for Scalar {
+    fn from(v: f64) -> Self {
+        Scalar::F64(v)
+    }
+}
+impl From<f32> for Scalar {
+    fn from(v: f32) -> Self {
+        Scalar::F32(v)
+    }
+}
+impl From<i64> for Scalar {
+    fn from(v: i64) -> Self {
+        Scalar::I64(v)
+    }
+}
+impl From<i32> for Scalar {
+    fn from(v: i32) -> Self {
+        Scalar::I32(v)
+    }
+}
+impl From<bool> for Scalar {
+    fn from(v: bool) -> Self {
+        Scalar::Bool(v)
+    }
+}
+
+/// Rust primitive <-> engine dtype binding used by the typed kernels.
+pub trait Element: Copy + Send + Sync + 'static + PartialOrd + std::fmt::Debug {
+    const DTYPE: DType;
+    fn from_f64(v: f64) -> Self;
+    fn to_f64(self) -> f64;
+    fn zero() -> Self;
+    fn one() -> Self;
+}
+
+macro_rules! impl_element {
+    ($t:ty, $dt:expr, $zero:expr, $one:expr) => {
+        impl Element for $t {
+            const DTYPE: DType = $dt;
+            fn from_f64(v: f64) -> Self {
+                v as $t
+            }
+            fn to_f64(self) -> f64 {
+                self as f64
+            }
+            fn zero() -> Self {
+                $zero
+            }
+            fn one() -> Self {
+                $one
+            }
+        }
+    };
+}
+
+impl_element!(f64, DType::F64, 0.0, 1.0);
+impl_element!(f32, DType::F32, 0.0, 1.0);
+impl_element!(i64, DType::I64, 0, 1);
+impl_element!(i32, DType::I32, 0, 1);
+
+impl Element for bool {
+    const DTYPE: DType = DType::Bool;
+    fn from_f64(v: f64) -> Self {
+        v != 0.0
+    }
+    fn to_f64(self) -> f64 {
+        self as u8 as f64
+    }
+    fn zero() -> Self {
+        false
+    }
+    fn one() -> Self {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn promotion_lattice() {
+        use DType::*;
+        assert_eq!(DType::promote(Bool, I32), I32);
+        assert_eq!(DType::promote(I32, I64), I64);
+        assert_eq!(DType::promote(I64, F32), F64); // R-style widening
+        assert_eq!(DType::promote(F32, F64), F64);
+        assert_eq!(DType::promote(F64, Bool), F64);
+        for &t in &[Bool, I32, I64, F32, F64] {
+            assert_eq!(DType::promote(t, t), t);
+            // commutativity
+            for &u in &[Bool, I32, I64, F32, F64] {
+                assert_eq!(DType::promote(t, u), DType::promote(u, t));
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_casts() {
+        assert_eq!(Scalar::F64(2.9).cast(DType::I32), Scalar::I32(2));
+        assert_eq!(Scalar::I64(0).cast(DType::Bool), Scalar::Bool(false));
+        assert_eq!(Scalar::Bool(true).cast(DType::F64), Scalar::F64(1.0));
+        assert_eq!(Scalar::F32(1.5).dtype(), DType::F32);
+    }
+
+    #[test]
+    fn sizes() {
+        assert_eq!(DType::Bool.size(), 1);
+        assert_eq!(DType::F64.size(), 8);
+        assert_eq!(DType::I32.size(), 4);
+    }
+}

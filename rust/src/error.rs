@@ -1,0 +1,37 @@
+//! Engine-wide error type.
+
+use thiserror::Error;
+
+/// Errors surfaced by the FlashMatrix engine.
+#[derive(Error, Debug)]
+pub enum FmError {
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+    #[error("dtype error: {0}")]
+    DType(String),
+    #[error("unsupported operation: {0}")]
+    Unsupported(String),
+    #[error("storage error: {0}")]
+    Storage(String),
+    #[error("runtime (XLA) error: {0}")]
+    Runtime(String),
+    #[error("configuration error: {0}")]
+    Config(String),
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+    #[error("json error: {0}")]
+    Json(String),
+}
+
+impl From<xla::Error> for FmError {
+    fn from(e: xla::Error) -> Self {
+        FmError::Runtime(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, FmError>;
+
+/// Shorthand for shape errors.
+pub fn shape_err<T>(msg: impl Into<String>) -> Result<T> {
+    Err(FmError::Shape(msg.into()))
+}

@@ -1,0 +1,539 @@
+//! Parallel materialization of DAGs (paper §III-F).
+//!
+//! A *pass* streams every I/O-level partition of the DAG's long dimension
+//! once, evaluating the compiled pipeline ([`pipeline::Program`]) for every
+//! CPU-level strip, writing target partitions and folding sink partials.
+//! Work is distributed by assigning I/O-level partitions to worker threads
+//! from an atomic counter; each thread keeps per-thread sink accumulators
+//! that are merged at the end with the VUDFs' `combine` form — exactly the
+//! paper's parallelization + partial-aggregation scheme.
+//!
+//! Optimization toggles (Fig 11 ablations) act here:
+//! * `fuse_mem` is a *caller* decision: the `fmr` layer materializes each
+//!   op separately when it is off, so the DAG this module sees is depth-1.
+//! * `fuse_cache` selects the strip height: CPU-cache-sized strips when on,
+//!   whole I/O partitions when off.
+//! * `recycle_chunks` acts in [`crate::mem::ChunkPool`].
+
+pub mod pipeline;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::config::{EngineConfig, StorageKind};
+use crate::dag::{SinkResult, SinkSpec};
+use crate::dtype::{DType, Scalar};
+use crate::error::{FmError, Result};
+use crate::matrix::{DenseBuilder, HostMat, Matrix, MatrixData, Partitioning};
+use crate::mem::ChunkPool;
+use crate::metrics::Metrics;
+use crate::storage::SsdSim;
+use crate::vudf::{AggOp, Buf};
+
+use pipeline::{Program, SinkInstrKind, SourceStrip};
+
+/// Everything a pass needs from the engine.
+pub struct ExecCtx<'a> {
+    pub config: &'a EngineConfig,
+    pub pool: &'a ChunkPool,
+    pub metrics: &'a Arc<Metrics>,
+    pub ssd: &'a Arc<SsdSim>,
+}
+
+/// Materialize `targets` (virtual matrices) and `sinks` in ONE streaming
+/// pass over the shared long dimension.
+pub fn run_pass(
+    ctx: &ExecCtx<'_>,
+    targets: &[Matrix],
+    sinks: &[SinkSpec],
+) -> Result<(Vec<Matrix>, Vec<SinkResult>)> {
+    run_pass_to(ctx, targets, sinks, None)
+}
+
+/// [`run_pass`] with an explicit storage override for the materialized
+/// targets (`fm.conv.store`: move matrices between memory and SSDs).
+pub fn run_pass_to(
+    ctx: &ExecCtx<'_>,
+    targets: &[Matrix],
+    sinks: &[SinkSpec],
+    storage: Option<StorageKind>,
+) -> Result<(Vec<Matrix>, Vec<SinkResult>)> {
+    let storage = storage.unwrap_or_else(|| ctx.config.storage.clone());
+    let prog = Arc::new(pipeline::compile(targets, sinks)?);
+    let nrow = prog.nrow;
+
+    // ---- pass partitioning: nest within every dense source's partitions
+    let mut pass_io: u64 = u64::MAX;
+    for s in &prog.sources {
+        if let MatrixData::Dense(d) = &**s {
+            pass_io = pass_io.min(d.parts.io_rows);
+        }
+    }
+    for t in targets.iter() {
+        pass_io = pass_io.min(crate::matrix::io_rows_for(t.ncol()));
+    }
+    if pass_io == u64::MAX {
+        // sinks over generator-only DAGs
+        let widest = prog.instrs.iter().map(|i| i.ncol).max().unwrap_or(1);
+        pass_io = crate::matrix::io_rows_for(widest);
+    }
+    // NOTE on granularity (§Perf iteration 5): splitting pass partitions
+    // below the source I/O-partition size was tried to reduce skew at low
+    // partition counts, but it makes neighbouring workers re-copy the
+    // same source partition (the per-worker cache is keyed by source
+    // partition) and measured *slower* (summary t=2: 0.038s -> 0.087s).
+    // Kept at the source partition size; reverted per the measure-keep-
+    // or-revert rule. See EXPERIMENTS.md §Perf.
+    for s in &prog.sources {
+        if let MatrixData::Dense(d) = &**s {
+            if d.parts.io_rows % pass_io != 0 {
+                return Err(FmError::Shape(format!(
+                    "source io_rows {} not a multiple of pass io_rows {pass_io}",
+                    d.parts.io_rows
+                )));
+            }
+        }
+    }
+    let pass_parts = Partitioning::with_io_rows(nrow, 1, pass_io);
+    let n_parts = pass_parts.n_parts();
+
+    // ---- output builders
+    let mut builders: Vec<DenseBuilder> = Vec::new();
+    for t in targets {
+        let parts = Partitioning::with_io_rows(nrow, t.ncol(), pass_io);
+        let b = match storage {
+            StorageKind::InMem => DenseBuilder::new_mem(t.dtype(), parts, ctx.pool)?,
+            StorageKind::External => DenseBuilder::new_ext(
+                t.dtype(),
+                parts,
+                &ctx.config.data_dir,
+                None,
+                ctx.config.em_cache_cols as u64,
+                Arc::clone(ctx.ssd),
+                Arc::clone(ctx.metrics),
+            )?,
+        };
+        builders.push(b);
+    }
+
+    // ---- parallel pass
+    let next = AtomicUsize::new(0);
+    let threads = ctx.config.threads.max(1).min(n_parts.max(1));
+    let merged: Mutex<Vec<SinkAccSet>> = Mutex::new(Vec::new());
+    let first_err: Mutex<Option<FmError>> = Mutex::new(None);
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let prog = Arc::clone(&prog);
+            let next = &next;
+            let builders = &builders;
+            let merged = &merged;
+            let first_err = &first_err;
+            let pass_parts = pass_parts.clone();
+            let cfg = ctx.config;
+            let metrics = Arc::clone(ctx.metrics);
+            scope.spawn(move || {
+                let mut accs = SinkAccSet::new(&prog);
+                let mut cache = SourceCache::new(prog.sources.len());
+                loop {
+                    let pi = next.fetch_add(1, Ordering::Relaxed);
+                    if pi >= n_parts {
+                        break;
+                    }
+                    if let Err(e) = process_partition(
+                        &prog,
+                        &pass_parts,
+                        pi,
+                        cfg,
+                        builders,
+                        &mut accs,
+                        &mut cache,
+                    ) {
+                        let mut fe = first_err.lock().unwrap();
+                        if fe.is_none() {
+                            *fe = Some(e);
+                        }
+                        break;
+                    }
+                    metrics.native_partitions.fetch_add(1, Ordering::Relaxed);
+                }
+                merged.lock().unwrap().push(accs);
+            });
+        }
+    });
+
+    if let Some(e) = first_err.into_inner().unwrap() {
+        return Err(e);
+    }
+
+    // ---- merge per-thread sink partials (aVUDF2 combine)
+    let mut parts_iter = merged.into_inner().unwrap().into_iter();
+    let mut total = parts_iter
+        .next()
+        .ok_or_else(|| FmError::Shape("no worker results".into()))?;
+    for acc in parts_iter {
+        total.merge(acc)?;
+    }
+    let sink_results = total.finish(&prog);
+
+    // ---- freeze targets
+    let out_targets = builders
+        .into_iter()
+        .map(|b| Matrix::from_dense(b.finish()))
+        .collect();
+    Ok((out_targets, sink_results))
+}
+
+/// Materialize virtual matrices (no sinks).
+pub fn materialize(ctx: &ExecCtx<'_>, targets: &[Matrix]) -> Result<Vec<Matrix>> {
+    Ok(run_pass(ctx, targets, &[])?.0)
+}
+
+/// Materialize sinks only.
+pub fn materialize_sinks(ctx: &ExecCtx<'_>, sinks: &[SinkSpec]) -> Result<Vec<SinkResult>> {
+    Ok(run_pass(ctx, &[], sinks)?.1)
+}
+
+// ---------------------------------------------------------------------------
+
+/// Per-worker cache of the most recently read source partition (a pass
+/// partition is usually much smaller than a source partition, so
+/// consecutive pass partitions hit the same source bytes).
+struct SourceCache {
+    slots: Vec<Option<(usize, Vec<u8>)>>,
+}
+
+impl SourceCache {
+    fn new(n: usize) -> SourceCache {
+        SourceCache {
+            slots: (0..n).map(|_| None).collect(),
+        }
+    }
+}
+
+fn process_partition(
+    prog: &Program,
+    pass_parts: &Partitioning,
+    pi: usize,
+    cfg: &EngineConfig,
+    builders: &[DenseBuilder],
+    accs: &mut SinkAccSet,
+    cache: &mut SourceCache,
+) -> Result<()> {
+    let (g0, g1) = pass_parts.part_rows(pi);
+    let prows = (g1 - g0) as usize;
+
+    // load (or reuse) each source's partition containing [g0, g1)
+    let mut src_meta: Vec<(usize, usize)> = Vec::with_capacity(prog.sources.len());
+    for (si, s) in prog.sources.iter().enumerate() {
+        let d = match &**s {
+            MatrixData::Dense(d) => d,
+            _ => return Err(FmError::Unsupported("non-dense source".into())),
+        };
+        let spi = (g0 / d.parts.io_rows) as usize;
+        let (s0, s1) = d.parts.part_rows(spi);
+        debug_assert!(g1 <= s1);
+        let need_read = !matches!(&cache.slots[si], Some((p, _)) if *p == spi);
+        if need_read {
+            cache.slots[si] = Some((spi, d.partition_bytes(spi)?));
+        }
+        src_meta.push(((s1 - s0) as usize, (g0 - s0) as usize));
+    }
+
+    // per-target partition output buffers
+    let mut out_bufs: Vec<Buf> = builders
+        .iter()
+        .map(|b| Buf::alloc(b.dtype(), prows * b.parts().ncol as usize))
+        .collect();
+
+    // strip heights: CPU-cache-sized when cache-fuse is on
+    let widest = prog.instrs.iter().map(|i| i.ncol).max().unwrap_or(1);
+    let strip_parts = Partitioning::with_io_rows(prows as u64, widest, prows as u64);
+    let ranges = if cfg.fuse_cache {
+        strip_parts.cpu_ranges(0, cfg.cpu_part_bytes)
+    } else {
+        vec![(0u64, prows as u64)]
+    };
+
+    for (ls, le) in ranges {
+        let rows = (le - ls) as usize;
+        let srcs: Vec<SourceStrip<'_>> = prog
+            .sources
+            .iter()
+            .enumerate()
+            .map(|(si, _)| {
+                let (part_rows, local_row0) = src_meta[si];
+                let bytes = &cache.slots[si].as_ref().unwrap().1[..];
+                SourceStrip {
+                    bytes,
+                    part_rows,
+                    local_row0: local_row0 + ls as usize,
+                }
+            })
+            .collect();
+        let regs = pipeline::eval_strip(prog, &srcs, g0 + ls, rows, cfg.vectorized_udf)?;
+
+        // write target strips into the partition buffers
+        for (ti, reg) in prog.target_regs.iter().enumerate() {
+            let strip = &regs[*reg];
+            let ncol = builders[ti].parts().ncol as usize;
+            let strip = strip.cast(builders[ti].dtype())?;
+            for j in 0..ncol {
+                let col = strip.slice(j * rows, rows);
+                out_bufs[ti].copy_from(j * prows + ls as usize, &col);
+            }
+        }
+
+        // feed sinks
+        accs.feed(prog, &regs, rows, cfg.vectorized_udf)?;
+    }
+
+    for (ti, buf) in out_bufs.iter().enumerate() {
+        builders[ti].write_partition_buf(pi, buf)?;
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Sink accumulators
+// ---------------------------------------------------------------------------
+
+enum SinkAcc {
+    Full { acc: Scalar, op: AggOp },
+    Col { acc: Buf, op: AggOp },
+    Group { acc: Buf, k: usize, op: AggOp },
+    Inner { acc: Buf, f2: AggOp },
+}
+
+struct SinkAccSet {
+    accs: Vec<SinkAcc>,
+}
+
+impl SinkAccSet {
+    fn new(prog: &Program) -> SinkAccSet {
+        let accs = prog
+            .sinks
+            .iter()
+            .map(|s| {
+                let src_dt = prog.instrs[s.src_reg].dtype;
+                match &s.kind {
+                    SinkInstrKind::AggFull(op) => {
+                        let dt = op.acc_dtype(src_dt);
+                        SinkAcc::Full {
+                            acc: op.identity(dt),
+                            op: *op,
+                        }
+                    }
+                    SinkInstrKind::AggCol(op) => {
+                        let dt = op.acc_dtype(src_dt);
+                        SinkAcc::Col {
+                            acc: Buf::fill(dt, s.ncol as usize, op.identity(dt)),
+                            op: *op,
+                        }
+                    }
+                    SinkInstrKind::GroupByRow { k, op, .. } => {
+                        let dt = op.acc_dtype(src_dt);
+                        SinkAcc::Group {
+                            acc: Buf::fill(dt, k * s.ncol as usize, op.identity(dt)),
+                            k: *k,
+                            op: *op,
+                        }
+                    }
+                    SinkInstrKind::InnerWideTall { right_reg, f2, .. } => {
+                        let q = prog.instrs[*right_reg].ncol as usize;
+                        let dt = f2.acc_dtype(DType::F64);
+                        SinkAcc::Inner {
+                            acc: Buf::fill(dt, s.ncol as usize * q, f2.identity(dt)),
+                            f2: *f2,
+                        }
+                    }
+                }
+            })
+            .collect();
+        SinkAccSet { accs }
+    }
+
+    /// Fold one evaluated strip into the accumulators.
+    fn feed(&mut self, prog: &Program, regs: &[Buf], rows: usize, vectorized: bool) -> Result<()> {
+        for (si, sink) in prog.sinks.iter().enumerate() {
+            let src = &regs[sink.src_reg];
+            let ncol = sink.ncol as usize;
+            match (&mut self.accs[si], &sink.kind) {
+                (SinkAcc::Full { acc, op }, _) => {
+                    let dt = acc.dtype();
+                    let cast = src.cast(dt)?;
+                    let part = if vectorized {
+                        op.reduce(&cast)
+                    } else {
+                        op.reduce_scalar_mode(&cast)
+                    };
+                    *acc = op.fold_scalar(*acc, part);
+                }
+                (SinkAcc::Col { acc, op }, _) => {
+                    let dt = acc.dtype();
+                    let cast = src.cast(dt)?;
+                    for j in 0..ncol {
+                        let col = cast.slice(j * rows, rows);
+                        let part = if vectorized {
+                            op.reduce(&col)
+                        } else {
+                            op.reduce_scalar_mode(&col)
+                        };
+                        acc.set(j, op.fold_scalar(acc.get(j), part));
+                    }
+                }
+                (SinkAcc::Group { acc, k, op }, SinkInstrKind::GroupByRow { labels_reg, .. }) => {
+                    let labels = &regs[*labels_reg];
+                    let dt = acc.dtype();
+                    let cast = src.cast(dt)?;
+                    let kk = *k;
+                    // f64-sum fast path (the k-means hot loop)
+                    if let (Buf::F64(av), Buf::F64(ac), AggOp::Sum, Buf::I32(lv)) =
+                        (&cast, &mut *acc, *op, labels)
+                    {
+                        for j in 0..ncol {
+                            let col = &av[j * rows..(j + 1) * rows];
+                            let gcol = &mut ac[j * kk..(j + 1) * kk];
+                            for r in 0..rows {
+                                let g = lv[r];
+                                if (0..kk as i32).contains(&g) {
+                                    gcol[g as usize] += col[r];
+                                }
+                            }
+                        }
+                    } else {
+                        for j in 0..ncol {
+                            for r in 0..rows {
+                                let g = labels.get(r).as_i64();
+                                if g >= 0 && (g as usize) < kk {
+                                    let idx = j * kk + g as usize;
+                                    let folded =
+                                        op.fold_scalar(acc.get(idx), cast.get(j * rows + r));
+                                    acc.set(idx, folded);
+                                }
+                            }
+                        }
+                    }
+                }
+                (SinkAcc::Inner { acc, f2 }, SinkInstrKind::InnerWideTall { right_reg, f1, .. }) => {
+                    let right = &regs[*right_reg];
+                    let q = right.len() / rows;
+                    inner_wide_tall_accum(acc, src, right, rows, ncol, q, *f1, *f2)?;
+                }
+                _ => unreachable!("acc/kind mismatch"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Merge another worker's partials (aVUDF2 combine).
+    fn merge(&mut self, other: SinkAccSet) -> Result<()> {
+        for (mine, theirs) in self.accs.iter_mut().zip(other.accs) {
+            match (mine, theirs) {
+                (SinkAcc::Full { acc, op }, SinkAcc::Full { acc: o, .. }) => {
+                    *acc = op.fold_scalar(*acc, o);
+                }
+                (SinkAcc::Col { acc, op }, SinkAcc::Col { acc: o, .. }) => {
+                    op.combine(acc, &o)?;
+                }
+                (SinkAcc::Group { acc, op, .. }, SinkAcc::Group { acc: o, .. }) => {
+                    op.combine(acc, &o)?;
+                }
+                (SinkAcc::Inner { acc, f2 }, SinkAcc::Inner { acc: o, .. }) => {
+                    f2.combine(acc, &o)?;
+                }
+                _ => return Err(FmError::Shape("sink accumulator mismatch".into())),
+            }
+        }
+        Ok(())
+    }
+
+    fn finish(self, prog: &Program) -> Vec<SinkResult> {
+        self.accs
+            .into_iter()
+            .zip(&prog.sinks)
+            .map(|(acc, sink)| match acc {
+                SinkAcc::Full { acc, .. } => SinkResult::Scalar(acc),
+                SinkAcc::Col { acc, .. } => SinkResult::Mat(HostMat {
+                    nrow: 1,
+                    ncol: acc.len(),
+                    buf: acc,
+                }),
+                SinkAcc::Group { acc, k, .. } => SinkResult::Mat(HostMat {
+                    nrow: k,
+                    ncol: acc.len() / k.max(1),
+                    buf: acc,
+                }),
+                SinkAcc::Inner { acc, .. } => {
+                    let p = sink.ncol as usize;
+                    SinkResult::Mat(HostMat {
+                        nrow: p,
+                        ncol: acc.len() / p.max(1),
+                        buf: acc,
+                    })
+                }
+            })
+            .collect()
+    }
+}
+
+/// acc (p x q, col-major) ⊕= t(A_strip) ⊗ B_strip with (f1, f2).
+fn inner_wide_tall_accum(
+    acc: &mut Buf,
+    a: &Buf,
+    b: &Buf,
+    rows: usize,
+    p: usize,
+    q: usize,
+    f1: crate::vudf::BinOp,
+    f2: AggOp,
+) -> Result<()> {
+    use crate::vudf::BinOp;
+    if f1 == BinOp::Mul && f2 == AggOp::Sum && a.dtype() == DType::F64 && b.dtype() == DType::F64 {
+        if let (Buf::F64(av), Buf::F64(bv), Buf::F64(ac)) = (a, b, &mut *acc) {
+            // the Gramian hot loop: p*q dot products of length `rows`
+            for c in 0..q {
+                let bcol = &bv[c * rows..(c + 1) * rows];
+                let acol_base = c * p;
+                for k in 0..p {
+                    let akcol = &av[k * rows..(k + 1) * rows];
+                    let mut dot = 0.0f64;
+                    for r in 0..rows {
+                        dot += akcol[r] * bcol[r];
+                    }
+                    ac[acol_base + k] += dot;
+                }
+            }
+            return Ok(());
+        }
+    }
+    let dt = acc.dtype();
+    for c in 0..q {
+        for k in 0..p {
+            let mut part = f2.identity(dt);
+            for r in 0..rows {
+                let x = a.get(k * rows + r).as_f64();
+                let y = b.get(c * rows + r).as_f64();
+                let v = match f1 {
+                    BinOp::Add => x + y,
+                    BinOp::Sub => x - y,
+                    BinOp::Mul => x * y,
+                    BinOp::Div => x / y,
+                    BinOp::Min => x.min(y),
+                    BinOp::Max => x.max(y),
+                    BinOp::Eq => (x == y) as u8 as f64,
+                    BinOp::Ne => (x != y) as u8 as f64,
+                    _ => f64::NAN,
+                };
+                part = f2.fold_scalar(part, Scalar::F64(v));
+            }
+            let idx = c * p + k;
+            let folded = f2.fold_scalar(acc.get(idx), part);
+            acc.set(idx, folded);
+        }
+    }
+    Ok(())
+}
+
+// Re-exported for the fmr and datasets layers.
+pub use pipeline::{splitmix64_at, u64_to_unit_f64};

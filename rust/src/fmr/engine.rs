@@ -1,0 +1,103 @@
+//! The engine: shared state behind every `FmMatrix`.
+
+use std::path::Path;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::config::EngineConfig;
+use crate::dag::{SinkResult, SinkSpec};
+use crate::error::Result;
+use crate::exec::ExecCtx;
+use crate::matrix::Matrix;
+use crate::mem::ChunkPool;
+use crate::metrics::Metrics;
+use crate::runtime::XlaService;
+use crate::storage::SsdSim;
+use crate::vudf::VudfRegistry;
+
+/// One FlashMatrix engine: configuration, memory pool, storage model,
+/// metrics, the VUDF registry and (lazily) the XLA service.
+pub struct Engine {
+    pub config: EngineConfig,
+    pub pool: ChunkPool,
+    pub metrics: Arc<Metrics>,
+    pub ssd: Arc<SsdSim>,
+    pub registry: VudfRegistry,
+    xla: OnceLock<Option<XlaService>>,
+    /// Serializes whole-DAG materialization passes when needed by tests.
+    pub pass_lock: Mutex<()>,
+}
+
+impl Engine {
+    /// Build an engine from a validated configuration.
+    pub fn new(config: EngineConfig) -> Result<Arc<Engine>> {
+        config.validate()?;
+        let metrics = Arc::new(Metrics::new());
+        let pool = ChunkPool::new(config.chunk_bytes, config.recycle_chunks, Arc::clone(&metrics));
+        let ssd = Arc::new(SsdSim::new(config.throttle.as_ref()));
+        Ok(Arc::new(Engine {
+            config,
+            pool,
+            metrics,
+            ssd,
+            registry: VudfRegistry::new(),
+            xla: OnceLock::new(),
+            pass_lock: Mutex::new(()),
+        }))
+    }
+
+    /// Default in-memory engine.
+    pub fn default_engine() -> Result<Arc<Engine>> {
+        Engine::new(EngineConfig::default())
+    }
+
+    /// Execution context for a pass.
+    pub fn ctx(&self) -> ExecCtx<'_> {
+        ExecCtx {
+            config: &self.config,
+            pool: &self.pool,
+            metrics: &self.metrics,
+            ssd: &self.ssd,
+        }
+    }
+
+    /// The XLA service, started on first use. Returns `None` when
+    /// `xla_dispatch` is off or the artifacts directory is unusable (the
+    /// engine then runs fully native, like the paper without BLAS).
+    pub fn xla(&self) -> Option<&XlaService> {
+        self.xla
+            .get_or_init(|| {
+                if !self.config.xla_dispatch {
+                    return None;
+                }
+                match XlaService::start(Path::new(&self.config.artifacts_dir)) {
+                    Ok(s) => Some(s),
+                    Err(e) => {
+                        eprintln!(
+                            "flashmatrix: XLA dispatch disabled ({e}); running native GenOps only"
+                        );
+                        None
+                    }
+                }
+            })
+            .as_ref()
+    }
+
+    /// Materialize several virtual matrices in one fused pass.
+    pub fn materialize(&self, targets: &[Matrix]) -> Result<Vec<Matrix>> {
+        crate::exec::materialize(&self.ctx(), targets)
+    }
+
+    /// Materialize several sinks in one fused pass (`fm.materialize`).
+    pub fn materialize_sinks(&self, sinks: &[SinkSpec]) -> Result<Vec<SinkResult>> {
+        crate::exec::materialize_sinks(&self.ctx(), sinks)
+    }
+
+    /// Mixed pass: targets + sinks share one scan (§III-F).
+    pub fn run_pass(
+        &self,
+        targets: &[Matrix],
+        sinks: &[SinkSpec],
+    ) -> Result<(Vec<Matrix>, Vec<SinkResult>)> {
+        crate::exec::run_pass(&self.ctx(), targets, sinks)
+    }
+}

@@ -1,0 +1,696 @@
+//! `fmr` — the R-like user API (paper §III-A, Tables I–III).
+//!
+//! [`FmMatrix`] mirrors the paper's R interface: constructors
+//! (`fm.runif.matrix`, `fm.seq.int`, …), conversions (`fm.conv.R2FM` /
+//! `FM2R`), the GenOps, and the reimplemented R-base matrix functions
+//! (`rowSums`, `pmin`, `sqrt`, arithmetic operators, `%*%`, `t`, …).
+//!
+//! Semantics follow the paper:
+//! * every operation is **lazy** (returns a virtual matrix) while
+//!   `fuse_mem` is on; with it off (the eager / MLlib-like mode) each
+//!   operation materializes immediately;
+//! * **sinks** (`sum`, `colSums`, `fm.groupby.row`, wide×tall
+//!   `fm.inner.prod`) always force a pass — batch them with
+//!   [`engine::Engine::materialize_sinks`] / [`engine::Engine::run_pass`]
+//!   to share one scan (the paper's `fm.materialize` on several sinks);
+//! * matrices are immutable; dropping the last handle returns chunks to
+//!   the pool (the paper's GC).
+
+pub mod engine;
+
+use std::sync::Arc;
+
+use crate::dag::{SinkResult, SinkSpec, UnFn};
+use crate::dtype::{DType, Scalar};
+use crate::error::{FmError, Result};
+use crate::genops::{self, RowAggResult};
+use crate::matrix::{DenseBuilder, HostMat, Matrix, MatrixData, Partitioning};
+use crate::vudf::{AggOp, BinOp, Buf, UnOp};
+
+pub use engine::Engine;
+
+/// A FlashMatrix matrix handle bound to an engine.
+#[derive(Clone)]
+pub struct FmMatrix {
+    pub eng: Arc<Engine>,
+    pub m: Matrix,
+}
+
+impl FmMatrix {
+    fn wrap(eng: &Arc<Engine>, m: Matrix) -> FmMatrix {
+        FmMatrix {
+            eng: Arc::clone(eng),
+            m,
+        }
+    }
+
+    /// Apply the engine's laziness policy to a freshly recorded node:
+    /// under `fuse_mem` the node stays virtual; in the eager mode it is
+    /// materialized immediately (one pass per operation — the MLlib-like
+    /// behaviour Fig 6/11 compare against).
+    fn policy(self) -> Result<FmMatrix> {
+        if self.eng.config.fuse_mem || !self.m.is_virtual() {
+            return Ok(self);
+        }
+        let transposed = self.m.transposed;
+        let mats = self.eng.materialize(&[self.m.canonical()])?;
+        let mut m = mats.into_iter().next().unwrap();
+        m.transposed = transposed;
+        Ok(FmMatrix::wrap(&self.eng, m))
+    }
+
+    // -- shape / metadata ---------------------------------------------------
+
+    pub fn nrow(&self) -> u64 {
+        self.m.nrow()
+    }
+
+    pub fn ncol(&self) -> u64 {
+        self.m.ncol()
+    }
+
+    pub fn dtype(&self) -> DType {
+        self.m.dtype()
+    }
+
+    pub fn is_virtual(&self) -> bool {
+        self.m.is_virtual()
+    }
+
+    /// `t(A)` — zero-copy transpose.
+    pub fn t(&self) -> FmMatrix {
+        FmMatrix::wrap(&self.eng, self.m.t())
+    }
+
+    // -- constructors (Table II) --------------------------------------------
+
+    /// `fm.rep.int(value, n)` — constant n×1 vector.
+    pub fn rep_int(eng: &Arc<Engine>, value: Scalar, n: u64) -> FmMatrix {
+        FmMatrix::wrap(
+            eng,
+            Matrix::new(MatrixData::Virtual(crate::dag::VNode {
+                nrow: n,
+                ncol: 1,
+                dtype: value.dtype(),
+                kind: crate::dag::VKind::Fill(value),
+            })),
+        )
+    }
+
+    /// Constant n×p matrix.
+    pub fn fill(eng: &Arc<Engine>, value: Scalar, nrow: u64, ncol: u64) -> FmMatrix {
+        FmMatrix::wrap(
+            eng,
+            Matrix::new(MatrixData::Virtual(crate::dag::VNode {
+                nrow,
+                ncol,
+                dtype: value.dtype(),
+                kind: crate::dag::VKind::Fill(value),
+            })),
+        )
+    }
+
+    /// `fm.seq.int(start, by, n)` — arithmetic sequence, n×1.
+    pub fn seq_int(eng: &Arc<Engine>, start: f64, by: f64, n: u64) -> FmMatrix {
+        FmMatrix::wrap(
+            eng,
+            Matrix::new(MatrixData::Virtual(crate::dag::VNode {
+                nrow: n,
+                ncol: 1,
+                dtype: DType::F64,
+                kind: crate::dag::VKind::Seq { start, step: by },
+            })),
+        )
+    }
+
+    /// `fm.runif.matrix(n, p, min, max)` — deterministic counter-based
+    /// uniform matrix (virtual; materializes on demand).
+    pub fn runif_matrix(
+        eng: &Arc<Engine>,
+        nrow: u64,
+        ncol: u64,
+        lo: f64,
+        hi: f64,
+        seed: u64,
+    ) -> FmMatrix {
+        FmMatrix::wrap(
+            eng,
+            Matrix::new(MatrixData::Virtual(crate::dag::VNode {
+                nrow,
+                ncol,
+                dtype: DType::F64,
+                kind: crate::dag::VKind::RandU { seed, lo, hi },
+            })),
+        )
+    }
+
+    /// `fm.rnorm.matrix(n, p, mean, sd)`.
+    pub fn rnorm_matrix(
+        eng: &Arc<Engine>,
+        nrow: u64,
+        ncol: u64,
+        mean: f64,
+        sd: f64,
+        seed: u64,
+    ) -> FmMatrix {
+        FmMatrix::wrap(
+            eng,
+            Matrix::new(MatrixData::Virtual(crate::dag::VNode {
+                nrow,
+                ncol,
+                dtype: DType::F64,
+                kind: crate::dag::VKind::RandN { seed, mean, sd },
+            })),
+        )
+    }
+
+    /// `fm.conv.R2FM` — import a small host matrix as a dense FM matrix.
+    pub fn from_host(eng: &Arc<Engine>, h: &HostMat) -> Result<FmMatrix> {
+        let parts = Partitioning::new(h.nrow as u64, h.ncol as u64);
+        let b = DenseBuilder::new_mem(h.buf.dtype(), parts.clone(), &eng.pool)?;
+        for i in 0..parts.n_parts() {
+            let (r0, r1) = parts.part_rows(i);
+            let prows = (r1 - r0) as usize;
+            let mut buf = Buf::alloc(h.buf.dtype(), prows * h.ncol);
+            for j in 0..h.ncol {
+                let col = h.buf.slice(j * h.nrow + r0 as usize, prows);
+                buf.copy_from(j * prows, &col);
+            }
+            b.write_partition_buf(i, &buf)?;
+        }
+        Ok(FmMatrix::wrap(eng, Matrix::from_dense(b.finish())))
+    }
+
+    /// `fm.conv.FM2R` — export to a host matrix (materializes first).
+    /// View-aware: a transposed handle exports transposed.
+    pub fn to_host(&self) -> Result<HostMat> {
+        let dense = self.materialize()?;
+        let d = match &*dense.m.data {
+            MatrixData::Dense(d) => d,
+            _ => return Err(FmError::Shape("materialize returned non-dense".into())),
+        };
+        let h = HostMat::new(
+            d.nrow() as usize,
+            d.ncol() as usize,
+            d.to_buf()?,
+        )?;
+        Ok(if self.m.transposed { h.transposed() } else { h })
+    }
+
+    /// `fm.materialize` — force materialization (no-op for dense).
+    pub fn materialize(&self) -> Result<FmMatrix> {
+        if !self.m.is_virtual() {
+            return Ok(self.clone());
+        }
+        let transposed = self.m.transposed;
+        let mats = self.eng.materialize(&[self.m.canonical()])?;
+        let mut m = mats.into_iter().next().unwrap();
+        m.transposed = transposed;
+        Ok(FmMatrix::wrap(&self.eng, m))
+    }
+
+    // -- GenOps (Table I) ----------------------------------------------------
+
+    /// `fm.sapply(A, f)` with a built-in op.
+    pub fn sapply(&self, op: UnOp) -> Result<FmMatrix> {
+        FmMatrix::wrap(&self.eng, genops::sapply(&self.m, UnFn::Builtin(op))).policy()
+    }
+
+    /// `fm.sapply(A, f)` with a registered custom VUDF.
+    pub fn sapply_custom(&self, name: &str) -> Result<FmMatrix> {
+        let f = self
+            .eng
+            .registry
+            .lookup(name)
+            .ok_or_else(|| FmError::Unsupported(format!("no VUDF named '{name}'")))?;
+        FmMatrix::wrap(&self.eng, genops::sapply(&self.m, UnFn::Custom(f))).policy()
+    }
+
+    /// `fm.mapply(A, B, f)`.
+    pub fn mapply(&self, other: &FmMatrix, op: BinOp) -> Result<FmMatrix> {
+        FmMatrix::wrap(&self.eng, genops::mapply(&self.m, &other.m, op)?).policy()
+    }
+
+    /// `fm.mapply` with a scalar operand (`A op s` / `s op A`).
+    pub fn mapply_scalar(&self, s: Scalar, op: BinOp, scalar_right: bool) -> Result<FmMatrix> {
+        FmMatrix::wrap(&self.eng, genops::mapply_scalar(&self.m, s, op, scalar_right)).policy()
+    }
+
+    /// `fm.mapply.row(A, w, f)`.
+    pub fn mapply_row(&self, w: &HostMat, op: BinOp) -> Result<FmMatrix> {
+        FmMatrix::wrap(&self.eng, genops::mapply_row(&self.m, w, op)?).policy()
+    }
+
+    /// `fm.mapply.col(A, v, f)`.
+    pub fn mapply_col(&self, v: &FmMatrix, op: BinOp) -> Result<FmMatrix> {
+        FmMatrix::wrap(&self.eng, genops::mapply_col(&self.m, &v.m, op)?).policy()
+    }
+
+    /// `fm.agg(A, f)` — whole-matrix aggregate.
+    pub fn agg(&self, op: AggOp) -> Result<Scalar> {
+        let r = self.eng.materialize_sinks(&[genops::agg_full(&self.m, op)])?;
+        Ok(r.into_iter().next().unwrap().scalar())
+    }
+
+    /// Deferred `fm.agg` sink (for batched one-pass materialization).
+    pub fn agg_sink(&self, op: AggOp) -> SinkSpec {
+        genops::agg_full(&self.m, op)
+    }
+
+    /// `fm.agg.row(A, f)` — per-row aggregate (n×1; stays lazy on tall
+    /// matrices).
+    pub fn agg_row(&self, op: AggOp) -> Result<FmMatrix> {
+        match genops::agg_row(&self.m, op) {
+            RowAggResult::InDag(v) => FmMatrix::wrap(&self.eng, v).policy(),
+            RowAggResult::Sink(s) => {
+                let r = self.eng.materialize_sinks(&[s])?;
+                let h = match r.into_iter().next().unwrap() {
+                    SinkResult::Mat(h) => h,
+                    _ => unreachable!(),
+                };
+                FmMatrix::from_host(&self.eng, &HostMat {
+                    nrow: h.ncol,
+                    ncol: 1,
+                    buf: h.buf,
+                })
+            }
+        }
+    }
+
+    /// `fm.agg.col(A, f)` — per-column aggregate as a small host matrix.
+    pub fn agg_col(&self, op: AggOp) -> Result<HostMat> {
+        match genops::agg_col(&self.m, op) {
+            RowAggResult::Sink(s) => {
+                let r = self.eng.materialize_sinks(&[s])?;
+                match r.into_iter().next().unwrap() {
+                    SinkResult::Mat(h) => Ok(h),
+                    _ => unreachable!(),
+                }
+            }
+            RowAggResult::InDag(v) => {
+                // wide view: per-column of the view = per-row in-DAG
+                FmMatrix::wrap(&self.eng, v).to_host()
+            }
+        }
+    }
+
+    /// Deferred `fm.agg.col` sink.
+    pub fn agg_col_sink(&self, op: AggOp) -> Result<SinkSpec> {
+        match genops::agg_col(&self.m, op) {
+            RowAggResult::Sink(s) => Ok(s),
+            RowAggResult::InDag(_) => Err(FmError::Unsupported(
+                "agg.col on a wide view is not a sink; call agg_col".into(),
+            )),
+        }
+    }
+
+    /// `which.min` / `which.max` per row (1-based indices, i32).
+    pub fn which_min_row(&self) -> Result<FmMatrix> {
+        FmMatrix::wrap(&self.eng, genops::which_extreme_row(&self.m, false)?).policy()
+    }
+
+    pub fn which_max_row(&self) -> Result<FmMatrix> {
+        FmMatrix::wrap(&self.eng, genops::which_extreme_row(&self.m, true)?).policy()
+    }
+
+    /// `fm.groupby.row(A, labels, f)` — labels in `0..k`.
+    pub fn groupby_row(&self, labels: &FmMatrix, k: usize, op: AggOp) -> Result<HostMat> {
+        let s = genops::groupby_row(&self.m, &labels.m, k, op)?;
+        let r = self.eng.materialize_sinks(&[s])?;
+        match r.into_iter().next().unwrap() {
+            SinkResult::Mat(h) => Ok(h),
+            _ => unreachable!(),
+        }
+    }
+
+    /// Deferred groupby sink.
+    pub fn groupby_row_sink(&self, labels: &FmMatrix, k: usize, op: AggOp) -> Result<SinkSpec> {
+        genops::groupby_row(&self.m, &labels.m, k, op)
+    }
+
+    /// `fm.inner.prod(A, B, f1, f2)` with a small host right operand
+    /// (stays lazy: output shares the long dimension).
+    pub fn inner_prod_small(&self, b: &HostMat, f1: BinOp, f2: AggOp) -> Result<FmMatrix> {
+        FmMatrix::wrap(&self.eng, genops::inner_small(&self.m, b, f1, f2)?).policy()
+    }
+
+    /// `fm.inner.prod(t(A), B, f1, f2)` — wide × tall sink (e.g. Gramian).
+    pub fn inner_prod_wide_tall(
+        &self,
+        right: &FmMatrix,
+        f1: BinOp,
+        f2: AggOp,
+    ) -> Result<HostMat> {
+        let s = genops::inner_wide_tall(&self.m, &right.m, f1, f2)?;
+        let r = self.eng.materialize_sinks(&[s])?;
+        match r.into_iter().next().unwrap() {
+            SinkResult::Mat(h) => Ok(h),
+            _ => unreachable!(),
+        }
+    }
+
+    /// Deferred wide×tall inner-product sink.
+    pub fn inner_prod_wide_tall_sink(
+        &self,
+        right: &FmMatrix,
+        f1: BinOp,
+        f2: AggOp,
+    ) -> Result<SinkSpec> {
+        genops::inner_wide_tall(&self.m, &right.m, f1, f2)
+    }
+
+    /// `%*%` — matrix multiplication: tall × small host matrix.
+    pub fn matmul_small(&self, b: &HostMat) -> Result<FmMatrix> {
+        self.inner_prod_small(b, BinOp::Mul, AggOp::Sum)
+    }
+
+    /// `t(A) %*% B` — the Gramian-shaped product.
+    pub fn crossprod(&self, right: &FmMatrix) -> Result<HostMat> {
+        self.t().inner_prod_wide_tall(right, BinOp::Mul, AggOp::Sum)
+    }
+
+    /// `A[, j]` — select one column (0-based; lazy).
+    pub fn col(&self, j: u64) -> Result<FmMatrix> {
+        FmMatrix::wrap(&self.eng, genops::select_col(&self.m, j)?).policy()
+    }
+
+    /// Lazy element-type cast.
+    pub fn cast(&self, to: DType) -> Result<FmMatrix> {
+        FmMatrix::wrap(&self.eng, genops::cast(&self.m, to)).policy()
+    }
+
+    /// `fm.conv.store` — move a matrix to the given storage (Table II).
+    /// Streams the matrix once through a copy pass; the result is a dense
+    /// matrix backed by memory chunks or an SSD file.
+    pub fn conv_store(&self, kind: crate::StorageKind) -> Result<FmMatrix> {
+        // identity node so dense inputs also stream through the pass
+        let id = genops::mapply_scalar(
+            &self.m.canonical(),
+            Scalar::F64(0.0).cast(self.dtype()),
+            BinOp::Add,
+            true,
+        );
+        let (mut mats, _) =
+            crate::exec::run_pass_to(&self.eng.ctx(), &[id], &[], Some(kind))?;
+        let mut m = mats.remove(0);
+        m.transposed = self.m.transposed;
+        Ok(FmMatrix::wrap(&self.eng, m))
+    }
+
+    /// A *group of dense matrices* standing for one wider matrix
+    /// (paper §III-B4): members must be materialized, share nrow, dtype
+    /// and partitioning. GenOps decompose onto the members automatically.
+    pub fn group(eng: &Arc<Engine>, members: &[&FmMatrix]) -> Result<FmMatrix> {
+        if members.is_empty() {
+            return Err(FmError::Shape("empty group".into()));
+        }
+        let mut datas = Vec::with_capacity(members.len());
+        let first = &members[0].m;
+        for m in members {
+            match &*m.m.data {
+                MatrixData::Dense(d) => {
+                    if m.m.transposed
+                        || d.nrow() != first.data.nrow()
+                        || d.dtype != first.dtype()
+                    {
+                        return Err(FmError::Shape(
+                            "group members must be tall, same nrow and dtype".into(),
+                        ));
+                    }
+                }
+                _ => {
+                    return Err(FmError::Unsupported(
+                        "group members must be materialized dense matrices".into(),
+                    ))
+                }
+            }
+            datas.push(Arc::clone(&m.m.data));
+        }
+        Ok(FmMatrix::wrap(
+            eng,
+            Matrix::new(MatrixData::Group(crate::matrix::GroupData { members: datas })),
+        ))
+    }
+
+    /// `fm.cbind` — column concatenation (lazy).
+    pub fn cbind(eng: &Arc<Engine>, ms: &[&FmMatrix]) -> Result<FmMatrix> {
+        let mats: Vec<Matrix> = ms.iter().map(|m| m.m.clone()).collect();
+        FmMatrix::wrap(eng, genops::colbind(&mats)?).policy()
+    }
+
+    // -- R base reimplementations (Table III) --------------------------------
+
+    pub fn abs(&self) -> Result<FmMatrix> {
+        self.sapply(UnOp::Abs)
+    }
+
+    pub fn sqrt(&self) -> Result<FmMatrix> {
+        self.sapply(UnOp::Sqrt)
+    }
+
+    pub fn sq(&self) -> Result<FmMatrix> {
+        self.sapply(UnOp::Sq)
+    }
+
+    pub fn exp(&self) -> Result<FmMatrix> {
+        self.sapply(UnOp::Exp)
+    }
+
+    pub fn log(&self) -> Result<FmMatrix> {
+        self.sapply(UnOp::Log)
+    }
+
+    pub fn neg(&self) -> Result<FmMatrix> {
+        self.sapply(UnOp::Neg)
+    }
+
+    pub fn add(&self, o: &FmMatrix) -> Result<FmMatrix> {
+        self.mapply(o, BinOp::Add)
+    }
+
+    pub fn sub(&self, o: &FmMatrix) -> Result<FmMatrix> {
+        self.mapply(o, BinOp::Sub)
+    }
+
+    pub fn mul(&self, o: &FmMatrix) -> Result<FmMatrix> {
+        self.mapply(o, BinOp::Mul)
+    }
+
+    pub fn div(&self, o: &FmMatrix) -> Result<FmMatrix> {
+        self.mapply(o, BinOp::Div)
+    }
+
+    pub fn pmin(&self, o: &FmMatrix) -> Result<FmMatrix> {
+        self.mapply(o, BinOp::Min)
+    }
+
+    pub fn pmax(&self, o: &FmMatrix) -> Result<FmMatrix> {
+        self.mapply(o, BinOp::Max)
+    }
+
+    pub fn add_scalar(&self, s: f64) -> Result<FmMatrix> {
+        self.mapply_scalar(Scalar::F64(s), BinOp::Add, true)
+    }
+
+    pub fn sub_scalar(&self, s: f64) -> Result<FmMatrix> {
+        self.mapply_scalar(Scalar::F64(s), BinOp::Sub, true)
+    }
+
+    pub fn mul_scalar(&self, s: f64) -> Result<FmMatrix> {
+        self.mapply_scalar(Scalar::F64(s), BinOp::Mul, true)
+    }
+
+    pub fn div_scalar(&self, s: f64) -> Result<FmMatrix> {
+        self.mapply_scalar(Scalar::F64(s), BinOp::Div, true)
+    }
+
+    /// `sum(A)`.
+    pub fn sum(&self) -> Result<f64> {
+        Ok(self.agg(AggOp::Sum)?.as_f64())
+    }
+
+    /// `min(A)` / `max(A)`.
+    pub fn min(&self) -> Result<f64> {
+        Ok(self.agg(AggOp::Min)?.as_f64())
+    }
+
+    pub fn max(&self) -> Result<f64> {
+        Ok(self.agg(AggOp::Max)?.as_f64())
+    }
+
+    /// `any(A)` / `all(A)` on a logical matrix.
+    pub fn any(&self) -> Result<bool> {
+        Ok(self.agg(AggOp::Any)?.as_bool())
+    }
+
+    pub fn all(&self) -> Result<bool> {
+        Ok(self.agg(AggOp::All)?.as_bool())
+    }
+
+    /// `rowSums(A)` — n×1 (lazy on tall matrices).
+    pub fn row_sums(&self) -> Result<FmMatrix> {
+        self.agg_row(AggOp::Sum)
+    }
+
+    /// `colSums(A)` — 1×p host vector.
+    pub fn col_sums(&self) -> Result<HostMat> {
+        self.agg_col(AggOp::Sum)
+    }
+
+    /// `colMeans(A)`.
+    pub fn col_means(&self) -> Result<HostMat> {
+        let mut s = self.col_sums()?;
+        let n = self.nrow() as f64;
+        for j in 0..s.buf.len() {
+            let v = s.buf.get(j).as_f64() / n;
+            s.buf.set(j, Scalar::F64(v));
+        }
+        Ok(s)
+    }
+}
+
+impl std::fmt::Debug for FmMatrix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "FmMatrix[{}x{} {} {}{}]",
+            self.nrow(),
+            self.ncol(),
+            self.dtype(),
+            if self.is_virtual() { "virtual" } else { "dense" },
+            if self.m.transposed { " t" } else { "" },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineConfig;
+
+    fn eng() -> Arc<Engine> {
+        Engine::new(EngineConfig {
+            xla_dispatch: false,
+            chunk_bytes: 1 << 20,
+            target_part_bytes: 1 << 20,
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn fill_sum_and_means() {
+        let e = eng();
+        let a = FmMatrix::fill(&e, Scalar::F64(2.0), 1000, 3);
+        assert_eq!(a.sum().unwrap(), 6000.0);
+        let cm = a.col_means().unwrap();
+        assert_eq!(cm.buf.to_f64_vec(), vec![2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn seq_and_row_sums() {
+        let e = eng();
+        // seq 0..9 as a column; rowSums of 1 col = itself; sum = 45
+        let s = FmMatrix::seq_int(&e, 0.0, 1.0, 10);
+        assert_eq!(s.sum().unwrap(), 45.0);
+        let h = s.to_host().unwrap();
+        assert_eq!(h.get(3, 0).as_f64(), 3.0);
+    }
+
+    #[test]
+    fn lazy_pipeline_fuses_and_matches_eager() {
+        // (|x| + x^2) summed — computed lazily vs eagerly must agree
+        let mk = |fuse: bool| {
+            let e = Engine::new(EngineConfig {
+                xla_dispatch: false,
+                fuse_mem: fuse,
+                fuse_cache: fuse,
+                chunk_bytes: 1 << 20,
+                target_part_bytes: 1 << 20,
+                ..Default::default()
+            })
+            .unwrap();
+            let x = FmMatrix::runif_matrix(&e, 5000, 4, -1.0, 1.0, 7);
+            let expr = x.abs().unwrap().add(&x.sq().unwrap()).unwrap();
+            expr.sum().unwrap()
+        };
+        let lazy = mk(true);
+        let eager = mk(false);
+        assert!((lazy - eager).abs() < 1e-9, "{lazy} vs {eager}");
+    }
+
+    #[test]
+    fn transpose_roundtrip_export() {
+        let e = eng();
+        let h = HostMat::from_rows_f64(&[vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]);
+        let a = FmMatrix::from_host(&e, &h).unwrap();
+        let ht = a.t().to_host().unwrap();
+        assert_eq!(ht.nrow, 2);
+        assert_eq!(ht.get(1, 2).as_f64(), 6.0);
+    }
+
+    #[test]
+    fn crossprod_identity() {
+        let e = eng();
+        // X = [[1,0],[0,1],[1,1]]; t(X)X = [[2,1],[1,2]]
+        let h = HostMat::from_rows_f64(&[vec![1.0, 0.0], vec![0.0, 1.0], vec![1.0, 1.0]]);
+        let x = FmMatrix::from_host(&e, &h).unwrap();
+        let g = x.crossprod(&x).unwrap();
+        assert_eq!(g.to_row_major_f64(), vec![2.0, 1.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn groupby_row_sums_by_label() {
+        let e = eng();
+        let h = HostMat::from_rows_f64(&[
+            vec![1.0, 10.0],
+            vec![2.0, 20.0],
+            vec![3.0, 30.0],
+            vec![4.0, 40.0],
+        ]);
+        let x = FmMatrix::from_host(&e, &h).unwrap();
+        let labels = FmMatrix::from_host(
+            &e,
+            &HostMat {
+                nrow: 4,
+                ncol: 1,
+                buf: Buf::I32(vec![0, 1, 0, 1]),
+            },
+        )
+        .unwrap();
+        let g = x.groupby_row(&labels, 2, AggOp::Sum).unwrap();
+        assert_eq!(g.nrow, 2);
+        assert_eq!(g.get(0, 0).as_f64(), 4.0); // rows 0+2 col 0
+        assert_eq!(g.get(1, 1).as_f64(), 60.0); // rows 1+3 col 1
+    }
+
+    #[test]
+    fn which_min_row_matches_manual() {
+        let e = eng();
+        let h = HostMat::from_rows_f64(&[vec![3.0, 1.0, 2.0], vec![0.5, 2.0, 0.1]]);
+        let x = FmMatrix::from_host(&e, &h).unwrap();
+        let am = x.which_min_row().unwrap().to_host().unwrap();
+        assert_eq!(am.get(0, 0).as_i64(), 2); // 1-based
+        assert_eq!(am.get(1, 0).as_i64(), 3);
+    }
+
+    #[test]
+    fn inner_prod_small_matmul() {
+        let e = eng();
+        let h = HostMat::from_rows_f64(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let x = FmMatrix::from_host(&e, &h).unwrap();
+        let b = HostMat::from_rows_f64(&[vec![1.0, 0.0], vec![0.0, 1.0]]);
+        let y = x.matmul_small(&b).unwrap().to_host().unwrap();
+        assert_eq!(y.to_row_major_f64(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn mixed_dtype_promotes() {
+        let e = eng();
+        let a = FmMatrix::fill(&e, Scalar::I32(3), 100, 2);
+        let b = FmMatrix::fill(&e, Scalar::F64(0.5), 100, 2);
+        let c = a.add(&b).unwrap();
+        assert_eq!(c.dtype(), DType::F64);
+        assert_eq!(c.sum().unwrap(), 700.0);
+    }
+}

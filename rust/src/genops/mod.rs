@@ -1,0 +1,473 @@
+//! The four generalized matrix operators (GenOps), paper §III-C / Table I.
+//!
+//! Every function here *records* computation: it shape-checks its operands,
+//! resolves output dtype (inserting lazy casts per the paper's promotion
+//! rule), and returns a virtual matrix ([`VKind`]) or a [`SinkSpec`].
+//! Nothing executes until [`crate::exec`] materializes the DAG.
+//!
+//! Transposed (wide) views are normalized here, exactly as §III-G's
+//! layout-driven form selection prescribes:
+//! * elementwise ops commute with transposition — `sapply(t(A))` is
+//!   recorded as `t(sapply(A))`;
+//! * `agg.row` on a wide view becomes `agg.col` on the canonical TAS data
+//!   (a sink) while on a tall matrix it stays an in-DAG per-row reduction;
+//! * `inner.prod(t(A), B)` with both operands sharing the long dimension
+//!   becomes the wide×tall sink; `inner.prod(A, small)` stays in the DAG.
+
+use crate::dag::{SinkKind, SinkSpec, UnFn, VKind, VNode};
+use crate::dtype::{DType, Scalar};
+use crate::error::{FmError, Result};
+use crate::matrix::{HostMat, Matrix, MatrixData};
+use crate::vudf::{AggOp, BinOp};
+
+fn vmat(nrow: u64, ncol: u64, dtype: DType, kind: VKind) -> Matrix {
+    Matrix::new(MatrixData::Virtual(VNode {
+        nrow,
+        ncol,
+        dtype,
+        kind,
+    }))
+}
+
+/// Insert a lazy cast node if `m`'s dtype differs from `to` (§III-D).
+pub fn cast(m: &Matrix, to: DType) -> Matrix {
+    if m.dtype() == to {
+        return m.clone();
+    }
+    let c = vmat(
+        m.data.nrow(),
+        m.data.ncol(),
+        to,
+        VKind::Cast {
+            a: m.canonical(),
+            to,
+        },
+    );
+    Matrix {
+        data: c.data,
+        transposed: m.transposed,
+    }
+}
+
+/// `fm.sapply(A, f)` — elementwise unary.
+pub fn sapply(a: &Matrix, op: UnFn) -> Matrix {
+    let dt = op.out_dtype(a.dtype());
+    let v = vmat(
+        a.data.nrow(),
+        a.data.ncol(),
+        dt,
+        VKind::Sapply {
+            a: a.canonical(),
+            op,
+        },
+    );
+    Matrix {
+        data: v.data,
+        transposed: a.transposed,
+    }
+}
+
+/// `fm.mapply(A, B, f)` — elementwise binary. Operands must agree on the
+/// *view* shape; differing dtypes promote via lazy casts.
+pub fn mapply(a: &Matrix, b: &Matrix, op: BinOp) -> Result<Matrix> {
+    if a.nrow() != b.nrow() || a.ncol() != b.ncol() {
+        return Err(FmError::Shape(format!(
+            "mapply shape mismatch: {}x{} vs {}x{}",
+            a.nrow(),
+            a.ncol(),
+            b.nrow(),
+            b.ncol()
+        )));
+    }
+    if a.transposed != b.transposed {
+        return Err(FmError::Unsupported(
+            "mapply on mixed-layout views; call fm.conv.layout first".into(),
+        ));
+    }
+    let t = DType::promote(a.dtype(), b.dtype());
+    let (ca, cb) = (cast(a, t), cast(b, t));
+    let dt = op.out_dtype(t);
+    let v = vmat(
+        a.data.nrow(),
+        a.data.ncol(),
+        dt,
+        VKind::Mapply {
+            a: ca.canonical(),
+            b: cb.canonical(),
+            op,
+        },
+    );
+    Ok(Matrix {
+        data: v.data,
+        transposed: a.transposed,
+    })
+}
+
+/// `fm.mapply` against a scalar (bVUDF2/bVUDF3 selection).
+pub fn mapply_scalar(a: &Matrix, s: Scalar, op: BinOp, scalar_right: bool) -> Matrix {
+    let t = DType::promote(a.dtype(), s.dtype());
+    let ca = cast(a, t);
+    let dt = op.out_dtype(t);
+    let v = vmat(
+        a.data.nrow(),
+        a.data.ncol(),
+        dt,
+        VKind::MapplyScalar {
+            a: ca.canonical(),
+            s: s.cast(t),
+            op,
+            scalar_right,
+        },
+    );
+    Matrix {
+        data: v.data,
+        transposed: a.transposed,
+    }
+}
+
+/// `fm.mapply.row(A, w, f)` — each row combined with the small vector `w`
+/// (len = view ncol). On a wide (transposed) view this is `mapply.col` on
+/// the canonical data.
+pub fn mapply_row(a: &Matrix, w: &HostMat, op: BinOp) -> Result<Matrix> {
+    if a.transposed {
+        // rows of the view are columns of the canonical data
+        return Err(FmError::Unsupported(
+            "mapply.row on a wide view: use mapply.col on the base matrix".into(),
+        ));
+    }
+    if w.nrow * w.ncol != a.ncol() as usize {
+        return Err(FmError::Shape(format!(
+            "mapply.row: vector has {} elements, matrix has {} columns",
+            w.nrow * w.ncol,
+            a.ncol()
+        )));
+    }
+    let t = DType::promote(a.dtype(), w.buf.dtype());
+    let ca = cast(a, t);
+    let w2 = HostMat {
+        nrow: w.nrow,
+        ncol: w.ncol,
+        buf: w.buf.cast(t)?,
+    };
+    let dt = op.out_dtype(t);
+    Ok(vmat(
+        a.data.nrow(),
+        a.data.ncol(),
+        dt,
+        VKind::MapplyRow {
+            a: ca.canonical(),
+            w: w2,
+            op,
+        },
+    ))
+}
+
+/// `fm.mapply.col(A, v, f)` — each column combined with an n×1 matrix
+/// sharing the long dimension (`v` may itself be virtual, so whole
+/// normalization pipelines fuse into one pass).
+pub fn mapply_col(a: &Matrix, v: &Matrix, op: BinOp) -> Result<Matrix> {
+    if a.transposed {
+        return Err(FmError::Unsupported(
+            "mapply.col on a wide view: use mapply.row on the base matrix".into(),
+        ));
+    }
+    if v.ncol() != 1 || v.nrow() != a.nrow() {
+        return Err(FmError::Shape(format!(
+            "mapply.col: vector must be {}x1, got {}x{}",
+            a.nrow(),
+            v.nrow(),
+            v.ncol()
+        )));
+    }
+    let t = DType::promote(a.dtype(), v.dtype());
+    let (ca, cv) = (cast(a, t), cast(v, t));
+    let dt = op.out_dtype(t);
+    Ok(vmat(
+        a.data.nrow(),
+        a.data.ncol(),
+        dt,
+        VKind::MapplyCol {
+            a: ca.canonical(),
+            v: cv.canonical(),
+            op,
+        },
+    ))
+}
+
+/// `A[, j]` — select one column (lazy, stays in the DAG).
+pub fn select_col(a: &Matrix, col: u64) -> Result<Matrix> {
+    if a.transposed {
+        return Err(FmError::Unsupported("column select on a wide view".into()));
+    }
+    if col >= a.ncol() {
+        return Err(FmError::Shape(format!(
+            "column {col} out of range (ncol = {})",
+            a.ncol()
+        )));
+    }
+    Ok(vmat(
+        a.data.nrow(),
+        1,
+        a.dtype(),
+        VKind::SelectCol {
+            a: a.canonical(),
+            col,
+        },
+    ))
+}
+
+/// Column concatenation of same-long-dim matrices (virtual cbind).
+pub fn colbind(ms: &[Matrix]) -> Result<Matrix> {
+    if ms.is_empty() {
+        return Err(FmError::Shape("cbind of zero matrices".into()));
+    }
+    let nrow = ms[0].nrow();
+    let mut dt = ms[0].dtype();
+    for m in ms {
+        if m.transposed {
+            return Err(FmError::Unsupported("cbind of wide views".into()));
+        }
+        if m.nrow() != nrow {
+            return Err(FmError::Shape("cbind row-count mismatch".into()));
+        }
+        dt = DType::promote(dt, m.dtype());
+    }
+    let ncol: u64 = ms.iter().map(|m| m.ncol()).sum();
+    Ok(vmat(
+        nrow,
+        ncol,
+        dt,
+        VKind::ColBind(ms.iter().map(|m| m.canonical()).collect()),
+    ))
+}
+
+/// `fm.agg.row(A, f)` on a tall matrix: per-row reduction, stays in-DAG.
+/// On a wide (transposed) view: per-row of the view = per-column of the
+/// canonical data -> a sink.
+pub enum RowAggResult {
+    /// Tall input: n×1 virtual matrix.
+    InDag(Matrix),
+    /// Wide view: sink producing 1×n host result.
+    Sink(SinkSpec),
+}
+
+pub fn agg_row(a: &Matrix, op: AggOp) -> RowAggResult {
+    if a.transposed {
+        RowAggResult::Sink(SinkSpec {
+            source: a.canonical(),
+            kind: SinkKind::AggCol(op),
+        })
+    } else {
+        let dt = op.acc_dtype(a.dtype());
+        RowAggResult::InDag(vmat(
+            a.data.nrow(),
+            1,
+            dt,
+            VKind::RowAgg {
+                a: a.canonical(),
+                op,
+            },
+        ))
+    }
+}
+
+/// `fm.agg.col(A, f)` on a tall matrix: sink. On a wide view: in-DAG
+/// per-row reduction of the canonical data.
+pub fn agg_col(a: &Matrix, op: AggOp) -> RowAggResult {
+    if a.transposed {
+        let dt = op.acc_dtype(a.dtype());
+        RowAggResult::InDag(vmat(
+            a.data.nrow(),
+            1,
+            dt,
+            VKind::RowAgg {
+                a: a.canonical(),
+                op,
+            },
+        ))
+    } else {
+        RowAggResult::Sink(SinkSpec {
+            source: a.canonical(),
+            kind: SinkKind::AggCol(op),
+        })
+    }
+}
+
+/// `fm.agg(A, f)` — whole-matrix reduction (sink).
+pub fn agg_full(a: &Matrix, op: AggOp) -> SinkSpec {
+    SinkSpec {
+        source: a.canonical(),
+        kind: SinkKind::AggFull(op),
+    }
+}
+
+/// Row index (1-based) of the per-row minimum / maximum — `which.min` /
+/// `which.max` applied row-wise; the k-means assignment op.
+pub fn which_extreme_row(a: &Matrix, max: bool) -> Result<Matrix> {
+    if a.transposed {
+        return Err(FmError::Unsupported(
+            "which.min/max over a wide view".into(),
+        ));
+    }
+    Ok(vmat(
+        a.data.nrow(),
+        1,
+        DType::I32,
+        VKind::RowArgExtreme {
+            a: a.canonical(),
+            max,
+        },
+    ))
+}
+
+/// `fm.groupby.row(A, labels, f)` — labels are an n×1 integer matrix with
+/// values in `0..k` (out-of-range rows are dropped); returns a sink
+/// producing k×ncol.
+pub fn groupby_row(a: &Matrix, labels: &Matrix, k: usize, op: AggOp) -> Result<SinkSpec> {
+    if labels.ncol() != 1 || labels.nrow() != a.nrow() {
+        return Err(FmError::Shape(format!(
+            "groupby.row labels must be {}x1, got {}x{}",
+            a.nrow(),
+            labels.nrow(),
+            labels.ncol()
+        )));
+    }
+    Ok(SinkSpec {
+        source: a.canonical(),
+        kind: SinkKind::GroupByRow {
+            labels: cast(&labels.canonical(), DType::I32),
+            k,
+            op,
+        },
+    })
+}
+
+/// `fm.inner.prod(A, B, f1, f2)`, tall × small: A is n×p (tall), `b` is a
+/// small p×q host matrix. Stays in the DAG (output is n×q, same long dim).
+pub fn inner_small(a: &Matrix, b: &HostMat, f1: BinOp, f2: AggOp) -> Result<Matrix> {
+    if a.transposed {
+        return Err(FmError::Unsupported(
+            "inner.prod: left operand is a wide view; use inner_wide_tall".into(),
+        ));
+    }
+    if a.ncol() as usize != b.nrow {
+        return Err(FmError::Shape(format!(
+            "inner.prod: {}x{} × {}x{}",
+            a.nrow(),
+            a.ncol(),
+            b.nrow,
+            b.ncol
+        )));
+    }
+    let dt = f2.acc_dtype(DType::promote(a.dtype(), b.buf.dtype()));
+    Ok(vmat(
+        a.data.nrow(),
+        b.ncol as u64,
+        dt,
+        VKind::InnerSmall {
+            a: a.canonical(),
+            b: b.clone(),
+            f1,
+            f2,
+        },
+    ))
+}
+
+/// `fm.inner.prod(t(A), B, f1, f2)`, wide × tall: both share the long
+/// dimension; the p×q result is a sink (per-thread partial Gramians merged
+/// with `f2`'s combine).
+pub fn inner_wide_tall(a_t: &Matrix, b: &Matrix, f1: BinOp, f2: AggOp) -> Result<SinkSpec> {
+    if !a_t.transposed {
+        return Err(FmError::Unsupported(
+            "inner_wide_tall: left operand must be a transposed (wide) view".into(),
+        ));
+    }
+    if b.transposed {
+        return Err(FmError::Unsupported(
+            "inner_wide_tall: right operand must be tall".into(),
+        ));
+    }
+    if a_t.ncol() != b.nrow() {
+        return Err(FmError::Shape(format!(
+            "inner.prod: {}x{} × {}x{} (long dims differ)",
+            a_t.nrow(),
+            a_t.ncol(),
+            b.nrow(),
+            b.ncol()
+        )));
+    }
+    Ok(SinkSpec {
+        source: a_t.canonical(),
+        kind: SinkKind::InnerWideTall {
+            right: b.canonical(),
+            f1,
+            f2,
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fill(nrow: u64, ncol: u64, dt: DType) -> Matrix {
+        vmat(nrow, ncol, dt, VKind::Fill(Scalar::F64(1.0).cast(dt)))
+    }
+
+    #[test]
+    fn mapply_promotes_dtypes() {
+        let a = fill(10, 2, DType::I32);
+        let b = fill(10, 2, DType::F64);
+        let m = mapply(&a, &b, BinOp::Add).unwrap();
+        assert_eq!(m.dtype(), DType::F64);
+        // a cast node was inserted under the hood
+        if let MatrixData::Virtual(v) = &*m.data {
+            assert_eq!(v.kind.parents().len(), 2);
+        } else {
+            panic!("expected virtual");
+        }
+    }
+
+    #[test]
+    fn transposed_elementwise_commutes() {
+        let a = fill(10, 2, DType::F64).t();
+        let s = sapply(&a, UnFn::Builtin(crate::vudf::UnOp::Abs));
+        assert!(s.transposed);
+        assert_eq!((s.nrow(), s.ncol()), (2, 10));
+    }
+
+    #[test]
+    fn agg_row_wide_becomes_sink() {
+        let a = fill(10, 2, DType::F64);
+        match agg_row(&a, AggOp::Sum) {
+            RowAggResult::InDag(v) => assert_eq!((v.nrow(), v.ncol()), (10, 1)),
+            _ => panic!("tall agg.row must stay in DAG"),
+        }
+        match agg_row(&a.t(), AggOp::Sum) {
+            RowAggResult::Sink(s) => {
+                assert!(matches!(s.kind, SinkKind::AggCol(AggOp::Sum)))
+            }
+            _ => panic!("wide agg.row must be a sink"),
+        }
+    }
+
+    #[test]
+    fn shape_errors() {
+        let a = fill(10, 2, DType::F64);
+        let b = fill(12, 2, DType::F64);
+        assert!(mapply(&a, &b, BinOp::Add).is_err());
+        let w = HostMat::from_rows_f64(&[vec![1.0, 2.0, 3.0]]);
+        assert!(mapply_row(&a, &w, BinOp::Add).is_err());
+        let small = HostMat::from_rows_f64(&[vec![1.0], vec![2.0], vec![3.0]]);
+        assert!(inner_small(&a, &small, BinOp::Mul, AggOp::Sum).is_err());
+    }
+
+    #[test]
+    fn inner_wide_tall_requires_transposed_left() {
+        let a = fill(10, 2, DType::F64);
+        let b = fill(10, 3, DType::F64);
+        assert!(inner_wide_tall(&a, &b, BinOp::Mul, AggOp::Sum).is_err());
+        let s = inner_wide_tall(&a.t(), &b, BinOp::Mul, AggOp::Sum).unwrap();
+        assert!(matches!(s.kind, SinkKind::InnerWideTall { .. }));
+    }
+}

@@ -1,0 +1,54 @@
+//! # FlashMatrix (FlashR) — parallel, scalable out-of-core matrix analysis
+//!
+//! Reproduction of Zheng et al., *"FlashMatrix: Parallel, Scalable Data
+//! Analysis with Generalized Matrix Operations"* (a.k.a. *"FlashR:
+//! R-Programmed Parallel and Scalable Machine Learning using SSDs"*,
+//! arXiv:1604.06414).
+//!
+//! The engine executes R-style matrix programs in parallel and out of core:
+//!
+//! * [`genops`] — the four generalized operators (`inner.prod`, the `apply`
+//!   family, `aggregation`, `groupby`) that all higher-level matrix
+//!   functions are built from (paper §III-C).
+//! * [`vudf`] — vectorized user-defined functions with the paper's multiple
+//!   *forms* (`uVUDF`, `bVUDF1/2/3`, `aVUDF1/2`) (§III-D).
+//! * [`dag`] + [`exec`] — lazy evaluation, operation fusion and the
+//!   two-level-partitioned parallel materializer (§III-E/F).
+//! * [`matrix`], [`mem`], [`storage`] — dense matrices (row/col-major,
+//!   tall/wide, virtual, grouped), the recycled memory-chunk pool, and the
+//!   SAFS-like streaming external-memory store (§III-B).
+//! * [`runtime`] — the AOT XLA/PJRT compute path: per-partition algorithm
+//!   steps compiled from JAX/Pallas at build time (`make artifacts`) play
+//!   the role BLAS plays in the paper.
+//! * [`fmr`] — the R-like user API (`fm.*` functions, operators).
+//! * [`algs`] — the paper's five evaluation algorithms written against
+//!   `fmr`: summary, correlation, SVD, k-means, GMM.
+//! * [`baselines`] — the comparison systems: an eager "MLlib-like" engine
+//!   mode and single-threaded R-style reference implementations.
+//!
+//! See `DESIGN.md` for the system inventory and the experiment index, and
+//! `EXPERIMENTS.md` for measured reproductions of the paper's figures.
+
+pub mod algs;
+pub mod baselines;
+pub mod config;
+pub mod dag;
+pub mod datasets;
+pub mod dtype;
+pub mod error;
+pub mod exec;
+pub mod fmr;
+pub mod genops;
+pub mod harness;
+pub mod matrix;
+pub mod mem;
+pub mod metrics;
+pub mod runtime;
+pub mod storage;
+pub mod vudf;
+
+pub use config::{EngineConfig, StorageKind};
+pub use error::{FmError, Result};
+pub use fmr::engine::Engine;
+pub use fmr::FmMatrix;
+pub mod util;

@@ -1,0 +1,221 @@
+//! `flashmatrix` — the launcher.
+//!
+//! ```text
+//! flashmatrix run <alg>      [--n N] [--p P] [--k K] [--iters I] [--em]
+//!                            [--threads T] [--no-xla] [--ssd-bps B]
+//! flashmatrix bench <fig>    fig6a|fig6b|fig7|fig8|fig9|fig10|fig11|fig12|table4|all
+//! flashmatrix artifacts      # list the AOT artifact manifest
+//! flashmatrix info           # engine / environment summary
+//! ```
+//!
+//! `run` executes one algorithm end-to-end on a generated dataset and
+//! prints the result + engine metrics; `bench` regenerates a paper figure
+//! (see DESIGN.md experiment index; results recorded in EXPERIMENTS.md).
+
+use std::sync::Arc;
+
+use flashmatrix::error::Result;
+use flashmatrix::fmr::Engine;
+use flashmatrix::harness::{self, Alg, Mode, Scale};
+use flashmatrix::util::cli::Args;
+use flashmatrix::{datasets, EngineConfig, StorageKind};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn scale_from(args: &Args) -> Scale {
+    let mut s = Scale::default();
+    s.n = args.u64_or("n", s.n);
+    s.n_small = args.u64_or("n-small", s.n_small);
+    s.iters = args.usize_or("iters", s.iters);
+    s.threads = args.usize_or("threads", s.threads);
+    s.ssd_bps = args.u64_or("ssd-bps", s.ssd_bps);
+    s.artifacts_dir = args.get_or("artifacts", "artifacts").to_string();
+    s.data_dir = args.get_or("data-dir", "data").to_string();
+    s.xla = !args.has("no-xla");
+    s
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("run") => cmd_run(args),
+        Some("bench") => cmd_bench(args),
+        Some("artifacts") => cmd_artifacts(args),
+        Some("info") => cmd_info(args),
+        _ => {
+            eprintln!(
+                "usage: flashmatrix <run|bench|artifacts|info> [...]\n\
+                 see `rust/src/main.rs` docs or README.md"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let s = scale_from(args);
+    let alg = match args.positional.first().map(|s| s.as_str()) {
+        Some("summary") => Alg::Summary,
+        Some("correlation") => Alg::Correlation,
+        Some("svd") => Alg::Svd,
+        Some("kmeans") => Alg::Kmeans,
+        Some("gmm") => Alg::Gmm,
+        other => {
+            return Err(flashmatrix::FmError::Config(format!(
+                "unknown algorithm {other:?}; use summary|correlation|svd|kmeans|gmm"
+            )))
+        }
+    };
+    let mode = if args.has("em") { Mode::FmEm } else { Mode::FmIm };
+    let p = args.u64_or("p", 32);
+    let k = args.usize_or("k", 10);
+    let eng = harness::engine_for(&s, mode, s.threads)?;
+    println!(
+        "flashmatrix run {} [{}] n={} p={} k={} iters={} threads={} xla={}",
+        alg.label(),
+        mode.label(),
+        s.n,
+        p,
+        k,
+        s.iters,
+        s.threads,
+        s.xla
+    );
+    let t0 = std::time::Instant::now();
+    let (x, _means) = datasets::mix_gaussian(&eng, s.n, p, k as u64, 6.0, 42, None)?;
+    println!("dataset generated in {:.2}s", t0.elapsed().as_secs_f64());
+    eng.metrics.reset();
+    let secs = harness::run_alg(&x, alg, k, s.iters)?;
+    let m = eng.metrics.snapshot();
+    println!("{} finished in {:.3}s", alg.label(), secs);
+    println!(
+        "metrics: read={:.2}GB write={:.2}GB reads={} peak_mem={:.2}GB \
+         xla_parts={} native_parts={} chunks(alloc/reuse)={}/{}",
+        m.io_read_bytes as f64 / 1e9,
+        m.io_write_bytes as f64 / 1e9,
+        m.io_read_reqs,
+        m.mem_peak as f64 / 1e9,
+        m.xla_dispatches,
+        m.native_partitions,
+        m.chunks_allocated,
+        m.chunks_recycled,
+    );
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let s = scale_from(args);
+    let which = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let max_threads = args.usize_or("max-threads", (s.threads * 2).max(2));
+    let ps: Vec<u64> = args
+        .get("ps")
+        .map(|v| v.split(',').filter_map(|x| x.parse().ok()).collect())
+        .unwrap_or_else(|| vec![8, 16, 32, 64, 128, 256, 512]);
+    let ks: Vec<usize> = args
+        .get("ks")
+        .map(|v| v.split(',').filter_map(|x| x.parse().ok()).collect())
+        .unwrap_or_else(|| vec![2, 4, 8, 16, 32, 64]);
+
+    let mut tables = Vec::new();
+    match which {
+        "fig6a" => tables.push(harness::fig6a(&s)?),
+        "fig6b" => tables.push(harness::fig6b(&s)?),
+        "fig7" => tables.push(harness::fig7(&s)?),
+        "fig8" => tables.push(harness::fig8(&s, max_threads)?),
+        "fig9" => tables.push(harness::fig9(&s, &ps)?),
+        "fig10" => tables.push(harness::fig10(&s, &ks)?),
+        "fig11" => {
+            tables.push(harness::fig11(&s, true)?);
+            tables.push(harness::fig11(&s, false)?);
+        }
+        "fig12" => tables.push(harness::fig12(&s)?),
+        "table4" => tables.push(harness::table4(&s)?),
+        "all" => {
+            tables.push(harness::fig6a(&s)?);
+            tables.push(harness::fig6b(&s)?);
+            tables.push(harness::fig7(&s)?);
+            tables.push(harness::fig8(&s, max_threads)?);
+            tables.push(harness::fig9(&s, &ps)?);
+            tables.push(harness::fig10(&s, &ks)?);
+            tables.push(harness::fig11(&s, true)?);
+            tables.push(harness::fig11(&s, false)?);
+            tables.push(harness::fig12(&s)?);
+            tables.push(harness::table4(&s)?);
+        }
+        other => {
+            return Err(flashmatrix::FmError::Config(format!(
+                "unknown figure '{other}'"
+            )))
+        }
+    }
+    for t in &tables {
+        t.print();
+    }
+    if let Some(out) = args.get("json") {
+        let arr = flashmatrix::util::json::Json::Arr(tables.iter().map(|t| t.to_json()).collect());
+        std::fs::write(out, arr.to_string())?;
+        println!("\nwrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let metas = flashmatrix::runtime::manifest::load_manifest(std::path::Path::new(dir))?;
+    println!("{} artifacts in {dir}:", metas.len());
+    for m in metas {
+        println!(
+            "  {:28} kind={:16} rows={:6} p={:3} k={:2} ins={} outs={}",
+            m.name,
+            m.kind,
+            m.rows,
+            m.p,
+            m.k,
+            m.inputs.len(),
+            m.outputs.len()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let s = scale_from(args);
+    let cfg = EngineConfig::default();
+    let eng: Arc<Engine> = Engine::new(cfg)?;
+    println!("flashmatrix — FlashR/FlashMatrix reproduction");
+    println!("  cores: {}", s.threads);
+    println!("  chunk: {} MiB", eng.config.chunk_bytes >> 20);
+    println!(
+        "  io partition target: {} MiB; cpu partition: {} KiB",
+        eng.config.target_part_bytes >> 20,
+        eng.config.cpu_part_bytes >> 10
+    );
+    println!(
+        "  storage default: {:?}; data dir: {}",
+        if eng.config.storage == StorageKind::InMem {
+            "in-memory"
+        } else {
+            "external"
+        },
+        eng.config.data_dir.display()
+    );
+    match eng.xla() {
+        Some(svc) => println!("  xla: {} artifacts available", svc.artifacts().len()),
+        None => println!("  xla: unavailable (run `make artifacts`)"),
+    }
+    Ok(())
+}

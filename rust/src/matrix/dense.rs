@@ -1,0 +1,400 @@
+//! Physically-materialized dense matrices (paper §III-B).
+//!
+//! Physical storage is always the **tall-and-skinny canonical form**: rows
+//! partitioned into I/O-level partitions, each partition stored
+//! contiguously in **column-major** order (the paper's preferred layout for
+//! TAS matrices, §III-G). Wide / row-major matrices are *transposed views*
+//! over this canonical form ([`crate::matrix::MatrixData`]), which is
+//! exactly how the paper avoids data copies on `t()`.
+//!
+//! Backing is either
+//! * [`Backing::Mem`] — partitions packed into recycled fixed-size chunks
+//!   from the [`ChunkPool`] (§III-B5), or
+//! * [`Backing::Ext`] — a [`FileStore`] on the simulated SSD array, with an
+//!   optional write-through *matrix cache* holding the first few columns in
+//!   memory (§III-B3).
+
+use std::sync::{Arc, Mutex};
+
+use crate::dtype::DType;
+use crate::error::{FmError, Result};
+use crate::mem::{Chunk, ChunkPool};
+use crate::metrics::Metrics;
+use crate::storage::{FileStore, SsdSim};
+use crate::vudf::Buf;
+
+use super::partition::Partitioning;
+
+/// Where a dense matrix's bytes live.
+pub enum Backing {
+    /// In-memory: chunks + per-partition (chunk index, byte offset).
+    Mem {
+        chunks: Vec<Chunk>,
+        /// partition i -> (chunk index, byte offset within chunk)
+        slots: Vec<(usize, usize)>,
+    },
+    /// External-memory file, partitions densely packed in order, plus an
+    /// optional first-`cache_cols` column cache (write-through).
+    Ext {
+        store: Arc<FileStore>,
+        cache_cols: u64,
+        /// Col-major `nrow x cache_cols` cache, packed per partition in the
+        /// same order as the file (only the first cache_cols columns).
+        cache: Option<Vec<u8>>,
+        metrics: Arc<Metrics>,
+    },
+}
+
+/// A materialized TAS dense matrix. Immutable after construction
+/// (the engine's functional semantics, §III-E).
+pub struct DenseData {
+    pub dtype: DType,
+    pub parts: Partitioning,
+    backing: Backing,
+}
+
+impl DenseData {
+    pub fn nrow(&self) -> u64 {
+        self.parts.nrow
+    }
+
+    pub fn ncol(&self) -> u64 {
+        self.parts.ncol
+    }
+
+    /// Bytes of I/O-level partition `i` (col-major within the partition).
+    /// In-memory: a copy out of the chunk; external: one `pread` (or a
+    /// cache-assisted partial read for cached matrices).
+    pub fn partition_bytes(&self, i: usize) -> Result<Vec<u8>> {
+        let esz = self.dtype.size();
+        let nbytes = self.parts.part_bytes(i, esz);
+        match &self.backing {
+            Backing::Mem { chunks, slots } => {
+                let (ci, off) = slots[i];
+                Ok(chunks[ci].bytes()[off..off + nbytes].to_vec())
+            }
+            Backing::Ext {
+                store,
+                cache_cols,
+                cache,
+                metrics,
+            } => {
+                let prows = self.parts.rows_in(i) as usize;
+                let file_off = self.parts.part_offset(i, esz);
+                match cache {
+                    Some(cached) if *cache_cols > 0 => {
+                        // cached columns come from memory; read only the
+                        // contiguous tail columns from the file.
+                        metrics.cache_hits.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        let cc = (*cache_cols).min(self.parts.ncol) as usize;
+                        let cache_part_off =
+                            (self.parts.part_offset(i, esz) / self.parts.ncol) * cc as u64;
+                        let cached_bytes = cc * prows * esz;
+                        let mut out = vec![0u8; nbytes];
+                        out[..cached_bytes].copy_from_slice(
+                            &cached[cache_part_off as usize..cache_part_off as usize + cached_bytes],
+                        );
+                        if nbytes > cached_bytes {
+                            store.read_at(
+                                file_off + cached_bytes as u64,
+                                &mut out[cached_bytes..],
+                            )?;
+                        }
+                        Ok(out)
+                    }
+                    _ => {
+                        metrics.cache_misses.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        let mut out = vec![0u8; nbytes];
+                        store.read_at(file_off, &mut out)?;
+                        Ok(out)
+                    }
+                }
+            }
+        }
+    }
+
+    /// Partition `i` decoded as a typed buffer (col-major).
+    pub fn partition_buf(&self, i: usize) -> Result<Buf> {
+        Buf::from_bytes(self.dtype, &self.partition_bytes(i)?)
+    }
+
+    /// Whole matrix as one col-major `Buf` (small matrices / tests only).
+    pub fn to_buf(&self) -> Result<Buf> {
+        let n = (self.parts.nrow * self.parts.ncol) as usize;
+        let mut out = Buf::alloc(self.dtype, n);
+        let nrow = self.parts.nrow as usize;
+        for i in 0..self.parts.n_parts() {
+            let (r0, _) = self.parts.part_rows(i);
+            let prows = self.parts.rows_in(i) as usize;
+            let pb = self.partition_buf(i)?;
+            for j in 0..self.parts.ncol as usize {
+                let col = pb.slice(j * prows, prows);
+                out.copy_from(j * nrow + r0 as usize, &col);
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Parallel-writable builder for a [`DenseData`]. Partitions are written
+/// independently (each write locks only its target chunk / issues its own
+/// positioned write), then the builder freezes into the immutable matrix.
+pub struct DenseBuilder {
+    dtype: DType,
+    parts: Partitioning,
+    mode: BuilderMode,
+}
+
+enum BuilderMode {
+    Mem {
+        chunks: Vec<Mutex<Chunk>>,
+        slots: Vec<(usize, usize)>,
+    },
+    Ext {
+        store: Arc<FileStore>,
+        cache_cols: u64,
+        cache: Option<Mutex<Vec<u8>>>,
+        metrics: Arc<Metrics>,
+    },
+}
+
+impl DenseBuilder {
+    /// In-memory builder: pack partitions into pool chunks in order.
+    pub fn new_mem(dtype: DType, parts: Partitioning, pool: &ChunkPool) -> Result<DenseBuilder> {
+        let esz = dtype.size();
+        let chunk_bytes = pool.chunk_bytes();
+        let mut chunks = Vec::new();
+        let mut slots = Vec::with_capacity(parts.n_parts());
+        let mut cur_off = chunk_bytes; // force first allocation
+        for i in 0..parts.n_parts() {
+            let pb = parts.part_bytes(i, esz);
+            if pb > chunk_bytes {
+                return Err(FmError::Config(format!(
+                    "partition ({pb} B) larger than chunk ({chunk_bytes} B)"
+                )));
+            }
+            if cur_off + pb > chunk_bytes {
+                chunks.push(Mutex::new(pool.acquire()));
+                cur_off = 0;
+            }
+            slots.push((chunks.len() - 1, cur_off));
+            cur_off += pb;
+        }
+        Ok(DenseBuilder {
+            dtype,
+            parts,
+            mode: BuilderMode::Mem { chunks, slots },
+        })
+    }
+
+    /// External-memory builder backed by a (possibly throttled) file.
+    pub fn new_ext(
+        dtype: DType,
+        parts: Partitioning,
+        dir: &std::path::Path,
+        name: Option<&str>,
+        cache_cols: u64,
+        ssd: Arc<SsdSim>,
+        metrics: Arc<Metrics>,
+    ) -> Result<DenseBuilder> {
+        let store = Arc::new(FileStore::create(
+            dir,
+            name,
+            parts.total_bytes(dtype.size()),
+            ssd,
+            Arc::clone(&metrics),
+        )?);
+        let cache = if cache_cols > 0 {
+            let cc = cache_cols.min(parts.ncol);
+            Some(Mutex::new(vec![
+                0u8;
+                (parts.nrow * cc) as usize * dtype.size()
+            ]))
+        } else {
+            None
+        };
+        Ok(DenseBuilder {
+            dtype,
+            parts,
+            mode: BuilderMode::Ext {
+                store,
+                cache_cols,
+                cache,
+                metrics,
+            },
+        })
+    }
+
+    pub fn parts(&self) -> &Partitioning {
+        &self.parts
+    }
+
+    pub fn dtype(&self) -> DType {
+        self.dtype
+    }
+
+    /// Write partition `i` from col-major bytes. Thread-safe across
+    /// distinct partitions. External matrices are write-through: bytes land
+    /// on the file *and* (for the cached columns) in the memory cache
+    /// (§III-B3).
+    pub fn write_partition(&self, i: usize, bytes: &[u8]) -> Result<()> {
+        let esz = self.dtype.size();
+        let expect = self.parts.part_bytes(i, esz);
+        if bytes.len() != expect {
+            return Err(FmError::Shape(format!(
+                "partition {i} write: got {} bytes, want {expect}",
+                bytes.len()
+            )));
+        }
+        match &self.mode {
+            BuilderMode::Mem { chunks, slots } => {
+                let (ci, off) = slots[i];
+                let mut chunk = chunks[ci].lock().unwrap();
+                chunk.bytes_mut()[off..off + bytes.len()].copy_from_slice(bytes);
+                Ok(())
+            }
+            BuilderMode::Ext {
+                store,
+                cache_cols,
+                cache,
+                ..
+            } => {
+                store.write_at(self.parts.part_offset(i, esz), bytes)?;
+                if let Some(c) = cache {
+                    let cc = (*cache_cols).min(self.parts.ncol) as usize;
+                    let prows = self.parts.rows_in(i) as usize;
+                    let cached_bytes = cc * prows * esz;
+                    let cache_off =
+                        ((self.parts.part_offset(i, esz) / self.parts.ncol) * cc as u64) as usize;
+                    c.lock().unwrap()[cache_off..cache_off + cached_bytes]
+                        .copy_from_slice(&bytes[..cached_bytes]);
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Write a typed buffer as partition `i`.
+    pub fn write_partition_buf(&self, i: usize, buf: &Buf) -> Result<()> {
+        if buf.dtype() != self.dtype {
+            return Err(FmError::DType(format!(
+                "partition write dtype {} != matrix dtype {}",
+                buf.dtype(),
+                self.dtype
+            )));
+        }
+        self.write_partition(i, &buf.to_bytes())
+    }
+
+    /// Freeze into the immutable matrix.
+    pub fn finish(self) -> DenseData {
+        let backing = match self.mode {
+            BuilderMode::Mem { chunks, slots } => Backing::Mem {
+                chunks: chunks.into_iter().map(|m| m.into_inner().unwrap()).collect(),
+                slots,
+            },
+            BuilderMode::Ext {
+                store,
+                cache_cols,
+                cache,
+                metrics,
+            } => Backing::Ext {
+                store,
+                cache_cols,
+                cache: cache.map(|m| m.into_inner().unwrap()),
+                metrics,
+            },
+        };
+        DenseData {
+            dtype: self.dtype,
+            parts: self.parts,
+            backing,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtype::Scalar;
+
+    fn pool() -> ChunkPool {
+        ChunkPool::new(1 << 16, true, Arc::new(Metrics::new()))
+    }
+
+    fn seq_matrix(nrow: u64, ncol: u64, io_rows: u64) -> DenseData {
+        let parts = Partitioning::with_io_rows(nrow, ncol, io_rows);
+        let b = DenseBuilder::new_mem(DType::F64, parts.clone(), &pool()).unwrap();
+        for i in 0..parts.n_parts() {
+            let (r0, _) = parts.part_rows(i);
+            let prows = parts.rows_in(i) as usize;
+            let mut buf = Buf::alloc(DType::F64, prows * ncol as usize);
+            for j in 0..ncol as usize {
+                for r in 0..prows {
+                    // value = global_row + 1000*col
+                    buf.set(j * prows + r, Scalar::F64((r0 as usize + r) as f64 + 1000.0 * j as f64));
+                }
+            }
+            b.write_partition_buf(i, &buf).unwrap();
+        }
+        b.finish()
+    }
+
+    #[test]
+    fn mem_roundtrip_multi_partition() {
+        let m = seq_matrix(300, 3, 128);
+        assert_eq!(m.parts.n_parts(), 3);
+        let full = m.to_buf().unwrap();
+        // col-major full matrix: element (r, j) at j*nrow + r
+        assert_eq!(full.get(0).as_f64(), 0.0);
+        assert_eq!(full.get(299).as_f64(), 299.0);
+        assert_eq!(full.get(300).as_f64(), 1000.0);
+        assert_eq!(full.get(2 * 300 + 150).as_f64(), 2150.0);
+    }
+
+    #[test]
+    fn ext_roundtrip_with_cache() {
+        let dir = std::env::temp_dir().join(format!("fm-dense-test-{}", std::process::id()));
+        let ssd = Arc::new(SsdSim::new(None));
+        let metrics = Arc::new(Metrics::new());
+        let parts = Partitioning::with_io_rows(256, 4, 128);
+        let b = DenseBuilder::new_ext(
+            DType::F64,
+            parts.clone(),
+            &dir,
+            None,
+            2, // cache first 2 columns
+            ssd,
+            Arc::clone(&metrics),
+        )
+        .unwrap();
+        for i in 0..parts.n_parts() {
+            let prows = parts.rows_in(i) as usize;
+            let mut buf = Buf::alloc(DType::F64, prows * 4);
+            for e in 0..buf.len() {
+                buf.set(e, Scalar::F64((i * 10_000 + e) as f64));
+            }
+            b.write_partition_buf(i, &buf).unwrap();
+        }
+        let m = b.finish();
+        // partition read must reconstruct cached + uncached columns
+        let p1 = m.partition_buf(1).unwrap();
+        assert_eq!(p1.get(0).as_f64(), 10_000.0);
+        assert_eq!(p1.get(300).as_f64(), 10_300.0);
+        assert!(metrics.snapshot().cache_hits > 0);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn oversized_partition_rejected() {
+        let parts = Partitioning::with_io_rows(1 << 14, 1024, 1 << 14); // 128 MiB part
+        assert!(DenseBuilder::new_mem(DType::F64, parts, &pool()).is_err());
+    }
+
+    #[test]
+    fn wrong_size_write_rejected() {
+        let parts = Partitioning::with_io_rows(100, 2, 64);
+        let b = DenseBuilder::new_mem(DType::F64, parts, &pool()).unwrap();
+        assert!(b.write_partition(0, &[0u8; 3]).is_err());
+    }
+}

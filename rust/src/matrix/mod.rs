@@ -1,0 +1,305 @@
+//! Dense-matrix data model (paper §III-B).
+//!
+//! * [`DenseData`] — physically materialized TAS matrix (memory chunks or
+//!   SSD file), always row-partitioned, col-major within a partition.
+//! * [`crate::dag::VNode`] — *virtual* matrices: a recorded computation
+//!   plus references to parent matrices (§III-B2); materialized lazily.
+//! * [`GroupData`] — a group of TAS matrices standing for one wider matrix
+//!   (§III-B4); GenOps decompose onto the members.
+//! * [`Matrix`] — the engine-internal handle: an `Arc` of the above plus a
+//!   `transposed` flag. `t()` flips the flag — no copy — which is how wide
+//!   matrices and the row-major layout are represented (§III-B1).
+//! * [`HostMat`] — a small host-resident matrix (sink results, centroids,
+//!   the "short" operand of inner products).
+
+pub mod dense;
+pub mod partition;
+
+pub use dense::{Backing, DenseBuilder, DenseData};
+pub use partition::{io_rows_for, Partitioning};
+
+use std::sync::Arc;
+
+use crate::dtype::{DType, Scalar};
+use crate::error::{FmError, Result};
+use crate::vudf::Buf;
+
+/// Storage layout tag for the user-visible API (`fm.conv.layout`). The
+/// canonical physical form is col-major TAS; a row-major wide matrix is its
+/// transposed view.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Layout {
+    RowMajor,
+    ColMajor,
+}
+
+/// A group of same-shape TAS matrices side by side (one wider matrix).
+pub struct GroupData {
+    pub members: Vec<Arc<MatrixData>>,
+}
+
+impl GroupData {
+    /// Validate: all members dense-or-virtual with equal nrow and equal
+    /// partitioning is checked at materialization; here only nrow.
+    pub fn nrow(&self) -> u64 {
+        self.members.first().map(|m| m.nrow()).unwrap_or(0)
+    }
+
+    pub fn ncol(&self) -> u64 {
+        self.members.iter().map(|m| m.ncol()).sum()
+    }
+}
+
+/// The three physical kinds of matrix data.
+pub enum MatrixData {
+    Dense(DenseData),
+    Virtual(crate::dag::VNode),
+    Group(GroupData),
+}
+
+impl MatrixData {
+    /// Rows in canonical (untransposed) orientation — the *long dimension*
+    /// all matrices of one DAG share (§III-E).
+    pub fn nrow(&self) -> u64 {
+        match self {
+            MatrixData::Dense(d) => d.nrow(),
+            MatrixData::Virtual(v) => v.nrow,
+            MatrixData::Group(g) => g.nrow(),
+        }
+    }
+
+    pub fn ncol(&self) -> u64 {
+        match self {
+            MatrixData::Dense(d) => d.ncol(),
+            MatrixData::Virtual(v) => v.ncol,
+            MatrixData::Group(g) => g.ncol(),
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            MatrixData::Dense(d) => d.dtype,
+            MatrixData::Virtual(v) => v.dtype,
+            MatrixData::Group(g) => g
+                .members
+                .first()
+                .map(|m| m.dtype())
+                .unwrap_or(DType::F64),
+        }
+    }
+
+    pub fn is_virtual(&self) -> bool {
+        matches!(self, MatrixData::Virtual(_))
+    }
+}
+
+/// Engine-internal matrix handle: shared data + transpose view flag.
+#[derive(Clone)]
+pub struct Matrix {
+    pub data: Arc<MatrixData>,
+    pub transposed: bool,
+}
+
+impl Matrix {
+    pub fn new(data: MatrixData) -> Matrix {
+        Matrix {
+            data: Arc::new(data),
+            transposed: false,
+        }
+    }
+
+    pub fn from_dense(d: DenseData) -> Matrix {
+        Matrix::new(MatrixData::Dense(d))
+    }
+
+    /// Logical (view) row count.
+    pub fn nrow(&self) -> u64 {
+        if self.transposed {
+            self.data.ncol()
+        } else {
+            self.data.nrow()
+        }
+    }
+
+    /// Logical (view) column count.
+    pub fn ncol(&self) -> u64 {
+        if self.transposed {
+            self.data.nrow()
+        } else {
+            self.data.ncol()
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        self.data.dtype()
+    }
+
+    /// Zero-copy transpose (paper: layout flip, §III-B1).
+    pub fn t(&self) -> Matrix {
+        Matrix {
+            data: Arc::clone(&self.data),
+            transposed: !self.transposed,
+        }
+    }
+
+    /// The user-visible layout of the view: canonical TAS is col-major, so
+    /// its transposed (wide) view reads as row-major.
+    pub fn layout(&self) -> Layout {
+        if self.transposed {
+            Layout::RowMajor
+        } else {
+            Layout::ColMajor
+        }
+    }
+
+    pub fn is_virtual(&self) -> bool {
+        self.data.is_virtual()
+    }
+
+    /// Canonical (untransposed) view of the same data.
+    pub fn canonical(&self) -> Matrix {
+        Matrix {
+            data: Arc::clone(&self.data),
+            transposed: false,
+        }
+    }
+
+    /// Pointer identity (DAG node dedup).
+    pub fn data_ptr(&self) -> usize {
+        Arc::as_ptr(&self.data) as *const () as usize
+    }
+}
+
+/// A small host-resident col-major matrix. Sink results, inner-product
+/// small operands, centroid/parameter matrices.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostMat {
+    pub nrow: usize,
+    pub ncol: usize,
+    /// col-major, len = nrow*ncol
+    pub buf: Buf,
+}
+
+impl HostMat {
+    pub fn new(nrow: usize, ncol: usize, buf: Buf) -> Result<HostMat> {
+        if buf.len() != nrow * ncol {
+            return Err(FmError::Shape(format!(
+                "HostMat {nrow}x{ncol} needs {} elements, got {}",
+                nrow * ncol,
+                buf.len()
+            )));
+        }
+        Ok(HostMat { nrow, ncol, buf })
+    }
+
+    pub fn zeros(nrow: usize, ncol: usize, dtype: DType) -> HostMat {
+        HostMat {
+            nrow,
+            ncol,
+            buf: Buf::alloc(dtype, nrow * ncol),
+        }
+    }
+
+    pub fn from_rows_f64(rows: &[Vec<f64>]) -> HostMat {
+        let nrow = rows.len();
+        let ncol = rows.first().map(|r| r.len()).unwrap_or(0);
+        let mut buf = Buf::alloc(DType::F64, nrow * ncol);
+        for (i, r) in rows.iter().enumerate() {
+            assert_eq!(r.len(), ncol, "ragged rows");
+            for (j, v) in r.iter().enumerate() {
+                buf.set(j * nrow + i, Scalar::F64(*v));
+            }
+        }
+        HostMat { nrow, ncol, buf }
+    }
+
+    pub fn get(&self, r: usize, c: usize) -> Scalar {
+        self.buf.get(c * self.nrow + r)
+    }
+
+    pub fn set(&mut self, r: usize, c: usize, v: Scalar) {
+        self.buf.set(c * self.nrow + r, v);
+    }
+
+    /// Column `c` as a buffer copy.
+    pub fn col(&self, c: usize) -> Buf {
+        self.buf.slice(c * self.nrow, self.nrow)
+    }
+
+    /// Transposed copy.
+    pub fn transposed(&self) -> HostMat {
+        let mut out = HostMat::zeros(self.ncol, self.nrow, self.buf.dtype());
+        for r in 0..self.nrow {
+            for c in 0..self.ncol {
+                out.set(c, r, self.get(r, c));
+            }
+        }
+        out
+    }
+
+    /// Row-major f64 vector (XLA literal layout).
+    pub fn to_row_major_f64(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.nrow * self.ncol];
+        for r in 0..self.nrow {
+            for c in 0..self.ncol {
+                out[r * self.ncol + c] = self.get(r, c).as_f64();
+            }
+        }
+        out
+    }
+
+    /// Build from a row-major f64 slice.
+    pub fn from_row_major_f64(nrow: usize, ncol: usize, data: &[f64]) -> HostMat {
+        assert_eq!(data.len(), nrow * ncol);
+        let mut m = HostMat::zeros(nrow, ncol, DType::F64);
+        for r in 0..nrow {
+            for c in 0..ncol {
+                m.set(r, c, Scalar::F64(data[r * ncol + c]));
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transpose_is_zero_copy_view() {
+        let d = HostMat::from_rows_f64(&[vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]);
+        assert_eq!(d.get(2, 1).as_f64(), 6.0);
+        let t = d.transposed();
+        assert_eq!(t.nrow, 2);
+        assert_eq!(t.get(1, 2).as_f64(), 6.0);
+    }
+
+    #[test]
+    fn matrix_view_dims_flip() {
+        let v = crate::dag::VNode {
+            nrow: 10,
+            ncol: 3,
+            dtype: DType::F64,
+            kind: crate::dag::VKind::Fill(Scalar::F64(0.0)),
+        };
+        let m = Matrix::new(MatrixData::Virtual(v));
+        assert_eq!((m.nrow(), m.ncol()), (10, 3));
+        let t = m.t();
+        assert_eq!((t.nrow(), t.ncol()), (3, 10));
+        assert_eq!(t.layout(), Layout::RowMajor);
+        assert_eq!(t.t().layout(), Layout::ColMajor);
+        assert_eq!(t.data_ptr(), m.data_ptr());
+    }
+
+    #[test]
+    fn hostmat_row_major_roundtrip() {
+        let m = HostMat::from_row_major_f64(2, 3, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(m.get(0, 2).as_f64(), 3.0);
+        assert_eq!(m.to_row_major_f64(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn hostmat_shape_checked() {
+        assert!(HostMat::new(2, 2, Buf::from_f64(&[0.0; 3])).is_err());
+    }
+}

@@ -1,0 +1,192 @@
+//! Two-level partitioning of tall-and-skinny matrices (paper §III-B1).
+//!
+//! Level 1 — **I/O-level partitions**: horizontal row blocks, always a
+//! power-of-two number of rows, sized on the order of megabytes. One
+//! partition is the unit of I/O (one `pread` per partition), of parallel
+//! task dispatch, and of contiguous memory within a chunk.
+//!
+//! Level 2 — **CPU-level partitions**: row sub-blocks of an I/O partition
+//! sized to fit L1/L2 cache; the fused-pipeline evaluator walks them so a
+//! partition's intermediates never leave cache (§III-F "cache-fuse").
+//!
+//! The I/O row-count formula is shared with the AOT compile path
+//! (python/compile/model.py::io_rows_for) so artifact input shapes always
+//! match full engine partitions. Keep the two in sync.
+
+/// Mirror of `EngineConfig::target_part_bytes` default; the formula's
+/// constants are pinned here (and in model.py) so artifact shapes are
+/// stable even if the engine config changes at runtime.
+pub const TARGET_PART_BYTES: usize = 8 << 20;
+pub const MIN_IO_ROWS: u64 = 1024;
+pub const MAX_IO_ROWS: u64 = 65536;
+/// The formula assumes 8-byte elements regardless of dtype so that a
+/// matrix's partitioning never depends on its element type.
+pub const FORMULA_ELEM_BYTES: u64 = 8;
+
+/// Rows per I/O-level partition for a `p`-column matrix: the largest power
+/// of two with `rows * p * 8 <= 8 MiB`, clamped to `[1024, 65536]`.
+pub fn io_rows_for(p: u64) -> u64 {
+    let p = p.max(1);
+    let rows = (TARGET_PART_BYTES as u64) / (FORMULA_ELEM_BYTES * p);
+    let pow2 = if rows == 0 { 1 } else { 1u64 << (63 - rows.leading_zeros()) };
+    pow2.clamp(MIN_IO_ROWS, MAX_IO_ROWS)
+}
+
+/// Row-range partitioning of an `nrow x ncol` tall matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Partitioning {
+    pub nrow: u64,
+    pub ncol: u64,
+    /// Rows in every full partition (the last may be shorter).
+    pub io_rows: u64,
+}
+
+impl Partitioning {
+    pub fn new(nrow: u64, ncol: u64) -> Partitioning {
+        Partitioning {
+            nrow,
+            ncol,
+            io_rows: io_rows_for(ncol),
+        }
+    }
+
+    /// Partitioning with an explicit I/O row count (tests, conversions).
+    pub fn with_io_rows(nrow: u64, ncol: u64, io_rows: u64) -> Partitioning {
+        assert!(io_rows > 0);
+        Partitioning { nrow, ncol, io_rows }
+    }
+
+    /// Number of I/O-level partitions.
+    pub fn n_parts(&self) -> usize {
+        if self.nrow == 0 {
+            0
+        } else {
+            self.nrow.div_ceil(self.io_rows) as usize
+        }
+    }
+
+    /// Row range `[start, end)` of partition `i`.
+    pub fn part_rows(&self, i: usize) -> (u64, u64) {
+        let start = i as u64 * self.io_rows;
+        let end = (start + self.io_rows).min(self.nrow);
+        assert!(start < self.nrow, "partition {i} out of range");
+        (start, end)
+    }
+
+    /// Number of rows in partition `i`.
+    pub fn rows_in(&self, i: usize) -> u64 {
+        let (s, e) = self.part_rows(i);
+        e - s
+    }
+
+    /// Whether partition `i` is a full (non-tail) partition — only full
+    /// partitions are eligible for XLA artifact dispatch.
+    pub fn is_full(&self, i: usize) -> bool {
+        self.rows_in(i) == self.io_rows
+    }
+
+    /// Bytes of one partition for an element size.
+    pub fn part_bytes(&self, i: usize, elem: usize) -> usize {
+        (self.rows_in(i) * self.ncol) as usize * elem
+    }
+
+    /// Byte offset of partition `i` in a densely-packed file/chunk layout.
+    pub fn part_offset(&self, i: usize, elem: usize) -> u64 {
+        (i as u64 * self.io_rows * self.ncol) * elem as u64
+    }
+
+    /// Total backing bytes.
+    pub fn total_bytes(&self, elem: usize) -> u64 {
+        self.nrow * self.ncol * elem as u64
+    }
+
+    /// CPU-level sub-partition row count: the largest row block of `ncol`
+    /// columns fitting `cpu_part_bytes` (at 8 B/elem), at least 8 rows.
+    pub fn cpu_rows(&self, cpu_part_bytes: usize) -> u64 {
+        let per_row = (self.ncol.max(1)) * FORMULA_ELEM_BYTES;
+        ((cpu_part_bytes as u64) / per_row)
+            .max(8)
+            .min(self.io_rows)
+            .max(1)
+    }
+
+    /// Iterate CPU-level row ranges (local to partition `i`).
+    pub fn cpu_ranges(&self, i: usize, cpu_part_bytes: usize) -> Vec<(u64, u64)> {
+        let rows = self.rows_in(i);
+        let step = self.cpu_rows(cpu_part_bytes);
+        let mut out = Vec::new();
+        let mut s = 0;
+        while s < rows {
+            let e = (s + step).min(rows);
+            out.push((s, e));
+            s = e;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn io_rows_matches_python_pins() {
+        // pinned values mirrored in python/tests/test_model.py
+        assert_eq!(io_rows_for(8), 65536);
+        assert_eq!(io_rows_for(16), 65536);
+        assert_eq!(io_rows_for(32), 32768);
+        assert_eq!(io_rows_for(64), 16384);
+        assert_eq!(io_rows_for(128), 8192);
+        assert_eq!(io_rows_for(256), 4096);
+        assert_eq!(io_rows_for(512), 2048);
+        for p in 1..600 {
+            let r = io_rows_for(p);
+            assert!(r.is_power_of_two());
+            assert!((MIN_IO_ROWS..=MAX_IO_ROWS).contains(&r));
+        }
+    }
+
+    #[test]
+    fn partition_ranges_cover_exactly() {
+        let pt = Partitioning::with_io_rows(100_000, 32, 32768);
+        assert_eq!(pt.n_parts(), 4);
+        let mut covered = 0;
+        for i in 0..pt.n_parts() {
+            let (s, e) = pt.part_rows(i);
+            assert_eq!(s, covered);
+            covered = e;
+        }
+        assert_eq!(covered, 100_000);
+        assert!(pt.is_full(0));
+        assert!(!pt.is_full(3));
+        assert_eq!(pt.rows_in(3), 100_000 - 3 * 32768);
+    }
+
+    #[test]
+    fn cpu_ranges_cover_partition() {
+        let pt = Partitioning::with_io_rows(32768, 32, 32768);
+        let ranges = pt.cpu_ranges(0, 64 << 10);
+        let mut last = 0;
+        for (s, e) in &ranges {
+            assert_eq!(*s, last);
+            last = *e;
+        }
+        assert_eq!(last, 32768);
+        // 64 KiB / (32 cols * 8B) = 256 rows per CPU partition
+        assert_eq!(ranges[0], (0, 256));
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let pt = Partitioning::new(0, 4);
+        assert_eq!(pt.n_parts(), 0);
+    }
+
+    #[test]
+    fn offsets_are_packed() {
+        let pt = Partitioning::with_io_rows(5000, 4, 2048);
+        assert_eq!(pt.part_offset(0, 8), 0);
+        assert_eq!(pt.part_offset(1, 8), 2048 * 4 * 8);
+        assert_eq!(pt.part_bytes(2, 8), (5000 - 4096) as usize * 4 * 8);
+    }
+}

@@ -1,0 +1,191 @@
+//! Memory-chunk pool (paper §III-B5).
+//!
+//! Linux serves large allocations with `mmap` and populates pages on fault;
+//! at 48 threads the paper found page faults throttle the whole machine, so
+//! FlashMatrix allocates fixed-size chunks once and recycles them across
+//! matrices of all shapes. We reproduce that: a global pool of fixed-size
+//! `Vec<u8>` chunks; in-memory matrices borrow chunks and return them on
+//! drop. The Fig 11 "mem-alloc" ablation flips [`ChunkPool::recycling`] off,
+//! making every acquisition a fresh allocation (and every release a free).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::metrics::Metrics;
+
+/// A fixed-size recycled memory chunk. Returned to its pool on drop.
+pub struct Chunk {
+    buf: Vec<u8>,
+    pool: Arc<ChunkPoolInner>,
+}
+
+impl Chunk {
+    pub fn bytes(&self) -> &[u8] {
+        &self.buf
+    }
+
+    pub fn bytes_mut(&mut self) -> &mut [u8] {
+        &mut self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+}
+
+impl Drop for Chunk {
+    fn drop(&mut self) {
+        let buf = std::mem::take(&mut self.buf);
+        self.pool.release(buf);
+    }
+}
+
+struct ChunkPoolInner {
+    chunk_bytes: usize,
+    free: Mutex<Vec<Vec<u8>>>,
+    recycling: AtomicBool,
+    metrics: Arc<Metrics>,
+}
+
+impl ChunkPoolInner {
+    fn release(&self, buf: Vec<u8>) {
+        self.metrics.mem_release(buf.len() as u64);
+        if self.recycling.load(Ordering::Relaxed) && buf.len() == self.chunk_bytes {
+            self.free.lock().unwrap().push(buf);
+        }
+        // else: dropped, freeing to the OS (the unoptimized mode)
+    }
+}
+
+/// Pool of fixed-size chunks shared by all matrices of an engine.
+#[derive(Clone)]
+pub struct ChunkPool {
+    inner: Arc<ChunkPoolInner>,
+}
+
+impl ChunkPool {
+    pub fn new(chunk_bytes: usize, recycling: bool, metrics: Arc<Metrics>) -> Self {
+        ChunkPool {
+            inner: Arc::new(ChunkPoolInner {
+                chunk_bytes,
+                free: Mutex::new(Vec::new()),
+                recycling: AtomicBool::new(recycling),
+                metrics,
+            }),
+        }
+    }
+
+    /// The global chunk size (same for all matrices — that is what makes
+    /// chunks reusable across shapes, §III-B5).
+    pub fn chunk_bytes(&self) -> usize {
+        self.inner.chunk_bytes
+    }
+
+    /// Acquire one chunk: recycled if available, freshly allocated
+    /// (and zeroed) otherwise.
+    pub fn acquire(&self) -> Chunk {
+        let m = &self.inner.metrics;
+        let buf = if self.inner.recycling.load(Ordering::Relaxed) {
+            self.inner.free.lock().unwrap().pop()
+        } else {
+            None
+        };
+        let buf = match buf {
+            Some(b) => {
+                m.chunks_recycled.fetch_add(1, Ordering::Relaxed);
+                b
+            }
+            None => {
+                m.chunks_allocated.fetch_add(1, Ordering::Relaxed);
+                vec![0u8; self.inner.chunk_bytes]
+            }
+        };
+        m.mem_acquire(buf.len() as u64);
+        Chunk {
+            buf,
+            pool: Arc::clone(&self.inner),
+        }
+    }
+
+    /// Acquire a chunk of a non-standard size (small matrices, sink
+    /// results). Never recycled — tracked for accounting only.
+    pub fn acquire_sized(&self, bytes: usize) -> Chunk {
+        let m = &self.inner.metrics;
+        m.chunks_allocated.fetch_add(1, Ordering::Relaxed);
+        m.mem_acquire(bytes as u64);
+        Chunk {
+            buf: vec![0u8; bytes],
+            pool: Arc::clone(&self.inner),
+        }
+    }
+
+    /// Number of chunks currently parked in the free list.
+    pub fn free_chunks(&self) -> usize {
+        self.inner.free.lock().unwrap().len()
+    }
+
+    /// Toggle recycling (ablation control).
+    pub fn set_recycling(&self, on: bool) {
+        self.inner.recycling.store(on, Ordering::Relaxed);
+        if !on {
+            self.inner.free.lock().unwrap().clear();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool(recycle: bool) -> (ChunkPool, Arc<Metrics>) {
+        let m = Arc::new(Metrics::new());
+        (ChunkPool::new(1024, recycle, Arc::clone(&m)), m)
+    }
+
+    #[test]
+    fn recycles_chunks() {
+        let (p, m) = pool(true);
+        let c1 = p.acquire();
+        drop(c1);
+        assert_eq!(p.free_chunks(), 1);
+        let _c2 = p.acquire();
+        assert_eq!(p.free_chunks(), 0);
+        let s = m.snapshot();
+        assert_eq!(s.chunks_allocated, 1);
+        assert_eq!(s.chunks_recycled, 1);
+    }
+
+    #[test]
+    fn no_recycling_allocates_fresh() {
+        let (p, m) = pool(false);
+        drop(p.acquire());
+        drop(p.acquire());
+        assert_eq!(p.free_chunks(), 0);
+        let s = m.snapshot();
+        assert_eq!(s.chunks_allocated, 2);
+        assert_eq!(s.chunks_recycled, 0);
+    }
+
+    #[test]
+    fn accounting_balances() {
+        let (p, m) = pool(true);
+        {
+            let _a = p.acquire();
+            let _b = p.acquire_sized(100);
+            assert_eq!(m.snapshot().mem_in_use, 1124);
+        }
+        assert_eq!(m.snapshot().mem_in_use, 0);
+        assert_eq!(m.snapshot().mem_peak, 1124);
+    }
+
+    #[test]
+    fn odd_sized_chunks_not_recycled() {
+        let (p, _m) = pool(true);
+        drop(p.acquire_sized(77));
+        assert_eq!(p.free_chunks(), 0);
+    }
+}

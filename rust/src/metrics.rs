@@ -1,0 +1,154 @@
+//! Engine metrics: I/O bytes, allocation behaviour, memory high-water mark.
+//!
+//! The paper's Fig 6(b) (memory consumption) and the §IV-D ablations are
+//! measured through these counters, so they live in the engine rather than
+//! in the bench harness.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Monotonic counters + a tracked memory high-water mark.
+#[derive(Default, Debug)]
+pub struct Metrics {
+    /// Bytes read from the external store.
+    pub io_read_bytes: AtomicU64,
+    /// Bytes written to the external store.
+    pub io_write_bytes: AtomicU64,
+    /// Read requests issued to the external store.
+    pub io_read_reqs: AtomicU64,
+    /// Memory chunks served by fresh OS allocation.
+    pub chunks_allocated: AtomicU64,
+    /// Memory chunks served from the recycle pool.
+    pub chunks_recycled: AtomicU64,
+    /// Bytes currently held in live chunks (pool outstanding).
+    pub mem_in_use: AtomicU64,
+    /// High-water mark of `mem_in_use` (the Fig 6(b) number).
+    pub mem_peak: AtomicU64,
+    /// Partitions whose step was dispatched to an AOT XLA artifact.
+    pub xla_dispatches: AtomicU64,
+    /// Partitions computed through the native GenOp path.
+    pub native_partitions: AtomicU64,
+    /// Matrix-cache hits / misses (EM cached matrices).
+    pub cache_hits: AtomicU64,
+    pub cache_misses: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_read(&self, bytes: u64) {
+        self.io_read_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.io_read_reqs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add_write(&self, bytes: u64) {
+        self.io_write_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Track a memory acquisition and maintain the peak.
+    pub fn mem_acquire(&self, bytes: u64) {
+        let now = self.mem_in_use.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.mem_peak.fetch_max(now, Ordering::Relaxed);
+    }
+
+    pub fn mem_release(&self, bytes: u64) {
+        self.mem_in_use.fetch_sub(bytes, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            io_read_bytes: self.io_read_bytes.load(Ordering::Relaxed),
+            io_write_bytes: self.io_write_bytes.load(Ordering::Relaxed),
+            io_read_reqs: self.io_read_reqs.load(Ordering::Relaxed),
+            chunks_allocated: self.chunks_allocated.load(Ordering::Relaxed),
+            chunks_recycled: self.chunks_recycled.load(Ordering::Relaxed),
+            mem_in_use: self.mem_in_use.load(Ordering::Relaxed),
+            mem_peak: self.mem_peak.load(Ordering::Relaxed),
+            xla_dispatches: self.xla_dispatches.load(Ordering::Relaxed),
+            native_partitions: self.native_partitions.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.cache_misses.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Reset every counter (between bench configurations).
+    pub fn reset(&self) {
+        let s = self;
+        for c in [
+            &s.io_read_bytes,
+            &s.io_write_bytes,
+            &s.io_read_reqs,
+            &s.chunks_allocated,
+            &s.chunks_recycled,
+            &s.mem_in_use,
+            &s.mem_peak,
+            &s.xla_dispatches,
+            &s.native_partitions,
+            &s.cache_hits,
+            &s.cache_misses,
+        ] {
+            c.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Point-in-time copy of all counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MetricsSnapshot {
+    pub io_read_bytes: u64,
+    pub io_write_bytes: u64,
+    pub io_read_reqs: u64,
+    pub chunks_allocated: u64,
+    pub chunks_recycled: u64,
+    pub mem_in_use: u64,
+    pub mem_peak: u64,
+    pub xla_dispatches: u64,
+    pub native_partitions: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+impl MetricsSnapshot {
+    /// Difference vs an earlier snapshot (for per-run accounting).
+    pub fn delta_since(&self, earlier: &MetricsSnapshot) -> MetricsSnapshot {
+        MetricsSnapshot {
+            io_read_bytes: self.io_read_bytes - earlier.io_read_bytes,
+            io_write_bytes: self.io_write_bytes - earlier.io_write_bytes,
+            io_read_reqs: self.io_read_reqs - earlier.io_read_reqs,
+            chunks_allocated: self.chunks_allocated - earlier.chunks_allocated,
+            chunks_recycled: self.chunks_recycled - earlier.chunks_recycled,
+            mem_in_use: self.mem_in_use,
+            mem_peak: self.mem_peak,
+            xla_dispatches: self.xla_dispatches - earlier.xla_dispatches,
+            native_partitions: self.native_partitions - earlier.native_partitions,
+            cache_hits: self.cache_hits - earlier.cache_hits,
+            cache_misses: self.cache_misses - earlier.cache_misses,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_tracks_high_water() {
+        let m = Metrics::new();
+        m.mem_acquire(100);
+        m.mem_acquire(50);
+        m.mem_release(120);
+        m.mem_acquire(10);
+        let s = m.snapshot();
+        assert_eq!(s.mem_peak, 150);
+        assert_eq!(s.mem_in_use, 40);
+    }
+
+    #[test]
+    fn reset_zeroes() {
+        let m = Metrics::new();
+        m.add_read(10);
+        m.reset();
+        assert_eq!(m.snapshot().io_read_bytes, 0);
+    }
+}

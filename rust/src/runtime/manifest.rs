@@ -1,0 +1,145 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime.
+//!
+//! `make artifacts` writes `artifacts/manifest.json` describing every AOT
+//! HLO module: input/output shapes+dtypes and the (kind, rows, p, k)
+//! dispatch key. The engine only dispatches a partition step to XLA when an
+//! artifact's input shape matches the partition exactly (tail partitions
+//! fall back to the native GenOp path).
+
+use std::path::Path;
+
+use crate::dtype::DType;
+use crate::error::{FmError, Result};
+use crate::util::json::Json;
+
+/// Shape + dtype of one artifact input/output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    /// Dispatch kind: "summary" | "gramian" | "gramian_centered" |
+    /// "kmeans" | "gmm".
+    pub kind: String,
+    pub rows: u64,
+    pub p: u64,
+    /// Cluster count for kmeans/gmm artifacts (0 otherwise).
+    pub k: u64,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+fn parse_dtype(s: &str) -> Result<DType> {
+    Ok(match s {
+        "float64" => DType::F64,
+        "float32" => DType::F32,
+        "int64" => DType::I64,
+        "int32" => DType::I32,
+        "bool" => DType::Bool,
+        other => {
+            return Err(FmError::Runtime(format!(
+                "unsupported artifact dtype '{other}'"
+            )))
+        }
+    })
+}
+
+fn parse_specs(j: &Json) -> Result<Vec<TensorSpec>> {
+    j.as_arr()?
+        .iter()
+        .map(|t| {
+            Ok(TensorSpec {
+                shape: t.get("shape")?.usize_vec()?,
+                dtype: parse_dtype(t.get("dtype")?.as_str()?)?,
+            })
+        })
+        .collect()
+}
+
+/// Load and validate `<dir>/manifest.json`.
+pub fn load_manifest(dir: &Path) -> Result<Vec<ArtifactMeta>> {
+    let text = std::fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
+        FmError::Runtime(format!(
+            "cannot read {}/manifest.json ({e}); run `make artifacts`",
+            dir.display()
+        ))
+    })?;
+    let j = Json::parse(&text)?;
+    let mut out = Vec::new();
+    for a in j.get("artifacts")?.as_arr()? {
+        let meta = ArtifactMeta {
+            name: a.get("name")?.as_str()?.to_string(),
+            file: a.get("file")?.as_str()?.to_string(),
+            kind: a.get("kind")?.as_str()?.to_string(),
+            rows: a.get("rows")?.as_u64()?,
+            p: a.get("p")?.as_u64()?,
+            k: a.get("k").map(|v| v.as_u64().unwrap_or(0)).unwrap_or(0),
+            inputs: parse_specs(a.get("inputs")?)?,
+            outputs: parse_specs(a.get("outputs")?)?,
+        };
+        if !dir.join(&meta.file).exists() {
+            return Err(FmError::Runtime(format!(
+                "artifact file missing: {}",
+                dir.join(&meta.file).display()
+            )));
+        }
+        // cross-check: the artifact's row count must match the engine's
+        // shared partitioning formula (DESIGN.md; python model.io_rows_for)
+        if meta.rows != crate::matrix::io_rows_for(meta.p) {
+            return Err(FmError::Runtime(format!(
+                "artifact {}: rows {} != io_rows_for({}) = {}; \
+                 python/compile/model.py and matrix/partition.rs diverged",
+                meta.name,
+                meta.rows,
+                meta.p,
+                crate::matrix::io_rows_for(meta.p)
+            )));
+        }
+        out.push(meta);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_real_manifest_when_present() {
+        // integration-level check; skipped when artifacts are not built
+        let dir = Path::new("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = load_manifest(dir).unwrap();
+        assert!(!m.is_empty());
+        let km = m
+            .iter()
+            .find(|a| a.kind == "kmeans" && a.k == 10)
+            .expect("kmeans_p32_k10 present");
+        assert_eq!(km.p, 32);
+        assert_eq!(km.inputs[0].shape, vec![km.rows as usize, 32]);
+        assert_eq!(km.outputs.len(), 4);
+    }
+
+    #[test]
+    fn dtype_names() {
+        assert_eq!(parse_dtype("float64").unwrap(), DType::F64);
+        assert_eq!(parse_dtype("int32").unwrap(), DType::I32);
+        assert!(parse_dtype("complex64").is_err());
+    }
+}

@@ -1,0 +1,241 @@
+//! AOT XLA/PJRT compute path (the paper's BLAS dispatch, §III-C).
+//!
+//! The paper routes floating-point `fm.inner.prod` to BLAS "to achieve the
+//! speed and precision required by numeric libraries". This reproduction
+//! routes whole per-partition algorithm steps to **AOT-compiled XLA
+//! executables** produced from JAX/Pallas at build time (`make artifacts`):
+//! the Rust engine stays generic (any dtype, any VUDF), and partitions
+//! whose shapes match an artifact take the optimized path.
+//!
+//! PJRT wrapper types are not `Send`, so the runtime is a dedicated
+//! **service thread** owning the `PjRtClient` and the compiled executables;
+//! [`XlaService`] is a cloneable, thread-safe handle that marshals
+//! [`HostTensor`]s over a channel. Executables compile lazily on first use
+//! and are cached for the life of the service.
+
+pub mod manifest;
+
+pub use manifest::{ArtifactMeta, TensorSpec};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+
+use crate::dtype::DType;
+use crate::error::{FmError, Result};
+
+/// A host-side tensor crossing the service boundary.
+#[derive(Clone, Debug)]
+pub struct HostTensor {
+    /// Row-major dims.
+    pub dims: Vec<usize>,
+    pub data: TensorData,
+}
+
+#[derive(Clone, Debug)]
+pub enum TensorData {
+    F64(Vec<f64>),
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    I64(Vec<i64>),
+}
+
+impl HostTensor {
+    pub fn f64(dims: Vec<usize>, data: Vec<f64>) -> HostTensor {
+        debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+        HostTensor {
+            dims,
+            data: TensorData::F64(data),
+        }
+    }
+
+    pub fn scalar_f64(v: f64) -> HostTensor {
+        HostTensor::f64(vec![], vec![v])
+    }
+
+    pub fn as_f64(&self) -> Result<&[f64]> {
+        match &self.data {
+            TensorData::F64(v) => Ok(v),
+            _ => Err(FmError::Runtime("expected f64 tensor".into())),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            _ => Err(FmError::Runtime("expected i32 tensor".into())),
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match &self.data {
+            TensorData::F64(_) => DType::F64,
+            TensorData::F32(_) => DType::F32,
+            TensorData::I32(_) => DType::I32,
+            TensorData::I64(_) => DType::I64,
+        }
+    }
+}
+
+enum Request {
+    Run {
+        name: String,
+        inputs: Vec<HostTensor>,
+        reply: SyncSender<Result<Vec<HostTensor>>>,
+    },
+}
+
+/// Thread-safe handle to the XLA service thread.
+#[derive(Clone)]
+pub struct XlaService {
+    tx: SyncSender<Request>,
+    metas: Arc<Vec<ArtifactMeta>>,
+    /// (kind, p, k) -> manifest index; rows is implied by p via the shared
+    /// partitioning formula.
+    by_key: Arc<HashMap<(String, u64, u64), usize>>,
+    /// Names that failed to compile (don't retry every partition).
+    poisoned: Arc<Mutex<std::collections::HashSet<String>>>,
+}
+
+impl XlaService {
+    /// Load the manifest and start the service thread. Fails fast if the
+    /// manifest is missing or inconsistent; individual modules compile
+    /// lazily on first dispatch.
+    pub fn start(artifacts_dir: &Path) -> Result<XlaService> {
+        let metas = manifest::load_manifest(artifacts_dir)?;
+        let mut by_key = HashMap::new();
+        for (i, m) in metas.iter().enumerate() {
+            by_key.insert((m.kind.clone(), m.p, m.k), i);
+        }
+        let (tx, rx) = sync_channel::<Request>(16);
+        let dir = artifacts_dir.to_path_buf();
+        let meta_for_thread: Vec<(String, String)> = metas
+            .iter()
+            .map(|m| (m.name.clone(), m.file.clone()))
+            .collect();
+        std::thread::Builder::new()
+            .name("xla-service".into())
+            .spawn(move || service_main(dir, meta_for_thread, rx))
+            .map_err(|e| FmError::Runtime(format!("cannot spawn xla service: {e}")))?;
+        Ok(XlaService {
+            tx,
+            metas: Arc::new(metas),
+            by_key: Arc::new(by_key),
+            poisoned: Arc::new(Mutex::new(Default::default())),
+        })
+    }
+
+    /// Find an artifact by dispatch key.
+    pub fn lookup(&self, kind: &str, p: u64, k: u64) -> Option<&ArtifactMeta> {
+        let idx = *self.by_key.get(&(kind.to_string(), p, k))?;
+        let m = &self.metas[idx];
+        if self.poisoned.lock().unwrap().contains(&m.name) {
+            None
+        } else {
+            Some(m)
+        }
+    }
+
+    pub fn artifacts(&self) -> &[ArtifactMeta] {
+        &self.metas
+    }
+
+    /// Execute an artifact by name. Blocks until the service replies.
+    pub fn run(&self, name: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        let (rtx, rrx) = sync_channel(1);
+        self.tx
+            .send(Request::Run {
+                name: name.to_string(),
+                inputs,
+                reply: rtx,
+            })
+            .map_err(|_| FmError::Runtime("xla service thread died".into()))?;
+        let res = rrx
+            .recv()
+            .map_err(|_| FmError::Runtime("xla service dropped reply".into()))?;
+        if res.is_err() {
+            self.poisoned.lock().unwrap().insert(name.to_string());
+        }
+        res
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Service thread: owns all !Send PJRT state.
+// ---------------------------------------------------------------------------
+
+fn service_main(dir: PathBuf, metas: Vec<(String, String)>, rx: Receiver<Request>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            // fail every request with the same error
+            while let Ok(Request::Run { reply, .. }) = rx.recv() {
+                let _ = reply.send(Err(FmError::Runtime(format!(
+                    "PJRT CPU client failed to start: {e}"
+                ))));
+            }
+            return;
+        }
+    };
+    let files: HashMap<String, String> = metas.into_iter().collect();
+    let mut compiled: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+
+    while let Ok(Request::Run {
+        name,
+        inputs,
+        reply,
+    }) = rx.recv()
+    {
+        let result = (|| -> Result<Vec<HostTensor>> {
+            if !compiled.contains_key(&name) {
+                let file = files
+                    .get(&name)
+                    .ok_or_else(|| FmError::Runtime(format!("unknown artifact '{name}'")))?;
+                let path = dir.join(file);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str()
+                        .ok_or_else(|| FmError::Runtime("non-utf8 path".into()))?,
+                )?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client.compile(&comp)?;
+                compiled.insert(name.clone(), exe);
+            }
+            let exe = &compiled[&name];
+            let lits: Vec<xla::Literal> = inputs.iter().map(to_literal).collect::<Result<_>>()?;
+            let out = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+            // aot.py lowers with return_tuple=True: always a tuple
+            let parts = out.to_tuple()?;
+            parts.into_iter().map(from_literal).collect()
+        })();
+        let _ = reply.send(result);
+    }
+}
+
+fn to_literal(t: &HostTensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
+    let lit = match &t.data {
+        TensorData::F64(v) => xla::Literal::vec1(v),
+        TensorData::F32(v) => xla::Literal::vec1(v),
+        TensorData::I32(v) => xla::Literal::vec1(v),
+        TensorData::I64(v) => xla::Literal::vec1(v),
+    };
+    Ok(lit.reshape(&dims)?)
+}
+
+fn from_literal(lit: xla::Literal) -> Result<HostTensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = match shape.ty() {
+        xla::ElementType::F64 => TensorData::F64(lit.to_vec::<f64>()?),
+        xla::ElementType::F32 => TensorData::F32(lit.to_vec::<f32>()?),
+        xla::ElementType::S32 => TensorData::I32(lit.to_vec::<i32>()?),
+        xla::ElementType::S64 => TensorData::I64(lit.to_vec::<i64>()?),
+        other => {
+            return Err(FmError::Runtime(format!(
+                "unsupported artifact output type {other:?}"
+            )))
+        }
+    };
+    Ok(HostTensor { dims, data })
+}

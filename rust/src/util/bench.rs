@@ -1,0 +1,165 @@
+//! Measurement harness for `rust/benches/*` (criterion is not vendored;
+//! benches are `harness = false` binaries built on this module).
+//!
+//! [`measure`] runs a closure `warmup + iters` times and reports
+//! min/median/mean wall time. [`Row`] accumulates a results table that
+//! prints in the same layout the paper's figures use and can be dumped as
+//! JSON for EXPERIMENTS.md.
+
+use std::time::{Duration, Instant};
+
+use crate::util::json::{obj, Json};
+
+/// Timing summary of one measured configuration.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub iters: usize,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+}
+
+impl Sample {
+    pub fn secs(&self) -> f64 {
+        self.median.as_secs_f64()
+    }
+}
+
+/// Run `f` (`warmup` unmeasured + `iters` measured times).
+pub fn measure<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Sample {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(iters.max(1));
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed());
+    }
+    times.sort();
+    let mean = times.iter().sum::<Duration>() / times.len() as u32;
+    Sample {
+        iters: times.len(),
+        min: times[0],
+        median: times[times.len() / 2],
+        mean,
+    }
+}
+
+/// One row of a results table.
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub label: String,
+    pub value: f64,
+    pub unit: String,
+    pub extra: Vec<(String, f64)>,
+}
+
+/// A named results table that prints aligned and serializes to JSON.
+pub struct Table {
+    pub title: String,
+    pub rows: Vec<Row>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>) -> Table {
+        Table {
+            title: title.into(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn add(&mut self, label: impl Into<String>, value: f64, unit: impl Into<String>) {
+        self.rows.push(Row {
+            label: label.into(),
+            value,
+            unit: unit.into(),
+            extra: Vec::new(),
+        });
+    }
+
+    pub fn add_with(
+        &mut self,
+        label: impl Into<String>,
+        value: f64,
+        unit: impl Into<String>,
+        extra: Vec<(String, f64)>,
+    ) {
+        self.rows.push(Row {
+            label: label.into(),
+            value,
+            unit: unit.into(),
+            extra,
+        });
+    }
+
+    /// Print in a fixed-width layout.
+    pub fn print(&self) {
+        println!("\n== {} ==", self.title);
+        let w = self.rows.iter().map(|r| r.label.len()).max().unwrap_or(8);
+        for r in &self.rows {
+            let extras: String = r
+                .extra
+                .iter()
+                .map(|(k, v)| format!("  {k}={v:.4}"))
+                .collect();
+            println!("  {:w$}  {:>12.4} {}{}", r.label, r.value, r.unit, extras);
+        }
+    }
+
+    /// JSON record (appended to bench logs consumed by EXPERIMENTS.md).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("title", Json::from(self.title.clone())),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            let mut fields = vec![
+                                ("label", Json::from(r.label.clone())),
+                                ("value", Json::from(r.value)),
+                                ("unit", Json::from(r.unit.clone())),
+                            ];
+                            for (k, v) in &r.extra {
+                                fields.push((k.as_str(), Json::from(*v)));
+                            }
+                            // keys must own their strings: rebuild
+                            Json::Obj(
+                                fields
+                                    .into_iter()
+                                    .map(|(k, v)| (k.to_string(), v))
+                                    .collect(),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_reports_ordered_stats() {
+        let s = measure(1, 5, || std::thread::sleep(Duration::from_millis(1)));
+        assert_eq!(s.iters, 5);
+        assert!(s.min <= s.median && s.median.as_secs_f64() > 0.0005);
+    }
+
+    #[test]
+    fn table_json_roundtrips() {
+        let mut t = Table::new("fig-test");
+        t.add("fm-im", 1.25, "s");
+        t.add_with("fm-em", 2.5, "s", vec![("io_gb".into(), 3.5)]);
+        let j = t.to_json();
+        let s = j.to_string();
+        let back = Json::parse(&s).unwrap();
+        assert_eq!(back.get("title").unwrap().as_str().unwrap(), "fig-test");
+        assert_eq!(back.get("rows").unwrap().as_arr().unwrap().len(), 2);
+    }
+}

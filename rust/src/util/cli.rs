@@ -1,0 +1,92 @@
+//! Tiny `--flag value` argument parser for the launcher (clap is not
+//! vendored in this offline environment).
+
+use std::collections::HashMap;
+
+/// Parsed command line: a subcommand, positional args and `--key value` /
+/// `--switch` options.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    opts: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse `std::env::args()[1..]`. The first non-flag token is the
+    /// subcommand; `--key value` pairs become options; a `--key` followed
+    /// by another flag (or nothing) is a boolean switch.
+    pub fn parse(argv: &[String]) -> Args {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let next_is_value = argv
+                    .get(i + 1)
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false);
+                if next_is_value {
+                    out.opts.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    out.switches.push(key.to_string());
+                    i += 1;
+                }
+            } else {
+                if out.subcommand.is_none() {
+                    out.subcommand = Some(a.clone());
+                } else {
+                    out.positional.push(a.clone());
+                }
+                i += 1;
+            }
+        }
+        out
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key) || self.opts.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_opts_switches() {
+        let a = Args::parse(&sv(&["bench", "fig6a", "--n", "100000", "--em", "--k", "10"]));
+        assert_eq!(a.subcommand.as_deref(), Some("bench"));
+        assert_eq!(a.positional, vec!["fig6a"]);
+        assert_eq!(a.u64_or("n", 0), 100_000);
+        assert!(a.has("em"));
+        assert_eq!(a.u64_or("k", 0), 10);
+        assert_eq!(a.u64_or("missing", 7), 7);
+    }
+}

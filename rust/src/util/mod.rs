@@ -1,0 +1,15 @@
+//! Small in-repo utilities that replace unavailable external crates in
+//! this offline build (see Cargo.toml header note):
+//!
+//! * [`json`] — minimal JSON parser/writer (artifacts manifest, golden
+//!   fixtures, bench result records).
+//! * [`cli`] — tiny `--flag value` argument parser for the launcher.
+//! * [`bench`] — measurement harness used by `rust/benches/*` (criterion
+//!   is not vendored; benches are `harness = false` mains).
+//! * [`quickcheck`] — property-test case generation on top of the
+//!   deterministic SplitMix64 generator (proptest substitute).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod quickcheck;

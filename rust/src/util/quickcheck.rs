@@ -1,0 +1,96 @@
+//! Property-test case generation (proptest is not vendored; this provides
+//! the subset the test-suite needs on top of the engine's deterministic
+//! SplitMix64).
+//!
+//! [`Gen`] yields primitive draws; [`forall`] runs a property across
+//! `cases` seeded inputs and reports the failing seed — re-run a failure
+//! by pinning [`Gen::new`] to that seed.
+
+use crate::exec::{splitmix64_at, u64_to_unit_f64};
+
+/// Deterministic case generator.
+pub struct Gen {
+    seed: u64,
+    counter: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Gen {
+        Gen { seed, counter: 0 }
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        let v = splitmix64_at(self.seed, self.counter);
+        self.counter += 1;
+        v
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * u64_to_unit_f64(self.next_u64())
+    }
+
+    /// Uniform integer in [lo, hi].
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + (self.next_u64() as usize) % (hi - lo + 1)
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.next_u64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+
+    /// Vector of uniform doubles.
+    pub fn f64_vec(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.f64_in(lo, hi)).collect()
+    }
+
+    /// Pick one of the provided items.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.usize_in(0, items.len() - 1)]
+    }
+}
+
+/// Run `prop` on `cases` generated inputs; panics with the offending seed
+/// on the first failure.
+pub fn forall(cases: usize, mut prop: impl FnMut(&mut Gen) -> Result<(), String>) {
+    for case in 0..cases {
+        let seed = 0x9E37_0000 + case as u64;
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!("property failed (seed {seed}, case {case}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generator_is_deterministic() {
+        let mut a = Gen::new(1);
+        let mut b = Gen::new(1);
+        for _ in 0..10 {
+            assert_eq!(a.u64(), b.u64());
+        }
+    }
+
+    #[test]
+    fn ranges_respected() {
+        forall(50, |g| {
+            let v = g.f64_in(-2.0, 3.0);
+            let n = g.usize_in(1, 7);
+            if !(-2.0..3.0).contains(&v) {
+                return Err(format!("f64 out of range: {v}"));
+            }
+            if !(1..=7).contains(&n) {
+                return Err(format!("usize out of range: {n}"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,286 @@
+//! Typed element buffers — the registers of the fused-pipeline evaluator.
+//!
+//! A `Buf` holds a contiguous run of elements of one [`DType`]. CPU-level
+//! partitions, VUDF inputs/outputs and sink accumulators are all `Buf`s.
+//! The variants own `Vec`s so buffers can be recycled across partitions by
+//! the evaluator (allocation happens once per pipeline, not per partition).
+
+use crate::dtype::{DType, Element, Scalar};
+use crate::error::{FmError, Result};
+
+/// A typed, contiguous buffer of elements.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Buf {
+    Bool(Vec<bool>),
+    I32(Vec<i32>),
+    I64(Vec<i64>),
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+}
+
+macro_rules! per_variant {
+    ($self:expr, $v:ident => $e:expr) => {
+        match $self {
+            Buf::Bool($v) => $e,
+            Buf::I32($v) => $e,
+            Buf::I64($v) => $e,
+            Buf::F32($v) => $e,
+            Buf::F64($v) => $e,
+        }
+    };
+}
+
+impl Buf {
+    /// Allocate a zeroed buffer.
+    pub fn alloc(dtype: DType, len: usize) -> Buf {
+        match dtype {
+            DType::Bool => Buf::Bool(vec![false; len]),
+            DType::I32 => Buf::I32(vec![0; len]),
+            DType::I64 => Buf::I64(vec![0; len]),
+            DType::F32 => Buf::F32(vec![0.0; len]),
+            DType::F64 => Buf::F64(vec![0.0; len]),
+        }
+    }
+
+    /// Allocate a buffer filled with `value` (cast to `dtype`).
+    pub fn fill(dtype: DType, len: usize, value: Scalar) -> Buf {
+        let v = value.cast(dtype);
+        match (dtype, v) {
+            (DType::Bool, Scalar::Bool(x)) => Buf::Bool(vec![x; len]),
+            (DType::I32, Scalar::I32(x)) => Buf::I32(vec![x; len]),
+            (DType::I64, Scalar::I64(x)) => Buf::I64(vec![x; len]),
+            (DType::F32, Scalar::F32(x)) => Buf::F32(vec![x; len]),
+            (DType::F64, Scalar::F64(x)) => Buf::F64(vec![x; len]),
+            _ => unreachable!("cast guarantees matching variant"),
+        }
+    }
+
+    pub fn from_f64(v: &[f64]) -> Buf {
+        Buf::F64(v.to_vec())
+    }
+
+    pub fn len(&self) -> usize {
+        per_variant!(self, v => v.len())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Buf::Bool(_) => DType::Bool,
+            Buf::I32(_) => DType::I32,
+            Buf::I64(_) => DType::I64,
+            Buf::F32(_) => DType::F32,
+            Buf::F64(_) => DType::F64,
+        }
+    }
+
+    /// Element at `i` as a scalar.
+    pub fn get(&self, i: usize) -> Scalar {
+        match self {
+            Buf::Bool(v) => Scalar::Bool(v[i]),
+            Buf::I32(v) => Scalar::I32(v[i]),
+            Buf::I64(v) => Scalar::I64(v[i]),
+            Buf::F32(v) => Scalar::F32(v[i]),
+            Buf::F64(v) => Scalar::F64(v[i]),
+        }
+    }
+
+    /// Set element `i` (value is cast to the buffer dtype).
+    pub fn set(&mut self, i: usize, value: Scalar) {
+        match self {
+            Buf::Bool(v) => v[i] = value.as_bool(),
+            Buf::I32(v) => v[i] = value.as_i64() as i32,
+            Buf::I64(v) => v[i] = value.as_i64(),
+            Buf::F32(v) => v[i] = value.as_f64() as f32,
+            Buf::F64(v) => v[i] = value.as_f64(),
+        }
+    }
+
+    /// Copy of the elements in `[off, off+len)` as a new buffer.
+    pub fn slice(&self, off: usize, len: usize) -> Buf {
+        match self {
+            Buf::Bool(v) => Buf::Bool(v[off..off + len].to_vec()),
+            Buf::I32(v) => Buf::I32(v[off..off + len].to_vec()),
+            Buf::I64(v) => Buf::I64(v[off..off + len].to_vec()),
+            Buf::F32(v) => Buf::F32(v[off..off + len].to_vec()),
+            Buf::F64(v) => Buf::F64(v[off..off + len].to_vec()),
+        }
+    }
+
+    /// Copy `src` into this buffer starting at `off`. Dtypes must match.
+    pub fn copy_from(&mut self, off: usize, src: &Buf) {
+        match (self, src) {
+            (Buf::Bool(d), Buf::Bool(s)) => d[off..off + s.len()].copy_from_slice(s),
+            (Buf::I32(d), Buf::I32(s)) => d[off..off + s.len()].copy_from_slice(s),
+            (Buf::I64(d), Buf::I64(s)) => d[off..off + s.len()].copy_from_slice(s),
+            (Buf::F32(d), Buf::F32(s)) => d[off..off + s.len()].copy_from_slice(s),
+            (Buf::F64(d), Buf::F64(s)) => d[off..off + s.len()].copy_from_slice(s),
+            (d, s) => panic!("copy_from dtype mismatch: {} vs {}", d.dtype(), s.dtype()),
+        }
+    }
+
+    /// Cast to `to`, returning a new buffer (no-op clone when equal).
+    pub fn cast(&self, to: DType) -> Result<Buf> {
+        if self.dtype() == to {
+            return Ok(self.clone());
+        }
+        let mut out = Buf::alloc(to, self.len());
+        macro_rules! cast_loop {
+            ($src:expr, $conv:expr) => {{
+                match &mut out {
+                    Buf::Bool(d) => {
+                        for (o, x) in d.iter_mut().zip($src.iter()) {
+                            *o = $conv(*x) != 0.0
+                        }
+                    }
+                    Buf::I32(d) => {
+                        for (o, x) in d.iter_mut().zip($src.iter()) {
+                            *o = $conv(*x) as i32
+                        }
+                    }
+                    Buf::I64(d) => {
+                        for (o, x) in d.iter_mut().zip($src.iter()) {
+                            *o = $conv(*x) as i64
+                        }
+                    }
+                    Buf::F32(d) => {
+                        for (o, x) in d.iter_mut().zip($src.iter()) {
+                            *o = $conv(*x) as f32
+                        }
+                    }
+                    Buf::F64(d) => {
+                        for (o, x) in d.iter_mut().zip($src.iter()) {
+                            *o = $conv(*x)
+                        }
+                    }
+                }
+            }};
+        }
+        match self {
+            Buf::Bool(s) => cast_loop!(s, |x: bool| x as u8 as f64),
+            Buf::I32(s) => cast_loop!(s, |x: i32| x as f64),
+            Buf::I64(s) => cast_loop!(s, |x: i64| x as f64),
+            Buf::F32(s) => cast_loop!(s, |x: f32| x as f64),
+            Buf::F64(s) => cast_loop!(s, |x: f64| x),
+        }
+        Ok(out)
+    }
+
+    /// All elements as f64 (tests, display, scalar-mode kernels).
+    pub fn to_f64_vec(&self) -> Vec<f64> {
+        per_variant!(self, v => v.iter().map(|x| Element::to_f64(*x)).collect())
+    }
+
+    /// Typed slice accessors (panic on dtype mismatch — engine-internal).
+    pub fn as_f64(&self) -> &[f64] {
+        match self {
+            Buf::F64(v) => v,
+            other => panic!("expected f64 buffer, got {}", other.dtype()),
+        }
+    }
+
+    pub fn as_f64_mut(&mut self) -> &mut [f64] {
+        match self {
+            Buf::F64(v) => v,
+            other => panic!("expected f64 buffer, got {}", other.dtype()),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match self {
+            Buf::I32(v) => v,
+            other => panic!("expected i32 buffer, got {}", other.dtype()),
+        }
+    }
+
+    /// Raw little-endian bytes of the buffer (storage serialization).
+    /// Hot path: chunked conversion the compiler vectorizes (per-element
+    /// flat_map was a measured bottleneck — EXPERIMENTS.md §Perf).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        macro_rules! num_bytes {
+            ($v:expr, $w:expr) => {{
+                let mut out = vec![0u8; $v.len() * $w];
+                for (chunk, x) in out.chunks_exact_mut($w).zip($v.iter()) {
+                    chunk.copy_from_slice(&x.to_le_bytes());
+                }
+                out
+            }};
+        }
+        match self {
+            Buf::Bool(v) => v.iter().map(|&b| b as u8).collect(),
+            Buf::I32(v) => num_bytes!(v, 4),
+            Buf::I64(v) => num_bytes!(v, 8),
+            Buf::F32(v) => num_bytes!(v, 4),
+            Buf::F64(v) => num_bytes!(v, 8),
+        }
+    }
+
+    /// Rebuild a buffer from raw little-endian bytes.
+    pub fn from_bytes(dtype: DType, bytes: &[u8]) -> Result<Buf> {
+        let esz = dtype.size();
+        if bytes.len() % esz != 0 {
+            return Err(FmError::Storage(format!(
+                "byte length {} not a multiple of element size {esz}",
+                bytes.len()
+            )));
+        }
+        macro_rules! num_from {
+            ($t:ty, $w:expr) => {
+                bytes
+                    .chunks_exact($w)
+                    .map(|c| <$t>::from_le_bytes(c.try_into().unwrap()))
+                    .collect()
+            };
+        }
+        Ok(match dtype {
+            DType::Bool => Buf::Bool(bytes.iter().map(|&b| b != 0).collect()),
+            DType::I32 => Buf::I32(num_from!(i32, 4)),
+            DType::I64 => Buf::I64(num_from!(i64, 8)),
+            DType::F32 => Buf::F32(num_from!(f32, 4)),
+            DType::F64 => Buf::F64(num_from!(f64, 8)),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_bytes_all_dtypes() {
+        for dt in [DType::Bool, DType::I32, DType::I64, DType::F32, DType::F64] {
+            let b = Buf::fill(dt, 7, Scalar::F64(1.0));
+            let bytes = b.to_bytes();
+            assert_eq!(bytes.len(), 7 * dt.size());
+            let back = Buf::from_bytes(dt, &bytes).unwrap();
+            assert_eq!(back, b);
+        }
+    }
+
+    #[test]
+    fn cast_f64_to_i32_truncates() {
+        let b = Buf::from_f64(&[1.9, -2.9, 0.0]);
+        let c = b.cast(DType::I32).unwrap();
+        assert_eq!(c, Buf::I32(vec![1, -2, 0]));
+        let d = b.cast(DType::Bool).unwrap();
+        assert_eq!(d, Buf::Bool(vec![true, true, false]));
+    }
+
+    #[test]
+    fn slice_and_copy() {
+        let b = Buf::from_f64(&[0.0, 1.0, 2.0, 3.0]);
+        let s = b.slice(1, 2);
+        assert_eq!(s.to_f64_vec(), vec![1.0, 2.0]);
+        let mut d = Buf::alloc(DType::F64, 4);
+        d.copy_from(2, &s);
+        assert_eq!(d.to_f64_vec(), vec![0.0, 0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn bad_byte_length_rejected() {
+        assert!(Buf::from_bytes(DType::F64, &[0u8; 7]).is_err());
+    }
+}

@@ -1,0 +1,228 @@
+//! Vectorized user-defined functions (VUDFs), paper §III-D.
+//!
+//! GenOps never call a function per element. They call VUDFs — functions
+//! over *vectors* of elements — in one of the paper's forms:
+//!
+//! * `uVUDF`   — vector -> vector                      ([`unary`])
+//! * `bVUDF1`  — vector ⊕ vector -> vector             ([`binary_vv`])
+//! * `bVUDF2`  — vector ⊕ scalar -> vector             ([`binary_vs`])
+//! * `bVUDF3`  — scalar ⊕ vector -> vector             ([`binary_sv`])
+//! * `aVUDF1`  — vector -> scalar (aggregate)          ([`AggOp::reduce`])
+//! * `aVUDF2`  — vector ⊗ vector -> vector (combine)   ([`AggOp::combine`])
+//!
+//! Built-in operations are enum-dispatched so the inner loops monomorphize
+//! to straight-line code the compiler auto-vectorizes (the paper's
+//! AVX-via-autovectorization strategy). The *scalar mode* used by the
+//! Fig 12 ablation and the MLlib-like baseline instead routes every element
+//! through a boxed `dyn Fn` — one function call per element, the exact
+//! overhead the paper's VUDFs exist to amortize.
+//!
+//! [`binary_colvec`] / [`binary_rowvec`] are the broadcast forms backing
+//! `fm.mapply.col` / `fm.mapply.row`; the GenOp layer picks the form per
+//! the input layout exactly as §III-G describes.
+
+pub mod buf;
+pub mod ops;
+pub mod registry;
+
+pub use buf::Buf;
+pub use ops::{AggOp, BinOp, UnOp};
+pub use registry::{CustomVudf, VudfRegistry};
+
+use crate::error::{FmError, Result};
+
+/// Maximum vector length passed to a VUDF in one call (paper: 128; balances
+/// call-overhead amortization against L1 residency). The enum-dispatched
+/// built-ins process whole CPU-partitions in L1-sized strips of this many
+/// elements.
+pub const MAX_VUDF_LEN: usize = 128;
+
+/// Apply a unary VUDF over a buffer. `vectorized=false` is the per-element
+/// boxed-call ablation mode.
+pub fn unary(op: UnOp, a: &Buf, vectorized: bool) -> Result<Buf> {
+    if vectorized {
+        op.apply(a)
+    } else {
+        op.apply_scalar_mode(a)
+    }
+}
+
+/// bVUDF1: elementwise vector ⊕ vector.
+pub fn binary_vv(op: BinOp, a: &Buf, b: &Buf, vectorized: bool) -> Result<Buf> {
+    if a.len() != b.len() {
+        return Err(FmError::Shape(format!(
+            "binary_vv length mismatch: {} vs {}",
+            a.len(),
+            b.len()
+        )));
+    }
+    if a.dtype() != b.dtype() {
+        return Err(FmError::DType(format!(
+            "binary_vv dtype mismatch: {} vs {} (GenOp layer must insert casts)",
+            a.dtype(),
+            b.dtype()
+        )));
+    }
+    if vectorized {
+        op.apply_vv(a, b)
+    } else {
+        op.apply_vv_scalar_mode(a, b)
+    }
+}
+
+/// bVUDF2: vector ⊕ scalar.
+pub fn binary_vs(op: BinOp, a: &Buf, s: crate::dtype::Scalar, vectorized: bool) -> Result<Buf> {
+    let s = s.cast(a.dtype());
+    let b = Buf::fill(a.dtype(), 1, s);
+    if vectorized {
+        op.apply_broadcast(a, &b, BroadcastSide::ScalarRight)
+    } else {
+        op.apply_broadcast_scalar_mode(a, &b, BroadcastSide::ScalarRight)
+    }
+}
+
+/// bVUDF3: scalar ⊕ vector (for non-commutative ops).
+pub fn binary_sv(op: BinOp, s: crate::dtype::Scalar, b: &Buf, vectorized: bool) -> Result<Buf> {
+    let s = s.cast(b.dtype());
+    let a = Buf::fill(b.dtype(), 1, s);
+    if vectorized {
+        op.apply_broadcast(b, &a, BroadcastSide::ScalarLeft)
+    } else {
+        op.apply_broadcast_scalar_mode(b, &a, BroadcastSide::ScalarLeft)
+    }
+}
+
+/// Which side of a broadcast binary op is the scalar.
+#[derive(Clone, Copy, PartialEq)]
+pub enum BroadcastSide {
+    ScalarLeft,
+    ScalarRight,
+}
+
+/// `fm.mapply.col` inner form: `out[i,j] = f(a[i,j], v[i])` over a
+/// column-major `rows x cols` strip. For a tall column-major partition this
+/// is `cols` bVUDF1 calls on long columns — the form §III-G prescribes.
+pub fn binary_colvec(
+    op: BinOp,
+    a: &Buf,
+    v: &Buf,
+    rows: usize,
+    cols: usize,
+    vectorized: bool,
+) -> Result<Buf> {
+    if a.len() != rows * cols || v.len() != rows {
+        return Err(FmError::Shape(format!(
+            "binary_colvec: a={} v={} rows={} cols={}",
+            a.len(),
+            v.len(),
+            rows,
+            cols
+        )));
+    }
+    let v = v.cast(a.dtype())?;
+    let mut out = Buf::alloc(op.out_dtype(a.dtype()), a.len());
+    for j in 0..cols {
+        let col = a.slice(j * rows, rows);
+        let r = binary_vv(op, &col, &v, vectorized)?;
+        out.copy_from(j * rows, &r);
+    }
+    Ok(out)
+}
+
+/// `fm.mapply.row` inner form: `out[i,j] = f(a[i,j], w[j])` over a
+/// column-major strip: each long column combines with one element of `w`
+/// via bVUDF2 (§III-G's form selection for tall column-major input).
+pub fn binary_rowvec(
+    op: BinOp,
+    a: &Buf,
+    w: &Buf,
+    rows: usize,
+    cols: usize,
+    vectorized: bool,
+) -> Result<Buf> {
+    if a.len() != rows * cols || w.len() != cols {
+        return Err(FmError::Shape(format!(
+            "binary_rowvec: a={} w={} rows={} cols={}",
+            a.len(),
+            w.len(),
+            rows,
+            cols
+        )));
+    }
+    let w = w.cast(a.dtype())?;
+    let mut out = Buf::alloc(op.out_dtype(a.dtype()), a.len());
+    for j in 0..cols {
+        let col = a.slice(j * rows, rows);
+        let r = binary_vs(op, &col, w.get(j), vectorized)?;
+        out.copy_from(j * rows, &r);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtype::{DType, Scalar};
+
+    fn f64buf(v: &[f64]) -> Buf {
+        Buf::from_f64(v)
+    }
+
+    #[test]
+    fn unary_forms() {
+        let a = f64buf(&[1.0, -4.0, 9.0]);
+        let abs = unary(UnOp::Abs, &a, true).unwrap();
+        assert_eq!(abs.to_f64_vec(), vec![1.0, 4.0, 9.0]);
+        let abs_s = unary(UnOp::Abs, &a, false).unwrap();
+        assert_eq!(abs_s.to_f64_vec(), vec![1.0, 4.0, 9.0]);
+        let sq = unary(UnOp::Sq, &a, true).unwrap();
+        assert_eq!(sq.to_f64_vec(), vec![1.0, 16.0, 81.0]);
+    }
+
+    #[test]
+    fn binary_forms_match_each_other() {
+        let a = f64buf(&[1.0, 2.0, 3.0]);
+        let b = f64buf(&[10.0, 20.0, 30.0]);
+        let vv = binary_vv(BinOp::Sub, &a, &b, true).unwrap();
+        assert_eq!(vv.to_f64_vec(), vec![-9.0, -18.0, -27.0]);
+        // bVUDF2 vs bVUDF3 on a non-commutative op
+        let vs = binary_vs(BinOp::Sub, &a, Scalar::F64(1.0), true).unwrap();
+        assert_eq!(vs.to_f64_vec(), vec![0.0, 1.0, 2.0]);
+        let sv = binary_sv(BinOp::Sub, Scalar::F64(1.0), &a, true).unwrap();
+        assert_eq!(sv.to_f64_vec(), vec![0.0, -1.0, -2.0]);
+        // scalar mode must agree with vectorized mode
+        let vv_s = binary_vv(BinOp::Sub, &a, &b, false).unwrap();
+        assert_eq!(vv_s.to_f64_vec(), vv.to_f64_vec());
+    }
+
+    #[test]
+    fn colvec_and_rowvec_broadcast() {
+        // 3x2 col-major: cols [1,2,3] and [4,5,6]
+        let a = f64buf(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let v = f64buf(&[10.0, 20.0, 30.0]);
+        let out = binary_colvec(BinOp::Add, &a, &v, 3, 2, true).unwrap();
+        assert_eq!(out.to_f64_vec(), vec![11.0, 22.0, 33.0, 14.0, 25.0, 36.0]);
+        let w = f64buf(&[100.0, 200.0]);
+        let out = binary_rowvec(BinOp::Add, &a, &w, 3, 2, true).unwrap();
+        assert_eq!(
+            out.to_f64_vec(),
+            vec![101.0, 102.0, 103.0, 204.0, 205.0, 206.0]
+        );
+    }
+
+    #[test]
+    fn comparison_outputs_bool() {
+        let a = f64buf(&[1.0, 5.0]);
+        let b = f64buf(&[2.0, 2.0]);
+        let lt = binary_vv(BinOp::Lt, &a, &b, true).unwrap();
+        assert_eq!(lt.dtype(), DType::Bool);
+        assert_eq!(lt.to_f64_vec(), vec![1.0, 0.0]);
+    }
+
+    #[test]
+    fn length_mismatch_rejected() {
+        let a = f64buf(&[1.0]);
+        let b = f64buf(&[1.0, 2.0]);
+        assert!(binary_vv(BinOp::Add, &a, &b, true).is_err());
+    }
+}

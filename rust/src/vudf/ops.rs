@@ -1,0 +1,544 @@
+//! Built-in VUDF operations: unary, binary and aggregation kernels.
+//!
+//! Each op is enum-dispatched once per *vector*, and the per-type inner
+//! loops are monomorphic straight-line code the compiler auto-vectorizes —
+//! this is the paper's VUDF fast path. `*_scalar_mode` variants route every
+//! element through an opaque function pointer (one call per element), the
+//! behaviour of R/MLlib that Fig 12's ablation measures.
+
+use std::hint::black_box;
+
+use crate::dtype::{DType, Scalar};
+use crate::error::{FmError, Result};
+
+use super::buf::Buf;
+use super::BroadcastSide;
+
+/// Unary built-ins (`fm.sapply` operations, Table III).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum UnOp {
+    Neg,
+    Abs,
+    Sqrt,
+    /// x^2 — used by L2-norm / variance pipelines.
+    Sq,
+    Exp,
+    Log,
+    Floor,
+    Ceil,
+    Round,
+    Sign,
+    /// logical negation (Bool output)
+    Not,
+    /// x != 0 (Bool output) — the nnz test.
+    NotZero,
+    /// NaN test (Bool output) — R's is.na on doubles.
+    IsNa,
+}
+
+impl UnOp {
+    /// Output dtype for a given input dtype (float ops promote ints).
+    pub fn out_dtype(self, input: DType) -> DType {
+        match self {
+            UnOp::Not | UnOp::NotZero | UnOp::IsNa => DType::Bool,
+            UnOp::Sqrt | UnOp::Exp | UnOp::Log => {
+                if input == DType::F32 {
+                    DType::F32
+                } else {
+                    DType::F64
+                }
+            }
+            _ => {
+                if input == DType::Bool {
+                    DType::I32
+                } else {
+                    input
+                }
+            }
+        }
+    }
+
+    fn f64_fn(self) -> fn(f64) -> f64 {
+        match self {
+            UnOp::Neg => |x| -x,
+            UnOp::Abs => f64::abs,
+            UnOp::Sqrt => f64::sqrt,
+            UnOp::Sq => |x| x * x,
+            UnOp::Exp => f64::exp,
+            UnOp::Log => f64::ln,
+            UnOp::Floor => f64::floor,
+            UnOp::Ceil => f64::ceil,
+            UnOp::Round => |x| x.round_ties_even(),
+            UnOp::Sign => |x| {
+                if x > 0.0 {
+                    1.0
+                } else if x < 0.0 {
+                    -1.0
+                } else {
+                    0.0
+                }
+            },
+            UnOp::Not | UnOp::NotZero => |x| (x != 0.0) as u8 as f64,
+            UnOp::IsNa => |x| x.is_nan() as u8 as f64,
+        }
+    }
+
+    /// Vectorized apply (uVUDF form).
+    pub fn apply(self, a: &Buf) -> Result<Buf> {
+        let out_dt = self.out_dtype(a.dtype());
+        // Bool outputs and promotions go through a generic f64 path; the
+        // hot same-type numeric cases get monomorphic loops.
+        match (self, a) {
+            (UnOp::Neg, Buf::F64(v)) => Ok(Buf::F64(v.iter().map(|x| -x).collect())),
+            (UnOp::Abs, Buf::F64(v)) => Ok(Buf::F64(v.iter().map(|x| x.abs()).collect())),
+            (UnOp::Sq, Buf::F64(v)) => Ok(Buf::F64(v.iter().map(|x| x * x).collect())),
+            (UnOp::Sqrt, Buf::F64(v)) => Ok(Buf::F64(v.iter().map(|x| x.sqrt()).collect())),
+            (UnOp::Exp, Buf::F64(v)) => Ok(Buf::F64(v.iter().map(|x| x.exp()).collect())),
+            (UnOp::Log, Buf::F64(v)) => Ok(Buf::F64(v.iter().map(|x| x.ln()).collect())),
+            (UnOp::Neg, Buf::F32(v)) => Ok(Buf::F32(v.iter().map(|x| -x).collect())),
+            (UnOp::Abs, Buf::F32(v)) => Ok(Buf::F32(v.iter().map(|x| x.abs()).collect())),
+            (UnOp::Sq, Buf::F32(v)) => Ok(Buf::F32(v.iter().map(|x| x * x).collect())),
+            (UnOp::Neg, Buf::I64(v)) => Ok(Buf::I64(v.iter().map(|x| -x).collect())),
+            (UnOp::Abs, Buf::I64(v)) => Ok(Buf::I64(v.iter().map(|x| x.abs()).collect())),
+            (UnOp::Sq, Buf::I64(v)) => Ok(Buf::I64(v.iter().map(|x| x * x).collect())),
+            (UnOp::Neg, Buf::I32(v)) => Ok(Buf::I32(v.iter().map(|x| -x).collect())),
+            (UnOp::NotZero, Buf::F64(v)) => Ok(Buf::Bool(v.iter().map(|x| *x != 0.0).collect())),
+            (UnOp::Not, Buf::Bool(v)) => Ok(Buf::Bool(v.iter().map(|x| !x).collect())),
+            (UnOp::IsNa, Buf::F64(v)) => Ok(Buf::Bool(v.iter().map(|x| x.is_nan()).collect())),
+            _ => {
+                // generic path: via f64
+                let f = self.f64_fn();
+                let tmp: Vec<f64> = a.to_f64_vec().iter().map(|x| f(*x)).collect();
+                Buf::F64(tmp).cast(out_dt)
+            }
+        }
+    }
+
+    /// Per-element boxed-call mode (Fig 12 ablation / MLlib-like baseline).
+    pub fn apply_scalar_mode(self, a: &Buf) -> Result<Buf> {
+        let out_dt = self.out_dtype(a.dtype());
+        let f = black_box(self.f64_fn());
+        let mut out = Buf::alloc(out_dt, a.len());
+        for i in 0..a.len() {
+            let x = black_box(a.get(i).as_f64());
+            out.set(i, Scalar::F64(f(x)));
+        }
+        Ok(out)
+    }
+}
+
+/// Binary built-ins (element-wise R operators, Table III).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Pow,
+    Min,
+    Max,
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    And,
+    Or,
+    /// `ifelse0`: keep left where right (a mask) is zero/false, else 0 —
+    /// the paper's missing-value replacement VUDF (Fig 5).
+    IfElse0,
+}
+
+impl BinOp {
+    pub fn is_comparison(self) -> bool {
+        matches!(
+            self,
+            BinOp::Eq | BinOp::Ne | BinOp::Lt | BinOp::Le | BinOp::Gt | BinOp::Ge
+        )
+    }
+
+    pub fn is_logical(self) -> bool {
+        matches!(self, BinOp::And | BinOp::Or)
+    }
+
+    /// Output dtype for same-typed operands.
+    pub fn out_dtype(self, input: DType) -> DType {
+        if self.is_comparison() || self.is_logical() {
+            DType::Bool
+        } else {
+            match self {
+                // R: integer division returns double; int pow returns double
+                BinOp::Div | BinOp::Pow if !input.is_float() => DType::F64,
+                _ => {
+                    if input == DType::Bool {
+                        DType::I32
+                    } else {
+                        input
+                    }
+                }
+            }
+        }
+    }
+
+    fn f64_fn(self) -> fn(f64, f64) -> f64 {
+        match self {
+            BinOp::Add => |a, b| a + b,
+            BinOp::Sub => |a, b| a - b,
+            BinOp::Mul => |a, b| a * b,
+            BinOp::Div => |a, b| a / b,
+            BinOp::Pow => f64::powf,
+            BinOp::Min => f64::min,
+            BinOp::Max => f64::max,
+            BinOp::Eq => |a, b| (a == b) as u8 as f64,
+            BinOp::Ne => |a, b| (a != b) as u8 as f64,
+            BinOp::Lt => |a, b| (a < b) as u8 as f64,
+            BinOp::Le => |a, b| (a <= b) as u8 as f64,
+            BinOp::Gt => |a, b| (a > b) as u8 as f64,
+            BinOp::Ge => |a, b| (a >= b) as u8 as f64,
+            BinOp::And => |a, b| ((a != 0.0) && (b != 0.0)) as u8 as f64,
+            BinOp::Or => |a, b| ((a != 0.0) || (b != 0.0)) as u8 as f64,
+            BinOp::IfElse0 => |a, b| if b != 0.0 { 0.0 } else { a },
+        }
+    }
+
+    /// Vectorized elementwise apply (bVUDF1). Operands share a dtype.
+    pub fn apply_vv(self, a: &Buf, b: &Buf) -> Result<Buf> {
+        macro_rules! arith {
+            ($va:expr, $vb:expr, $ctor:path, $f:expr) => {
+                Ok($ctor($va.iter().zip($vb.iter()).map(|(x, y)| $f(*x, *y)).collect()))
+            };
+        }
+        match (self, a, b) {
+            (BinOp::Add, Buf::F64(x), Buf::F64(y)) => arith!(x, y, Buf::F64, |a: f64, b| a + b),
+            (BinOp::Sub, Buf::F64(x), Buf::F64(y)) => arith!(x, y, Buf::F64, |a: f64, b| a - b),
+            (BinOp::Mul, Buf::F64(x), Buf::F64(y)) => arith!(x, y, Buf::F64, |a: f64, b| a * b),
+            (BinOp::Div, Buf::F64(x), Buf::F64(y)) => arith!(x, y, Buf::F64, |a: f64, b| a / b),
+            (BinOp::Min, Buf::F64(x), Buf::F64(y)) => arith!(x, y, Buf::F64, f64::min),
+            (BinOp::Max, Buf::F64(x), Buf::F64(y)) => arith!(x, y, Buf::F64, f64::max),
+            (BinOp::Add, Buf::F32(x), Buf::F32(y)) => arith!(x, y, Buf::F32, |a: f32, b| a + b),
+            (BinOp::Sub, Buf::F32(x), Buf::F32(y)) => arith!(x, y, Buf::F32, |a: f32, b| a - b),
+            (BinOp::Mul, Buf::F32(x), Buf::F32(y)) => arith!(x, y, Buf::F32, |a: f32, b| a * b),
+            (BinOp::Add, Buf::I64(x), Buf::I64(y)) => arith!(x, y, Buf::I64, |a: i64, b| a + b),
+            (BinOp::Sub, Buf::I64(x), Buf::I64(y)) => arith!(x, y, Buf::I64, |a: i64, b| a - b),
+            (BinOp::Mul, Buf::I64(x), Buf::I64(y)) => arith!(x, y, Buf::I64, |a: i64, b| a * b),
+            (BinOp::Add, Buf::I32(x), Buf::I32(y)) => arith!(x, y, Buf::I32, |a: i32, b| a + b),
+            (BinOp::Lt, Buf::F64(x), Buf::F64(y)) => arith!(x, y, Buf::Bool, |a: f64, b| a < b),
+            (BinOp::Le, Buf::F64(x), Buf::F64(y)) => arith!(x, y, Buf::Bool, |a: f64, b| a <= b),
+            (BinOp::Eq, Buf::F64(x), Buf::F64(y)) => arith!(x, y, Buf::Bool, |a: f64, b| a == b),
+            (BinOp::Eq, Buf::I32(x), Buf::I32(y)) => arith!(x, y, Buf::Bool, |a: i32, b| a == b),
+            (BinOp::And, Buf::Bool(x), Buf::Bool(y)) => {
+                arith!(x, y, Buf::Bool, |a: bool, b| a && b)
+            }
+            (BinOp::Or, Buf::Bool(x), Buf::Bool(y)) => {
+                arith!(x, y, Buf::Bool, |a: bool, b| a || b)
+            }
+            (BinOp::IfElse0, Buf::F64(x), Buf::F64(y)) => {
+                arith!(x, y, Buf::F64, |a: f64, b: f64| if b != 0.0 { 0.0 } else { a })
+            }
+            _ => {
+                // generic path via f64 with a final cast
+                let out_dt = self.out_dtype(DType::promote(a.dtype(), b.dtype()));
+                let f = self.f64_fn();
+                let xa = a.to_f64_vec();
+                let xb = b.to_f64_vec();
+                let tmp: Vec<f64> = xa.iter().zip(xb.iter()).map(|(x, y)| f(*x, *y)).collect();
+                Buf::F64(tmp).cast(out_dt)
+            }
+        }
+    }
+
+    /// Vectorized broadcast apply: bVUDF2 (`side == ScalarRight`) or
+    /// bVUDF3 (`side == ScalarLeft`). `scalar` is a 1-element buffer.
+    pub fn apply_broadcast(self, v: &Buf, scalar: &Buf, side: BroadcastSide) -> Result<Buf> {
+        if scalar.len() != 1 {
+            return Err(FmError::Shape("broadcast operand must be length 1".into()));
+        }
+        macro_rules! bcast {
+            ($vv:expr, $s:expr, $ctor:path, $f:expr) => {{
+                let s = $s;
+                Ok($ctor(match side {
+                    BroadcastSide::ScalarRight => $vv.iter().map(|x| $f(*x, s)).collect(),
+                    BroadcastSide::ScalarLeft => $vv.iter().map(|x| $f(s, *x)).collect(),
+                }))
+            }};
+        }
+        match (self, v, scalar) {
+            (BinOp::Add, Buf::F64(x), Buf::F64(s)) => bcast!(x, s[0], Buf::F64, |a: f64, b| a + b),
+            (BinOp::Sub, Buf::F64(x), Buf::F64(s)) => bcast!(x, s[0], Buf::F64, |a: f64, b| a - b),
+            (BinOp::Mul, Buf::F64(x), Buf::F64(s)) => bcast!(x, s[0], Buf::F64, |a: f64, b| a * b),
+            (BinOp::Div, Buf::F64(x), Buf::F64(s)) => bcast!(x, s[0], Buf::F64, |a: f64, b| a / b),
+            (BinOp::Min, Buf::F64(x), Buf::F64(s)) => bcast!(x, s[0], Buf::F64, f64::min),
+            (BinOp::Max, Buf::F64(x), Buf::F64(s)) => bcast!(x, s[0], Buf::F64, f64::max),
+            (BinOp::Lt, Buf::F64(x), Buf::F64(s)) => bcast!(x, s[0], Buf::Bool, |a: f64, b| a < b),
+            (BinOp::Gt, Buf::F64(x), Buf::F64(s)) => bcast!(x, s[0], Buf::Bool, |a: f64, b| a > b),
+            (BinOp::Eq, Buf::I32(x), Buf::I32(s)) => bcast!(x, s[0], Buf::Bool, |a: i32, b| a == b),
+            _ => {
+                let out_dt = self.out_dtype(DType::promote(v.dtype(), scalar.dtype()));
+                let f = self.f64_fn();
+                let s = scalar.get(0).as_f64();
+                let xv = v.to_f64_vec();
+                let tmp: Vec<f64> = match side {
+                    BroadcastSide::ScalarRight => xv.iter().map(|x| f(*x, s)).collect(),
+                    BroadcastSide::ScalarLeft => xv.iter().map(|x| f(s, *x)).collect(),
+                };
+                Buf::F64(tmp).cast(out_dt)
+            }
+        }
+    }
+
+    /// Per-element boxed-call elementwise mode.
+    pub fn apply_vv_scalar_mode(self, a: &Buf, b: &Buf) -> Result<Buf> {
+        let out_dt = self.out_dtype(DType::promote(a.dtype(), b.dtype()));
+        let f = black_box(self.f64_fn());
+        let mut out = Buf::alloc(out_dt, a.len());
+        for i in 0..a.len() {
+            let x = black_box(a.get(i).as_f64());
+            let y = black_box(b.get(i).as_f64());
+            out.set(i, Scalar::F64(f(x, y)));
+        }
+        Ok(out)
+    }
+
+    /// Per-element boxed-call broadcast mode.
+    pub fn apply_broadcast_scalar_mode(
+        self,
+        v: &Buf,
+        scalar: &Buf,
+        side: BroadcastSide,
+    ) -> Result<Buf> {
+        let out_dt = self.out_dtype(DType::promote(v.dtype(), scalar.dtype()));
+        let f = black_box(self.f64_fn());
+        let s = scalar.get(0).as_f64();
+        let mut out = Buf::alloc(out_dt, v.len());
+        for i in 0..v.len() {
+            let x = black_box(v.get(i).as_f64());
+            let r = match side {
+                BroadcastSide::ScalarRight => f(x, s),
+                BroadcastSide::ScalarLeft => f(s, x),
+            };
+            out.set(i, Scalar::F64(r));
+        }
+        Ok(out)
+    }
+}
+
+/// Aggregation built-ins (aVUDF pairs: `aggregate` + `combine`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AggOp {
+    Sum,
+    Prod,
+    Min,
+    Max,
+    /// number of elements (combine = Sum)
+    Count,
+    Any,
+    All,
+}
+
+impl AggOp {
+    /// Accumulator dtype for a given input dtype.
+    pub fn acc_dtype(self, input: DType) -> DType {
+        match self {
+            AggOp::Count => DType::I64,
+            AggOp::Any | AggOp::All => DType::Bool,
+            AggOp::Sum | AggOp::Prod => {
+                if input == DType::Bool {
+                    DType::I64
+                } else {
+                    input
+                }
+            }
+            AggOp::Min | AggOp::Max => input,
+        }
+    }
+
+    /// Identity element of the accumulator.
+    pub fn identity(self, acc_dt: DType) -> Scalar {
+        match self {
+            AggOp::Sum | AggOp::Count => Scalar::F64(0.0).cast(acc_dt),
+            AggOp::Prod => Scalar::F64(1.0).cast(acc_dt),
+            AggOp::Min => match acc_dt {
+                DType::F64 => Scalar::F64(f64::INFINITY),
+                DType::F32 => Scalar::F32(f32::INFINITY),
+                DType::I64 => Scalar::I64(i64::MAX),
+                DType::I32 => Scalar::I32(i32::MAX),
+                DType::Bool => Scalar::Bool(true),
+            },
+            AggOp::Max => match acc_dt {
+                DType::F64 => Scalar::F64(f64::NEG_INFINITY),
+                DType::F32 => Scalar::F32(f32::NEG_INFINITY),
+                DType::I64 => Scalar::I64(i64::MIN),
+                DType::I32 => Scalar::I32(i32::MIN),
+                DType::Bool => Scalar::Bool(false),
+            },
+            AggOp::Any => Scalar::Bool(false),
+            AggOp::All => Scalar::Bool(true),
+        }
+    }
+
+    /// The `combine` half as a scalar fold (merging partials).
+    pub fn fold_scalar(self, acc: Scalar, x: Scalar) -> Scalar {
+        let dt = acc.dtype();
+        match self {
+            AggOp::Sum | AggOp::Count => Scalar::F64(acc.as_f64() + x.as_f64()).cast(dt),
+            AggOp::Prod => Scalar::F64(acc.as_f64() * x.as_f64()).cast(dt),
+            AggOp::Min => {
+                if x.as_f64() < acc.as_f64() {
+                    x.cast(dt)
+                } else {
+                    acc
+                }
+            }
+            AggOp::Max => {
+                if x.as_f64() > acc.as_f64() {
+                    x.cast(dt)
+                } else {
+                    acc
+                }
+            }
+            AggOp::Any => Scalar::Bool(acc.as_bool() || x.as_bool()),
+            AggOp::All => Scalar::Bool(acc.as_bool() && x.as_bool()),
+        }
+    }
+
+    /// aVUDF1: reduce a vector to one scalar (in the accumulator dtype).
+    pub fn reduce(self, a: &Buf) -> Scalar {
+        let acc_dt = self.acc_dtype(a.dtype());
+        match (self, a) {
+            // hot monomorphic loops: the compiler turns these into SIMD
+            // reductions (the paper's manually-flattened reduction vector)
+            (AggOp::Sum, Buf::F64(v)) => Scalar::F64(v.iter().sum()),
+            (AggOp::Min, Buf::F64(v)) => Scalar::F64(v.iter().copied().fold(f64::INFINITY, f64::min)),
+            (AggOp::Max, Buf::F64(v)) => {
+                Scalar::F64(v.iter().copied().fold(f64::NEG_INFINITY, f64::max))
+            }
+            (AggOp::Sum, Buf::F32(v)) => Scalar::F32(v.iter().sum()),
+            (AggOp::Sum, Buf::I64(v)) => Scalar::I64(v.iter().sum()),
+            (AggOp::Sum, Buf::I32(v)) => Scalar::I32(v.iter().sum()),
+            (AggOp::Count, _) => Scalar::I64(a.len() as i64),
+            (AggOp::Any, Buf::Bool(v)) => Scalar::Bool(v.iter().any(|x| *x)),
+            (AggOp::All, Buf::Bool(v)) => Scalar::Bool(v.iter().all(|x| *x)),
+            _ => {
+                let mut acc = self.identity(acc_dt);
+                for i in 0..a.len() {
+                    acc = self.fold_scalar(acc, a.get(i));
+                }
+                acc
+            }
+        }
+    }
+
+    /// aVUDF1 in per-element boxed-call mode.
+    pub fn reduce_scalar_mode(self, a: &Buf) -> Scalar {
+        let acc_dt = self.acc_dtype(a.dtype());
+        let mut acc = self.identity(acc_dt);
+        for i in 0..a.len() {
+            acc = black_box(self.fold_scalar(black_box(acc), black_box(a.get(i))));
+        }
+        acc
+    }
+
+    /// aVUDF2: elementwise combine of two partial-accumulator vectors.
+    pub fn combine(self, acc: &mut Buf, x: &Buf) -> Result<()> {
+        if acc.len() != x.len() {
+            return Err(FmError::Shape(format!(
+                "combine length mismatch: {} vs {}",
+                acc.len(),
+                x.len()
+            )));
+        }
+        match (self, acc, x) {
+            (AggOp::Sum | AggOp::Count, Buf::F64(a), Buf::F64(b)) => {
+                for (o, v) in a.iter_mut().zip(b) {
+                    *o += v;
+                }
+            }
+            (AggOp::Min, Buf::F64(a), Buf::F64(b)) => {
+                for (o, v) in a.iter_mut().zip(b) {
+                    *o = o.min(*v);
+                }
+            }
+            (AggOp::Max, Buf::F64(a), Buf::F64(b)) => {
+                for (o, v) in a.iter_mut().zip(b) {
+                    *o = o.max(*v);
+                }
+            }
+            (AggOp::Sum | AggOp::Count, Buf::I64(a), Buf::I64(b)) => {
+                for (o, v) in a.iter_mut().zip(b) {
+                    *o += v;
+                }
+            }
+            (op, acc, x) => {
+                for i in 0..x.len() {
+                    let folded = op.fold_scalar(acc.get(i), x.get(i));
+                    acc.set(i, folded);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn out_dtypes() {
+        assert_eq!(BinOp::Lt.out_dtype(DType::F64), DType::Bool);
+        assert_eq!(BinOp::Div.out_dtype(DType::I64), DType::F64);
+        assert_eq!(BinOp::Add.out_dtype(DType::Bool), DType::I32);
+        assert_eq!(UnOp::Sqrt.out_dtype(DType::I32), DType::F64);
+        assert_eq!(UnOp::NotZero.out_dtype(DType::F64), DType::Bool);
+    }
+
+    #[test]
+    fn reduce_matches_fold() {
+        let v = Buf::from_f64(&[3.0, -1.0, 7.0, 2.0]);
+        for op in [AggOp::Sum, AggOp::Prod, AggOp::Min, AggOp::Max] {
+            let fast = op.reduce(&v);
+            let slow = op.reduce_scalar_mode(&v);
+            assert_eq!(fast, slow, "{op:?}");
+        }
+        assert_eq!(AggOp::Sum.reduce(&v), Scalar::F64(11.0));
+        assert_eq!(AggOp::Min.reduce(&v), Scalar::F64(-1.0));
+        assert_eq!(AggOp::Count.reduce(&v), Scalar::I64(4));
+    }
+
+    #[test]
+    fn combine_merges_partials() {
+        let mut acc = Buf::from_f64(&[1.0, 5.0]);
+        AggOp::Min.combine(&mut acc, &Buf::from_f64(&[3.0, 2.0])).unwrap();
+        assert_eq!(acc.to_f64_vec(), vec![1.0, 2.0]);
+        let mut acc = Buf::from_f64(&[1.0, 5.0]);
+        AggOp::Sum.combine(&mut acc, &Buf::from_f64(&[3.0, 2.0])).unwrap();
+        assert_eq!(acc.to_f64_vec(), vec![4.0, 7.0]);
+    }
+
+    #[test]
+    fn sum_of_bool_counts_trues() {
+        let v = Buf::Bool(vec![true, false, true, true]);
+        assert_eq!(AggOp::Sum.reduce(&v), Scalar::I64(3));
+    }
+
+    #[test]
+    fn ifelse0_masks() {
+        let a = Buf::from_f64(&[1.0, 2.0, 3.0]);
+        let m = Buf::from_f64(&[0.0, 1.0, 0.0]);
+        let r = BinOp::IfElse0.apply_vv(&a, &m).unwrap();
+        assert_eq!(r.to_f64_vec(), vec![1.0, 0.0, 3.0]);
+    }
+
+    #[test]
+    fn identities_are_neutral() {
+        let v = Buf::from_f64(&[2.5, -3.0]);
+        for op in [AggOp::Sum, AggOp::Prod, AggOp::Min, AggOp::Max] {
+            let acc_dt = op.acc_dtype(DType::F64);
+            let id = op.identity(acc_dt);
+            let r = op.fold_scalar(id, Scalar::F64(2.5));
+            assert_eq!(r, Scalar::F64(2.5), "{op:?}");
+        }
+        let _ = v;
+    }
+}

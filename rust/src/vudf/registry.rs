@@ -1,0 +1,117 @@
+//! User-extensible VUDF registry (paper §III-D: "FlashMatrix allows
+//! programmers to extend the framework by registering new VUDFs").
+//!
+//! Built-in operations are enum-dispatched for speed; *custom* VUDFs are
+//! trait objects registered by name. Like the paper's C/C++ VUDFs, a custom
+//! VUDF must supply the vectorized forms it supports; GenOps look the name
+//! up at DAG-build time and call the matching form per CPU-partition.
+
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+
+use crate::dtype::{DType, Scalar};
+use crate::error::{FmError, Result};
+
+use super::buf::Buf;
+
+/// A user-registered vectorized function. Implementations provide whichever
+/// forms they support; unsupported forms default to an error so the GenOp
+/// layer can report a clear message.
+pub trait CustomVudf: Send + Sync {
+    /// Name used to look the VUDF up from `fmr`.
+    fn name(&self) -> &str;
+
+    /// Output dtype given input dtype(s).
+    fn out_dtype(&self, input: DType) -> DType;
+
+    /// uVUDF form.
+    fn unary(&self, _a: &Buf) -> Result<Buf> {
+        Err(FmError::Unsupported(format!(
+            "VUDF '{}' has no unary form",
+            self.name()
+        )))
+    }
+
+    /// bVUDF1 form.
+    fn binary_vv(&self, _a: &Buf, _b: &Buf) -> Result<Buf> {
+        Err(FmError::Unsupported(format!(
+            "VUDF '{}' has no binary form",
+            self.name()
+        )))
+    }
+
+    /// aVUDF1 form (aggregate).
+    fn aggregate(&self, _a: &Buf) -> Result<Scalar> {
+        Err(FmError::Unsupported(format!(
+            "VUDF '{}' has no aggregate form",
+            self.name()
+        )))
+    }
+
+    /// aVUDF2 form (combine partials); defaults to aggregate-compatible
+    /// error.
+    fn combine(&self, _acc: &mut Buf, _x: &Buf) -> Result<()> {
+        Err(FmError::Unsupported(format!(
+            "VUDF '{}' has no combine form",
+            self.name()
+        )))
+    }
+}
+
+/// Thread-safe name -> VUDF map owned by the engine.
+#[derive(Default)]
+pub struct VudfRegistry {
+    map: RwLock<HashMap<String, Arc<dyn CustomVudf>>>,
+}
+
+impl VudfRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register (or replace) a VUDF under its own name.
+    pub fn register(&self, v: Arc<dyn CustomVudf>) {
+        self.map.write().unwrap().insert(v.name().to_string(), v);
+    }
+
+    pub fn lookup(&self, name: &str) -> Option<Arc<dyn CustomVudf>> {
+        self.map.read().unwrap().get(name).cloned()
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<_> = self.map.read().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Clamp01;
+    impl CustomVudf for Clamp01 {
+        fn name(&self) -> &str {
+            "clamp01"
+        }
+        fn out_dtype(&self, input: DType) -> DType {
+            input
+        }
+        fn unary(&self, a: &Buf) -> Result<Buf> {
+            let v: Vec<f64> = a.to_f64_vec().iter().map(|x| x.clamp(0.0, 1.0)).collect();
+            Buf::F64(v).cast(a.dtype())
+        }
+    }
+
+    #[test]
+    fn register_and_call() {
+        let reg = VudfRegistry::new();
+        reg.register(Arc::new(Clamp01));
+        let f = reg.lookup("clamp01").unwrap();
+        let out = f.unary(&Buf::from_f64(&[-1.0, 0.5, 2.0])).unwrap();
+        assert_eq!(out.to_f64_vec(), vec![0.0, 0.5, 1.0]);
+        assert!(f.binary_vv(&out, &out).is_err()); // unsupported form
+        assert_eq!(reg.names(), vec!["clamp01"]);
+        assert!(reg.lookup("nope").is_none());
+    }
+}

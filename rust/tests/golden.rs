@@ -1,0 +1,207 @@
+//! Golden-fixture tests: the Rust engine vs the JAX oracle.
+//!
+//! `python/tests/test_golden.py` generates a deterministic input matrix
+//! (SplitMix64 stream) and stores the oracle outputs of every algorithm
+//! step as JSON. Here the SAME matrix is regenerated from the seed
+//! (datasets::golden_uniform shares the generator) and pushed through
+//! (a) the native per-partition steps and (b) the full GenOp algorithms;
+//! both must match the JAX numbers. This pins all three layers to one
+//! spec.
+
+use flashmatrix::algs::steps;
+use flashmatrix::config::EngineConfig;
+use flashmatrix::datasets;
+use flashmatrix::fmr::Engine;
+use flashmatrix::matrix::HostMat;
+use flashmatrix::util::json::Json;
+use flashmatrix::vudf::{AggOp, BinOp};
+
+const TOL: f64 = 1e-9;
+
+fn load_fixture() -> Json {
+    let path = std::path::Path::new("python/tests/golden/steps_256x8.json");
+    assert!(
+        path.exists(),
+        "golden fixture missing — run `pytest python/tests` first"
+    );
+    Json::parse(&std::fs::read_to_string(path).unwrap()).unwrap()
+}
+
+fn close(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what} length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() < TOL * x.abs().max(1.0),
+            "{what}[{i}]: rust {x} vs jax {y}"
+        );
+    }
+}
+
+struct Fixture {
+    j: Json,
+    eng: std::sync::Arc<Engine>,
+    x: flashmatrix::fmr::FmMatrix,
+    c: HostMat,
+    rows: usize,
+    p: usize,
+    k: usize,
+}
+
+fn setup() -> Fixture {
+    let j = load_fixture();
+    let rows = j.get("rows").unwrap().as_usize().unwrap();
+    let p = j.get("p").unwrap().as_usize().unwrap();
+    let k = j.get("k").unwrap().as_usize().unwrap();
+    let x_seed = j.get("x_seed").unwrap().as_u64().unwrap();
+    let c_seed = j.get("c_seed").unwrap().as_u64().unwrap();
+    let scale = j.get("x_scale").unwrap().as_f64().unwrap();
+    let shift = j.get("x_shift").unwrap().as_f64().unwrap();
+    let clip = j.get("zero_clip").unwrap().as_f64().unwrap();
+
+    let eng = Engine::new(EngineConfig {
+        xla_dispatch: false,
+        chunk_bytes: 1 << 20,
+        target_part_bytes: 1 << 20,
+        ..Default::default()
+    })
+    .unwrap();
+    let x = datasets::golden_uniform(&eng, rows as u64, p as u64, x_seed, scale, shift, clip)
+        .unwrap();
+    // centroids: same stream convention, no clipping
+    let cfm = datasets::golden_uniform(&eng, k as u64, p as u64, c_seed, scale, shift, 0.0)
+        .unwrap();
+    let c = cfm.to_host().unwrap();
+    Fixture {
+        j,
+        eng,
+        x,
+        c,
+        rows,
+        p,
+        k,
+    }
+}
+
+#[test]
+fn native_steps_match_jax_oracle() {
+    let f = setup();
+    let d = match &*f.x.m.data {
+        flashmatrix::matrix::MatrixData::Dense(d) => d,
+        _ => panic!("dense expected"),
+    };
+    assert_eq!(d.parts.n_parts(), 1, "fixture fits one partition");
+    let buf = d.partition_buf(0).unwrap();
+
+    // colstats
+    let got = steps::colstats_native(&buf, f.rows, f.p).unwrap();
+    let want = f.j.get("colstats").unwrap().f64_vec().unwrap();
+    close(&got, &want, "colstats");
+
+    // kmeans step
+    let (sums, counts, wcss, assign) =
+        steps::kmeans_step_native(&buf, f.rows, f.p, &f.c).unwrap();
+    let km = f.j.get("kmeans").unwrap();
+    close(&sums, &km.get("sums").unwrap().f64_vec().unwrap(), "kmeans sums");
+    close(&counts, &km.get("counts").unwrap().f64_vec().unwrap(), "kmeans counts");
+    assert!((wcss - km.get("wcss").unwrap().as_f64().unwrap()).abs() < 1e-8);
+    let want_assign = km.get("assign").unwrap().f64_vec().unwrap();
+    for (i, (a, b)) in assign.iter().zip(&want_assign).enumerate() {
+        assert_eq!(*a as f64, *b, "assign[{i}]");
+    }
+
+    // gramian
+    let (xtx, cs) = steps::gramian_native(&buf, f.rows, f.p).unwrap();
+    let gr = f.j.get("gramian").unwrap();
+    close(&xtx, &gr.get("xtx").unwrap().f64_vec().unwrap(), "xtx");
+    close(&cs, &gr.get("colsums").unwrap().f64_vec().unwrap(), "colsums");
+    let mu: Vec<f64> = cs.iter().map(|s| s / f.rows as f64).collect();
+    let xtxc = steps::gramian_centered_native(&buf, f.rows, f.p, &mu).unwrap();
+    close(&xtxc, &gr.get("xtx_centered").unwrap().f64_vec().unwrap(), "xtx centered");
+
+    // gmm e-step (identity*1.25 precisions, uniform weights — as in the fixture)
+    let prec_diag = f.j.get("gmm_prec_diag").unwrap().as_f64().unwrap();
+    let mut prec = vec![0.0; f.k * f.p * f.p];
+    for c in 0..f.k {
+        for i in 0..f.p {
+            prec[c * f.p * f.p + i * f.p + i] = prec_diag;
+        }
+    }
+    let logdet = vec![f.p as f64 * prec_diag.ln(); f.k];
+    let logw = vec![(1.0 / f.k as f64).ln(); f.k];
+    let (nk, sk, ssk, ll) = steps::gmm_estep_native(
+        &buf,
+        f.rows,
+        f.p,
+        &f.c.to_row_major_f64(),
+        &prec,
+        &logdet,
+        &logw,
+    )
+    .unwrap();
+    let gm = f.j.get("gmm").unwrap();
+    close(&nk, &gm.get("nk").unwrap().f64_vec().unwrap(), "gmm nk");
+    close(&sk, &gm.get("sk").unwrap().f64_vec().unwrap(), "gmm sk");
+    close(&ssk, &gm.get("ssk").unwrap().f64_vec().unwrap(), "gmm ssk");
+    assert!((ll - gm.get("loglik").unwrap().as_f64().unwrap()).abs() < 1e-8);
+}
+
+#[test]
+fn genop_pipeline_matches_jax_oracle() {
+    let f = setup();
+
+    // colstats via six fused agg.col sinks
+    let s = flashmatrix::algs::summary(&f.x).unwrap();
+    let want = f.j.get("colstats").unwrap().f64_vec().unwrap();
+    let p = f.p;
+    close(&s.min, &want[0..p], "genop min");
+    close(&s.max, &want[p..2 * p], "genop max");
+    let sums: Vec<f64> = s.mean.iter().map(|m| m * f.rows as f64).collect();
+    close(&sums, &want[2 * p..3 * p], "genop colsums");
+    close(&s.nnz, &want[5 * p..6 * p], "genop nnz");
+
+    // one k-means GenOp step: distances + argmin + groupby in one pass
+    let km = f.j.get("kmeans").unwrap();
+    // build the same distance expression kmeans::step_genop uses
+    let mut ct2 = HostMat::zeros(p, f.k, flashmatrix::dtype::DType::F64);
+    let mut c2 = HostMat::zeros(1, f.k, flashmatrix::dtype::DType::F64);
+    for ci in 0..f.k {
+        let mut acc = 0.0;
+        for j in 0..p {
+            let v = f.c.get(ci, j).as_f64();
+            ct2.set(j, ci, flashmatrix::dtype::Scalar::F64(-2.0 * v));
+            acc += v * v;
+        }
+        c2.set(0, ci, flashmatrix::dtype::Scalar::F64(acc));
+    }
+    let x2 = f.x.sq().unwrap().row_sums().unwrap();
+    let dmat = f
+        .x
+        .inner_prod_small(&ct2, BinOp::Mul, AggOp::Sum)
+        .unwrap()
+        .mapply_row(&c2, BinOp::Add)
+        .unwrap()
+        .mapply_col(&x2, BinOp::Add)
+        .unwrap();
+    let labels = dmat
+        .which_min_row()
+        .unwrap()
+        .mapply_scalar(flashmatrix::dtype::Scalar::I32(1), BinOp::Sub, true)
+        .unwrap();
+    let gsums = f.x.groupby_row(&labels, f.k, AggOp::Sum).unwrap();
+    close(
+        &gsums.to_row_major_f64(),
+        &km.get("sums").unwrap().f64_vec().unwrap(),
+        "genop kmeans sums",
+    );
+    let wcss = dmat.agg_row(AggOp::Min).unwrap().sum().unwrap();
+    assert!((wcss - km.get("wcss").unwrap().as_f64().unwrap()).abs() < 1e-7);
+
+    // gramian via the wide×tall inner product
+    let g = f.x.crossprod(&f.x).unwrap();
+    close(
+        &g.to_row_major_f64(),
+        &f.j.get("gramian").unwrap().get("xtx").unwrap().f64_vec().unwrap(),
+        "genop gramian",
+    );
+    let _ = &f.eng;
+}

@@ -1,0 +1,257 @@
+//! Cross-module integration tests: the same computation must produce
+//! identical results across every engine configuration the paper
+//! compares — in-memory vs external-memory, fused vs eager, vectorized vs
+//! per-element UDFs, 1 thread vs many, XLA-dispatched vs native.
+
+use std::sync::Arc;
+
+use flashmatrix::config::{EngineConfig, StorageKind, ThrottleConfig};
+use flashmatrix::datasets;
+use flashmatrix::fmr::{Engine, FmMatrix};
+use flashmatrix::vudf::AggOp;
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let p = std::env::temp_dir().join(format!("fm-it-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&p).unwrap();
+    p
+}
+
+fn cfg_im() -> EngineConfig {
+    EngineConfig {
+        xla_dispatch: false,
+        chunk_bytes: 4 << 20,
+        target_part_bytes: 1 << 20,
+        ..Default::default()
+    }
+}
+
+fn cfg_em(tag: &str) -> EngineConfig {
+    EngineConfig {
+        storage: StorageKind::External,
+        data_dir: tmpdir(tag),
+        ..cfg_im()
+    }
+}
+
+/// Run one pipeline under a config, returning a fingerprint of results.
+fn pipeline_fingerprint(cfg: EngineConfig) -> Vec<f64> {
+    let eng = Engine::new(cfg).unwrap();
+    let x = datasets::uniform(&eng, 50_000, 6, -2.0, 2.0, 31, None).unwrap();
+    // expression mixing sapply/mapply/rowagg/colagg/groupby/inner
+    let y = x.abs().unwrap().add(&x.sq().unwrap()).unwrap();
+    let s1 = y.sum().unwrap();
+    let rs = y.row_sums().unwrap();
+    let s2 = rs.max().unwrap();
+    let cs = y.col_sums().unwrap().buf.to_f64_vec();
+    let labels = x
+        .col(0)
+        .unwrap()
+        .mapply_scalar(flashmatrix::dtype::Scalar::F64(0.0), flashmatrix::vudf::BinOp::Gt, true)
+        .unwrap()
+        .cast(flashmatrix::dtype::DType::I32)
+        .unwrap();
+    let g = y.groupby_row(&labels, 2, AggOp::Sum).unwrap();
+    let gram = x.crossprod(&x).unwrap();
+    let mut out = vec![s1, s2];
+    out.extend(cs);
+    out.extend(g.buf.to_f64_vec());
+    out.extend(gram.buf.to_f64_vec());
+    out
+}
+
+fn assert_close(a: &[f64], b: &[f64], tol: f64, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let scale = x.abs().max(1.0);
+        assert!(
+            (x - y).abs() / scale < tol,
+            "{what}[{i}]: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn em_equals_im() {
+    let im = pipeline_fingerprint(cfg_im());
+    let em = pipeline_fingerprint(cfg_em("emim"));
+    assert_close(&im, &em, 1e-12, "EM vs IM");
+}
+
+#[test]
+fn eager_equals_fused() {
+    let fused = pipeline_fingerprint(cfg_im());
+    let eager = pipeline_fingerprint(EngineConfig {
+        fuse_mem: false,
+        fuse_cache: false,
+        ..cfg_im()
+    });
+    assert_close(&fused, &eager, 1e-12, "eager vs fused");
+    let no_cache_fuse = pipeline_fingerprint(EngineConfig {
+        fuse_cache: false,
+        ..cfg_im()
+    });
+    assert_close(&fused, &no_cache_fuse, 1e-12, "mem-fuse-only vs fused");
+}
+
+#[test]
+fn scalar_udf_equals_vectorized() {
+    let v = pipeline_fingerprint(cfg_im());
+    let s = pipeline_fingerprint(EngineConfig {
+        vectorized_udf: false,
+        ..cfg_im()
+    });
+    assert_close(&v, &s, 1e-12, "scalar-mode vs vectorized");
+}
+
+#[test]
+fn thread_count_invariance() {
+    let t1 = pipeline_fingerprint(EngineConfig {
+        threads: 1,
+        ..cfg_im()
+    });
+    let t4 = pipeline_fingerprint(EngineConfig {
+        threads: 4,
+        ..cfg_im()
+    });
+    // partial-agg merge order may differ: tolerate fp reassociation
+    assert_close(&t1, &t4, 1e-9, "1 vs 4 threads");
+}
+
+#[test]
+fn throttled_em_still_correct() {
+    let mut cfg = cfg_em("throttle");
+    cfg.throttle = Some(ThrottleConfig {
+        read_bytes_per_sec: 200 << 20,
+        write_bytes_per_sec: 200 << 20,
+    });
+    let em = pipeline_fingerprint(cfg);
+    let im = pipeline_fingerprint(cfg_im());
+    assert_close(&im, &em, 1e-12, "throttled EM vs IM");
+}
+
+#[test]
+fn em_cache_cols_preserves_results() {
+    let mut cfg = cfg_em("cache");
+    cfg.em_cache_cols = 3; // cache half the columns
+    let em = pipeline_fingerprint(cfg);
+    let im = pipeline_fingerprint(cfg_im());
+    assert_close(&im, &em, 1e-12, "cached EM vs IM");
+}
+
+#[test]
+fn algorithms_agree_across_storage() {
+    for (tag, mk) in [
+        ("alg-im", None),
+        ("alg-em", Some("em")),
+    ] {
+        let cfg = match mk {
+            None => cfg_im(),
+            Some(_) => cfg_em(tag),
+        };
+        let eng = Engine::new(cfg).unwrap();
+        let (x, _) = datasets::mix_gaussian(&eng, 30_000, 8, 4, 8.0, 3, None).unwrap();
+        let km = flashmatrix::algs::kmeans(&x, 4, 3, 1).unwrap();
+        let sm = flashmatrix::algs::summary(&x).unwrap();
+        // deterministic across storage: same seeds, same math
+        // (values pinned by the IM run in the first loop iteration)
+        if tag == "alg-im" {
+            std::env::set_var("FM_TEST_WCSS", format!("{:.12e}", km.wcss[2]));
+            std::env::set_var("FM_TEST_MEAN0", format!("{:.12e}", sm.mean[0]));
+        } else {
+            let w: f64 = std::env::var("FM_TEST_WCSS").unwrap().parse().unwrap();
+            let m: f64 = std::env::var("FM_TEST_MEAN0").unwrap().parse().unwrap();
+            assert!((km.wcss[2] - w).abs() / w < 1e-10);
+            assert!((sm.mean[0] - m).abs() < 1e-10);
+        }
+    }
+}
+
+#[test]
+fn groupby_with_virtual_labels_fuses() {
+    // k-means-shaped one-pass: labels computed in the same pass as the
+    // grouped aggregation (the paper's flagship fusion)
+    let eng: Arc<Engine> = Engine::new(cfg_im()).unwrap();
+    let x = datasets::uniform(&eng, 20_000, 3, 0.0, 1.0, 5, None).unwrap();
+    let labels = x
+        .row_sums()
+        .unwrap()
+        .mapply_scalar(flashmatrix::dtype::Scalar::F64(1.5), flashmatrix::vudf::BinOp::Gt, true)
+        .unwrap()
+        .cast(flashmatrix::dtype::DType::I32)
+        .unwrap();
+    let sums = x.groupby_row(&labels, 2, AggOp::Sum).unwrap();
+    let total: f64 = sums.buf.to_f64_vec().iter().sum();
+    let expect = x.sum().unwrap();
+    assert!((total - expect).abs() / expect < 1e-10);
+}
+
+#[test]
+fn chunk_recycling_observable() {
+    let cfg = cfg_im();
+    let eng = Engine::new(cfg).unwrap();
+    // create + drop matrices; chunks must be reused
+    for _ in 0..3 {
+        let x = datasets::uniform(&eng, 200_000, 4, 0.0, 1.0, 1, None).unwrap();
+        let _ = x.sum().unwrap();
+        drop(x);
+    }
+    let m = eng.metrics.snapshot();
+    assert!(
+        m.chunks_recycled > 0,
+        "expected chunk reuse, got {m:?}"
+    );
+}
+
+#[test]
+fn wide_view_operations() {
+    let eng = Engine::new(cfg_im()).unwrap();
+    let h = flashmatrix::matrix::HostMat::from_rows_f64(&[
+        vec![1.0, 2.0, 3.0],
+        vec![4.0, 5.0, 6.0],
+    ]);
+    let a = FmMatrix::from_host(&eng, &h).unwrap(); // 2x3
+    let w = a.t(); // 3x2 view... wait: a is 2x3, t is 3x2
+    // agg.row over the wide view == agg.col over the base
+    let rs = w.agg_row(AggOp::Sum).unwrap().to_host().unwrap();
+    assert_eq!(rs.buf.to_f64_vec(), vec![5.0, 7.0, 9.0]);
+    // export of the transposed view
+    let ht = w.to_host().unwrap();
+    assert_eq!(ht.nrow, 3);
+    assert_eq!(ht.get(2, 1).as_f64(), 6.0);
+}
+
+#[test]
+fn conv_store_roundtrips_between_storages() {
+    let eng = Engine::new(cfg_em("convstore")).unwrap();
+    let x = datasets::uniform(&eng, 40_000, 4, -1.0, 1.0, 17, None).unwrap();
+    let sum_em = x.sum().unwrap();
+    // move SSD -> memory and back; values identical
+    let x_im = x.conv_store(flashmatrix::StorageKind::InMem).unwrap();
+    assert_eq!(x_im.sum().unwrap(), sum_em);
+    let x_em2 = x_im.conv_store(flashmatrix::StorageKind::External).unwrap();
+    assert_eq!(x_em2.sum().unwrap(), sum_em);
+    assert!(eng.metrics.snapshot().io_write_bytes > 0);
+}
+
+#[test]
+fn group_of_matrices_behaves_as_wider_matrix() {
+    let eng = Engine::new(cfg_im()).unwrap();
+    let a = datasets::uniform(&eng, 30_000, 3, 0.0, 1.0, 1, None).unwrap();
+    let b = datasets::uniform(&eng, 30_000, 2, -1.0, 0.0, 2, None).unwrap();
+    let g = FmMatrix::group(&eng, &[&a, &b]).unwrap();
+    assert_eq!(g.ncol(), 5);
+    // colSums of the group == concatenated member colSums
+    let gc = g.col_sums().unwrap().buf.to_f64_vec();
+    let mut want = a.col_sums().unwrap().buf.to_f64_vec();
+    want.extend(b.col_sums().unwrap().buf.to_f64_vec());
+    for (x, y) in gc.iter().zip(&want) {
+        assert!((x - y).abs() < 1e-9, "{x} vs {y}");
+    }
+    // elementwise op on the group fuses like a normal matrix
+    let s = g.sq().unwrap().sum().unwrap();
+    let want = a.sq().unwrap().sum().unwrap() + b.sq().unwrap().sum().unwrap();
+    assert!((s - want).abs() / want < 1e-12);
+    // groups decompose for mixed-shape members only when nrow matches
+    let c = datasets::uniform(&eng, 10, 1, 0.0, 1.0, 3, None).unwrap();
+    assert!(FmMatrix::group(&eng, &[&a, &c]).is_err());
+}

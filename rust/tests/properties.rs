@@ -1,0 +1,273 @@
+//! Property-based tests on engine invariants (util::quickcheck generators;
+//! a proptest substitute — see Cargo.toml header note).
+//!
+//! Each property runs across dozens of generated shapes/seeds/configs and
+//! checks the engine against a straightforward host-side oracle.
+
+use flashmatrix::config::EngineConfig;
+use flashmatrix::datasets;
+use flashmatrix::dtype::{DType, Scalar};
+use flashmatrix::fmr::{Engine, FmMatrix};
+use flashmatrix::matrix::{io_rows_for, HostMat, Partitioning};
+use flashmatrix::util::quickcheck::forall;
+use flashmatrix::vudf::{AggOp, BinOp, UnOp};
+
+fn eng_with(threads: usize, fuse: bool) -> std::sync::Arc<Engine> {
+    Engine::new(EngineConfig {
+        threads,
+        fuse_mem: fuse,
+        fuse_cache: fuse,
+        xla_dispatch: false,
+        chunk_bytes: 1 << 20,
+        target_part_bytes: 1 << 18,
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+/// Host-side oracle matrix mirroring datasets::uniform.
+fn host_uniform(n: usize, p: usize, lo: f64, hi: f64, seed: u64) -> Vec<Vec<f64>> {
+    (0..n)
+        .map(|r| {
+            (0..p)
+                .map(|c| {
+                    lo + (hi - lo)
+                        * flashmatrix::exec::u64_to_unit_f64(flashmatrix::exec::splitmix64_at(
+                            seed,
+                            (r * p + c) as u64,
+                        ))
+                })
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn prop_partitioning_covers_and_nests() {
+    forall(200, |g| {
+        let nrow = g.usize_in(1, 500_000) as u64;
+        let ncol = g.usize_in(1, 600) as u64;
+        let parts = Partitioning::new(nrow, ncol);
+        if !parts.io_rows.is_power_of_two() {
+            return Err(format!("io_rows {} not pow2", parts.io_rows));
+        }
+        let mut covered = 0u64;
+        for i in 0..parts.n_parts() {
+            let (s, e) = parts.part_rows(i);
+            if s != covered || e <= s {
+                return Err(format!("gap at partition {i}: [{s},{e}) after {covered}"));
+            }
+            covered = e;
+            // cpu ranges tile the partition exactly
+            let mut local = 0;
+            for (a, b) in parts.cpu_ranges(i, 64 << 10) {
+                if a != local || b <= a {
+                    return Err(format!("cpu strip gap {a}..{b} after {local}"));
+                }
+                local = b;
+            }
+            if local != parts.rows_in(i) {
+                return Err("cpu strips do not cover partition".into());
+            }
+        }
+        if covered != nrow {
+            return Err(format!("covered {covered} != {nrow}"));
+        }
+        // nesting: any narrower matrix's partitions nest within wider ones
+        let r1 = io_rows_for(ncol);
+        let r2 = io_rows_for(ncol * 2);
+        if r1 % r2.min(r1) != 0 || r2 % r1.min(r2) != 0 {
+            return Err(format!("io rows {r1}/{r2} do not nest"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_elementwise_matches_oracle() {
+    forall(25, |g| {
+        let n = g.usize_in(100, 5000);
+        let p = g.usize_in(1, 7);
+        let seed = g.u64();
+        let threads = g.usize_in(1, 3);
+        let fuse = g.bool();
+        let eng = eng_with(threads, fuse);
+        let x = datasets::uniform(&eng, n as u64, p as u64, -2.0, 2.0, seed, None).unwrap();
+        let oracle = host_uniform(n, p, -2.0, 2.0, seed);
+
+        let op = *g.choose(&[UnOp::Abs, UnOp::Sq, UnOp::Neg, UnOp::Exp]);
+        let sf = |v: f64| match op {
+            UnOp::Abs => v.abs(),
+            UnOp::Sq => v * v,
+            UnOp::Neg => -v,
+            UnOp::Exp => v.exp(),
+            _ => unreachable!(),
+        };
+        let got = x.sapply(op).unwrap().sum().unwrap();
+        let want: f64 = oracle.iter().flatten().map(|v| sf(*v)).sum();
+        if (got - want).abs() / want.abs().max(1.0) > 1e-9 {
+            return Err(format!("{op:?}: {got} vs {want}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rowagg_colagg_consistent() {
+    forall(20, |g| {
+        let n = g.usize_in(50, 3000);
+        let p = g.usize_in(1, 6);
+        let seed = g.u64();
+        let eng = eng_with(g.usize_in(1, 3), true);
+        let x = datasets::uniform(&eng, n as u64, p as u64, 0.0, 1.0, seed, None).unwrap();
+        // sum(rowSums) == sum(colSums) == sum(x)
+        let total = x.sum().unwrap();
+        let via_rows = x.row_sums().unwrap().sum().unwrap();
+        let via_cols: f64 = x.col_sums().unwrap().buf.to_f64_vec().iter().sum();
+        for (name, v) in [("rows", via_rows), ("cols", via_cols)] {
+            if (v - total).abs() / total.max(1.0) > 1e-9 {
+                return Err(format!("sum via {name}: {v} vs {total}"));
+            }
+        }
+        // min <= mean <= max per column
+        let s = flashmatrix::algs::summary(&x).unwrap();
+        for j in 0..p {
+            if !(s.min[j] <= s.mean[j] && s.mean[j] <= s.max[j]) {
+                return Err(format!("col {j}: min/mean/max ordering violated"));
+            }
+            if s.var[j] < 0.0 {
+                return Err(format!("col {j}: negative variance"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_groupby_total_preserved() {
+    forall(20, |g| {
+        let n = g.usize_in(100, 4000);
+        let p = g.usize_in(1, 5);
+        let k = g.usize_in(1, 6);
+        let seed = g.u64();
+        let eng = eng_with(g.usize_in(1, 3), g.bool());
+        let x = datasets::uniform(&eng, n as u64, p as u64, -1.0, 1.0, seed, None).unwrap();
+        // labels = floor(u * k) from an independent column
+        let u = FmMatrix::runif_matrix(&eng, n as u64, 1, 0.0, k as f64, seed ^ 1);
+        let labels = u
+            .sapply(UnOp::Floor)
+            .unwrap()
+            .cast(DType::I32)
+            .unwrap();
+        let grouped = x.groupby_row(&labels, k, AggOp::Sum).unwrap();
+        let total_grouped: f64 = grouped.buf.to_f64_vec().iter().sum();
+        let total = x.sum().unwrap();
+        if (total_grouped - total).abs() / total.abs().max(1.0) > 1e-9 {
+            return Err(format!("groupby lost mass: {total_grouped} vs {total}"));
+        }
+        // counts per group sum to n
+        let ones = FmMatrix::fill(&eng, Scalar::F64(1.0), n as u64, 1);
+        let counts = ones.groupby_row(&labels, k, AggOp::Sum).unwrap();
+        let csum: f64 = counts.buf.to_f64_vec().iter().sum();
+        if csum != n as f64 {
+            return Err(format!("counts {csum} != n {n}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_inner_products_agree_with_host() {
+    forall(15, |g| {
+        let n = g.usize_in(50, 2000);
+        let p = g.usize_in(1, 5);
+        let q = g.usize_in(1, 4);
+        let seed = g.u64();
+        let eng = eng_with(g.usize_in(1, 3), true);
+        let x = datasets::uniform(&eng, n as u64, p as u64, -1.0, 1.0, seed, None).unwrap();
+        let oracle = host_uniform(n, p, -1.0, 1.0, seed);
+        let bvals = g.f64_vec(p * q, -1.0, 1.0);
+        let mut b = HostMat::zeros(p, q, DType::F64);
+        for i in 0..p {
+            for j in 0..q {
+                b.set(i, j, Scalar::F64(bvals[i * q + j]));
+            }
+        }
+        // tall × small
+        let y = x.matmul_small(&b).unwrap().to_host().unwrap();
+        for r in (0..n).step_by((n / 7).max(1)) {
+            for c in 0..q {
+                let want: f64 = (0..p).map(|kk| oracle[r][kk] * bvals[kk * q + c]).sum();
+                let got = y.get(r, c).as_f64();
+                if (got - want).abs() > 1e-9 {
+                    return Err(format!("matmul[{r},{c}]: {got} vs {want}"));
+                }
+            }
+        }
+        // wide × tall (Gramian) vs host
+        let gm = x.crossprod(&x).unwrap();
+        for i in 0..p {
+            for j in 0..p {
+                let want: f64 = (0..n).map(|r| oracle[r][i] * oracle[r][j]).sum();
+                let got = gm.get(i, j).as_f64();
+                if (got - want).abs() / want.abs().max(1.0) > 1e-9 {
+                    return Err(format!("gramian[{i},{j}]: {got} vs {want}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dtype_promotion_safe() {
+    forall(30, |g| {
+        let n = g.usize_in(10, 2000) as u64;
+        let eng = eng_with(1, true);
+        let dt = *g.choose(&[DType::Bool, DType::I32, DType::I64, DType::F32, DType::F64]);
+        let a = FmMatrix::fill(&eng, Scalar::F64(1.0).cast(dt), n, 2);
+        let b = FmMatrix::fill(&eng, Scalar::F64(2.0), n, 2);
+        let c = a.add(&b).unwrap();
+        let s = c.sum().unwrap();
+        if s != 3.0 * 2.0 * n as f64 {
+            return Err(format!("{dt:?} + f64: sum {s}"));
+        }
+        // comparisons produce booleans countable via sum
+        let lt = a.mapply(&b, BinOp::Lt).unwrap();
+        if lt.dtype() != DType::Bool {
+            return Err("comparison must be Bool".into());
+        }
+        let cnt = lt.agg(AggOp::Sum).unwrap().as_i64();
+        if cnt != 2 * n as i64 {
+            return Err(format!("lt count {cnt}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_transpose_is_involution() {
+    forall(20, |g| {
+        let n = g.usize_in(5, 200);
+        let p = g.usize_in(1, 6);
+        let eng = eng_with(1, true);
+        let x = datasets::uniform(&eng, n as u64, p as u64, 0.0, 1.0, g.u64(), None).unwrap();
+        let h1 = x.to_host().unwrap();
+        let h2 = x.t().t().to_host().unwrap();
+        if h1 != h2 {
+            return Err("t(t(x)) != x".into());
+        }
+        let ht = x.t().to_host().unwrap();
+        if ht.nrow != p || ht.ncol != n {
+            return Err("t(x) dims wrong".into());
+        }
+        for r in 0..n.min(10) {
+            for c in 0..p {
+                if h1.get(r, c) != ht.get(c, r) {
+                    return Err(format!("t mismatch at {r},{c}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}

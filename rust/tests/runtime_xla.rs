@@ -1,0 +1,186 @@
+//! XLA runtime integration: load real AOT artifacts, execute them through
+//! the PJRT service thread, and check the numbers against the native step
+//! implementations — the full L1/L2 (Pallas/JAX) vs L3 (Rust) agreement.
+//!
+//! Requires `make artifacts`; tests skip (with a message) when the
+//! manifest is absent so `cargo test` stays green on a fresh checkout.
+
+use flashmatrix::algs::steps;
+use flashmatrix::config::EngineConfig;
+use flashmatrix::datasets;
+use flashmatrix::fmr::Engine;
+use flashmatrix::matrix::HostMat;
+use flashmatrix::runtime::{HostTensor, XlaService};
+
+fn service() -> Option<XlaService> {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping xla test: run `make artifacts` first");
+        return None;
+    }
+    Some(XlaService::start(dir).expect("manifest loads"))
+}
+
+fn eng() -> std::sync::Arc<Engine> {
+    Engine::new(EngineConfig {
+        xla_dispatch: false, // artifacts driven manually here
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+/// Random row-major block + its col-major Buf twin.
+fn block(rows: usize, p: usize, seed: u64) -> (Vec<f64>, flashmatrix::vudf::Buf) {
+    let mut rm = vec![0.0; rows * p];
+    let mut cm = vec![0.0; rows * p];
+    for r in 0..rows {
+        for c in 0..p {
+            let v = flashmatrix::exec::u64_to_unit_f64(flashmatrix::exec::splitmix64_at(
+                seed,
+                (r * p + c) as u64,
+            )) * 4.0
+                - 2.0;
+            rm[r * p + c] = v;
+            cm[c * rows + r] = v;
+        }
+    }
+    (rm, flashmatrix::vudf::Buf::F64(cm))
+}
+
+fn close(a: &[f64], b: &[f64], tol: f64, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what} len");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() < tol * x.abs().max(1.0),
+            "{what}[{i}]: xla {x} vs native {y}"
+        );
+    }
+}
+
+#[test]
+fn summary_artifact_matches_native_step() {
+    let Some(svc) = service() else { return };
+    let meta = svc.lookup("summary", 8, 0).expect("summary_p8");
+    let rows = meta.rows as usize;
+    let (rm, cm) = block(rows, 8, 5);
+    let out = svc
+        .run(&meta.name.clone(), vec![HostTensor::f64(vec![rows, 8], rm)])
+        .unwrap();
+    let native = steps::colstats_native(&cm, rows, 8).unwrap();
+    close(out[0].as_f64().unwrap(), &native, 1e-10, "summary");
+}
+
+#[test]
+fn kmeans_artifact_matches_native_step() {
+    let Some(svc) = service() else { return };
+    let meta = svc.lookup("kmeans", 32, 10).expect("kmeans_p32_k10");
+    let rows = meta.rows as usize;
+    let (rm, cm) = block(rows, 32, 6);
+    let (crm, _) = block(10, 32, 7);
+    let c = HostMat::from_row_major_f64(10, 32, &crm);
+    let out = svc
+        .run(
+            &meta.name.clone(),
+            vec![
+                HostTensor::f64(vec![rows, 32], rm),
+                HostTensor::f64(vec![10, 32], crm.clone()),
+            ],
+        )
+        .unwrap();
+    let (sums, counts, wcss, assign) = steps::kmeans_step_native(&cm, rows, 32, &c).unwrap();
+    close(out[0].as_f64().unwrap(), &sums, 1e-9, "sums");
+    close(out[1].as_f64().unwrap(), &counts, 1e-12, "counts");
+    assert!((out[2].as_f64().unwrap()[0] - wcss).abs() / wcss < 1e-10);
+    let xla_assign = out[3].as_i32().unwrap();
+    assert_eq!(xla_assign, &assign[..], "assignments");
+}
+
+#[test]
+fn gramian_artifacts_match_native_step() {
+    let Some(svc) = service() else { return };
+    let meta = svc.lookup("gramian", 16, 0).expect("gramian_p16");
+    let rows = meta.rows as usize;
+    let (rm, cm) = block(rows, 16, 8);
+    let out = svc
+        .run(&meta.name.clone(), vec![HostTensor::f64(vec![rows, 16], rm.clone())])
+        .unwrap();
+    let (xtx, cs) = steps::gramian_native(&cm, rows, 16).unwrap();
+    close(out[0].as_f64().unwrap(), &xtx, 1e-9, "xtx");
+    close(out[1].as_f64().unwrap(), &cs, 1e-9, "colsums");
+
+    let metac = svc.lookup("gramian_centered", 16, 0).expect("centered");
+    let mu: Vec<f64> = cs.iter().map(|s| s / rows as f64).collect();
+    let outc = svc
+        .run(
+            &metac.name.clone(),
+            vec![
+                HostTensor::f64(vec![rows, 16], rm),
+                HostTensor::f64(vec![16], mu.clone()),
+            ],
+        )
+        .unwrap();
+    let native = steps::gramian_centered_native(&cm, rows, 16, &mu).unwrap();
+    close(outc[0].as_f64().unwrap(), &native, 1e-9, "centered");
+}
+
+#[test]
+fn gmm_artifact_matches_native_step() {
+    let Some(svc) = service() else { return };
+    let meta = svc.lookup("gmm", 32, 4).expect("gmm_p32_k4");
+    let rows = meta.rows as usize;
+    let (k, p) = (4usize, 32usize);
+    let (rm, cm) = block(rows, p, 9);
+    let (means_rm, _) = block(k, p, 10);
+    let mut prec = vec![0.0; k * p * p];
+    for c in 0..k {
+        for i in 0..p {
+            prec[c * p * p + i * p + i] = 1.0 + 0.1 * c as f64;
+        }
+    }
+    let logdet: Vec<f64> = (0..k)
+        .map(|c| p as f64 * (1.0 + 0.1 * c as f64).ln())
+        .collect();
+    let logw = vec![(1.0 / k as f64).ln(); k];
+    let out = svc
+        .run(
+            &meta.name.clone(),
+            vec![
+                HostTensor::f64(vec![rows, p], rm),
+                HostTensor::f64(vec![k, p], means_rm.clone()),
+                HostTensor::f64(vec![k, p, p], prec.clone()),
+                HostTensor::f64(vec![k], logdet.clone()),
+                HostTensor::f64(vec![k], logw.clone()),
+            ],
+        )
+        .unwrap();
+    let (nk, sk, ssk, ll) =
+        steps::gmm_estep_native(&cm, rows, p, &means_rm, &prec, &logdet, &logw).unwrap();
+    close(out[0].as_f64().unwrap(), &nk, 1e-8, "nk");
+    close(out[1].as_f64().unwrap(), &sk, 1e-8, "sk");
+    close(out[2].as_f64().unwrap(), &ssk, 1e-8, "ssk");
+    assert!((out[3].as_f64().unwrap()[0] - ll).abs() / ll.abs() < 1e-10);
+}
+
+#[test]
+fn end_to_end_kmeans_xla_equals_native() {
+    let Some(_svc) = service() else { return };
+    // full algorithm with dispatch on vs off must agree
+    let run = |xla: bool| {
+        let e = Engine::new(EngineConfig {
+            xla_dispatch: xla,
+            xla_kinds: vec!["all".to_string()],
+            ..Default::default()
+        })
+        .unwrap();
+        let (x, _) = datasets::mix_gaussian(&e, 70_000, 32, 10, 8.0, 42, None).unwrap();
+        let r = flashmatrix::algs::kmeans(&x, 10, 3, 1).unwrap();
+        (r.wcss, e.metrics.snapshot().xla_dispatches)
+    };
+    let (wcss_xla, dispatches) = run(true);
+    let (wcss_native, _) = run(false);
+    assert!(dispatches > 0, "xla path not exercised");
+    for (a, b) in wcss_xla.iter().zip(&wcss_native) {
+        assert!((a - b).abs() / b < 1e-9, "xla {a} vs native {b}");
+    }
+    let _ = eng();
+}
