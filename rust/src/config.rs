@@ -72,6 +72,13 @@ pub struct EngineConfig {
     pub numa_nodes: usize,
     /// Columns of the explicit matrix cache for EM matrices (0 = no cache).
     pub em_cache_cols: usize,
+    /// Capacity in bytes of the write-through **partition cache** for EM
+    /// matrices ([`crate::matrix::cache::PartitionCache`], paper §III-B3).
+    /// 0 disables the cache — the `benches/cache_ablation.rs` knob.
+    pub em_cache_bytes: usize,
+    /// Queue depth of the async partition read-ahead thread that overlaps
+    /// a sequential EM scan's I/O with compute (0 disables read-ahead).
+    pub prefetch_depth: usize,
 }
 
 impl Default for EngineConfig {
@@ -95,6 +102,8 @@ impl Default for EngineConfig {
             cpu_part_bytes: 64 << 10,
             numa_nodes: 1,
             em_cache_cols: 0,
+            em_cache_bytes: 128 << 20,
+            prefetch_depth: 2,
         }
     }
 }
@@ -176,6 +185,14 @@ mod tests {
             ..Default::default()
         };
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn default_enables_partition_cache() {
+        let c = EngineConfig::default();
+        assert!(c.em_cache_bytes > 0);
+        assert!(c.prefetch_depth > 0);
+        c.validate().unwrap();
     }
 
     #[test]

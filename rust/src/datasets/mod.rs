@@ -46,6 +46,9 @@ pub fn from_fn(
             eng.config.em_cache_cols as u64,
             Arc::clone(&eng.ssd),
             Arc::clone(&eng.metrics),
+            // datasets are the repeatedly-scanned inputs of EM algorithms:
+            // always cache-resident (§III-B3)
+            eng.cache.clone(),
         )?,
     };
     // parallel generation: partitions are independent

@@ -1,27 +1,56 @@
 //! Engine-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls (no `thiserror`): the crate is
+//! std-only so `cargo build` works without a network or vendored deps.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors surfaced by the FlashMatrix engine.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum FmError {
-    #[error("shape mismatch: {0}")]
     Shape(String),
-    #[error("dtype error: {0}")]
     DType(String),
-    #[error("unsupported operation: {0}")]
     Unsupported(String),
-    #[error("storage error: {0}")]
     Storage(String),
-    #[error("runtime (XLA) error: {0}")]
     Runtime(String),
-    #[error("configuration error: {0}")]
     Config(String),
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
-    #[error("json error: {0}")]
+    Io(std::io::Error),
     Json(String),
 }
+
+impl fmt::Display for FmError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FmError::Shape(m) => write!(f, "shape mismatch: {m}"),
+            FmError::DType(m) => write!(f, "dtype error: {m}"),
+            FmError::Unsupported(m) => write!(f, "unsupported operation: {m}"),
+            FmError::Storage(m) => write!(f, "storage error: {m}"),
+            FmError::Runtime(m) => write!(f, "runtime (XLA) error: {m}"),
+            FmError::Config(m) => write!(f, "configuration error: {m}"),
+            FmError::Io(e) => write!(f, "{e}"),
+            FmError::Json(m) => write!(f, "json error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for FmError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            FmError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for FmError {
+    fn from(e: std::io::Error) -> Self {
+        FmError::Io(e)
+    }
+}
+
+// The `xla` name resolves to the in-tree stub unless the real crate is
+// wired in (see src/xla_stub.rs).
+use crate::xla_stub as xla;
 
 impl From<xla::Error> for FmError {
     fn from(e: xla::Error) -> Self {

@@ -14,6 +14,11 @@
 //! * `fuse_cache` selects the strip height: CPU-cache-sized strips when on,
 //!   whole I/O partitions when off.
 //! * `recycle_chunks` acts in [`crate::mem::ChunkPool`].
+//! * `em_cache_bytes` / `prefetch_depth` act through the source reads:
+//!   every EM partition read consults the write-through matrix cache
+//!   ([`crate::matrix::cache`], §III-B3) before touching the file, and a
+//!   single-worker pass queues the next partition's read so I/O overlaps
+//!   compute instead of alternating.
 
 pub mod pipeline;
 
@@ -24,7 +29,7 @@ use crate::config::{EngineConfig, StorageKind};
 use crate::dag::{SinkResult, SinkSpec};
 use crate::dtype::{DType, Scalar};
 use crate::error::{FmError, Result};
-use crate::matrix::{DenseBuilder, HostMat, Matrix, MatrixData, Partitioning};
+use crate::matrix::{DenseBuilder, HostMat, Matrix, MatrixData, PartitionCache, Partitioning};
 use crate::mem::ChunkPool;
 use crate::metrics::Metrics;
 use crate::storage::SsdSim;
@@ -38,6 +43,9 @@ pub struct ExecCtx<'a> {
     pub pool: &'a ChunkPool,
     pub metrics: &'a Arc<Metrics>,
     pub ssd: &'a Arc<SsdSim>,
+    /// Engine-wide write-through partition cache (§III-B3); `None` when
+    /// `em_cache_bytes == 0` (the ablation's cache-off configuration).
+    pub cache: Option<Arc<PartitionCache>>,
 }
 
 /// Materialize `targets` (virtual matrices) and `sinks` in ONE streaming
@@ -57,6 +65,21 @@ pub fn run_pass_to(
     targets: &[Matrix],
     sinks: &[SinkSpec],
     storage: Option<StorageKind>,
+) -> Result<(Vec<Matrix>, Vec<SinkResult>)> {
+    run_pass_opts(ctx, targets, sinks, storage, true)
+}
+
+/// [`run_pass_to`] with an explicit cache-residency decision for the
+/// materialized EM targets. `cache_resident = false` keeps one-shot
+/// intermediates (the eager mode's per-op materializations) out of the
+/// write-through partition cache so they cannot evict reusable data —
+/// the `fmr` layer's §III-B3 residency policy.
+pub fn run_pass_opts(
+    ctx: &ExecCtx<'_>,
+    targets: &[Matrix],
+    sinks: &[SinkSpec],
+    storage: Option<StorageKind>,
+    cache_resident: bool,
 ) -> Result<(Vec<Matrix>, Vec<SinkResult>)> {
     let storage = storage.unwrap_or_else(|| ctx.config.storage.clone());
     let prog = Arc::new(pipeline::compile(targets, sinks)?);
@@ -111,6 +134,7 @@ pub fn run_pass_to(
                 ctx.config.em_cache_cols as u64,
                 Arc::clone(ctx.ssd),
                 Arc::clone(ctx.metrics),
+                if cache_resident { ctx.cache.clone() } else { None },
             )?,
         };
         builders.push(b);
@@ -236,6 +260,14 @@ fn process_partition(
         let need_read = !matches!(&cache.slots[si], Some((p, _)) if *p == spi);
         if need_read {
             cache.slots[si] = Some((spi, d.partition_bytes(spi)?));
+            // Single-worker passes alternate read/compute; queue the next
+            // partition's read so it overlaps this partition's compute
+            // (§III-B3). Multi-worker passes already overlap by running
+            // partitions concurrently — an extra prefetch there would
+            // race the worker that owns partition spi+1 and double-read.
+            if cfg.threads == 1 {
+                d.prefetch_partition(spi + 1);
+            }
         }
         src_meta.push(((s1 - s0) as usize, (g0 - s0) as usize));
     }

@@ -7,7 +7,7 @@ use crate::config::EngineConfig;
 use crate::dag::{SinkResult, SinkSpec};
 use crate::error::Result;
 use crate::exec::ExecCtx;
-use crate::matrix::Matrix;
+use crate::matrix::{Matrix, PartitionCache};
 use crate::mem::ChunkPool;
 use crate::metrics::Metrics;
 use crate::runtime::XlaService;
@@ -15,12 +15,16 @@ use crate::storage::SsdSim;
 use crate::vudf::VudfRegistry;
 
 /// One FlashMatrix engine: configuration, memory pool, storage model,
-/// metrics, the VUDF registry and (lazily) the XLA service.
+/// the write-through matrix cache, metrics, the VUDF registry and
+/// (lazily) the XLA service.
 pub struct Engine {
     pub config: EngineConfig,
     pub pool: ChunkPool,
     pub metrics: Arc<Metrics>,
     pub ssd: Arc<SsdSim>,
+    /// Write-through partition cache shared by every EM matrix of this
+    /// engine (§III-B3); `None` when `em_cache_bytes == 0`.
+    pub cache: Option<Arc<PartitionCache>>,
     pub registry: VudfRegistry,
     xla: OnceLock<Option<XlaService>>,
     /// Serializes whole-DAG materialization passes when needed by tests.
@@ -34,11 +38,21 @@ impl Engine {
         let metrics = Arc::new(Metrics::new());
         let pool = ChunkPool::new(config.chunk_bytes, config.recycle_chunks, Arc::clone(&metrics));
         let ssd = Arc::new(SsdSim::new(config.throttle.as_ref()));
+        let cache = if config.em_cache_bytes > 0 {
+            Some(PartitionCache::new(
+                config.em_cache_bytes,
+                config.prefetch_depth,
+                Arc::clone(&metrics),
+            ))
+        } else {
+            None
+        };
         Ok(Arc::new(Engine {
             config,
             pool,
             metrics,
             ssd,
+            cache,
             registry: VudfRegistry::new(),
             xla: OnceLock::new(),
             pass_lock: Mutex::new(()),
@@ -57,6 +71,7 @@ impl Engine {
             pool: &self.pool,
             metrics: &self.metrics,
             ssd: &self.ssd,
+            cache: self.cache.clone(),
         }
     }
 
@@ -85,6 +100,14 @@ impl Engine {
     /// Materialize several virtual matrices in one fused pass.
     pub fn materialize(&self, targets: &[Matrix]) -> Result<Vec<Matrix>> {
         crate::exec::materialize(&self.ctx(), targets)
+    }
+
+    /// Materialize one-shot intermediates (the eager mode's per-operation
+    /// results). They are written through to storage like any matrix but
+    /// are **not** admitted to the partition cache: data read exactly once
+    /// would only evict reusable partitions (§III-B3 residency policy).
+    pub fn materialize_intermediate(&self, targets: &[Matrix]) -> Result<Vec<Matrix>> {
+        Ok(crate::exec::run_pass_opts(&self.ctx(), targets, &[], None, false)?.0)
     }
 
     /// Materialize several sinks in one fused pass (`fm.materialize`).

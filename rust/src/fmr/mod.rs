@@ -47,13 +47,15 @@ impl FmMatrix {
     /// Apply the engine's laziness policy to a freshly recorded node:
     /// under `fuse_mem` the node stays virtual; in the eager mode it is
     /// materialized immediately (one pass per operation — the MLlib-like
-    /// behaviour Fig 6/11 compare against).
+    /// behaviour Fig 6/11 compare against). Eager per-op results are
+    /// one-shot intermediates, so they are kept out of the write-through
+    /// matrix cache (§III-B3 residency decision).
     fn policy(self) -> Result<FmMatrix> {
         if self.eng.config.fuse_mem || !self.m.is_virtual() {
             return Ok(self);
         }
         let transposed = self.m.transposed;
-        let mats = self.eng.materialize(&[self.m.canonical()])?;
+        let mats = self.eng.materialize_intermediate(&[self.m.canonical()])?;
         let mut m = mats.into_iter().next().unwrap();
         m.transposed = transposed;
         Ok(FmMatrix::wrap(&self.eng, m))

@@ -13,6 +13,26 @@
 //!   (a sink) while on a tall matrix it stays an in-DAG per-row reduction;
 //! * `inner.prod(t(A), B)` with both operands sharing the long dimension
 //!   becomes the wide×tall sink; `inner.prod(A, small)` stays in the DAG.
+//!
+//! # Example
+//!
+//! The `fmr` layer wraps exactly these calls; recording a DAG through it
+//! and forcing a sink runs the whole chain in one fused parallel pass:
+//!
+//! ```
+//! use flashmatrix::fmr::{Engine, FmMatrix};
+//! use flashmatrix::vudf::AggOp;
+//! use flashmatrix::EngineConfig;
+//!
+//! let eng = Engine::new(EngineConfig {
+//!     xla_dispatch: false,
+//!     ..Default::default()
+//! })
+//! .unwrap();
+//! let x = FmMatrix::runif_matrix(&eng, 10_000, 4, 0.0, 1.0, 7);
+//! let total = x.sq().unwrap().agg(AggOp::Sum).unwrap().as_f64();
+//! assert!(total > 0.0 && total < 10_000.0 * 4.0);
+//! ```
 
 use crate::dag::{SinkKind, SinkSpec, UnFn, VKind, VNode};
 use crate::dtype::{DType, Scalar};
@@ -30,6 +50,24 @@ fn vmat(nrow: u64, ncol: u64, dtype: DType, kind: VKind) -> Matrix {
 }
 
 /// Insert a lazy cast node if `m`'s dtype differs from `to` (§III-D).
+///
+/// # Examples
+///
+/// ```
+/// use flashmatrix::dtype::DType;
+/// use flashmatrix::genops;
+/// # use flashmatrix::dag::{VKind, VNode};
+/// # use flashmatrix::dtype::Scalar;
+/// # use flashmatrix::matrix::{Matrix, MatrixData};
+/// # let a = Matrix::new(MatrixData::Virtual(VNode {
+/// #     nrow: 8, ncol: 2, dtype: DType::I32,
+/// #     kind: VKind::Fill(Scalar::I32(1)),
+/// # }));
+/// let c = genops::cast(&a, DType::F64);
+/// assert_eq!(c.dtype(), DType::F64);
+/// // same-dtype casts are the identity: no node is inserted
+/// assert_eq!(genops::cast(&c, DType::F64).data_ptr(), c.data_ptr());
+/// ```
 pub fn cast(m: &Matrix, to: DType) -> Matrix {
     if m.dtype() == to {
         return m.clone();
@@ -50,6 +88,27 @@ pub fn cast(m: &Matrix, to: DType) -> Matrix {
 }
 
 /// `fm.sapply(A, f)` — elementwise unary.
+///
+/// # Examples
+///
+/// ```
+/// use flashmatrix::dag::UnFn;
+/// use flashmatrix::genops;
+/// use flashmatrix::vudf::UnOp;
+/// # use flashmatrix::dag::{VKind, VNode};
+/// # use flashmatrix::dtype::{DType, Scalar};
+/// # use flashmatrix::matrix::{Matrix, MatrixData};
+/// # let a = Matrix::new(MatrixData::Virtual(VNode {
+/// #     nrow: 8, ncol: 2, dtype: DType::F64,
+/// #     kind: VKind::Fill(Scalar::F64(-1.5)),
+/// # }));
+/// let s = genops::sapply(&a, UnFn::Builtin(UnOp::Abs));
+/// assert!(s.is_virtual()); // recorded, not computed
+/// assert_eq!((s.nrow(), s.ncol()), (8, 2));
+/// // elementwise ops commute with transposition (§III-G)
+/// let st = genops::sapply(&a.t(), UnFn::Builtin(UnOp::Abs));
+/// assert_eq!((st.nrow(), st.ncol()), (2, 8));
+/// ```
 pub fn sapply(a: &Matrix, op: UnFn) -> Matrix {
     let dt = op.out_dtype(a.dtype());
     let v = vmat(
@@ -69,6 +128,26 @@ pub fn sapply(a: &Matrix, op: UnFn) -> Matrix {
 
 /// `fm.mapply(A, B, f)` — elementwise binary. Operands must agree on the
 /// *view* shape; differing dtypes promote via lazy casts.
+///
+/// # Examples
+///
+/// ```
+/// use flashmatrix::genops;
+/// use flashmatrix::vudf::BinOp;
+/// # use flashmatrix::dag::{VKind, VNode};
+/// # use flashmatrix::dtype::{DType, Scalar};
+/// # use flashmatrix::matrix::{Matrix, MatrixData};
+/// # let fill = |nrow, ncol, dt: DType, s: Scalar| Matrix::new(
+/// #     MatrixData::Virtual(VNode { nrow, ncol, dtype: dt, kind: VKind::Fill(s) }));
+/// # let a = fill(8, 2, DType::I32, Scalar::I32(3));
+/// # let b = fill(8, 2, DType::F64, Scalar::F64(0.5));
+/// # let short = fill(5, 2, DType::F64, Scalar::F64(0.0));
+/// // i32 + f64 promotes to f64 through lazy casts
+/// let sum = genops::mapply(&a, &b, BinOp::Add).unwrap();
+/// assert_eq!(sum.dtype(), flashmatrix::dtype::DType::F64);
+/// // shape mismatches are rejected at record time
+/// assert!(genops::mapply(&a, &short, BinOp::Add).is_err());
+/// ```
 pub fn mapply(a: &Matrix, b: &Matrix, op: BinOp) -> Result<Matrix> {
     if a.nrow() != b.nrow() || a.ncol() != b.ncol() {
         return Err(FmError::Shape(format!(
@@ -251,6 +330,31 @@ pub enum RowAggResult {
     Sink(SinkSpec),
 }
 
+/// # Examples
+///
+/// ```
+/// use flashmatrix::genops::{self, RowAggResult};
+/// use flashmatrix::vudf::AggOp;
+/// # use flashmatrix::dag::{VKind, VNode};
+/// # use flashmatrix::dtype::{DType, Scalar};
+/// # use flashmatrix::matrix::{Matrix, MatrixData};
+/// # let a = Matrix::new(MatrixData::Virtual(VNode {
+/// #     nrow: 8, ncol: 2, dtype: DType::F64,
+/// #     kind: VKind::Fill(Scalar::F64(1.0)),
+/// # }));
+/// // tall matrix: the per-row reduction keeps the long dimension and
+/// // stays in the DAG as an 8x1 node
+/// match genops::agg_row(&a, AggOp::Sum) {
+///     RowAggResult::InDag(v) => assert_eq!((v.nrow(), v.ncol()), (8, 1)),
+///     RowAggResult::Sink(_) => unreachable!("tall agg.row stays in the DAG"),
+/// }
+/// // wide (transposed) view: rows of the view are columns of the
+/// // canonical data, so this becomes a column-aggregation sink
+/// assert!(matches!(
+///     genops::agg_row(&a.t(), AggOp::Sum),
+///     RowAggResult::Sink(_)
+/// ));
+/// ```
 pub fn agg_row(a: &Matrix, op: AggOp) -> RowAggResult {
     if a.transposed {
         RowAggResult::Sink(SinkSpec {
@@ -294,6 +398,23 @@ pub fn agg_col(a: &Matrix, op: AggOp) -> RowAggResult {
 }
 
 /// `fm.agg(A, f)` — whole-matrix reduction (sink).
+///
+/// # Examples
+///
+/// ```
+/// use flashmatrix::dag::SinkKind;
+/// use flashmatrix::genops;
+/// use flashmatrix::vudf::AggOp;
+/// # use flashmatrix::dag::{VKind, VNode};
+/// # use flashmatrix::dtype::{DType, Scalar};
+/// # use flashmatrix::matrix::{Matrix, MatrixData};
+/// # let a = Matrix::new(MatrixData::Virtual(VNode {
+/// #     nrow: 8, ncol: 2, dtype: DType::F64,
+/// #     kind: VKind::Fill(Scalar::F64(1.0)),
+/// # }));
+/// let sink = genops::agg_full(&a, AggOp::Max);
+/// assert!(matches!(sink.kind, SinkKind::AggFull(AggOp::Max)));
+/// ```
 pub fn agg_full(a: &Matrix, op: AggOp) -> SinkSpec {
     SinkSpec {
         source: a.canonical(),
@@ -323,6 +444,28 @@ pub fn which_extreme_row(a: &Matrix, max: bool) -> Result<Matrix> {
 /// `fm.groupby.row(A, labels, f)` — labels are an n×1 integer matrix with
 /// values in `0..k` (out-of-range rows are dropped); returns a sink
 /// producing k×ncol.
+///
+/// # Examples
+///
+/// ```
+/// use flashmatrix::dag::SinkKind;
+/// use flashmatrix::genops;
+/// use flashmatrix::vudf::AggOp;
+/// # use flashmatrix::dag::{VKind, VNode};
+/// # use flashmatrix::dtype::{DType, Scalar};
+/// # use flashmatrix::matrix::{Matrix, MatrixData};
+/// # let a = Matrix::new(MatrixData::Virtual(VNode {
+/// #     nrow: 8, ncol: 2, dtype: DType::F64,
+/// #     kind: VKind::Fill(Scalar::F64(1.0)),
+/// # }));
+/// # let labels = Matrix::new(MatrixData::Virtual(VNode {
+/// #     nrow: 8, ncol: 1, dtype: DType::I32,
+/// #     kind: VKind::Fill(Scalar::I32(0)),
+/// # }));
+/// // the k-means update: per-cluster sums in one pass
+/// let s = genops::groupby_row(&a, &labels, 4, AggOp::Sum).unwrap();
+/// assert!(matches!(s.kind, SinkKind::GroupByRow { k: 4, .. }));
+/// ```
 pub fn groupby_row(a: &Matrix, labels: &Matrix, k: usize, op: AggOp) -> Result<SinkSpec> {
     if labels.ncol() != 1 || labels.nrow() != a.nrow() {
         return Err(FmError::Shape(format!(
@@ -344,6 +487,26 @@ pub fn groupby_row(a: &Matrix, labels: &Matrix, k: usize, op: AggOp) -> Result<S
 
 /// `fm.inner.prod(A, B, f1, f2)`, tall × small: A is n×p (tall), `b` is a
 /// small p×q host matrix. Stays in the DAG (output is n×q, same long dim).
+///
+/// # Examples
+///
+/// ```
+/// use flashmatrix::genops;
+/// use flashmatrix::matrix::HostMat;
+/// use flashmatrix::vudf::{AggOp, BinOp};
+/// # use flashmatrix::dag::{VKind, VNode};
+/// # use flashmatrix::dtype::{DType, Scalar};
+/// # use flashmatrix::matrix::{Matrix, MatrixData};
+/// # let a = Matrix::new(MatrixData::Virtual(VNode {
+/// #     nrow: 8, ncol: 2, dtype: DType::F64,
+/// #     kind: VKind::Fill(Scalar::F64(1.0)),
+/// # }));
+/// // ordinary matmul is inner.prod with (*, +): 8x2 ⊗ 2x3 -> 8x3
+/// let b = HostMat::from_rows_f64(&[vec![1.0, 0.0, 2.0], vec![0.0, 1.0, 3.0]]);
+/// let y = genops::inner_small(&a, &b, BinOp::Mul, AggOp::Sum).unwrap();
+/// assert_eq!((y.nrow(), y.ncol()), (8, 3));
+/// assert!(y.is_virtual());
+/// ```
 pub fn inner_small(a: &Matrix, b: &HostMat, f1: BinOp, f2: AggOp) -> Result<Matrix> {
     if a.transposed {
         return Err(FmError::Unsupported(
@@ -376,6 +539,27 @@ pub fn inner_small(a: &Matrix, b: &HostMat, f1: BinOp, f2: AggOp) -> Result<Matr
 /// `fm.inner.prod(t(A), B, f1, f2)`, wide × tall: both share the long
 /// dimension; the p×q result is a sink (per-thread partial Gramians merged
 /// with `f2`'s combine).
+///
+/// # Examples
+///
+/// ```
+/// use flashmatrix::dag::SinkKind;
+/// use flashmatrix::genops;
+/// use flashmatrix::vudf::{AggOp, BinOp};
+/// # use flashmatrix::dag::{VKind, VNode};
+/// # use flashmatrix::dtype::{DType, Scalar};
+/// # use flashmatrix::matrix::{Matrix, MatrixData};
+/// # let fill = |nrow, ncol| Matrix::new(MatrixData::Virtual(VNode {
+/// #     nrow, ncol, dtype: DType::F64, kind: VKind::Fill(Scalar::F64(1.0)),
+/// # }));
+/// # let a = fill(10, 2);
+/// # let b = fill(10, 3);
+/// // the Gramian t(A) %*% B: both operands share the long dimension
+/// let g = genops::inner_wide_tall(&a.t(), &b, BinOp::Mul, AggOp::Sum).unwrap();
+/// assert!(matches!(g.kind, SinkKind::InnerWideTall { .. }));
+/// // the left operand must really be a wide (transposed) view
+/// assert!(genops::inner_wide_tall(&a, &b, BinOp::Mul, AggOp::Sum).is_err());
+/// ```
 pub fn inner_wide_tall(a_t: &Matrix, b: &Matrix, f1: BinOp, f2: AggOp) -> Result<SinkSpec> {
     if !a_t.transposed {
         return Err(FmError::Unsupported(

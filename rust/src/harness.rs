@@ -83,6 +83,14 @@ pub fn engine_for(s: &Scale, mode: Mode, threads: usize) -> Result<Arc<Engine>> 
                 read_bytes_per_sec: s.ssd_bps,
                 write_bytes_per_sec: s.ssd_bps,
             }),
+            // The figure harness runs at testbed scale, where datasets are
+            // far smaller than the paper's (1B rows): a default-sized
+            // partition cache would absorb them whole and zero out the EM
+            // I/O these figures exist to measure (Table IV counts data
+            // passes from io_read_bytes). The cache has its own ablation
+            // in benches/cache_ablation.rs.
+            em_cache_bytes: 0,
+            prefetch_depth: 0,
             ..EngineConfig::fm_im()
         },
         Mode::MllibLike => EngineConfig::mllib_like(),

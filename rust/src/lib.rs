@@ -15,8 +15,10 @@
 //! * [`dag`] + [`exec`] — lazy evaluation, operation fusion and the
 //!   two-level-partitioned parallel materializer (§III-E/F).
 //! * [`matrix`], [`mem`], [`storage`] — dense matrices (row/col-major,
-//!   tall/wide, virtual, grouped), the recycled memory-chunk pool, and the
-//!   SAFS-like streaming external-memory store (§III-B).
+//!   tall/wide, virtual, grouped), the recycled memory-chunk pool, the
+//!   SAFS-like streaming external-memory store, and the write-through
+//!   matrix cache + async read-ahead that keep out-of-core passes close
+//!   to in-memory speed (§III-B, §III-B3; see `docs/ARCHITECTURE.md`).
 //! * [`runtime`] — the AOT XLA/PJRT compute path: per-partition algorithm
 //!   steps compiled from JAX/Pallas at build time (`make artifacts`) play
 //!   the role BLAS plays in the paper.
@@ -46,6 +48,10 @@ pub mod metrics;
 pub mod runtime;
 pub mod storage;
 pub mod vudf;
+pub(crate) mod xla_stub;
+
+#[cfg(test)]
+pub(crate) mod testutil;
 
 pub use config::{EngineConfig, StorageKind};
 pub use error::{FmError, Result};

@@ -1,0 +1,546 @@
+//! Write-through matrix cache + async partition read-ahead (paper §III-B3).
+//!
+//! SAFS deliberately bypasses the OS page cache (a streaming scan would
+//! only evict useful pages), so FlashMatrix supplies its **own** memory
+//! hierarchy for external-memory matrices: a bounded, write-through cache
+//! of I/O-level partitions keyed by `(matrix id, partition index)`.
+//!
+//! * **Write-through** — partitions written through a
+//!   [`DenseBuilder`](crate::matrix::DenseBuilder) land on the SSD file
+//!   *and* in the cache, so the file is always authoritative: eviction
+//!   never loses data and a cache-bypassing read
+//!   (e.g. [`crate::storage::StreamReader`]) is always consistent.
+//! * **LRU with pinning** — capacity eviction removes the
+//!   least-recently-used *unpinned* entry; pinned entries are skipped.
+//!   Prefetched partitions carry one pin until their first consumer
+//!   arrives, so read-ahead cannot be undone by eviction pressure.
+//! * **Async read-ahead** — a dedicated prefetch thread pulls the next
+//!   partition of a sequential scan into the cache while the current one
+//!   is being computed ([`PartitionCache::prefetch`]), so single-worker
+//!   EM passes overlap I/O with compute instead of alternating.
+//!
+//! Capacity comes from [`crate::config::EngineConfig::em_cache_bytes`]
+//! (0 disables the cache — the Fig 11-style ablation knob, exercised by
+//! `benches/cache_ablation.rs`); the read-ahead queue depth from
+//! [`crate::config::EngineConfig::prefetch_depth`]. Hit / miss / eviction
+//! / prefetch counts are recorded in [`crate::metrics::Metrics`].
+//!
+//! Cache *residency* is a materialization-time decision made by the `fmr`
+//! layer: engine inputs and user-materialized results register with the
+//! cache, while eager-mode one-shot intermediates bypass it entirely
+//! (they would only evict reusable partitions; see
+//! [`crate::fmr::engine::Engine::materialize_intermediate`]).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, SyncSender};
+use std::sync::{Arc, Mutex};
+
+use crate::metrics::Metrics;
+use crate::storage::FileStore;
+
+/// One cached I/O-level partition.
+struct Entry {
+    bytes: Arc<Vec<u8>>,
+    /// LRU clock value of the last touch.
+    stamp: u64,
+    /// Pin count; entries with `pins > 0` are never capacity-evicted.
+    pins: u32,
+    /// Prefetched entries carry one pin that clears on first hit.
+    unpin_on_hit: bool,
+}
+
+struct Inner {
+    map: HashMap<(u64, usize), Entry>,
+    bytes_used: usize,
+    clock: u64,
+    /// Matrix ids with a live [`CacheHandle`]. Prefetch completions for
+    /// ids no longer here are dropped — otherwise a read-ahead finishing
+    /// after its matrix was dropped would admit a pinned entry nothing
+    /// can ever consume or evict.
+    live: std::collections::HashSet<u64>,
+}
+
+/// An asynchronous read request executed by the prefetch thread.
+struct PrefetchReq {
+    cache: Arc<PartitionCache>,
+    store: Arc<FileStore>,
+    matrix_id: u64,
+    part: usize,
+    off: u64,
+    len: usize,
+}
+
+/// Bounded write-through cache of I/O-level partitions (§III-B3).
+///
+/// Shared by every external-memory matrix of one engine; each matrix owns
+/// a key namespace through its [`CacheHandle`].
+pub struct PartitionCache {
+    inner: Mutex<Inner>,
+    capacity: usize,
+    metrics: Arc<Metrics>,
+    next_matrix_id: AtomicU64,
+    prefetch_tx: Option<SyncSender<PrefetchReq>>,
+}
+
+impl PartitionCache {
+    /// A cache of `capacity` bytes. `prefetch_depth > 0` also starts the
+    /// read-ahead thread with a request queue of that depth.
+    pub fn new(
+        capacity: usize,
+        prefetch_depth: usize,
+        metrics: Arc<Metrics>,
+    ) -> Arc<PartitionCache> {
+        let (tx, rx) = if prefetch_depth > 0 {
+            let (tx, rx) = sync_channel::<PrefetchReq>(prefetch_depth);
+            (Some(tx), Some(rx))
+        } else {
+            (None, None)
+        };
+        let cache = Arc::new(PartitionCache {
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                bytes_used: 0,
+                clock: 0,
+                live: std::collections::HashSet::new(),
+            }),
+            capacity,
+            metrics,
+            next_matrix_id: AtomicU64::new(0),
+            prefetch_tx: tx,
+        });
+        if let Some(rx) = rx {
+            // The thread owns only the receiver; queued requests hold the
+            // Arc transiently, so dropping the last engine reference drops
+            // the sender and the thread exits.
+            let _ = std::thread::Builder::new()
+                .name("fm-prefetch".into())
+                .spawn(move || {
+                    while let Ok(req) = rx.recv() {
+                        // the consumer may have read the partition while
+                        // this request sat in the queue — don't pay a
+                        // second (throttled) store read for it
+                        if req.cache.contains(req.matrix_id, req.part) {
+                            continue;
+                        }
+                        let mut buf = vec![0u8; req.len];
+                        if req.store.read_at(req.off, &mut buf).is_ok() {
+                            req.cache.insert_prefetched(req.matrix_id, req.part, buf);
+                        }
+                    }
+                });
+        }
+        cache
+    }
+
+    /// Allocate a fresh matrix id (one key namespace per cached matrix)
+    /// and mark it live for prefetch admission.
+    pub fn alloc_matrix_id(&self) -> u64 {
+        let id = self.next_matrix_id.fetch_add(1, Ordering::Relaxed);
+        self.inner.lock().unwrap().live.insert(id);
+        id
+    }
+
+    /// Configured capacity in bytes.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Bytes currently resident.
+    pub fn bytes_used(&self) -> usize {
+        self.inner.lock().unwrap().bytes_used
+    }
+
+    /// Number of resident partitions.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Whether a partition is resident (no metric bump, no LRU touch).
+    pub fn contains(&self, matrix_id: u64, part: usize) -> bool {
+        self.inner
+            .lock()
+            .unwrap()
+            .map
+            .contains_key(&(matrix_id, part))
+    }
+
+    /// Look up a partition. A hit refreshes LRU recency (and releases a
+    /// prefetch pin); hits and misses are counted in [`Metrics`].
+    pub fn get(&self, matrix_id: u64, part: usize) -> Option<Arc<Vec<u8>>> {
+        self.lookup(matrix_id, part, true)
+    }
+
+    /// Like [`get`](Self::get) but without touching the hit/miss counters:
+    /// for residency snapshots that are served another way on absence
+    /// (e.g. the streaming export scan), where counting a "miss" would
+    /// skew the ablation numbers. Still refreshes LRU recency and
+    /// releases a prefetch pin on hit.
+    pub fn peek(&self, matrix_id: u64, part: usize) -> Option<Arc<Vec<u8>>> {
+        self.lookup(matrix_id, part, false)
+    }
+
+    fn lookup(&self, matrix_id: u64, part: usize, count: bool) -> Option<Arc<Vec<u8>>> {
+        let mut g = self.inner.lock().unwrap();
+        g.clock += 1;
+        let clock = g.clock;
+        let found = match g.map.get_mut(&(matrix_id, part)) {
+            Some(e) => {
+                e.stamp = clock;
+                if e.unpin_on_hit {
+                    e.unpin_on_hit = false;
+                    e.pins = e.pins.saturating_sub(1);
+                }
+                Some(Arc::clone(&e.bytes))
+            }
+            None => None,
+        };
+        drop(g);
+        if count {
+            if found.is_some() {
+                self.metrics.cache_hits.fetch_add(1, Ordering::Relaxed);
+            } else {
+                self.metrics.cache_misses.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        found
+    }
+
+    /// Insert a partition (write-through population or post-miss fill).
+    /// Replaces any previous bytes for the key; evicts LRU unpinned
+    /// entries to make room. Entries larger than the whole cache are not
+    /// admitted; if everything else is pinned the entry is dropped rather
+    /// than blocking.
+    pub fn insert(&self, matrix_id: u64, part: usize, bytes: Vec<u8>) {
+        self.insert_entry(matrix_id, part, bytes, false);
+    }
+
+    /// Prefetch insert: like [`insert`](Self::insert) but the entry holds
+    /// one pin until its first hit, so eviction pressure cannot undo the
+    /// read-ahead before its consumer arrives. If the consumer beat the
+    /// prefetch the existing entry is kept untouched.
+    fn insert_prefetched(&self, matrix_id: u64, part: usize, bytes: Vec<u8>) {
+        self.insert_entry(matrix_id, part, bytes, true);
+    }
+
+    fn insert_entry(&self, matrix_id: u64, part: usize, bytes: Vec<u8>, prefetched: bool) {
+        let len = bytes.len();
+        if len > self.capacity {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        let inner = &mut *g;
+        inner.clock += 1;
+        let stamp = inner.clock;
+        if prefetched && !inner.live.contains(&matrix_id) {
+            return; // matrix dropped while the read-ahead was in flight
+        }
+        if let Some(e) = inner.map.get_mut(&(matrix_id, part)) {
+            if prefetched {
+                return; // consumer's copy is already there; keep it
+            }
+            // a direct insert means the consumer has come and gone; a
+            // still-pending read-ahead pin has served its purpose — keep
+            // it and the entry would be pinned forever
+            if e.unpin_on_hit {
+                e.unpin_on_hit = false;
+                e.pins = e.pins.saturating_sub(1);
+            }
+            inner.bytes_used = inner.bytes_used - e.bytes.len() + len;
+            e.bytes = Arc::new(bytes);
+            e.stamp = stamp;
+            return;
+        }
+        let mut evicted = 0u64;
+        while inner.bytes_used + len > self.capacity {
+            let victim = inner
+                .map
+                .iter()
+                .filter(|(_, e)| e.pins == 0)
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(k, _)| *k);
+            match victim {
+                Some(k) => {
+                    if let Some(e) = inner.map.remove(&k) {
+                        inner.bytes_used -= e.bytes.len();
+                    }
+                    evicted += 1;
+                }
+                None => {
+                    // everything resident is pinned: skip admission
+                    if evicted > 0 {
+                        self.metrics
+                            .cache_evictions
+                            .fetch_add(evicted, Ordering::Relaxed);
+                    }
+                    return;
+                }
+            }
+        }
+        inner.bytes_used += len;
+        inner.map.insert(
+            (matrix_id, part),
+            Entry {
+                bytes: Arc::new(bytes),
+                stamp,
+                pins: u32::from(prefetched),
+                unpin_on_hit: prefetched,
+            },
+        );
+        drop(g);
+        if evicted > 0 {
+            self.metrics
+                .cache_evictions
+                .fetch_add(evicted, Ordering::Relaxed);
+        }
+    }
+
+    /// Pin a resident partition: LRU eviction will skip it until every
+    /// pin is released. Returns `false` when the partition is not
+    /// resident (nothing to pin).
+    pub fn pin(&self, matrix_id: u64, part: usize) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        match g.map.get_mut(&(matrix_id, part)) {
+            Some(e) => {
+                e.pins += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Release one pin of a resident partition.
+    pub fn unpin(&self, matrix_id: u64, part: usize) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(e) = g.map.get_mut(&(matrix_id, part)) {
+            e.pins = e.pins.saturating_sub(1);
+            e.unpin_on_hit = false;
+        }
+    }
+
+    /// Drop every partition of one matrix (its handle was dropped).
+    /// Ignores pins — the owner is gone, nothing can consume them — and
+    /// retires the id so late prefetch completions are not admitted.
+    pub fn evict_matrix(&self, matrix_id: u64) {
+        let mut g = self.inner.lock().unwrap();
+        let inner = &mut *g;
+        inner.live.remove(&matrix_id);
+        let keys: Vec<(u64, usize)> = inner
+            .map
+            .keys()
+            .filter(|k| k.0 == matrix_id)
+            .copied()
+            .collect();
+        for k in keys {
+            if let Some(e) = inner.map.remove(&k) {
+                inner.bytes_used -= e.bytes.len();
+            }
+        }
+    }
+
+    /// Queue an asynchronous read of one partition into the cache. Best
+    /// effort by design: the request is dropped when the partition is
+    /// already resident, read-ahead is disabled, or the queue is full —
+    /// compute never blocks on read-ahead.
+    pub fn prefetch(
+        cache: &Arc<PartitionCache>,
+        store: &Arc<FileStore>,
+        matrix_id: u64,
+        part: usize,
+        off: u64,
+        len: usize,
+    ) {
+        let Some(tx) = &cache.prefetch_tx else { return };
+        if cache.contains(matrix_id, part) {
+            return;
+        }
+        let req = PrefetchReq {
+            cache: Arc::clone(cache),
+            store: Arc::clone(store),
+            matrix_id,
+            part,
+            off,
+            len,
+        };
+        if tx.try_send(req).is_ok() {
+            cache
+                .metrics
+                .prefetch_issued
+                .fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// A matrix's registration in the engine cache: the shared cache plus the
+/// matrix's private key namespace. Dropping the handle (it lives inside
+/// the matrix backing) evicts all of the matrix's partitions.
+pub struct CacheHandle {
+    pub cache: Arc<PartitionCache>,
+    pub matrix_id: u64,
+}
+
+impl CacheHandle {
+    pub fn register(cache: Arc<PartitionCache>) -> CacheHandle {
+        let matrix_id = cache.alloc_matrix_id();
+        CacheHandle { cache, matrix_id }
+    }
+}
+
+impl Drop for CacheHandle {
+    fn drop(&mut self) {
+        self.cache.evict_matrix(self.matrix_id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::SsdSim;
+
+    fn cache(cap: usize) -> Arc<PartitionCache> {
+        PartitionCache::new(cap, 0, Arc::new(Metrics::new()))
+    }
+
+    #[test]
+    fn lru_evicts_oldest_untouched() {
+        let c = cache(300);
+        c.insert(0, 0, vec![0u8; 100]);
+        c.insert(0, 1, vec![1u8; 100]);
+        c.insert(0, 2, vec![2u8; 100]);
+        assert_eq!(c.bytes_used(), 300);
+        // touch partition 0 so partition 1 becomes the LRU victim
+        assert!(c.get(0, 0).is_some());
+        c.insert(0, 3, vec![3u8; 100]);
+        assert!(c.contains(0, 0));
+        assert!(!c.contains(0, 1), "LRU partition must be evicted");
+        assert!(c.contains(0, 2) && c.contains(0, 3));
+        assert_eq!(c.metrics.snapshot().cache_evictions, 1);
+    }
+
+    #[test]
+    fn pinned_entries_survive_pressure() {
+        let c = cache(200);
+        c.insert(7, 0, vec![0u8; 100]);
+        c.insert(7, 1, vec![0u8; 100]);
+        assert!(c.pin(7, 0));
+        c.insert(7, 2, vec![0u8; 100]); // must evict 1, not pinned 0
+        assert!(c.contains(7, 0) && !c.contains(7, 1) && c.contains(7, 2));
+        assert!(c.pin(7, 2));
+        // everything pinned: new entries are skipped, not deadlocked
+        c.insert(7, 3, vec![0u8; 100]);
+        assert!(!c.contains(7, 3));
+        // releasing a pin makes its entry evictable again
+        c.unpin(7, 0);
+        c.insert(7, 4, vec![0u8; 100]);
+        assert!(!c.contains(7, 0) && c.contains(7, 2) && c.contains(7, 4));
+    }
+
+    #[test]
+    fn oversized_skipped_and_replacement_accounted() {
+        let c = cache(250);
+        c.insert(1, 0, vec![0u8; 300]); // larger than the cache
+        assert!(c.is_empty());
+        c.insert(1, 1, vec![1u8; 100]);
+        c.insert(1, 1, vec![2u8; 200]); // replacement re-accounts bytes
+        assert_eq!(c.bytes_used(), 200);
+        assert_eq!(c.get(1, 1).unwrap()[0], 2);
+    }
+
+    #[test]
+    fn evict_matrix_is_scoped_to_one_id() {
+        let c = cache(1000);
+        c.insert(1, 0, vec![0u8; 100]);
+        c.insert(2, 0, vec![0u8; 100]);
+        c.evict_matrix(1);
+        assert!(!c.contains(1, 0) && c.contains(2, 0));
+        assert_eq!(c.bytes_used(), 100);
+    }
+
+    #[test]
+    fn handle_drop_evicts_its_matrix() {
+        let c = cache(1000);
+        let h = CacheHandle::register(Arc::clone(&c));
+        let other = CacheHandle::register(Arc::clone(&c));
+        assert_ne!(h.matrix_id, other.matrix_id);
+        c.insert(h.matrix_id, 0, vec![0u8; 64]);
+        c.insert(other.matrix_id, 0, vec![0u8; 64]);
+        drop(h);
+        assert_eq!(c.len(), 1);
+        assert!(c.contains(other.matrix_id, 0));
+    }
+
+    #[test]
+    fn hit_miss_counters() {
+        let c = cache(1000);
+        c.insert(3, 0, vec![0u8; 10]);
+        assert!(c.get(3, 0).is_some());
+        assert!(c.get(3, 1).is_none());
+        let s = c.metrics.snapshot();
+        assert_eq!((s.cache_hits, s.cache_misses), (1, 1));
+    }
+
+    #[test]
+    fn prefetch_lands_pinned_until_first_hit() {
+        let dir = crate::testutil::TempDir::new("cache-pf");
+        let metrics = Arc::new(Metrics::new());
+        let c = PartitionCache::new(512, 2, Arc::clone(&metrics));
+        let ssd = Arc::new(SsdSim::new(None));
+        let store =
+            Arc::new(FileStore::create(dir.path(), None, 256, ssd, Arc::clone(&metrics)).unwrap());
+        store.write_at(0, &[42u8; 256]).unwrap();
+
+        // prefetch only lands for live (registered) matrix ids
+        let h = CacheHandle::register(Arc::clone(&c));
+        let id = h.matrix_id;
+        PartitionCache::prefetch(&c, &store, id, 0, 0, 256);
+        for _ in 0..2000 {
+            if c.contains(id, 0) {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert!(c.contains(id, 0), "prefetch did not land");
+        assert_eq!(metrics.snapshot().prefetch_issued, 1);
+
+        // pinned: pressure cannot evict it before its consumer arrives
+        c.insert(id, 1, vec![0u8; 384]);
+        assert!(c.contains(id, 0) && !c.contains(id, 1));
+
+        // the first hit consumes the read-ahead and releases the pin
+        assert_eq!(c.get(id, 0).unwrap()[0], 42);
+        c.insert(id, 2, vec![0u8; 384]);
+        assert!(!c.contains(id, 0) && c.contains(id, 2));
+    }
+
+    #[test]
+    fn direct_insert_releases_stale_prefetch_pin() {
+        // consumer missed, read the file itself, then its insert() lands
+        // on top of a prefetched (pinned) entry: the stale read-ahead pin
+        // must be released or the entry is pinned forever
+        let c = cache(300);
+        let h = CacheHandle::register(Arc::clone(&c));
+        let id = h.matrix_id;
+        c.insert_prefetched(id, 0, vec![1u8; 100]);
+        c.insert(id, 0, vec![2u8; 100]); // consumer refill
+        c.insert(id, 1, vec![0u8; 100]);
+        c.insert(id, 2, vec![0u8; 100]);
+        c.insert(id, 3, vec![0u8; 100]); // pressure: (id,0) must be evictable
+        assert!(!c.contains(id, 0), "stale prefetch pin leaked");
+        assert_eq!(c.get(id, 0), None);
+        assert_eq!(c.get(id, 3).unwrap()[0], 0);
+    }
+
+    #[test]
+    fn late_prefetch_for_dropped_matrix_not_admitted() {
+        let c = cache(1000);
+        let h = CacheHandle::register(Arc::clone(&c));
+        let id = h.matrix_id;
+        drop(h); // matrix gone; a read-ahead completing now must be dropped
+        c.insert_prefetched(id, 0, vec![0u8; 64]);
+        assert!(c.is_empty(), "dead-matrix prefetch was admitted");
+    }
+}

@@ -10,9 +10,12 @@
 //! Backing is either
 //! * [`Backing::Mem`] — partitions packed into recycled fixed-size chunks
 //!   from the [`ChunkPool`] (§III-B5), or
-//! * [`Backing::Ext`] — a [`FileStore`] on the simulated SSD array, with an
-//!   optional write-through *matrix cache* holding the first few columns in
-//!   memory (§III-B3).
+//! * [`Backing::Ext`] — a [`FileStore`] on the simulated SSD array, layered
+//!   under the write-through memory hierarchy of §III-B3: the engine-wide
+//!   **partition cache** ([`crate::matrix::cache::PartitionCache`], keyed by
+//!   matrix id + partition index) and an optional first-`cache_cols` column
+//!   cache. Reads consult the partition cache before touching the file;
+//!   writes go through to both.
 
 use std::sync::{Arc, Mutex};
 
@@ -20,9 +23,10 @@ use crate::dtype::DType;
 use crate::error::{FmError, Result};
 use crate::mem::{Chunk, ChunkPool};
 use crate::metrics::Metrics;
-use crate::storage::{FileStore, SsdSim};
+use crate::storage::{FileStore, SsdSim, StreamReader};
 use crate::vudf::Buf;
 
+use super::cache::{CacheHandle, PartitionCache};
 use super::partition::Partitioning;
 
 /// Where a dense matrix's bytes live.
@@ -42,6 +46,10 @@ pub enum Backing {
         /// same order as the file (only the first cache_cols columns).
         cache: Option<Vec<u8>>,
         metrics: Arc<Metrics>,
+        /// Registration in the engine's write-through partition cache
+        /// (§III-B3); `None` for uncached matrices (cache disabled, or a
+        /// one-shot intermediate that must not pollute the cache).
+        pcache: Option<CacheHandle>,
     },
 }
 
@@ -63,8 +71,10 @@ impl DenseData {
     }
 
     /// Bytes of I/O-level partition `i` (col-major within the partition).
-    /// In-memory: a copy out of the chunk; external: one `pread` (or a
-    /// cache-assisted partial read for cached matrices).
+    /// In-memory: a copy out of the chunk. External: the write-through
+    /// partition cache is consulted first (§III-B3); a miss costs one
+    /// `pread` (or a column-cache-assisted partial read) and, for cached
+    /// matrices, refills the cache.
     pub fn partition_bytes(&self, i: usize) -> Result<Vec<u8>> {
         let esz = self.dtype.size();
         let nbytes = self.parts.part_bytes(i, esz);
@@ -78,14 +88,24 @@ impl DenseData {
                 cache_cols,
                 cache,
                 metrics,
+                pcache,
             } => {
+                if let Some(h) = pcache {
+                    if let Some(b) = h.cache.get(h.matrix_id, i) {
+                        return Ok(b.as_ref().clone());
+                    }
+                }
                 let prows = self.parts.rows_in(i) as usize;
                 let file_off = self.parts.part_offset(i, esz);
-                match cache {
+                let out = match cache {
                     Some(cached) if *cache_cols > 0 => {
                         // cached columns come from memory; read only the
                         // contiguous tail columns from the file.
-                        metrics.cache_hits.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        if pcache.is_none() {
+                            metrics
+                                .cache_hits
+                                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        }
                         let cc = (*cache_cols).min(self.parts.ncol) as usize;
                         let cache_part_off =
                             (self.parts.part_offset(i, esz) / self.parts.ncol) * cc as u64;
@@ -100,16 +120,51 @@ impl DenseData {
                                 &mut out[cached_bytes..],
                             )?;
                         }
-                        Ok(out)
+                        out
                     }
                     _ => {
-                        metrics.cache_misses.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        if pcache.is_none() {
+                            metrics
+                                .cache_misses
+                                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        }
                         let mut out = vec![0u8; nbytes];
                         store.read_at(file_off, &mut out)?;
-                        Ok(out)
+                        out
                     }
+                };
+                if let Some(h) = pcache {
+                    h.cache.insert(h.matrix_id, i, out.clone());
                 }
+                Ok(out)
             }
+        }
+    }
+
+    /// Hint: asynchronously read partition `i` into the engine's partition
+    /// cache so a following [`partition_bytes`](Self::partition_bytes)
+    /// hits memory — I/O overlapped with compute (§III-B3). No-op for
+    /// in-memory matrices, uncached matrices, out-of-range indices, or
+    /// when read-ahead is disabled/backlogged.
+    pub fn prefetch_partition(&self, i: usize) {
+        if i >= self.parts.n_parts() {
+            return;
+        }
+        if let Backing::Ext {
+            store,
+            pcache: Some(h),
+            ..
+        } = &self.backing
+        {
+            let esz = self.dtype.size();
+            PartitionCache::prefetch(
+                &h.cache,
+                store,
+                h.matrix_id,
+                i,
+                self.parts.part_offset(i, esz),
+                self.parts.part_bytes(i, esz),
+            );
         }
     }
 
@@ -119,14 +174,66 @@ impl DenseData {
     }
 
     /// Whole matrix as one col-major `Buf` (small matrices / tests only).
+    ///
+    /// External matrices run a double-buffered sequential scan through
+    /// [`StreamReader`]: partition `i+1` is in flight while partition `i`
+    /// is being assembled (the §III-B3 I/O/compute overlap). Partitions
+    /// already resident in the matrix cache are served from memory and
+    /// skipped in the stream (write-through keeps both sides identical).
     pub fn to_buf(&self) -> Result<Buf> {
         let n = (self.parts.nrow * self.parts.ncol) as usize;
         let mut out = Buf::alloc(self.dtype, n);
         let nrow = self.parts.nrow as usize;
-        for i in 0..self.parts.n_parts() {
+        let n_parts = self.parts.n_parts();
+
+        let mut streamed: Option<StreamReader> = None;
+        let mut resident: Vec<Option<Arc<Vec<u8>>>> = Vec::new();
+        if let Backing::Ext {
+            store,
+            cache_cols,
+            cache,
+            pcache,
+            ..
+        } = &self.backing
+        {
+            // with a column cache in play, partial reads must go through
+            // partition_bytes (which serves the cached columns from
+            // memory); streaming whole partitions would re-read them
+            if cache.is_none() || *cache_cols == 0 {
+                let esz = self.dtype.size();
+                // peek, not get: absent partitions are served by the
+                // stream below, so counting them as cache misses would
+                // skew the ablation numbers
+                resident = (0..n_parts)
+                    .map(|i| pcache.as_ref().and_then(|h| h.cache.peek(h.matrix_id, i)))
+                    .collect();
+                let ranges: Vec<(u64, usize)> = (0..n_parts)
+                    .filter(|&i| resident[i].is_none())
+                    .map(|i| (self.parts.part_offset(i, esz), self.parts.part_bytes(i, esz)))
+                    .collect();
+                streamed = Some(StreamReader::new(Arc::clone(store), ranges, 2));
+            }
+        }
+
+        for i in 0..n_parts {
+            let from_cache = resident.get(i).and_then(|c| c.clone());
+            let owned: Vec<u8>;
+            let bytes: &[u8] = match (&from_cache, &streamed) {
+                (Some(b), _) => b.as_slice(),
+                (None, Some(r)) => {
+                    owned = r
+                        .next()
+                        .ok_or_else(|| FmError::Storage("partition stream ended early".into()))??;
+                    &owned
+                }
+                (None, None) => {
+                    owned = self.partition_bytes(i)?;
+                    &owned
+                }
+            };
             let (r0, _) = self.parts.part_rows(i);
             let prows = self.parts.rows_in(i) as usize;
-            let pb = self.partition_buf(i)?;
+            let pb = Buf::from_bytes(self.dtype, bytes)?;
             for j in 0..self.parts.ncol as usize {
                 let col = pb.slice(j * prows, prows);
                 out.copy_from(j * nrow + r0 as usize, &col);
@@ -155,6 +262,7 @@ enum BuilderMode {
         cache_cols: u64,
         cache: Option<Mutex<Vec<u8>>>,
         metrics: Arc<Metrics>,
+        pcache: Option<CacheHandle>,
     },
 }
 
@@ -188,6 +296,9 @@ impl DenseBuilder {
     }
 
     /// External-memory builder backed by a (possibly throttled) file.
+    /// `pcache` registers the matrix with the engine's write-through
+    /// partition cache (§III-B3); pass `None` for one-shot intermediates
+    /// that must not pollute the cache (the `fmr` residency decision).
     pub fn new_ext(
         dtype: DType,
         parts: Partitioning,
@@ -196,6 +307,7 @@ impl DenseBuilder {
         cache_cols: u64,
         ssd: Arc<SsdSim>,
         metrics: Arc<Metrics>,
+        pcache: Option<Arc<PartitionCache>>,
     ) -> Result<DenseBuilder> {
         let store = Arc::new(FileStore::create(
             dir,
@@ -221,6 +333,7 @@ impl DenseBuilder {
                 cache_cols,
                 cache,
                 metrics,
+                pcache: pcache.map(CacheHandle::register),
             },
         })
     }
@@ -235,8 +348,8 @@ impl DenseBuilder {
 
     /// Write partition `i` from col-major bytes. Thread-safe across
     /// distinct partitions. External matrices are write-through: bytes land
-    /// on the file *and* (for the cached columns) in the memory cache
-    /// (§III-B3).
+    /// on the file *and* in the memory hierarchy — the engine's partition
+    /// cache and (for the cached columns) the column cache (§III-B3).
     pub fn write_partition(&self, i: usize, bytes: &[u8]) -> Result<()> {
         let esz = self.dtype.size();
         let expect = self.parts.part_bytes(i, esz);
@@ -257,6 +370,7 @@ impl DenseBuilder {
                 store,
                 cache_cols,
                 cache,
+                pcache,
                 ..
             } => {
                 store.write_at(self.parts.part_offset(i, esz), bytes)?;
@@ -268,6 +382,9 @@ impl DenseBuilder {
                         ((self.parts.part_offset(i, esz) / self.parts.ncol) * cc as u64) as usize;
                     c.lock().unwrap()[cache_off..cache_off + cached_bytes]
                         .copy_from_slice(&bytes[..cached_bytes]);
+                }
+                if let Some(h) = pcache {
+                    h.cache.insert(h.matrix_id, i, bytes.to_vec());
                 }
                 Ok(())
             }
@@ -298,11 +415,13 @@ impl DenseBuilder {
                 cache_cols,
                 cache,
                 metrics,
+                pcache,
             } => Backing::Ext {
                 store,
                 cache_cols,
                 cache: cache.map(|m| m.into_inner().unwrap()),
                 metrics,
+                pcache,
             },
         };
         DenseData {
@@ -366,6 +485,7 @@ mod tests {
             2, // cache first 2 columns
             ssd,
             Arc::clone(&metrics),
+            None,
         )
         .unwrap();
         for i in 0..parts.n_parts() {
@@ -383,6 +503,60 @@ mod tests {
         assert_eq!(p1.get(300).as_f64(), 10_300.0);
         assert!(metrics.snapshot().cache_hits > 0);
         let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn partition_cache_write_through_consistency() {
+        let tmp = crate::testutil::TempDir::new("dense-pcache");
+        let dir = tmp.path().to_path_buf();
+        let ssd = Arc::new(SsdSim::new(None));
+        let metrics = Arc::new(Metrics::new());
+        let pc = PartitionCache::new(1 << 20, 0, Arc::clone(&metrics));
+        let parts = Partitioning::with_io_rows(256, 2, 128);
+        let b = DenseBuilder::new_ext(
+            DType::F64,
+            parts.clone(),
+            &dir,
+            None,
+            0,
+            ssd,
+            Arc::clone(&metrics),
+            Some(Arc::clone(&pc)),
+        )
+        .unwrap();
+        for i in 0..parts.n_parts() {
+            let prows = parts.rows_in(i) as usize;
+            let mut buf = Buf::alloc(DType::F64, prows * 2);
+            for e in 0..buf.len() {
+                buf.set(e, Scalar::F64((i * 1000 + e) as f64));
+            }
+            b.write_partition_buf(i, &buf).unwrap();
+        }
+        let m = b.finish();
+        assert_eq!(pc.len(), 2, "write-through must populate the cache");
+
+        // a cached read serves from memory: no file I/O
+        let before = metrics.snapshot();
+        let hit_copy = m.partition_bytes(0).unwrap();
+        let after = metrics.snapshot();
+        assert_eq!(after.cache_hits - before.cache_hits, 1);
+        assert_eq!(
+            after.io_read_reqs, before.io_read_reqs,
+            "cache hit must not touch the file"
+        );
+
+        // force eviction by pressure from another matrix id, then re-read:
+        // the file alone must reproduce the same bytes (write-through)
+        pc.insert(999, 0, vec![0u8; 700_000]);
+        pc.insert(999, 1, vec![0u8; 700_000]);
+        let miss_copy = m.partition_bytes(0).unwrap();
+        assert_eq!(hit_copy, miss_copy, "file and cache must agree");
+        assert!(metrics.snapshot().cache_evictions > 0);
+
+        // the miss refilled the cache; dropping the matrix evicts its keys
+        let len_before_drop = pc.len();
+        drop(m);
+        assert!(pc.len() < len_before_drop, "drop must evict the matrix");
     }
 
     #[test]

@@ -11,10 +11,15 @@
 //!   matrices and the row-major layout are represented (§III-B1).
 //! * [`HostMat`] — a small host-resident matrix (sink results, centroids,
 //!   the "short" operand of inner products).
+//! * [`cache`] — the write-through partition cache + async read-ahead that
+//!   sit between external-memory matrices and [`crate::storage`]
+//!   (§III-B3).
 
+pub mod cache;
 pub mod dense;
 pub mod partition;
 
+pub use cache::{CacheHandle, PartitionCache};
 pub use dense::{Backing, DenseBuilder, DenseData};
 pub use partition::{io_rows_for, Partitioning};
 

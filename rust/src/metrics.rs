@@ -30,6 +30,10 @@ pub struct Metrics {
     /// Matrix-cache hits / misses (EM cached matrices).
     pub cache_hits: AtomicU64,
     pub cache_misses: AtomicU64,
+    /// Partitions evicted from the matrix cache under capacity pressure.
+    pub cache_evictions: AtomicU64,
+    /// Async partition read-aheads queued to the prefetch thread.
+    pub prefetch_issued: AtomicU64,
 }
 
 impl Metrics {
@@ -69,6 +73,8 @@ impl Metrics {
             native_partitions: self.native_partitions.load(Ordering::Relaxed),
             cache_hits: self.cache_hits.load(Ordering::Relaxed),
             cache_misses: self.cache_misses.load(Ordering::Relaxed),
+            cache_evictions: self.cache_evictions.load(Ordering::Relaxed),
+            prefetch_issued: self.prefetch_issued.load(Ordering::Relaxed),
         }
     }
 
@@ -87,6 +93,8 @@ impl Metrics {
             &s.native_partitions,
             &s.cache_hits,
             &s.cache_misses,
+            &s.cache_evictions,
+            &s.prefetch_issued,
         ] {
             c.store(0, Ordering::Relaxed);
         }
@@ -107,6 +115,8 @@ pub struct MetricsSnapshot {
     pub native_partitions: u64,
     pub cache_hits: u64,
     pub cache_misses: u64,
+    pub cache_evictions: u64,
+    pub prefetch_issued: u64,
 }
 
 impl MetricsSnapshot {
@@ -124,6 +134,8 @@ impl MetricsSnapshot {
             native_partitions: self.native_partitions - earlier.native_partitions,
             cache_hits: self.cache_hits - earlier.cache_hits,
             cache_misses: self.cache_misses - earlier.cache_misses,
+            cache_evictions: self.cache_evictions - earlier.cache_evictions,
+            prefetch_issued: self.prefetch_issued - earlier.prefetch_issued,
         }
     }
 }

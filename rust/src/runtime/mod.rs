@@ -24,6 +24,9 @@ use std::sync::{Arc, Mutex};
 
 use crate::dtype::DType;
 use crate::error::{FmError, Result};
+// The `xla` name resolves to the in-tree stub unless the real crate is
+// wired in (see src/xla_stub.rs).
+use crate::xla_stub as xla;
 
 /// A host-side tensor crossing the service boundary.
 #[derive(Clone, Debug)]

@@ -13,10 +13,15 @@
 //!   can impose the paper's DRAM:SSD speed *ratio* (~10x) regardless of
 //!   what the local disk actually does (DESIGN.md §Substitutions).
 //! * [`StreamReader`] — bounded-queue read-ahead (backpressure included)
-//!   for sequential scans.
+//!   for sequential scans; with depth 2 it double-buffers a scan so the
+//!   next partition's read overlaps the current partition's compute.
 //!
 //! The explicit write-through *matrix cache* of §III-B3 lives in
-//! [`crate::matrix::cache`], layered on top of this store.
+//! [`crate::matrix::cache::PartitionCache`], layered on top of this store:
+//! reads consult it before issuing a `pread` here, writes go through to
+//! both, and its prefetch thread issues the asynchronous read-ahead for
+//! out-of-core passes. See `docs/ARCHITECTURE.md` for the full
+//! paper-section-to-module map.
 
 pub mod throttle;
 
@@ -290,6 +295,55 @@ mod tests {
             seen.extend(b.unwrap());
         }
         assert_eq!(seen, (0..32u8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn unaligned_offsets_roundtrip() {
+        let (s, _d) = mk(4096 + 7);
+        // a write at an odd offset spanning a typical block boundary
+        let pat: Vec<u8> = (0..997u32).map(|i| (i * 31 % 251) as u8).collect();
+        s.write_at(3, &pat).unwrap();
+        s.write_at(4093, &[9, 8, 7, 6]).unwrap();
+        let mut back = vec![0u8; 997];
+        s.read_at(3, &mut back).unwrap();
+        assert_eq!(back, pat);
+        // re-read the tail with a different split than it was written with
+        let mut tail = vec![0u8; 6];
+        s.read_at(4091, &mut tail).unwrap();
+        assert_eq!(&tail[..2], &[0, 0], "untouched bytes stay zero");
+        assert_eq!(&tail[2..], &[9, 8, 7, 6]);
+        // exact end-of-file read at an unaligned offset is still in bounds
+        let mut last = [0u8; 1];
+        s.read_at(4102, &mut last).unwrap();
+    }
+
+    #[test]
+    fn stream_reader_backpressure_under_slow_consumer() {
+        let dir = tempdir::TempDir::new();
+        let ssd = Arc::new(SsdSim::new(None));
+        let m = Arc::new(Metrics::new());
+        let s = Arc::new(FileStore::create(dir.path(), None, 64, ssd, Arc::clone(&m)).unwrap());
+        s.write_at(0, &(0..64u8).collect::<Vec<_>>()).unwrap();
+        m.reset();
+        let ranges: Vec<(u64, usize)> = (0..16u64).map(|i| (i * 4, 4usize)).collect();
+        let depth = 2;
+        let r = StreamReader::new(Arc::clone(&s), ranges, depth);
+        // consume slowly; the producer can run at most `depth` queued
+        // reads plus one blocked-in-send read ahead of the consumer
+        let mut seen = Vec::new();
+        for consumed in 1..=16usize {
+            let b = r.next().unwrap().unwrap();
+            seen.extend(b);
+            std::thread::sleep(std::time::Duration::from_millis(3));
+            let reqs = m.snapshot().io_read_reqs as usize;
+            assert!(
+                reqs <= consumed + depth + 1,
+                "producer ran ahead of backpressure: {reqs} reads after {consumed} consumed"
+            );
+        }
+        // ordering: the slow consumer still sees submission order
+        assert_eq!(seen, (0..64u8).collect::<Vec<_>>());
+        assert!(r.next().is_none());
     }
 
     #[test]

@@ -1,0 +1,32 @@
+//! Test-only helpers shared across unit-test modules.
+
+use std::path::{Path, PathBuf};
+
+/// Unique self-cleaning temp dir: removed on drop, so tests stay
+/// panic-safe and leave no litter behind.
+pub struct TempDir(PathBuf);
+
+impl TempDir {
+    pub fn new(tag: &str) -> TempDir {
+        let p = std::env::temp_dir().join(format!(
+            "fm-{tag}-{}-{:x}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        std::fs::create_dir_all(&p).unwrap();
+        TempDir(p)
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.0
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
