@@ -68,7 +68,10 @@ pub struct EngineConfig {
     pub throttle: Option<ThrottleConfig>,
     /// CPU-level partition budget in bytes (fits L1/L2; paper: KBs).
     pub cpu_part_bytes: usize,
-    /// Number of simulated NUMA nodes for partition→worker affinity.
+    /// Number of simulated NUMA nodes for partition→worker affinity: the
+    /// pass scheduler pins contiguous worker blocks to nodes, gives each
+    /// node one contiguous slab of the pass, and prefers same-node victims
+    /// when work-stealing ([`crate::exec::sched::RangeScheduler`]).
     pub numa_nodes: usize,
     /// Columns of the explicit matrix cache for EM matrices (0 = no cache).
     pub em_cache_cols: usize,
@@ -77,7 +80,10 @@ pub struct EngineConfig {
     /// 0 disables the cache — the `benches/cache_ablation.rs` knob.
     pub em_cache_bytes: usize,
     /// Queue depth of the async partition read-ahead thread that overlaps
-    /// a sequential EM scan's I/O with compute (0 disables read-ahead).
+    /// an EM scan's I/O with compute (0 disables read-ahead). Every pass
+    /// worker prefetches the next partition of its own scheduled range;
+    /// the cache's single-flight registry keeps that double-read-free at
+    /// any thread count.
     pub prefetch_depth: usize,
 }
 

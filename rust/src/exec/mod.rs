@@ -3,10 +3,14 @@
 //! A *pass* streams every I/O-level partition of the DAG's long dimension
 //! once, evaluating the compiled pipeline ([`pipeline::Program`]) for every
 //! CPU-level strip, writing target partitions and folding sink partials.
-//! Work is distributed by assigning I/O-level partitions to worker threads
-//! from an atomic counter; each thread keeps per-thread sink accumulators
-//! that are merged at the end with the VUDFs' `combine` form — exactly the
-//! paper's parallelization + partial-aggregation scheme.
+//! Work is distributed by the locality-aware [`sched::RangeScheduler`]:
+//! each worker owns one contiguous range of source-partition-sized
+//! locality units, steals half of the largest remaining range when it runs
+//! dry, and is pinned to a simulated NUMA node (`EngineConfig::numa_nodes`)
+//! that shapes which ranges it prefers to steal from. Each thread keeps
+//! per-thread sink accumulators that are merged at the end with the VUDFs'
+//! `combine` form — exactly the paper's parallelization +
+//! partial-aggregation scheme.
 //!
 //! Optimization toggles (Fig 11 ablations) act here:
 //! * `fuse_mem` is a *caller* decision: the `fmr` layer materializes each
@@ -16,13 +20,16 @@
 //! * `recycle_chunks` acts in [`crate::mem::ChunkPool`].
 //! * `em_cache_bytes` / `prefetch_depth` act through the source reads:
 //!   every EM partition read consults the write-through matrix cache
-//!   ([`crate::matrix::cache`], §III-B3) before touching the file, and a
-//!   single-worker pass queues the next partition's read so I/O overlaps
-//!   compute instead of alternating.
+//!   ([`crate::matrix::cache`], §III-B3) before touching the file, and
+//!   every worker queues the read of the next partition *of its own range*
+//!   so I/O overlaps compute instead of alternating — deterministic
+//!   ownership (range scheduling) plus the cache's single-flight registry
+//!   make that safe with any worker count.
 
 pub mod pipeline;
+pub mod sched;
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
 
 use crate::config::{EngineConfig, StorageKind};
@@ -106,7 +113,9 @@ pub fn run_pass_opts(
     // same source partition (the per-worker cache is keyed by source
     // partition) and measured *slower* (summary t=2: 0.038s -> 0.087s).
     // Kept at the source partition size; reverted per the measure-keep-
-    // or-revert rule. See EXPERIMENTS.md §Perf.
+    // or-revert rule. See EXPERIMENTS.md §Perf. The range scheduler below
+    // attacks the same re-copy problem from the dispatch side: pass
+    // partitions sharing one source partition are claimed by one worker.
     for s in &prog.sources {
         if let MatrixData::Dense(d) = &**s {
             if d.parts.io_rows % pass_io != 0 {
@@ -140,16 +149,26 @@ pub fn run_pass_opts(
         builders.push(b);
     }
 
-    // ---- parallel pass
-    let next = AtomicUsize::new(0);
+    // ---- parallel pass: locality-aware range scheduling (§III-F)
     let threads = ctx.config.threads.max(1).min(n_parts.max(1));
+    // locality unit = all pass partitions nested in one partition of the
+    // *coarsest* dense source, so each source partition is copied into
+    // exactly one worker's source cache per pass
+    let mut unit_io = pass_io;
+    for s in &prog.sources {
+        if let MatrixData::Dense(d) = &**s {
+            unit_io = unit_io.max(d.parts.io_rows);
+        }
+    }
+    let group = (unit_io / pass_io) as usize;
+    let sched = sched::RangeScheduler::new(n_parts, group, threads, ctx.config.numa_nodes);
     let merged: Mutex<Vec<SinkAccSet>> = Mutex::new(Vec::new());
     let first_err: Mutex<Option<FmError>> = Mutex::new(None);
 
     std::thread::scope(|scope| {
-        for _ in 0..threads {
+        for w in 0..threads {
             let prog = Arc::clone(&prog);
-            let next = &next;
+            let sched = &sched;
             let builders = &builders;
             let merged = &merged;
             let first_err = &first_err;
@@ -159,32 +178,74 @@ pub fn run_pass_opts(
             scope.spawn(move || {
                 let mut accs = SinkAccSet::new(&prog);
                 let mut cache = SourceCache::new(prog.sources.len());
-                loop {
-                    let pi = next.fetch_add(1, Ordering::Relaxed);
-                    if pi >= n_parts {
-                        break;
-                    }
-                    if let Err(e) = process_partition(
-                        &prog,
-                        &pass_parts,
-                        pi,
-                        cfg,
-                        builders,
-                        &mut accs,
-                        &mut cache,
-                    ) {
-                        let mut fe = first_err.lock().unwrap();
-                        if fe.is_none() {
-                            *fe = Some(e);
+                'pass: while let Some(unit) = sched.claim_unit(w) {
+                    let (p0, p1) = sched.unit_parts(unit);
+                    // rows this worker still owns beyond the current
+                    // partition — the safe read-ahead window (ownership is
+                    // deterministic under range scheduling). Computed once
+                    // per unit: it only changes on claim/steal, and a
+                    // stale peek costs at most one wasted prefetch.
+                    let next_unit_rows = sched.peek_next(w).map(|u| {
+                        let (q0, q1) = sched.unit_parts(u);
+                        (q0 as u64 * pass_io, (q1 as u64 * pass_io).min(nrow))
+                    });
+                    let window = PrefetchWindow {
+                        unit_end_row: (p1 as u64 * pass_io).min(nrow),
+                        next_unit_rows,
+                    };
+                    for pi in p0..p1 {
+                        // a failed worker aborts the whole pass: nobody
+                        // keeps processing (and writing) doomed partitions
+                        if sched.aborted() {
+                            break 'pass;
                         }
-                        break;
+                        if let Err(e) = process_partition(
+                            &prog,
+                            &pass_parts,
+                            pi,
+                            cfg,
+                            builders,
+                            &mut accs,
+                            &mut cache,
+                            &window,
+                        ) {
+                            let mut fe = first_err.lock().unwrap();
+                            if fe.is_none() {
+                                *fe = Some(e);
+                            }
+                            drop(fe);
+                            sched.abort();
+                            break 'pass;
+                        }
+                        metrics.native_partitions.fetch_add(1, Ordering::Relaxed);
                     }
-                    metrics.native_partitions.fetch_add(1, Ordering::Relaxed);
                 }
                 merged.lock().unwrap().push(accs);
             });
         }
     });
+
+    ctx.metrics
+        .sched_steals
+        .fetch_add(sched.steals(), Ordering::Relaxed);
+    ctx.metrics
+        .sched_steals_remote
+        .fetch_add(sched.steals_remote(), Ordering::Relaxed);
+
+    // Retire this pass's read-ahead generation: leftover queued prefetch
+    // requests are dropped (in-flight ones land unpinned), and any
+    // prefetched partition nobody consumed — an aborted pass, a stolen
+    // unit's wasted hint — loses its pin. Orphaned read-aheads must not
+    // outlive the pass that issued them, or they would shrink the cache
+    // until the matrix is next scanned.
+    if let Some(c) = &ctx.cache {
+        c.advance_prefetch_epoch();
+    }
+    for s in &prog.sources {
+        if let MatrixData::Dense(d) = &**s {
+            d.release_prefetch_pins();
+        }
+    }
 
     if let Some(e) = first_err.into_inner().unwrap() {
         return Err(e);
@@ -222,9 +283,12 @@ pub fn materialize_sinks(ctx: &ExecCtx<'_>, sinks: &[SinkSpec]) -> Result<Vec<Si
 
 /// Per-worker cache of the most recently read source partition (a pass
 /// partition is usually much smaller than a source partition, so
-/// consecutive pass partitions hit the same source bytes).
+/// consecutive pass partitions hit the same source bytes). The range
+/// scheduler keeps all pass partitions of one source partition on one
+/// worker, so each source partition lands here exactly once per pass —
+/// shared with the engine cache through the `Arc`, not copied.
 struct SourceCache {
-    slots: Vec<Option<(usize, Vec<u8>)>>,
+    slots: Vec<Option<(usize, std::sync::Arc<Vec<u8>>)>>,
 }
 
 impl SourceCache {
@@ -235,6 +299,28 @@ impl SourceCache {
     }
 }
 
+/// Row window a worker still owns beyond the partition it is currently
+/// processing: the rest of its locality unit plus its next owned unit.
+/// Read-ahead targets inside the window belong to this worker, so a
+/// prefetch cannot race the worker that consumes the partition.
+struct PrefetchWindow {
+    /// End row (exclusive) of the current locality unit.
+    unit_end_row: u64,
+    /// Row range of the worker's next owned unit, if any.
+    next_unit_rows: Option<(u64, u64)>,
+}
+
+impl PrefetchWindow {
+    fn owns(&self, row: u64) -> bool {
+        row < self.unit_end_row
+            || self
+                .next_unit_rows
+                .map(|(a, b)| row >= a && row < b)
+                .unwrap_or(false)
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
 fn process_partition(
     prog: &Program,
     pass_parts: &Partitioning,
@@ -243,6 +329,7 @@ fn process_partition(
     builders: &[DenseBuilder],
     accs: &mut SinkAccSet,
     cache: &mut SourceCache,
+    window: &PrefetchWindow,
 ) -> Result<()> {
     let (g0, g1) = pass_parts.part_rows(pi);
     let prows = (g1 - g0) as usize;
@@ -259,13 +346,16 @@ fn process_partition(
         debug_assert!(g1 <= s1);
         let need_read = !matches!(&cache.slots[si], Some((p, _)) if *p == spi);
         if need_read {
-            cache.slots[si] = Some((spi, d.partition_bytes(spi)?));
-            // Single-worker passes alternate read/compute; queue the next
-            // partition's read so it overlaps this partition's compute
-            // (§III-B3). Multi-worker passes already overlap by running
-            // partitions concurrently — an extra prefetch there would
-            // race the worker that owns partition spi+1 and double-read.
-            if cfg.threads == 1 {
+            cache.slots[si] = Some((spi, d.partition_bytes_shared(spi)?));
+            // Queue the read of the next source partition *this worker*
+            // will consume, so it overlaps this partition's compute
+            // (§III-B3). Range scheduling makes that ownership
+            // deterministic, and the cache's single-flight registry
+            // coalesces any residual race (e.g. the next unit being
+            // stolen after the peek) — so multi-worker passes prefetch
+            // too, without double reads.
+            let next_row0 = (spi as u64 + 1) * d.parts.io_rows;
+            if window.owns(next_row0) {
                 d.prefetch_partition(spi + 1);
             }
         }

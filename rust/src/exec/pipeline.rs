@@ -296,12 +296,20 @@ pub fn eval_strip(
                 let mut out = Buf::alloc(ins.dtype, rows * ncol);
                 let mut col_off = 0usize;
                 for si in sis {
+                    // decode with the *member's own* dtype — a member whose
+                    // dtype differs from the promoted group dtype (e.g. an
+                    // I32 column bound with F64 columns) has a different
+                    // element size, so using the group dtype would both
+                    // miscount its columns and misread its bytes
+                    let mdt = prog.sources[*si].dtype();
                     let member_ncol = {
                         // member ncol = bytes/(part_rows*esz)
-                        let esz = ins.dtype.size();
+                        let esz = mdt.size();
                         srcs[*si].bytes.len() / (srcs[*si].part_rows * esz)
                     };
-                    let m = load_strip(&srcs[*si], ins.dtype, member_ncol, rows)?;
+                    let m = load_strip(&srcs[*si], mdt, member_ncol, rows)?;
+                    // only heterogeneous members pay the cast copy
+                    let m = if mdt == ins.dtype { m } else { m.cast(ins.dtype)? };
                     out.copy_from(col_off * rows, &m);
                     col_off += member_ncol;
                 }
@@ -487,20 +495,28 @@ fn row_agg(a: &Buf, rows: usize, op: AggOp, vectorized: bool) -> Buf {
 }
 
 /// Per-row argmin/argmax (1-based, first extreme wins — R's which.min).
+///
+/// NaN entries are skipped like R skips NAs: a NaN never wins and never
+/// poisons later comparisons (seeding on a NaN first column would make
+/// every `<`/`>` test false and freeze the answer at column 1). An all-NaN
+/// row falls back to index 1.
 fn row_arg_extreme(a: &Buf, rows: usize, max: bool) -> Buf {
     let ncol = a.len() / rows.max(1);
     let mut out = vec![0i32; rows];
     for r in 0..rows {
-        let mut best = a.get(r).as_f64();
-        let mut bi = 0i32;
-        for j in 1..ncol {
+        let mut best = f64::NAN;
+        let mut bi = 0i32; // 0 = nothing finite seen yet
+        for j in 0..ncol {
             let v = a.get(j * rows + r).as_f64();
-            if (max && v > best) || (!max && v < best) {
+            if v.is_nan() {
+                continue;
+            }
+            if bi == 0 || (max && v > best) || (!max && v < best) {
                 best = v;
-                bi = j as i32;
+                bi = j as i32 + 1; // 1-based like R
             }
         }
-        out[r] = bi + 1; // 1-based like R
+        out[r] = bi.max(1);
     }
     Buf::I32(out)
 }
@@ -597,6 +613,19 @@ mod tests {
         assert_eq!(mins.to_f64_vec(), vec![0.0, 4.0]);
         let am = row_arg_extreme(&a, 2, false);
         assert_eq!(am.as_i32(), &[3, 2]); // 1-based
+    }
+
+    #[test]
+    fn row_arg_extreme_skips_nans() {
+        // 2 rows x 3 cols col-major: cols [NaN,5], [2,NaN], [0,6]
+        let a = Buf::from_f64(&[f64::NAN, 5.0, 2.0, f64::NAN, 0.0, 6.0]);
+        let am = row_arg_extreme(&a, 2, false);
+        assert_eq!(am.as_i32(), &[3, 1], "NaN must not poison which.min");
+        let ax = row_arg_extreme(&a, 2, true);
+        assert_eq!(ax.as_i32(), &[2, 3], "NaN must not poison which.max");
+        // an all-NaN row falls back to index 1
+        let b = Buf::from_f64(&[f64::NAN, 1.0, f64::NAN, 0.5]);
+        assert_eq!(row_arg_extreme(&b, 2, false).as_i32(), &[1, 2]);
     }
 
     #[test]

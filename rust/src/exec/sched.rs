@@ -1,0 +1,320 @@
+//! Locality-aware range scheduling of pass partitions (paper §III-B3/F).
+//!
+//! The original dispatch handed pass partitions to workers from one global
+//! atomic counter. That scatters *neighbouring* partitions across workers,
+//! which defeats two locality mechanisms at once: the per-worker source
+//! cache (consecutive pass partitions usually share one source I/O
+//! partition, but with counter dispatch the sharers land on different
+//! workers and each re-copies the same source bytes) and asynchronous
+//! read-ahead (with non-deterministic ownership, a prefetch of partition
+//! *N+1* races whichever worker claims it and double-reads the file).
+//!
+//! The [`RangeScheduler`] instead divides the pass into **locality units**
+//! — groups of consecutive pass partitions nested inside one source
+//! I/O-level partition — and assigns each worker one contiguous range of
+//! units up front. A worker that drains its range *steals the upper half*
+//! of the largest remaining range (classic work-stealing, bounded skew),
+//! preferring victims on its own simulated NUMA node so the
+//! `EngineConfig::numa_nodes` knob shapes partition→worker affinity the
+//! way SAFS pins I/O threads to the node that owns the flash device.
+//! Ownership of the *next* unit is therefore deterministic, which is what
+//! makes multi-worker read-ahead safe (see `exec::process_partition`).
+//!
+//! The scheduler also carries the pass's abort flag: a worker that fails
+//! flips it and every other worker stops claiming instead of processing
+//! (and writing) the rest of the pass.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Contiguous-range work scheduler with half-stealing and simulated NUMA
+/// affinity. One instance per materialization pass.
+pub struct RangeScheduler {
+    /// Per-worker remaining claim range `[next, end)` in locality units.
+    ranges: Vec<Mutex<(usize, usize)>>,
+    /// Simulated NUMA node of each worker (contiguous worker blocks, so
+    /// each node owns one contiguous slab of the pass).
+    node_of: Vec<usize>,
+    /// Pass partitions per locality unit.
+    group: usize,
+    /// Total pass partitions.
+    n_parts: usize,
+    /// Total locality units.
+    n_units: usize,
+    abort: AtomicBool,
+    steals: AtomicU64,
+    steals_remote: AtomicU64,
+}
+
+impl RangeScheduler {
+    /// Schedule `n_parts` pass partitions, grouped `group` per locality
+    /// unit, over `workers` workers spread across `numa_nodes` simulated
+    /// NUMA nodes.
+    pub fn new(n_parts: usize, group: usize, workers: usize, numa_nodes: usize) -> RangeScheduler {
+        let group = group.max(1);
+        let workers = workers.max(1);
+        let numa_nodes = numa_nodes.max(1).min(workers);
+        let n_units = n_parts.div_ceil(group);
+        // contiguous even split of units over workers (first ranges may be
+        // one unit longer); workers of one node are contiguous, so each
+        // node's initial slab of the matrix is contiguous too
+        let ranges = (0..workers)
+            .map(|w| Mutex::new((w * n_units / workers, (w + 1) * n_units / workers)))
+            .collect();
+        let node_of = (0..workers).map(|w| w * numa_nodes / workers).collect();
+        RangeScheduler {
+            ranges,
+            node_of,
+            group,
+            n_parts,
+            n_units,
+            abort: AtomicBool::new(false),
+            steals: AtomicU64::new(0),
+            steals_remote: AtomicU64::new(0),
+        }
+    }
+
+    /// Simulated NUMA node of worker `w`.
+    pub fn node_of(&self, w: usize) -> usize {
+        self.node_of[w]
+    }
+
+    /// Pass-partition range `[p0, p1)` of locality unit `u`.
+    pub fn unit_parts(&self, u: usize) -> (usize, usize) {
+        (u * self.group, ((u + 1) * self.group).min(self.n_parts))
+    }
+
+    /// Claim the next locality unit for worker `w`: the front of its own
+    /// range, or — when the range is dry — the upper half of the largest
+    /// remaining range (same-node victims first). `None` when the pass is
+    /// complete or aborted.
+    pub fn claim_unit(&self, w: usize) -> Option<usize> {
+        loop {
+            if self.aborted() {
+                return None;
+            }
+            {
+                let mut own = self.ranges[w].lock().unwrap();
+                if own.0 < own.1 {
+                    let u = own.0;
+                    own.0 += 1;
+                    return Some(u);
+                }
+            }
+            match self.steal_for(w) {
+                StealOutcome::Stole(u) => return Some(u),
+                StealOutcome::Empty => return None,
+                StealOutcome::Retry => continue,
+            }
+        }
+    }
+
+    /// Peek worker `w`'s next owned unit without claiming it (the
+    /// read-ahead hint). The unit may still be stolen before `w` reaches
+    /// it — a wasted prefetch, never a correctness problem (single-flight
+    /// coalesces any resulting duplicate read).
+    pub fn peek_next(&self, w: usize) -> Option<usize> {
+        let own = self.ranges[w].lock().unwrap();
+        if own.0 < own.1 {
+            Some(own.0)
+        } else {
+            None
+        }
+    }
+
+    fn steal_for(&self, w: usize) -> StealOutcome {
+        // pass 1: largest same-node victim; pass 2: largest anywhere
+        for remote_pass in [false, true] {
+            let mut best: Option<(usize, usize)> = None; // (victim, remaining)
+            for v in 0..self.ranges.len() {
+                if v == w || (!remote_pass && self.node_of[v] != self.node_of[w]) {
+                    continue;
+                }
+                let r = self.ranges[v].lock().unwrap();
+                let remaining = r.1.saturating_sub(r.0);
+                if remaining > 0 && best.map(|(_, n)| remaining > n).unwrap_or(true) {
+                    best = Some((v, remaining));
+                }
+            }
+            if let Some((victim, _)) = best {
+                let stolen = {
+                    let mut r = self.ranges[victim].lock().unwrap();
+                    let remaining = r.1.saturating_sub(r.0);
+                    if remaining == 0 {
+                        // drained between the scan and the lock — rescan
+                        return StealOutcome::Retry;
+                    }
+                    // take the upper half [mid, end); the victim keeps the
+                    // lower half it is already streaming through
+                    let mid = r.0 + remaining / 2;
+                    let stolen = (mid, r.1);
+                    r.1 = mid;
+                    stolen
+                };
+                self.steals.fetch_add(1, Ordering::Relaxed);
+                if self.node_of[victim] != self.node_of[w] {
+                    self.steals_remote.fetch_add(1, Ordering::Relaxed);
+                }
+                let u = stolen.0;
+                let mut own = self.ranges[w].lock().unwrap();
+                *own = (stolen.0 + 1, stolen.1);
+                drop(own);
+                return StealOutcome::Stole(u);
+            }
+        }
+        StealOutcome::Empty
+    }
+
+    /// Signal pass failure: every worker's next claim returns `None`.
+    pub fn abort(&self) {
+        self.abort.store(true, Ordering::Relaxed);
+    }
+
+    pub fn aborted(&self) -> bool {
+        self.abort.load(Ordering::Relaxed)
+    }
+
+    /// Ranges stolen so far.
+    pub fn steals(&self) -> u64 {
+        self.steals.load(Ordering::Relaxed)
+    }
+
+    /// Steals that crossed a simulated NUMA node.
+    pub fn steals_remote(&self) -> u64 {
+        self.steals_remote.load(Ordering::Relaxed)
+    }
+
+    /// Total locality units in the pass.
+    pub fn n_units(&self) -> usize {
+        self.n_units
+    }
+}
+
+enum StealOutcome {
+    Stole(usize),
+    Empty,
+    Retry,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn units_cover_partitions_exactly_once() {
+        let s = RangeScheduler::new(17, 4, 3, 1);
+        assert_eq!(s.n_units(), 5); // ceil(17/4)
+        let mut seen = HashSet::new();
+        for w in 0..3 {
+            while let Some(u) = s.claim_unit(w) {
+                let (p0, p1) = s.unit_parts(u);
+                for p in p0..p1 {
+                    assert!(seen.insert(p), "partition {p} claimed twice");
+                }
+                // only drain own range here; stealing covered elsewhere
+                if s.peek_next(w).is_none() {
+                    break;
+                }
+            }
+        }
+        // drain leftovers (steals) through worker 0
+        while let Some(u) = s.claim_unit(0) {
+            let (p0, p1) = s.unit_parts(u);
+            for p in p0..p1 {
+                assert!(seen.insert(p), "partition {p} claimed twice");
+            }
+        }
+        assert_eq!(seen.len(), 17, "every partition claimed exactly once");
+    }
+
+    #[test]
+    fn initial_ranges_are_contiguous_per_worker() {
+        let s = RangeScheduler::new(12, 1, 3, 1);
+        for w in 0..3 {
+            let mut last = None;
+            while let Some(u) = s.claim_unit(w) {
+                if let Some(prev) = last {
+                    assert_eq!(u, prev + 1, "worker {w} skipped a unit");
+                }
+                last = Some(u);
+                if s.peek_next(w).is_none() {
+                    break;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dry_worker_steals_half_of_largest_range() {
+        let s = RangeScheduler::new(8, 1, 2, 1);
+        // worker 1 drains its own range [4, 8)
+        for _ in 0..4 {
+            assert!(s.claim_unit(1).is_some());
+        }
+        // next claim steals the upper half of worker 0's [0, 4) -> [2, 4)
+        let u = s.claim_unit(1).unwrap();
+        assert_eq!(u, 2);
+        assert_eq!(s.steals(), 1);
+        assert_eq!(s.peek_next(1), Some(3));
+        // worker 0 still owns its lower half
+        assert_eq!(s.peek_next(0), Some(0));
+        let mine: Vec<usize> = std::iter::from_fn(|| s.claim_unit(0)).collect();
+        assert_eq!(mine, vec![0, 1, 3]); // 0,1 own; 3 stolen back
+    }
+
+    #[test]
+    fn steals_prefer_same_numa_node() {
+        // 4 workers on 2 nodes: node 0 = {0, 1}, node 1 = {2, 3}
+        let s = RangeScheduler::new(16, 1, 4, 2);
+        assert_eq!((s.node_of(0), s.node_of(1)), (0, 0));
+        assert_eq!((s.node_of(2), s.node_of(3)), (1, 1));
+        // worker 1 drains [4, 8); its first steal must hit worker 0
+        // (same node, 4 units) even though workers 2/3 also hold 4 units
+        for _ in 0..4 {
+            assert!(s.claim_unit(1).is_some());
+        }
+        let u = s.claim_unit(1).unwrap();
+        assert!(u < 4, "steal went remote (unit {u}) with local work left");
+        assert_eq!(s.steals(), 1);
+        assert_eq!(s.steals_remote(), 0);
+        // drain everything; the tail forces remote steals
+        for w in [0usize, 1, 2, 3].iter().cycle().take(64) {
+            if s.claim_unit(*w).is_none() && (0..4).all(|w| s.peek_next(w).is_none()) {
+                break;
+            }
+        }
+        while s.claim_unit(1).is_some() {}
+        assert!(s.steals() >= s.steals_remote());
+    }
+
+    #[test]
+    fn abort_stops_claims() {
+        let s = RangeScheduler::new(8, 1, 2, 1);
+        assert!(s.claim_unit(0).is_some());
+        s.abort();
+        assert!(s.claim_unit(0).is_none());
+        assert!(s.claim_unit(1).is_none());
+        assert!(s.aborted());
+    }
+
+    #[test]
+    fn tail_unit_is_short() {
+        let s = RangeScheduler::new(10, 4, 1, 1);
+        assert_eq!(s.n_units(), 3);
+        assert_eq!(s.unit_parts(0), (0, 4));
+        assert_eq!(s.unit_parts(2), (8, 10));
+    }
+
+    #[test]
+    fn more_workers_than_units() {
+        let s = RangeScheduler::new(2, 1, 8, 4);
+        let mut got = 0;
+        for w in 0..8 {
+            while s.claim_unit(w).is_some() {
+                got += 1;
+            }
+        }
+        assert_eq!(got, 2);
+    }
+}

@@ -400,8 +400,10 @@ impl FmMatrix {
     }
 
     /// A *group of dense matrices* standing for one wider matrix
-    /// (paper §III-B4): members must be materialized, share nrow, dtype
-    /// and partitioning. GenOps decompose onto the members automatically.
+    /// (paper §III-B4): members must be materialized tall matrices sharing
+    /// nrow. Dtypes may differ (the `fm.cbind.list` factor scenario): the
+    /// group reads as the promoted dtype and members are cast on load.
+    /// GenOps decompose onto the members automatically.
     pub fn group(eng: &Arc<Engine>, members: &[&FmMatrix]) -> Result<FmMatrix> {
         if members.is_empty() {
             return Err(FmError::Shape("empty group".into()));
@@ -411,12 +413,9 @@ impl FmMatrix {
         for m in members {
             match &*m.m.data {
                 MatrixData::Dense(d) => {
-                    if m.m.transposed
-                        || d.nrow() != first.data.nrow()
-                        || d.dtype != first.dtype()
-                    {
+                    if m.m.transposed || d.nrow() != first.data.nrow() {
                         return Err(FmError::Shape(
-                            "group members must be tall, same nrow and dtype".into(),
+                            "group members must be tall with the same nrow".into(),
                         ));
                     }
                 }

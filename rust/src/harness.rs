@@ -269,7 +269,9 @@ pub fn fig8(s: &Scale, max_threads: usize) -> Result<Table> {
             for threads in 1..=max_threads {
                 let eng = engine_for(&s2, mode, threads)?;
                 let x = dataset(&eng, s2.n, 32)?;
+                eng.metrics.reset();
                 let secs = run_alg(&x, alg, 10, s2.iters)?;
+                let m = eng.metrics.snapshot();
                 let speedup = base.map(|b: f64| b / secs).unwrap_or(1.0);
                 if base.is_none() {
                     base = Some(secs);
@@ -278,7 +280,13 @@ pub fn fig8(s: &Scale, max_threads: usize) -> Result<Table> {
                     format!("{} {} t={}", alg.label(), mode.label(), threads),
                     speedup,
                     "x",
-                    vec![("secs".into(), secs)],
+                    // scheduler behaviour behind the scaling curve: range
+                    // steals (load balance) and read-aheads (I/O overlap)
+                    vec![
+                        ("secs".into(), secs),
+                        ("steals".into(), m.sched_steals as f64),
+                        ("prefetches".into(), m.prefetch_issued as f64),
+                    ],
                 );
             }
         }

@@ -19,11 +19,20 @@
 //!   is being computed ([`PartitionCache::prefetch`]), so single-worker
 //!   EM passes overlap I/O with compute instead of alternating.
 //!
+//! * **Single-flight reads** — an in-flight read registry keyed like the
+//!   cache. A demand read and a prefetch of the same partition (or two
+//!   demand reads from racing workers) coalesce: one *leader* reads the
+//!   file, every *follower* blocks until the leader's bytes land and then
+//!   serves itself from the cache. This is what makes multi-worker
+//!   read-ahead safe — for any partition the cache can admit, a prefetch
+//!   can never cause a double read ([`PartitionCache::get_or_read`]).
+//!
 //! Capacity comes from [`crate::config::EngineConfig::em_cache_bytes`]
 //! (0 disables the cache — the Fig 11-style ablation knob, exercised by
 //! `benches/cache_ablation.rs`); the read-ahead queue depth from
 //! [`crate::config::EngineConfig::prefetch_depth`]. Hit / miss / eviction
-//! / prefetch counts are recorded in [`crate::metrics::Metrics`].
+//! / prefetch / coalesced-read counts are recorded in
+//! [`crate::metrics::Metrics`].
 //!
 //! Cache *residency* is a materialization-time decision made by the `fmr`
 //! layer: engine inputs and user-materialized results register with the
@@ -31,11 +40,12 @@
 //! (they would only evict reusable partitions; see
 //! [`crate::fmr::engine::Engine::materialize_intermediate`]).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, SyncSender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
+use crate::error::Result;
 use crate::metrics::Metrics;
 use crate::storage::FileStore;
 
@@ -69,6 +79,10 @@ struct PrefetchReq {
     part: usize,
     off: u64,
     len: usize,
+    /// Read-ahead generation at issue time; a request whose generation
+    /// has been retired (its pass ended) is stale — dropped before the
+    /// read, or admitted unpinned after it.
+    epoch: u64,
 }
 
 /// Bounded write-through cache of I/O-level partitions (§III-B3).
@@ -81,6 +95,28 @@ pub struct PartitionCache {
     metrics: Arc<Metrics>,
     next_matrix_id: AtomicU64,
     prefetch_tx: Option<SyncSender<PrefetchReq>>,
+    /// Single-flight registry: partitions with a read in progress. A
+    /// second reader of the same key waits on the condvar instead of
+    /// issuing its own file read.
+    inflight: Mutex<HashSet<(u64, usize)>>,
+    inflight_cv: Condvar,
+    /// Read-ahead generation: bumped when a pass ends so its leftover
+    /// prefetch requests cannot pin entries no consumer will release.
+    epoch: AtomicU64,
+}
+
+/// RAII registration in the single-flight registry: the leader's slot is
+/// released (and waiters woken) even if the read errors or panics.
+struct InflightGuard<'a> {
+    cache: &'a PartitionCache,
+    key: (u64, usize),
+}
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        self.cache.inflight.lock().unwrap().remove(&self.key);
+        self.cache.inflight_cv.notify_all();
+    }
 }
 
 impl PartitionCache {
@@ -108,6 +144,9 @@ impl PartitionCache {
             metrics,
             next_matrix_id: AtomicU64::new(0),
             prefetch_tx: tx,
+            inflight: Mutex::new(HashSet::new()),
+            inflight_cv: Condvar::new(),
+            epoch: AtomicU64::new(0),
         });
         if let Some(rx) = rx {
             // The thread owns only the receiver; queued requests hold the
@@ -117,20 +156,139 @@ impl PartitionCache {
                 .name("fm-prefetch".into())
                 .spawn(move || {
                     while let Ok(req) = rx.recv() {
+                        // stale request: the pass that issued it is over,
+                        // nobody will consume (and unpin) the read-ahead
+                        if req.epoch != req.cache.epoch.load(Ordering::Relaxed) {
+                            continue;
+                        }
                         // the consumer may have read the partition while
                         // this request sat in the queue — don't pay a
                         // second (throttled) store read for it
                         if req.cache.contains(req.matrix_id, req.part) {
                             continue;
                         }
+                        // single-flight: a demand read of the same
+                        // partition is already on the file — coalesce
+                        let Some(guard) = req.cache.begin_read(req.matrix_id, req.part) else {
+                            req.cache
+                                .metrics
+                                .singleflight_coalesced
+                                .fetch_add(1, Ordering::Relaxed);
+                            continue;
+                        };
+                        // a demand read may have completed between the
+                        // contains() check and winning the slot
+                        if req.cache.contains(req.matrix_id, req.part) {
+                            drop(guard);
+                            continue;
+                        }
                         let mut buf = vec![0u8; req.len];
                         if req.store.read_at(req.off, &mut buf).is_ok() {
-                            req.cache.insert_prefetched(req.matrix_id, req.part, buf);
+                            req.cache
+                                .insert_prefetched(req.matrix_id, req.part, buf, req.epoch);
                         }
+                        drop(guard);
                     }
                 });
         }
         cache
+    }
+
+    /// Register a read of `(matrix_id, part)` in the single-flight
+    /// registry. `Some(guard)` makes the caller the leader (the guard
+    /// releases the slot on drop); `None` means another read of the same
+    /// partition is already in flight.
+    fn begin_read(&self, matrix_id: u64, part: usize) -> Option<InflightGuard<'_>> {
+        let key = (matrix_id, part);
+        if self.inflight.lock().unwrap().insert(key) {
+            Some(InflightGuard { cache: self, key })
+        } else {
+            None
+        }
+    }
+
+    /// Block until no read of `(matrix_id, part)` is in flight.
+    fn wait_read(&self, matrix_id: u64, part: usize) {
+        let key = (matrix_id, part);
+        let mut g = self.inflight.lock().unwrap();
+        while g.contains(&key) {
+            g = self.inflight_cv.wait(g).unwrap();
+        }
+    }
+
+    /// Single-flight read-through lookup: serve `(matrix_id, part)` from
+    /// the cache, or coalesce with an in-flight read of it, or execute
+    /// `read` as the leader and admit the bytes. While the cache can
+    /// admit the partition (it fits `capacity` and not everything else is
+    /// pinned), at most one `read` runs per partition at any moment
+    /// across demand readers *and* the prefetch thread — a pass never
+    /// reads the same partition's bytes from the file twice. When the
+    /// bytes *cannot* be admitted, a reader that already waited one full
+    /// read out bypasses the registry and reads concurrently instead of
+    /// serializing every reader behind file reads that keep evaporating.
+    pub fn get_or_read(
+        &self,
+        matrix_id: u64,
+        part: usize,
+        read: impl FnOnce() -> Result<Vec<u8>>,
+    ) -> Result<Arc<Vec<u8>>> {
+        let mut read = Some(read);
+        let mut waited = false;
+        loop {
+            // a follower already counted its miss on the first lookup:
+            // peek (not get) after waiting, so one logical access is not
+            // double-counted as a miss *and* a hit in the ablation numbers
+            let found = if waited {
+                self.peek(matrix_id, part)
+            } else {
+                self.get(matrix_id, part)
+            };
+            if let Some(b) = found {
+                if waited {
+                    // this read was served by someone else's file read
+                    self.metrics
+                        .singleflight_coalesced
+                        .fetch_add(1, Ordering::Relaxed);
+                }
+                return Ok(b);
+            }
+            match self.begin_read(matrix_id, part) {
+                Some(guard) => {
+                    // leadership won — but a racing read may have completed
+                    // and inserted between our miss-lookup and begin_read();
+                    // re-check before paying a second file read
+                    if let Some(b) = self.peek(matrix_id, part) {
+                        drop(guard);
+                        self.metrics
+                            .singleflight_coalesced
+                            .fetch_add(1, Ordering::Relaxed);
+                        return Ok(b);
+                    }
+                    // leader: `read` is consumed at most once — a follower
+                    // loops back here only after its leader failed, and
+                    // then becomes the (sole) new leader
+                    let bytes = Arc::new((read.take().expect("single-flight leader ran twice"))()?);
+                    self.insert_shared(matrix_id, part, Arc::clone(&bytes));
+                    drop(guard);
+                    return Ok(bytes);
+                }
+                None => {
+                    if waited {
+                        // we already waited a full read out and the bytes
+                        // still are not resident — the cache cannot admit
+                        // this partition (smaller than one partition, or
+                        // fully pinned). Stop serializing readers behind
+                        // the registry: read concurrently, like an
+                        // uncached matrix would.
+                        return Ok(Arc::new(
+                            (read.take().expect("bypass read ran twice"))()?,
+                        ));
+                    }
+                    self.wait_read(matrix_id, part);
+                    waited = true;
+                }
+            }
+        }
     }
 
     /// Allocate a fresh matrix id (one key namespace per cached matrix)
@@ -216,18 +374,33 @@ impl PartitionCache {
     /// admitted; if everything else is pinned the entry is dropped rather
     /// than blocking.
     pub fn insert(&self, matrix_id: u64, part: usize, bytes: Vec<u8>) {
-        self.insert_entry(matrix_id, part, bytes, false);
+        self.insert_entry(matrix_id, part, Arc::new(bytes), None);
+    }
+
+    /// [`insert`](Self::insert) for bytes already behind an `Arc` (the
+    /// single-flight leader shares its buffer with the cache).
+    fn insert_shared(&self, matrix_id: u64, part: usize, bytes: Arc<Vec<u8>>) {
+        self.insert_entry(matrix_id, part, bytes, None);
     }
 
     /// Prefetch insert: like [`insert`](Self::insert) but the entry holds
     /// one pin until its first hit, so eviction pressure cannot undo the
     /// read-ahead before its consumer arrives. If the consumer beat the
-    /// prefetch the existing entry is kept untouched.
-    fn insert_prefetched(&self, matrix_id: u64, part: usize, bytes: Vec<u8>) {
-        self.insert_entry(matrix_id, part, bytes, true);
+    /// prefetch the existing entry is kept untouched. `epoch` is the
+    /// read-ahead generation at issue time: a completion from a retired
+    /// generation is admitted *unpinned* (the bytes are still useful, but
+    /// no consumer remains to release a pin).
+    fn insert_prefetched(&self, matrix_id: u64, part: usize, bytes: Vec<u8>, epoch: u64) {
+        self.insert_entry(matrix_id, part, Arc::new(bytes), Some(epoch));
     }
 
-    fn insert_entry(&self, matrix_id: u64, part: usize, bytes: Vec<u8>, prefetched: bool) {
+    fn insert_entry(
+        &self,
+        matrix_id: u64,
+        part: usize,
+        bytes: Arc<Vec<u8>>,
+        prefetched_epoch: Option<u64>,
+    ) {
         let len = bytes.len();
         if len > self.capacity {
             return;
@@ -236,9 +409,18 @@ impl PartitionCache {
         let inner = &mut *g;
         inner.clock += 1;
         let stamp = inner.clock;
-        if prefetched && !inner.live.contains(&matrix_id) {
-            return; // matrix dropped while the read-ahead was in flight
-        }
+        // epoch checked under the inner lock: the pass-end sweep
+        // (advance_prefetch_epoch then release_prefetch_pins) also takes
+        // it, so a late completion can never re-pin after the sweep
+        let prefetched = match prefetched_epoch {
+            Some(e) => {
+                if !inner.live.contains(&matrix_id) {
+                    return; // matrix dropped while the read-ahead was in flight
+                }
+                e == self.epoch.load(Ordering::Relaxed)
+            }
+            None => false,
+        };
         if let Some(e) = inner.map.get_mut(&(matrix_id, part)) {
             if prefetched {
                 return; // consumer's copy is already there; keep it
@@ -251,7 +433,7 @@ impl PartitionCache {
                 e.pins = e.pins.saturating_sub(1);
             }
             inner.bytes_used = inner.bytes_used - e.bytes.len() + len;
-            e.bytes = Arc::new(bytes);
+            e.bytes = bytes;
             e.stamp = stamp;
             return;
         }
@@ -285,7 +467,7 @@ impl PartitionCache {
         inner.map.insert(
             (matrix_id, part),
             Entry {
-                bytes: Arc::new(bytes),
+                bytes,
                 stamp,
                 pins: u32::from(prefetched),
                 unpin_on_hit: prefetched,
@@ -320,6 +502,45 @@ impl PartitionCache {
             e.pins = e.pins.saturating_sub(1);
             e.unpin_on_hit = false;
         }
+    }
+
+    /// Retire the current read-ahead generation: queued prefetch requests
+    /// issued before this call are dropped at dequeue, and in-flight ones
+    /// land unpinned. Called at every pass end (success or abort) so a
+    /// pass's leftover read-aheads cannot pin entries no consumer will
+    /// ever release. Concurrent passes on the same engine lose at most
+    /// their queued read-aheads (their demand reads are unaffected).
+    pub fn advance_prefetch_epoch(&self) {
+        self.epoch.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Release outstanding read-ahead pins (entries prefetched but not
+    /// yet consumed) — for one matrix, or every matrix with `None`. An
+    /// aborted pass may never send the consumer a prefetched partition
+    /// was pinned for; without this sweep the pin would shield the entry
+    /// from eviction for the matrix's lifetime and permanently shrink the
+    /// cache. Scoping by matrix id limits the blast radius: a concurrent
+    /// pass only loses pins when it scans one of the sweeping pass's own
+    /// matrices (and the epoch bump may drop its queued read-aheads) —
+    /// its demand reads stay correct either way.
+    pub fn release_prefetch_pins(&self, matrix_id: Option<u64>) {
+        let mut g = self.inner.lock().unwrap();
+        for (k, e) in g.map.iter_mut() {
+            if matrix_id.map(|id| id == k.0).unwrap_or(true) && e.unpin_on_hit {
+                e.unpin_on_hit = false;
+                e.pins = e.pins.saturating_sub(1);
+            }
+        }
+    }
+
+    /// Drop every resident partition while keeping matrix registrations
+    /// (`live` ids) intact: benches and tests use this to force a cold
+    /// scan without re-registering matrices. Pins are ignored and nothing
+    /// is counted as a capacity eviction.
+    pub fn clear(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.map.clear();
+        g.bytes_used = 0;
     }
 
     /// Drop every partition of one matrix (its handle was dropped).
@@ -365,6 +586,7 @@ impl PartitionCache {
             part,
             off,
             len,
+            epoch: cache.epoch.load(Ordering::Relaxed),
         };
         if tx.try_send(req).is_ok() {
             cache
@@ -524,7 +746,7 @@ mod tests {
         let c = cache(300);
         let h = CacheHandle::register(Arc::clone(&c));
         let id = h.matrix_id;
-        c.insert_prefetched(id, 0, vec![1u8; 100]);
+        c.insert_prefetched(id, 0, vec![1u8; 100], c.epoch.load(Ordering::Relaxed));
         c.insert(id, 0, vec![2u8; 100]); // consumer refill
         c.insert(id, 1, vec![0u8; 100]);
         c.insert(id, 2, vec![0u8; 100]);
@@ -535,12 +757,113 @@ mod tests {
     }
 
     #[test]
+    fn single_flight_coalesces_concurrent_reads() {
+        let c = cache(10_000);
+        let h = CacheHandle::register(Arc::clone(&c));
+        let id = h.matrix_id;
+        let reads = AtomicU64::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let c = Arc::clone(&c);
+                let reads = &reads;
+                s.spawn(move || {
+                    let b = c
+                        .get_or_read(id, 0, || {
+                            reads.fetch_add(1, Ordering::SeqCst);
+                            std::thread::sleep(std::time::Duration::from_millis(20));
+                            Ok(vec![9u8; 64])
+                        })
+                        .unwrap();
+                    assert_eq!(b[0], 9);
+                });
+            }
+        });
+        assert_eq!(reads.load(Ordering::SeqCst), 1, "only the leader reads the file");
+        // every non-leader was served without its own read: either it
+        // coalesced onto the in-flight read or it arrived late and hit
+        let m = c.metrics.snapshot();
+        assert!(
+            m.singleflight_coalesced + m.cache_hits >= 3,
+            "followers must be served by the leader's bytes \
+             (coalesced {}, hits {})",
+            m.singleflight_coalesced,
+            m.cache_hits
+        );
+    }
+
+    #[test]
+    fn single_flight_leader_failure_is_not_sticky() {
+        let c = cache(1000);
+        let h = CacheHandle::register(Arc::clone(&c));
+        let id = h.matrix_id;
+        let r = c.get_or_read(id, 0, || {
+            Err(crate::error::FmError::Storage("boom".into()))
+        });
+        assert!(r.is_err());
+        // the failed leader released its slot: a retry reads fresh
+        let b = c.get_or_read(id, 0, || Ok(vec![1u8; 8])).unwrap();
+        assert_eq!(b[0], 1);
+        assert!(c.contains(id, 0));
+    }
+
+    #[test]
+    fn release_prefetch_pins_makes_orphans_evictable() {
+        let c = cache(200);
+        let h1 = CacheHandle::register(Arc::clone(&c));
+        let h2 = CacheHandle::register(Arc::clone(&c));
+        let (id1, id2) = (h1.matrix_id, h2.matrix_id);
+        let e = c.epoch.load(Ordering::Relaxed);
+        c.insert_prefetched(id1, 0, vec![1u8; 100], e);
+        c.insert_prefetched(id2, 0, vec![1u8; 100], e);
+        // orphaned read-ahead pins block every admission
+        c.insert(id1, 2, vec![0u8; 100]);
+        assert!(!c.contains(id1, 2), "fully pinned cache must skip admission");
+        // the abort-path sweep releases only the aborted pass's matrix
+        c.release_prefetch_pins(Some(id1));
+        c.insert(id1, 3, vec![0u8; 100]);
+        assert!(c.contains(id1, 3), "released entries must be evictable");
+        assert!(!c.contains(id1, 0), "the released orphan is the victim");
+        assert!(c.contains(id2, 0), "other matrices' read-aheads stay pinned");
+        assert_eq!(c.bytes_used(), 200);
+    }
+
+    #[test]
+    fn clear_empties_but_keeps_registrations() {
+        let c = cache(1000);
+        let h = CacheHandle::register(Arc::clone(&c));
+        c.insert(h.matrix_id, 0, vec![0u8; 64]);
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.bytes_used(), 0);
+        // the matrix id is still live: read-ahead completions still land
+        c.insert_prefetched(h.matrix_id, 0, vec![1u8; 64], c.epoch.load(Ordering::Relaxed));
+        assert!(c.contains(h.matrix_id, 0));
+    }
+
+    #[test]
+    fn stale_epoch_prefetch_lands_unpinned() {
+        let c = cache(200);
+        let h = CacheHandle::register(Arc::clone(&c));
+        let id = h.matrix_id;
+        let old = c.epoch.load(Ordering::Relaxed);
+        c.advance_prefetch_epoch(); // the issuing pass ended
+        // a late read-ahead completion: still useful bytes, but with no
+        // consumer left it must not carry a pin nothing will release
+        c.insert_prefetched(id, 0, vec![1u8; 100], old);
+        assert!(c.contains(id, 0));
+        c.insert(id, 1, vec![0u8; 100]);
+        c.insert(id, 2, vec![0u8; 100]); // pressure: (id,0) must be evictable
+        assert!(!c.contains(id, 0), "stale read-ahead must land unpinned");
+        assert!(c.contains(id, 1) && c.contains(id, 2));
+    }
+
+    #[test]
     fn late_prefetch_for_dropped_matrix_not_admitted() {
         let c = cache(1000);
         let h = CacheHandle::register(Arc::clone(&c));
         let id = h.matrix_id;
         drop(h); // matrix gone; a read-ahead completing now must be dropped
-        c.insert_prefetched(id, 0, vec![0u8; 64]);
+        c.insert_prefetched(id, 0, vec![0u8; 64], c.epoch.load(Ordering::Relaxed));
         assert!(c.is_empty(), "dead-matrix prefetch was admitted");
     }
 }

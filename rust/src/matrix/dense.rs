@@ -76,12 +76,23 @@ impl DenseData {
     /// `pread` (or a column-cache-assisted partial read) and, for cached
     /// matrices, refills the cache.
     pub fn partition_bytes(&self, i: usize) -> Result<Vec<u8>> {
+        match Arc::try_unwrap(self.partition_bytes_shared(i)?) {
+            Ok(v) => Ok(v),               // sole owner: no extra copy
+            Err(a) => Ok(a.as_ref().clone()), // cache keeps its reference
+        }
+    }
+
+    /// [`partition_bytes`](Self::partition_bytes) behind an `Arc`: cached
+    /// EM reads share the cache's buffer without copying — the pass hot
+    /// path reads each source partition's bytes zero-copy out of the
+    /// §III-B3 hierarchy.
+    pub fn partition_bytes_shared(&self, i: usize) -> Result<Arc<Vec<u8>>> {
         let esz = self.dtype.size();
         let nbytes = self.parts.part_bytes(i, esz);
         match &self.backing {
             Backing::Mem { chunks, slots } => {
                 let (ci, off) = slots[i];
-                Ok(chunks[ci].bytes()[off..off + nbytes].to_vec())
+                Ok(Arc::new(chunks[ci].bytes()[off..off + nbytes].to_vec()))
             }
             Backing::Ext {
                 store,
@@ -90,53 +101,58 @@ impl DenseData {
                 metrics,
                 pcache,
             } => {
-                if let Some(h) = pcache {
-                    if let Some(b) = h.cache.get(h.matrix_id, i) {
-                        return Ok(b.as_ref().clone());
-                    }
-                }
                 let prows = self.parts.rows_in(i) as usize;
                 let file_off = self.parts.part_offset(i, esz);
-                let out = match cache {
-                    Some(cached) if *cache_cols > 0 => {
-                        // cached columns come from memory; read only the
-                        // contiguous tail columns from the file.
-                        if pcache.is_none() {
+                let col_cached = cache.as_ref().filter(|_| *cache_cols > 0);
+                let read = || -> Result<Vec<u8>> {
+                    match col_cached {
+                        Some(cached) => {
+                            // cached columns come from memory; read only the
+                            // contiguous tail columns from the file.
+                            let cc = (*cache_cols).min(self.parts.ncol) as usize;
+                            let cache_part_off =
+                                (self.parts.part_offset(i, esz) / self.parts.ncol) * cc as u64;
+                            let cached_bytes = cc * prows * esz;
+                            let mut out = vec![0u8; nbytes];
+                            out[..cached_bytes].copy_from_slice(
+                                &cached
+                                    [cache_part_off as usize..cache_part_off as usize + cached_bytes],
+                            );
+                            if nbytes > cached_bytes {
+                                store.read_at(
+                                    file_off + cached_bytes as u64,
+                                    &mut out[cached_bytes..],
+                                )?;
+                            }
+                            Ok(out)
+                        }
+                        None => {
+                            let mut out = vec![0u8; nbytes];
+                            store.read_at(file_off, &mut out)?;
+                            Ok(out)
+                        }
+                    }
+                };
+                match pcache {
+                    // §III-B3 single-flight read-through: cache hit,
+                    // coalesce with an in-flight read (a racing prefetch or
+                    // another worker), or read the file as the leader and
+                    // refill the cache.
+                    Some(h) => h.cache.get_or_read(h.matrix_id, i, read),
+                    None => {
+                        // uncached matrices keep the column-cache accounting
+                        if col_cached.is_some() {
                             metrics
                                 .cache_hits
                                 .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                        }
-                        let cc = (*cache_cols).min(self.parts.ncol) as usize;
-                        let cache_part_off =
-                            (self.parts.part_offset(i, esz) / self.parts.ncol) * cc as u64;
-                        let cached_bytes = cc * prows * esz;
-                        let mut out = vec![0u8; nbytes];
-                        out[..cached_bytes].copy_from_slice(
-                            &cached[cache_part_off as usize..cache_part_off as usize + cached_bytes],
-                        );
-                        if nbytes > cached_bytes {
-                            store.read_at(
-                                file_off + cached_bytes as u64,
-                                &mut out[cached_bytes..],
-                            )?;
-                        }
-                        out
-                    }
-                    _ => {
-                        if pcache.is_none() {
+                        } else {
                             metrics
                                 .cache_misses
                                 .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                         }
-                        let mut out = vec![0u8; nbytes];
-                        store.read_at(file_off, &mut out)?;
-                        out
+                        read().map(Arc::new)
                     }
-                };
-                if let Some(h) = pcache {
-                    h.cache.insert(h.matrix_id, i, out.clone());
                 }
-                Ok(out)
             }
         }
     }
@@ -165,6 +181,19 @@ impl DenseData {
                 self.parts.part_offset(i, esz),
                 self.parts.part_bytes(i, esz),
             );
+        }
+    }
+
+    /// Release read-ahead pins this matrix's partitions still hold. An
+    /// aborted pass may never send the consumer a prefetched partition
+    /// was pinned for (§III-B3); the exec layer calls this on the pass's
+    /// sources so orphaned read-aheads stay evictable.
+    pub fn release_prefetch_pins(&self) {
+        if let Backing::Ext {
+            pcache: Some(h), ..
+        } = &self.backing
+        {
+            h.cache.release_prefetch_pins(Some(h.matrix_id));
         }
     }
 

@@ -85,10 +85,13 @@ impl MatrixData {
         match self {
             MatrixData::Dense(d) => d.dtype,
             MatrixData::Virtual(v) => v.dtype,
+            // a group of mixed-dtype members reads as the promoted dtype
+            // (§III-D promotion); members are cast on load
             MatrixData::Group(g) => g
                 .members
-                .first()
+                .iter()
                 .map(|m| m.dtype())
+                .reduce(DType::promote)
                 .unwrap_or(DType::F64),
         }
     }

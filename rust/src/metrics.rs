@@ -34,6 +34,13 @@ pub struct Metrics {
     pub cache_evictions: AtomicU64,
     /// Async partition read-aheads queued to the prefetch thread.
     pub prefetch_issued: AtomicU64,
+    /// Reads that coalesced onto an in-flight read of the same partition
+    /// (the cache's single-flight registry) instead of re-reading the file.
+    pub singleflight_coalesced: AtomicU64,
+    /// Ranges stolen by pass workers that ran out of their own range.
+    pub sched_steals: AtomicU64,
+    /// Steals that crossed a simulated NUMA node boundary.
+    pub sched_steals_remote: AtomicU64,
 }
 
 impl Metrics {
@@ -75,6 +82,9 @@ impl Metrics {
             cache_misses: self.cache_misses.load(Ordering::Relaxed),
             cache_evictions: self.cache_evictions.load(Ordering::Relaxed),
             prefetch_issued: self.prefetch_issued.load(Ordering::Relaxed),
+            singleflight_coalesced: self.singleflight_coalesced.load(Ordering::Relaxed),
+            sched_steals: self.sched_steals.load(Ordering::Relaxed),
+            sched_steals_remote: self.sched_steals_remote.load(Ordering::Relaxed),
         }
     }
 
@@ -95,6 +105,9 @@ impl Metrics {
             &s.cache_misses,
             &s.cache_evictions,
             &s.prefetch_issued,
+            &s.singleflight_coalesced,
+            &s.sched_steals,
+            &s.sched_steals_remote,
         ] {
             c.store(0, Ordering::Relaxed);
         }
@@ -117,6 +130,9 @@ pub struct MetricsSnapshot {
     pub cache_misses: u64,
     pub cache_evictions: u64,
     pub prefetch_issued: u64,
+    pub singleflight_coalesced: u64,
+    pub sched_steals: u64,
+    pub sched_steals_remote: u64,
 }
 
 impl MetricsSnapshot {
@@ -136,6 +152,9 @@ impl MetricsSnapshot {
             cache_misses: self.cache_misses - earlier.cache_misses,
             cache_evictions: self.cache_evictions - earlier.cache_evictions,
             prefetch_issued: self.prefetch_issued - earlier.prefetch_issued,
+            singleflight_coalesced: self.singleflight_coalesced - earlier.singleflight_coalesced,
+            sched_steals: self.sched_steals - earlier.sched_steals,
+            sched_steals_remote: self.sched_steals_remote - earlier.sched_steals_remote,
         }
     }
 }

@@ -255,3 +255,232 @@ fn group_of_matrices_behaves_as_wider_matrix() {
     let c = datasets::uniform(&eng, 10, 1, 0.0, 1.0, 3, None).unwrap();
     assert!(FmMatrix::group(&eng, &[&a, &c]).is_err());
 }
+
+// ---------------------------------------------------------------------------
+// PR 2: locality-aware scheduling, single-flight prefetch, strip-evaluator
+// correctness fixes
+// ---------------------------------------------------------------------------
+
+/// Multi-worker EM passes must prefetch (I/O overlapping compute, §III-B3)
+/// without ever reading one source partition's bytes twice: the range
+/// scheduler makes ownership deterministic and the cache's single-flight
+/// registry coalesces any residual race.
+#[test]
+fn multiworker_prefetch_reads_each_partition_once() {
+    let mut cfg = cfg_em("sched-singleflight");
+    cfg.threads = 4;
+    cfg.prefetch_depth = 4;
+    let eng = Engine::new(cfg).unwrap();
+    // 10 I/O partitions of 65536 rows x 4 cols (io_rows_for(4) = 65536)
+    let x = datasets::uniform(&eng, 10 * 65536, 4, -1.0, 1.0, 77, None).unwrap();
+
+    // drop the write-through copies so the pass must hit the file
+    let pc = eng.cache.as_ref().expect("partition cache enabled");
+    pc.clear();
+    eng.metrics.reset();
+
+    let s = x.sum().unwrap();
+    let m = eng.metrics.snapshot();
+    assert!(
+        m.prefetch_issued > 0,
+        "multi-worker EM pass issued no prefetches"
+    );
+    assert_eq!(
+        m.io_read_reqs, 10,
+        "each source partition's bytes must be read at most once per pass \
+         (prefetches: {}, coalesced: {})",
+        m.prefetch_issued, m.singleflight_coalesced
+    );
+
+    // warm re-run agrees (and, fully cached, reads nothing)
+    eng.metrics.reset();
+    let s2 = x.sum().unwrap();
+    assert_eq!(s, s2);
+    assert_eq!(eng.metrics.snapshot().io_read_reqs, 0);
+}
+
+/// A worker that drains its range steals from the busy worker, the steal
+/// surfaces through `Metrics`, and the stolen work still sums correctly.
+/// Deterministic skew: partition 0 is ~1000x slower than the rest, so the
+/// fast worker must finish its own range and steal from the slow one.
+#[test]
+fn scheduler_steals_surface_in_metrics() {
+    use flashmatrix::dtype::DType;
+    use flashmatrix::vudf::{Buf, CustomVudf};
+
+    struct SlowFirstPartition;
+    impl CustomVudf for SlowFirstPartition {
+        fn name(&self) -> &str {
+            "slow-first-partition"
+        }
+        fn out_dtype(&self, input: DType) -> DType {
+            input
+        }
+        fn unary(&self, a: &Buf) -> flashmatrix::Result<Buf> {
+            // the seq input carries the global row index: rows < 65536 are
+            // partition 0 — crawl there, sprint everywhere else
+            if a.to_f64_vec().first().map(|v| *v < 65536.0).unwrap_or(false) {
+                std::thread::sleep(std::time::Duration::from_millis(15));
+            }
+            Ok(a.clone())
+        }
+    }
+
+    let mut cfg = cfg_im();
+    cfg.threads = 2;
+    let eng = Engine::new(cfg).unwrap();
+    eng.registry.register(std::sync::Arc::new(SlowFirstPartition));
+    // 4 units over 2 workers: worker 0 owns [0,2), worker 1 owns [2,4).
+    // Worker 1 finishes its fast units while worker 0 crawls through
+    // partition 0, so unit 1 must be stolen.
+    let n = 4u64 * 65536;
+    let x = FmMatrix::seq_int(&eng, 0.0, 1.0, n);
+    eng.metrics.reset();
+    let s = x.sapply_custom("slow-first-partition").unwrap().sum().unwrap();
+    let m = eng.metrics.snapshot();
+    assert!(
+        m.sched_steals >= 1,
+        "fast worker must steal from the slow one (steals {})",
+        m.sched_steals
+    );
+    // exact: integer-valued f64 sums below 2^53 have no rounding
+    assert_eq!(s, (n * (n - 1) / 2) as f64);
+}
+
+/// One failing partition aborts the whole pass: other workers stop
+/// claiming instead of processing (and writing) everything that remains.
+#[test]
+fn failing_partition_aborts_pass_early() {
+    use flashmatrix::dtype::DType;
+    use flashmatrix::vudf::{Buf, CustomVudf};
+
+    struct Probe;
+    impl CustomVudf for Probe {
+        fn name(&self) -> &str {
+            "abort-probe"
+        }
+        fn out_dtype(&self, input: DType) -> DType {
+            input
+        }
+        fn unary(&self, a: &Buf) -> flashmatrix::Result<Buf> {
+            // the seq matrix carries the global row index: row 0 lives in
+            // partition 0, so exactly one partition fails — fast
+            if a.to_f64_vec().iter().any(|v| *v == 0.0) {
+                return Err(flashmatrix::FmError::Unsupported("probe failure".into()));
+            }
+            // everywhere else simulate real per-strip work so the abort
+            // flag observably cuts the pass short
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            Ok(a.clone())
+        }
+    }
+
+    let mut cfg = cfg_im();
+    cfg.threads = 2;
+    let eng = Engine::new(cfg).unwrap();
+    eng.registry.register(std::sync::Arc::new(Probe));
+    // 16 pass partitions (io_rows_for(1) = 65536)
+    let x = FmMatrix::seq_int(&eng, 0.0, 1.0, 16 * 65536);
+    eng.metrics.reset();
+    let r = x.sapply_custom("abort-probe").unwrap().sum();
+    assert!(r.is_err(), "the failing partition's error must propagate");
+    let done = eng.metrics.snapshot().native_partitions;
+    assert!(
+        done < 4,
+        "abort flag must stop the other workers early (processed {done}/16)"
+    );
+}
+
+/// Mixed-dtype groups (`fm.cbind.list` factor scenario): each member is
+/// decoded with its own dtype and cast to the promoted group dtype.
+#[test]
+fn mixed_dtype_group_decodes_members_correctly() {
+    use flashmatrix::dtype::DType;
+    use flashmatrix::vudf::UnOp;
+
+    let eng = Engine::new(cfg_im()).unwrap();
+    let f = datasets::uniform(&eng, 30_000, 3, -1.0, 1.0, 21, None).unwrap();
+    let i = datasets::uniform(&eng, 30_000, 2, 0.0, 9.0, 22, None)
+        .unwrap()
+        .sapply(UnOp::Floor)
+        .unwrap()
+        .cast(DType::I32)
+        .unwrap()
+        .materialize()
+        .unwrap();
+    let g = FmMatrix::group(&eng, &[&i, &f]).unwrap();
+    assert_eq!(g.dtype(), DType::F64, "group dtype must promote over members");
+    assert_eq!(g.ncol(), 5);
+
+    // group colSums == concatenated member colSums
+    let gc = g.col_sums().unwrap().buf.to_f64_vec();
+    let mut want = i.col_sums().unwrap().buf.to_f64_vec();
+    want.extend(f.col_sums().unwrap().buf.to_f64_vec());
+    assert_close(&gc, &want, 1e-12, "mixed-dtype group colSums");
+
+    // elementwise op over the promoted group matches the members
+    let s = g.sq().unwrap().sum().unwrap();
+    let want = i.sq().unwrap().sum().unwrap() + f.sq().unwrap().sum().unwrap();
+    assert!((s - want).abs() / want.abs().max(1.0) < 1e-12);
+}
+
+/// `which.min`/`which.max` skip NaNs like R skips NAs; a NaN in the first
+/// column must not freeze the answer at index 1.
+#[test]
+fn which_min_skips_nans() {
+    use flashmatrix::matrix::HostMat;
+
+    let eng = Engine::new(cfg_im()).unwrap();
+    let h = HostMat::from_rows_f64(&[
+        vec![f64::NAN, 2.0, 0.5],
+        vec![3.0, f64::NAN, 1.0],
+        vec![f64::NAN, f64::NAN, f64::NAN],
+    ]);
+    let x = FmMatrix::from_host(&eng, &h).unwrap();
+    let mins = x.which_min_row().unwrap().to_host().unwrap().buf.to_f64_vec();
+    assert_eq!(mins, vec![3.0, 3.0, 1.0]);
+    let maxs = x.which_max_row().unwrap().to_host().unwrap().buf.to_f64_vec();
+    assert_eq!(maxs, vec![2.0, 1.0, 1.0]);
+}
+
+/// Min/Max aggregation must give identical results with `vectorized_udf`
+/// on and off when NaNs are present: the vectorized `reduce` fast paths
+/// (`f64::min`/`max`) and the scalar `fold_scalar` path (`<`/`>`) share
+/// NaN-skipping semantics. Pins the contract.
+#[test]
+fn nan_min_max_parity_across_udf_modes() {
+    use flashmatrix::matrix::HostMat;
+
+    let h = HostMat::from_rows_f64(&[
+        vec![1.0, f64::NAN],
+        vec![f64::NAN, -2.0],
+        vec![5.0, 0.5],
+    ]);
+    let mut got = Vec::new();
+    for vectorized in [true, false] {
+        let cfg = EngineConfig {
+            vectorized_udf: vectorized,
+            ..cfg_im()
+        };
+        let eng = Engine::new(cfg).unwrap();
+        let x = FmMatrix::from_host(&eng, &h).unwrap();
+        let mut fp = vec![x.min().unwrap(), x.max().unwrap()];
+        fp.extend(x.agg_col(AggOp::Min).unwrap().buf.to_f64_vec());
+        fp.extend(x.agg_col(AggOp::Max).unwrap().buf.to_f64_vec());
+        fp.extend(
+            x.agg_row(AggOp::Min)
+                .unwrap()
+                .to_host()
+                .unwrap()
+                .buf
+                .to_f64_vec(),
+        );
+        got.push(fp);
+    }
+    assert_eq!(got[0], got[1], "vectorized and scalar NaN semantics differ");
+    // and both match R's NA-skipping answers
+    assert_eq!(
+        got[0],
+        vec![-2.0, 5.0, 1.0, -2.0, 5.0, 0.5, 1.0, -2.0, 0.5]
+    );
+}
