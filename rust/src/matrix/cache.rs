@@ -514,19 +514,19 @@ impl PartitionCache {
         self.epoch.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Release outstanding read-ahead pins (entries prefetched but not
-    /// yet consumed) — for one matrix, or every matrix with `None`. An
-    /// aborted pass may never send the consumer a prefetched partition
-    /// was pinned for; without this sweep the pin would shield the entry
-    /// from eviction for the matrix's lifetime and permanently shrink the
-    /// cache. Scoping by matrix id limits the blast radius: a concurrent
-    /// pass only loses pins when it scans one of the sweeping pass's own
-    /// matrices (and the epoch bump may drop its queued read-aheads) —
-    /// its demand reads stay correct either way.
-    pub fn release_prefetch_pins(&self, matrix_id: Option<u64>) {
+    /// Release one matrix's outstanding read-ahead pins (entries
+    /// prefetched but not yet consumed). An aborted pass may never send
+    /// the consumer a prefetched partition was pinned for; without this
+    /// sweep the pin would shield the entry from eviction for the
+    /// matrix's lifetime and permanently shrink the cache. Scoping by
+    /// matrix id limits the blast radius: a concurrent pass only loses
+    /// pins when it scans one of the sweeping pass's own matrices (and
+    /// the epoch bump may drop its queued read-aheads) — its demand
+    /// reads stay correct either way.
+    pub fn release_prefetch_pins(&self, matrix_id: u64) {
         let mut g = self.inner.lock().unwrap();
         for (k, e) in g.map.iter_mut() {
-            if matrix_id.map(|id| id == k.0).unwrap_or(true) && e.unpin_on_hit {
+            if k.0 == matrix_id && e.unpin_on_hit {
                 e.unpin_on_hit = false;
                 e.pins = e.pins.saturating_sub(1);
             }
@@ -576,7 +576,10 @@ impl PartitionCache {
         len: usize,
     ) {
         let Some(tx) = &cache.prefetch_tx else { return };
-        if cache.contains(matrix_id, part) {
+        // a partition larger than the whole cache can never be admitted:
+        // reading it ahead would only make its demand reader serialize
+        // behind a futile read and then re-read the file
+        if len > cache.capacity || cache.contains(matrix_id, part) {
             return;
         }
         let req = PrefetchReq {
@@ -819,7 +822,7 @@ mod tests {
         c.insert(id1, 2, vec![0u8; 100]);
         assert!(!c.contains(id1, 2), "fully pinned cache must skip admission");
         // the abort-path sweep releases only the aborted pass's matrix
-        c.release_prefetch_pins(Some(id1));
+        c.release_prefetch_pins(id1);
         c.insert(id1, 3, vec![0u8; 100]);
         assert!(c.contains(id1, 3), "released entries must be evictable");
         assert!(!c.contains(id1, 0), "the released orphan is the victim");

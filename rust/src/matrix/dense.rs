@@ -193,7 +193,7 @@ impl DenseData {
             pcache: Some(h), ..
         } = &self.backing
         {
-            h.cache.release_prefetch_pins(Some(h.matrix_id));
+            h.cache.release_prefetch_pins(h.matrix_id);
         }
     }
 
