@@ -1,0 +1,147 @@
+//! Bench: liveness-driven register reuse + in-place/fused strip kernels.
+//!
+//! The strip evaluator used to allocate a fresh heap `Buf` for every
+//! instruction of every CPU strip. With the compile-time register plan
+//! (`exec/pipeline.rs`) the hot Sapply -> MapplyScalar -> RowAgg chain
+//! instead (a) peephole-fuses the elementwise steps into one traversal,
+//! (b) runs them in place on the dead load register, and (c) recycles
+//! every dead register through the worker's `StripPool` — so steady-state
+//! strips allocate nothing at all.
+//!
+//! This bench ablates each feature (`recycle_chunks`, `inplace_ops`,
+//! `peephole_fuse`) on a fused Sapply -> MapplyScalar -> MapplyScalar ->
+//! RowAgg pipeline and reports strips/sec plus the `buf_allocs` /
+//! `buf_reuses` / `inplace_ops` / `fused_chain_len` counters. It fails
+//! loudly if the optimized configuration allocates as much as the
+//! unoptimized one, or if any configuration's results are not
+//! bit-identical to the all-off baseline.
+//!
+//! Run: `cargo bench --bench strip_fusion`
+//! (env `FM_BENCH_ITERS` overrides the pass count, default 3).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use flashmatrix::config::EngineConfig;
+use flashmatrix::datasets;
+use flashmatrix::dtype::Scalar;
+use flashmatrix::fmr::{Engine, FmMatrix};
+use flashmatrix::matrix::{HostMat, Partitioning};
+use flashmatrix::util::bench::Table;
+use flashmatrix::vudf::BinOp;
+
+const ROWS: u64 = 1 << 19; // x 8 cols x 8 B = 32 MiB in-mem
+const COLS: u64 = 8;
+
+fn engine(recycle: bool, inplace: bool, peephole: bool) -> Arc<Engine> {
+    Engine::new(EngineConfig {
+        recycle_chunks: recycle,
+        inplace_ops: inplace,
+        peephole_fuse: peephole,
+        xla_dispatch: false,
+        ..EngineConfig::default()
+    })
+    .expect("engine")
+}
+
+/// The chain under test: sq -> *0.5 -> +1 -> rowSums, one fused pass.
+fn pipeline(x: &FmMatrix) -> HostMat {
+    x.sq()
+        .and_then(|m| m.mapply_scalar(Scalar::F64(0.5), BinOp::Mul, true))
+        .and_then(|m| m.mapply_scalar(Scalar::F64(1.0), BinOp::Add, true))
+        .and_then(|m| m.row_sums())
+        .and_then(|m| m.to_host())
+        .expect("pipeline pass")
+}
+
+/// Exact CPU-strip count of one pass over the ROWS x COLS matrix.
+fn strips_per_pass(cpu_part_bytes: usize) -> usize {
+    let parts = Partitioning::new(ROWS, COLS);
+    (0..parts.n_parts())
+        .map(|i| parts.cpu_ranges(i, cpu_part_bytes).len())
+        .sum()
+}
+
+fn main() {
+    let iters: usize = std::env::var("FM_BENCH_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3);
+
+    let mut t = Table::new(format!(
+        "strip-fusion ablation: {iters} Sapply->MapplyScalar->RowAgg passes \
+         over {} MiB in-mem ({} strips/pass)",
+        (ROWS * COLS * 8) >> 20,
+        strips_per_pass(EngineConfig::default().cpu_part_bytes),
+    ));
+
+    // (label, recycle_chunks, inplace_ops, peephole_fuse)
+    let configs = [
+        ("all-on", true, true, true),
+        ("no-recycle", false, true, true),
+        ("no-inplace", true, false, true),
+        ("no-peephole", true, true, false),
+        ("all-off", false, false, false),
+    ];
+
+    let mut baseline: Option<HostMat> = None;
+    let mut allocs_on = u64::MAX;
+    let mut allocs_off = 0u64;
+    let mut bitexact = true;
+    for (label, recycle, inplace, peephole) in configs {
+        let eng = engine(recycle, inplace, peephole);
+        let x = datasets::uniform(&eng, ROWS, COLS, -1.0, 1.0, 11, None).expect("dataset");
+        let mut last = pipeline(&x); // warm up + correctness sample
+        eng.metrics.reset();
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            last = pipeline(&x);
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let m = eng.metrics.snapshot();
+
+        // bit-exact parity across every configuration (the "all-off"
+        // fresh-alloc path is the reference)
+        match &baseline {
+            None => baseline = Some(last.clone()),
+            Some(b) => {
+                if *b != last {
+                    bitexact = false;
+                }
+            }
+        }
+        if label == "all-on" {
+            allocs_on = m.buf_allocs;
+        }
+        if label == "all-off" {
+            allocs_off = m.buf_allocs;
+        }
+
+        let strips = (strips_per_pass(eng.config.cpu_part_bytes) * iters) as f64;
+        t.add_with(
+            label,
+            strips / secs,
+            "strips/s",
+            vec![
+                ("secs".into(), secs),
+                ("buf_allocs".into(), m.buf_allocs as f64),
+                ("buf_reuses".into(), m.buf_reuses as f64),
+                ("inplace_ops".into(), m.inplace_ops as f64),
+                ("fused_len".into(), m.fused_chain_len as f64),
+            ],
+        );
+    }
+    t.print();
+
+    let fewer = allocs_on < allocs_off;
+    println!(
+        "\nbuf_allocs all-on vs all-off: {allocs_on} vs {allocs_off} — {}",
+        if fewer && bitexact {
+            "PASS: recycling+in-place allocate strictly less, bit-identical results"
+        } else if !fewer {
+            "FAIL: optimized config did not reduce strip allocations"
+        } else {
+            "FAIL: configurations disagree on results"
+        }
+    );
+}

@@ -39,8 +39,20 @@ pub struct EngineConfig {
     /// Fixed memory-chunk size in bytes (paper default: 64 MiB).
     pub chunk_bytes: usize,
     /// Recycle freed chunks instead of releasing to the OS
-    /// (Fig 11 "mem-alloc" optimization).
+    /// (Fig 11 "mem-alloc" optimization). Also governs the strip
+    /// evaluator's per-worker register recycler
+    /// ([`crate::mem::StripPool`]).
     pub recycle_chunks: bool,
+    /// Execute unary/scalar/cast instructions in place on their input
+    /// register's buffer when compile-time liveness shows the input is
+    /// dead (§III-B5 applied to the strip hot path). Ablated by
+    /// `benches/strip_fusion.rs`.
+    pub inplace_ops: bool,
+    /// Peephole-fuse single-consumer `Sapply`/`MapplyScalar` f64 chains
+    /// into one composite instruction, so a CPU strip is traversed once
+    /// per chain instead of once per step (§III-E at the instruction
+    /// level). Ablated by `benches/strip_fusion.rs`.
+    pub peephole_fuse: bool,
     /// Fuse DAG operations within main memory: one streaming pass per DAG
     /// instead of one per operation (Fig 11 "mem-fuse"). Off = the eager,
     /// materialize-every-op engine (the MLlib-like baseline).
@@ -97,6 +109,8 @@ impl Default for EngineConfig {
             data_dir: PathBuf::from("data"),
             chunk_bytes: 64 << 20,
             recycle_chunks: true,
+            inplace_ops: true,
+            peephole_fuse: true,
             fuse_mem: true,
             fuse_cache: true,
             vectorized_udf: true,
@@ -125,6 +139,8 @@ impl EngineConfig {
             fuse_cache: false,
             vectorized_udf: false,
             recycle_chunks: false,
+            inplace_ops: false,
+            peephole_fuse: false,
             xla_dispatch: false,
             ..Default::default()
         }
@@ -199,6 +215,14 @@ mod tests {
         assert!(c.em_cache_bytes > 0);
         assert!(c.prefetch_depth > 0);
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn strip_fusion_knobs_default_on() {
+        let c = EngineConfig::default();
+        assert!(c.inplace_ops && c.peephole_fuse);
+        let m = EngineConfig::mllib_like();
+        assert!(!m.inplace_ops && !m.peephole_fuse);
     }
 
     #[test]

@@ -17,7 +17,12 @@
 //!   op separately when it is off, so the DAG this module sees is depth-1.
 //! * `fuse_cache` selects the strip height: CPU-cache-sized strips when on,
 //!   whole I/O partitions when off.
-//! * `recycle_chunks` acts in [`crate::mem::ChunkPool`].
+//! * `recycle_chunks` acts in [`crate::mem::ChunkPool`] and, for the
+//!   strip evaluator's register buffers, in each worker's
+//!   [`crate::mem::StripPool`].
+//! * `inplace_ops` / `peephole_fuse` act at compile time in
+//!   [`pipeline::compile_opts`] (liveness-planned in-place kernels and
+//!   fused `Sapply`/`MapplyScalar` chains — `benches/strip_fusion.rs`).
 //! * `em_cache_bytes` / `prefetch_depth` act through the source reads:
 //!   every EM partition read consults the write-through matrix cache
 //!   ([`crate::matrix::cache`], §III-B3) before touching the file, and
@@ -37,7 +42,7 @@ use crate::dag::{SinkResult, SinkSpec};
 use crate::dtype::{DType, Scalar};
 use crate::error::{FmError, Result};
 use crate::matrix::{DenseBuilder, HostMat, Matrix, MatrixData, PartitionCache, Partitioning};
-use crate::mem::ChunkPool;
+use crate::mem::{ChunkPool, StripPool};
 use crate::metrics::Metrics;
 use crate::storage::SsdSim;
 use crate::vudf::{AggOp, Buf};
@@ -89,7 +94,17 @@ pub fn run_pass_opts(
     cache_resident: bool,
 ) -> Result<(Vec<Matrix>, Vec<SinkResult>)> {
     let storage = storage.unwrap_or_else(|| ctx.config.storage.clone());
-    let prog = Arc::new(pipeline::compile(targets, sinks)?);
+    let prog = Arc::new(pipeline::compile_opts(
+        targets,
+        sinks,
+        pipeline::CompileOpts {
+            peephole_fuse: ctx.config.peephole_fuse,
+            inplace_ops: ctx.config.inplace_ops,
+        },
+    )?);
+    ctx.metrics
+        .fused_chain_len
+        .fetch_add(prog.plan.fused_steps, Ordering::Relaxed);
     let nrow = prog.nrow;
 
     // ---- pass partitioning: nest within every dense source's partitions
@@ -175,9 +190,15 @@ pub fn run_pass_opts(
             let pass_parts = pass_parts.clone();
             let cfg = ctx.config;
             let metrics = Arc::clone(ctx.metrics);
+            let chunk_pool = ctx.pool;
             scope.spawn(move || {
                 let mut accs = SinkAccSet::new(&prog);
                 let mut cache = SourceCache::new(prog.sources.len());
+                // per-worker strip-register recycler (§III-B5 on the hot
+                // path): lives for the whole pass so buffers recycle
+                // across strips AND partitions; flushes its counters to
+                // the engine metrics on drop
+                let mut spool = chunk_pool.strip_pool();
                 'pass: while let Some(unit) = sched.claim_unit(w) {
                     let (p0, p1) = sched.unit_parts(unit);
                     // rows this worker still owns beyond the current
@@ -208,6 +229,7 @@ pub fn run_pass_opts(
                             &mut accs,
                             &mut cache,
                             &window,
+                            &mut spool,
                         ) {
                             let mut fe = first_err.lock().unwrap();
                             if fe.is_none() {
@@ -330,6 +352,7 @@ fn process_partition(
     accs: &mut SinkAccSet,
     cache: &mut SourceCache,
     window: &PrefetchWindow,
+    spool: &mut StripPool,
 ) -> Result<()> {
     let (g0, g1) = pass_parts.part_rows(pi);
     let prows = (g1 - g0) as usize;
@@ -362,10 +385,11 @@ fn process_partition(
         src_meta.push(((s1 - s0) as usize, (g0 - s0) as usize));
     }
 
-    // per-target partition output buffers
+    // per-target partition output buffers (pooled: reused across the
+    // partitions of this worker's range)
     let mut out_bufs: Vec<Buf> = builders
         .iter()
-        .map(|b| Buf::alloc(b.dtype(), prows * b.parts().ncol as usize))
+        .map(|b| spool.acquire(b.dtype(), prows * b.parts().ncol as usize))
         .collect();
 
     // strip heights: CPU-cache-sized when cache-fuse is on
@@ -393,25 +417,32 @@ fn process_partition(
                 }
             })
             .collect();
-        let regs = pipeline::eval_strip(prog, &srcs, g0 + ls, rows, cfg.vectorized_udf)?;
+        let regs = pipeline::eval_strip(prog, &srcs, g0 + ls, rows, cfg.vectorized_udf, spool)?;
 
-        // write target strips into the partition buffers
+        // write target strips into the partition buffers (same-dtype
+        // strips are copied straight from the register, no cast temp)
         for (ti, reg) in prog.target_regs.iter().enumerate() {
-            let strip = &regs[*reg];
+            let strip = regs[*reg].cast_ref(builders[ti].dtype())?;
             let ncol = builders[ti].parts().ncol as usize;
-            let strip = strip.cast(builders[ti].dtype())?;
             for j in 0..ncol {
-                let col = strip.slice(j * rows, rows);
-                out_bufs[ti].copy_from(j * prows + ls as usize, &col);
+                out_bufs[ti].copy_range_from(j * prows + ls as usize, &strip, j * rows, rows);
             }
         }
 
         // feed sinks
         accs.feed(prog, &regs, rows, cfg.vectorized_udf)?;
+
+        // recycle the strip's surviving registers for the next strip
+        for b in regs {
+            spool.release(b);
+        }
     }
 
     for (ti, buf) in out_bufs.iter().enumerate() {
         builders[ti].write_partition_buf(pi, buf)?;
+    }
+    for b in out_bufs {
+        spool.release(b);
     }
     Ok(())
 }
@@ -483,7 +514,9 @@ impl SinkAccSet {
             match (&mut self.accs[si], &sink.kind) {
                 (SinkAcc::Full { acc, op }, _) => {
                     let dt = acc.dtype();
-                    let cast = src.cast(dt)?;
+                    // borrow, don't copy, when the strip already has the
+                    // accumulator dtype (the homogeneous-f64 fast case)
+                    let cast = src.cast_ref(dt)?;
                     let part = if vectorized {
                         op.reduce(&cast)
                     } else {
@@ -493,7 +526,7 @@ impl SinkAccSet {
                 }
                 (SinkAcc::Col { acc, op }, _) => {
                     let dt = acc.dtype();
-                    let cast = src.cast(dt)?;
+                    let cast = src.cast_ref(dt)?;
                     for j in 0..ncol {
                         let col = cast.slice(j * rows, rows);
                         let part = if vectorized {
@@ -507,11 +540,11 @@ impl SinkAccSet {
                 (SinkAcc::Group { acc, k, op }, SinkInstrKind::GroupByRow { labels_reg, .. }) => {
                     let labels = &regs[*labels_reg];
                     let dt = acc.dtype();
-                    let cast = src.cast(dt)?;
+                    let cast = src.cast_ref(dt)?;
                     let kk = *k;
                     // f64-sum fast path (the k-means hot loop)
                     if let (Buf::F64(av), Buf::F64(ac), AggOp::Sum, Buf::I32(lv)) =
-                        (&cast, &mut *acc, *op, labels)
+                        (&*cast, &mut *acc, *op, labels)
                     {
                         for j in 0..ncol {
                             let col = &av[j * rows..(j + 1) * rows];

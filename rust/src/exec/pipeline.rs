@@ -8,15 +8,31 @@
 //! node's output is still cache-resident when its consumer runs — the
 //! paper's "pass the partition to the subsequent operation instead of
 //! materializing the next partition of the same matrix".
+//!
+//! Because register lifetimes of a compiled linear program are fully
+//! known, allocation is planned **once per pass** instead of paid per
+//! strip (§III-B5 applied to the hot path):
+//!
+//! * a *peephole pass* drops same-dtype casts (register aliasing) and
+//!   fuses single-consumer `Sapply`/`MapplyScalar` f64 chains into one
+//!   [`InstrKind::FusedChain`], so a strip is traversed once per chain
+//!   instead of once per step (§III-E at the instruction level);
+//! * a *liveness pass* records each register's last use ([`ExecPlan`]):
+//!   unary/scalar/cast instructions whose sole input dies at them run
+//!   **in place** on the input's buffer, and every other dead register's
+//!   buffer is recycled through the worker's
+//!   [`StripPool`](crate::mem::StripPool) honoring `recycle_chunks`.
 
 use std::collections::HashMap;
+use std::hint::black_box;
 use std::sync::Arc;
 
 use crate::dag::{SinkKind, SinkSpec, UnFn, VKind};
 use crate::dtype::{DType, Scalar};
 use crate::error::{FmError, Result};
 use crate::matrix::{HostMat, Matrix, MatrixData};
-use crate::vudf::{self, AggOp, BinOp, Buf};
+use crate::mem::StripPool;
+use crate::vudf::{self, AggOp, BinOp, Buf, UnOp};
 
 /// One compiled DAG node.
 pub struct Instr {
@@ -48,6 +64,45 @@ pub enum InstrKind {
     Cast { a: usize, to: DType },
     ColBind(Vec<usize>),
     SelectCol { a: usize, col: usize },
+    /// Peephole-fused chain of single-consumer unary/scalar steps over
+    /// one f64-valued register: the strip is traversed once, folding
+    /// every step per element, instead of once per step.
+    FusedChain { a: usize, steps: Vec<FusedStep> },
+}
+
+/// One step of an [`InstrKind::FusedChain`]. Steps always map f64 -> f64;
+/// the chain head converts its input register to f64 exactly like the
+/// unfused generic kernels do.
+#[derive(Clone, Debug)]
+pub enum FusedStep {
+    Un(UnOp),
+    /// `MapplyScalar` with the scalar pre-cast through the step's input
+    /// dtype (what `binary_vs`/`binary_sv` would have done at run time).
+    Scalar {
+        s: f64,
+        op: BinOp,
+        scalar_right: bool,
+    },
+}
+
+impl FusedStep {
+    #[inline(always)]
+    fn eval(&self, x: f64) -> f64 {
+        match self {
+            FusedStep::Un(u) => u.eval_f64(x),
+            FusedStep::Scalar {
+                s,
+                op,
+                scalar_right,
+            } => {
+                if *scalar_right {
+                    op.eval_f64(x, *s)
+                } else {
+                    op.eval_f64(*s, x)
+                }
+            }
+        }
+    }
 }
 
 /// Compiled sink: which register feeds it + terminal aggregation.
@@ -74,11 +129,55 @@ pub struct Program {
     pub sinks: Vec<SinkInstr>,
     /// Shared long dimension of the DAG.
     pub nrow: u64,
+    /// Register-allocation plan (liveness, in-place, fusion bookkeeping).
+    pub plan: ExecPlan,
+}
+
+/// Compile-time optimization switches (mirrors the `EngineConfig` knobs;
+/// `benches/strip_fusion.rs` ablates them).
+#[derive(Clone, Copy, Debug)]
+pub struct CompileOpts {
+    /// Drop same-dtype casts and fuse single-consumer `Sapply` /
+    /// `MapplyScalar` f64 chains into [`InstrKind::FusedChain`]s.
+    pub peephole_fuse: bool,
+    /// Plan in-place execution onto dead input registers.
+    pub inplace_ops: bool,
+}
+
+impl Default for CompileOpts {
+    fn default() -> Self {
+        CompileOpts {
+            peephole_fuse: true,
+            inplace_ops: true,
+        }
+    }
+}
+
+/// Compile-time register-allocation plan: last-use liveness over the
+/// program's registers, computed once per pass so strips pay neither the
+/// analysis nor (with recycling/in-place on) the allocations.
+pub struct ExecPlan {
+    /// `dies_at[i]`: registers whose last read is instruction `i` and
+    /// that no target or sink needs afterwards; the evaluator releases
+    /// their buffers to the strip pool right after `i` executes.
+    pub dies_at: Vec<Vec<usize>>,
+    /// `inplace[i]`: instruction `i` may steal its input register's
+    /// buffer (the input dies at `i`, dtypes match, and the kernel has a
+    /// bit-identical in-place form).
+    pub inplace: Vec<bool>,
+    /// Total steps folded into `FusedChain` instructions (the
+    /// `fused_chain_len` metric, counted once per compiled pass).
+    pub fused_steps: u64,
+}
+
+/// Compile targets + sinks with the default (fully optimized) options.
+pub fn compile(targets: &[Matrix], sinks: &[SinkSpec]) -> Result<Program> {
+    compile_opts(targets, sinks, CompileOpts::default())
 }
 
 /// Compile targets + sinks into a program. All roots must share the long
 /// dimension (checked).
-pub fn compile(targets: &[Matrix], sinks: &[SinkSpec]) -> Result<Program> {
+pub fn compile_opts(targets: &[Matrix], sinks: &[SinkSpec], opts: CompileOpts) -> Result<Program> {
     let mut roots: Vec<Matrix> = targets.to_vec();
     for s in sinks {
         roots.push(s.source.clone());
@@ -141,8 +240,8 @@ pub fn compile(targets: &[Matrix], sinks: &[SinkSpec]) -> Result<Program> {
         reg_of.insert(m.data_ptr(), reg);
     }
 
-    let target_regs = targets.iter().map(|t| reg_of[&t.data_ptr()]).collect();
-    let sinks = sinks
+    let target_regs: Vec<usize> = targets.iter().map(|t| reg_of[&t.data_ptr()]).collect();
+    let sinks: Vec<SinkInstr> = sinks
         .iter()
         .map(|s| {
             let src_reg = reg_of[&s.source.data_ptr()];
@@ -165,13 +264,331 @@ pub fn compile(targets: &[Matrix], sinks: &[SinkSpec]) -> Result<Program> {
         })
         .collect();
 
+    let (instrs, target_regs, sinks, fused_steps) = if opts.peephole_fuse {
+        peephole(instrs, target_regs, sinks)
+    } else {
+        (instrs, target_regs, sinks, 0)
+    };
+    let plan = plan_liveness(&instrs, &target_regs, &sinks, opts, fused_steps);
+
     Ok(Program {
         instrs,
         sources,
         target_regs,
         sinks,
         nrow,
+        plan,
     })
+}
+
+// ---------------------------------------------------------------------------
+// Compile-time register planning
+// ---------------------------------------------------------------------------
+
+/// Registers read by an instruction (with multiplicity).
+fn instr_reads(kind: &InstrKind) -> Vec<usize> {
+    match kind {
+        InstrKind::LoadDense(_)
+        | InstrKind::LoadGroup(_)
+        | InstrKind::Fill(_)
+        | InstrKind::Seq { .. }
+        | InstrKind::RandU { .. }
+        | InstrKind::RandN { .. } => vec![],
+        InstrKind::Sapply { a, .. }
+        | InstrKind::MapplyScalar { a, .. }
+        | InstrKind::MapplyRow { a, .. }
+        | InstrKind::RowAgg { a, .. }
+        | InstrKind::RowArgExtreme { a, .. }
+        | InstrKind::InnerSmall { a, .. }
+        | InstrKind::Cast { a, .. }
+        | InstrKind::SelectCol { a, .. }
+        | InstrKind::FusedChain { a, .. } => vec![*a],
+        InstrKind::Mapply { a, b, .. } => vec![*a, *b],
+        InstrKind::MapplyCol { a, v, .. } => vec![*a, *v],
+        InstrKind::ColBind(ps) => ps.clone(),
+    }
+}
+
+/// Rewrite every register operand through `f`.
+fn remap_operands(kind: &mut InstrKind, f: impl Fn(usize) -> usize) {
+    match kind {
+        InstrKind::LoadDense(_)
+        | InstrKind::LoadGroup(_)
+        | InstrKind::Fill(_)
+        | InstrKind::Seq { .. }
+        | InstrKind::RandU { .. }
+        | InstrKind::RandN { .. } => {}
+        InstrKind::Sapply { a, .. }
+        | InstrKind::MapplyScalar { a, .. }
+        | InstrKind::MapplyRow { a, .. }
+        | InstrKind::RowAgg { a, .. }
+        | InstrKind::RowArgExtreme { a, .. }
+        | InstrKind::InnerSmall { a, .. }
+        | InstrKind::Cast { a, .. }
+        | InstrKind::SelectCol { a, .. }
+        | InstrKind::FusedChain { a, .. } => *a = f(*a),
+        InstrKind::Mapply { a, b, .. } => {
+            *a = f(*a);
+            *b = f(*b);
+        }
+        InstrKind::MapplyCol { a, v, .. } => {
+            *a = f(*a);
+            *v = f(*v);
+        }
+        InstrKind::ColBind(ps) => {
+            for p in ps.iter_mut() {
+                *p = f(*p);
+            }
+        }
+    }
+}
+
+/// Peephole rewrite (§III-E at the instruction level):
+///
+/// 1. **Identity-cast elimination** — a `Cast` whose producer already has
+///    the target dtype becomes a register alias (same-dtype casts cost
+///    nothing; the `fmr` layer inserts them freely).
+/// 2. **Chain fusion** — a `Sapply` (built-in) or `MapplyScalar` with f64
+///    output whose producer is an f64 `Sapply`/`MapplyScalar`/chain with
+///    no other consumer merges into that producer as one
+///    [`InstrKind::FusedChain`]: one strip traversal per chain.
+///
+/// Operands stored in the surviving instructions keep their original
+/// register indices until the final compaction, which renumbers
+/// everything (instructions, targets, sinks) densely.
+fn peephole(
+    instrs: Vec<Instr>,
+    target_regs: Vec<usize>,
+    sinks: Vec<SinkInstr>,
+) -> (Vec<Instr>, Vec<usize>, Vec<SinkInstr>, u64) {
+    let n = instrs.len();
+    // readers of each original register, including targets and sinks
+    let mut uses = vec![0usize; n];
+    for ins in &instrs {
+        for r in instr_reads(&ins.kind) {
+            uses[r] += 1;
+        }
+    }
+    for r in &target_regs {
+        uses[*r] += 1;
+    }
+    for s in &sinks {
+        uses[s.src_reg] += 1;
+        match &s.kind {
+            SinkInstrKind::GroupByRow { labels_reg, .. } => uses[*labels_reg] += 1,
+            SinkInstrKind::InnerWideTall { right_reg, .. } => uses[*right_reg] += 1,
+            _ => {}
+        }
+    }
+
+    let mut slots: Vec<Option<Instr>> = instrs.into_iter().map(Some).collect();
+    // remap[r]: live slot holding register r's value (identity for live
+    // registers; eliminated/fused registers point at their replacement,
+    // which by construction is never eliminated later)
+    let mut remap: Vec<usize> = (0..n).collect();
+    // effective reader count per *live slot* (kept consistent as
+    // eliminated registers redirect their readers)
+    let mut eff = uses.clone();
+    let mut fused_steps = 0u64;
+
+    for j in 0..n {
+        let (a_orig, dtype) = {
+            let ins = slots[j].as_ref().expect("slot j not yet rewritten");
+            let reads = instr_reads(&ins.kind);
+            if reads.len() != 1 {
+                continue;
+            }
+            (reads[0], ins.dtype)
+        };
+        let ar = remap[a_orig];
+        enum Rw {
+            Alias,
+            Fuse(FusedStep),
+        }
+        let rw = match &slots[j].as_ref().unwrap().kind {
+            InstrKind::Cast { to, .. } if slots[ar].as_ref().unwrap().dtype == *to => Rw::Alias,
+            InstrKind::Sapply {
+                op: UnFn::Builtin(u),
+                ..
+            } if dtype == DType::F64 => Rw::Fuse(FusedStep::Un(*u)),
+            InstrKind::MapplyScalar {
+                s, op, scalar_right, ..
+            } if dtype == DType::F64 => Rw::Fuse(FusedStep::Scalar {
+                // the unfused path casts the scalar to the input dtype
+                // (f64 here: chain intermediates are all f64)
+                s: s.cast(DType::F64).as_f64(),
+                op: *op,
+                scalar_right: *scalar_right,
+            }),
+            _ => continue,
+        };
+        match rw {
+            Rw::Alias => {
+                // readers of j now read ar; ar loses the cast itself
+                eff[ar] = eff[ar] - 1 + eff[j];
+                remap[j] = ar;
+                slots[j] = None;
+            }
+            Rw::Fuse(step) => {
+                // fuse only into a single-consumer f64 chain head
+                if eff[ar] != 1 || slots_dtype(&slots, ar) != DType::F64 {
+                    continue;
+                }
+                // build the replacement kind from an immutable view first
+                let new_kind: Option<InstrKind> = match &slots[ar].as_ref().unwrap().kind {
+                    InstrKind::Sapply {
+                        a: h,
+                        op: UnFn::Builtin(u0),
+                    } => Some(InstrKind::FusedChain {
+                        a: *h,
+                        steps: vec![FusedStep::Un(*u0), step.clone()],
+                    }),
+                    InstrKind::MapplyScalar {
+                        a: h,
+                        s: s0,
+                        op: op0,
+                        scalar_right: sr0,
+                    } => {
+                        // head input may be non-f64: pre-cast its scalar
+                        // through the *input register's* dtype, exactly
+                        // like binary_vs/binary_sv would at run time
+                        let hdt = slots_dtype(&slots, remap[*h]);
+                        Some(InstrKind::FusedChain {
+                            a: *h,
+                            steps: vec![
+                                FusedStep::Scalar {
+                                    s: s0.cast(hdt).as_f64(),
+                                    op: *op0,
+                                    scalar_right: *sr0,
+                                },
+                                step.clone(),
+                            ],
+                        })
+                    }
+                    InstrKind::FusedChain { .. } => None,
+                    _ => continue,
+                };
+                match new_kind {
+                    Some(k) => {
+                        fused_steps += 2;
+                        slots[ar].as_mut().unwrap().kind = k;
+                    }
+                    None => {
+                        if let InstrKind::FusedChain { steps, .. } =
+                            &mut slots[ar].as_mut().unwrap().kind
+                        {
+                            fused_steps += 1;
+                            steps.push(step);
+                        }
+                    }
+                }
+                eff[ar] = eff[ar] - 1 + eff[j];
+                remap[j] = ar;
+                slots[j] = None;
+            }
+        }
+    }
+
+    // compact: drop eliminated slots, renumber every register reference
+    let mut final_idx = vec![usize::MAX; n];
+    let mut out: Vec<Instr> = Vec::with_capacity(n);
+    for (i, slot) in slots.iter_mut().enumerate() {
+        if let Some(ins) = slot.take() {
+            final_idx[i] = out.len();
+            out.push(ins);
+        }
+    }
+    let resolve = |r: usize| final_idx[remap[r]];
+    for ins in &mut out {
+        remap_operands(&mut ins.kind, &resolve);
+    }
+    let target_regs = target_regs.into_iter().map(&resolve).collect();
+    let sinks = sinks
+        .into_iter()
+        .map(|mut s| {
+            s.src_reg = resolve(s.src_reg);
+            match &mut s.kind {
+                SinkInstrKind::GroupByRow { labels_reg, .. } => *labels_reg = resolve(*labels_reg),
+                SinkInstrKind::InnerWideTall { right_reg, .. } => *right_reg = resolve(*right_reg),
+                _ => {}
+            }
+            s
+        })
+        .collect();
+    (out, target_regs, sinks, fused_steps)
+}
+
+/// Dtype of the live slot `r` (helper for the borrow-heavy fusion path).
+fn slots_dtype(slots: &[Option<Instr>], r: usize) -> DType {
+    slots[r].as_ref().expect("remap points at live slots").dtype
+}
+
+/// Last-use liveness + in-place planning over the final instruction list.
+fn plan_liveness(
+    instrs: &[Instr],
+    target_regs: &[usize],
+    sinks: &[SinkInstr],
+    opts: CompileOpts,
+    fused_steps: u64,
+) -> ExecPlan {
+    let n = instrs.len();
+    let mut live_end = vec![false; n];
+    for r in target_regs {
+        live_end[*r] = true;
+    }
+    for s in sinks {
+        live_end[s.src_reg] = true;
+        match &s.kind {
+            SinkInstrKind::GroupByRow { labels_reg, .. } => live_end[*labels_reg] = true,
+            SinkInstrKind::InnerWideTall { right_reg, .. } => live_end[*right_reg] = true,
+            _ => {}
+        }
+    }
+    let mut last_use = vec![usize::MAX; n];
+    for (i, ins) in instrs.iter().enumerate() {
+        for r in instr_reads(&ins.kind) {
+            last_use[r] = i;
+        }
+    }
+    let mut dies_at: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (r, &lu) in last_use.iter().enumerate() {
+        if !live_end[r] && lu != usize::MAX {
+            dies_at[lu].push(r);
+        }
+    }
+    let mut inplace = vec![false; n];
+    if opts.inplace_ops {
+        for (i, ins) in instrs.iter().enumerate() {
+            let cand = match &ins.kind {
+                InstrKind::Sapply {
+                    a,
+                    op: UnFn::Builtin(u),
+                } if instrs[*a].dtype == ins.dtype && u.supports_inplace(instrs[*a].dtype) => {
+                    Some(*a)
+                }
+                InstrKind::MapplyScalar { a, op, .. }
+                    if instrs[*a].dtype == ins.dtype
+                        && op.supports_inplace_broadcast(instrs[*a].dtype) =>
+                {
+                    Some(*a)
+                }
+                // same-dtype cast of a dead register is a pure move
+                InstrKind::Cast { a, to } if instrs[*a].dtype == *to => Some(*a),
+                InstrKind::FusedChain { a, .. } if instrs[*a].dtype == DType::F64 => Some(*a),
+                _ => None,
+            };
+            if let Some(a) = cand {
+                if !live_end[a] && last_use[a] == i {
+                    inplace[i] = true;
+                }
+            }
+        }
+    }
+    ExecPlan {
+        dies_at,
+        inplace,
+        fused_steps,
+    }
 }
 
 fn compile_vkind(kind: &VKind, reg_of: &HashMap<usize, usize>) -> Result<InstrKind> {
@@ -271,6 +688,13 @@ pub fn u64_to_unit_f64(z: u64) -> f64 {
     (z >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
 }
 
+/// Take a register's buffer out, leaving an empty placeholder (in-place
+/// execution and pool release both go through this).
+#[inline]
+fn take_reg(regs: &mut [Buf], r: usize) -> Buf {
+    std::mem::replace(&mut regs[r], Buf::empty())
+}
+
 /// Evaluate the program for one strip.
 ///
 /// * `srcs[i]` — source strip context for `Program::sources[i]`
@@ -278,22 +702,32 @@ pub fn u64_to_unit_f64(z: u64) -> f64 {
 /// * `global_row0` — global row index of the strip's first row (generators).
 /// * `rows` — strip height.
 /// * `vectorized` — VUDF mode (Fig 12 ablation).
+/// * `pool` — the worker's strip-buffer recycler; dead registers
+///   (per [`ExecPlan::dies_at`]) are released into it as the program
+///   runs, and in-place-planned instructions steal their input's buffer
+///   outright.
 ///
-/// Returns the register file (one strip-sized `Buf` per node).
+/// Returns the register file. Registers that died mid-program hold an
+/// empty placeholder; every target- or sink-referenced register is
+/// intact. The caller should release the returned buffers back to
+/// `pool` once it is done with them.
 pub fn eval_strip(
     prog: &Program,
     srcs: &[SourceStrip<'_>],
     global_row0: u64,
     rows: usize,
     vectorized: bool,
+    pool: &mut StripPool,
 ) -> Result<Vec<Buf>> {
+    let plan = &prog.plan;
     let mut regs: Vec<Buf> = Vec::with_capacity(prog.instrs.len());
-    for ins in &prog.instrs {
+    for (i, ins) in prog.instrs.iter().enumerate() {
         let ncol = ins.ncol as usize;
+        let inplace = plan.inplace[i];
         let out: Buf = match &ins.kind {
-            InstrKind::LoadDense(si) => load_strip(&srcs[*si], ins.dtype, ncol, rows)?,
+            InstrKind::LoadDense(si) => load_strip(&srcs[*si], ins.dtype, ncol, rows, pool)?,
             InstrKind::LoadGroup(sis) => {
-                let mut out = Buf::alloc(ins.dtype, rows * ncol);
+                let mut out = pool.acquire(ins.dtype, rows * ncol);
                 let mut col_off = 0usize;
                 for si in sis {
                     // decode with the *member's own* dtype — a member whose
@@ -307,17 +741,25 @@ pub fn eval_strip(
                         let esz = mdt.size();
                         srcs[*si].bytes.len() / (srcs[*si].part_rows * esz)
                     };
-                    let m = load_strip(&srcs[*si], mdt, member_ncol, rows)?;
+                    let m = load_strip(&srcs[*si], mdt, member_ncol, rows, pool)?;
                     // only heterogeneous members pay the cast copy
-                    let m = if mdt == ins.dtype { m } else { m.cast(ins.dtype)? };
-                    out.copy_from(col_off * rows, &m);
+                    if mdt == ins.dtype {
+                        out.copy_from(col_off * rows, &m);
+                    } else {
+                        out.copy_from(col_off * rows, &m.cast(ins.dtype)?);
+                    }
+                    pool.release(m);
                     col_off += member_ncol;
                 }
                 out
             }
-            InstrKind::Fill(s) => Buf::fill(ins.dtype, rows * ncol, *s),
+            InstrKind::Fill(s) => {
+                let mut b = pool.acquire(ins.dtype, rows * ncol);
+                b.fill_scalar(*s);
+                b
+            }
             InstrKind::Seq { start, step } => {
-                let mut b = Buf::alloc(ins.dtype, rows * ncol);
+                let mut b = pool.acquire(ins.dtype, rows * ncol);
                 for j in 0..ncol {
                     for r in 0..rows {
                         // sequence walks the long dimension; columns repeat
@@ -328,7 +770,7 @@ pub fn eval_strip(
                 b
             }
             InstrKind::RandU { seed, lo, hi } => {
-                let mut b = Buf::alloc(ins.dtype, rows * ncol);
+                let mut b = pool.acquire(ins.dtype, rows * ncol);
                 for j in 0..ncol {
                     for r in 0..rows {
                         let idx = (global_row0 + r as u64) * ins.ncol + j as u64;
@@ -339,7 +781,7 @@ pub fn eval_strip(
                 b
             }
             InstrKind::RandN { seed, mean, sd } => {
-                let mut b = Buf::alloc(ins.dtype, rows * ncol);
+                let mut b = pool.acquire(ins.dtype, rows * ncol);
                 for j in 0..ncol {
                     for r in 0..rows {
                         let idx = (global_row0 + r as u64) * ins.ncol + j as u64;
@@ -353,13 +795,33 @@ pub fn eval_strip(
                 b
             }
             InstrKind::Sapply { a, op } => match op {
-                UnFn::Builtin(u) => vudf::unary(*u, &regs[*a], vectorized)?,
-                UnFn::Custom(c) => c.unary(&regs[*a])?,
+                UnFn::Builtin(u) => {
+                    if inplace {
+                        let mut b = take_reg(&mut regs, *a);
+                        u.apply_inplace(&mut b, vectorized);
+                        pool.count_inplace();
+                        b
+                    } else {
+                        let r = vudf::unary(*u, &regs[*a], vectorized)?;
+                        pool.count_alloc();
+                        r
+                    }
+                }
+                UnFn::Custom(c) => {
+                    let r = c.unary(&regs[*a])?;
+                    pool.count_alloc();
+                    r
+                }
             },
             InstrKind::Mapply { a, b, op } => {
-                // insert implicit promotion casts (paper §III-D)
-                let (ba, bb) = promote_pair(&regs[*a], &regs[*b])?;
-                vudf::binary_vv(*op, &ba, &bb, vectorized)?
+                // insert implicit promotion casts (paper §III-D); a
+                // same-dtype operand is borrowed, not copied
+                let t = DType::promote(regs[*a].dtype(), regs[*b].dtype());
+                let ba = regs[*a].cast_ref(t)?;
+                let bb = regs[*b].cast_ref(t)?;
+                let r = vudf::binary_vv(*op, &ba, &bb, vectorized)?;
+                pool.count_alloc();
+                r
             }
             InstrKind::MapplyScalar {
                 a,
@@ -367,53 +829,163 @@ pub fn eval_strip(
                 op,
                 scalar_right,
             } => {
-                if *scalar_right {
-                    vudf::binary_vs(*op, &regs[*a], *s, vectorized)?
+                if inplace {
+                    let mut b = take_reg(&mut regs, *a);
+                    op.apply_broadcast_inplace(&mut b, *s, *scalar_right, vectorized);
+                    pool.count_inplace();
+                    b
                 } else {
-                    vudf::binary_sv(*op, *s, &regs[*a], vectorized)?
+                    let r = if *scalar_right {
+                        vudf::binary_vs(*op, &regs[*a], *s, vectorized)?
+                    } else {
+                        vudf::binary_sv(*op, *s, &regs[*a], vectorized)?
+                    };
+                    pool.count_alloc();
+                    r
                 }
             }
             InstrKind::MapplyRow { a, w, op } => {
-                vudf::binary_rowvec(*op, &regs[*a], w, rows, ncol, vectorized)?
+                let r = vudf::binary_rowvec(*op, &regs[*a], w, rows, ncol, vectorized)?;
+                pool.count_alloc();
+                r
             }
             InstrKind::MapplyCol { a, v, op } => {
                 let acols = regs[*a].len() / rows;
-                let (ba, bv) = promote_pair(&regs[*a], &regs[*v])?;
-                vudf::binary_colvec(*op, &ba, &bv, rows, acols, vectorized)?
+                let t = DType::promote(regs[*a].dtype(), regs[*v].dtype());
+                let ba = regs[*a].cast_ref(t)?;
+                let bv = regs[*v].cast_ref(t)?;
+                let r = vudf::binary_colvec(*op, &ba, &bv, rows, acols, vectorized)?;
+                pool.count_alloc();
+                r
             }
-            InstrKind::RowAgg { a, op } => row_agg(&regs[*a], rows, *op, vectorized),
-            InstrKind::RowArgExtreme { a, max } => row_arg_extreme(&regs[*a], rows, *max),
+            InstrKind::RowAgg { a, op } => row_agg(&regs[*a], rows, *op, vectorized, pool),
+            InstrKind::RowArgExtreme { a, max } => row_arg_extreme(&regs[*a], rows, *max, pool),
             InstrKind::InnerSmall { a, b, f1, f2 } => {
-                inner_small(&regs[*a], rows, b, *f1, *f2)?
+                inner_small(&regs[*a], rows, b, *f1, *f2, pool)?
             }
-            InstrKind::Cast { a, to } => regs[*a].cast(*to)?,
-            InstrKind::SelectCol { a, col } => regs[*a].slice(col * rows, rows),
+            InstrKind::Cast { a, to } => {
+                if inplace {
+                    // same-dtype cast of a dead register: pure move
+                    take_reg(&mut regs, *a)
+                } else {
+                    let mut b = pool.acquire(*to, regs[*a].len());
+                    regs[*a].cast_into(&mut b)?;
+                    b
+                }
+            }
+            InstrKind::SelectCol { a, col } => {
+                let mut b = pool.acquire(regs[*a].dtype(), rows);
+                b.copy_range_from(0, &regs[*a], col * rows, rows);
+                b
+            }
             InstrKind::ColBind(parts) => {
-                let mut out = Buf::alloc(ins.dtype, rows * ncol);
+                let mut out = pool.acquire(ins.dtype, rows * ncol);
                 let mut off = 0usize;
                 for p in parts {
-                    let src = regs[*p].cast(ins.dtype)?;
+                    // same-dtype parts are copied straight from the
+                    // register, no cast temporary
+                    let src = regs[*p].cast_ref(ins.dtype)?;
                     out.copy_from(off, &src);
                     off += src.len();
                 }
                 out
             }
+            InstrKind::FusedChain { a, steps } => {
+                if inplace {
+                    let mut b = take_reg(&mut regs, *a);
+                    run_chain_inplace(&mut b, steps, vectorized);
+                    pool.count_inplace();
+                    b
+                } else {
+                    let mut b = pool.acquire(DType::F64, regs[*a].len());
+                    run_chain(&regs[*a], &mut b, steps, vectorized);
+                    b
+                }
+            }
         };
         regs.push(out);
+        // recycle registers whose last use was this instruction
+        // (in-place-consumed inputs are already empty placeholders)
+        for r in &plan.dies_at[i] {
+            let b = take_reg(&mut regs, *r);
+            pool.release(b);
+        }
     }
     Ok(regs)
 }
 
-/// Promote two buffers to their common dtype.
-fn promote_pair(a: &Buf, b: &Buf) -> Result<(Buf, Buf)> {
-    let t = DType::promote(a.dtype(), b.dtype());
-    Ok((a.cast(t)?, b.cast(t)?))
+/// Fold a fused chain over `input` into the f64 buffer `out` (one strip
+/// traversal). The input-to-f64 conversion matches what the unfused
+/// generic kernels do (`to_f64_vec` semantics); `vectorized = false`
+/// routes every step through `black_box` so the Fig 12 element-call
+/// ablation keeps paying one opaque call per element per step.
+fn run_chain(input: &Buf, out: &mut Buf, steps: &[FusedStep], vectorized: bool) {
+    let o = out.as_f64_mut();
+    macro_rules! fold {
+        ($v:expr, $conv:expr) => {{
+            if vectorized {
+                for (dst, x) in o.iter_mut().zip($v.iter()) {
+                    let mut y = $conv(*x);
+                    for st in steps {
+                        y = st.eval(y);
+                    }
+                    *dst = y;
+                }
+            } else {
+                for (dst, x) in o.iter_mut().zip($v.iter()) {
+                    let mut y = black_box($conv(*x));
+                    for st in steps {
+                        y = black_box(st.eval(black_box(y)));
+                    }
+                    *dst = y;
+                }
+            }
+        }};
+    }
+    match input {
+        Buf::F64(v) => fold!(v, |x: f64| x),
+        Buf::F32(v) => fold!(v, |x: f32| x as f64),
+        Buf::I64(v) => fold!(v, |x: i64| x as f64),
+        Buf::I32(v) => fold!(v, |x: i32| x as f64),
+        Buf::Bool(v) => fold!(v, |x: bool| x as u8 as f64),
+    }
 }
 
-/// Strip-load from a col-major source partition: gather `rows` rows of each
-/// column starting at the strip's local offset.
-fn load_strip(src: &SourceStrip<'_>, dtype: DType, ncol: usize, rows: usize) -> Result<Buf> {
-    let esz = dtype.size();
+/// [`run_chain`] folding in place on a dead f64 register's buffer.
+fn run_chain_inplace(buf: &mut Buf, steps: &[FusedStep], vectorized: bool) {
+    let v = buf.as_f64_mut();
+    if vectorized {
+        for x in v.iter_mut() {
+            let mut y = *x;
+            for st in steps {
+                y = st.eval(y);
+            }
+            *x = y;
+        }
+    } else {
+        for x in v.iter_mut() {
+            let mut y = black_box(*x);
+            for st in steps {
+                y = black_box(st.eval(black_box(y)));
+            }
+            *x = y;
+        }
+    }
+}
+
+/// Strip-load from a col-major source partition: gather `rows` rows of
+/// each column starting at the strip's local offset, decoding typed
+/// columns straight from the partition bytes into a (pooled) buffer —
+/// one pass, no intermediate byte buffer for any dtype (originally f64
+/// only; F32/I32/I64 matter for integer label matrices and f32 features
+/// — EXPERIMENTS.md §Perf).
+fn load_strip(
+    src: &SourceStrip<'_>,
+    dtype: DType,
+    ncol: usize,
+    rows: usize,
+    pool: &mut StripPool,
+) -> Result<Buf> {
     let prows = src.part_rows;
     if src.local_row0 + rows > prows {
         return Err(FmError::Shape(format!(
@@ -422,38 +994,51 @@ fn load_strip(src: &SourceStrip<'_>, dtype: DType, ncol: usize, rows: usize) -> 
             src.local_row0 + rows
         )));
     }
-    // fast path: decode f64 columns straight from the partition bytes
-    // (one pass, no intermediate byte buffer — EXPERIMENTS.md §Perf)
-    if dtype == DType::F64 {
-        let mut out = Vec::with_capacity(rows * ncol);
-        for j in 0..ncol {
-            let src_off = (j * prows + src.local_row0) * 8;
-            out.extend(
-                src.bytes[src_off..src_off + rows * 8]
-                    .chunks_exact(8)
-                    .map(|c| f64::from_le_bytes(c.try_into().unwrap())),
-            );
+    let mut out = pool.acquire(dtype, rows * ncol);
+    macro_rules! decode {
+        ($d:expr, $t:ty, $w:expr) => {{
+            for j in 0..ncol {
+                let src_off = (j * prows + src.local_row0) * $w;
+                let dst = &mut $d[j * rows..(j + 1) * rows];
+                for (o, c) in dst
+                    .iter_mut()
+                    .zip(src.bytes[src_off..src_off + rows * $w].chunks_exact($w))
+                {
+                    *o = <$t>::from_le_bytes(c.try_into().unwrap());
+                }
+            }
+        }};
+    }
+    match &mut out {
+        Buf::F64(d) => decode!(d, f64, 8),
+        Buf::F32(d) => decode!(d, f32, 4),
+        Buf::I64(d) => decode!(d, i64, 8),
+        Buf::I32(d) => decode!(d, i32, 4),
+        Buf::Bool(d) => {
+            for j in 0..ncol {
+                let src_off = j * prows + src.local_row0;
+                for (o, b) in d[j * rows..(j + 1) * rows]
+                    .iter_mut()
+                    .zip(&src.bytes[src_off..src_off + rows])
+                {
+                    *o = *b != 0;
+                }
+            }
         }
-        return Ok(Buf::F64(out));
     }
-    let mut bytes = vec![0u8; rows * ncol * esz];
-    for j in 0..ncol {
-        let src_off = (j * prows + src.local_row0) * esz;
-        let dst_off = j * rows * esz;
-        bytes[dst_off..dst_off + rows * esz]
-            .copy_from_slice(&src.bytes[src_off..src_off + rows * esz]);
-    }
-    Buf::from_bytes(dtype, &bytes)
+    Ok(out)
 }
 
 /// Per-row reduction over a col-major strip -> rows x 1.
-fn row_agg(a: &Buf, rows: usize, op: AggOp, vectorized: bool) -> Buf {
+fn row_agg(a: &Buf, rows: usize, op: AggOp, vectorized: bool, pool: &mut StripPool) -> Buf {
     let ncol = a.len() / rows.max(1);
     let acc_dt = op.acc_dtype(a.dtype());
     // fast path: f64 sum/min/max with column-sweep accumulation
     if vectorized && a.dtype() == DType::F64 && acc_dt == DType::F64 {
         if let Buf::F64(v) = a {
-            let mut acc = vec![op.identity(DType::F64).as_f64(); rows];
+            let mut out = pool.acquire(DType::F64, rows);
+            let acc = out.as_f64_mut();
+            acc.fill(op.identity(DType::F64).as_f64());
             for j in 0..ncol {
                 let col = &v[j * rows..(j + 1) * rows];
                 match op {
@@ -480,10 +1065,10 @@ fn row_agg(a: &Buf, rows: usize, op: AggOp, vectorized: bool) -> Buf {
                     _ => unreachable!("acc_dtype guarantees numeric op"),
                 }
             }
-            return Buf::F64(acc);
+            return out;
         }
     }
-    let mut out = Buf::alloc(acc_dt, rows);
+    let mut out = pool.acquire(acc_dt, rows);
     for r in 0..rows {
         let mut acc = op.identity(acc_dt);
         for j in 0..ncol {
@@ -500,9 +1085,10 @@ fn row_agg(a: &Buf, rows: usize, op: AggOp, vectorized: bool) -> Buf {
 /// poisons later comparisons (seeding on a NaN first column would make
 /// every `<`/`>` test false and freeze the answer at column 1). An all-NaN
 /// row falls back to index 1.
-fn row_arg_extreme(a: &Buf, rows: usize, max: bool) -> Buf {
+fn row_arg_extreme(a: &Buf, rows: usize, max: bool, pool: &mut StripPool) -> Buf {
     let ncol = a.len() / rows.max(1);
-    let mut out = vec![0i32; rows];
+    let mut out = pool.acquire(DType::I32, rows);
+    let o = out.as_i32_mut();
     for r in 0..rows {
         let mut best = f64::NAN;
         let mut bi = 0i32; // 0 = nothing finite seen yet
@@ -516,9 +1102,9 @@ fn row_arg_extreme(a: &Buf, rows: usize, max: bool) -> Buf {
                 bi = j as i32 + 1; // 1-based like R
             }
         }
-        out[r] = bi.max(1);
+        o[r] = bi.max(1);
     }
-    Buf::I32(out)
+    out
 }
 
 /// Generalized inner product of a strip (rows x p) with a small host matrix
@@ -527,7 +1113,14 @@ fn row_arg_extreme(a: &Buf, rows: usize, max: bool) -> Buf {
 /// The (Mul, Sum, f64) case is the dense matmul the paper routes to BLAS;
 /// here it gets a monomorphic kernel (column-major SAXPY loop) and the
 /// XLA-artifact path replaces it at the algorithm level when shapes match.
-fn inner_small(a: &Buf, rows: usize, b: &HostMat, f1: BinOp, f2: AggOp) -> Result<Buf> {
+fn inner_small(
+    a: &Buf,
+    rows: usize,
+    b: &HostMat,
+    f1: BinOp,
+    f2: AggOp,
+    pool: &mut StripPool,
+) -> Result<Buf> {
     let p = b.nrow;
     let q = b.ncol;
     if a.len() != rows * p {
@@ -539,7 +1132,8 @@ fn inner_small(a: &Buf, rows: usize, b: &HostMat, f1: BinOp, f2: AggOp) -> Resul
     if f1 == BinOp::Mul && f2 == AggOp::Sum && a.dtype() == DType::F64 {
         if let (Buf::F64(av), Buf::F64(bv)) = (a, &b.buf) {
             // out[:, c] = sum_k a[:, k] * b[k, c]  (SAXPY over columns)
-            let mut out = vec![0.0f64; rows * q];
+            let mut outb = pool.acquire(DType::F64, rows * q);
+            let out = outb.as_f64_mut();
             for c in 0..q {
                 let ocol = &mut out[c * rows..(c + 1) * rows];
                 for k in 0..p {
@@ -552,12 +1146,12 @@ fn inner_small(a: &Buf, rows: usize, b: &HostMat, f1: BinOp, f2: AggOp) -> Resul
                     }
                 }
             }
-            return Ok(Buf::F64(out));
+            return Ok(outb);
         }
     }
     // generic path through f64
     let acc_dt = f2.acc_dtype(DType::promote(a.dtype(), b.buf.dtype()));
-    let mut out = Buf::alloc(acc_dt, rows * q);
+    let mut out = pool.acquire(acc_dt, rows * q);
     let g1 = move |x: f64, y: f64| -> f64 {
         // scalar form of f1 via the vectorized kernel on length-1 buffers
         // is wasteful; use the op's f64 semantic directly
@@ -589,6 +1183,11 @@ fn inner_small(a: &Buf, rows: usize, b: &HostMat, f1: BinOp, f2: AggOp) -> Resul
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::metrics::Metrics;
+
+    fn test_pool() -> StripPool {
+        StripPool::new(true, Arc::new(Metrics::new()))
+    }
 
     #[test]
     fn splitmix_matches_reference_stream() {
@@ -605,44 +1204,61 @@ mod tests {
 
     #[test]
     fn row_agg_and_argmin() {
+        let mut p = test_pool();
         // strip 2 rows x 3 cols, col-major: cols [1,5], [2,4], [0,6]
         let a = Buf::from_f64(&[1.0, 5.0, 2.0, 4.0, 0.0, 6.0]);
-        let sums = row_agg(&a, 2, AggOp::Sum, true);
+        let sums = row_agg(&a, 2, AggOp::Sum, true, &mut p);
         assert_eq!(sums.to_f64_vec(), vec![3.0, 15.0]);
-        let mins = row_agg(&a, 2, AggOp::Min, true);
+        let mins = row_agg(&a, 2, AggOp::Min, true, &mut p);
         assert_eq!(mins.to_f64_vec(), vec![0.0, 4.0]);
-        let am = row_arg_extreme(&a, 2, false);
+        let am = row_arg_extreme(&a, 2, false, &mut p);
         assert_eq!(am.as_i32(), &[3, 2]); // 1-based
     }
 
     #[test]
+    fn row_agg_reuses_released_buffers() {
+        let mut p = test_pool();
+        let a = Buf::from_f64(&[1.0, 5.0, 2.0, 4.0, 0.0, 6.0]);
+        let sums = row_agg(&a, 2, AggOp::Sum, true, &mut p);
+        p.release(sums);
+        // a recycled buffer must give the same answer as a fresh one
+        let again = row_agg(&a, 2, AggOp::Sum, true, &mut p);
+        assert_eq!(again.to_f64_vec(), vec![3.0, 15.0]);
+        let mins = row_agg(&a, 2, AggOp::Min, true, &mut p);
+        assert_eq!(mins.to_f64_vec(), vec![0.0, 4.0]);
+    }
+
+    #[test]
     fn row_arg_extreme_skips_nans() {
+        let mut p = test_pool();
         // 2 rows x 3 cols col-major: cols [NaN,5], [2,NaN], [0,6]
         let a = Buf::from_f64(&[f64::NAN, 5.0, 2.0, f64::NAN, 0.0, 6.0]);
-        let am = row_arg_extreme(&a, 2, false);
+        let am = row_arg_extreme(&a, 2, false, &mut p);
         assert_eq!(am.as_i32(), &[3, 1], "NaN must not poison which.min");
-        let ax = row_arg_extreme(&a, 2, true);
+        let ax = row_arg_extreme(&a, 2, true, &mut p);
         assert_eq!(ax.as_i32(), &[2, 3], "NaN must not poison which.max");
         // an all-NaN row falls back to index 1
         let b = Buf::from_f64(&[f64::NAN, 1.0, f64::NAN, 0.5]);
-        assert_eq!(row_arg_extreme(&b, 2, false).as_i32(), &[1, 2]);
+        assert_eq!(row_arg_extreme(&b, 2, false, &mut p).as_i32(), &[1, 2]);
     }
 
     #[test]
     fn inner_small_matmul() {
+        let mut p = test_pool();
         // a: 2x2 col-major [[1,2],[3,4]] -> cols [1,3],[2,4]
         let a = Buf::from_f64(&[1.0, 3.0, 2.0, 4.0]);
         let b = HostMat::from_rows_f64(&[vec![1.0, 0.0], vec![0.0, 1.0]]);
-        let out = inner_small(&a, 2, &b, BinOp::Mul, AggOp::Sum).unwrap();
+        let out = inner_small(&a, 2, &b, BinOp::Mul, AggOp::Sum, &mut p).unwrap();
         assert_eq!(out.to_f64_vec(), vec![1.0, 3.0, 2.0, 4.0]); // identity
         // generalized: min-plus "tropical" inner product
         // out[r,c] = min_k(a[r,k] + b[k,c])
-        let out = inner_small(&a, 2, &b, BinOp::Add, AggOp::Min).unwrap();
+        let out = inner_small(&a, 2, &b, BinOp::Add, AggOp::Min, &mut p).unwrap();
         assert_eq!(out.to_f64_vec(), vec![2.0, 4.0, 1.0, 3.0]);
     }
 
     #[test]
     fn load_strip_gathers_columns() {
+        let mut p = test_pool();
         // source partition: 4 rows x 2 cols col-major = [0,1,2,3, 10,11,12,13]
         let vals: Vec<f64> = vec![0.0, 1.0, 2.0, 3.0, 10.0, 11.0, 12.0, 13.0];
         let bytes = Buf::from_f64(&vals).to_bytes();
@@ -651,7 +1267,179 @@ mod tests {
             part_rows: 4,
             local_row0: 1,
         };
-        let b = load_strip(&src, DType::F64, 2, 2).unwrap();
+        let b = load_strip(&src, DType::F64, 2, 2, &mut p).unwrap();
         assert_eq!(b.to_f64_vec(), vec![1.0, 2.0, 11.0, 12.0]);
+    }
+
+    #[test]
+    fn load_strip_typed_fast_paths() {
+        let mut p = test_pool();
+        // 4 rows x 2 cols of every dtype; strip = rows 1..3
+        for dt in [DType::F64, DType::F32, DType::I64, DType::I32, DType::Bool] {
+            let full = Buf::from_f64(&[0.0, 1.0, 2.0, 3.0, 10.0, 11.0, 12.0, 13.0])
+                .cast(dt)
+                .unwrap();
+            let bytes = full.to_bytes();
+            let src = SourceStrip {
+                bytes: &bytes,
+                part_rows: 4,
+                local_row0: 1,
+            };
+            let b = load_strip(&src, dt, 2, 2, &mut p).unwrap();
+            assert_eq!(b.dtype(), dt);
+            let want = Buf::from_f64(&[1.0, 2.0, 11.0, 12.0]).cast(dt).unwrap();
+            assert_eq!(b, want, "{dt}");
+            p.release(b);
+        }
+    }
+
+    // -- compile-plan tests ------------------------------------------------
+
+    use crate::dag::VNode;
+
+    fn fillm(nrow: u64, ncol: u64) -> Matrix {
+        Matrix::new(MatrixData::Virtual(VNode {
+            nrow,
+            ncol,
+            dtype: DType::F64,
+            kind: VKind::Fill(Scalar::F64(2.0)),
+        }))
+    }
+
+    fn sapply(a: &Matrix, op: UnOp) -> Matrix {
+        Matrix::new(MatrixData::Virtual(VNode {
+            nrow: a.nrow(),
+            ncol: a.ncol(),
+            dtype: op.out_dtype(a.dtype()),
+            kind: VKind::Sapply {
+                a: a.clone(),
+                op: UnFn::Builtin(op),
+            },
+        }))
+    }
+
+    fn mapply_s(a: &Matrix, s: Scalar, op: BinOp) -> Matrix {
+        Matrix::new(MatrixData::Virtual(VNode {
+            nrow: a.nrow(),
+            ncol: a.ncol(),
+            dtype: op.out_dtype(a.dtype()),
+            kind: VKind::MapplyScalar {
+                a: a.clone(),
+                s,
+                op,
+                scalar_right: true,
+            },
+        }))
+    }
+
+    #[test]
+    fn peephole_fuses_single_consumer_chain() {
+        // fill -> sq -> *0.5 -> +1  (three fusable steps onto one head)
+        let x = fillm(64, 2);
+        let y = mapply_s(
+            &mapply_s(&sapply(&x, UnOp::Sq), Scalar::F64(0.5), BinOp::Mul),
+            Scalar::F64(1.0),
+            BinOp::Add,
+        );
+        let prog = compile(&[y.clone()], &[]).unwrap();
+        // fill + one fused chain
+        assert_eq!(prog.instrs.len(), 2);
+        match &prog.instrs[1].kind {
+            InstrKind::FusedChain { a, steps } => {
+                assert_eq!(*a, 0);
+                assert_eq!(steps.len(), 3);
+            }
+            _ => panic!("expected a fused chain"),
+        }
+        assert_eq!(prog.plan.fused_steps, 3);
+        assert_eq!(prog.target_regs, vec![1]);
+        // the fill register dies feeding the chain; the chain may run in
+        // place on it
+        assert_eq!(prog.plan.dies_at[1], vec![0]);
+        assert!(prog.plan.inplace[1]);
+
+        // with the peephole off the chain stays three instructions
+        let prog = compile_opts(
+            &[y],
+            &[],
+            CompileOpts {
+                peephole_fuse: false,
+                inplace_ops: true,
+            },
+        )
+        .unwrap();
+        assert_eq!(prog.instrs.len(), 4);
+        assert_eq!(prog.plan.fused_steps, 0);
+        // ... but every step still executes in place on its dead input
+        assert!(prog.plan.inplace[1] && prog.plan.inplace[2] && prog.plan.inplace[3]);
+    }
+
+    #[test]
+    fn peephole_respects_multi_consumer_and_targets() {
+        // y = sq(x); z = y * 0.5 — but y is ALSO a target, so the chain
+        // must not swallow it
+        let x = fillm(64, 2);
+        let y = sapply(&x, UnOp::Sq);
+        let z = mapply_s(&y, Scalar::F64(0.5), BinOp::Mul);
+        let prog = compile(&[y.clone(), z], &[]).unwrap();
+        assert_eq!(prog.instrs.len(), 3, "no fusion across a target");
+        assert_eq!(prog.plan.fused_steps, 0);
+        // y is live at end: nothing may consume it in place
+        let y_reg = prog.target_regs[0];
+        for (i, ins) in prog.instrs.iter().enumerate() {
+            if prog.plan.inplace[i] {
+                assert!(!instr_reads(&ins.kind).contains(&y_reg));
+            }
+        }
+    }
+
+    #[test]
+    fn identity_cast_is_aliased_away() {
+        let x = fillm(32, 1);
+        let c = Matrix::new(MatrixData::Virtual(VNode {
+            nrow: 32,
+            ncol: 1,
+            dtype: DType::F64,
+            kind: VKind::Cast {
+                a: x.clone(),
+                to: DType::F64,
+            },
+        }));
+        let prog = compile(&[c], &[]).unwrap();
+        assert_eq!(prog.instrs.len(), 1, "same-dtype cast must vanish");
+        assert_eq!(prog.target_regs, vec![0]);
+    }
+
+    #[test]
+    fn eval_strip_honors_plan() {
+        // end-to-end: fused/in-place/pooled evaluation must match the
+        // unoptimized program on the same strip
+        let x = fillm(16, 2);
+        let y = mapply_s(&sapply(&x, UnOp::Sq), Scalar::F64(3.0), BinOp::Add);
+        let fast = compile(&[y.clone()], &[]).unwrap();
+        let slow = compile_opts(
+            &[y],
+            &[],
+            CompileOpts {
+                peephole_fuse: false,
+                inplace_ops: false,
+            },
+        )
+        .unwrap();
+        let mut p = test_pool();
+        for vectorized in [true, false] {
+            let rf = eval_strip(&fast, &[], 0, 16, vectorized, &mut p).unwrap();
+            let rs = eval_strip(&slow, &[], 0, 16, vectorized, &mut p).unwrap();
+            let got = &rf[*fast.target_regs.first().unwrap()];
+            let want = &rs[*slow.target_regs.first().unwrap()];
+            assert_eq!(got, want);
+            assert_eq!(got.to_f64_vec(), vec![7.0; 32]);
+            for b in rf {
+                p.release(b);
+            }
+            for b in rs {
+                p.release(b);
+            }
+        }
     }
 }

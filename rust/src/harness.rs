@@ -356,8 +356,11 @@ pub fn fig10(s: &Scale, ks: &[usize]) -> Result<Table> {
 
 /// Fig 11: cumulative memory-optimization ablation. Configurations, in
 /// paper order: base (none) -> +mem-alloc (chunk recycling) -> +mem-fuse
-/// -> +cache-fuse. Reported as speedup over base, on SSDs (EM) or in
-/// memory (IM).
+/// -> +cache-fuse, plus this repo's `+strip-fusion` step (liveness-driven
+/// register reuse, in-place kernels and peephole-fused VUDF chains in the
+/// strip evaluator). Reported as speedup over base, on SSDs (EM) or in
+/// memory (IM); each row carries the strip-allocation counters
+/// (`buf_allocs` / `buf_reuses` / `inplace_ops` / `fused_chain_len`).
 pub fn fig11(s: &Scale, em: bool) -> Result<Table> {
     let mode = if em { Mode::FmEm } else { Mode::FmIm };
     let mut t = Table::new(format!(
@@ -365,24 +368,29 @@ pub fn fig11(s: &Scale, em: bool) -> Result<Table> {
         if em { "a: SSD" } else { "b: in-mem" },
         s.n
     ));
-    // (label, recycle, fuse_mem, fuse_cache)
+    // (label, recycle, fuse_mem, fuse_cache, strip_fusion)
     let configs = [
-        ("base", false, false, false),
-        ("+mem-alloc", true, false, false),
-        ("+mem-fuse", true, true, false),
-        ("+cache-fuse", true, true, true),
+        ("base", false, false, false, false),
+        ("+mem-alloc", true, false, false, false),
+        ("+mem-fuse", true, true, false, false),
+        ("+cache-fuse", true, true, true, false),
+        ("+strip-fusion", true, true, true, true),
     ];
     for alg in ALL_ALGS {
         let mut base_secs = None;
-        for (label, recycle, fm, fc) in configs {
+        for (label, recycle, fm, fc, sf) in configs {
             let mut cfg = (*engine_for(s, mode, s.threads)?).config.clone();
             cfg.recycle_chunks = recycle;
             cfg.fuse_mem = fm;
             cfg.fuse_cache = fc;
+            cfg.inplace_ops = sf;
+            cfg.peephole_fuse = sf;
             cfg.xla_dispatch = false; // isolate the engine
             let eng = Engine::new(cfg)?;
             let x = dataset(&eng, s.n, 32)?;
+            eng.metrics.reset();
             let secs = run_alg(&x, alg, 10, s.iters)?;
+            let m = eng.metrics.snapshot();
             let speedup = base_secs.map(|b: f64| b / secs).unwrap_or(1.0);
             if base_secs.is_none() {
                 base_secs = Some(secs);
@@ -391,7 +399,13 @@ pub fn fig11(s: &Scale, em: bool) -> Result<Table> {
                 format!("{} {}", alg.label(), label),
                 speedup,
                 "x vs base",
-                vec![("secs".into(), secs)],
+                vec![
+                    ("secs".into(), secs),
+                    ("buf_allocs".into(), m.buf_allocs as f64),
+                    ("buf_reuses".into(), m.buf_reuses as f64),
+                    ("inplace_ops".into(), m.inplace_ops as f64),
+                    ("fused_len".into(), m.fused_chain_len as f64),
+                ],
             );
         }
     }

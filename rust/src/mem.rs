@@ -11,7 +11,9 @@
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 
+use crate::dtype::DType;
 use crate::metrics::Metrics;
+use crate::vudf::Buf;
 
 /// A fixed-size recycled memory chunk. Returned to its pool on drop.
 pub struct Chunk {
@@ -135,6 +137,109 @@ impl ChunkPool {
             self.inner.free.lock().unwrap().clear();
         }
     }
+
+    /// Typed strip-buffer recycler bound to this pool's recycling mode
+    /// and metrics. One per pass worker — see [`StripPool`].
+    pub fn strip_pool(&self) -> StripPool {
+        StripPool::new(
+            self.inner.recycling.load(Ordering::Relaxed),
+            Arc::clone(&self.inner.metrics),
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Strip-register recycling (§III-B5 applied to the CPU-strip hot path)
+// ---------------------------------------------------------------------------
+
+/// Per-worker recycler for the strip evaluator's register buffers.
+///
+/// [`ChunkPool`] recycles the I/O-level byte chunks; `StripPool` is the
+/// typed small-buffer arm of the same optimization. The compile-time
+/// liveness plan in [`crate::exec::pipeline`] identifies dead registers;
+/// their `Buf`s come back here and the next strip's acquisitions reuse
+/// their capacity instead of hitting the allocator. It honors the same
+/// `recycle_chunks` knob, so the Fig 11 "mem-alloc" ablation turns both
+/// recyclers off together.
+///
+/// One pool per pass worker keeps the strip hot path lock-free; counters
+/// accumulate locally and flush to the shared [`Metrics`] on drop.
+pub struct StripPool {
+    recycling: bool,
+    /// Free buffers bucketed by dtype (see [`dtype_slot`]). Capacity is
+    /// reused across strips regardless of length — `Buf::reset` resizes.
+    free: [Vec<Buf>; 5],
+    metrics: Arc<Metrics>,
+    allocs: u64,
+    reuses: u64,
+    inplace: u64,
+}
+
+fn dtype_slot(dt: DType) -> usize {
+    match dt {
+        DType::Bool => 0,
+        DType::I32 => 1,
+        DType::I64 => 2,
+        DType::F32 => 3,
+        DType::F64 => 4,
+    }
+}
+
+impl StripPool {
+    /// A pool recycling (or not) into per-dtype free lists. Use
+    /// [`ChunkPool::strip_pool`] to inherit an engine's recycling mode.
+    pub fn new(recycling: bool, metrics: Arc<Metrics>) -> StripPool {
+        StripPool {
+            recycling,
+            free: Default::default(),
+            metrics,
+            allocs: 0,
+            reuses: 0,
+            inplace: 0,
+        }
+    }
+
+    /// Zeroed buffer of `len` elements — recycled capacity when available.
+    pub fn acquire(&mut self, dtype: DType, len: usize) -> Buf {
+        if self.recycling {
+            if let Some(mut b) = self.free[dtype_slot(dtype)].pop() {
+                b.reset(len);
+                self.reuses += 1;
+                return b;
+            }
+        }
+        self.allocs += 1;
+        Buf::alloc(dtype, len)
+    }
+
+    /// Return a dead register's buffer for reuse. Drops it when recycling
+    /// is off (the Fig 11 unoptimized mode); empty placeholder buffers
+    /// (already-moved registers) are ignored.
+    pub fn release(&mut self, b: Buf) {
+        if self.recycling && !b.is_empty() {
+            self.free[dtype_slot(b.dtype())].push(b);
+        }
+    }
+
+    /// Record a register buffer allocated outside the pool (a VUDF
+    /// kernel's fresh output vector), so `buf_allocs` counts every
+    /// register buffer created, pooled or not.
+    pub fn count_alloc(&mut self) {
+        self.allocs += 1;
+    }
+
+    /// Record an instruction executed in place on its input's buffer.
+    pub fn count_inplace(&mut self) {
+        self.inplace += 1;
+    }
+}
+
+impl Drop for StripPool {
+    fn drop(&mut self) {
+        self.metrics.buf_allocs.fetch_add(self.allocs, Ordering::Relaxed);
+        self.metrics.buf_reuses.fetch_add(self.reuses, Ordering::Relaxed);
+        self.metrics.inplace_ops.fetch_add(self.inplace, Ordering::Relaxed);
+    }
 }
 
 #[cfg(test)]
@@ -187,5 +292,40 @@ mod tests {
         let (p, _m) = pool(true);
         drop(p.acquire_sized(77));
         assert_eq!(p.free_chunks(), 0);
+    }
+
+    #[test]
+    fn strip_pool_recycles_and_counts() {
+        let (p, m) = pool(true);
+        {
+            let mut sp = p.strip_pool();
+            let b = sp.acquire(DType::F64, 8);
+            sp.release(b);
+            // reuse shrinks/zeroes to the requested length
+            let b2 = sp.acquire(DType::F64, 4);
+            assert_eq!(b2.len(), 4);
+            assert_eq!(b2.to_f64_vec(), vec![0.0; 4]);
+            // a different dtype misses the f64 bucket
+            let c = sp.acquire(DType::I32, 2);
+            sp.release(c);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.buf_allocs, 2);
+        assert_eq!(s.buf_reuses, 1);
+    }
+
+    #[test]
+    fn strip_pool_off_never_reuses() {
+        let (p, m) = pool(false);
+        {
+            let mut sp = p.strip_pool();
+            let b = sp.acquire(DType::F64, 8);
+            sp.release(b);
+            let b2 = sp.acquire(DType::F64, 8);
+            sp.release(b2);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.buf_allocs, 2);
+        assert_eq!(s.buf_reuses, 0);
     }
 }

@@ -41,6 +41,19 @@ pub struct Metrics {
     pub sched_steals: AtomicU64,
     /// Steals that crossed a simulated NUMA node boundary.
     pub sched_steals_remote: AtomicU64,
+    /// Strip-register buffers created fresh by the evaluator (pooled
+    /// acquisitions that missed the free list plus kernel-allocated
+    /// outputs). The strip-level half of Fig 11's "mem-alloc".
+    pub buf_allocs: AtomicU64,
+    /// Strip-register buffers served from a worker's strip pool instead
+    /// of the allocator (liveness-driven register recycling).
+    pub buf_reuses: AtomicU64,
+    /// Instructions executed in place on their dead input register's
+    /// buffer (no output allocation at all).
+    pub inplace_ops: AtomicU64,
+    /// Total VUDF steps folded into peephole-fused strip chains, counted
+    /// once per compiled pass (a 3-step chain adds 3 per pass).
+    pub fused_chain_len: AtomicU64,
 }
 
 impl Metrics {
@@ -85,6 +98,10 @@ impl Metrics {
             singleflight_coalesced: self.singleflight_coalesced.load(Ordering::Relaxed),
             sched_steals: self.sched_steals.load(Ordering::Relaxed),
             sched_steals_remote: self.sched_steals_remote.load(Ordering::Relaxed),
+            buf_allocs: self.buf_allocs.load(Ordering::Relaxed),
+            buf_reuses: self.buf_reuses.load(Ordering::Relaxed),
+            inplace_ops: self.inplace_ops.load(Ordering::Relaxed),
+            fused_chain_len: self.fused_chain_len.load(Ordering::Relaxed),
         }
     }
 
@@ -108,6 +125,10 @@ impl Metrics {
             &s.singleflight_coalesced,
             &s.sched_steals,
             &s.sched_steals_remote,
+            &s.buf_allocs,
+            &s.buf_reuses,
+            &s.inplace_ops,
+            &s.fused_chain_len,
         ] {
             c.store(0, Ordering::Relaxed);
         }
@@ -133,6 +154,10 @@ pub struct MetricsSnapshot {
     pub singleflight_coalesced: u64,
     pub sched_steals: u64,
     pub sched_steals_remote: u64,
+    pub buf_allocs: u64,
+    pub buf_reuses: u64,
+    pub inplace_ops: u64,
+    pub fused_chain_len: u64,
 }
 
 impl MetricsSnapshot {
@@ -155,6 +180,10 @@ impl MetricsSnapshot {
             singleflight_coalesced: self.singleflight_coalesced - earlier.singleflight_coalesced,
             sched_steals: self.sched_steals - earlier.sched_steals,
             sched_steals_remote: self.sched_steals_remote - earlier.sched_steals_remote,
+            buf_allocs: self.buf_allocs - earlier.buf_allocs,
+            buf_reuses: self.buf_reuses - earlier.buf_reuses,
+            inplace_ops: self.inplace_ops - earlier.inplace_ops,
+            fused_chain_len: self.fused_chain_len - earlier.fused_chain_len,
         }
     }
 }

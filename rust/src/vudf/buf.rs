@@ -5,6 +5,8 @@
 //! The variants own `Vec`s so buffers can be recycled across partitions by
 //! the evaluator (allocation happens once per pipeline, not per partition).
 
+use std::borrow::Cow;
+
 use crate::dtype::{DType, Element, Scalar};
 use crate::error::{FmError, Result};
 
@@ -57,6 +59,53 @@ impl Buf {
 
     pub fn from_f64(v: &[f64]) -> Buf {
         Buf::F64(v.to_vec())
+    }
+
+    /// Zero-length placeholder left behind when a register's buffer is
+    /// moved out (in-place execution) or released to the strip pool.
+    /// Never allocates.
+    pub fn empty() -> Buf {
+        Buf::F64(Vec::new())
+    }
+
+    /// Clear and resize to `len` zeroed elements, keeping the allocation
+    /// (the strip pool's reuse path — equivalent to a fresh
+    /// [`Buf::alloc`] of the same dtype).
+    pub fn reset(&mut self, len: usize) {
+        match self {
+            Buf::Bool(v) => {
+                v.clear();
+                v.resize(len, false);
+            }
+            Buf::I32(v) => {
+                v.clear();
+                v.resize(len, 0);
+            }
+            Buf::I64(v) => {
+                v.clear();
+                v.resize(len, 0);
+            }
+            Buf::F32(v) => {
+                v.clear();
+                v.resize(len, 0.0);
+            }
+            Buf::F64(v) => {
+                v.clear();
+                v.resize(len, 0.0);
+            }
+        }
+    }
+
+    /// Overwrite every element with `value` (cast to the buffer dtype) —
+    /// the pooled equivalent of [`Buf::fill`].
+    pub fn fill_scalar(&mut self, value: Scalar) {
+        match self {
+            Buf::Bool(v) => v.fill(value.as_bool()),
+            Buf::I32(v) => v.fill(value.as_i64() as i32),
+            Buf::I64(v) => v.fill(value.as_i64()),
+            Buf::F32(v) => v.fill(value.as_f64() as f32),
+            Buf::F64(v) => v.fill(value.as_f64()),
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -122,15 +171,73 @@ impl Buf {
         }
     }
 
+    /// Copy `src[src_off .. src_off + len)` into `self[dst_off ..)`.
+    /// Dtypes must match — the no-temporary form of `slice` + `copy_from`.
+    pub fn copy_range_from(&mut self, dst_off: usize, src: &Buf, src_off: usize, len: usize) {
+        match (self, src) {
+            (Buf::Bool(d), Buf::Bool(s)) => {
+                d[dst_off..dst_off + len].copy_from_slice(&s[src_off..src_off + len])
+            }
+            (Buf::I32(d), Buf::I32(s)) => {
+                d[dst_off..dst_off + len].copy_from_slice(&s[src_off..src_off + len])
+            }
+            (Buf::I64(d), Buf::I64(s)) => {
+                d[dst_off..dst_off + len].copy_from_slice(&s[src_off..src_off + len])
+            }
+            (Buf::F32(d), Buf::F32(s)) => {
+                d[dst_off..dst_off + len].copy_from_slice(&s[src_off..src_off + len])
+            }
+            (Buf::F64(d), Buf::F64(s)) => {
+                d[dst_off..dst_off + len].copy_from_slice(&s[src_off..src_off + len])
+            }
+            (d, s) => panic!(
+                "copy_range_from dtype mismatch: {} vs {}",
+                d.dtype(),
+                s.dtype()
+            ),
+        }
+    }
+
     /// Cast to `to`, returning a new buffer (no-op clone when equal).
+    /// Prefer [`Buf::cast_ref`] when a borrow suffices: it skips the
+    /// same-dtype copy entirely.
     pub fn cast(&self, to: DType) -> Result<Buf> {
         if self.dtype() == to {
             return Ok(self.clone());
         }
         let mut out = Buf::alloc(to, self.len());
+        self.cast_into(&mut out)?;
+        Ok(out)
+    }
+
+    /// Borrow when the dtype already matches, cast otherwise — the cheap
+    /// form for read-only consumers (same-dtype casts cost nothing).
+    pub fn cast_ref(&self, to: DType) -> Result<Cow<'_, Buf>> {
+        if self.dtype() == to {
+            Ok(Cow::Borrowed(self))
+        } else {
+            Ok(Cow::Owned(self.cast(to)?))
+        }
+    }
+
+    /// Cast into a pre-allocated buffer (the strip pool's reuse path).
+    /// `out` fixes the target dtype and must have the same length;
+    /// same-dtype casts degrade to a copy.
+    pub fn cast_into(&self, out: &mut Buf) -> Result<()> {
+        if out.len() != self.len() {
+            return Err(FmError::Shape(format!(
+                "cast_into length mismatch: {} vs {}",
+                out.len(),
+                self.len()
+            )));
+        }
+        if self.dtype() == out.dtype() {
+            out.copy_from(0, self);
+            return Ok(());
+        }
         macro_rules! cast_loop {
             ($src:expr, $conv:expr) => {{
-                match &mut out {
+                match &mut *out {
                     Buf::Bool(d) => {
                         for (o, x) in d.iter_mut().zip($src.iter()) {
                             *o = $conv(*x) != 0.0
@@ -166,7 +273,7 @@ impl Buf {
             Buf::F32(s) => cast_loop!(s, |x: f32| x as f64),
             Buf::F64(s) => cast_loop!(s, |x: f64| x),
         }
-        Ok(out)
+        Ok(())
     }
 
     /// All elements as f64 (tests, display, scalar-mode kernels).
@@ -190,6 +297,13 @@ impl Buf {
     }
 
     pub fn as_i32(&self) -> &[i32] {
+        match self {
+            Buf::I32(v) => v,
+            other => panic!("expected i32 buffer, got {}", other.dtype()),
+        }
+    }
+
+    pub fn as_i32_mut(&mut self) -> &mut [i32] {
         match self {
             Buf::I32(v) => v,
             other => panic!("expected i32 buffer, got {}", other.dtype()),
@@ -282,5 +396,54 @@ mod tests {
     #[test]
     fn bad_byte_length_rejected() {
         assert!(Buf::from_bytes(DType::F64, &[0u8; 7]).is_err());
+    }
+
+    #[test]
+    fn reset_reuses_capacity_zeroed() {
+        let mut b = Buf::from_f64(&[1.0, 2.0, 3.0]);
+        b.reset(2);
+        assert_eq!(b.to_f64_vec(), vec![0.0, 0.0]);
+        b.reset(4);
+        assert_eq!(b.to_f64_vec(), vec![0.0; 4]);
+        assert!(Buf::empty().is_empty());
+    }
+
+    #[test]
+    fn fill_scalar_matches_fill() {
+        for dt in [DType::Bool, DType::I32, DType::I64, DType::F32, DType::F64] {
+            let want = Buf::fill(dt, 5, Scalar::F64(1.0));
+            let mut got = Buf::alloc(dt, 5);
+            got.fill_scalar(Scalar::F64(1.0));
+            assert_eq!(got, want, "{dt}");
+        }
+    }
+
+    #[test]
+    fn cast_ref_borrows_same_dtype() {
+        let b = Buf::from_f64(&[1.0, 2.0]);
+        let c = b.cast_ref(DType::F64).unwrap();
+        assert!(matches!(c, std::borrow::Cow::Borrowed(_)));
+        let c = b.cast_ref(DType::I32).unwrap();
+        assert_eq!(c.as_i32(), &[1, 2]);
+    }
+
+    #[test]
+    fn cast_into_matches_cast() {
+        let b = Buf::from_f64(&[1.9, -2.9, 0.0]);
+        for dt in [DType::Bool, DType::I32, DType::I64, DType::F32, DType::F64] {
+            let mut out = Buf::alloc(dt, 3);
+            b.cast_into(&mut out).unwrap();
+            assert_eq!(out, b.cast(dt).unwrap(), "{dt}");
+        }
+        let mut short = Buf::alloc(DType::F64, 2);
+        assert!(b.cast_into(&mut short).is_err());
+    }
+
+    #[test]
+    fn copy_range_from_copies_window() {
+        let src = Buf::from_f64(&[0.0, 1.0, 2.0, 3.0]);
+        let mut dst = Buf::alloc(DType::F64, 4);
+        dst.copy_range_from(2, &src, 1, 2);
+        assert_eq!(dst.to_f64_vec(), vec![0.0, 0.0, 1.0, 2.0]);
     }
 }

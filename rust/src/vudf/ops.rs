@@ -83,6 +83,133 @@ impl UnOp {
         }
     }
 
+    /// Scalar f64 semantic of the op, inlined. The fused-chain hot loop
+    /// uses this instead of [`UnOp::f64_fn`]'s function pointer so the
+    /// per-element dispatch stays a predictable branch, not an indirect
+    /// call. Must agree with `f64_fn` (pinned by `eval_matches_fn` below).
+    #[inline(always)]
+    pub fn eval_f64(self, x: f64) -> f64 {
+        match self {
+            UnOp::Neg => -x,
+            UnOp::Abs => x.abs(),
+            UnOp::Sqrt => x.sqrt(),
+            UnOp::Sq => x * x,
+            UnOp::Exp => x.exp(),
+            UnOp::Log => x.ln(),
+            UnOp::Floor => x.floor(),
+            UnOp::Ceil => x.ceil(),
+            UnOp::Round => x.round_ties_even(),
+            UnOp::Sign => {
+                if x > 0.0 {
+                    1.0
+                } else if x < 0.0 {
+                    -1.0
+                } else {
+                    0.0
+                }
+            }
+            UnOp::Not | UnOp::NotZero => (x != 0.0) as u8 as f64,
+            UnOp::IsNa => x.is_nan() as u8 as f64,
+        }
+    }
+
+    /// Ops whose in-place form is bit-identical to [`UnOp::apply`] /
+    /// [`UnOp::apply_scalar_mode`]: the output dtype equals the input
+    /// dtype (the buffer can be rewritten in place) and the per-element
+    /// operation matches the out-of-place kernel exactly. Bool is
+    /// excluded — its ops are cheap and rare mid-pipeline.
+    pub fn supports_inplace(self, input: DType) -> bool {
+        input != DType::Bool && self.out_dtype(input) == input
+    }
+
+    /// Apply in place on a dead register's buffer (the liveness-driven
+    /// register-reuse fast path). Caller must check
+    /// [`UnOp::supports_inplace`]. `vectorized = false` mirrors
+    /// `apply_scalar_mode`'s per-element boxed calls so the Fig 12
+    /// ablation keeps measuring what it measures.
+    pub fn apply_inplace(self, a: &mut Buf, vectorized: bool) {
+        debug_assert!(self.supports_inplace(a.dtype()));
+        if !vectorized {
+            // out dtype == input dtype, so writing through set() takes
+            // exactly apply_scalar_mode's conversion path
+            let f = black_box(self.f64_fn());
+            for i in 0..a.len() {
+                let x = black_box(a.get(i).as_f64());
+                a.set(i, Scalar::F64(f(x)));
+            }
+            return;
+        }
+        let f = self.f64_fn();
+        match a {
+            // f64: the monomorphic arms of `apply` and its generic path
+            // agree with f64_fn, so one loop covers every op
+            Buf::F64(v) => {
+                for x in v.iter_mut() {
+                    *x = f(*x);
+                }
+            }
+            // same-type arms mirror `apply`'s monomorphic kernels; the
+            // rest mirror its generic through-f64 path
+            Buf::F32(v) => match self {
+                UnOp::Neg => {
+                    for x in v.iter_mut() {
+                        *x = -*x;
+                    }
+                }
+                UnOp::Abs => {
+                    for x in v.iter_mut() {
+                        *x = x.abs();
+                    }
+                }
+                UnOp::Sq => {
+                    for x in v.iter_mut() {
+                        *x = *x * *x;
+                    }
+                }
+                _ => {
+                    for x in v.iter_mut() {
+                        *x = f(*x as f64) as f32;
+                    }
+                }
+            },
+            Buf::I64(v) => match self {
+                UnOp::Neg => {
+                    for x in v.iter_mut() {
+                        *x = -*x;
+                    }
+                }
+                UnOp::Abs => {
+                    for x in v.iter_mut() {
+                        *x = x.abs();
+                    }
+                }
+                UnOp::Sq => {
+                    for x in v.iter_mut() {
+                        *x = *x * *x;
+                    }
+                }
+                _ => {
+                    for x in v.iter_mut() {
+                        *x = f(*x as f64) as i64;
+                    }
+                }
+            },
+            Buf::I32(v) => match self {
+                UnOp::Neg => {
+                    for x in v.iter_mut() {
+                        *x = -*x;
+                    }
+                }
+                _ => {
+                    for x in v.iter_mut() {
+                        *x = f(*x as f64) as i32;
+                    }
+                }
+            },
+            Buf::Bool(_) => unreachable!("supports_inplace excludes Bool"),
+        }
+    }
+
     /// Vectorized apply (uVUDF form).
     pub fn apply(self, a: &Buf) -> Result<Buf> {
         let out_dt = self.out_dtype(a.dtype());
@@ -199,6 +326,120 @@ impl BinOp {
             BinOp::And => |a, b| ((a != 0.0) && (b != 0.0)) as u8 as f64,
             BinOp::Or => |a, b| ((a != 0.0) || (b != 0.0)) as u8 as f64,
             BinOp::IfElse0 => |a, b| if b != 0.0 { 0.0 } else { a },
+        }
+    }
+
+    /// Scalar f64 semantic of the op, inlined (the fused-chain hot loop —
+    /// see [`UnOp::eval_f64`]). Pinned to `f64_fn` by `eval_matches_fn`.
+    #[inline(always)]
+    pub fn eval_f64(self, a: f64, b: f64) -> f64 {
+        match self {
+            BinOp::Add => a + b,
+            BinOp::Sub => a - b,
+            BinOp::Mul => a * b,
+            BinOp::Div => a / b,
+            BinOp::Pow => a.powf(b),
+            BinOp::Min => a.min(b),
+            BinOp::Max => a.max(b),
+            BinOp::Eq => (a == b) as u8 as f64,
+            BinOp::Ne => (a != b) as u8 as f64,
+            BinOp::Lt => (a < b) as u8 as f64,
+            BinOp::Le => (a <= b) as u8 as f64,
+            BinOp::Gt => (a > b) as u8 as f64,
+            BinOp::Ge => (a >= b) as u8 as f64,
+            BinOp::And => ((a != 0.0) && (b != 0.0)) as u8 as f64,
+            BinOp::Or => ((a != 0.0) || (b != 0.0)) as u8 as f64,
+            BinOp::IfElse0 => {
+                if b != 0.0 {
+                    0.0
+                } else {
+                    a
+                }
+            }
+        }
+    }
+
+    /// Broadcast (vector ⊕ scalar) forms whose in-place variant is
+    /// bit-identical to the out-of-place path: output dtype equals the
+    /// vector dtype. Bool is excluded (see [`UnOp::supports_inplace`]).
+    pub fn supports_inplace_broadcast(self, input: DType) -> bool {
+        input != DType::Bool && self.out_dtype(input) == input
+    }
+
+    /// In-place bVUDF2/3: vector ⊕ scalar written back into the vector's
+    /// own buffer. Caller must check [`BinOp::supports_inplace_broadcast`].
+    /// `s` is cast to the buffer dtype first, exactly like
+    /// [`crate::vudf::binary_vs`] / [`crate::vudf::binary_sv`] do;
+    /// `vectorized = false` mirrors `apply_broadcast_scalar_mode`.
+    pub fn apply_broadcast_inplace(
+        self,
+        v: &mut Buf,
+        s: Scalar,
+        scalar_right: bool,
+        vectorized: bool,
+    ) {
+        debug_assert!(self.supports_inplace_broadcast(v.dtype()));
+        let sf = s.cast(v.dtype()).as_f64();
+        let f = self.f64_fn();
+        if !vectorized {
+            let f = black_box(f);
+            for i in 0..v.len() {
+                let x = black_box(v.get(i).as_f64());
+                let r = if scalar_right { f(x, sf) } else { f(sf, x) };
+                v.set(i, Scalar::F64(r));
+            }
+            return;
+        }
+        match v {
+            // f64: `apply_broadcast`'s monomorphic arms and its generic
+            // path both agree with f64_fn
+            Buf::F64(vv) => {
+                if scalar_right {
+                    for x in vv.iter_mut() {
+                        *x = f(*x, sf);
+                    }
+                } else {
+                    for x in vv.iter_mut() {
+                        *x = f(sf, *x);
+                    }
+                }
+            }
+            // no same-dtype monomorphic arms exist for these in
+            // `apply_broadcast`; mirror its generic through-f64 path
+            Buf::F32(vv) => {
+                if scalar_right {
+                    for x in vv.iter_mut() {
+                        *x = f(*x as f64, sf) as f32;
+                    }
+                } else {
+                    for x in vv.iter_mut() {
+                        *x = f(sf, *x as f64) as f32;
+                    }
+                }
+            }
+            Buf::I64(vv) => {
+                if scalar_right {
+                    for x in vv.iter_mut() {
+                        *x = f(*x as f64, sf) as i64;
+                    }
+                } else {
+                    for x in vv.iter_mut() {
+                        *x = f(sf, *x as f64) as i64;
+                    }
+                }
+            }
+            Buf::I32(vv) => {
+                if scalar_right {
+                    for x in vv.iter_mut() {
+                        *x = f(*x as f64, sf) as i32;
+                    }
+                } else {
+                    for x in vv.iter_mut() {
+                        *x = f(sf, *x as f64) as i32;
+                    }
+                }
+            }
+            Buf::Bool(_) => unreachable!("supports_inplace_broadcast excludes Bool"),
         }
     }
 
@@ -528,6 +769,125 @@ mod tests {
         let m = Buf::from_f64(&[0.0, 1.0, 0.0]);
         let r = BinOp::IfElse0.apply_vv(&a, &m).unwrap();
         assert_eq!(r.to_f64_vec(), vec![1.0, 0.0, 3.0]);
+    }
+
+    const ALL_UN: [UnOp; 13] = [
+        UnOp::Neg,
+        UnOp::Abs,
+        UnOp::Sqrt,
+        UnOp::Sq,
+        UnOp::Exp,
+        UnOp::Log,
+        UnOp::Floor,
+        UnOp::Ceil,
+        UnOp::Round,
+        UnOp::Sign,
+        UnOp::Not,
+        UnOp::NotZero,
+        UnOp::IsNa,
+    ];
+
+    const ALL_BIN: [BinOp; 16] = [
+        BinOp::Add,
+        BinOp::Sub,
+        BinOp::Mul,
+        BinOp::Div,
+        BinOp::Pow,
+        BinOp::Min,
+        BinOp::Max,
+        BinOp::Eq,
+        BinOp::Ne,
+        BinOp::Lt,
+        BinOp::Le,
+        BinOp::Gt,
+        BinOp::Ge,
+        BinOp::And,
+        BinOp::Or,
+        BinOp::IfElse0,
+    ];
+
+    #[test]
+    fn eval_matches_fn() {
+        let xs = [-2.5, -1.0, 0.0, 0.5, 1.5, 3.0, f64::NAN];
+        for op in ALL_UN {
+            let f = op.f64_fn();
+            for &x in &xs {
+                let (a, b) = (op.eval_f64(x), f(x));
+                assert!(a == b || (a.is_nan() && b.is_nan()), "{op:?}({x})");
+            }
+        }
+        for op in ALL_BIN {
+            let f = op.f64_fn();
+            for &x in &xs {
+                for &y in &xs {
+                    let (a, b) = (op.eval_f64(x, y), f(x, y));
+                    assert!(a == b || (a.is_nan() && b.is_nan()), "{op:?}({x},{y})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unary_inplace_matches_apply() {
+        let cases = [
+            Buf::from_f64(&[-2.5, -1.0, 0.0, 0.5, 9.0]),
+            Buf::F32(vec![-2.5, -1.0, 0.0, 0.5, 9.0]),
+            Buf::I64(vec![-3, -1, 0, 2, 9]),
+            Buf::I32(vec![-3, -1, 0, 2, 9]),
+        ];
+        for a in &cases {
+            for op in ALL_UN {
+                if !op.supports_inplace(a.dtype()) {
+                    continue;
+                }
+                for vectorized in [true, false] {
+                    let want = if vectorized {
+                        op.apply(a).unwrap()
+                    } else {
+                        op.apply_scalar_mode(a).unwrap()
+                    };
+                    let mut got = a.clone();
+                    op.apply_inplace(&mut got, vectorized);
+                    assert_eq!(got, want, "{op:?} {} vec={vectorized}", a.dtype());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn broadcast_inplace_matches_apply() {
+        use crate::vudf::{binary_sv, binary_vs};
+        let cases = [
+            Buf::from_f64(&[-2.5, -1.0, 0.0, 0.5, 9.0]),
+            Buf::F32(vec![-2.5, -1.0, 0.0, 0.5, 9.0]),
+            Buf::I64(vec![-3, -1, 0, 2, 9]),
+            Buf::I32(vec![-3, -1, 0, 2, 9]),
+        ];
+        let s = Scalar::F64(1.5);
+        for v in &cases {
+            for op in ALL_BIN {
+                if !op.supports_inplace_broadcast(v.dtype()) {
+                    continue;
+                }
+                for scalar_right in [true, false] {
+                    for vectorized in [true, false] {
+                        let want = if scalar_right {
+                            binary_vs(op, v, s, vectorized).unwrap()
+                        } else {
+                            binary_sv(op, s, v, vectorized).unwrap()
+                        };
+                        let mut got = v.clone();
+                        op.apply_broadcast_inplace(&mut got, s, scalar_right, vectorized);
+                        assert_eq!(
+                            got,
+                            want,
+                            "{op:?} {} right={scalar_right} vec={vectorized}",
+                            v.dtype()
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -246,6 +246,78 @@ fn prop_dtype_promotion_safe() {
 }
 
 #[test]
+fn prop_inplace_recycle_fusion_bitexact() {
+    // The liveness-driven register plan (recycling + in-place kernels +
+    // peephole-fused chains) must be invisible: every evaluator output
+    // bit-identical to the fresh-alloc path, across dtypes and the
+    // vectorized_udf ablation.
+    forall(12, |g| {
+        let n = g.usize_in(100, 3000);
+        let p = g.usize_in(1, 6);
+        let seed = g.u64();
+        let vudf = g.bool();
+        let threads = g.usize_in(1, 3);
+        let dt = *g.choose(&[DType::F64, DType::F32, DType::I32]);
+
+        // one run of the whole pipeline zoo under a given optimization mode
+        type Outputs = (HostMat, HostMat, HostMat, f64);
+        let run = |optimized: bool| -> Result<Outputs, flashmatrix::FmError> {
+            let eng = Engine::new(EngineConfig {
+                threads,
+                vectorized_udf: vudf,
+                recycle_chunks: optimized,
+                inplace_ops: optimized,
+                peephole_fuse: optimized,
+                xla_dispatch: false,
+                chunk_bytes: 1 << 20,
+                target_part_bytes: 1 << 18,
+                ..Default::default()
+            })
+            .unwrap();
+            let x = datasets::uniform(&eng, n as u64, p as u64, -2.0, 2.0, seed, None)?
+                .cast(dt)?;
+            // fusable chain: abs -> +0.25 -> sqrt (dtype promotions vary
+            // with dt, exercising fused and unfused compilations)
+            let y = x
+                .sapply(UnOp::Abs)?
+                .mapply_scalar(Scalar::F64(0.25), BinOp::Add, true)?
+                .sapply(UnOp::Sqrt)?;
+            let yh = y.to_host()?;
+            // per-row reduction + arg-extreme over the chain output
+            let rs = y.row_sums()?.to_host()?;
+            let am = y.which_min_row()?.to_host()?;
+            // mixed-dtype cbind + full-aggregation sink
+            let cb = FmMatrix::cbind(&eng, &[&x, &y])?;
+            let total = cb.sum()?;
+            Ok((yh, rs, am, total))
+        };
+
+        let base = run(false).map_err(|e| e.to_string())?;
+        let opt = run(true).map_err(|e| e.to_string())?;
+        if opt.0 != base.0 {
+            return Err(format!("{dt:?} vudf={vudf}: chain output differs"));
+        }
+        if opt.1 != base.1 {
+            return Err(format!("{dt:?} vudf={vudf}: row_sums differ"));
+        }
+        if opt.2 != base.2 {
+            return Err(format!("{dt:?} vudf={vudf}: which_min differs"));
+        }
+        // sink partials merge in worker-completion order, so the scalar
+        // sum is only bit-stable single-threaded; multi-threaded runs get
+        // a tight tolerance instead
+        if threads == 1 {
+            if opt.3.to_bits() != base.3.to_bits() {
+                return Err(format!("{dt:?} vudf={vudf}: sum {} vs {}", opt.3, base.3));
+            }
+        } else if (opt.3 - base.3).abs() / base.3.abs().max(1.0) > 1e-12 {
+            return Err(format!("{dt:?} vudf={vudf}: sum {} vs {}", opt.3, base.3));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_transpose_is_involution() {
     forall(20, |g| {
         let n = g.usize_in(5, 200);
