@@ -144,4 +144,9 @@ fn main() {
             "FAIL: configurations disagree on results"
         }
     );
+    // fail loudly: automation running this bench must see the regression
+    assert!(
+        fewer && bitexact,
+        "strip-fusion acceptance check failed (fewer-allocs {fewer}, bitexact {bitexact})"
+    );
 }

@@ -17,6 +17,8 @@ pub mod correlation;
 pub mod gmm;
 pub mod kmeans;
 pub mod linalg;
+pub mod logistic;
+pub mod pagerank;
 pub mod steps;
 pub mod summary;
 pub mod svd;
@@ -24,6 +26,8 @@ pub mod svd;
 pub use correlation::correlation;
 pub use gmm::{gmm, GmmResult};
 pub use kmeans::{kmeans, KmeansResult};
+pub use logistic::{logistic, LogisticResult};
+pub use pagerank::{pagerank, PagerankResult};
 pub use summary::{summary, SummaryResult};
 pub use svd::{svd, SvdResult};
 

@@ -104,6 +104,14 @@ pub enum VKind {
         f1: BinOp,
         f2: AggOp,
     },
+    /// Streaming sparse × small-dense multiply (`fm.multiply` on a sparse
+    /// left operand): CSR row-partitions of `a` (n×m) stream against the
+    /// in-memory right operand `b` (m×q) -> tall n×q dense. `a` is a
+    /// *source* like a dense input, not a register-producing node — the
+    /// strip evaluator decodes its CSR bytes directly — so `parents()`
+    /// does not list it. `b` sits behind an `Arc`: compiling the node
+    /// into a pass must not copy the (potentially n-element) operand.
+    Spmm { a: Matrix, b: Arc<HostMat> },
     /// Lazy element-type cast.
     Cast { a: Matrix, to: DType },
     /// Column concatenation of same-long-dim nodes (`fm.cbind` within a
@@ -117,7 +125,11 @@ impl VKind {
     /// Parent matrices (DAG edges).
     pub fn parents(&self) -> Vec<&Matrix> {
         match self {
-            VKind::Fill(_) | VKind::Seq { .. } | VKind::RandU { .. } | VKind::RandN { .. } => {
+            VKind::Fill(_)
+            | VKind::Seq { .. }
+            | VKind::RandU { .. }
+            | VKind::RandN { .. }
+            | VKind::Spmm { .. } => {
                 vec![]
             }
             VKind::Sapply { a, .. }

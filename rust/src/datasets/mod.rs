@@ -164,6 +164,114 @@ pub fn mix_gaussian(
     Ok((x, means))
 }
 
+/// Materialize an `n x m` sparse CSR matrix from a row function
+/// `f(row) -> [(col, value)]`, honoring the engine's storage kind. Rows
+/// are split on the same io-row grid as dense matrices (so sparse
+/// sources nest in any pass); external matrices are admitted to the
+/// partition cache and, when named, persisted with a sidecar manifest.
+pub fn sparse_from_rows(
+    eng: &Arc<Engine>,
+    nrow: u64,
+    ncol: u64,
+    name: Option<&str>,
+    mut f: impl FnMut(u64) -> Vec<(u32, f64)>,
+) -> Result<FmMatrix> {
+    let parts = Partitioning::new(nrow, ncol);
+    let mut b = crate::matrix::SparseBuilder::new(parts.clone());
+    let mut rows: Vec<Vec<(u32, f64)>> = Vec::new();
+    for i in 0..parts.n_parts() {
+        let (r0, r1) = parts.part_rows(i);
+        rows.clear();
+        rows.extend((r0..r1).map(&mut f));
+        b.push_partition(&mut rows)?;
+    }
+    let sd = match eng.config.storage {
+        StorageKind::InMem => b.finish_mem()?,
+        StorageKind::External => b.finish_ext(
+            &eng.config.data_dir,
+            name,
+            Arc::clone(&eng.ssd),
+            Arc::clone(&eng.metrics),
+            // edge matrices are the repeatedly-scanned inputs of sparse
+            // workloads: cache-resident, like dense datasets (§III-B3)
+            eng.cache.clone(),
+        )?,
+    };
+    Ok(FmMatrix {
+        eng: Arc::clone(eng),
+        m: Matrix::new(crate::matrix::MatrixData::Sparse(sd)),
+    })
+}
+
+/// Synthetic directed graph for PageRank, counter-based and mirrored by
+/// `python/tests/test_golden.py::pagerank_graph_ref`:
+///
+/// * node `v` has out-degree `splitmix64_at(seed ^ 0xDE66, v) % (max_deg
+///   + 1)` — 0 makes it *dangling*;
+/// * its `t`-th out-edge points at `splitmix64_at(seed, v*max_deg + t) %
+///   n` (multi-edges accumulate weight).
+///
+/// Returns the **transposed, column-stochastic** transition matrix (row
+/// `i` holds in-edges `j -> i` weighted `1/outdeg(j)`, columns ascending)
+/// plus the dangling mask — exactly what
+/// [`crate::algs::pagerank::pagerank`] consumes.
+pub fn pagerank_graph(
+    eng: &Arc<Engine>,
+    n: u64,
+    max_deg: u64,
+    seed: u64,
+    name: Option<&str>,
+) -> Result<(FmMatrix, Vec<bool>)> {
+    let mut in_edges: Vec<Vec<(u32, f64)>> = vec![Vec::new(); n as usize];
+    let mut dangling = vec![false; n as usize];
+    for v in 0..n {
+        let deg = splitmix64_at(seed ^ 0xDE66, v) % (max_deg + 1);
+        if deg == 0 {
+            dangling[v as usize] = true;
+            continue;
+        }
+        let w = 1.0 / deg as f64;
+        for t in 0..deg {
+            let u = splitmix64_at(seed, v * max_deg + t) % n;
+            // v ascending => each in-edge list is already column-sorted;
+            // multi-edges merge additively in the CSR encoder
+            in_edges[u as usize].push((v as u32, w));
+        }
+    }
+    // rows are consumed exactly once: hand them over instead of cloning
+    let g = sparse_from_rows(eng, n, n, name, |r| {
+        std::mem::take(&mut in_edges[r as usize])
+    })?;
+    Ok((g, dangling))
+}
+
+/// Bernoulli labels for logistic regression, drawn through the engine
+/// itself so they are deterministic and storage-independent:
+/// `y = 1[u < sigmoid(x beta_true)]` with `u = fm.runif(n, 1)` — the
+/// logistic generative model (mirrored by the python fixture).
+pub fn logistic_labels(
+    x: &FmMatrix,
+    beta_true: &[f64],
+    seed: u64,
+) -> Result<FmMatrix> {
+    let p = x.ncol() as usize;
+    if beta_true.len() != p {
+        return Err(crate::FmError::Shape(format!(
+            "logistic_labels: beta_true has {} coefficients for {p} columns",
+            beta_true.len()
+        )));
+    }
+    let mut bh = HostMat::zeros(p, 1, DType::F64);
+    for (j, b) in beta_true.iter().enumerate() {
+        bh.set(j, 0, Scalar::F64(*b));
+    }
+    let pmu = x.matmul_small(&bh)?.sigmoid()?;
+    let u = FmMatrix::runif_matrix(&x.eng, x.nrow(), 1, 0.0, 1.0, seed);
+    u.mapply(&pmu, crate::vudf::BinOp::Lt)?
+        .cast(DType::F64)?
+        .materialize()
+}
+
 /// Friendster-32 stand-in: column j has scale `1/(1+j)` (spectral decay)
 /// plus a low-rank structure that gives the columns correlation, so
 /// clustering has non-trivial geometry.

@@ -107,11 +107,12 @@ pub fn run_pass_opts(
         .fetch_add(prog.plan.fused_steps, Ordering::Relaxed);
     let nrow = prog.nrow;
 
-    // ---- pass partitioning: nest within every dense source's partitions
+    // ---- pass partitioning: nest within every source's partitions
+    // (dense and sparse share the io-row grid, so both constrain the pass)
     let mut pass_io: u64 = u64::MAX;
     for s in &prog.sources {
-        if let MatrixData::Dense(d) = &**s {
-            pass_io = pass_io.min(d.parts.io_rows);
+        if let Some(parts) = source_parts(s) {
+            pass_io = pass_io.min(parts.io_rows);
         }
     }
     for t in targets.iter() {
@@ -132,11 +133,11 @@ pub fn run_pass_opts(
     // attacks the same re-copy problem from the dispatch side: pass
     // partitions sharing one source partition are claimed by one worker.
     for s in &prog.sources {
-        if let MatrixData::Dense(d) = &**s {
-            if d.parts.io_rows % pass_io != 0 {
+        if let Some(parts) = source_parts(s) {
+            if parts.io_rows % pass_io != 0 {
                 return Err(FmError::Shape(format!(
                     "source io_rows {} not a multiple of pass io_rows {pass_io}",
-                    d.parts.io_rows
+                    parts.io_rows
                 )));
             }
         }
@@ -171,8 +172,8 @@ pub fn run_pass_opts(
     // exactly one worker's source cache per pass
     let mut unit_io = pass_io;
     for s in &prog.sources {
-        if let MatrixData::Dense(d) = &**s {
-            unit_io = unit_io.max(d.parts.io_rows);
+        if let Some(parts) = source_parts(s) {
+            unit_io = unit_io.max(parts.io_rows);
         }
     }
     let group = (unit_io / pass_io) as usize;
@@ -264,8 +265,10 @@ pub fn run_pass_opts(
         c.advance_prefetch_epoch();
     }
     for s in &prog.sources {
-        if let MatrixData::Dense(d) = &**s {
-            d.release_prefetch_pins();
+        match &**s {
+            MatrixData::Dense(d) => d.release_prefetch_pins(),
+            MatrixData::Sparse(sp) => sp.release_prefetch_pins(),
+            _ => {}
         }
     }
 
@@ -302,6 +305,35 @@ pub fn materialize_sinks(ctx: &ExecCtx<'_>, sinks: &[SinkSpec]) -> Result<Vec<Si
 }
 
 // ---------------------------------------------------------------------------
+
+/// Row partitioning of a pass source — dense and sparse matrices are both
+/// range-scheduled, read-through-cache, prefetchable sources; virtual /
+/// group nodes have no partitioning of their own.
+fn source_parts(s: &MatrixData) -> Option<&crate::matrix::Partitioning> {
+    match s {
+        MatrixData::Dense(d) => Some(&d.parts),
+        MatrixData::Sparse(sp) => Some(&sp.parts),
+        _ => None,
+    }
+}
+
+/// Bytes of source partition `i` through the §III-B3 hierarchy.
+fn source_partition_bytes(s: &MatrixData, i: usize) -> Result<Arc<Vec<u8>>> {
+    match s {
+        MatrixData::Dense(d) => d.partition_bytes_shared(i),
+        MatrixData::Sparse(sp) => sp.partition_bytes_shared(i),
+        _ => Err(FmError::Unsupported("non-materialized source".into())),
+    }
+}
+
+/// Queue the async read-ahead of source partition `i`.
+fn source_prefetch(s: &MatrixData, i: usize) {
+    match s {
+        MatrixData::Dense(d) => d.prefetch_partition(i),
+        MatrixData::Sparse(sp) => sp.prefetch_partition(i),
+        _ => {}
+    }
+}
 
 /// Per-worker cache of the most recently read source partition (a pass
 /// partition is usually much smaller than a source partition, so
@@ -360,16 +392,14 @@ fn process_partition(
     // load (or reuse) each source's partition containing [g0, g1)
     let mut src_meta: Vec<(usize, usize)> = Vec::with_capacity(prog.sources.len());
     for (si, s) in prog.sources.iter().enumerate() {
-        let d = match &**s {
-            MatrixData::Dense(d) => d,
-            _ => return Err(FmError::Unsupported("non-dense source".into())),
-        };
-        let spi = (g0 / d.parts.io_rows) as usize;
-        let (s0, s1) = d.parts.part_rows(spi);
+        let parts = source_parts(s)
+            .ok_or_else(|| FmError::Unsupported("non-materialized source".into()))?;
+        let spi = (g0 / parts.io_rows) as usize;
+        let (s0, s1) = parts.part_rows(spi);
         debug_assert!(g1 <= s1);
         let need_read = !matches!(&cache.slots[si], Some((p, _)) if *p == spi);
         if need_read {
-            cache.slots[si] = Some((spi, d.partition_bytes_shared(spi)?));
+            cache.slots[si] = Some((spi, source_partition_bytes(s, spi)?));
             // Queue the read of the next source partition *this worker*
             // will consume, so it overlaps this partition's compute
             // (§III-B3). Range scheduling makes that ownership
@@ -377,9 +407,9 @@ fn process_partition(
             // coalesces any residual race (e.g. the next unit being
             // stolen after the peek) — so multi-worker passes prefetch
             // too, without double reads.
-            let next_row0 = (spi as u64 + 1) * d.parts.io_rows;
+            let next_row0 = (spi as u64 + 1) * parts.io_rows;
             if window.owns(next_row0) {
-                d.prefetch_partition(spi + 1);
+                source_prefetch(s, spi + 1);
             }
         }
         src_meta.push(((s1 - s0) as usize, (g0 - s0) as usize));

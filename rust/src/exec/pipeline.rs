@@ -61,6 +61,12 @@ pub enum InstrKind {
     RowAgg { a: usize, op: AggOp },
     RowArgExtreme { a: usize, max: bool },
     InnerSmall { a: usize, b: HostMat, f1: BinOp, f2: AggOp },
+    /// Streaming SpMM: decode the CSR rows of sparse source `src` covering
+    /// the strip and multiply against the small dense right operand
+    /// (shared, not copied, from the DAG node). Reads no register — the
+    /// sparse operand is a source, like `LoadDense`'s, but its bytes are
+    /// consumed directly instead of densified.
+    Spmm { src: usize, b: Arc<HostMat> },
     Cast { a: usize, to: DType },
     ColBind(Vec<usize>),
     SelectCol { a: usize, col: usize },
@@ -210,6 +216,11 @@ pub fn compile_opts(targets: &[Matrix], sinks: &[SinkSpec], opts: CompileOpts) -
         let reg = instrs.len();
         let kind = match &*m.data {
             MatrixData::Dense(_) => InstrKind::LoadDense(src_idx(m, &mut sources, &mut src_of)),
+            MatrixData::Sparse(_) => {
+                return Err(FmError::Unsupported(
+                    "sparse matrices feed spmm only; they cannot load as dense strips".into(),
+                ))
+            }
             MatrixData::Group(g) => {
                 let mut idxs = Vec::new();
                 for mem in &g.members {
@@ -230,7 +241,24 @@ pub fn compile_opts(targets: &[Matrix], sinks: &[SinkSpec], opts: CompileOpts) -
                 }
                 InstrKind::LoadGroup(idxs)
             }
-            MatrixData::Virtual(v) => compile_vkind(&v.kind, &reg_of)?,
+            // the SpMM node registers its sparse operand as a pass
+            // *source* (read per partition, range-scheduled, prefetched
+            // like a dense source) rather than as a register; everything
+            // else compiles through the generic table
+            MatrixData::Virtual(v) => match &v.kind {
+                VKind::Spmm { a, b } => {
+                    if !a.data.is_sparse() {
+                        return Err(FmError::Unsupported(
+                            "spmm operand must be a sparse matrix".into(),
+                        ));
+                    }
+                    InstrKind::Spmm {
+                        src: src_idx(a, &mut sources, &mut src_of),
+                        b: Arc::clone(b),
+                    }
+                }
+                _ => compile_vkind(&v.kind, &reg_of)?,
+            },
         };
         instrs.push(Instr {
             ncol: m.data.ncol(),
@@ -293,7 +321,8 @@ fn instr_reads(kind: &InstrKind) -> Vec<usize> {
         | InstrKind::Fill(_)
         | InstrKind::Seq { .. }
         | InstrKind::RandU { .. }
-        | InstrKind::RandN { .. } => vec![],
+        | InstrKind::RandN { .. }
+        | InstrKind::Spmm { .. } => vec![],
         InstrKind::Sapply { a, .. }
         | InstrKind::MapplyScalar { a, .. }
         | InstrKind::MapplyRow { a, .. }
@@ -317,7 +346,8 @@ fn remap_operands(kind: &mut InstrKind, f: impl Fn(usize) -> usize) {
         | InstrKind::Fill(_)
         | InstrKind::Seq { .. }
         | InstrKind::RandU { .. }
-        | InstrKind::RandN { .. } => {}
+        | InstrKind::RandN { .. }
+        | InstrKind::Spmm { .. } => {}
         InstrKind::Sapply { a, .. }
         | InstrKind::MapplyScalar { a, .. }
         | InstrKind::MapplyRow { a, .. }
@@ -647,6 +677,11 @@ fn compile_vkind(kind: &VKind, reg_of: &HashMap<usize, usize>) -> Result<InstrKi
             f1: *f1,
             f2: *f2,
         },
+        VKind::Spmm { .. } => {
+            return Err(FmError::Unsupported(
+                "spmm compiles in the source-registration path".into(),
+            ))
+        }
         VKind::Cast { a, to } => InstrKind::Cast { a: r(a), to: *to },
         VKind::SelectCol { a, col } => InstrKind::SelectCol {
             a: r(a),
@@ -863,6 +898,7 @@ pub fn eval_strip(
             InstrKind::InnerSmall { a, b, f1, f2 } => {
                 inner_small(&regs[*a], rows, b, *f1, *f2, pool)?
             }
+            InstrKind::Spmm { src, b } => spmm_strip(&srcs[*src], rows, b, pool)?,
             InstrKind::Cast { a, to } => {
                 if inplace {
                     // same-dtype cast of a dead register: pure move
@@ -1029,6 +1065,55 @@ fn load_strip(
     Ok(out)
 }
 
+/// Streaming SpMM over one strip: decode the CSR rows
+/// `[local_row0, local_row0 + rows)` straight from the sparse source
+/// partition's bytes and accumulate `out[r, c] += a[r, j] * b[j, c]` over
+/// the row's stored entries (columns ascending).
+///
+/// Bit-parity contract: for a given output element the additions happen
+/// in the same ascending-`j` order as the dense `inner_small` (Mul, Sum)
+/// kernel, and entries absent on either side contribute an exact `±0.0`
+/// no-op there — so SpMM equals densify-then-`inner.prod` bit for bit
+/// (pinned by `rust/tests/properties.rs::prop_spmm_matches_densified`).
+fn spmm_strip(
+    src: &SourceStrip<'_>,
+    rows: usize,
+    b: &HostMat,
+    pool: &mut StripPool,
+) -> Result<Buf> {
+    let view = crate::matrix::SparsePartView::parse(src.bytes, src.part_rows)?;
+    if src.local_row0 + rows > view.prows {
+        return Err(FmError::Shape(format!(
+            "spmm strip [{}..{}) exceeds sparse partition rows {}",
+            src.local_row0,
+            src.local_row0 + rows,
+            view.prows
+        )));
+    }
+    let p = b.nrow;
+    let q = b.ncol;
+    let bv = match &b.buf {
+        Buf::F64(v) => v.as_slice(),
+        _ => return Err(FmError::DType("spmm right operand must be f64".into())),
+    };
+    let mut out = pool.acquire(DType::F64, rows * q);
+    let o = out.as_f64_mut();
+    let mut nnz_seen = 0u64;
+    for r in 0..rows {
+        let (lo, hi) = view.row_range(src.local_row0 + r);
+        nnz_seen += (hi - lo) as u64;
+        for e in lo..hi {
+            let (j, v) = view.entry(e);
+            let jb = j as usize;
+            for c in 0..q {
+                o[c * rows + r] += v * bv[c * p + jb];
+            }
+        }
+    }
+    pool.count_spmm(nnz_seen);
+    Ok(out)
+}
+
 /// Per-row reduction over a col-major strip -> rows x 1.
 fn row_agg(a: &Buf, rows: usize, op: AggOp, vectorized: bool, pool: &mut StripPool) -> Buf {
     let ncol = a.len() / rows.max(1);
@@ -1084,14 +1169,18 @@ fn row_agg(a: &Buf, rows: usize, op: AggOp, vectorized: bool, pool: &mut StripPo
 /// NaN entries are skipped like R skips NAs: a NaN never wins and never
 /// poisons later comparisons (seeding on a NaN first column would make
 /// every `<`/`>` test false and freeze the answer at column 1). An all-NaN
-/// row falls back to index 1.
+/// row yields the **NA index 0** — R's `which.min` on an all-NA vector
+/// returns no index (`integer(0)`), and 0 is the out-of-band value a
+/// 1-based result column can carry for that; downstream `labels - 1`
+/// pipelines turn it into -1, which `fm.groupby.row` drops, matching R's
+/// NA-group behaviour.
 fn row_arg_extreme(a: &Buf, rows: usize, max: bool, pool: &mut StripPool) -> Buf {
     let ncol = a.len() / rows.max(1);
     let mut out = pool.acquire(DType::I32, rows);
     let o = out.as_i32_mut();
     for r in 0..rows {
         let mut best = f64::NAN;
-        let mut bi = 0i32; // 0 = nothing finite seen yet
+        let mut bi = 0i32; // 0 = nothing finite seen yet (the NA index)
         for j in 0..ncol {
             let v = a.get(j * rows + r).as_f64();
             if v.is_nan() {
@@ -1102,7 +1191,7 @@ fn row_arg_extreme(a: &Buf, rows: usize, max: bool, pool: &mut StripPool) -> Buf
                 bi = j as i32 + 1; // 1-based like R
             }
         }
-        o[r] = bi.max(1);
+        o[r] = bi;
     }
     out
 }
@@ -1237,9 +1326,10 @@ mod tests {
         assert_eq!(am.as_i32(), &[3, 1], "NaN must not poison which.min");
         let ax = row_arg_extreme(&a, 2, true, &mut p);
         assert_eq!(ax.as_i32(), &[2, 3], "NaN must not poison which.max");
-        // an all-NaN row falls back to index 1
+        // an all-NaN row yields the NA index 0 (R: which.min(all-NA)
+        // returns no index)
         let b = Buf::from_f64(&[f64::NAN, 1.0, f64::NAN, 0.5]);
-        assert_eq!(row_arg_extreme(&b, 2, false, &mut p).as_i32(), &[1, 2]);
+        assert_eq!(row_arg_extreme(&b, 2, false, &mut p).as_i32(), &[0, 2]);
     }
 
     #[test]

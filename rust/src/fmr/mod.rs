@@ -366,6 +366,38 @@ impl FmMatrix {
         self.inner_prod_small(b, BinOp::Mul, AggOp::Sum)
     }
 
+    /// `fm.multiply(A, B)` with a sparse left operand: stream the CSR
+    /// row-partitions of `A` (n×m) against the small in-memory dense
+    /// matrix `B` (m×q) -> tall dense n×q (lazy). The sparse matrix is
+    /// scheduled, cached and prefetched like any dense pass source; the
+    /// result composes with every other GenOp (the PageRank iteration
+    /// fuses SpMM + scale + shift + convergence sink into one pass).
+    pub fn spmm(&self, b: HostMat) -> Result<FmMatrix> {
+        FmMatrix::wrap(&self.eng, genops::spmm(&self.m, b)?).policy()
+    }
+
+    /// Whether this handle wraps a sparse (CSR) matrix.
+    pub fn is_sparse(&self) -> bool {
+        self.m.is_sparse()
+    }
+
+    /// Stored entries of a sparse matrix (`None` for dense/virtual).
+    pub fn nnz(&self) -> Option<u64> {
+        match &*self.m.data {
+            MatrixData::Sparse(s) => Some(s.nnz),
+            _ => None,
+        }
+    }
+
+    /// Total encoded bytes of a sparse matrix's backing (what
+    /// `em_cache_bytes` is compared against in the SpMM ablation).
+    pub fn sparse_bytes(&self) -> Option<u64> {
+        match &*self.m.data {
+            MatrixData::Sparse(s) => Some(s.total_bytes()),
+            _ => None,
+        }
+    }
+
     /// `t(A) %*% B` — the Gramian-shaped product.
     pub fn crossprod(&self, right: &FmMatrix) -> Result<HostMat> {
         self.t().inner_prod_wide_tall(right, BinOp::Mul, AggOp::Sum)
@@ -465,6 +497,20 @@ impl FmMatrix {
         self.sapply(UnOp::Neg)
     }
 
+    /// `1 / (1 + exp(-A))` — the logistic function as one pinned GenOp
+    /// chain (neg → exp → +1 → 1/x). The logistic-regression golden
+    /// fixtures assert bit-level label parity against a python mirror of
+    /// exactly this op order, so label generation
+    /// ([`crate::datasets::logistic_labels`]) and the IRLS fit
+    /// ([`crate::algs::logistic::logistic`]) must share this one
+    /// definition.
+    pub fn sigmoid(&self) -> Result<FmMatrix> {
+        self.neg()?
+            .exp()?
+            .add_scalar(1.0)?
+            .mapply_scalar(Scalar::F64(1.0), BinOp::Div, false)
+    }
+
     pub fn add(&self, o: &FmMatrix) -> Result<FmMatrix> {
         self.mapply(o, BinOp::Add)
     }
@@ -558,7 +604,13 @@ impl std::fmt::Debug for FmMatrix {
             self.nrow(),
             self.ncol(),
             self.dtype(),
-            if self.is_virtual() { "virtual" } else { "dense" },
+            if self.is_virtual() {
+                "virtual"
+            } else if self.is_sparse() {
+                "sparse"
+            } else {
+                "dense"
+            },
             if self.m.transposed { " t" } else { "" },
         )
     }

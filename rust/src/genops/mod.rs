@@ -423,7 +423,10 @@ pub fn agg_full(a: &Matrix, op: AggOp) -> SinkSpec {
 }
 
 /// Row index (1-based) of the per-row minimum / maximum — `which.min` /
-/// `which.max` applied row-wise; the k-means assignment op.
+/// `which.max` applied row-wise; the k-means assignment op. NaNs are
+/// skipped like R's NAs; an all-NaN row yields the NA index 0 (R returns
+/// no index there), which the `labels - 1` + `fm.groupby.row` pipeline
+/// drops like R drops NA groups.
 pub fn which_extreme_row(a: &Matrix, max: bool) -> Result<Matrix> {
     if a.transposed {
         return Err(FmError::Unsupported(
@@ -532,6 +535,59 @@ pub fn inner_small(a: &Matrix, b: &HostMat, f1: BinOp, f2: AggOp) -> Result<Matr
             b: b.clone(),
             f1,
             f2,
+        },
+    ))
+}
+
+/// Streaming SpMM: sparse tall `a` (n×m CSR row-partitions) × small dense
+/// host `b` (m×q) -> tall dense n×q, recorded lazily like every GenOp.
+/// The sparse operand streams through the pass as a *source* (its CSR
+/// bytes are decoded per strip); the right-hand matrix stays in memory —
+/// the out-of-core PageRank shape (edges on SSD, rank vector in DRAM).
+///
+/// The contraction order per output element matches the dense
+/// [`inner_small`] (Mul, Sum) kernel, column-ascending, so SpMM is
+/// bit-identical to densify-then-`inner.prod` (the parity property test
+/// pins this).
+pub fn spmm(a: &Matrix, b: HostMat) -> Result<Matrix> {
+    if !a.data.is_sparse() {
+        return Err(FmError::Unsupported(
+            "spmm: left operand must be a sparse matrix".into(),
+        ));
+    }
+    if a.transposed {
+        return Err(FmError::Unsupported(
+            "spmm on a transposed sparse view".into(),
+        ));
+    }
+    if a.ncol() as usize != b.nrow {
+        return Err(FmError::Shape(format!(
+            "spmm: {}x{} × {}x{}",
+            a.nrow(),
+            a.ncol(),
+            b.nrow,
+            b.ncol
+        )));
+    }
+    // by-value operand moves into the Arc (f64 inputs copy nothing);
+    // passes then share it instead of re-copying per compile
+    let q = b.ncol as u64;
+    let b64 = std::sync::Arc::new(if b.buf.dtype() == DType::F64 {
+        b
+    } else {
+        HostMat {
+            nrow: b.nrow,
+            ncol: b.ncol,
+            buf: b.buf.cast(DType::F64)?,
+        }
+    });
+    Ok(vmat(
+        a.data.nrow(),
+        q,
+        DType::F64,
+        VKind::Spmm {
+            a: a.canonical(),
+            b: b64,
         },
     ))
 }

@@ -73,8 +73,9 @@ impl Mode {
     }
 }
 
-/// Build an engine for a mode at a given thread count.
-pub fn engine_for(s: &Scale, mode: Mode, threads: usize) -> Result<Arc<Engine>> {
+/// Configuration for a mode at a given thread count ([`engine_for`]
+/// without building the engine — for callers that tweak knobs first).
+pub fn config_for(s: &Scale, mode: Mode, threads: usize) -> EngineConfig {
     let mut cfg = match mode {
         Mode::FmIm => EngineConfig::fm_im(),
         Mode::FmEm => EngineConfig {
@@ -99,7 +100,12 @@ pub fn engine_for(s: &Scale, mode: Mode, threads: usize) -> Result<Arc<Engine>> 
     cfg.data_dir = s.data_dir.clone().into();
     cfg.artifacts_dir = s.artifacts_dir.clone().into();
     cfg.xla_dispatch = s.xla && mode != Mode::MllibLike;
-    Engine::new(cfg)
+    cfg
+}
+
+/// Build an engine for a mode at a given thread count.
+pub fn engine_for(s: &Scale, mode: Mode, threads: usize) -> Result<Arc<Engine>> {
+    Engine::new(config_for(s, mode, threads))
 }
 
 /// The five evaluation algorithms.
@@ -379,7 +385,7 @@ pub fn fig11(s: &Scale, em: bool) -> Result<Table> {
     for alg in ALL_ALGS {
         let mut base_secs = None;
         for (label, recycle, fm, fc, sf) in configs {
-            let mut cfg = (*engine_for(s, mode, s.threads)?).config.clone();
+            let mut cfg = config_for(s, mode, s.threads);
             cfg.recycle_chunks = recycle;
             cfg.fuse_mem = fm;
             cfg.fuse_cache = fc;
@@ -438,6 +444,72 @@ pub fn fig12(s: &Scale) -> Result<Table> {
                 vec![("secs".into(), secs)],
             );
         }
+    }
+    Ok(t)
+}
+
+/// Sparse-workload rows: PageRank over a synthetic edge matrix and
+/// logistic regression (IRLS), each FM-IM vs FM-EM. The EM PageRank run
+/// deliberately caps `em_cache_bytes` *below* the edge-matrix footprint,
+/// so every power iteration re-streams edges through cache replacement —
+/// the out-of-core scenario the SpMM GenOp exists for
+/// (`benches/spmm_pagerank.rs` is the full ablation). Rank sums and
+/// fitted coefficients are printed as sub-values so the rows double as a
+/// correctness smoke.
+pub fn sparse_workloads(s: &Scale) -> Result<Table> {
+    let n = s.n.max(4096);
+    let max_deg = 16u64;
+    let mut t = Table::new(format!(
+        "Sparse workloads: PageRank ({n} nodes, max_deg {max_deg}) + logistic ({}x8), {} threads",
+        s.n, s.threads
+    ));
+    for mode in [Mode::FmIm, Mode::FmEm] {
+        let mut cfg = config_for(s, mode, s.threads);
+        if mode == Mode::FmEm {
+            // cache smaller than the edge matrix: ~12 B/entry, halved
+            cfg.em_cache_bytes = ((n * max_deg / 2) * 12 / 2) as usize;
+            cfg.prefetch_depth = 2;
+        }
+        let eng = Engine::new(cfg)?;
+        let (g, dangling) = crate::datasets::pagerank_graph(&eng, n, max_deg, 42, None)?;
+        eng.metrics.reset();
+        let t0 = Instant::now();
+        let pr = algs::pagerank(&g, &dangling, 0.85, s.iters.max(5), 1e-10)?;
+        let secs = t0.elapsed().as_secs_f64();
+        let m = eng.metrics.snapshot();
+        t.add_with(
+            format!("pagerank {}", mode.label()),
+            secs,
+            "s",
+            vec![
+                ("iters".into(), pr.iterations as f64),
+                ("rank_sum".into(), pr.ranks.iter().sum()),
+                ("spmm_nnz".into(), m.spmm_nnz as f64),
+                ("read_gb".into(), m.io_read_bytes as f64 / 1e9),
+                ("cache_evictions".into(), m.cache_evictions as f64),
+            ],
+        );
+    }
+    for mode in [Mode::FmIm, Mode::FmEm] {
+        let eng = engine_for(s, mode, s.threads)?;
+        let x = crate::datasets::uniform(&eng, s.n, 8, -1.0, 1.0, 7, None)?;
+        let beta_true = [1.0, -0.5, 0.25, -2.0, 0.0, 1.5, -1.0, 0.5];
+        let y = crate::datasets::logistic_labels(&x, &beta_true, 9)?;
+        eng.metrics.reset();
+        let t0 = Instant::now();
+        let fit = algs::logistic(&x, &y, s.iters.max(4), 1e-8)?;
+        let secs = t0.elapsed().as_secs_f64();
+        let m = eng.metrics.snapshot();
+        t.add_with(
+            format!("logistic {}", mode.label()),
+            secs,
+            "s",
+            vec![
+                ("beta0".into(), fit.beta[0]),
+                ("deviance".into(), *fit.deviances.last().unwrap()),
+                ("read_gb".into(), m.io_read_bytes as f64 / 1e9),
+            ],
+        );
     }
     Ok(t)
 }

@@ -47,11 +47,9 @@ pub mod mem;
 pub mod metrics;
 pub mod runtime;
 pub mod storage;
+pub mod testutil;
 pub mod vudf;
 pub(crate) mod xla_stub;
-
-#[cfg(test)]
-pub(crate) mod testutil;
 
 pub use config::{EngineConfig, StorageKind};
 pub use error::{FmError, Result};

@@ -18,10 +18,12 @@
 pub mod cache;
 pub mod dense;
 pub mod partition;
+pub mod sparse;
 
 pub use cache::{CacheHandle, PartitionCache};
 pub use dense::{Backing, DenseBuilder, DenseData};
 pub use partition::{io_rows_for, Partitioning};
+pub use sparse::{SparseBuilder, SparseData, SparsePartView};
 
 use std::sync::Arc;
 
@@ -55,9 +57,11 @@ impl GroupData {
     }
 }
 
-/// The three physical kinds of matrix data.
+/// The four physical kinds of matrix data.
 pub enum MatrixData {
     Dense(DenseData),
+    /// Row-partitioned CSR (consumed by the SpMM GenOp only).
+    Sparse(SparseData),
     Virtual(crate::dag::VNode),
     Group(GroupData),
 }
@@ -68,6 +72,7 @@ impl MatrixData {
     pub fn nrow(&self) -> u64 {
         match self {
             MatrixData::Dense(d) => d.nrow(),
+            MatrixData::Sparse(s) => s.nrow(),
             MatrixData::Virtual(v) => v.nrow,
             MatrixData::Group(g) => g.nrow(),
         }
@@ -76,6 +81,7 @@ impl MatrixData {
     pub fn ncol(&self) -> u64 {
         match self {
             MatrixData::Dense(d) => d.ncol(),
+            MatrixData::Sparse(s) => s.ncol(),
             MatrixData::Virtual(v) => v.ncol,
             MatrixData::Group(g) => g.ncol(),
         }
@@ -84,6 +90,7 @@ impl MatrixData {
     pub fn dtype(&self) -> DType {
         match self {
             MatrixData::Dense(d) => d.dtype,
+            MatrixData::Sparse(s) => s.dtype,
             MatrixData::Virtual(v) => v.dtype,
             // a group of mixed-dtype members reads as the promoted dtype
             // (§III-D promotion); members are cast on load
@@ -98,6 +105,10 @@ impl MatrixData {
 
     pub fn is_virtual(&self) -> bool {
         matches!(self, MatrixData::Virtual(_))
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, MatrixData::Sparse(_))
     }
 }
 
@@ -162,6 +173,10 @@ impl Matrix {
 
     pub fn is_virtual(&self) -> bool {
         self.data.is_virtual()
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        self.data.is_sparse()
     }
 
     /// Canonical (untransposed) view of the same data.

@@ -1,0 +1,530 @@
+//! Row-partitioned sparse matrices (CSR per I/O-level partition).
+//!
+//! FlashR's graph-style workloads (PageRank, label propagation, …) stream
+//! an *edge matrix* whose nnz count — not its dense n×n shape — is what
+//! has to fit the memory hierarchy. The sparse subsystem reuses the dense
+//! infrastructure wholesale:
+//!
+//! * **Partitioning** — rows are split on the *same* io-row grid as dense
+//!   matrices ([`Partitioning`], power-of-two row blocks), so a sparse
+//!   source nests inside any pass and is range-scheduled exactly like a
+//!   dense source (one `pread` per partition, locality units, read-ahead).
+//! * **Byte layout** — each partition is an independent little-endian CSR
+//!   block (see [`encode_partition`]): `nnz: u64`, local `row_ptr:
+//!   (prows+1) × u64`, `col_idx: nnz × u32`, `values: nnz × f64`.
+//!   Partitions are variable-length and densely packed in file order; the
+//!   per-partition `(offset, len)` table lives in [`SparseData`] and, for
+//!   *named* external matrices, in a sidecar manifest
+//!   ([`crate::runtime::manifest::SparseMeta`]) so datasets reopen across
+//!   runs.
+//! * **Memory hierarchy** — external partitions are admitted to the
+//!   engine's write-through [`PartitionCache`] under their own matrix id,
+//!   with the same single-flight read-through, prefetch pinning and
+//!   drop-time eviction as dense partitions (§III-B3).
+//!
+//! A sparse matrix is consumed exclusively by the SpMM GenOp
+//! ([`crate::genops::spmm`]): the strip evaluator decodes CSR rows
+//! straight from the partition bytes and multiplies against a small dense
+//! right-hand matrix held in memory — the classic out-of-core PageRank
+//! shape (edges on SSD, rank vector in DRAM).
+
+use std::sync::Arc;
+
+use crate::dtype::DType;
+use crate::error::{FmError, Result};
+use crate::metrics::Metrics;
+use crate::storage::{FileStore, SsdSim};
+
+use super::cache::{CacheHandle, PartitionCache};
+use super::partition::Partitioning;
+
+/// Bytes of one CSR entry (u32 column + f64 value) — the nnz-proportional
+/// part of the layout; the row pointers add `(prows+1) * 8` per partition.
+pub const ENTRY_BYTES: usize = 4 + 8;
+
+/// Encode one partition's rows as the CSR byte block. `rows[r]` holds the
+/// `(col, value)` pairs of local row `r`; entries are sorted by column and
+/// duplicates merged additively (multi-edges accumulate) **in place** —
+/// no copy of the entry payload — so the layout is canonical for a given
+/// logical matrix and the caller's rows come back normalized.
+pub fn encode_partition(rows: &mut [Vec<(u32, f64)>]) -> Vec<u8> {
+    for r in rows.iter_mut() {
+        r.sort_by_key(|(c, _)| *c); // stable: duplicates keep insert order
+        // merge adjacent duplicate columns, accumulating left to right
+        // (insertion order — mirrored by the python fixture generator)
+        let mut w = 0usize;
+        for i in 0..r.len() {
+            let (c, v) = r[i];
+            if w > 0 && r[w - 1].0 == c {
+                r[w - 1].1 += v;
+            } else {
+                r[w] = (c, v);
+                w += 1;
+            }
+        }
+        r.truncate(w);
+    }
+    let nnz: usize = rows.iter().map(|r| r.len()).sum();
+    let mut out = Vec::with_capacity(8 + (rows.len() + 1) * 8 + nnz * ENTRY_BYTES);
+    out.extend_from_slice(&(nnz as u64).to_le_bytes());
+    let mut acc = 0u64;
+    out.extend_from_slice(&acc.to_le_bytes());
+    for r in rows.iter() {
+        acc += r.len() as u64;
+        out.extend_from_slice(&acc.to_le_bytes());
+    }
+    for r in rows.iter() {
+        for (c, _) in r {
+            out.extend_from_slice(&c.to_le_bytes());
+        }
+    }
+    for r in rows.iter() {
+        for (_, v) in r {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    out
+}
+
+/// Zero-copy view over one encoded CSR partition.
+pub struct SparsePartView<'a> {
+    pub prows: usize,
+    pub nnz: usize,
+    row_ptr: &'a [u8],
+    col_idx: &'a [u8],
+    values: &'a [u8],
+}
+
+impl<'a> SparsePartView<'a> {
+    /// Parse (and bounds-check) a partition of `prows` rows.
+    pub fn parse(bytes: &'a [u8], prows: usize) -> Result<SparsePartView<'a>> {
+        if bytes.len() < 8 + (prows + 1) * 8 {
+            return Err(FmError::Shape(format!(
+                "sparse partition too short: {} bytes for {prows} rows",
+                bytes.len()
+            )));
+        }
+        let nnz = u64::from_le_bytes(bytes[0..8].try_into().unwrap()) as usize;
+        let rp_end = 8 + (prows + 1) * 8;
+        let ci_end = rp_end + nnz * 4;
+        let v_end = ci_end + nnz * 8;
+        if bytes.len() != v_end {
+            return Err(FmError::Shape(format!(
+                "sparse partition: {} bytes, want {v_end} ({prows} rows, {nnz} nnz)",
+                bytes.len()
+            )));
+        }
+        Ok(SparsePartView {
+            prows,
+            nnz,
+            row_ptr: &bytes[8..rp_end],
+            col_idx: &bytes[rp_end..ci_end],
+            values: &bytes[ci_end..v_end],
+        })
+    }
+
+    /// Entry range `[lo, hi)` of local row `r`.
+    #[inline]
+    pub fn row_range(&self, r: usize) -> (usize, usize) {
+        let at = |i: usize| {
+            u64::from_le_bytes(self.row_ptr[i * 8..i * 8 + 8].try_into().unwrap()) as usize
+        };
+        (at(r), at(r + 1))
+    }
+
+    /// `(column, value)` of entry `e`.
+    #[inline]
+    pub fn entry(&self, e: usize) -> (u32, f64) {
+        let c = u32::from_le_bytes(self.col_idx[e * 4..e * 4 + 4].try_into().unwrap());
+        let v = f64::from_le_bytes(self.values[e * 8..e * 8 + 8].try_into().unwrap());
+        (c, v)
+    }
+}
+
+/// Where a sparse matrix's partition blocks live.
+enum SparseBacking {
+    /// In-memory: one encoded block per partition.
+    Mem(Vec<Arc<Vec<u8>>>),
+    /// External file, blocks densely packed in partition order, admitted
+    /// to the engine's write-through partition cache like dense
+    /// partitions (§III-B3).
+    Ext {
+        store: Arc<FileStore>,
+        metrics: Arc<Metrics>,
+        pcache: Option<CacheHandle>,
+    },
+}
+
+/// A materialized row-partitioned CSR matrix. Immutable after build.
+pub struct SparseData {
+    pub dtype: DType,
+    /// Row grid shared with dense matrices (`ncol` is the logical column
+    /// count; it does not drive the byte layout).
+    pub parts: Partitioning,
+    /// Total stored entries.
+    pub nnz: u64,
+    /// Byte `(offset, len)` of each partition in the packed layout.
+    part_locs: Vec<(u64, usize)>,
+    backing: SparseBacking,
+}
+
+impl SparseData {
+    pub fn nrow(&self) -> u64 {
+        self.parts.nrow
+    }
+
+    pub fn ncol(&self) -> u64 {
+        self.parts.ncol
+    }
+
+    /// Total encoded bytes (the matrix's EM footprint — what the cache
+    /// ablation compares `em_cache_bytes` against).
+    pub fn total_bytes(&self) -> u64 {
+        self.part_locs
+            .last()
+            .map(|(o, l)| o + *l as u64)
+            .unwrap_or(0)
+    }
+
+    /// Encoded bytes of partition `i`. External matrices go through the
+    /// §III-B3 hierarchy: partition-cache hit, single-flight coalesce, or
+    /// a leader `pread` that refills the cache — identical to the dense
+    /// read path.
+    pub fn partition_bytes_shared(&self, i: usize) -> Result<Arc<Vec<u8>>> {
+        let (off, len) = self.part_locs[i];
+        match &self.backing {
+            SparseBacking::Mem(blocks) => Ok(Arc::clone(&blocks[i])),
+            SparseBacking::Ext {
+                store,
+                metrics,
+                pcache,
+            } => {
+                let read = || -> Result<Vec<u8>> {
+                    let mut out = vec![0u8; len];
+                    store.read_at(off, &mut out)?;
+                    Ok(out)
+                };
+                match pcache {
+                    Some(h) => h.cache.get_or_read(h.matrix_id, i, read),
+                    None => {
+                        metrics
+                            .cache_misses
+                            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        read().map(Arc::new)
+                    }
+                }
+            }
+        }
+    }
+
+    /// Queue an async read-ahead of partition `i` (no-op in memory, when
+    /// uncached, or out of range) — same contract as the dense
+    /// [`super::DenseData::prefetch_partition`].
+    pub fn prefetch_partition(&self, i: usize) {
+        if i >= self.parts.n_parts() {
+            return;
+        }
+        if let SparseBacking::Ext {
+            store,
+            pcache: Some(h),
+            ..
+        } = &self.backing
+        {
+            let (off, len) = self.part_locs[i];
+            PartitionCache::prefetch(&h.cache, store, h.matrix_id, i, off, len);
+        }
+    }
+
+    /// Release read-ahead pins still held for this matrix (pass end).
+    pub fn release_prefetch_pins(&self) {
+        if let SparseBacking::Ext {
+            pcache: Some(h), ..
+        } = &self.backing
+        {
+            h.cache.release_prefetch_pins(h.matrix_id);
+        }
+    }
+
+    /// Reopen a *named* external sparse matrix from its sidecar manifest
+    /// (`<name>.sparse.json` next to the matrix file).
+    pub fn open_named(
+        dir: &std::path::Path,
+        name: &str,
+        ssd: Arc<SsdSim>,
+        metrics: Arc<Metrics>,
+        pcache: Option<Arc<PartitionCache>>,
+    ) -> Result<SparseData> {
+        let meta = crate::runtime::manifest::SparseMeta::load(&dir.join(format!(
+            "{name}.sparse.json"
+        )))?;
+        let store = Arc::new(FileStore::open(
+            &dir.join(name),
+            ssd,
+            Arc::clone(&metrics),
+        )?);
+        Ok(SparseData {
+            dtype: DType::F64,
+            parts: Partitioning::with_io_rows(meta.nrow, meta.ncol, meta.io_rows),
+            nnz: meta.nnz,
+            part_locs: meta.parts,
+            backing: SparseBacking::Ext {
+                store,
+                metrics,
+                pcache: pcache.map(CacheHandle::register),
+            },
+        })
+    }
+}
+
+/// Builder: partitions are encoded in row order, then frozen into memory
+/// or written through to an external file (+ cache) in one shot — the
+/// variable-length layout needs the total size before the fixed-length
+/// [`FileStore`] can be created, so encoded blocks are buffered in RAM
+/// until `finish_*`. That bounds buildable matrices by DRAM, not by SSD;
+/// a streaming builder (growable store + incremental block writes) is
+/// the known next step for paper-scale edge sets.
+pub struct SparseBuilder {
+    parts: Partitioning,
+    encoded: Vec<Vec<u8>>,
+    nnz: u64,
+}
+
+impl SparseBuilder {
+    pub fn new(parts: Partitioning) -> SparseBuilder {
+        SparseBuilder {
+            parts,
+            encoded: Vec::new(),
+            nnz: 0,
+        }
+    }
+
+    /// Append the next partition's rows (call once per partition, in
+    /// order; `rows.len()` must equal the partition's row count). Rows
+    /// are normalized in place by [`encode_partition`].
+    pub fn push_partition(&mut self, rows: &mut [Vec<(u32, f64)>]) -> Result<()> {
+        let i = self.encoded.len();
+        if i >= self.parts.n_parts() {
+            return Err(FmError::Shape("sparse builder: too many partitions".into()));
+        }
+        if rows.len() != self.parts.rows_in(i) as usize {
+            return Err(FmError::Shape(format!(
+                "sparse partition {i}: {} rows, want {}",
+                rows.len(),
+                self.parts.rows_in(i)
+            )));
+        }
+        for r in rows.iter() {
+            for (c, _) in r {
+                if *c as u64 >= self.parts.ncol {
+                    return Err(FmError::Shape(format!(
+                        "sparse column {c} out of range (ncol = {})",
+                        self.parts.ncol
+                    )));
+                }
+            }
+        }
+        let block = encode_partition(rows);
+        self.nnz += u64::from_le_bytes(block[0..8].try_into().unwrap());
+        self.encoded.push(block);
+        Ok(())
+    }
+
+    fn check_complete(&self) -> Result<()> {
+        if self.encoded.len() != self.parts.n_parts() {
+            return Err(FmError::Shape(format!(
+                "sparse builder: {} of {} partitions written",
+                self.encoded.len(),
+                self.parts.n_parts()
+            )));
+        }
+        Ok(())
+    }
+
+    fn locs(&self) -> Vec<(u64, usize)> {
+        let mut locs = Vec::with_capacity(self.encoded.len());
+        let mut off = 0u64;
+        for b in &self.encoded {
+            locs.push((off, b.len()));
+            off += b.len() as u64;
+        }
+        locs
+    }
+
+    /// Freeze in memory.
+    pub fn finish_mem(self) -> Result<SparseData> {
+        self.check_complete()?;
+        let part_locs = self.locs();
+        Ok(SparseData {
+            dtype: DType::F64,
+            parts: self.parts,
+            nnz: self.nnz,
+            part_locs,
+            backing: SparseBacking::Mem(self.encoded.into_iter().map(Arc::new).collect()),
+        })
+    }
+
+    /// Write through to an external file (and the partition cache, like
+    /// dense write-through). A `name` also writes the sidecar manifest so
+    /// the dataset reopens across runs ([`SparseData::open_named`]).
+    pub fn finish_ext(
+        self,
+        dir: &std::path::Path,
+        name: Option<&str>,
+        ssd: Arc<SsdSim>,
+        metrics: Arc<Metrics>,
+        pcache: Option<Arc<PartitionCache>>,
+    ) -> Result<SparseData> {
+        self.check_complete()?;
+        let part_locs = self.locs();
+        let total: u64 = part_locs.last().map(|(o, l)| o + *l as u64).unwrap_or(0);
+        let store = Arc::new(FileStore::create(
+            dir,
+            name,
+            total,
+            ssd,
+            Arc::clone(&metrics),
+        )?);
+        let pcache = pcache.map(CacheHandle::register);
+        for (i, block) in self.encoded.iter().enumerate() {
+            store.write_at(part_locs[i].0, block)?;
+            if let Some(h) = &pcache {
+                h.cache.insert(h.matrix_id, i, block.clone());
+            }
+        }
+        if let Some(n) = name {
+            crate::runtime::manifest::SparseMeta {
+                nrow: self.parts.nrow,
+                ncol: self.parts.ncol,
+                io_rows: self.parts.io_rows,
+                nnz: self.nnz,
+                parts: part_locs.clone(),
+            }
+            .save(&dir.join(format!("{n}.sparse.json")))?;
+        }
+        Ok(SparseData {
+            dtype: DType::F64,
+            parts: self.parts,
+            nnz: self.nnz,
+            part_locs,
+            backing: SparseBacking::Ext {
+                store,
+                metrics,
+                pcache,
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows3() -> Vec<Vec<(u32, f64)>> {
+        vec![
+            vec![(2, 1.5), (0, -2.0)],        // out of order: encode sorts
+            vec![],                            // empty row
+            vec![(1, 3.0), (1, 0.5), (3, 1.0)], // duplicate col: merges to 3.5
+        ]
+    }
+
+    #[test]
+    fn encode_parse_roundtrip() {
+        let b = encode_partition(&mut rows3());
+        let v = SparsePartView::parse(&b, 3).unwrap();
+        assert_eq!(v.nnz, 4);
+        assert_eq!(v.row_range(0), (0, 2));
+        assert_eq!(v.entry(0), (0, -2.0));
+        assert_eq!(v.entry(1), (2, 1.5));
+        assert_eq!(v.row_range(1), (2, 2));
+        assert_eq!(v.row_range(2), (2, 4));
+        assert_eq!(v.entry(2), (1, 3.5), "duplicate columns must merge");
+        assert_eq!(v.entry(3), (3, 1.0));
+    }
+
+    #[test]
+    fn parse_rejects_truncated_blocks() {
+        let b = encode_partition(&mut rows3());
+        assert!(SparsePartView::parse(&b[..b.len() - 1], 3).is_err());
+        assert!(SparsePartView::parse(&b, 2).is_err());
+        assert!(SparsePartView::parse(&[0u8; 4], 1).is_err());
+    }
+
+    #[test]
+    fn builder_mem_multi_partition() {
+        let parts = Partitioning::with_io_rows(5, 4, 2);
+        let mut b = SparseBuilder::new(parts);
+        b.push_partition(&mut [vec![(0, 1.0)], vec![(3, 2.0)]]).unwrap();
+        b.push_partition(&mut [vec![], vec![(1, 4.0), (2, 5.0)]]).unwrap();
+        b.push_partition(&mut [vec![(0, 7.0)]]).unwrap(); // tail partition, 1 row
+        let m = b.finish_mem().unwrap();
+        assert_eq!(m.nnz, 5);
+        assert_eq!(m.parts.n_parts(), 3);
+        let bytes = m.partition_bytes_shared(1).unwrap();
+        let v = SparsePartView::parse(&bytes, 2).unwrap();
+        assert_eq!(v.entry(0), (1, 4.0));
+    }
+
+    #[test]
+    fn builder_validates_shape() {
+        let parts = Partitioning::with_io_rows(4, 2, 2);
+        let mut b = SparseBuilder::new(parts.clone());
+        assert!(b.push_partition(&mut [vec![]]).is_err(), "wrong row count");
+        let mut b = SparseBuilder::new(parts.clone());
+        assert!(
+            b.push_partition(&mut [vec![(5, 1.0)], vec![]]).is_err(),
+            "column out of range"
+        );
+        let b = SparseBuilder::new(parts);
+        assert!(b.finish_mem().is_err(), "incomplete builder must not freeze");
+    }
+
+    #[test]
+    fn ext_write_through_and_reopen() {
+        let tmp = crate::testutil::TempDir::new("sparse-ext");
+        let ssd = Arc::new(SsdSim::new(None));
+        let metrics = Arc::new(Metrics::new());
+        let pc = PartitionCache::new(1 << 20, 0, Arc::clone(&metrics));
+        let parts = Partitioning::with_io_rows(4, 3, 2);
+        let mut b = SparseBuilder::new(parts);
+        b.push_partition(&mut [vec![(0, 1.0), (2, 2.0)], vec![(1, 3.0)]])
+            .unwrap();
+        b.push_partition(&mut [vec![], vec![(2, -1.0)]]).unwrap();
+        let m = b
+            .finish_ext(
+                tmp.path(),
+                Some("edges.mat"),
+                Arc::clone(&ssd),
+                Arc::clone(&metrics),
+                Some(Arc::clone(&pc)),
+            )
+            .unwrap();
+        assert_eq!(pc.len(), 2, "write-through must populate the cache");
+
+        // cached read: no file I/O
+        let before = metrics.snapshot();
+        let bytes = m.partition_bytes_shared(0).unwrap();
+        let after = metrics.snapshot();
+        assert_eq!(after.cache_hits - before.cache_hits, 1);
+        assert_eq!(after.io_read_reqs, before.io_read_reqs);
+        let v = SparsePartView::parse(&bytes, 2).unwrap();
+        assert_eq!(v.entry(1), (2, 2.0));
+
+        // reopen from the sidecar manifest; file-only read agrees
+        let m2 = SparseData::open_named(
+            tmp.path(),
+            "edges.mat",
+            ssd,
+            Arc::clone(&metrics),
+            None,
+        )
+        .unwrap();
+        assert_eq!(m2.nnz, 4);
+        assert_eq!((m2.nrow(), m2.ncol()), (4, 3));
+        let b2 = m2.partition_bytes_shared(0).unwrap();
+        assert_eq!(&*b2, &*bytes, "file and cache must agree");
+
+        // dropping the matrix evicts its cache entries
+        drop(m);
+        assert_eq!(pc.len(), 0);
+    }
+}

@@ -173,6 +173,8 @@ pub struct StripPool {
     allocs: u64,
     reuses: u64,
     inplace: u64,
+    spmm_strips: u64,
+    spmm_nnz: u64,
 }
 
 fn dtype_slot(dt: DType) -> usize {
@@ -196,6 +198,8 @@ impl StripPool {
             allocs: 0,
             reuses: 0,
             inplace: 0,
+            spmm_strips: 0,
+            spmm_nnz: 0,
         }
     }
 
@@ -232,6 +236,13 @@ impl StripPool {
     pub fn count_inplace(&mut self) {
         self.inplace += 1;
     }
+
+    /// Record one SpMM strip evaluation and the sparse entries it
+    /// streamed (flushed to `Metrics::{spmm_strips, spmm_nnz}` on drop).
+    pub fn count_spmm(&mut self, nnz: u64) {
+        self.spmm_strips += 1;
+        self.spmm_nnz += nnz;
+    }
 }
 
 impl Drop for StripPool {
@@ -239,6 +250,10 @@ impl Drop for StripPool {
         self.metrics.buf_allocs.fetch_add(self.allocs, Ordering::Relaxed);
         self.metrics.buf_reuses.fetch_add(self.reuses, Ordering::Relaxed);
         self.metrics.inplace_ops.fetch_add(self.inplace, Ordering::Relaxed);
+        self.metrics
+            .spmm_strips
+            .fetch_add(self.spmm_strips, Ordering::Relaxed);
+        self.metrics.spmm_nnz.fetch_add(self.spmm_nnz, Ordering::Relaxed);
     }
 }
 

@@ -54,6 +54,12 @@ pub struct Metrics {
     /// Total VUDF steps folded into peephole-fused strip chains, counted
     /// once per compiled pass (a 3-step chain adds 3 per pass).
     pub fused_chain_len: AtomicU64,
+    /// Strips evaluated through the streaming SpMM kernel (sparse
+    /// row-partitions × small dense right operand).
+    pub spmm_strips: AtomicU64,
+    /// Sparse entries streamed through SpMM (the workload's nnz per pass
+    /// — the sparse analogue of Table IV's I/O accounting).
+    pub spmm_nnz: AtomicU64,
 }
 
 impl Metrics {
@@ -102,6 +108,8 @@ impl Metrics {
             buf_reuses: self.buf_reuses.load(Ordering::Relaxed),
             inplace_ops: self.inplace_ops.load(Ordering::Relaxed),
             fused_chain_len: self.fused_chain_len.load(Ordering::Relaxed),
+            spmm_strips: self.spmm_strips.load(Ordering::Relaxed),
+            spmm_nnz: self.spmm_nnz.load(Ordering::Relaxed),
         }
     }
 
@@ -129,6 +137,8 @@ impl Metrics {
             &s.buf_reuses,
             &s.inplace_ops,
             &s.fused_chain_len,
+            &s.spmm_strips,
+            &s.spmm_nnz,
         ] {
             c.store(0, Ordering::Relaxed);
         }
@@ -158,6 +168,8 @@ pub struct MetricsSnapshot {
     pub buf_reuses: u64,
     pub inplace_ops: u64,
     pub fused_chain_len: u64,
+    pub spmm_strips: u64,
+    pub spmm_nnz: u64,
 }
 
 impl MetricsSnapshot {
@@ -184,6 +196,8 @@ impl MetricsSnapshot {
             buf_reuses: self.buf_reuses - earlier.buf_reuses,
             inplace_ops: self.inplace_ops - earlier.inplace_ops,
             fused_chain_len: self.fused_chain_len - earlier.fused_chain_len,
+            spmm_strips: self.spmm_strips - earlier.spmm_strips,
+            spmm_nnz: self.spmm_nnz - earlier.spmm_nnz,
         }
     }
 }

@@ -113,9 +113,90 @@ pub fn load_manifest(dir: &Path) -> Result<Vec<ArtifactMeta>> {
     Ok(out)
 }
 
+/// Sidecar manifest for a *named* external sparse matrix
+/// ([`crate::matrix::SparseData`]). The CSR byte layout is
+/// variable-length per partition (nnz varies), so — unlike dense
+/// matrices, whose offsets follow from the partitioning formula — a
+/// reopened sparse dataset needs the per-partition `(offset, len)` table.
+/// Written as `<name>.sparse.json` next to the matrix file.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseMeta {
+    pub nrow: u64,
+    pub ncol: u64,
+    pub io_rows: u64,
+    pub nnz: u64,
+    /// Byte `(offset, len)` of each partition in the packed file.
+    pub parts: Vec<(u64, usize)>,
+}
+
+impl SparseMeta {
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let j = crate::util::json::obj(vec![
+            ("nrow", self.nrow.into()),
+            ("ncol", self.ncol.into()),
+            ("io_rows", self.io_rows.into()),
+            ("nnz", self.nnz.into()),
+            (
+                "offsets",
+                Json::Arr(self.parts.iter().map(|(o, _)| (*o).into()).collect()),
+            ),
+            (
+                "lens",
+                Json::Arr(self.parts.iter().map(|(_, l)| (*l).into()).collect()),
+            ),
+        ]);
+        std::fs::write(path, j.to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<SparseMeta> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            FmError::Storage(format!(
+                "cannot read sparse manifest {} ({e})",
+                path.display()
+            ))
+        })?;
+        let j = Json::parse(&text)?;
+        let offs: Vec<u64> = j
+            .get("offsets")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_u64())
+            .collect::<Result<_>>()?;
+        let lens = j.get("lens")?.usize_vec()?;
+        if offs.len() != lens.len() {
+            return Err(FmError::Storage(
+                "sparse manifest: offsets/lens length mismatch".into(),
+            ));
+        }
+        Ok(SparseMeta {
+            nrow: j.get("nrow")?.as_u64()?,
+            ncol: j.get("ncol")?.as_u64()?,
+            io_rows: j.get("io_rows")?.as_u64()?,
+            nnz: j.get("nnz")?.as_u64()?,
+            parts: offs.into_iter().zip(lens).collect(),
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn sparse_meta_roundtrips() {
+        let tmp = crate::testutil::TempDir::new("sparse-meta");
+        let meta = SparseMeta {
+            nrow: 5000,
+            ncol: 5000,
+            io_rows: 1024,
+            nnz: 12345,
+            parts: vec![(0, 4096), (4096, 2048), (6144, 512)],
+        };
+        let p = tmp.path().join("edges.sparse.json");
+        meta.save(&p).unwrap();
+        assert_eq!(SparseMeta::load(&p).unwrap(), meta);
+    }
 
     #[test]
     fn parses_real_manifest_when_present() {

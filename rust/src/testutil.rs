@@ -1,6 +1,13 @@
-//! Test-only helpers shared across unit-test modules.
+//! Test-only helpers shared by unit tests, integration tests and benches.
+//!
+//! Compiled into the library (not `#[cfg(test)]`) so `rust/tests/*.rs`
+//! can reuse them; nothing here is part of the engine proper.
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::config::{EngineConfig, StorageKind, ThrottleConfig};
+use crate::fmr::Engine;
 
 /// Unique self-cleaning temp dir: removed on drop, so tests stay
 /// panic-safe and leave no litter behind.
@@ -29,4 +36,78 @@ impl Drop for TempDir {
     fn drop(&mut self) {
         let _ = std::fs::remove_dir_all(&self.0);
     }
+}
+
+/// Whether the dedicated out-of-core CI job is running
+/// (`FLASHR_TEST_EM=1 cargo test`): the EM leg of
+/// [`rerun_out_of_core`] then adds a deterministic bandwidth throttle so
+/// the simulated-SSD path is exercised too, not only the file reads.
+pub fn em_forcing_enabled() -> bool {
+    std::env::var("FLASHR_TEST_EM").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Configuration that *forces* the out-of-core machinery even at test
+/// scale: external storage with a partition cache that holds roughly ONE
+/// io-level partition, so any multi-partition scan misses, evicts and
+/// re-reads — the EM read path, cache replacement and read-ahead all run
+/// inside `cargo test` instead of only inside benches.
+///
+/// Sizing note: io-partition sizes come from the **pinned** formula in
+/// `matrix/partition.rs` (8 MiB target, 1024–65536 rows), NOT from
+/// `target_part_bytes` — a matrix with ≤ 8 columns has 4 MiB full
+/// partitions, so a 4 MiB cache admits exactly one and must evict it for
+/// the next. Callers should keep forcing datasets at ≤ 8 columns; wider
+/// matrices (larger partitions) degrade to the never-admitted bypass
+/// path, which is still an EM read but exercises no replacement.
+pub fn out_of_core_config(data_dir: &Path) -> EngineConfig {
+    EngineConfig {
+        storage: StorageKind::External,
+        data_dir: data_dir.to_path_buf(),
+        chunk_bytes: 4 << 20,
+        target_part_bytes: 1 << 20,
+        em_cache_bytes: 4 << 20, // one full 8-column io partition
+        prefetch_depth: 2,
+        xla_dispatch: false,
+        throttle: em_forcing_enabled().then_some(ThrottleConfig {
+            read_bytes_per_sec: 512 << 20,
+            write_bytes_per_sec: 512 << 20,
+        }),
+        ..EngineConfig::default()
+    }
+}
+
+/// Run `f` under the fully-optimized in-memory engine, then re-run it
+/// under the tiny-cache out-of-core engine, asserting the EM leg really
+/// left memory (file reads happened and the one-partition cache missed).
+/// Returns `(in_memory_result, out_of_core_result)` for the caller's
+/// parity assertion.
+pub fn rerun_out_of_core<T>(tag: &str, f: impl Fn(&Arc<Engine>) -> T) -> (T, T) {
+    let im_cfg = EngineConfig {
+        chunk_bytes: 4 << 20,
+        target_part_bytes: 1 << 20,
+        xla_dispatch: false,
+        ..EngineConfig::default()
+    };
+    let im = f(&Engine::new(im_cfg).expect("in-memory engine"));
+
+    let dir = TempDir::new(&format!("ooc-{tag}"));
+    let eng = Engine::new(out_of_core_config(dir.path())).expect("out-of-core engine");
+    let em = f(&eng);
+    let m = eng.metrics.snapshot();
+    assert!(
+        m.io_read_bytes > 0,
+        "{tag}: out-of-core leg never read the external store"
+    );
+    assert!(
+        m.cache_misses > 0,
+        "{tag}: the single-partition cache never missed — workload too small \
+         to exercise the EM path"
+    );
+    assert!(
+        m.cache_evictions > 0,
+        "{tag}: no cache replacement happened — dataset partitions were \
+         either fully resident or too large to admit (keep forcing \
+         datasets at ≤ 8 columns and > 1 io partition)"
+    );
+    (im, em)
 }

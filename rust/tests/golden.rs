@@ -18,13 +18,24 @@ use flashmatrix::vudf::{AggOp, BinOp};
 
 const TOL: f64 = 1e-9;
 
+/// Locate a checked-in fixture whether `cargo test` runs from the repo
+/// root (`--manifest-path rust/Cargo.toml`) or from `rust/`.
+fn fixture_path(name: &str) -> std::path::PathBuf {
+    for base in ["python/tests/golden", "../python/tests/golden"] {
+        let p = std::path::Path::new(base).join(name);
+        if p.exists() {
+            return p;
+        }
+    }
+    panic!("golden fixture {name} missing — run `pytest python/tests` first");
+}
+
+fn load_named_fixture(name: &str) -> Json {
+    Json::parse(&std::fs::read_to_string(fixture_path(name)).unwrap()).unwrap()
+}
+
 fn load_fixture() -> Json {
-    let path = std::path::Path::new("python/tests/golden/steps_256x8.json");
-    assert!(
-        path.exists(),
-        "golden fixture missing — run `pytest python/tests` first"
-    );
-    Json::parse(&std::fs::read_to_string(path).unwrap()).unwrap()
+    load_named_fixture("steps_256x8.json")
 }
 
 fn close(a: &[f64], b: &[f64], what: &str) {
@@ -204,4 +215,125 @@ fn genop_pipeline_matches_jax_oracle() {
         "genop gramian",
     );
     let _ = &f.eng;
+}
+
+/// PageRank vs the numpy oracle (`test_write_pagerank_fixture`): the
+/// engine regenerates the same synthetic graph from the fixture's seed
+/// (datasets::pagerank_graph mirrors `pagerank_graph_ref`) and the power
+/// iteration through the streaming SpMM GenOp must land within 1e-10 of
+/// the dense-matvec reference — in memory AND out of core with a cache
+/// smaller than the edge matrix, bit-identically between the two.
+#[test]
+fn pagerank_matches_python_oracle_im_and_em() {
+    let j = load_named_fixture("pagerank_512.json");
+    let n = j.get("n").unwrap().as_u64().unwrap();
+    let max_deg = j.get("max_deg").unwrap().as_u64().unwrap();
+    let seed = j.get("seed").unwrap().as_u64().unwrap();
+    let damping = j.get("damping").unwrap().as_f64().unwrap();
+    let iters = j.get("iters").unwrap().as_usize().unwrap();
+    let want_ranks = j.get("ranks").unwrap().f64_vec().unwrap();
+    let want_deltas = j.get("deltas").unwrap().f64_vec().unwrap();
+    let want_dangling = j.get("dangling_count").unwrap().as_usize().unwrap();
+
+    let mut results: Vec<Vec<f64>> = Vec::new();
+    let tmp = flashmatrix::testutil::TempDir::new("golden-pagerank");
+    for em in [false, true] {
+        let cfg = if em {
+            // out of core with a cache far below the edge-matrix bytes
+            EngineConfig {
+                em_cache_bytes: 16 << 10,
+                prefetch_depth: 2,
+                threads: 1,
+                ..flashmatrix::testutil::out_of_core_config(tmp.path())
+            }
+        } else {
+            EngineConfig {
+                threads: 1,
+                xla_dispatch: false,
+                chunk_bytes: 4 << 20,
+                target_part_bytes: 1 << 20,
+                ..Default::default()
+            }
+        };
+        let eng = Engine::new(cfg).unwrap();
+        let (g, dangling) = datasets::pagerank_graph(&eng, n, max_deg, seed, None).unwrap();
+        assert_eq!(
+            dangling.iter().filter(|d| **d).count(),
+            want_dangling,
+            "graph generator diverged from the python mirror"
+        );
+        if em {
+            let edge_bytes = g.sparse_bytes().unwrap();
+            let cap = eng.cache.as_ref().unwrap().capacity() as u64;
+            assert!(cap < edge_bytes, "cache {cap} !< edges {edge_bytes}");
+            eng.cache.as_ref().unwrap().clear();
+        }
+        let pr = flashmatrix::algs::pagerank(&g, &dangling, damping, iters, 0.0).unwrap();
+        assert_eq!(pr.iterations, iters);
+        for (i, (a, b)) in pr.ranks.iter().zip(&want_ranks).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-10,
+                "em={em} rank[{i}]: rust {a} vs numpy {b}"
+            );
+        }
+        for (i, (a, b)) in pr.deltas.iter().zip(&want_deltas).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-10,
+                "em={em} delta[{i}]: rust {a} vs numpy {b}"
+            );
+        }
+        results.push(pr.ranks);
+    }
+    // IM and EM runs must agree BIT for bit (same strips, same bytes)
+    for (i, (a, b)) in results[0].iter().zip(&results[1]).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "rank[{i}] IM {a} vs EM {b}");
+    }
+}
+
+/// Logistic regression (IRLS) vs the numpy oracle
+/// (`test_write_logistic_fixture`): same X (golden_uniform), same labels
+/// (u < sigmoid(X beta_true), checked element-wise against the fixture),
+/// same ridge — fitted coefficients within 1e-9.
+#[test]
+fn logistic_matches_python_oracle() {
+    let j = load_named_fixture("logistic_256x4.json");
+    let rows = j.get("rows").unwrap().as_u64().unwrap();
+    let p = j.get("p").unwrap().as_u64().unwrap();
+    let x_seed = j.get("x_seed").unwrap().as_u64().unwrap();
+    let u_seed = j.get("u_seed").unwrap().as_u64().unwrap();
+    let scale = j.get("x_scale").unwrap().as_f64().unwrap();
+    let shift = j.get("x_shift").unwrap().as_f64().unwrap();
+    let beta_true = j.get("beta_true").unwrap().f64_vec().unwrap();
+    let iters = j.get("iters").unwrap().as_usize().unwrap();
+    let ridge = j.get("ridge").unwrap().as_f64().unwrap();
+    let want_y = j.get("y").unwrap().f64_vec().unwrap();
+    let want_beta = j.get("beta").unwrap().f64_vec().unwrap();
+    let want_dev = j.get("deviances").unwrap().f64_vec().unwrap();
+
+    let eng = Engine::new(EngineConfig {
+        threads: 1,
+        xla_dispatch: false,
+        chunk_bytes: 1 << 20,
+        target_part_bytes: 1 << 20,
+        ..Default::default()
+    })
+    .unwrap();
+    let x = datasets::golden_uniform(&eng, rows, p, x_seed, scale, shift, 0.0).unwrap();
+    let y = datasets::logistic_labels(&x, &beta_true, u_seed).unwrap();
+    let y_host = y.to_host().unwrap().buf.to_f64_vec();
+    assert_eq!(y_host, want_y, "label generator diverged from the python mirror");
+
+    let fit = flashmatrix::algs::logistic(&x, &y, iters, ridge).unwrap();
+    for (i, (a, b)) in fit.beta.iter().zip(&want_beta).enumerate() {
+        assert!(
+            (a - b).abs() < 1e-9 * b.abs().max(1.0),
+            "beta[{i}]: rust {a} vs numpy {b}"
+        );
+    }
+    for (i, (a, b)) in fit.deviances.iter().zip(&want_dev).enumerate() {
+        assert!(
+            (a - b).abs() < 1e-7 * b.abs().max(1.0),
+            "deviance[{i}]: rust {a} vs numpy {b}"
+        );
+    }
 }

@@ -425,7 +425,10 @@ fn mixed_dtype_group_decodes_members_correctly() {
 }
 
 /// `which.min`/`which.max` skip NaNs like R skips NAs; a NaN in the first
-/// column must not freeze the answer at index 1.
+/// column must not freeze the answer at index 1, and an all-NaN row gives
+/// the NA index 0 (R's `which.min` on all-NA returns no index — pinned
+/// edge case; `labels - 1` then yields -1, which groupby drops like R
+/// drops NA groups).
 #[test]
 fn which_min_skips_nans() {
     use flashmatrix::matrix::HostMat;
@@ -438,9 +441,192 @@ fn which_min_skips_nans() {
     ]);
     let x = FmMatrix::from_host(&eng, &h).unwrap();
     let mins = x.which_min_row().unwrap().to_host().unwrap().buf.to_f64_vec();
-    assert_eq!(mins, vec![3.0, 3.0, 1.0]);
+    assert_eq!(mins, vec![3.0, 3.0, 0.0]);
     let maxs = x.which_max_row().unwrap().to_host().unwrap().buf.to_f64_vec();
-    assert_eq!(maxs, vec![2.0, 1.0, 1.0]);
+    assert_eq!(maxs, vec![2.0, 1.0, 0.0]);
+}
+
+/// All-NaN-row assignment composes with groupby exactly like R drops NA
+/// groups: the NA index 0 becomes label -1 after the k-means-style
+/// `which.min - 1`, and `fm.groupby.row` ignores the row.
+#[test]
+fn all_nan_row_assignment_drops_from_groupby() {
+    use flashmatrix::dtype::Scalar;
+    use flashmatrix::matrix::HostMat;
+    use flashmatrix::vudf::BinOp;
+
+    let eng = Engine::new(cfg_im()).unwrap();
+    let h = HostMat::from_rows_f64(&[
+        vec![1.0, 5.0],
+        vec![f64::NAN, f64::NAN],
+        vec![6.0, 2.0],
+    ]);
+    let x = FmMatrix::from_host(&eng, &h).unwrap();
+    let labels = x
+        .which_min_row()
+        .unwrap()
+        .mapply_scalar(Scalar::I32(1), BinOp::Sub, true)
+        .unwrap();
+    let sums = x.groupby_row(&labels, 2, AggOp::Sum).unwrap();
+    // row 0 -> group 0, row 2 -> group 1, the NaN row -> label -1: dropped
+    assert_eq!(sums.get(0, 0).as_f64(), 1.0);
+    assert_eq!(sums.get(0, 1).as_f64(), 5.0);
+    assert_eq!(sums.get(1, 0).as_f64(), 6.0);
+    assert_eq!(sums.get(1, 1).as_f64(), 2.0);
+}
+
+/// `fm.groupby.row` with an empty group pins R's zero-row semantics for
+/// additive aggregation: a group no row maps to yields the identity row
+/// (zeros for Sum), not garbage and not a shrunken result matrix.
+#[test]
+fn groupby_empty_group_yields_zero_row() {
+    use flashmatrix::matrix::HostMat;
+    use flashmatrix::vudf::Buf;
+
+    let eng = Engine::new(cfg_im()).unwrap();
+    let h = HostMat::from_rows_f64(&[vec![1.0, 10.0], vec![2.0, 20.0], vec![4.0, 40.0]]);
+    let x = FmMatrix::from_host(&eng, &h).unwrap();
+    // labels use only groups 0 and 2 of k = 3: group 1 stays empty
+    let labels = FmMatrix::from_host(
+        &eng,
+        &HostMat {
+            nrow: 3,
+            ncol: 1,
+            buf: Buf::I32(vec![0, 2, 0]),
+        },
+    )
+    .unwrap();
+    let sums = x.groupby_row(&labels, 3, AggOp::Sum).unwrap();
+    assert_eq!(sums.nrow, 3);
+    assert_eq!(sums.get(0, 0).as_f64(), 5.0);
+    assert_eq!(sums.get(0, 1).as_f64(), 50.0);
+    assert_eq!(sums.get(1, 0).as_f64(), 0.0, "empty group must be a zero row");
+    assert_eq!(sums.get(1, 1).as_f64(), 0.0);
+    assert_eq!(sums.get(2, 0).as_f64(), 2.0);
+    // counts via groupby of ones: the empty group counts zero
+    let ones = FmMatrix::fill(&eng, flashmatrix::dtype::Scalar::F64(1.0), 3, 1);
+    let counts = ones.groupby_row(&labels, 3, AggOp::Sum).unwrap();
+    assert_eq!(counts.get(1, 0).as_f64(), 0.0);
+}
+
+// ---------------------------------------------------------------------------
+// PR 4: out-of-core forcing harness + sparse subsystem
+// ---------------------------------------------------------------------------
+
+fn assert_rel_close(a: &[f64], b: &[f64], tol: f64, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() / x.abs().max(1.0) < tol,
+            "{what}[{i}]: {x} vs {y}"
+        );
+    }
+}
+
+/// K-means under the tiny-cache out-of-core config must match the
+/// in-memory run: the EM read path, single-partition cache replacement
+/// and read-ahead are exercised by `cargo test`, not only by benches
+/// (`FLASHR_TEST_EM=1` additionally throttles the simulated SSD).
+#[test]
+fn kmeans_out_of_core_matches_in_memory() {
+    let (im, em) = flashmatrix::testutil::rerun_out_of_core("kmeans", |eng| {
+        let (x, _) = datasets::mix_gaussian(eng, 130_000, 8, 4, 8.0, 3, None).unwrap();
+        let km = flashmatrix::algs::kmeans(&x, 4, 3, 1).unwrap();
+        let mut fp = km.wcss.clone();
+        fp.extend(km.centroids.buf.to_f64_vec());
+        fp
+    });
+    assert_rel_close(&im, &em, 1e-10, "kmeans IM vs out-of-core");
+}
+
+/// Same forcing applied to GMM (the heaviest sink pipeline).
+#[test]
+fn gmm_out_of_core_matches_in_memory() {
+    let (im, em) = flashmatrix::testutil::rerun_out_of_core("gmm", |eng| {
+        let (x, _) = datasets::mix_gaussian(eng, 80_000, 8, 3, 8.0, 7, None).unwrap();
+        let gm = flashmatrix::algs::gmm(&x, 3, 2, 1).unwrap();
+        let mut fp = gm.loglik.clone();
+        fp.extend(gm.weights.clone());
+        fp
+    });
+    assert_rel_close(&im, &em, 1e-9, "gmm IM vs out-of-core");
+}
+
+/// Same forcing applied to correlation (the two-pass algorithm whose
+/// second pass re-reads data the single-partition cache already evicted).
+#[test]
+fn correlation_out_of_core_matches_in_memory() {
+    let (im, em) = flashmatrix::testutil::rerun_out_of_core("correlation", |eng| {
+        let x = datasets::spectral_like(eng, 120_000, 6, 11, None).unwrap();
+        flashmatrix::algs::correlation(&x).unwrap().corr
+    });
+    assert_rel_close(&im, &em, 1e-10, "correlation IM vs out-of-core");
+}
+
+/// Acceptance pin for the sparse subsystem: PageRank completes out of
+/// core with `em_cache_bytes` smaller than the edge matrix, and its ranks
+/// are **bit-identical** to the in-memory run (single-threaded so sink
+/// merge order cannot perturb the convergence log either).
+#[test]
+fn pagerank_em_small_cache_bitexact_vs_im() {
+    let n: u64 = 1 << 14;
+    let run = |cfg: EngineConfig| {
+        let eng = Engine::new(cfg).unwrap();
+        let (g, dangling) = datasets::pagerank_graph(&eng, n, 8, 99, None).unwrap();
+        let edge_bytes = g.sparse_bytes().unwrap();
+        if eng.config.storage == StorageKind::External {
+            let c = eng.cache.as_ref().expect("EM leg runs with a cache");
+            assert!(
+                (c.capacity() as u64) < edge_bytes,
+                "cache {} must be smaller than the edge matrix {edge_bytes}",
+                c.capacity()
+            );
+            c.clear(); // cold start: drop write-through copies
+        }
+        eng.metrics.reset();
+        let pr = flashmatrix::algs::pagerank(&g, &dangling, 0.85, 10, 0.0).unwrap();
+        (pr.ranks, eng.metrics.snapshot())
+    };
+
+    let (im_ranks, _) = run(EngineConfig {
+        threads: 1,
+        ..cfg_im()
+    });
+    let (em_ranks, m) = run(EngineConfig {
+        threads: 1,
+        em_cache_bytes: 64 << 10, // « the ~1 MiB edge matrix
+        prefetch_depth: 2,
+        ..cfg_em("pagerank-em")
+    });
+    assert_eq!(im_ranks.len(), em_ranks.len());
+    for (i, (a, b)) in im_ranks.iter().zip(&em_ranks).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "rank[{i}] not bit-identical: {a} vs {b}"
+        );
+    }
+    assert!(m.spmm_nnz > 0, "EM run must stream sparse entries");
+    assert!(
+        m.io_read_bytes > 0 && m.cache_evictions > 0,
+        "EM run must replace cache entries (read {} B, evictions {})",
+        m.io_read_bytes,
+        m.cache_evictions
+    );
+    let total: f64 = em_ranks.iter().sum();
+    assert!((total - 1.0).abs() < 1e-9, "rank mass {total}");
+}
+
+/// Logistic regression agrees across storage modes (the GLM workload's
+/// EM path: three fused sinks per IRLS pass).
+#[test]
+fn logistic_out_of_core_matches_in_memory() {
+    let (im, em) = flashmatrix::testutil::rerun_out_of_core("logistic", |eng| {
+        let x = datasets::uniform(eng, 120_000, 6, -1.0, 1.0, 21, None).unwrap();
+        let y = datasets::logistic_labels(&x, &[1.0, -0.5, 0.25, -1.5, 0.75, 0.0], 22).unwrap();
+        flashmatrix::algs::logistic(&x, &y, 4, 1e-8).unwrap().beta
+    });
+    assert_rel_close(&im, &em, 1e-9, "logistic IM vs out-of-core");
 }
 
 /// Min/Max aggregation must give identical results with `vectorized_udf`

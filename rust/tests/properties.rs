@@ -318,6 +318,107 @@ fn prop_inplace_recycle_fusion_bitexact() {
 }
 
 #[test]
+fn prop_spmm_matches_densified() {
+    // SpMM parity: a random sparse matrix multiplied through the
+    // streaming CSR kernel must be BIT-identical to densifying the same
+    // matrix and going through `inner_prod_small` (Mul, Sum) — across
+    // densities (0, 2%, 10%, 50%), EM/IM storage, and the
+    // `vectorized_udf` ablation. The contraction order contract in
+    // `exec/pipeline.rs::spmm_strip` is what makes this exact.
+    forall(12, |g| {
+        let n = g.usize_in(300, 40_000) as u64;
+        let m = g.usize_in(3, 40) as u64;
+        let q = g.usize_in(1, 3);
+        let density = *g.choose(&[0.0, 0.02, 0.1, 0.5]);
+        let seed = g.u64();
+        let vudf = g.bool();
+        let em = g.bool();
+
+        let tmp = flashmatrix::testutil::TempDir::new("prop-spmm");
+        let mut cfg = if em {
+            flashmatrix::testutil::out_of_core_config(tmp.path())
+        } else {
+            EngineConfig {
+                chunk_bytes: 4 << 20,
+                target_part_bytes: 1 << 20,
+                xla_dispatch: false,
+                ..Default::default()
+            }
+        };
+        cfg.vectorized_udf = vudf;
+        cfg.threads = g.usize_in(1, 3);
+        // a 40k x 40 dense partition can reach ~5 MiB; chunks must fit it
+        cfg.chunk_bytes = 16 << 20;
+        let eng = Engine::new(cfg).unwrap();
+
+        let present = |r: u64, c: u64| {
+            flashmatrix::exec::u64_to_unit_f64(flashmatrix::exec::splitmix64_at(
+                seed ^ 0x5AAD,
+                r * m + c,
+            )) < density
+        };
+        let value = |r: u64, c: u64| {
+            flashmatrix::exec::u64_to_unit_f64(flashmatrix::exec::splitmix64_at(
+                seed ^ 0x7A1E,
+                r * m + c,
+            )) * 2.0
+                - 1.0
+        };
+        let sparse = datasets::sparse_from_rows(&eng, n, m, None, |r| {
+            (0..m)
+                .filter(|c| present(r, *c))
+                .map(|c| (c as u32, value(r, c)))
+                .collect()
+        })
+        .map_err(|e| e.to_string())?;
+        let dense = datasets::from_fn(&eng, n, m, None, |r, c| {
+            if present(r, c) {
+                value(r, c)
+            } else {
+                0.0
+            }
+        })
+        .map_err(|e| e.to_string())?;
+
+        // nnz bookkeeping matches the generator
+        let want_nnz: u64 = (0..n)
+            .map(|r| (0..m).filter(|c| present(r, *c)).count() as u64)
+            .sum();
+        if sparse.nnz() != Some(want_nnz) {
+            return Err(format!("nnz {:?} != {want_nnz}", sparse.nnz()));
+        }
+
+        let bvals = g.f64_vec(m as usize * q, -2.0, 2.0);
+        let mut b = HostMat::zeros(m as usize, q, DType::F64);
+        for i in 0..m as usize {
+            for j in 0..q {
+                b.set(i, j, Scalar::F64(bvals[i * q + j]));
+            }
+        }
+
+        let ys = sparse.spmm(b.clone()).map_err(|e| e.to_string())?;
+        if (ys.nrow(), ys.ncol()) != (n, q as u64) {
+            return Err(format!("spmm shape {}x{}", ys.nrow(), ys.ncol()));
+        }
+        let ys = ys.to_host().map_err(|e| e.to_string())?;
+        let yd = dense
+            .matmul_small(&b)
+            .and_then(|y| y.to_host())
+            .map_err(|e| e.to_string())?;
+        let (vs, vd) = (ys.buf.to_f64_vec(), yd.buf.to_f64_vec());
+        for (i, (a, d)) in vs.iter().zip(&vd).enumerate() {
+            if a.to_bits() != d.to_bits() {
+                return Err(format!(
+                    "density {density} em={em} vudf={vudf}: \
+                     spmm[{i}] = {a} != densified {d}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_transpose_is_involution() {
     forall(20, |g| {
         let n = g.usize_in(5, 200);
