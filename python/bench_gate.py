@@ -1,0 +1,116 @@
+#!/usr/bin/env python3
+"""Benchmark regression gate.
+
+Compares the machine-readable ``BENCH_<name>.json`` reports emitted by the
+bench binaries (schema: ``rust/src/harness.rs::BenchReport``) against the
+committed ``rust/benches/baseline.json`` and exits non-zero when:
+
+* a baselined bench emitted no report at all;
+* a baselined row's wall-time exceeds its baseline by more than
+  ``max_regression`` (default 25%);
+* a counter listed for a row is missing from the emitted row (renamed or
+  dropped counters fail CI exactly like a slowdown);
+* a baselined acceptance check is missing or reported ``"pass": false``;
+* a report's ``schema_version`` is one this gate does not know.
+
+Rows are matched by their ``label`` across all tables of a report (labels
+are unique within a bench). Only rows named in the baseline are gated —
+benches may add rows freely without touching the baseline.
+
+Usage:
+    python3 python/bench_gate.py rust/benches/baseline.json <json-dir>
+
+The refresh procedure for baseline numbers is documented in the header of
+``rust/benches/baseline.json`` itself.
+"""
+
+import json
+import os
+import sys
+
+KNOWN_SCHEMA_VERSIONS = {1}
+
+
+def flatten_rows(report):
+    """{label: row-object} across every table of one bench report."""
+    rows = {}
+    for table in report.get("tables", []):
+        for row in table.get("rows", []):
+            rows.setdefault(row.get("label"), row)
+    return rows
+
+
+def gate_bench(name, spec, report, max_regression, failures):
+    version = report.get("schema_version")
+    if version not in KNOWN_SCHEMA_VERSIONS:
+        failures.append(f"{name}: unknown schema_version {version!r}")
+        return
+
+    rows = flatten_rows(report)
+    for label, row_spec in spec.get("rows", {}).items():
+        row = rows.get(label)
+        if row is None:
+            failures.append(f"{name}: baselined row '{label}' missing from report")
+            continue
+        base_secs = row_spec.get("secs")
+        if base_secs is not None:
+            limit = base_secs * (1.0 + max_regression)
+            got = row.get("value")
+            if not isinstance(got, (int, float)):
+                failures.append(f"{name}/{label}: wall-time value missing")
+            elif row.get("unit") != "s":
+                failures.append(
+                    f"{name}/{label}: expected a seconds row, got unit "
+                    f"{row.get('unit')!r}"
+                )
+            elif got > limit:
+                failures.append(
+                    f"{name}/{label}: wall-time regression — {got:.3f}s > "
+                    f"{base_secs:.3f}s +{max_regression:.0%} ({limit:.3f}s)"
+                )
+            else:
+                print(f"ok   {name}/{label}: {got:.3f}s <= {limit:.3f}s")
+        for counter in row_spec.get("counters", []):
+            if counter not in row:
+                failures.append(f"{name}/{label}: counter '{counter}' missing")
+
+    checks = {c.get("name"): c.get("pass") for c in report.get("checks", [])}
+    for check in spec.get("checks", []):
+        if check not in checks:
+            failures.append(f"{name}: acceptance check '{check}' missing")
+        elif checks[check] is not True:
+            failures.append(f"{name}: acceptance check '{check}' FAILED")
+        else:
+            print(f"ok   {name}: check '{check}' passed")
+
+
+def main(argv):
+    if len(argv) != 3:
+        print(__doc__)
+        return 2
+    baseline_path, json_dir = argv[1], argv[2]
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    max_regression = baseline.get("max_regression", 0.25)
+
+    failures = []
+    for name, spec in baseline["benches"].items():
+        path = os.path.join(json_dir, f"BENCH_{name}.json")
+        if not os.path.exists(path):
+            failures.append(f"{name}: {path} was not emitted")
+            continue
+        with open(path) as f:
+            report = json.load(f)
+        gate_bench(name, spec, report, max_regression, failures)
+
+    if failures:
+        print(f"\nbench gate: {len(failures)} failure(s)", file=sys.stderr)
+        for f_ in failures:
+            print(f"  FAIL {f_}", file=sys.stderr)
+        return 1
+    print("\nbench gate: all baselined rows, counters and checks green")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -11,9 +11,10 @@
 //! thread's read-ahead (partition N+1 in flight while N computes) is also
 //! exercised.
 //!
-//! Run: `cargo bench --bench cache_ablation`
-//! (env `FM_BENCH_ITERS` overrides the hot-pass count, default 8).
-//! Hit/miss/eviction/prefetch counts come from the engine's `metrics.rs`.
+//! Run: `cargo bench --bench cache_ablation -- [--iters N] [--json-dir DIR]`
+//! (`--iters` overrides the hot-pass count, default 8).
+//! Hit/miss/eviction/prefetch counts come from the engine's `metrics.rs`;
+//! the run also emits `BENCH_cache_ablation.json` for the CI gate.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -21,7 +22,8 @@ use std::time::Instant;
 use flashmatrix::config::{EngineConfig, StorageKind, ThrottleConfig};
 use flashmatrix::datasets;
 use flashmatrix::fmr::Engine;
-use flashmatrix::util::bench::Table;
+use flashmatrix::harness::BenchReport;
+use flashmatrix::util::bench::{bench_args, Table};
 
 /// Simulated SSD bandwidth: slow enough that cache hits matter, fast
 /// enough that the bench finishes in seconds.
@@ -61,6 +63,8 @@ fn engine(label: &str, dir: &std::path::Path, cache_bytes: usize, external: bool
 fn run(eng: &Arc<Engine>, iters: usize) -> f64 {
     let cold = datasets::uniform(eng, COLD_ROWS, 16, -1.0, 1.0, 3, None).expect("cold");
     let hot = datasets::uniform(eng, HOT_ROWS, 8, -1.0, 1.0, 5, None).expect("hot");
+    // drain the buckets' standing burst: timed passes pay the full rate
+    eng.ssd.drain_bursts();
     let t0 = Instant::now();
     let mut acc = cold.sum().expect("cold pass"); // streams past the cache
     for _ in 0..iters {
@@ -71,10 +75,9 @@ fn run(eng: &Arc<Engine>, iters: usize) -> f64 {
 }
 
 fn main() {
-    let iters: usize = std::env::var("FM_BENCH_ITERS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(8);
+    let args = bench_args();
+    let iters = args.usize_or("iters", 8);
+    let json_dir = args.get_or("json-dir", ".").to_string();
     let dir = std::env::temp_dir().join(format!("fm-cache-ablation-{}", std::process::id()));
     std::fs::create_dir_all(&dir).expect("bench data dir");
 
@@ -115,15 +118,21 @@ fn main() {
     }
     t.print();
 
+    let cache_wins = cache_on_secs < cache_off_secs;
     println!(
         "\ncache-on vs cache-off: {:.2}x — {}",
         cache_off_secs / cache_on_secs,
-        if cache_on_secs < cache_off_secs {
+        if cache_wins {
             "PASS: write-through cache wins on repeated access"
         } else {
             "FAIL: cache-on did not beat cache-off"
         }
     );
+
+    let mut report = BenchReport::new("cache_ablation");
+    report.add_table(&t);
+    report.add_check("cache-on-beats-cache-off", cache_wins);
+    report.write(std::path::Path::new(&json_dir)).expect("bench json");
 
     let _ = std::fs::remove_dir_all(&dir);
 }

@@ -1,17 +1,24 @@
 //! Bench: Fig 6(a) runtime + Fig 6(b) memory — FM-IM vs FM-EM vs the
 //! MLlib-like baseline across all five algorithms.
 //!
-//! `cargo bench --bench fig6_runtime` (env FM_BENCH_N overrides rows).
+//! `cargo bench --bench fig6_runtime -- [--n N] [--json-dir DIR]`
+//! (`--n` overrides rows). Emits `BENCH_fig6_runtime.json`.
 
-use flashmatrix::harness::{self, Scale};
+use flashmatrix::harness::{self, BenchReport, Scale};
+use flashmatrix::util::bench::bench_args;
 
 fn main() {
+    let args = bench_args();
     let mut s = Scale::default();
-    if let Ok(n) = std::env::var("FM_BENCH_N") {
-        s.n = n.parse().unwrap_or(s.n);
-    }
+    s.n = args.u64_or("n", s.n);
+    let json_dir = args.get_or("json-dir", ".").to_string();
+
+    let mut report = BenchReport::new("fig6_runtime");
     let t = harness::fig6a(&s).expect("fig6a");
     t.print();
+    report.add_table(&t);
     let t = harness::fig6b(&s).expect("fig6b");
     t.print();
+    report.add_table(&t);
+    report.write(std::path::Path::new(&json_dir)).expect("bench json");
 }

@@ -1,20 +1,29 @@
 //! Bench: Fig 7 — single-thread FlashMatrix (IM and EM) vs the R-style
 //! C/FORTRAN reference implementations, plus Fig 8's thread sweep.
 //!
-//! `cargo bench --bench fig7_single_thread`
+//! `cargo bench --bench fig7_single_thread -- [--n N] [--max-threads T]
+//! [--json-dir DIR]` (`--n` overrides the Fig 7 row count). Emits
+//! `BENCH_fig7_single_thread.json`.
 
-use flashmatrix::harness::{self, Scale};
+use flashmatrix::harness::{self, BenchReport, Scale};
+use flashmatrix::util::bench::bench_args;
 
 fn main() {
+    let args = bench_args();
     let mut s = Scale::default();
-    if let Ok(n) = std::env::var("FM_BENCH_N") {
-        s.n_small = n.parse().unwrap_or(s.n_small);
-    }
-    let t = harness::fig7(&s).expect("fig7");
-    t.print();
-    let max_t = std::thread::available_parallelism()
+    s.n_small = args.u64_or("n", s.n_small);
+    let default_max = std::thread::available_parallelism()
         .map(|n| n.get() * 2)
         .unwrap_or(4);
+    let max_t = args.usize_or("max-threads", default_max);
+    let json_dir = args.get_or("json-dir", ".").to_string();
+
+    let mut report = BenchReport::new("fig7_single_thread");
+    let t = harness::fig7(&s).expect("fig7");
+    t.print();
+    report.add_table(&t);
     let t = harness::fig8(&s, max_t).expect("fig8");
     t.print();
+    report.add_table(&t);
+    report.write(std::path::Path::new(&json_dir)).expect("bench json");
 }

@@ -2,19 +2,20 @@
 //! per-element), fused vs eager pipelines, sink kinds, and the XLA vs
 //! native per-partition steps. These feed EXPERIMENTS.md §Perf.
 //!
-//! `cargo bench --bench genops_micro`
+//! `cargo bench --bench genops_micro -- [--n N] [--json-dir DIR]`
+//! (`--n` overrides the row count). Emits `BENCH_genops_micro.json`.
 
 use flashmatrix::config::EngineConfig;
 use flashmatrix::datasets;
 use flashmatrix::fmr::Engine;
-use flashmatrix::util::bench::{measure, Table};
+use flashmatrix::harness::BenchReport;
+use flashmatrix::util::bench::{bench_args, measure, Table};
 use flashmatrix::vudf::{AggOp, UnOp};
 
 fn main() {
-    let n: u64 = std::env::var("FM_BENCH_N")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(1_000_000);
+    let args = bench_args();
+    let n = args.u64_or("n", 1_000_000);
+    let json_dir = args.get_or("json-dir", ".").to_string();
     let mut t = Table::new(format!("genops microbenchmarks, {n}x8 f64"));
 
     for (label, vectorized) in [("vectorized", true), ("per-element", false)] {
@@ -89,4 +90,8 @@ fn main() {
     }
 
     t.print();
+
+    let mut report = BenchReport::new("genops_micro");
+    report.add_table(&t);
+    report.write(std::path::Path::new(&json_dir)).expect("bench json");
 }

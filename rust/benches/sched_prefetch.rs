@@ -16,8 +16,9 @@
 //! Gramian (`crossprod`), the §IV inner-product hot loop. Steal /
 //! prefetch / coalesced-read counters come from `metrics.rs`.
 //!
-//! Run: `cargo bench --bench sched_prefetch`
-//! (env `FM_BENCH_ITERS` overrides the pass count, default 3).
+//! Run: `cargo bench --bench sched_prefetch -- [--iters N] [--json-dir DIR]`
+//! (`--iters` overrides the pass count, default 3). Emits
+//! `BENCH_sched_prefetch.json` for the CI gate.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -25,7 +26,8 @@ use std::time::Instant;
 use flashmatrix::config::{EngineConfig, StorageKind, ThrottleConfig};
 use flashmatrix::datasets;
 use flashmatrix::fmr::Engine;
-use flashmatrix::util::bench::Table;
+use flashmatrix::harness::BenchReport;
+use flashmatrix::util::bench::{bench_args, Table};
 
 /// Simulated SSD bandwidth: 32 MiB of reads per pass ≈ 0.25 s, the same
 /// order as the Gramian compute, so I/O/compute overlap is visible.
@@ -58,6 +60,9 @@ fn engine(label: &str, dir: &std::path::Path, prefetch_depth: usize) -> Arc<Engi
 /// seconds (generation and its throttled writes are excluded).
 fn run(eng: &Arc<Engine>, iters: usize) -> f64 {
     let x = datasets::uniform(eng, ROWS, COLS, -1.0, 1.0, 7, None).expect("dataset");
+    // drain the buckets' standing burst: the timed passes pay the full
+    // configured rate, so the overlap comparison is deterministic
+    eng.ssd.drain_bursts();
     let t0 = Instant::now();
     let mut acc = 0.0;
     for _ in 0..iters {
@@ -69,10 +74,9 @@ fn run(eng: &Arc<Engine>, iters: usize) -> f64 {
 }
 
 fn main() {
-    let iters: usize = std::env::var("FM_BENCH_ITERS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(3);
+    let args = bench_args();
+    let iters = args.usize_or("iters", 3);
+    let json_dir = args.get_or("json-dir", ".").to_string();
     let dir = std::env::temp_dir().join(format!("fm-sched-prefetch-{}", std::process::id()));
     std::fs::create_dir_all(&dir).expect("bench data dir");
 
@@ -107,15 +111,21 @@ fn main() {
     t.print();
 
     let (off_secs, on_secs) = (secs_by_cfg[0], secs_by_cfg[1]);
+    let overlap_wins = on_secs < off_secs;
     println!(
         "\nread-ahead on vs off: {:.2}x — {}",
         off_secs / on_secs,
-        if on_secs < off_secs {
+        if overlap_wins {
             "PASS: multi-worker passes overlap I/O with compute"
         } else {
             "FAIL: read-ahead did not help the multi-worker pass"
         }
     );
+
+    let mut report = BenchReport::new("sched_prefetch");
+    report.add_table(&t);
+    report.add_check("readahead-beats-off", overlap_wins);
+    report.write(std::path::Path::new(&json_dir)).expect("bench json");
 
     let _ = std::fs::remove_dir_all(&dir);
 }

@@ -14,8 +14,9 @@
 //! configurations (the acceptance check printed at the end); per-config
 //! sub-values expose `spmm_nnz`, I/O bytes and cache evictions.
 //!
-//! Run: `cargo bench --bench spmm_pagerank`
-//! (env `FM_BENCH_NODES` overrides the node count, default 65536).
+//! Run: `cargo bench --bench spmm_pagerank -- [--nodes N] [--json-dir DIR]`
+//! (`--nodes` overrides the node count, default 65536 — the flag CI uses
+//! for its smoke run). Emits `BENCH_spmm_pagerank.json` for the CI gate.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -24,7 +25,8 @@ use flashmatrix::algs;
 use flashmatrix::config::{EngineConfig, StorageKind, ThrottleConfig};
 use flashmatrix::datasets;
 use flashmatrix::fmr::Engine;
-use flashmatrix::util::bench::Table;
+use flashmatrix::harness::BenchReport;
+use flashmatrix::util::bench::{bench_args, Table};
 
 const SSD_BPS: u64 = 512 << 20;
 const MAX_DEG: u64 = 16;
@@ -53,10 +55,9 @@ fn engine(dir: &std::path::Path, external: bool, cache_bytes: usize) -> Arc<Engi
 }
 
 fn main() {
-    let n: u64 = std::env::var("FM_BENCH_NODES")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(1 << 16);
+    let args = bench_args();
+    let n = args.u64_or("nodes", 1 << 16);
+    let json_dir = args.get_or("json-dir", ".").to_string();
     let dir = std::env::temp_dir().join(format!("fm-spmm-pagerank-{}", std::process::id()));
     std::fs::create_dir_all(&dir).expect("bench data dir");
 
@@ -114,6 +115,8 @@ fn main() {
 
     let (_, im_ranks) = &ranks[0];
     let mut ok = true;
+    let mut report = BenchReport::new("spmm_pagerank");
+    report.add_table(&t);
     for (label, r) in &ranks[1..] {
         let identical = r.len() == im_ranks.len()
             && r
@@ -129,7 +132,9 @@ fn main() {
                 "FAIL: ranks diverged"
             }
         );
+        report.add_check(format!("bit-identical: {label}"), identical);
     }
+    report.write(std::path::Path::new(&json_dir)).expect("bench json");
     assert!(ok, "out-of-core PageRank must be bit-identical to in-memory");
 
     let _ = std::fs::remove_dir_all(&dir);

@@ -16,8 +16,9 @@
 //! unoptimized one, or if any configuration's results are not
 //! bit-identical to the all-off baseline.
 //!
-//! Run: `cargo bench --bench strip_fusion`
-//! (env `FM_BENCH_ITERS` overrides the pass count, default 3).
+//! Run: `cargo bench --bench strip_fusion -- [--iters N] [--json-dir DIR]`
+//! (`--iters` overrides the pass count, default 3). Emits
+//! `BENCH_strip_fusion.json` for the CI gate.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -26,8 +27,9 @@ use flashmatrix::config::EngineConfig;
 use flashmatrix::datasets;
 use flashmatrix::dtype::Scalar;
 use flashmatrix::fmr::{Engine, FmMatrix};
+use flashmatrix::harness::BenchReport;
 use flashmatrix::matrix::{HostMat, Partitioning};
-use flashmatrix::util::bench::Table;
+use flashmatrix::util::bench::{bench_args, Table};
 use flashmatrix::vudf::BinOp;
 
 const ROWS: u64 = 1 << 19; // x 8 cols x 8 B = 32 MiB in-mem
@@ -63,10 +65,9 @@ fn strips_per_pass(cpu_part_bytes: usize) -> usize {
 }
 
 fn main() {
-    let iters: usize = std::env::var("FM_BENCH_ITERS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(3);
+    let args = bench_args();
+    let iters = args.usize_or("iters", 3);
+    let json_dir = args.get_or("json-dir", ".").to_string();
 
     let mut t = Table::new(format!(
         "strip-fusion ablation: {iters} Sapply->MapplyScalar->RowAgg passes \
@@ -144,6 +145,12 @@ fn main() {
             "FAIL: configurations disagree on results"
         }
     );
+    let mut report = BenchReport::new("strip_fusion");
+    report.add_table(&t);
+    report.add_check("fewer-allocs-when-optimized", fewer);
+    report.add_check("bit-identical-across-configs", bitexact);
+    report.write(std::path::Path::new(&json_dir)).expect("bench json");
+
     // fail loudly: automation running this bench must see the regression
     assert!(
         fewer && bitexact,

@@ -1,0 +1,169 @@
+//! Bench: asynchronous write-back vs synchronous write-through (§III-B3,
+//! the write half of the paper's I/O/compute overlap).
+//!
+//! PR 1/2 overlapped only the *read* side of out-of-core passes (cache +
+//! read-ahead); every target-partition write was still a synchronous
+//! write-through that stalled the worker mid-pass. With write-back on,
+//! workers hand finished target partitions to the cache's background
+//! writer thread and immediately claim the next unit, so the throttled
+//! `pwrite` runs while the next partition is being read and computed.
+//! The simulated SSD charges reads and writes to **separate** token
+//! buckets (full duplex, like an SSD array), so a read+write pass costs
+//! roughly `read + write` with write-through but `max(read, write)` with
+//! write-back — the deterministic win this bench pins.
+//!
+//! Layout: an EM map pass (`sq()` materialize) over a 32 MiB matrix with
+//! an 8 MiB partition cache (every pass streams cold) and a symmetric
+//! bandwidth throttle. Read-ahead is OFF to isolate the write lever:
+//! with it on, the prefetch thread already hides reads behind the
+//! synchronous writes, so both configurations pipeline and the ablation
+//! would measure nothing (`benches/sched_prefetch.rs` ablates the read
+//! half on its own). The timed region covers the materialize passes
+//! including each pass's flush barrier, so write-back gets no credit for
+//! work it merely deferred. Acceptance (asserted, and recorded in
+//! `BENCH_writeback.json` for the CI regression gate):
+//! * write-back strictly faster than write-through, and
+//! * the two target matrices **bit-identical**.
+//!
+//! Run: `cargo bench --bench writeback -- [--iters N] [--json-dir DIR]`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use flashmatrix::config::{EngineConfig, StorageKind, ThrottleConfig};
+use flashmatrix::datasets;
+use flashmatrix::fmr::Engine;
+use flashmatrix::harness::BenchReport;
+use flashmatrix::matrix::HostMat;
+use flashmatrix::util::bench::{bench_args, Table};
+
+/// Symmetric read/write budget: 32 MiB of reads ≈ 0.125 s per pass, the
+/// same again for writes — overlap halves the pass.
+const SSD_BPS: u64 = 256 << 20;
+/// Far smaller than the matrix: every pass streams cold (§III-B3).
+const CACHE_BYTES: usize = 8 << 20;
+const ROWS: u64 = 1 << 19; // x 8 cols x 8 B = 32 MiB, 8 io partitions
+const COLS: u64 = 8;
+
+fn engine(label: &str, dir: &std::path::Path, writeback: bool) -> Arc<Engine> {
+    Engine::new(EngineConfig {
+        storage: StorageKind::External,
+        data_dir: dir.join(label.replace(' ', "-")),
+        em_cache_bytes: CACHE_BYTES,
+        prefetch_depth: 0, // isolate the write half (see module docs)
+        writeback,
+        throttle: Some(ThrottleConfig {
+            read_bytes_per_sec: SSD_BPS,
+            write_bytes_per_sec: SSD_BPS,
+        }),
+        threads: 1, // bit-exact targets across configurations
+        xla_dispatch: false,
+        ..EngineConfig::default()
+    })
+    .expect("engine")
+}
+
+/// `iters` map-materialize passes (read 32 MiB + write 32 MiB each);
+/// returns (timed seconds, final target as a host matrix for the
+/// bit-exactness check — read back untimed).
+fn run(eng: &Arc<Engine>, iters: usize) -> (f64, HostMat) {
+    let x = datasets::uniform(eng, ROWS, COLS, -1.0, 1.0, 7, None).expect("dataset");
+    if let Some(c) = &eng.cache {
+        c.clear(); // drop generation's write-through copies: start cold
+    }
+    // drain the token buckets' standing burst so every timed byte pays
+    // the configured rate — the overlap win is deterministic, not noise
+    eng.ssd.drain_bursts();
+    let mut last = None;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        // one EM pass: stream x, write the sq() target (flush barrier
+        // included — write-back must pay for what it deferred)
+        last = Some(x.sq().and_then(|y| y.materialize()).expect("map pass"));
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let host = last.expect("at least one iter").to_host().expect("readback");
+    (secs, host)
+}
+
+fn main() {
+    let args = bench_args();
+    let iters = args.usize_or("iters", 3);
+    let json_dir = args.get_or("json-dir", ".").to_string();
+    let dir = std::env::temp_dir().join(format!("fm-writeback-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("bench data dir");
+
+    let mut t = Table::new(format!(
+        "§III-B3 write-back overlap: {iters} sq() materialize passes over \
+         {} MiB EM (cache {} MiB, SSD {} MiB/s each way)",
+        (ROWS * COLS * 8) >> 20,
+        CACHE_BYTES >> 20,
+        SSD_BPS >> 20
+    ));
+
+    let mut secs_by_cfg = Vec::new();
+    let mut targets: Vec<HostMat> = Vec::new();
+    for (label, writeback) in [("write-through", false), ("write-back", true)] {
+        let eng = engine(label, &dir, writeback);
+        eng.metrics.reset();
+        let (secs, host) = run(&eng, iters);
+        let m = eng.metrics.snapshot();
+        if writeback {
+            assert!(m.wb_enqueued > 0, "write-back config never queued a write");
+        } else {
+            assert_eq!(m.wb_enqueued, 0, "write-through config must not queue");
+        }
+        secs_by_cfg.push(secs);
+        targets.push(host);
+        t.add_with(
+            label,
+            secs,
+            "s",
+            vec![
+                ("wb_enqueued".into(), m.wb_enqueued as f64),
+                ("wb_coalesced".into(), m.wb_coalesced as f64),
+                ("wb_flush_waits".into(), m.wb_flush_waits as f64),
+                ("wb_discarded".into(), m.wb_discarded as f64),
+                ("read_gb".into(), m.io_read_bytes as f64 / 1e9),
+                ("write_gb".into(), m.io_write_bytes as f64 / 1e9),
+                ("prefetches".into(), m.prefetch_issued as f64),
+            ],
+        );
+    }
+    t.print();
+
+    let (wt_secs, wb_secs) = (secs_by_cfg[0], secs_by_cfg[1]);
+    let faster = wb_secs < wt_secs;
+    let bitexact = targets[0] == targets[1];
+    println!(
+        "\nwrite-back vs write-through: {:.2}x — {}",
+        wt_secs / wb_secs,
+        if faster {
+            "PASS: writes overlap the next partition's read/compute"
+        } else {
+            "FAIL: write-back did not beat write-through"
+        }
+    );
+    println!(
+        "targets {}",
+        if bitexact {
+            "PASS: bit-identical"
+        } else {
+            "FAIL: write-back changed the result"
+        }
+    );
+
+    let mut report = BenchReport::new("writeback");
+    report.add_table(&t);
+    report.add_check("writeback-strictly-faster", faster);
+    report.add_check("bit-identical-target", bitexact);
+    report.write(std::path::Path::new(&json_dir)).expect("bench json");
+
+    let _ = std::fs::remove_dir_all(&dir);
+    // fail loudly after the report is written: CI records the numbers
+    // either way, and the gate also checks the `checks` array
+    assert!(
+        faster && bitexact,
+        "write-back acceptance failed (faster {faster}, bitexact {bitexact})"
+    );
+}

@@ -97,6 +97,22 @@ pub struct EngineConfig {
     /// the cache's single-flight registry keeps that double-read-free at
     /// any thread count.
     pub prefetch_depth: usize,
+    /// Asynchronous **write-back** of EM target partitions (§III-B3, the
+    /// write half of the I/O/compute overlap): a pass worker hands a
+    /// finished target partition to the cache's background writer thread
+    /// and immediately claims the next unit instead of stalling on the
+    /// (throttled) `pwrite`. Every pass ends with a flush barrier
+    /// (success) or a dirty discard (abort), so results are bit-identical
+    /// to synchronous write-through and a doomed pass leaves no partial
+    /// partitions on disk. Requires the partition cache
+    /// (`em_cache_bytes > 0`) to host the writer; off (or no cache) =
+    /// write-through. Ablated by `benches/writeback.rs`.
+    pub writeback: bool,
+    /// Bound in bytes on dirty (queued + in-flight) write-back partitions.
+    /// An enqueue past the bound blocks the worker until the writer
+    /// drains (`Metrics::wb_flush_waits`), keeping write-back memory as
+    /// bounded as the read-ahead queue keeps prefetch memory.
+    pub writeback_queue_bytes: usize,
 }
 
 impl Default for EngineConfig {
@@ -124,6 +140,8 @@ impl Default for EngineConfig {
             em_cache_cols: 0,
             em_cache_bytes: 128 << 20,
             prefetch_depth: 2,
+            writeback: true,
+            writeback_queue_bytes: 32 << 20,
         }
     }
 }
@@ -142,6 +160,7 @@ impl EngineConfig {
             inplace_ops: false,
             peephole_fuse: false,
             xla_dispatch: false,
+            writeback: false,
             ..Default::default()
         }
     }
@@ -178,6 +197,11 @@ impl EngineConfig {
         }
         if self.numa_nodes == 0 {
             return Err(crate::FmError::Config("numa_nodes must be > 0".into()));
+        }
+        if self.writeback && self.writeback_queue_bytes == 0 {
+            return Err(crate::FmError::Config(
+                "writeback requires writeback_queue_bytes > 0".into(),
+            ));
         }
         Ok(())
     }
@@ -223,6 +247,21 @@ mod tests {
         assert!(c.inplace_ops && c.peephole_fuse);
         let m = EngineConfig::mllib_like();
         assert!(!m.inplace_ops && !m.peephole_fuse);
+    }
+
+    #[test]
+    fn writeback_defaults_and_validation() {
+        let c = EngineConfig::default();
+        assert!(c.writeback && c.writeback_queue_bytes > 0);
+        c.validate().unwrap();
+        // the eager baseline stays synchronous write-through
+        assert!(!EngineConfig::mllib_like().writeback);
+        let bad = EngineConfig {
+            writeback: true,
+            writeback_queue_bytes: 0,
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -30,6 +30,13 @@
 //!   so I/O overlaps compute instead of alternating — deterministic
 //!   ownership (range scheduling) plus the cache's single-flight registry
 //!   make that safe with any worker count.
+//! * `writeback` / `writeback_queue_bytes` act through the target writes
+//!   (the other half of §III-B3's I/O/compute overlap): workers hand
+//!   finished EM target partitions to the cache's background writer and
+//!   immediately claim the next unit; the pass ends with a flush barrier
+//!   (success) or a dirty discard (abort via the scheduler's abort flag),
+//!   keeping results bit-identical to synchronous write-through —
+//!   `benches/writeback.rs` measures the overlap.
 
 pub mod pipeline;
 pub mod sched;
@@ -151,16 +158,28 @@ pub fn run_pass_opts(
         let parts = Partitioning::with_io_rows(nrow, t.ncol(), pass_io);
         let b = match storage {
             StorageKind::InMem => DenseBuilder::new_mem(t.dtype(), parts, ctx.pool)?,
-            StorageKind::External => DenseBuilder::new_ext(
-                t.dtype(),
-                parts,
-                &ctx.config.data_dir,
-                None,
-                ctx.config.em_cache_cols as u64,
-                Arc::clone(ctx.ssd),
-                Arc::clone(ctx.metrics),
-                if cache_resident { ctx.cache.clone() } else { None },
-            )?,
+            StorageKind::External => {
+                let mut b = DenseBuilder::new_ext(
+                    t.dtype(),
+                    parts,
+                    &ctx.config.data_dir,
+                    None,
+                    ctx.config.em_cache_cols as u64,
+                    Arc::clone(ctx.ssd),
+                    Arc::clone(ctx.metrics),
+                    if cache_resident { ctx.cache.clone() } else { None },
+                )?;
+                // §III-B3 write half: queue finished target partitions to
+                // the cache's background writer so the (throttled) pwrite
+                // overlaps the next partition's read/compute. The pass
+                // ends with a flush barrier or a dirty discard below.
+                if ctx.config.writeback {
+                    if let Some(c) = &ctx.cache {
+                        b.enable_writeback(Arc::clone(c));
+                    }
+                }
+                b
+            }
         };
         builders.push(b);
     }
@@ -269,6 +288,26 @@ pub fn run_pass_opts(
             MatrixData::Dense(d) => d.release_prefetch_pins(),
             MatrixData::Sparse(sp) => sp.release_prefetch_pins(),
             _ => {}
+        }
+    }
+
+    // ---- write-back barrier (§III-B3): a pass either flushes every
+    // asynchronously queued target write (success — the file is
+    // authoritative before anyone can read the finished matrices, so
+    // write-back stays bit-identical to write-through) or discards them
+    // (abort — a doomed pass leaves no partial partitions on disk).
+    if sched.aborted() {
+        for b in &builders {
+            b.discard_writes();
+        }
+    } else {
+        for b in &builders {
+            if let Err(e) = b.flush_writes() {
+                let mut fe = first_err.lock().unwrap();
+                if fe.is_none() {
+                    *fe = Some(e);
+                }
+            }
         }
     }
 

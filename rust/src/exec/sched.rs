@@ -22,7 +22,11 @@
 //!
 //! The scheduler also carries the pass's abort flag: a worker that fails
 //! flips it and every other worker stops claiming instead of processing
-//! (and writing) the rest of the pass.
+//! (and writing) the rest of the pass. The flag doubles as the write-back
+//! pipeline's abort signal — `exec::run_pass` checks it after the worker
+//! scope and *discards* the aborted pass's queued target writes
+//! ([`crate::matrix::cache::PartitionCache::discard_writes`]) instead of
+//! flushing them, so a doomed pass leaves no partial partitions on disk.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -165,7 +169,9 @@ impl RangeScheduler {
         StealOutcome::Empty
     }
 
-    /// Signal pass failure: every worker's next claim returns `None`.
+    /// Signal pass failure: every worker's next claim returns `None`, and
+    /// the pass-end barrier discards (rather than flushes) the pass's
+    /// queued write-back partitions.
     pub fn abort(&self) {
         self.abort.store(true, Ordering::Relaxed);
     }

@@ -42,6 +42,13 @@ impl Engine {
             Some(PartitionCache::new(
                 config.em_cache_bytes,
                 config.prefetch_depth,
+                // the cache hosts the write-back writer thread; 0 keeps
+                // the write path synchronous write-through
+                if config.writeback {
+                    config.writeback_queue_bytes
+                } else {
+                    0
+                },
                 Arc::clone(&metrics),
             ))
         } else {

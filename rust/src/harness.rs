@@ -7,6 +7,7 @@
 //! reproduction target, not the paper's absolute numbers (48-core NUMA +
 //! 24-SSD array vs this machine — DESIGN.md §Substitutions).
 
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -16,6 +17,96 @@ use crate::config::{EngineConfig, StorageKind, ThrottleConfig};
 use crate::error::Result;
 use crate::fmr::{Engine, FmMatrix};
 use crate::util::bench::Table;
+use crate::util::json::{obj, Json};
+
+// ---------------------------------------------------------------------------
+// Machine-readable bench reports (the CI perf trajectory)
+// ---------------------------------------------------------------------------
+
+/// Version of the `BENCH_<name>.json` schema below. Bump when the shape
+/// changes; the CI gate (`python/bench_gate.py`) refuses versions it does
+/// not know.
+pub const BENCH_SCHEMA_VERSION: u64 = 1;
+
+/// One bench binary's machine-readable report, written as
+/// `BENCH_<name>.json`. **This struct is the schema** — every bench and
+/// the CI regression gate share it:
+///
+/// ```json
+/// {
+///   "schema_version": 1,
+///   "bench": "writeback",
+///   "tables": [            // one entry per printed Table, same order
+///     { "title": "...",
+///       "rows": [ { "label": "write-back", "value": 0.41, "unit": "s",
+///                   "wb_enqueued": 24.0, ... } ] }   // extras inline
+///   ],
+///   "checks": [            // the bench's own pass/fail acceptance checks
+///     { "name": "writeback-strictly-faster", "pass": true }
+///   ]
+/// }
+/// ```
+///
+/// Wall-times live in rows with `"unit": "s"`; engine counters ride as
+/// extra numeric fields of the same row. The committed
+/// `rust/benches/baseline.json` references rows by `label` and lists the
+/// counter fields that must stay present — a renamed counter fails CI
+/// just like a wall-time regression.
+pub struct BenchReport {
+    name: String,
+    tables: Vec<Json>,
+    checks: Vec<(String, bool)>,
+}
+
+impl BenchReport {
+    pub fn new(name: impl Into<String>) -> BenchReport {
+        BenchReport {
+            name: name.into(),
+            tables: Vec::new(),
+            checks: Vec::new(),
+        }
+    }
+
+    /// Record one results table (call in print order).
+    pub fn add_table(&mut self, t: &Table) {
+        self.tables.push(t.to_json());
+    }
+
+    /// Record one named acceptance check (the PASS/FAIL lines the bench
+    /// prints — machine-readable here so CI can gate on them).
+    pub fn add_check(&mut self, name: impl Into<String>, pass: bool) {
+        self.checks.push((name.into(), pass));
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("schema_version", Json::from(BENCH_SCHEMA_VERSION)),
+            ("bench", Json::from(self.name.clone())),
+            ("tables", Json::Arr(self.tables.clone())),
+            (
+                "checks",
+                Json::Arr(
+                    self.checks
+                        .iter()
+                        .map(|(n, p)| {
+                            obj(vec![("name", Json::from(n.clone())), ("pass", Json::Bool(*p))])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Write `BENCH_<name>.json` under `dir` (created if missing) and
+    /// return the path. Benches route `dir` from their `--json-dir` flag.
+    pub fn write(&self, dir: &Path) -> std::io::Result<PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        std::fs::write(&path, self.to_json().to_string())?;
+        println!("wrote {}", path.display());
+        Ok(path)
+    }
+}
 
 /// Workload scale knobs (defaults sized for a 2-core dev box).
 #[derive(Clone, Debug)]
@@ -508,6 +599,59 @@ pub fn sparse_workloads(s: &Scale) -> Result<Table> {
                 ("beta0".into(), fit.beta[0]),
                 ("deviance".into(), *fit.deviances.last().unwrap()),
                 ("read_gb".into(), m.io_read_bytes as f64 / 1e9),
+            ],
+        );
+    }
+    Ok(t)
+}
+
+/// Write-back ablation rows (§III-B3, the write half of the I/O/compute
+/// overlap): the same EM map-materialize workload under synchronous
+/// write-through vs the asynchronous write-back pipeline, with a
+/// partition cache far smaller than the matrix (cold reads) and the
+/// deterministic SSD throttle. With write-back on, the pass worker's
+/// throttled reads overlap the background writer's throttled writes, so
+/// the pass approaches `max(read, write)` instead of `read + write`.
+/// Rows carry the `wb_*` counters; `benches/writeback.rs` is the full
+/// ablation with the strict wall-time and bit-exactness checks.
+pub fn writeback_overlap(s: &Scale) -> Result<Table> {
+    let n = s.n.max(1 << 18);
+    let mut t = Table::new(format!(
+        "Write-back overlap: EM sq() materialize, {n}x8, SSD {} MiB/s",
+        s.ssd_bps >> 20
+    ));
+    for (label, writeback) in [("write-through", false), ("write-back", true)] {
+        let mut cfg = config_for(s, Mode::FmEm, s.threads);
+        // the cache must exist to host the writer thread, but stay far
+        // smaller than the matrix so every pass re-streams cold;
+        // read-ahead off to isolate the write lever (with it on, the
+        // prefetch thread already hides reads behind synchronous writes)
+        cfg.em_cache_bytes = 8 << 20;
+        cfg.prefetch_depth = 0;
+        cfg.writeback = writeback;
+        let eng = Engine::new(cfg)?;
+        let x = crate::datasets::uniform(&eng, n, 8, -1.0, 1.0, 7, None)?;
+        if let Some(c) = &eng.cache {
+            c.clear(); // generation's write-through copies: start cold
+        }
+        eng.ssd.drain_bursts(); // timed bytes pay the full rate
+        eng.metrics.reset();
+        let t0 = Instant::now();
+        let y = x.sq()?.materialize()?;
+        let secs = t0.elapsed().as_secs_f64();
+        std::hint::black_box(y.nrow());
+        let m = eng.metrics.snapshot();
+        t.add_with(
+            label,
+            secs,
+            "s",
+            vec![
+                ("wb_enqueued".into(), m.wb_enqueued as f64),
+                ("wb_coalesced".into(), m.wb_coalesced as f64),
+                ("wb_flush_waits".into(), m.wb_flush_waits as f64),
+                ("wb_discarded".into(), m.wb_discarded as f64),
+                ("read_gb".into(), m.io_read_bytes as f64 / 1e9),
+                ("write_gb".into(), m.io_write_bytes as f64 / 1e9),
             ],
         );
     }

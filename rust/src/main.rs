@@ -3,7 +3,7 @@
 //! ```text
 //! flashmatrix run <alg>      [--n N] [--p P] [--k K] [--iters I] [--em]
 //!                            [--threads T] [--no-xla] [--ssd-bps B]
-//! flashmatrix bench <fig>    fig6a|fig6b|fig7|fig8|fig9|fig10|fig11|fig12|table4|sparse|all
+//! flashmatrix bench <fig>    fig6a|fig6b|fig7|fig8|fig9|fig10|fig11|fig12|table4|sparse|writeback|all
 //! flashmatrix artifacts      # list the AOT artifact manifest
 //! flashmatrix info           # engine / environment summary
 //! ```
@@ -145,6 +145,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         "fig12" => tables.push(harness::fig12(&s)?),
         "table4" => tables.push(harness::table4(&s)?),
         "sparse" => tables.push(harness::sparse_workloads(&s)?),
+        "writeback" => tables.push(harness::writeback_overlap(&s)?),
         "all" => {
             tables.push(harness::fig6a(&s)?);
             tables.push(harness::fig6b(&s)?);
@@ -157,6 +158,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
             tables.push(harness::fig12(&s)?);
             tables.push(harness::table4(&s)?);
             tables.push(harness::sparse_workloads(&s)?);
+            tables.push(harness::writeback_overlap(&s)?);
         }
         other => {
             return Err(flashmatrix::FmError::Config(format!(

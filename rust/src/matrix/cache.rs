@@ -1,4 +1,4 @@
-//! Write-through matrix cache + async partition read-ahead (paper §III-B3).
+//! Matrix cache + async partition read-ahead and write-back (§III-B3).
 //!
 //! SAFS deliberately bypasses the OS page cache (a streaming scan would
 //! only evict useful pages), so FlashMatrix supplies its **own** memory
@@ -26,6 +26,22 @@
 //!   serves itself from the cache. This is what makes multi-worker
 //!   read-ahead safe — for any partition the cache can admit, a prefetch
 //!   can never cause a double read ([`PartitionCache::get_or_read`]).
+//! * **Async write-back** — the write-side mirror of the prefetch
+//!   thread: a pass worker hands a finished target partition to the
+//!   background writer ([`PartitionCache::enqueue_write`]) and claims
+//!   its next unit immediately, so the (throttled) `pwrite` overlaps the
+//!   next partition's read and compute instead of stalling the worker.
+//!   Dirty bytes are bounded (`writeback_queue_bytes`; a full queue
+//!   blocks the enqueuer — [`crate::metrics::Metrics::wb_flush_waits`]),
+//!   a re-write of a still-queued partition coalesces into one file
+//!   write, and every pass ends with a **flush barrier** on success
+//!   ([`PartitionCache::flush_writes`]) or a **dirty discard** on abort
+//!   ([`PartitionCache::discard_writes`]) — so a finished matrix's file
+//!   is authoritative before anyone can read it (results bit-identical
+//!   to synchronous write-through) and a doomed pass leaves no partial
+//!   partitions on disk. The invariant the exec layer maintains: no
+//!   reader holds a finished matrix before its creating pass's flush
+//!   barrier completed.
 //!
 //! Capacity comes from [`crate::config::EngineConfig::em_cache_bytes`]
 //! (0 disables the cache — the Fig 11-style ablation knob, exercised by
@@ -40,12 +56,12 @@
 //! (they would only evict reusable partitions; see
 //! [`crate::fmr::engine::Engine::materialize_intermediate`]).
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, SyncSender};
 use std::sync::{Arc, Condvar, Mutex};
 
-use crate::error::Result;
+use crate::error::{FmError, Result};
 use crate::metrics::Metrics;
 use crate::storage::FileStore;
 
@@ -85,6 +101,91 @@ struct PrefetchReq {
     epoch: u64,
 }
 
+/// One queued asynchronous partition write. Holding the `Arc<FileStore>`
+/// keeps the backing file alive (and un-unlinked) until the write lands
+/// or the entry is discarded, even if the builder is dropped first.
+struct WbEntry {
+    store: Arc<FileStore>,
+    off: u64,
+    bytes: Arc<Vec<u8>>,
+}
+
+/// Dirty-partition state shared between enqueuers, the flush/discard
+/// barriers and the background writer thread.
+struct WbState {
+    /// Write order (FIFO — the sequential pattern the SSD layer likes).
+    /// Invariant: every key here has exactly one entry in `pending`.
+    queue: VecDeque<(u64, usize)>,
+    /// Queued writes by key; a re-enqueue of a queued key replaces the
+    /// bytes in place (coalescing) instead of writing the file twice.
+    pending: HashMap<(u64, usize), WbEntry>,
+    /// Bytes held by queued + in-flight entries (the bounded dirty set).
+    bytes: usize,
+    /// Key the writer thread is writing right now, if any.
+    inflight: Option<(u64, usize)>,
+    /// First write error per matrix id since that matrix's last flush.
+    /// Keyed so one pass's failure can never surface through another
+    /// pass's flush barrier (or survive its own discard).
+    errs: HashMap<u64, FmError>,
+    shutdown: bool,
+}
+
+/// The write-back pipeline: bounded dirty set + background writer. Held
+/// by the cache behind an `Arc` the writer thread shares (no cycle: the
+/// thread never holds the cache itself).
+struct WriteBack {
+    state: Mutex<WbState>,
+    /// Writer wake-ups (new work, shutdown).
+    work_cv: Condvar,
+    /// Waiter wake-ups (capacity freed, a write finished).
+    done_cv: Condvar,
+    /// Dirty-capacity bound in bytes (`writeback_queue_bytes`).
+    capacity: usize,
+}
+
+impl WriteBack {
+    /// The writer thread: drain the queue FIFO, one (throttled) positioned
+    /// write at a time, waking flush/capacity waiters after each. On
+    /// shutdown the remaining queue is drained first so an engine dropped
+    /// with clean-pass writes still pending loses nothing.
+    fn writer_loop(wb: Arc<WriteBack>) {
+        loop {
+            let (key, entry) = {
+                let mut st = wb.state.lock().unwrap();
+                loop {
+                    if let Some(key) = st.queue.pop_front() {
+                        let entry = st
+                            .pending
+                            .remove(&key)
+                            .expect("queued write-back key must have bytes");
+                        st.inflight = Some(key);
+                        break (key, entry);
+                    }
+                    if st.shutdown {
+                        return;
+                    }
+                    st = wb.work_cv.wait(st).unwrap();
+                }
+            };
+            let res = entry.store.write_at(entry.off, &entry.bytes);
+            let len = entry.bytes.len();
+            // release the entry (and its FileStore Arc) BEFORE waking the
+            // barriers: when a flush/discard observes inflight == None,
+            // the writer must hold no reference to the matrix's backing
+            // file — an aborted pass unlinks it right after
+            drop(entry);
+            let mut st = wb.state.lock().unwrap();
+            st.inflight = None;
+            st.bytes -= len;
+            if let Err(e) = res {
+                st.errs.entry(key.0).or_insert(e);
+            }
+            drop(st);
+            wb.done_cv.notify_all();
+        }
+    }
+}
+
 /// Bounded write-through cache of I/O-level partitions (§III-B3).
 ///
 /// Shared by every external-memory matrix of one engine; each matrix owns
@@ -103,6 +204,9 @@ pub struct PartitionCache {
     /// Read-ahead generation: bumped when a pass ends so its leftover
     /// prefetch requests cannot pin entries no consumer will release.
     epoch: AtomicU64,
+    /// Asynchronous write-back pipeline; `None` = synchronous
+    /// write-through (the `writeback` knob off, or queue sized 0).
+    wb: Option<Arc<WriteBack>>,
 }
 
 /// RAII registration in the single-flight registry: the leader's slot is
@@ -121,10 +225,13 @@ impl Drop for InflightGuard<'_> {
 
 impl PartitionCache {
     /// A cache of `capacity` bytes. `prefetch_depth > 0` also starts the
-    /// read-ahead thread with a request queue of that depth.
+    /// read-ahead thread with a request queue of that depth;
+    /// `writeback_queue_bytes > 0` starts the write-back writer thread
+    /// with that dirty-capacity bound (0 = synchronous write-through).
     pub fn new(
         capacity: usize,
         prefetch_depth: usize,
+        writeback_queue_bytes: usize,
         metrics: Arc<Metrics>,
     ) -> Arc<PartitionCache> {
         let (tx, rx) = if prefetch_depth > 0 {
@@ -132,6 +239,34 @@ impl PartitionCache {
             (Some(tx), Some(rx))
         } else {
             (None, None)
+        };
+        let wb = if writeback_queue_bytes > 0 {
+            let wb = Arc::new(WriteBack {
+                state: Mutex::new(WbState {
+                    queue: VecDeque::new(),
+                    pending: HashMap::new(),
+                    bytes: 0,
+                    inflight: None,
+                    errs: HashMap::new(),
+                    shutdown: false,
+                }),
+                work_cv: Condvar::new(),
+                done_cv: Condvar::new(),
+                capacity: writeback_queue_bytes,
+            });
+            let thread_wb = Arc::clone(&wb);
+            // no writer thread -> no write-back: enqueue_write returning
+            // false makes every builder fall back to synchronous
+            // write-through instead of queueing writes nothing drains
+            // (a lost prefetch thread only costs read-ahead; a lost
+            // writer would deadlock the flush barrier)
+            std::thread::Builder::new()
+                .name("fm-writeback".into())
+                .spawn(move || WriteBack::writer_loop(thread_wb))
+                .ok()
+                .map(|_| wb)
+        } else {
+            None
         };
         let cache = Arc::new(PartitionCache {
             inner: Mutex::new(Inner {
@@ -147,6 +282,7 @@ impl PartitionCache {
             inflight: Mutex::new(HashSet::new()),
             inflight_cv: Condvar::new(),
             epoch: AtomicU64::new(0),
+            wb,
         });
         if let Some(rx) = rx {
             // The thread owns only the receiver; queued requests hold the
@@ -378,8 +514,10 @@ impl PartitionCache {
     }
 
     /// [`insert`](Self::insert) for bytes already behind an `Arc` (the
-    /// single-flight leader shares its buffer with the cache).
-    fn insert_shared(&self, matrix_id: u64, part: usize, bytes: Arc<Vec<u8>>) {
+    /// single-flight leader shares its buffer with the cache; a
+    /// write-back builder shares one buffer between the dirty queue and
+    /// the cache instead of copying twice).
+    pub(crate) fn insert_shared(&self, matrix_id: u64, part: usize, bytes: Arc<Vec<u8>>) {
         self.insert_entry(matrix_id, part, bytes, None);
     }
 
@@ -598,6 +736,167 @@ impl PartitionCache {
                 .fetch_add(1, Ordering::Relaxed);
         }
     }
+
+    // -- asynchronous write-back (§III-B3, the write half) ------------------
+
+    /// Whether this cache hosts a write-back writer thread.
+    pub fn writeback_enabled(&self) -> bool {
+        self.wb.is_some()
+    }
+
+    /// Allocate a key namespace for a write-back-only producer (a builder
+    /// whose matrix is *not* cache-resident still needs unique dirty
+    /// keys). Shares the counter with
+    /// [`alloc_matrix_id`](Self::alloc_matrix_id) but does not register
+    /// the id as live — no cache entries, no prefetch admission, nothing
+    /// to clean up.
+    pub fn alloc_wb_id(&self) -> u64 {
+        self.next_matrix_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Queue an asynchronous write of one target partition: `bytes` land
+    /// at `off` in `store` from the background writer thread. Returns
+    /// `false` when write-back is disabled (the caller writes through
+    /// synchronously instead).
+    ///
+    /// Blocks while the dirty set is at capacity
+    /// (`Metrics::wb_flush_waits`) — back-pressure, mirroring the
+    /// read-ahead queue's bound. A re-enqueue of a still-queued key
+    /// replaces its bytes in place (`Metrics::wb_coalesced`): one file
+    /// write, newest bytes. Ordering per key is preserved — a key whose
+    /// write is already in flight is re-queued behind it, so the newest
+    /// bytes always land last.
+    pub fn enqueue_write(
+        &self,
+        store: &Arc<FileStore>,
+        matrix_id: u64,
+        part: usize,
+        off: u64,
+        bytes: Arc<Vec<u8>>,
+    ) -> bool {
+        let Some(wb) = &self.wb else { return false };
+        let key = (matrix_id, part);
+        let len = bytes.len();
+        let mut g = wb.state.lock().unwrap();
+        {
+            let st = &mut *g;
+            if let Some(e) = st.pending.get_mut(&key) {
+                st.bytes = st.bytes - e.bytes.len() + len;
+                e.off = off;
+                e.bytes = bytes;
+                self.metrics.wb_coalesced.fetch_add(1, Ordering::Relaxed);
+                return true;
+            }
+        }
+        // bounded dirty capacity: wait for the writer to drain. A single
+        // entry larger than the whole bound is admitted alone (when the
+        // queue is otherwise empty) rather than deadlocking.
+        let mut waited = false;
+        while g.bytes > 0 && g.bytes + len > wb.capacity {
+            if !waited {
+                waited = true;
+                self.metrics.wb_flush_waits.fetch_add(1, Ordering::Relaxed);
+            }
+            g = wb.done_cv.wait(g).unwrap();
+        }
+        g.bytes += len;
+        g.pending.insert(
+            key,
+            WbEntry {
+                store: Arc::clone(store),
+                off,
+                bytes,
+            },
+        );
+        g.queue.push_back(key);
+        drop(g);
+        self.metrics.wb_enqueued.fetch_add(1, Ordering::Relaxed);
+        wb.work_cv.notify_one();
+        true
+    }
+
+    /// Pass-end flush barrier for one matrix: block until none of its
+    /// writes are queued or in flight, then surface the matrix's first
+    /// write error recorded since its last flush (errors are keyed per
+    /// matrix, so a concurrent pass's failure never surfaces here). The
+    /// exec layer calls this on every successful pass's builders *before*
+    /// freezing them, which is what keeps write-back results
+    /// bit-identical to write-through — the file is authoritative again
+    /// before any reader can exist.
+    pub fn flush_writes(&self, matrix_id: u64) -> Result<()> {
+        let Some(wb) = &self.wb else { return Ok(()) };
+        let mut g = wb.state.lock().unwrap();
+        let mut waited = false;
+        while g.pending.keys().any(|k| k.0 == matrix_id)
+            || g.inflight.map(|k| k.0 == matrix_id).unwrap_or(false)
+        {
+            if !waited {
+                waited = true;
+                self.metrics.wb_flush_waits.fetch_add(1, Ordering::Relaxed);
+            }
+            g = wb.done_cv.wait(g).unwrap();
+        }
+        match g.errs.remove(&matrix_id) {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Abort-path discard for one matrix: drop its queued writes
+    /// (`Metrics::wb_discarded`) and wait out an in-flight one, so when
+    /// this returns the writer will never touch the matrix's file again
+    /// — a doomed pass leaves no partial partitions behind and the
+    /// builder's backing file can be unlinked safely. Scoped by matrix
+    /// id: concurrent passes' writes are untouched.
+    pub fn discard_writes(&self, matrix_id: u64) {
+        let Some(wb) = &self.wb else { return };
+        let mut g = wb.state.lock().unwrap();
+        {
+            let st = &mut *g;
+            let before = st.queue.len();
+            st.queue.retain(|k| k.0 != matrix_id);
+            let dropped = before - st.queue.len();
+            if dropped > 0 {
+                let keys: Vec<(u64, usize)> = st
+                    .pending
+                    .keys()
+                    .filter(|k| k.0 == matrix_id)
+                    .copied()
+                    .collect();
+                for k in keys {
+                    if let Some(e) = st.pending.remove(&k) {
+                        st.bytes -= e.bytes.len();
+                    }
+                }
+                self.metrics
+                    .wb_discarded
+                    .fetch_add(dropped as u64, Ordering::Relaxed);
+            }
+        }
+        // an in-flight write cannot be recalled mid-pwrite; wait it out
+        // so the partition on disk is whole, never partial
+        while g.inflight.map(|k| k.0 == matrix_id).unwrap_or(false) {
+            g = wb.done_cv.wait(g).unwrap();
+        }
+        // the discarded matrix's recorded write error dies with it (after
+        // the inflight wait, so a just-failed write cannot re-insert it):
+        // nothing will ever flush this id again
+        g.errs.remove(&matrix_id);
+        drop(g);
+        // discarding freed dirty capacity: wake blocked enqueuers
+        wb.done_cv.notify_all();
+    }
+}
+
+impl Drop for PartitionCache {
+    fn drop(&mut self) {
+        // stop the write-back writer; it drains the remaining queue
+        // first, so pending clean-pass writes still land
+        if let Some(wb) = &self.wb {
+            wb.state.lock().unwrap().shutdown = true;
+            wb.work_cv.notify_all();
+        }
+    }
 }
 
 /// A matrix's registration in the engine cache: the shared cache plus the
@@ -627,7 +926,7 @@ mod tests {
     use crate::storage::SsdSim;
 
     fn cache(cap: usize) -> Arc<PartitionCache> {
-        PartitionCache::new(cap, 0, Arc::new(Metrics::new()))
+        PartitionCache::new(cap, 0, 0, Arc::new(Metrics::new()))
     }
 
     #[test]
@@ -712,7 +1011,7 @@ mod tests {
     fn prefetch_lands_pinned_until_first_hit() {
         let dir = crate::testutil::TempDir::new("cache-pf");
         let metrics = Arc::new(Metrics::new());
-        let c = PartitionCache::new(512, 2, Arc::clone(&metrics));
+        let c = PartitionCache::new(512, 2, 0, Arc::clone(&metrics));
         let ssd = Arc::new(SsdSim::new(None));
         let store =
             Arc::new(FileStore::create(dir.path(), None, 256, ssd, Arc::clone(&metrics)).unwrap());
@@ -868,5 +1167,163 @@ mod tests {
         drop(h); // matrix gone; a read-ahead completing now must be dropped
         c.insert_prefetched(id, 0, vec![0u8; 64], c.epoch.load(Ordering::Relaxed));
         assert!(c.is_empty(), "dead-matrix prefetch was admitted");
+    }
+
+    // -- write-back pipeline ------------------------------------------------
+
+    use crate::config::ThrottleConfig;
+
+    /// Store with an optional symmetric bandwidth throttle: the token
+    /// bucket's 1-second burst means a write larger than `bps` bytes
+    /// deterministically keeps the writer thread busy, which is what the
+    /// coalesce/capacity/discard tests below rely on.
+    fn wb_store(
+        dir: &std::path::Path,
+        len: u64,
+        bps: Option<u64>,
+        metrics: &Arc<Metrics>,
+    ) -> Arc<FileStore> {
+        let cfg = bps.map(|b| ThrottleConfig {
+            read_bytes_per_sec: b,
+            write_bytes_per_sec: b,
+        });
+        let ssd = Arc::new(SsdSim::new(cfg.as_ref()));
+        Arc::new(FileStore::create(dir, None, len, ssd, Arc::clone(metrics)).unwrap())
+    }
+
+    #[test]
+    fn writeback_flush_lands_bytes_on_file() {
+        let dir = crate::testutil::TempDir::new("wb-flush");
+        let metrics = Arc::new(Metrics::new());
+        let c = PartitionCache::new(1024, 0, 1 << 20, Arc::clone(&metrics));
+        assert!(c.writeback_enabled());
+        let store = wb_store(dir.path(), 64, None, &metrics);
+        let id = c.alloc_wb_id();
+        assert!(c.enqueue_write(&store, id, 0, 0, Arc::new(vec![7u8; 16])));
+        assert!(c.enqueue_write(&store, id, 1, 16, Arc::new(vec![9u8; 16])));
+        c.flush_writes(id).unwrap();
+        let mut back = [0u8; 32];
+        store.read_at(0, &mut back).unwrap();
+        assert_eq!(&back[..16], &[7u8; 16]);
+        assert_eq!(&back[16..], &[9u8; 16]);
+        let s = metrics.snapshot();
+        assert_eq!(s.wb_enqueued, 2);
+        assert_eq!(s.wb_discarded, 0);
+    }
+
+    #[test]
+    fn writeback_coalesces_rewrite_of_queued_partition() {
+        let dir = crate::testutil::TempDir::new("wb-coalesce");
+        let metrics = Arc::new(Metrics::new());
+        let c = PartitionCache::new(1024, 0, 1 << 20, Arc::clone(&metrics));
+        // the 128 KiB head write keeps the writer busy past the 64 KiB
+        // burst, so the re-write of partition 1 is still queued
+        let store = wb_store(dir.path(), 256 << 10, Some(64 << 10), &metrics);
+        let id = c.alloc_wb_id();
+        assert!(c.enqueue_write(&store, id, 0, 0, Arc::new(vec![8u8; 128 << 10])));
+        assert!(c.enqueue_write(&store, id, 1, 128 << 10, Arc::new(vec![1u8; 16])));
+        assert!(c.enqueue_write(&store, id, 1, 128 << 10, Arc::new(vec![2u8; 16])));
+        c.flush_writes(id).unwrap();
+        let mut back = [0u8; 16];
+        store.read_at(128 << 10, &mut back).unwrap();
+        assert_eq!(back, [2u8; 16], "newest bytes must win");
+        let s = metrics.snapshot();
+        assert_eq!(s.wb_coalesced, 1, "re-write must coalesce, not re-queue");
+        assert_eq!(s.wb_enqueued, 2, "coalesced write is one file write");
+    }
+
+    #[test]
+    fn writeback_capacity_blocks_enqueuer_until_drained() {
+        let dir = crate::testutil::TempDir::new("wb-capacity");
+        let metrics = Arc::new(Metrics::new());
+        // dirty bound of 1000 B: the second 700 B partition must wait for
+        // the first one's (throttled: 512 B/s, 512 B burst) write
+        let c = PartitionCache::new(1024, 0, 1000, Arc::clone(&metrics));
+        let store = wb_store(dir.path(), 2048, Some(512), &metrics);
+        let id = c.alloc_wb_id();
+        let t0 = std::time::Instant::now();
+        assert!(c.enqueue_write(&store, id, 0, 0, Arc::new(vec![4u8; 700])));
+        assert!(c.enqueue_write(&store, id, 1, 700, Arc::new(vec![5u8; 700])));
+        assert!(
+            t0.elapsed().as_secs_f64() > 0.15,
+            "second enqueue must block on the dirty-capacity bound"
+        );
+        c.flush_writes(id).unwrap();
+        assert!(metrics.snapshot().wb_flush_waits >= 1);
+        let mut back = vec![0u8; 1400];
+        store.read_at(0, &mut back).unwrap();
+        assert!(back[..700].iter().all(|b| *b == 4));
+        assert!(back[700..].iter().all(|b| *b == 5));
+    }
+
+    #[test]
+    fn writeback_discard_is_scoped_and_leaves_no_writes() {
+        let dir = crate::testutil::TempDir::new("wb-discard");
+        let metrics = Arc::new(Metrics::new());
+        let c = PartitionCache::new(1024, 0, 1 << 20, Arc::clone(&metrics));
+        // head write (700 B vs 512 B burst) keeps the doomed matrix's
+        // writes queued until the discard below
+        let store = wb_store(dir.path(), 2048, Some(512), &metrics);
+        let keep = c.alloc_wb_id();
+        let doomed = c.alloc_wb_id();
+        assert!(c.enqueue_write(&store, keep, 0, 0, Arc::new(vec![6u8; 700])));
+        assert!(c.enqueue_write(&store, doomed, 0, 1024, Arc::new(vec![3u8; 8])));
+        assert!(c.enqueue_write(&store, doomed, 1, 1032, Arc::new(vec![3u8; 8])));
+        c.discard_writes(doomed);
+        assert_eq!(metrics.snapshot().wb_discarded, 2);
+        c.flush_writes(keep).unwrap();
+        let mut back = [9u8; 16];
+        store.read_at(1024, &mut back).unwrap();
+        assert_eq!(back, [0u8; 16], "discarded writes must never land");
+        let mut head = [0u8; 4];
+        store.read_at(0, &mut head).unwrap();
+        assert_eq!(head, [6u8; 4], "other matrices' writes are untouched");
+    }
+
+    #[test]
+    fn writeback_flush_propagates_write_error_once() {
+        let dir = crate::testutil::TempDir::new("wb-err");
+        let metrics = Arc::new(Metrics::new());
+        let c = PartitionCache::new(1024, 0, 1 << 20, Arc::clone(&metrics));
+        let store = wb_store(dir.path(), 8, None, &metrics);
+        let id = c.alloc_wb_id();
+        // past-end write: the background writer fails, the barrier reports
+        assert!(c.enqueue_write(&store, id, 0, 0, Arc::new(vec![1u8; 64])));
+        assert!(c.flush_writes(id).is_err());
+        // the error was taken; the pipeline stays usable
+        assert!(c.enqueue_write(&store, id, 1, 0, Arc::new(vec![2u8; 8])));
+        c.flush_writes(id).unwrap();
+    }
+
+    #[test]
+    fn writeback_disabled_falls_back_to_caller() {
+        let dir = crate::testutil::TempDir::new("wb-off");
+        let metrics = Arc::new(Metrics::new());
+        let c = cache(1024); // writeback_queue_bytes = 0
+        assert!(!c.writeback_enabled());
+        let store = wb_store(dir.path(), 64, None, &metrics);
+        assert!(!c.enqueue_write(&store, 0, 0, 0, Arc::new(vec![1u8; 8])));
+        c.flush_writes(0).unwrap();
+        c.discard_writes(0);
+    }
+
+    #[test]
+    fn writeback_drains_pending_writes_on_cache_drop() {
+        let dir = crate::testutil::TempDir::new("wb-drop");
+        let metrics = Arc::new(Metrics::new());
+        let c = PartitionCache::new(1024, 0, 1 << 20, Arc::clone(&metrics));
+        let store = wb_store(dir.path(), 64, None, &metrics);
+        let id = c.alloc_wb_id();
+        assert!(c.enqueue_write(&store, id, 0, 0, Arc::new(vec![5u8; 16])));
+        drop(c); // shutdown: the writer must drain, not drop, the queue
+        let mut back = [0u8; 16];
+        for _ in 0..2000 {
+            store.read_at(0, &mut back).unwrap();
+            if back == [5u8; 16] {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(back, [5u8; 16], "pending write lost at shutdown");
     }
 }

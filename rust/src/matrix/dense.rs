@@ -281,6 +281,18 @@ pub struct DenseBuilder {
     mode: BuilderMode,
 }
 
+/// A builder's registration with the engine cache's asynchronous
+/// write-back writer (§III-B3): partition writes are queued to the
+/// background thread under `id` instead of stalling the worker on a
+/// synchronous `pwrite`. The creating pass must end with
+/// [`DenseBuilder::flush_writes`] (success) or
+/// [`DenseBuilder::discard_writes`] (abort) before the builder is frozen
+/// or dropped — `exec::run_pass` owns that barrier.
+struct WbHandle {
+    cache: Arc<PartitionCache>,
+    id: u64,
+}
+
 enum BuilderMode {
     Mem {
         chunks: Vec<Mutex<Chunk>>,
@@ -292,6 +304,7 @@ enum BuilderMode {
         cache: Option<Mutex<Vec<u8>>>,
         metrics: Arc<Metrics>,
         pcache: Option<CacheHandle>,
+        wb: Option<WbHandle>,
     },
 }
 
@@ -363,8 +376,53 @@ impl DenseBuilder {
                 cache,
                 metrics,
                 pcache: pcache.map(CacheHandle::register),
+                wb: None,
             },
         })
+    }
+
+    /// Route this builder's partition writes through `cache`'s
+    /// asynchronous write-back writer (§III-B3) instead of synchronous
+    /// write-through. No-op for in-memory builders or when the cache has
+    /// no writer thread (`writeback` off). The caller owns the pass-end
+    /// barrier: [`flush_writes`](Self::flush_writes) before
+    /// [`finish`](Self::finish) on success,
+    /// [`discard_writes`](Self::discard_writes) on abort.
+    pub fn enable_writeback(&mut self, cache: Arc<PartitionCache>) {
+        if !cache.writeback_enabled() {
+            return;
+        }
+        if let BuilderMode::Ext { wb, pcache, .. } = &mut self.mode {
+            // cache-resident builders share the matrix id with their
+            // cache registration; write-back-only builders get a fresh
+            // key namespace
+            let id = pcache
+                .as_ref()
+                .map(|h| h.matrix_id)
+                .unwrap_or_else(|| cache.alloc_wb_id());
+            *wb = Some(WbHandle { cache, id });
+        }
+    }
+
+    /// Write-back flush barrier: block until every queued write of this
+    /// builder landed on the file, surfacing the first write error. The
+    /// file is authoritative again when this returns — callers must
+    /// flush before [`finish`](Self::finish). No-op without write-back.
+    pub fn flush_writes(&self) -> Result<()> {
+        if let BuilderMode::Ext { wb: Some(w), .. } = &self.mode {
+            w.cache.flush_writes(w.id)?;
+        }
+        Ok(())
+    }
+
+    /// Abort-path discard: drop this builder's queued writes and wait out
+    /// an in-flight one, so a doomed pass leaves no partial partitions on
+    /// disk and the backing file can be unlinked safely. No-op without
+    /// write-back.
+    pub fn discard_writes(&self) {
+        if let BuilderMode::Ext { wb: Some(w), .. } = &self.mode {
+            w.cache.discard_writes(w.id);
+        }
     }
 
     pub fn parts(&self) -> &Partitioning {
@@ -376,9 +434,14 @@ impl DenseBuilder {
     }
 
     /// Write partition `i` from col-major bytes. Thread-safe across
-    /// distinct partitions. External matrices are write-through: bytes land
-    /// on the file *and* in the memory hierarchy — the engine's partition
-    /// cache and (for the cached columns) the column cache (§III-B3).
+    /// distinct partitions. External matrices land in the whole memory
+    /// hierarchy (§III-B3): the engine's partition cache, the column
+    /// cache for the cached columns, and the file — synchronously
+    /// (write-through) or, with
+    /// [`enable_writeback`](Self::enable_writeback), via the background
+    /// writer so the worker moves on immediately (the file then becomes
+    /// authoritative at the pass-end [`flush_writes`](Self::flush_writes)
+    /// barrier).
     pub fn write_partition(&self, i: usize, bytes: &[u8]) -> Result<()> {
         let esz = self.dtype.size();
         let expect = self.parts.part_bytes(i, esz);
@@ -400,20 +463,41 @@ impl DenseBuilder {
                 cache_cols,
                 cache,
                 pcache,
+                wb,
                 ..
             } => {
-                store.write_at(self.parts.part_offset(i, esz), bytes)?;
+                let off = self.parts.part_offset(i, esz);
+                let queued = if let Some(w) = wb {
+                    // asynchronous write-back (§III-B3): hand the finished
+                    // partition to the background writer and move on — the
+                    // dirty queue and the partition cache share one buffer
+                    let shared = Arc::new(bytes.to_vec());
+                    let q = w
+                        .cache
+                        .enqueue_write(store, w.id, i, off, Arc::clone(&shared));
+                    if q {
+                        if let Some(h) = pcache {
+                            h.cache.insert_shared(h.matrix_id, i, shared);
+                        }
+                    }
+                    q
+                } else {
+                    false
+                };
+                if !queued {
+                    // synchronous write-through
+                    store.write_at(off, bytes)?;
+                    if let Some(h) = pcache {
+                        h.cache.insert(h.matrix_id, i, bytes.to_vec());
+                    }
+                }
                 if let Some(c) = cache {
                     let cc = (*cache_cols).min(self.parts.ncol) as usize;
                     let prows = self.parts.rows_in(i) as usize;
                     let cached_bytes = cc * prows * esz;
-                    let cache_off =
-                        ((self.parts.part_offset(i, esz) / self.parts.ncol) * cc as u64) as usize;
+                    let cache_off = ((off / self.parts.ncol) * cc as u64) as usize;
                     c.lock().unwrap()[cache_off..cache_off + cached_bytes]
                         .copy_from_slice(&bytes[..cached_bytes]);
-                }
-                if let Some(h) = pcache {
-                    h.cache.insert(h.matrix_id, i, bytes.to_vec());
                 }
                 Ok(())
             }
@@ -445,6 +529,9 @@ impl DenseBuilder {
                 cache,
                 metrics,
                 pcache,
+                // the write-back registration ends with the builder; the
+                // pass barrier (flush/discard) has already run
+                wb: _,
             } => Backing::Ext {
                 store,
                 cache_cols,
@@ -540,7 +627,7 @@ mod tests {
         let dir = tmp.path().to_path_buf();
         let ssd = Arc::new(SsdSim::new(None));
         let metrics = Arc::new(Metrics::new());
-        let pc = PartitionCache::new(1 << 20, 0, Arc::clone(&metrics));
+        let pc = PartitionCache::new(1 << 20, 0, 0, Arc::clone(&metrics));
         let parts = Partitioning::with_io_rows(256, 2, 128);
         let b = DenseBuilder::new_ext(
             DType::F64,
@@ -586,6 +673,52 @@ mod tests {
         let len_before_drop = pc.len();
         drop(m);
         assert!(pc.len() < len_before_drop, "drop must evict the matrix");
+    }
+
+    #[test]
+    fn writeback_builder_matches_write_through() {
+        let tmp = crate::testutil::TempDir::new("dense-wb");
+        let ssd = Arc::new(SsdSim::new(None));
+        let metrics = Arc::new(Metrics::new());
+        let pc = PartitionCache::new(1 << 20, 0, 1 << 20, Arc::clone(&metrics));
+        let parts = Partitioning::with_io_rows(256, 2, 128);
+        let mk = |writeback: bool, sub: &str| {
+            let mut b = DenseBuilder::new_ext(
+                DType::F64,
+                parts.clone(),
+                &tmp.path().join(sub),
+                None,
+                0,
+                Arc::clone(&ssd),
+                Arc::clone(&metrics),
+                Some(Arc::clone(&pc)),
+            )
+            .unwrap();
+            if writeback {
+                b.enable_writeback(Arc::clone(&pc));
+            }
+            for i in 0..parts.n_parts() {
+                let prows = parts.rows_in(i) as usize;
+                let mut buf = Buf::alloc(DType::F64, prows * 2);
+                for e in 0..buf.len() {
+                    buf.set(e, crate::dtype::Scalar::F64((i * 1000 + e) as f64));
+                }
+                b.write_partition_buf(i, &buf).unwrap();
+            }
+            b.flush_writes().unwrap(); // the pass-end barrier
+            b.finish()
+        };
+        let wt = mk(false, "wt");
+        let wb = mk(true, "wb");
+        assert!(metrics.snapshot().wb_enqueued >= 2);
+        // bit-identical through the cache AND through the file alone
+        assert_eq!(wt.to_buf().unwrap(), wb.to_buf().unwrap());
+        pc.clear();
+        assert_eq!(
+            wt.partition_bytes(1).unwrap(),
+            wb.partition_bytes(1).unwrap(),
+            "flushed write-back file must match write-through"
+        );
     }
 
     #[test]

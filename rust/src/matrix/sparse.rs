@@ -483,7 +483,7 @@ mod tests {
         let tmp = crate::testutil::TempDir::new("sparse-ext");
         let ssd = Arc::new(SsdSim::new(None));
         let metrics = Arc::new(Metrics::new());
-        let pc = PartitionCache::new(1 << 20, 0, Arc::clone(&metrics));
+        let pc = PartitionCache::new(1 << 20, 0, 0, Arc::clone(&metrics));
         let parts = Partitioning::with_io_rows(4, 3, 2);
         let mut b = SparseBuilder::new(parts);
         b.push_partition(&mut [vec![(0, 1.0), (2, 2.0)], vec![(1, 3.0)]])

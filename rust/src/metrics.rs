@@ -60,6 +60,20 @@ pub struct Metrics {
     /// Sparse entries streamed through SpMM (the workload's nnz per pass
     /// — the sparse analogue of Table IV's I/O accounting).
     pub spmm_nnz: AtomicU64,
+    /// Target partitions handed to the asynchronous write-back writer
+    /// instead of being written through synchronously (§III-B3 write
+    /// path; [`crate::matrix::cache::PartitionCache`]).
+    pub wb_enqueued: AtomicU64,
+    /// Write-back enqueues that replaced a still-queued write of the same
+    /// partition (one coalesced file write instead of two).
+    pub wb_coalesced: AtomicU64,
+    /// Times a caller blocked on the write-back pipeline: an enqueue that
+    /// hit the bounded dirty capacity, or a pass-end flush barrier that
+    /// found writes still in flight.
+    pub wb_flush_waits: AtomicU64,
+    /// Queued write-back partitions discarded by an aborted pass (dirty
+    /// data that never reached the disk — by design).
+    pub wb_discarded: AtomicU64,
 }
 
 impl Metrics {
@@ -110,6 +124,10 @@ impl Metrics {
             fused_chain_len: self.fused_chain_len.load(Ordering::Relaxed),
             spmm_strips: self.spmm_strips.load(Ordering::Relaxed),
             spmm_nnz: self.spmm_nnz.load(Ordering::Relaxed),
+            wb_enqueued: self.wb_enqueued.load(Ordering::Relaxed),
+            wb_coalesced: self.wb_coalesced.load(Ordering::Relaxed),
+            wb_flush_waits: self.wb_flush_waits.load(Ordering::Relaxed),
+            wb_discarded: self.wb_discarded.load(Ordering::Relaxed),
         }
     }
 
@@ -139,6 +157,10 @@ impl Metrics {
             &s.fused_chain_len,
             &s.spmm_strips,
             &s.spmm_nnz,
+            &s.wb_enqueued,
+            &s.wb_coalesced,
+            &s.wb_flush_waits,
+            &s.wb_discarded,
         ] {
             c.store(0, Ordering::Relaxed);
         }
@@ -170,6 +192,10 @@ pub struct MetricsSnapshot {
     pub fused_chain_len: u64,
     pub spmm_strips: u64,
     pub spmm_nnz: u64,
+    pub wb_enqueued: u64,
+    pub wb_coalesced: u64,
+    pub wb_flush_waits: u64,
+    pub wb_discarded: u64,
 }
 
 impl MetricsSnapshot {
@@ -198,6 +224,10 @@ impl MetricsSnapshot {
             fused_chain_len: self.fused_chain_len - earlier.fused_chain_len,
             spmm_strips: self.spmm_strips - earlier.spmm_strips,
             spmm_nnz: self.spmm_nnz - earlier.spmm_nnz,
+            wb_enqueued: self.wb_enqueued - earlier.wb_enqueued,
+            wb_coalesced: self.wb_coalesced - earlier.wb_coalesced,
+            wb_flush_waits: self.wb_flush_waits - earlier.wb_flush_waits,
+            wb_discarded: self.wb_discarded - earlier.wb_discarded,
         }
     }
 }

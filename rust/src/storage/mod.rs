@@ -16,12 +16,18 @@
 //!   for sequential scans; with depth 2 it double-buffers a scan so the
 //!   next partition's read overlaps the current partition's compute.
 //!
-//! The explicit write-through *matrix cache* of §III-B3 lives in
+//! The explicit *matrix cache* of §III-B3 lives in
 //! [`crate::matrix::cache::PartitionCache`], layered on top of this store:
-//! reads consult it before issuing a `pread` here, writes go through to
-//! both, and its prefetch thread issues the asynchronous read-ahead for
-//! out-of-core passes. See `docs/ARCHITECTURE.md` for the full
-//! paper-section-to-module map.
+//! reads consult it before issuing a `pread` here, its prefetch thread
+//! issues the asynchronous read-ahead for out-of-core passes, and its
+//! write-back writer thread is the store's write-side mirror — pass
+//! workers queue finished target partitions there and this store's
+//! (throttled) [`FileStore::write_at`] runs on the writer thread, so the
+//! paper's overlap of computation with I/O holds in *both* directions.
+//! [`FileStore`] I/O is positioned and stateless (`pread`/`pwrite`), so
+//! demand reads, the prefetch thread and the write-back writer can all
+//! touch one store concurrently without coordination. See
+//! `docs/ARCHITECTURE.md` for the full paper-section-to-module map.
 
 pub mod throttle;
 
@@ -62,6 +68,20 @@ impl SsdSim {
     fn charge_write(&self, bytes: u64) {
         if let Some(b) = &self.write_bucket {
             b.take(bytes);
+        }
+    }
+
+    /// Drain both buckets' standing one-second burst
+    /// ([`TokenBucket::drain`]): benches call this right before their
+    /// timed region so every byte of the measured workload pays the
+    /// configured rate — deterministic wall-times, which is what lets CI
+    /// gate them (`python/bench_gate.py`). No-op without a throttle.
+    pub fn drain_bursts(&self) {
+        if let Some(b) = &self.read_bucket {
+            b.drain();
+        }
+        if let Some(b) = &self.write_bucket {
+            b.drain();
         }
     }
 }
@@ -161,7 +181,10 @@ impl FileStore {
         Ok(())
     }
 
-    /// Write `buf` at `off`.
+    /// Write `buf` at `off`. Positioned and thread-safe like
+    /// [`read_at`](Self::read_at); under write-back this runs on the
+    /// cache's background writer thread, which is where the throttled
+    /// write cost is paid while pass workers keep computing.
     pub fn write_at(&self, off: u64, buf: &[u8]) -> Result<()> {
         if off + buf.len() as u64 > self.len {
             return Err(FmError::Storage(format!(

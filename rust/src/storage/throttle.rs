@@ -4,6 +4,15 @@
 //! I/O bandwidth (Table IV, Figs 9/10), not by absolute GB/s. A token
 //! bucket lets benches impose that ratio on any disk: callers `take(bytes)`
 //! before an I/O and sleep until the budget allows it.
+//!
+//! Read and write budgets are **separate buckets**
+//! ([`crate::storage::SsdSim`]), mirroring an SSD array's full-duplex
+//! bandwidth — which is
+//! what makes the §III-B3 overlap benches meaningful: with write-back on,
+//! the pass worker sleeps in the read bucket while the background writer
+//! sleeps in the write bucket, and the two costs are paid concurrently
+//! instead of serially (`benches/writeback.rs` pins the resulting
+//! wall-time win; determinism of the buckets makes it CI-gateable).
 
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
@@ -33,6 +42,18 @@ impl TokenBucket {
 
     pub fn rate(&self) -> u64 {
         self.bytes_per_sec
+    }
+
+    /// Empty the bucket: the next [`take`](Self::take) pays the full rate
+    /// from a standing start. A fresh bucket holds one second of budget
+    /// (the burst), so short bench workloads could otherwise run entirely
+    /// burst-free of throttling — benches drain before their timed region
+    /// to make token-bucket costs deterministic from `t = 0`
+    /// ([`crate::storage::SsdSim::drain_bursts`]).
+    pub fn drain(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.available = 0.0;
+        st.last = Instant::now();
     }
 
     /// Consume `bytes` of budget, sleeping as needed. Requests larger than
@@ -86,6 +107,16 @@ mod tests {
         let t0 = Instant::now();
         tb.take(1024); // tiny request against a full bucket
         assert!(t0.elapsed().as_millis() < 50);
+    }
+
+    #[test]
+    fn drain_forces_full_rate_from_standing_start() {
+        let tb = TokenBucket::new(1 << 20);
+        tb.drain();
+        let t0 = Instant::now();
+        tb.take(256 * 1024); // a quarter second of budget at 1 MiB/s
+        let dt = t0.elapsed().as_secs_f64();
+        assert!(dt > 0.15, "drained bucket must pay the full rate: {dt}s");
     }
 
     #[test]

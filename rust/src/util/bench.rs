@@ -5,10 +5,36 @@
 //! min/median/mean wall time. [`Row`] accumulates a results table that
 //! prints in the same layout the paper's figures use and can be dumped as
 //! JSON for EXPERIMENTS.md.
+//!
+//! # Bench parameterization — one mechanism
+//!
+//! Every bench binary takes **CLI flags** (parsed by [`bench_args`] /
+//! `util::cli::Args`), passed through cargo after `--`:
+//!
+//! ```sh
+//! cargo bench --bench spmm_pagerank -- --nodes 16384
+//! cargo bench --bench writeback -- --iters 5 --json-dir bench-json
+//! ```
+//!
+//! Flags, not ad-hoc environment variables, are the documented mechanism
+//! (`FM_BENCH_*` env vars were retired): they show up in `ps`, in CI
+//! logs, and in the workflow file next to the bench they parameterize.
+//! Every bench accepts `--json-dir DIR` and writes its machine-readable
+//! `BENCH_<name>.json` report there
+//! ([`crate::harness::BenchReport`], default `.`) — the artifact the CI
+//! regression gate consumes. Cargo itself appends a bare `--bench` flag
+//! when invoking bench targets; [`bench_args`] tolerates it.
 
 use std::time::{Duration, Instant};
 
 use crate::util::json::{obj, Json};
+
+/// Parse a bench binary's command line (`cargo bench --bench <x> -- ...`)
+/// into the same `--key value` / `--switch` form the launcher uses.
+pub fn bench_args() -> crate::util::cli::Args {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    crate::util::cli::Args::parse(&argv)
+}
 
 /// Timing summary of one measured configuration.
 #[derive(Clone, Debug)]

@@ -391,6 +391,100 @@ fn failing_partition_aborts_pass_early() {
     );
 }
 
+/// Abort path of the asynchronous write-back pipeline (§III-B3): a pass
+/// that fails mid-flight with `writeback` on must *discard* its queued
+/// target writes (`wb_discarded > 0`), leave no partial target files on
+/// disk, and leave the engine + cache fully reusable for the next pass.
+#[test]
+fn writeback_abort_discards_dirty_partitions() {
+    use flashmatrix::dtype::DType;
+    use flashmatrix::vudf::{Buf, CustomVudf};
+
+    /// Fails on the strip containing `limit` — the LAST row of the pass,
+    /// so every earlier partition has already been handed to the
+    /// (deliberately slow) write-back writer when the abort fires.
+    struct FailAtRow(f64);
+    impl CustomVudf for FailAtRow {
+        fn name(&self) -> &str {
+            "wb-abort-probe"
+        }
+        fn out_dtype(&self, input: DType) -> DType {
+            input
+        }
+        fn unary(&self, a: &Buf) -> flashmatrix::Result<Buf> {
+            if a.to_f64_vec().iter().any(|v| *v == self.0) {
+                return Err(flashmatrix::FmError::Unsupported("probe failure".into()));
+            }
+            Ok(a.clone())
+        }
+    }
+
+    let dir = tmpdir("wb-abort");
+    let n = 4u64 * 65536; // 4 EM pass partitions of 512 KiB each
+    let cfg = EngineConfig {
+        storage: StorageKind::External,
+        data_dir: dir.clone(),
+        em_cache_bytes: 8 << 20, // hosts the write-back writer
+        prefetch_depth: 0,
+        threads: 1,
+        // asymmetric throttle: reads free, writes slower than one
+        // partition per burst — so the writer is still busy with
+        // partition 0 when the last partition's failure aborts the pass,
+        // and partitions 1/2 are deterministically still dirty
+        throttle: Some(ThrottleConfig {
+            read_bytes_per_sec: 1 << 30,
+            write_bytes_per_sec: 384 << 10,
+        }),
+        ..cfg_im()
+    };
+    assert!(cfg.writeback, "write-back must be the default");
+    let eng = Engine::new(cfg).unwrap();
+    eng.registry.register(Arc::new(FailAtRow((n - 1) as f64)));
+
+    let x = FmMatrix::seq_int(&eng, 0.0, 1.0, n);
+    eng.metrics.reset();
+    let r = x.sapply_custom("wb-abort-probe").unwrap().materialize();
+    assert!(r.is_err(), "the failing partition's error must propagate");
+    let m = eng.metrics.snapshot();
+    assert!(
+        m.wb_enqueued >= 3,
+        "earlier partitions must have been queued (got {})",
+        m.wb_enqueued
+    );
+    assert!(
+        m.wb_discarded >= 1,
+        "aborted pass must discard still-dirty partitions (got {})",
+        m.wb_discarded
+    );
+    // no partial target files: the doomed builder's backing file is gone
+    // entirely once the discard barrier returned (the virtual seq source
+    // never had a file, so the data dir must be empty)
+    let leftovers: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| e.unwrap().file_name())
+        .collect();
+    assert!(
+        leftovers.is_empty(),
+        "aborted pass left files behind: {leftovers:?}"
+    );
+
+    // the engine, cache and writer thread stay usable: a clean pass on
+    // the same engine flushes, and the file alone (cache cleared) holds
+    // the full result
+    let z = FmMatrix::seq_int(&eng, 0.0, 1.0, 65536);
+    let z2 = z.sq().unwrap().materialize().unwrap();
+    if let Some(c) = &eng.cache {
+        c.clear();
+    }
+    let h = z2.to_host().unwrap();
+    assert_eq!(h.buf.get(10).as_f64(), 100.0);
+    assert_eq!(h.buf.get(65535).as_f64(), 65535.0 * 65535.0);
+    assert!(
+        eng.metrics.snapshot().wb_enqueued > m.wb_enqueued,
+        "the follow-up pass must run through the write-back pipeline too"
+    );
+}
+
 /// Mixed-dtype groups (`fm.cbind.list` factor scenario): each member is
 /// decoded with its own dtype and cast to the promoted group dtype.
 #[test]
