@@ -2,7 +2,8 @@
 //! C/FORTRAN reference implementations, plus Fig 8's thread sweep.
 //!
 //! `cargo bench --bench fig7_single_thread -- [--n N] [--max-threads T]
-//! [--json-dir DIR]` (`--n` overrides the Fig 7 row count). Emits
+//! [--json-dir DIR]` (`--n` overrides the Fig 7 row count). The harness
+//! drains leftover simulated-SSD bursts before each timed region. Emits
 //! `BENCH_fig7_single_thread.json`.
 
 use flashmatrix::harness::{self, BenchReport, Scale};

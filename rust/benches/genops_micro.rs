@@ -3,7 +3,9 @@
 //! native per-partition steps. These feed EXPERIMENTS.md §Perf.
 //!
 //! `cargo bench --bench genops_micro -- [--n N] [--json-dir DIR]`
-//! (`--n` overrides the row count). Emits `BENCH_genops_micro.json`.
+//! (`--n` overrides the row count). Simulated-SSD bursts left over from
+//! dataset creation are drained before every timed region. Emits
+//! `BENCH_genops_micro.json`.
 
 use flashmatrix::config::EngineConfig;
 use flashmatrix::datasets;
@@ -26,6 +28,7 @@ fn main() {
         })
         .unwrap();
         let x = datasets::uniform(&eng, n, 8, -1.0, 1.0, 3, None).unwrap();
+        eng.ssd.drain_bursts();
         let s = measure(1, 5, || {
             x.sapply(UnOp::Abs).unwrap().agg(AggOp::Sum).unwrap()
         });
@@ -47,6 +50,7 @@ fn main() {
         })
         .unwrap();
         let x = datasets::uniform(&eng, n, 8, -1.0, 1.0, 3, None).unwrap();
+        eng.ssd.drain_bursts();
         let s = measure(1, 5, || {
             // 4-op chain: |x| + x^2 -> sum
             x.abs()
@@ -66,6 +70,7 @@ fn main() {
     })
     .unwrap();
     let x = datasets::uniform(&eng, n, 8, -1.0, 1.0, 3, None).unwrap();
+    eng.ssd.drain_bursts();
     let s = measure(1, 5, || x.sum().unwrap());
     t.add("agg full", s.secs() * 1e3, "ms");
     let s = measure(1, 5, || x.col_sums().unwrap());
@@ -82,6 +87,7 @@ fn main() {
             })
             .unwrap();
             let (x, _) = datasets::mix_gaussian(&eng, 131_072, 32, 10, 6.0, 42, None).unwrap();
+            eng.ssd.drain_bursts();
             let s = measure(1, 3, || {
                 flashmatrix::algs::kmeans(&x, 10, 1, 1).unwrap()
             });

@@ -1,0 +1,197 @@
+//! Bench: explicit lane kernels + register-blocked GEMM microkernels.
+//!
+//! `EngineConfig::simd_kernels` routes the strip evaluator's hot paths
+//! through hand-unrolled lane kernels (4-wide f64 accumulator arrays the
+//! autovectorizer keeps in registers) and register-blocked microkernels
+//! (an MR=8 row panel behind `inner_prod_small`, a KB=4 dot-product block
+//! behind the `crossprod` wide-tall sink). This bench ablates the knob on
+//! two workloads and fails loudly if the kernels stop paying for
+//! themselves:
+//!
+//! * a peephole-fused 7-step elementwise chain (sq -> five scalar steps
+//!   -> rowSums), where the SIMD path must reach >= 1.5x strips/sec over
+//!   scalar single-threaded in memory, and
+//! * a 32-column `crossprod` (the inner-wide-tall GEMM sink), where the
+//!   blocked kernel must reach >= 2x.
+//!
+//! Both workloads also run externally (FM-EM, throttled simulated SSD,
+//! cold cache) so the JSON records how much of the win survives under
+//! I/O, and every configuration's results must stay bit-identical to the
+//! scalar path — the lane kernels are reorderings of independent outputs,
+//! never of any one output's accumulation.
+//!
+//! Run: `cargo bench --bench simd_kernels -- [--iters N] [--json-dir DIR]`
+//! (`--iters` overrides the pass count, default 3). Emits
+//! `BENCH_simd_kernels.json` for the CI gate.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use flashmatrix::datasets;
+use flashmatrix::dtype::Scalar;
+use flashmatrix::fmr::{Engine, FmMatrix};
+use flashmatrix::harness::{config_for, BenchReport, Mode, Scale};
+use flashmatrix::matrix::{HostMat, Partitioning};
+use flashmatrix::util::bench::{bench_args, Table};
+use flashmatrix::vudf::BinOp;
+
+const FUSE_ROWS: u64 = 1 << 19; // x 8 cols x 8 B = 32 MiB in-mem
+const FUSE_COLS: u64 = 8;
+const GEMM_ROWS: u64 = 1 << 17; // x 32 cols x 8 B = 32 MiB in-mem
+const GEMM_COLS: u64 = 32;
+
+fn engine(mode: Mode, simd: bool) -> Arc<Engine> {
+    let s = Scale::default();
+    let mut cfg = config_for(&s, mode, 1);
+    cfg.simd_kernels = simd;
+    cfg.xla_dispatch = false; // isolate the engine's own kernels
+    Engine::new(cfg).expect("engine")
+}
+
+/// The elementwise chain under test: sq plus five scalar steps, all
+/// peephole-fused into one `FusedChain` traversal, then rowSums.
+fn fused_pass(x: &FmMatrix) -> HostMat {
+    x.sq()
+        .and_then(|m| m.mapply_scalar(Scalar::F64(0.5), BinOp::Mul, true))
+        .and_then(|m| m.mapply_scalar(Scalar::F64(1.0), BinOp::Add, true))
+        .and_then(|m| m.mapply_scalar(Scalar::F64(2.0), BinOp::Mul, true))
+        .and_then(|m| m.mapply_scalar(Scalar::F64(3.0), BinOp::Sub, true))
+        .and_then(|m| m.mapply_scalar(Scalar::F64(0.25), BinOp::Mul, true))
+        .and_then(|m| m.row_sums())
+        .and_then(|m| m.to_host())
+        .expect("fused pass")
+}
+
+/// Exact CPU-strip count of one pass over a `rows x cols` matrix.
+fn strips_per_pass(rows: u64, cols: u64, cpu_part_bytes: usize) -> usize {
+    let parts = Partitioning::new(rows, cols);
+    (0..parts.n_parts())
+        .map(|i| parts.cpu_ranges(i, cpu_part_bytes).len())
+        .sum()
+}
+
+fn bytes(m: &HostMat) -> Vec<u8> {
+    // NaN-safe bit comparison (HostMat's PartialEq is IEEE, not bitwise).
+    m.buf.to_bytes()
+}
+
+fn main() {
+    let args = bench_args();
+    let iters = args.usize_or("iters", 3);
+    let json_dir = args.get_or("json-dir", ".").to_string();
+
+    let mut t = Table::new(format!(
+        "simd-kernels ablation: {iters}-pass fused chain ({} MiB) and \
+         crossprod GEMM ({} MiB), single thread",
+        (FUSE_ROWS * FUSE_COLS * 8) >> 20,
+        (GEMM_ROWS * GEMM_COLS * 8) >> 20,
+    ));
+
+    let mut fused_secs = [0.0f64; 2]; // [scalar, simd] IM
+    let mut gemm_secs = [0.0f64; 2];
+    let mut fused_ref: Option<Vec<u8>> = None;
+    let mut gemm_ref: Option<Vec<u8>> = None;
+    let mut bitexact = true;
+    let mut counters_active = true;
+
+    for mode in [Mode::FmIm, Mode::FmEm] {
+        for simd in [false, true] {
+            let label = if simd { "simd" } else { "scalar" };
+
+            // -- fused elementwise chain --------------------------------
+            let eng = engine(mode, simd);
+            let x = datasets::uniform(&eng, FUSE_ROWS, FUSE_COLS, -1.0, 1.0, 11, None)
+                .expect("dataset");
+            let mut last = fused_pass(&x); // warm up + correctness sample
+            eng.ssd.drain_bursts();
+            eng.metrics.reset();
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                last = fused_pass(&x);
+            }
+            let secs = t0.elapsed().as_secs_f64();
+            let m = eng.metrics.snapshot();
+            match &fused_ref {
+                None => fused_ref = Some(bytes(&last)),
+                Some(b) => bitexact &= *b == bytes(&last),
+            }
+            if simd {
+                counters_active &= m.simd_strips > 0 && m.simd_lanes_f64 > 0;
+            }
+            if mode == Mode::FmIm {
+                fused_secs[simd as usize] = secs;
+            }
+            let strips =
+                (strips_per_pass(FUSE_ROWS, FUSE_COLS, eng.config.cpu_part_bytes) * iters) as f64;
+            t.add_with(
+                format!("fused-chain {} {}", mode.label(), label),
+                strips / secs,
+                "strips/s",
+                vec![
+                    ("secs".into(), secs),
+                    ("simd_strips".into(), m.simd_strips as f64),
+                    ("simd_lanes".into(), m.simd_lanes_f64 as f64),
+                ],
+            );
+
+            // -- crossprod (inner-wide-tall GEMM sink) ------------------
+            let eng = engine(mode, simd);
+            let x = datasets::uniform(&eng, GEMM_ROWS, GEMM_COLS, -1.0, 1.0, 13, None)
+                .expect("dataset");
+            let mut ct = x.crossprod(&x).expect("crossprod"); // warm up
+            eng.ssd.drain_bursts();
+            eng.metrics.reset();
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                ct = x.crossprod(&x).expect("crossprod");
+            }
+            let secs = t0.elapsed().as_secs_f64();
+            let m = eng.metrics.snapshot();
+            match &gemm_ref {
+                None => gemm_ref = Some(bytes(&ct)),
+                Some(b) => bitexact &= *b == bytes(&ct),
+            }
+            if simd {
+                counters_active &= m.gemm_panels > 0;
+            }
+            if mode == Mode::FmIm {
+                gemm_secs[simd as usize] = secs;
+            }
+            t.add_with(
+                format!("crossprod {} {}", mode.label(), label),
+                iters as f64 / secs,
+                "passes/s",
+                vec![
+                    ("secs".into(), secs),
+                    ("gemm_panels".into(), m.gemm_panels as f64),
+                ],
+            );
+        }
+    }
+    t.print();
+
+    let fused_speedup = fused_secs[0] / fused_secs[1];
+    let gemm_speedup = gemm_secs[0] / gemm_secs[1];
+    let fused_ok = fused_speedup >= 1.5;
+    let gemm_ok = gemm_speedup >= 2.0;
+    println!(
+        "\nfused-chain IM speedup {fused_speedup:.2}x (need >= 1.5), \
+         crossprod IM speedup {gemm_speedup:.2}x (need >= 2.0), \
+         bit-identical {bitexact}, counters {counters_active}"
+    );
+
+    let mut report = BenchReport::new("simd_kernels");
+    report.add_table(&t);
+    report.add_check("simd-fused-speedup>=1.5x", fused_ok);
+    report.add_check("gemm-speedup>=2x", gemm_ok);
+    report.add_check("bit-identical-default", bitexact);
+    report.add_check("simd-counters-active", counters_active);
+    report.write(std::path::Path::new(&json_dir)).expect("bench json");
+
+    // fail loudly: automation running this bench must see the regression
+    assert!(
+        fused_ok && gemm_ok && bitexact && counters_active,
+        "simd-kernels acceptance failed (fused {fused_speedup:.2}x, gemm \
+         {gemm_speedup:.2}x, bitexact {bitexact}, counters {counters_active})"
+    );
+}

@@ -94,7 +94,8 @@ pub fn gmm(x: &FmMatrix, k: usize, iters: usize, seed: u64) -> Result<GmmResult>
     // reconstruct covariances for the result
     let mut covs = vec![0.0; k * p * p];
     for c in 0..k {
-        let (inv, _ld) = super::linalg::spd_inverse_logdet(&prm.prec_rm[c * p * p..(c + 1) * p * p], p)?;
+        let (inv, _ld) =
+            super::linalg::spd_inverse_logdet(&prm.prec_rm[c * p * p..(c + 1) * p * p], p)?;
         covs[c * p * p..(c + 1) * p * p].copy_from_slice(&inv);
     }
     let means = HostMat::from_row_major_f64(k, p, &prm.means_rm);

@@ -42,7 +42,9 @@ impl RefMat {
 /// Summary: min/max/mean/L1/L2/nnz/var per column — each statistic is its
 /// own full pass with its own temporaries (R: `apply(x, 2, min)`, `x^2`,
 /// `colSums`, ...).
-pub fn summary_ref(x: &RefMat) -> (Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>) {
+pub fn summary_ref(
+    x: &RefMat,
+) -> (Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>) {
     let (n, p) = (x.n, x.p);
     let mut min = vec![f64::INFINITY; p];
     let mut max = vec![f64::NEG_INFINITY; p];

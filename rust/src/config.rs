@@ -63,6 +63,20 @@ pub struct EngineConfig {
     /// Vectorized UDFs (paper §III-D). Off = one boxed function call per
     /// element (Fig 12 ablation).
     pub vectorized_udf: bool,
+    /// Explicit SIMD microkernels in the strip evaluator: hand-unrolled
+    /// f64x4/f32x8 lane loops for the elementwise/fused-chain VUDFs and
+    /// register-blocked GEMM panels behind `inner_prod_small` /
+    /// `inner_wide_tall`. Every lane kernel preserves each output
+    /// element's accumulation order, so results are **bit-identical** to
+    /// the scalar paths (pinned by `tests/simd_parity.rs`). Off in
+    /// `mllib_like`; ablated by `benches/simd_kernels.rs`.
+    pub simd_kernels: bool,
+    /// Lane-parallel order-**changing** reductions (sum/mean/var keep 4
+    /// partial accumulators instead of one sequential fold). Off by
+    /// default so full-pass reductions stay bit-exact; turning it on
+    /// trades ≤4-ULP drift (documented bound, pinned by
+    /// `tests/simd_parity.rs`) for reduction throughput.
+    pub simd_reductions: bool,
     /// Dispatch per-partition algorithm steps to AOT XLA artifacts when an
     /// artifact with a matching shape exists (the paper's BLAS dispatch).
     pub xla_dispatch: bool,
@@ -130,6 +144,8 @@ impl Default for EngineConfig {
             fuse_mem: true,
             fuse_cache: true,
             vectorized_udf: true,
+            simd_kernels: true,
+            simd_reductions: false,
             xla_dispatch: true,
             xla_kinds: vec!["gmm".to_string()],
             artifacts_dir: PathBuf::from("artifacts"),
@@ -156,6 +172,7 @@ impl EngineConfig {
             fuse_mem: false,
             fuse_cache: false,
             vectorized_udf: false,
+            simd_kernels: false,
             recycle_chunks: false,
             inplace_ops: false,
             peephole_fuse: false,
@@ -262,6 +279,15 @@ mod tests {
             ..Default::default()
         };
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn simd_knob_defaults() {
+        let c = EngineConfig::default();
+        // SIMD microkernels on, order-changing lane reductions opt-in:
+        // default results stay bit-exact vs the scalar paths
+        assert!(c.simd_kernels && !c.simd_reductions);
+        assert!(!EngineConfig::mllib_like().simd_kernels);
     }
 
     #[test]

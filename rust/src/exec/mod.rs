@@ -54,7 +54,7 @@ use crate::metrics::Metrics;
 use crate::storage::SsdSim;
 use crate::vudf::{AggOp, Buf};
 
-use pipeline::{Program, SinkInstrKind, SourceStrip};
+use pipeline::{EvalOpts, Program, SinkInstrKind, SourceStrip};
 
 /// Everything a pass needs from the engine.
 pub struct ExecCtx<'a> {
@@ -470,6 +470,7 @@ fn process_partition(
         vec![(0u64, prows as u64)]
     };
 
+    let opts = EvalOpts::from_config(cfg);
     for (ls, le) in ranges {
         let rows = (le - ls) as usize;
         let srcs: Vec<SourceStrip<'_>> = prog
@@ -486,7 +487,7 @@ fn process_partition(
                 }
             })
             .collect();
-        let regs = pipeline::eval_strip(prog, &srcs, g0 + ls, rows, cfg.vectorized_udf, spool)?;
+        let regs = pipeline::eval_strip(prog, &srcs, g0 + ls, rows, opts, spool)?;
 
         // write target strips into the partition buffers (same-dtype
         // strips are copied straight from the register, no cast temp)
@@ -499,7 +500,7 @@ fn process_partition(
         }
 
         // feed sinks
-        accs.feed(prog, &regs, rows, cfg.vectorized_udf)?;
+        accs.feed(prog, &regs, rows, opts, spool)?;
 
         // recycle the strip's surviving registers for the next strip
         for b in regs {
@@ -576,7 +577,22 @@ impl SinkAccSet {
     }
 
     /// Fold one evaluated strip into the accumulators.
-    fn feed(&mut self, prog: &Program, regs: &[Buf], rows: usize, vectorized: bool) -> Result<()> {
+    ///
+    /// Strip reductions are *order-sensitive*: by default they stay on the
+    /// sequential `reduce` path so results are bit-exact regardless of
+    /// `simd_kernels`. Only the explicit `simd_reductions` opt-in routes
+    /// them through the lane-parallel `reduce_lanes` form (≤4-ULP drift,
+    /// pinned by `tests/simd_parity.rs`).
+    fn feed(
+        &mut self,
+        prog: &Program,
+        regs: &[Buf],
+        rows: usize,
+        opts: EvalOpts,
+        pool: &mut StripPool,
+    ) -> Result<()> {
+        let vectorized = opts.vectorized;
+        let lane_reduce = opts.simd && opts.simd_reductions && vectorized;
         for (si, sink) in prog.sinks.iter().enumerate() {
             let src = &regs[sink.src_reg];
             let ncol = sink.ncol as usize;
@@ -586,7 +602,12 @@ impl SinkAccSet {
                     // borrow, don't copy, when the strip already has the
                     // accumulator dtype (the homogeneous-f64 fast case)
                     let cast = src.cast_ref(dt)?;
-                    let part = if vectorized {
+                    let part = if lane_reduce {
+                        match op.reduce_lanes(&cast) {
+                            Some(s) => s,
+                            None => op.reduce(&cast),
+                        }
+                    } else if vectorized {
                         op.reduce(&cast)
                     } else {
                         op.reduce_scalar_mode(&cast)
@@ -598,7 +619,12 @@ impl SinkAccSet {
                     let cast = src.cast_ref(dt)?;
                     for j in 0..ncol {
                         let col = cast.slice(j * rows, rows);
-                        let part = if vectorized {
+                        let part = if lane_reduce {
+                            match op.reduce_lanes(&col) {
+                                Some(s) => s,
+                                None => op.reduce(&col),
+                            }
+                        } else if vectorized {
                             op.reduce(&col)
                         } else {
                             op.reduce_scalar_mode(&col)
@@ -639,10 +665,14 @@ impl SinkAccSet {
                         }
                     }
                 }
-                (SinkAcc::Inner { acc, f2 }, SinkInstrKind::InnerWideTall { right_reg, f1, .. }) => {
+                (
+                    SinkAcc::Inner { acc, f2 },
+                    SinkInstrKind::InnerWideTall { right_reg, f1, .. },
+                ) => {
                     let right = &regs[*right_reg];
                     let q = right.len() / rows;
-                    inner_wide_tall_accum(acc, src, right, rows, ncol, q, *f1, *f2)?;
+                    let simd = opts.simd && vectorized;
+                    inner_wide_tall_accum(acc, src, right, rows, ncol, q, *f1, *f2, simd, pool)?;
                 }
                 _ => unreachable!("acc/kind mismatch"),
             }
@@ -702,6 +732,14 @@ impl SinkAccSet {
 }
 
 /// acc (p x q, col-major) ⊕= t(A_strip) ⊗ B_strip with (f1, f2).
+///
+/// With `simd` on, the (Mul, Sum, f64) Gramian case runs a register-blocked
+/// microkernel: KB=4 left columns share one sweep of the right column, each
+/// keeping its *own single sequential accumulator* — the same fold order as
+/// the scalar dot, so results are bit-exact, but the four independent FP
+/// chains break the add-latency bound that serializes the scalar loop
+/// (FP non-reassociation keeps the compiler from doing this on its own).
+#[allow(clippy::too_many_arguments)]
 fn inner_wide_tall_accum(
     acc: &mut Buf,
     a: &Buf,
@@ -711,10 +749,52 @@ fn inner_wide_tall_accum(
     q: usize,
     f1: crate::vudf::BinOp,
     f2: AggOp,
+    simd: bool,
+    pool: &mut StripPool,
 ) -> Result<()> {
     use crate::vudf::BinOp;
     if f1 == BinOp::Mul && f2 == AggOp::Sum && a.dtype() == DType::F64 && b.dtype() == DType::F64 {
         if let (Buf::F64(av), Buf::F64(bv), Buf::F64(ac)) = (a, b, &mut *acc) {
+            if simd {
+                const KB: usize = 4;
+                let kcut = p - p % KB;
+                let mut panels = 0u64;
+                for c in 0..q {
+                    let bcol = &bv[c * rows..(c + 1) * rows];
+                    let acol_base = c * p;
+                    let mut k0 = 0;
+                    while k0 < kcut {
+                        let a0 = &av[k0 * rows..(k0 + 1) * rows];
+                        let a1 = &av[(k0 + 1) * rows..(k0 + 2) * rows];
+                        let a2 = &av[(k0 + 2) * rows..(k0 + 3) * rows];
+                        let a3 = &av[(k0 + 3) * rows..(k0 + 4) * rows];
+                        let (mut d0, mut d1, mut d2, mut d3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+                        for r in 0..rows {
+                            let y = bcol[r];
+                            d0 += a0[r] * y;
+                            d1 += a1[r] * y;
+                            d2 += a2[r] * y;
+                            d3 += a3[r] * y;
+                        }
+                        ac[acol_base + k0] += d0;
+                        ac[acol_base + k0 + 1] += d1;
+                        ac[acol_base + k0 + 2] += d2;
+                        ac[acol_base + k0 + 3] += d3;
+                        panels += 1;
+                        k0 += KB;
+                    }
+                    for k in kcut..p {
+                        let akcol = &av[k * rows..(k + 1) * rows];
+                        let mut dot = 0.0f64;
+                        for r in 0..rows {
+                            dot += akcol[r] * bcol[r];
+                        }
+                        ac[acol_base + k] += dot;
+                    }
+                }
+                pool.count_gemm_panels(panels);
+                return Ok(());
+            }
             // the Gramian hot loop: p*q dot products of length `rows`
             for c in 0..q {
                 let bcol = &bv[c * rows..(c + 1) * rows];

@@ -730,13 +730,51 @@ fn take_reg(regs: &mut [Buf], r: usize) -> Buf {
     std::mem::replace(&mut regs[r], Buf::empty())
 }
 
+/// Run-time kernel selection for one strip evaluation (mirrors the
+/// `EngineConfig` knobs the same way [`CompileOpts`] mirrors the
+/// compile-time ones).
+#[derive(Clone, Copy, Debug)]
+pub struct EvalOpts {
+    /// VUDF mode (Fig 12 ablation): off = one boxed call per element.
+    pub vectorized: bool,
+    /// Route eligible instructions through the explicit SIMD lane kernels
+    /// and register-blocked GEMM microkernels
+    /// (`EngineConfig::simd_kernels`). Only meaningful with `vectorized`;
+    /// results stay bit-identical to the plain vectorized kernels.
+    pub simd: bool,
+    /// Allow order-changing lane-parallel full/column reductions in the
+    /// sinks (`EngineConfig::simd_reductions`, ≤4-ULP drift).
+    pub simd_reductions: bool,
+}
+
+impl EvalOpts {
+    /// Plain kernels (no explicit SIMD) with the given VUDF mode.
+    pub fn plain(vectorized: bool) -> EvalOpts {
+        EvalOpts {
+            vectorized,
+            simd: false,
+            simd_reductions: false,
+        }
+    }
+
+    /// The engine's kernel knobs for a materialization pass.
+    pub fn from_config(cfg: &crate::config::EngineConfig) -> EvalOpts {
+        EvalOpts {
+            vectorized: cfg.vectorized_udf,
+            simd: cfg.simd_kernels,
+            simd_reductions: cfg.simd_reductions,
+        }
+    }
+}
+
 /// Evaluate the program for one strip.
 ///
 /// * `srcs[i]` — source strip context for `Program::sources[i]`
 ///   (dense groups reference several entries).
 /// * `global_row0` — global row index of the strip's first row (generators).
 /// * `rows` — strip height.
-/// * `vectorized` — VUDF mode (Fig 12 ablation).
+/// * `opts` — run-time kernel selection ([`EvalOpts`]): VUDF mode
+///   (Fig 12 ablation) and the explicit-SIMD knobs.
 /// * `pool` — the worker's strip-buffer recycler; dead registers
 ///   (per [`ExecPlan::dies_at`]) are released into it as the program
 ///   runs, and in-place-planned instructions steal their input's buffer
@@ -751,10 +789,15 @@ pub fn eval_strip(
     srcs: &[SourceStrip<'_>],
     global_row0: u64,
     rows: usize,
-    vectorized: bool,
+    opts: EvalOpts,
     pool: &mut StripPool,
 ) -> Result<Vec<Buf>> {
     let plan = &prog.plan;
+    let vectorized = opts.vectorized;
+    // explicit SIMD only replaces *vectorized* kernels; the per-element
+    // boxed-call ablation mode must keep its per-element cost
+    let simd = opts.simd && opts.vectorized;
+    let simd_w0 = pool.simd_work();
     let mut regs: Vec<Buf> = Vec::with_capacity(prog.instrs.len());
     for (i, ins) in prog.instrs.iter().enumerate() {
         let ncol = ins.ncol as usize;
@@ -836,6 +879,11 @@ pub fn eval_strip(
                         u.apply_inplace(&mut b, vectorized);
                         pool.count_inplace();
                         b
+                    } else if simd {
+                        let (r, g) = vudf::unary_lanes(*u, &regs[*a])?;
+                        pool.count_simd_lanes_f64(g);
+                        pool.count_alloc();
+                        r
                     } else {
                         let r = vudf::unary(*u, &regs[*a], vectorized)?;
                         pool.count_alloc();
@@ -854,7 +902,13 @@ pub fn eval_strip(
                 let t = DType::promote(regs[*a].dtype(), regs[*b].dtype());
                 let ba = regs[*a].cast_ref(t)?;
                 let bb = regs[*b].cast_ref(t)?;
-                let r = vudf::binary_vv(*op, &ba, &bb, vectorized)?;
+                let r = if simd {
+                    let (r, g) = vudf::binary_vv_lanes(*op, &ba, &bb)?;
+                    pool.count_simd_lanes_f64(g);
+                    r
+                } else {
+                    vudf::binary_vv(*op, &ba, &bb, vectorized)?
+                };
                 pool.count_alloc();
                 r
             }
@@ -869,6 +923,15 @@ pub fn eval_strip(
                     op.apply_broadcast_inplace(&mut b, *s, *scalar_right, vectorized);
                     pool.count_inplace();
                     b
+                } else if simd {
+                    let (r, g) = if *scalar_right {
+                        vudf::binary_vs_lanes(*op, &regs[*a], *s)?
+                    } else {
+                        vudf::binary_sv_lanes(*op, *s, &regs[*a])?
+                    };
+                    pool.count_simd_lanes_f64(g);
+                    pool.count_alloc();
+                    r
                 } else {
                     let r = if *scalar_right {
                         vudf::binary_vs(*op, &regs[*a], *s, vectorized)?
@@ -880,7 +943,13 @@ pub fn eval_strip(
                 }
             }
             InstrKind::MapplyRow { a, w, op } => {
-                let r = vudf::binary_rowvec(*op, &regs[*a], w, rows, ncol, vectorized)?;
+                let r = if simd {
+                    let (r, g) = vudf::binary_rowvec_lanes(*op, &regs[*a], w, rows, ncol)?;
+                    pool.count_simd_lanes_f64(g);
+                    r
+                } else {
+                    vudf::binary_rowvec(*op, &regs[*a], w, rows, ncol, vectorized)?
+                };
                 pool.count_alloc();
                 r
             }
@@ -889,14 +958,20 @@ pub fn eval_strip(
                 let t = DType::promote(regs[*a].dtype(), regs[*v].dtype());
                 let ba = regs[*a].cast_ref(t)?;
                 let bv = regs[*v].cast_ref(t)?;
-                let r = vudf::binary_colvec(*op, &ba, &bv, rows, acols, vectorized)?;
+                let r = if simd {
+                    let (r, g) = vudf::binary_colvec_lanes(*op, &ba, &bv, rows, acols)?;
+                    pool.count_simd_lanes_f64(g);
+                    r
+                } else {
+                    vudf::binary_colvec(*op, &ba, &bv, rows, acols, vectorized)?
+                };
                 pool.count_alloc();
                 r
             }
-            InstrKind::RowAgg { a, op } => row_agg(&regs[*a], rows, *op, vectorized, pool),
+            InstrKind::RowAgg { a, op } => row_agg(&regs[*a], rows, *op, opts, pool),
             InstrKind::RowArgExtreme { a, max } => row_arg_extreme(&regs[*a], rows, *max, pool),
             InstrKind::InnerSmall { a, b, f1, f2 } => {
-                inner_small(&regs[*a], rows, b, *f1, *f2, pool)?
+                inner_small(&regs[*a], rows, b, *f1, *f2, simd, pool)?
             }
             InstrKind::Spmm { src, b } => spmm_strip(&srcs[*src], rows, b, pool)?,
             InstrKind::Cast { a, to } => {
@@ -928,13 +1003,25 @@ pub fn eval_strip(
             }
             InstrKind::FusedChain { a, steps } => {
                 if inplace {
+                    // in-place chains are planned only on f64 inputs
                     let mut b = take_reg(&mut regs, *a);
-                    run_chain_inplace(&mut b, steps, vectorized);
+                    if simd {
+                        let g = chain_lanes_f64_inplace(b.as_f64_mut(), steps);
+                        pool.count_simd_lanes_f64(g);
+                    } else {
+                        run_chain_inplace(&mut b, steps, vectorized);
+                    }
                     pool.count_inplace();
                     b
                 } else {
                     let mut b = pool.acquire(DType::F64, regs[*a].len());
-                    run_chain(&regs[*a], &mut b, steps, vectorized);
+                    match &regs[*a] {
+                        Buf::F64(v) if simd => {
+                            let g = chain_lanes_f64(v, b.as_f64_mut(), steps);
+                            pool.count_simd_lanes_f64(g);
+                        }
+                        src => run_chain(src, &mut b, steps, vectorized),
+                    }
                     b
                 }
             }
@@ -946,6 +1033,11 @@ pub fn eval_strip(
             let b = take_reg(&mut regs, *r);
             pool.release(b);
         }
+    }
+    // a strip counts as SIMD-evaluated when any lane group or GEMM panel
+    // ran in it (`Metrics::simd_strips`)
+    if pool.simd_work() > simd_w0 {
+        pool.count_simd_strip();
     }
     Ok(regs)
 }
@@ -1007,6 +1099,61 @@ fn run_chain_inplace(buf: &mut Buf, steps: &[FusedStep], vectorized: bool) {
             *x = y;
         }
     }
+}
+
+/// [`run_chain`] through the explicit f64x4 lane kernel
+/// (`EngineConfig::simd_kernels`): each lane group holds a `[f64; 4]`
+/// working array and applies one step to all four lanes before the next,
+/// so the per-step `FusedStep::eval` dispatch amortizes across the group
+/// and the step body vectorizes. Per output element the step sequence and
+/// arithmetic are identical to the scalar fold — bit-exact (pinned by
+/// `tests/simd_parity.rs`). Returns the number of full lane groups.
+fn chain_lanes_f64(src: &[f64], out: &mut [f64], steps: &[FusedStep]) -> u64 {
+    const L: usize = crate::vudf::F64_LANES;
+    let cut = src.len() - src.len() % L;
+    let mut groups = 0u64;
+    for (o, x) in out[..cut]
+        .chunks_exact_mut(L)
+        .zip(src[..cut].chunks_exact(L))
+    {
+        let mut y = [x[0], x[1], x[2], x[3]];
+        for st in steps {
+            y = [st.eval(y[0]), st.eval(y[1]), st.eval(y[2]), st.eval(y[3])];
+        }
+        o.copy_from_slice(&y);
+        groups += 1;
+    }
+    for (o, x) in out[cut..].iter_mut().zip(&src[cut..]) {
+        let mut y = *x;
+        for st in steps {
+            y = st.eval(y);
+        }
+        *o = y;
+    }
+    groups
+}
+
+/// [`chain_lanes_f64`] in place on a dead f64 register's buffer.
+fn chain_lanes_f64_inplace(v: &mut [f64], steps: &[FusedStep]) -> u64 {
+    const L: usize = crate::vudf::F64_LANES;
+    let cut = v.len() - v.len() % L;
+    let mut groups = 0u64;
+    for x in v[..cut].chunks_exact_mut(L) {
+        let mut y = [x[0], x[1], x[2], x[3]];
+        for st in steps {
+            y = [st.eval(y[0]), st.eval(y[1]), st.eval(y[2]), st.eval(y[3])];
+        }
+        x.copy_from_slice(&y);
+        groups += 1;
+    }
+    for x in v[cut..].iter_mut() {
+        let mut y = *x;
+        for st in steps {
+            y = st.eval(y);
+        }
+        *x = y;
+    }
+    groups
 }
 
 /// Strip-load from a col-major source partition: gather `rows` rows of
@@ -1115,15 +1262,65 @@ fn spmm_strip(
 }
 
 /// Per-row reduction over a col-major strip -> rows x 1.
-fn row_agg(a: &Buf, rows: usize, op: AggOp, vectorized: bool, pool: &mut StripPool) -> Buf {
+///
+/// Row reductions accumulate across *columns*, so the rows of one strip
+/// are independent outputs: the `opts.simd` lane form processes four rows
+/// per group with each row's column-sweep order unchanged — bit-exact.
+fn row_agg(a: &Buf, rows: usize, op: AggOp, opts: EvalOpts, pool: &mut StripPool) -> Buf {
     let ncol = a.len() / rows.max(1);
     let acc_dt = op.acc_dtype(a.dtype());
     // fast path: f64 sum/min/max with column-sweep accumulation
-    if vectorized && a.dtype() == DType::F64 && acc_dt == DType::F64 {
+    if opts.vectorized && a.dtype() == DType::F64 && acc_dt == DType::F64 {
         if let Buf::F64(v) = a {
             let mut out = pool.acquire(DType::F64, rows);
             let acc = out.as_f64_mut();
             acc.fill(op.identity(DType::F64).as_f64());
+            if opts.simd {
+                const L: usize = crate::vudf::F64_LANES;
+                let cut = rows - rows % L;
+                for j in 0..ncol {
+                    let col = &v[j * rows..(j + 1) * rows];
+                    for (ac, cx) in acc[..cut]
+                        .chunks_exact_mut(L)
+                        .zip(col[..cut].chunks_exact(L))
+                    {
+                        match op {
+                            AggOp::Sum => {
+                                for i in 0..L {
+                                    ac[i] += cx[i];
+                                }
+                            }
+                            AggOp::Min => {
+                                for i in 0..L {
+                                    ac[i] = ac[i].min(cx[i]);
+                                }
+                            }
+                            AggOp::Max => {
+                                for i in 0..L {
+                                    ac[i] = ac[i].max(cx[i]);
+                                }
+                            }
+                            AggOp::Prod => {
+                                for i in 0..L {
+                                    ac[i] *= cx[i];
+                                }
+                            }
+                            _ => unreachable!("acc_dtype guarantees numeric op"),
+                        }
+                    }
+                    for r in cut..rows {
+                        match op {
+                            AggOp::Sum => acc[r] += col[r],
+                            AggOp::Min => acc[r] = acc[r].min(col[r]),
+                            AggOp::Max => acc[r] = acc[r].max(col[r]),
+                            AggOp::Prod => acc[r] *= col[r],
+                            _ => unreachable!("acc_dtype guarantees numeric op"),
+                        }
+                    }
+                }
+                pool.count_simd_lanes_f64((ncol * (cut / L)) as u64);
+                return out;
+            }
             for j in 0..ncol {
                 let col = &v[j * rows..(j + 1) * rows];
                 match op {
@@ -1202,12 +1399,22 @@ fn row_arg_extreme(a: &Buf, rows: usize, max: bool, pool: &mut StripPool) -> Buf
 /// The (Mul, Sum, f64) case is the dense matmul the paper routes to BLAS;
 /// here it gets a monomorphic kernel (column-major SAXPY loop) and the
 /// XLA-artifact path replaces it at the algorithm level when shapes match.
+///
+/// With `simd` on, the (Mul, Sum, f64) case runs a register-blocked
+/// microkernel instead: an MR=8 accumulator array held in registers
+/// sweeps all of `k` before touching the output column, so each output
+/// element is loaded/stored once per *panel* instead of once per `k`.
+/// Per output element the fold is still ascending-`k` from 0.0 with the
+/// same `w != 0.0` skip (which is load-bearing: a stored ±0.0 times an
+/// Inf/NaN operand must contribute nothing, exactly like the SpMM
+/// densify-parity contract) — bit-exact vs the SAXPY kernel.
 fn inner_small(
     a: &Buf,
     rows: usize,
     b: &HostMat,
     f1: BinOp,
     f2: AggOp,
+    simd: bool,
     pool: &mut StripPool,
 ) -> Result<Buf> {
     let p = b.nrow;
@@ -1220,9 +1427,45 @@ fn inner_small(
     }
     if f1 == BinOp::Mul && f2 == AggOp::Sum && a.dtype() == DType::F64 {
         if let (Buf::F64(av), Buf::F64(bv)) = (a, &b.buf) {
-            // out[:, c] = sum_k a[:, k] * b[k, c]  (SAXPY over columns)
             let mut outb = pool.acquire(DType::F64, rows * q);
             let out = outb.as_f64_mut();
+            if simd {
+                const MR: usize = 8;
+                let cut = rows - rows % MR;
+                let mut panels = 0u64;
+                for c in 0..q {
+                    let bcol = &bv[c * p..(c + 1) * p];
+                    let ocol = &mut out[c * rows..(c + 1) * rows];
+                    let mut r0 = 0;
+                    while r0 < cut {
+                        let mut acc = [0.0f64; MR];
+                        for (k, &w) in bcol.iter().enumerate() {
+                            if w != 0.0 {
+                                let acol = &av[k * rows + r0..k * rows + r0 + MR];
+                                for i in 0..MR {
+                                    acc[i] += w * acol[i];
+                                }
+                            }
+                        }
+                        ocol[r0..r0 + MR].copy_from_slice(&acc);
+                        panels += 1;
+                        r0 += MR;
+                    }
+                    // tail rows: the same ascending-k fold, one row at a time
+                    for (r, o) in ocol.iter_mut().enumerate().skip(cut) {
+                        let mut s = 0.0f64;
+                        for (k, &w) in bcol.iter().enumerate() {
+                            if w != 0.0 {
+                                s += w * av[k * rows + r];
+                            }
+                        }
+                        *o = s;
+                    }
+                }
+                pool.count_gemm_panels(panels);
+                return Ok(outb);
+            }
+            // out[:, c] = sum_k a[:, k] * b[k, c]  (SAXPY over columns)
             for c in 0..q {
                 let ocol = &mut out[c * rows..(c + 1) * rows];
                 for k in 0..p {
@@ -1296,9 +1539,9 @@ mod tests {
         let mut p = test_pool();
         // strip 2 rows x 3 cols, col-major: cols [1,5], [2,4], [0,6]
         let a = Buf::from_f64(&[1.0, 5.0, 2.0, 4.0, 0.0, 6.0]);
-        let sums = row_agg(&a, 2, AggOp::Sum, true, &mut p);
+        let sums = row_agg(&a, 2, AggOp::Sum, EvalOpts::plain(true), &mut p);
         assert_eq!(sums.to_f64_vec(), vec![3.0, 15.0]);
-        let mins = row_agg(&a, 2, AggOp::Min, true, &mut p);
+        let mins = row_agg(&a, 2, AggOp::Min, EvalOpts::plain(true), &mut p);
         assert_eq!(mins.to_f64_vec(), vec![0.0, 4.0]);
         let am = row_arg_extreme(&a, 2, false, &mut p);
         assert_eq!(am.as_i32(), &[3, 2]); // 1-based
@@ -1308,12 +1551,12 @@ mod tests {
     fn row_agg_reuses_released_buffers() {
         let mut p = test_pool();
         let a = Buf::from_f64(&[1.0, 5.0, 2.0, 4.0, 0.0, 6.0]);
-        let sums = row_agg(&a, 2, AggOp::Sum, true, &mut p);
+        let sums = row_agg(&a, 2, AggOp::Sum, EvalOpts::plain(true), &mut p);
         p.release(sums);
         // a recycled buffer must give the same answer as a fresh one
-        let again = row_agg(&a, 2, AggOp::Sum, true, &mut p);
+        let again = row_agg(&a, 2, AggOp::Sum, EvalOpts::plain(true), &mut p);
         assert_eq!(again.to_f64_vec(), vec![3.0, 15.0]);
-        let mins = row_agg(&a, 2, AggOp::Min, true, &mut p);
+        let mins = row_agg(&a, 2, AggOp::Min, EvalOpts::plain(true), &mut p);
         assert_eq!(mins.to_f64_vec(), vec![0.0, 4.0]);
     }
 
@@ -1338,12 +1581,31 @@ mod tests {
         // a: 2x2 col-major [[1,2],[3,4]] -> cols [1,3],[2,4]
         let a = Buf::from_f64(&[1.0, 3.0, 2.0, 4.0]);
         let b = HostMat::from_rows_f64(&[vec![1.0, 0.0], vec![0.0, 1.0]]);
-        let out = inner_small(&a, 2, &b, BinOp::Mul, AggOp::Sum, &mut p).unwrap();
+        let out = inner_small(&a, 2, &b, BinOp::Mul, AggOp::Sum, false, &mut p).unwrap();
         assert_eq!(out.to_f64_vec(), vec![1.0, 3.0, 2.0, 4.0]); // identity
         // generalized: min-plus "tropical" inner product
         // out[r,c] = min_k(a[r,k] + b[k,c])
-        let out = inner_small(&a, 2, &b, BinOp::Add, AggOp::Min, &mut p).unwrap();
+        let out = inner_small(&a, 2, &b, BinOp::Add, AggOp::Min, false, &mut p).unwrap();
         assert_eq!(out.to_f64_vec(), vec![2.0, 4.0, 1.0, 3.0]);
+    }
+
+    #[test]
+    fn inner_small_blocked_matches_saxpy_bitwise() {
+        let mut p = test_pool();
+        // rows chosen to exercise full MR=8 panels plus a 5-row tail;
+        // b carries stored zeros (the w != 0.0 skip) and a negative column
+        let rows = 21;
+        let kdim = 3;
+        let q = 2;
+        let av: Vec<f64> = (0..rows * kdim)
+            .map(|i| u64_to_unit_f64(splitmix64_at(7, i as u64)) - 0.5)
+            .collect();
+        let a = Buf::F64(av);
+        let b = HostMat::from_rows_f64(&[vec![1.25, -0.5], vec![0.0, 2.0], vec![-3.5, 0.0]]);
+        let plain = inner_small(&a, rows, &b, BinOp::Mul, AggOp::Sum, false, &mut p).unwrap();
+        let blocked = inner_small(&a, rows, &b, BinOp::Mul, AggOp::Sum, true, &mut p).unwrap();
+        assert_eq!(plain, blocked, "register-blocked GEMM must be bit-exact");
+        assert_eq!(plain.len(), rows * q);
     }
 
     #[test]
@@ -1517,9 +1779,14 @@ mod tests {
         )
         .unwrap();
         let mut p = test_pool();
-        for vectorized in [true, false] {
-            let rf = eval_strip(&fast, &[], 0, 16, vectorized, &mut p).unwrap();
-            let rs = eval_strip(&slow, &[], 0, 16, vectorized, &mut p).unwrap();
+        for (vectorized, simd) in [(true, false), (true, true), (false, false)] {
+            let opts = EvalOpts {
+                vectorized,
+                simd,
+                simd_reductions: false,
+            };
+            let rf = eval_strip(&fast, &[], 0, 16, opts, &mut p).unwrap();
+            let rs = eval_strip(&slow, &[], 0, 16, opts, &mut p).unwrap();
             let got = &rf[*fast.target_regs.first().unwrap()];
             let want = &rs[*slow.target_regs.first().unwrap()];
             assert_eq!(got, want);

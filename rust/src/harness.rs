@@ -321,6 +321,9 @@ pub fn fig7(s: &Scale) -> Result<Table> {
         for mode in [Mode::FmIm, Mode::FmEm] {
             let eng = engine_for(s, mode, 1)?;
             let x = crate::datasets::spectral_like(&eng, s.n_small, 32, 42, None)?;
+            // Dataset creation queues simulated SSD writes; drain them so
+            // the timed region measures the algorithm, not leftover bursts.
+            eng.ssd.drain_bursts();
             let secs = run_alg(&x, alg, 10, s.iters)?;
             t.add(format!("{} {}", alg.label(), mode.label()), secs, "s");
         }
@@ -329,6 +332,7 @@ pub fn fig7(s: &Scale) -> Result<Table> {
         let x = crate::datasets::spectral_like(&eng, s.n_small, 32, 42, None)?;
         let r = RefMat::from_fm(&x)?;
         let init = algs::kmeans::init_centroids(&x, 10, 1)?;
+        eng.ssd.drain_bursts();
         let t0 = Instant::now();
         match alg {
             Alg::Correlation => {
@@ -366,6 +370,7 @@ pub fn fig8(s: &Scale, max_threads: usize) -> Result<Table> {
             for threads in 1..=max_threads {
                 let eng = engine_for(&s2, mode, threads)?;
                 let x = dataset(&eng, s2.n, 32)?;
+                eng.ssd.drain_bursts();
                 eng.metrics.reset();
                 let secs = run_alg(&x, alg, 10, s2.iters)?;
                 let m = eng.metrics.snapshot();
@@ -455,9 +460,12 @@ pub fn fig10(s: &Scale, ks: &[usize]) -> Result<Table> {
 /// paper order: base (none) -> +mem-alloc (chunk recycling) -> +mem-fuse
 /// -> +cache-fuse, plus this repo's `+strip-fusion` step (liveness-driven
 /// register reuse, in-place kernels and peephole-fused VUDF chains in the
-/// strip evaluator). Reported as speedup over base, on SSDs (EM) or in
-/// memory (IM); each row carries the strip-allocation counters
-/// (`buf_allocs` / `buf_reuses` / `inplace_ops` / `fused_chain_len`).
+/// strip evaluator) and the `+simd` step (explicit lane kernels and
+/// register-blocked GEMM microkernels, `EngineConfig::simd_kernels`).
+/// Reported as speedup over base, on SSDs (EM) or in memory (IM); each
+/// row carries the strip-allocation counters (`buf_allocs` / `buf_reuses`
+/// / `inplace_ops` / `fused_chain_len`) and the microkernel counters
+/// (`simd_strips` / `simd_lanes` / `gemm_panels`).
 pub fn fig11(s: &Scale, em: bool) -> Result<Table> {
     let mode = if em { Mode::FmEm } else { Mode::FmIm };
     let mut t = Table::new(format!(
@@ -465,26 +473,29 @@ pub fn fig11(s: &Scale, em: bool) -> Result<Table> {
         if em { "a: SSD" } else { "b: in-mem" },
         s.n
     ));
-    // (label, recycle, fuse_mem, fuse_cache, strip_fusion)
+    // (label, recycle, fuse_mem, fuse_cache, strip_fusion, simd)
     let configs = [
-        ("base", false, false, false, false),
-        ("+mem-alloc", true, false, false, false),
-        ("+mem-fuse", true, true, false, false),
-        ("+cache-fuse", true, true, true, false),
-        ("+strip-fusion", true, true, true, true),
+        ("base", false, false, false, false, false),
+        ("+mem-alloc", true, false, false, false, false),
+        ("+mem-fuse", true, true, false, false, false),
+        ("+cache-fuse", true, true, true, false, false),
+        ("+strip-fusion", true, true, true, true, false),
+        ("+simd", true, true, true, true, true),
     ];
     for alg in ALL_ALGS {
         let mut base_secs = None;
-        for (label, recycle, fm, fc, sf) in configs {
+        for (label, recycle, fm, fc, sf, simd) in configs {
             let mut cfg = config_for(s, mode, s.threads);
             cfg.recycle_chunks = recycle;
             cfg.fuse_mem = fm;
             cfg.fuse_cache = fc;
             cfg.inplace_ops = sf;
             cfg.peephole_fuse = sf;
+            cfg.simd_kernels = simd;
             cfg.xla_dispatch = false; // isolate the engine
             let eng = Engine::new(cfg)?;
             let x = dataset(&eng, s.n, 32)?;
+            eng.ssd.drain_bursts();
             eng.metrics.reset();
             let secs = run_alg(&x, alg, 10, s.iters)?;
             let m = eng.metrics.snapshot();
@@ -502,6 +513,9 @@ pub fn fig11(s: &Scale, em: bool) -> Result<Table> {
                     ("buf_reuses".into(), m.buf_reuses as f64),
                     ("inplace_ops".into(), m.inplace_ops as f64),
                     ("fused_len".into(), m.fused_chain_len as f64),
+                    ("simd_strips".into(), m.simd_strips as f64),
+                    ("simd_lanes".into(), m.simd_lanes_f64 as f64),
+                    ("gemm_panels".into(), m.gemm_panels as f64),
                 ],
             );
         }

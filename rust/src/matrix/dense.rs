@@ -567,7 +567,10 @@ mod tests {
             for j in 0..ncol as usize {
                 for r in 0..prows {
                     // value = global_row + 1000*col
-                    buf.set(j * prows + r, Scalar::F64((r0 as usize + r) as f64 + 1000.0 * j as f64));
+                    buf.set(
+                        j * prows + r,
+                        Scalar::F64((r0 as usize + r) as f64 + 1000.0 * j as f64),
+                    );
                 }
             }
             b.write_partition_buf(i, &buf).unwrap();

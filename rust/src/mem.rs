@@ -175,6 +175,9 @@ pub struct StripPool {
     inplace: u64,
     spmm_strips: u64,
     spmm_nnz: u64,
+    simd_strips: u64,
+    simd_lanes_f64: u64,
+    gemm_panels: u64,
 }
 
 fn dtype_slot(dt: DType) -> usize {
@@ -200,6 +203,9 @@ impl StripPool {
             inplace: 0,
             spmm_strips: 0,
             spmm_nnz: 0,
+            simd_strips: 0,
+            simd_lanes_f64: 0,
+            gemm_panels: 0,
         }
     }
 
@@ -243,6 +249,30 @@ impl StripPool {
         self.spmm_strips += 1;
         self.spmm_nnz += nnz;
     }
+
+    /// Record a strip whose evaluation ran at least one explicit SIMD
+    /// lane kernel or blocked GEMM panel (`Metrics::simd_strips`).
+    pub fn count_simd_strip(&mut self) {
+        self.simd_strips += 1;
+    }
+
+    /// Record full f64x4 lane groups processed by a hand-unrolled
+    /// elementwise/fused-chain kernel (`Metrics::simd_lanes_f64`).
+    pub fn count_simd_lanes_f64(&mut self, lanes: u64) {
+        self.simd_lanes_f64 += lanes;
+    }
+
+    /// Record register-blocked GEMM panels (`Metrics::gemm_panels`).
+    pub fn count_gemm_panels(&mut self, panels: u64) {
+        self.gemm_panels += panels;
+    }
+
+    /// Total SIMD work recorded so far (lane groups + GEMM panels). The
+    /// strip evaluator snapshots this around a strip to decide whether the
+    /// strip counts toward `Metrics::simd_strips`.
+    pub fn simd_work(&self) -> u64 {
+        self.simd_lanes_f64 + self.gemm_panels
+    }
 }
 
 impl Drop for StripPool {
@@ -254,6 +284,15 @@ impl Drop for StripPool {
             .spmm_strips
             .fetch_add(self.spmm_strips, Ordering::Relaxed);
         self.metrics.spmm_nnz.fetch_add(self.spmm_nnz, Ordering::Relaxed);
+        self.metrics
+            .simd_strips
+            .fetch_add(self.simd_strips, Ordering::Relaxed);
+        self.metrics
+            .simd_lanes_f64
+            .fetch_add(self.simd_lanes_f64, Ordering::Relaxed);
+        self.metrics
+            .gemm_panels
+            .fetch_add(self.gemm_panels, Ordering::Relaxed);
     }
 }
 

@@ -60,6 +60,15 @@ pub struct Metrics {
     /// Sparse entries streamed through SpMM (the workload's nnz per pass
     /// — the sparse analogue of Table IV's I/O accounting).
     pub spmm_nnz: AtomicU64,
+    /// Strips whose evaluation ran at least one explicit SIMD lane kernel
+    /// or register-blocked GEMM panel (`EngineConfig::simd_kernels`).
+    pub simd_strips: AtomicU64,
+    /// Full f64x4 lane groups processed by the hand-unrolled elementwise
+    /// and fused-chain kernels (tails excluded — 4 elements each).
+    pub simd_lanes_f64: AtomicU64,
+    /// Register-blocked panels executed by the `inner_prod_small` /
+    /// `inner_wide_tall` GEMM microkernels.
+    pub gemm_panels: AtomicU64,
     /// Target partitions handed to the asynchronous write-back writer
     /// instead of being written through synchronously (§III-B3 write
     /// path; [`crate::matrix::cache::PartitionCache`]).
@@ -124,6 +133,9 @@ impl Metrics {
             fused_chain_len: self.fused_chain_len.load(Ordering::Relaxed),
             spmm_strips: self.spmm_strips.load(Ordering::Relaxed),
             spmm_nnz: self.spmm_nnz.load(Ordering::Relaxed),
+            simd_strips: self.simd_strips.load(Ordering::Relaxed),
+            simd_lanes_f64: self.simd_lanes_f64.load(Ordering::Relaxed),
+            gemm_panels: self.gemm_panels.load(Ordering::Relaxed),
             wb_enqueued: self.wb_enqueued.load(Ordering::Relaxed),
             wb_coalesced: self.wb_coalesced.load(Ordering::Relaxed),
             wb_flush_waits: self.wb_flush_waits.load(Ordering::Relaxed),
@@ -157,6 +169,9 @@ impl Metrics {
             &s.fused_chain_len,
             &s.spmm_strips,
             &s.spmm_nnz,
+            &s.simd_strips,
+            &s.simd_lanes_f64,
+            &s.gemm_panels,
             &s.wb_enqueued,
             &s.wb_coalesced,
             &s.wb_flush_waits,
@@ -192,6 +207,9 @@ pub struct MetricsSnapshot {
     pub fused_chain_len: u64,
     pub spmm_strips: u64,
     pub spmm_nnz: u64,
+    pub simd_strips: u64,
+    pub simd_lanes_f64: u64,
+    pub gemm_panels: u64,
     pub wb_enqueued: u64,
     pub wb_coalesced: u64,
     pub wb_flush_waits: u64,
@@ -224,6 +242,9 @@ impl MetricsSnapshot {
             fused_chain_len: self.fused_chain_len - earlier.fused_chain_len,
             spmm_strips: self.spmm_strips - earlier.spmm_strips,
             spmm_nnz: self.spmm_nnz - earlier.spmm_nnz,
+            simd_strips: self.simd_strips - earlier.simd_strips,
+            simd_lanes_f64: self.simd_lanes_f64 - earlier.simd_lanes_f64,
+            gemm_panels: self.gemm_panels - earlier.gemm_panels,
             wb_enqueued: self.wb_enqueued - earlier.wb_enqueued,
             wb_coalesced: self.wb_coalesced - earlier.wb_coalesced,
             wb_flush_waits: self.wb_flush_waits - earlier.wb_flush_waits,

@@ -26,7 +26,7 @@ pub mod ops;
 pub mod registry;
 
 pub use buf::Buf;
-pub use ops::{AggOp, BinOp, UnOp};
+pub use ops::{AggOp, BinOp, UnOp, F32_LANES, F64_LANES};
 pub use registry::{CustomVudf, VudfRegistry};
 
 use crate::error::{FmError, Result};
@@ -90,6 +90,59 @@ pub fn binary_sv(op: BinOp, s: crate::dtype::Scalar, b: &Buf, vectorized: bool) 
     } else {
         op.apply_broadcast_scalar_mode(b, &a, BroadcastSide::ScalarLeft)
     }
+}
+
+/// uVUDF through the explicit lane kernels (`EngineConfig::simd_kernels`):
+/// hand-unrolled f64x4/f32x8 form when one covers the op/dtype, the plain
+/// vectorized path otherwise. Returns the output plus the number of full
+/// f64x4 lane groups processed (0 on fallback) for
+/// `Metrics::simd_lanes_f64`. Bit-identical to [`unary`] with
+/// `vectorized = true` — pinned by `tests/simd_parity.rs`.
+pub fn unary_lanes(op: UnOp, a: &Buf) -> Result<(Buf, u64)> {
+    match op.apply_lanes(a) {
+        Some(r) => Ok(r),
+        None => Ok((op.apply(a)?, 0)),
+    }
+}
+
+/// bVUDF1 through the lane kernels (see [`unary_lanes`] for the contract).
+pub fn binary_vv_lanes(op: BinOp, a: &Buf, b: &Buf) -> Result<(Buf, u64)> {
+    if a.len() != b.len() {
+        return Err(FmError::Shape(format!(
+            "binary_vv length mismatch: {} vs {}",
+            a.len(),
+            b.len()
+        )));
+    }
+    if a.dtype() != b.dtype() {
+        return Err(FmError::DType(format!(
+            "binary_vv dtype mismatch: {} vs {} (GenOp layer must insert casts)",
+            a.dtype(),
+            b.dtype()
+        )));
+    }
+    match op.apply_vv_lanes(a, b) {
+        Some(r) => Ok(r),
+        None => Ok((op.apply_vv(a, b)?, 0)),
+    }
+}
+
+/// bVUDF2 through the lane kernels (see [`unary_lanes`] for the contract).
+pub fn binary_vs_lanes(op: BinOp, a: &Buf, s: crate::dtype::Scalar) -> Result<(Buf, u64)> {
+    let s = s.cast(a.dtype());
+    if let Some(r) = op.apply_broadcast_lanes(a, s.as_f64(), BroadcastSide::ScalarRight) {
+        return Ok(r);
+    }
+    Ok((binary_vs(op, a, s, true)?, 0))
+}
+
+/// bVUDF3 through the lane kernels (see [`unary_lanes`] for the contract).
+pub fn binary_sv_lanes(op: BinOp, s: crate::dtype::Scalar, b: &Buf) -> Result<(Buf, u64)> {
+    let s = s.cast(b.dtype());
+    if let Some(r) = op.apply_broadcast_lanes(b, s.as_f64(), BroadcastSide::ScalarLeft) {
+        return Ok(r);
+    }
+    Ok((binary_sv(op, s, b, true)?, 0))
 }
 
 /// Which side of a broadcast binary op is the scalar.
@@ -157,6 +210,66 @@ pub fn binary_rowvec(
         out.copy_from(j * rows, &r);
     }
     Ok(out)
+}
+
+/// [`binary_colvec`] through the lane kernels: each column is one bVUDF1
+/// lane call (see [`unary_lanes`] for the contract).
+pub fn binary_colvec_lanes(
+    op: BinOp,
+    a: &Buf,
+    v: &Buf,
+    rows: usize,
+    cols: usize,
+) -> Result<(Buf, u64)> {
+    if a.len() != rows * cols || v.len() != rows {
+        return Err(FmError::Shape(format!(
+            "binary_colvec: a={} v={} rows={} cols={}",
+            a.len(),
+            v.len(),
+            rows,
+            cols
+        )));
+    }
+    let v = v.cast(a.dtype())?;
+    let mut out = Buf::alloc(op.out_dtype(a.dtype()), a.len());
+    let mut groups = 0u64;
+    for j in 0..cols {
+        let col = a.slice(j * rows, rows);
+        let (r, g) = binary_vv_lanes(op, &col, &v)?;
+        groups += g;
+        out.copy_from(j * rows, &r);
+    }
+    Ok((out, groups))
+}
+
+/// [`binary_rowvec`] through the lane kernels: each column is one bVUDF2
+/// lane call (see [`unary_lanes`] for the contract).
+pub fn binary_rowvec_lanes(
+    op: BinOp,
+    a: &Buf,
+    w: &Buf,
+    rows: usize,
+    cols: usize,
+) -> Result<(Buf, u64)> {
+    if a.len() != rows * cols || w.len() != cols {
+        return Err(FmError::Shape(format!(
+            "binary_rowvec: a={} w={} rows={} cols={}",
+            a.len(),
+            w.len(),
+            rows,
+            cols
+        )));
+    }
+    let w = w.cast(a.dtype())?;
+    let mut out = Buf::alloc(op.out_dtype(a.dtype()), a.len());
+    let mut groups = 0u64;
+    for j in 0..cols {
+        let col = a.slice(j * rows, rows);
+        let (r, g) = binary_vs_lanes(op, &col, w.get(j))?;
+        groups += g;
+        out.copy_from(j * rows, &r);
+    }
+    Ok((out, groups))
 }
 
 #[cfg(test)]

@@ -650,7 +650,9 @@ impl AggOp {
             // hot monomorphic loops: the compiler turns these into SIMD
             // reductions (the paper's manually-flattened reduction vector)
             (AggOp::Sum, Buf::F64(v)) => Scalar::F64(v.iter().sum()),
-            (AggOp::Min, Buf::F64(v)) => Scalar::F64(v.iter().copied().fold(f64::INFINITY, f64::min)),
+            (AggOp::Min, Buf::F64(v)) => {
+                Scalar::F64(v.iter().copied().fold(f64::INFINITY, f64::min))
+            }
             (AggOp::Max, Buf::F64(v)) => {
                 Scalar::F64(v.iter().copied().fold(f64::NEG_INFINITY, f64::max))
             }
@@ -718,6 +720,263 @@ impl AggOp {
             }
         }
         Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Explicit SIMD lane kernels (`EngineConfig::simd_kernels`)
+// ---------------------------------------------------------------------------
+//
+// Stable-Rust "SIMD": hand-unrolled lane groups — [`F64_LANES`]-wide f64 /
+// [`F32_LANES`]-wide f32 local arrays the autovectorizer keeps in vector
+// registers, with an explicit scalar tail for the 0..lane-width remainder.
+// Every lane kernel evaluates exactly the same scalar function per element
+// as the un-unrolled `apply*` paths above, so outputs are **bit-identical**
+// (pinned by `tests/simd_parity.rs`); the win is amortized per-element op
+// dispatch and full-width loads/stores. The one deliberate exception is
+// [`AggOp::reduce_lanes`], which changes the *accumulation order* of a
+// reduction and therefore sits behind the separate
+// `EngineConfig::simd_reductions` opt-in (documented ≤4-ULP drift on the
+// suite's well-conditioned inputs).
+
+/// f64 lane width: 4 doubles = one 256-bit vector register.
+pub const F64_LANES: usize = 4;
+/// f32 lane width: 8 singles = one 256-bit vector register.
+pub const F32_LANES: usize = 8;
+
+/// Unrolled unary map over f64 lanes; returns the number of full lane
+/// groups processed (the `Metrics::simd_lanes_f64` contribution).
+#[inline]
+fn map_lanes_f64(src: &[f64], out: &mut [f64], f: impl Fn(f64) -> f64 + Copy) -> u64 {
+    let cut = src.len() - src.len() % F64_LANES;
+    let mut groups = 0u64;
+    for (o, x) in out[..cut]
+        .chunks_exact_mut(F64_LANES)
+        .zip(src[..cut].chunks_exact(F64_LANES))
+    {
+        let y = [f(x[0]), f(x[1]), f(x[2]), f(x[3])];
+        o.copy_from_slice(&y);
+        groups += 1;
+    }
+    for (o, x) in out[cut..].iter_mut().zip(&src[cut..]) {
+        *o = f(*x);
+    }
+    groups
+}
+
+/// Unrolled unary map over f32 lanes (8-wide).
+#[inline]
+fn map_lanes_f32(src: &[f32], out: &mut [f32], f: impl Fn(f32) -> f32 + Copy) {
+    let cut = src.len() - src.len() % F32_LANES;
+    for (o, x) in out[..cut]
+        .chunks_exact_mut(F32_LANES)
+        .zip(src[..cut].chunks_exact(F32_LANES))
+    {
+        let y = [
+            f(x[0]),
+            f(x[1]),
+            f(x[2]),
+            f(x[3]),
+            f(x[4]),
+            f(x[5]),
+            f(x[6]),
+            f(x[7]),
+        ];
+        o.copy_from_slice(&y);
+    }
+    for (o, x) in out[cut..].iter_mut().zip(&src[cut..]) {
+        *o = f(*x);
+    }
+}
+
+/// Unrolled binary zip over f64 lanes; returns full lane groups.
+#[inline]
+fn zip_lanes_f64(a: &[f64], b: &[f64], out: &mut [f64], f: impl Fn(f64, f64) -> f64 + Copy) -> u64 {
+    let cut = a.len() - a.len() % F64_LANES;
+    let mut groups = 0u64;
+    for ((o, x), y) in out[..cut]
+        .chunks_exact_mut(F64_LANES)
+        .zip(a[..cut].chunks_exact(F64_LANES))
+        .zip(b[..cut].chunks_exact(F64_LANES))
+    {
+        let r = [f(x[0], y[0]), f(x[1], y[1]), f(x[2], y[2]), f(x[3], y[3])];
+        o.copy_from_slice(&r);
+        groups += 1;
+    }
+    for ((o, x), y) in out[cut..].iter_mut().zip(&a[cut..]).zip(&b[cut..]) {
+        *o = f(*x, *y);
+    }
+    groups
+}
+
+/// Unrolled binary zip over f32 lanes (8-wide).
+#[inline]
+fn zip_lanes_f32(a: &[f32], b: &[f32], out: &mut [f32], f: impl Fn(f32, f32) -> f32 + Copy) {
+    let cut = a.len() - a.len() % F32_LANES;
+    for ((o, x), y) in out[..cut]
+        .chunks_exact_mut(F32_LANES)
+        .zip(a[..cut].chunks_exact(F32_LANES))
+        .zip(b[..cut].chunks_exact(F32_LANES))
+    {
+        let r = [
+            f(x[0], y[0]),
+            f(x[1], y[1]),
+            f(x[2], y[2]),
+            f(x[3], y[3]),
+            f(x[4], y[4]),
+            f(x[5], y[5]),
+            f(x[6], y[6]),
+            f(x[7], y[7]),
+        ];
+        o.copy_from_slice(&r);
+    }
+    for ((o, x), y) in out[cut..].iter_mut().zip(&a[cut..]).zip(&b[cut..]) {
+        *o = f(*x, *y);
+    }
+}
+
+impl UnOp {
+    /// Lane-kernel form of [`UnOp::apply`]: `Some((out, f64_lane_groups))`
+    /// when a lane kernel covers this op/dtype, `None` to fall back to the
+    /// plain vectorized path. Covered: every f64→f64 op (via the inlined
+    /// [`UnOp::eval_f64`], which is pinned to `f64_fn`) and every f32→f32
+    /// op (native f32 for the monomorphic `apply` arms, through-f64 for
+    /// the rest — mirroring `apply`'s generic path bit for bit).
+    pub fn apply_lanes(self, a: &Buf) -> Option<(Buf, u64)> {
+        match a {
+            Buf::F64(v) if self.out_dtype(DType::F64) == DType::F64 => {
+                let mut out = vec![0.0f64; v.len()];
+                let groups = map_lanes_f64(v, &mut out, |x| self.eval_f64(x));
+                Some((Buf::F64(out), groups))
+            }
+            Buf::F32(v) if self.out_dtype(DType::F32) == DType::F32 => {
+                let mut out = vec![0.0f32; v.len()];
+                match self {
+                    // apply's monomorphic f32 arms compute natively
+                    UnOp::Neg => map_lanes_f32(v, &mut out, |x| -x),
+                    UnOp::Abs => map_lanes_f32(v, &mut out, |x| x.abs()),
+                    UnOp::Sq => map_lanes_f32(v, &mut out, |x| x * x),
+                    // the rest mirror apply's generic through-f64 path
+                    _ => map_lanes_f32(v, &mut out, |x| self.eval_f64(x as f64) as f32),
+                }
+                Some((Buf::F32(out), 0))
+            }
+            _ => None,
+        }
+    }
+}
+
+impl BinOp {
+    /// Lane-kernel form of [`BinOp::apply_vv`] (same coverage contract as
+    /// [`UnOp::apply_lanes`]; comparison/logical ops produce Bool and stay
+    /// on the plain path).
+    pub fn apply_vv_lanes(self, a: &Buf, b: &Buf) -> Option<(Buf, u64)> {
+        match (a, b) {
+            (Buf::F64(x), Buf::F64(y)) if self.out_dtype(DType::F64) == DType::F64 => {
+                let mut out = vec![0.0f64; x.len()];
+                let groups = zip_lanes_f64(x, y, &mut out, |p, q| self.eval_f64(p, q));
+                Some((Buf::F64(out), groups))
+            }
+            (Buf::F32(x), Buf::F32(y)) if self.out_dtype(DType::F32) == DType::F32 => {
+                let mut out = vec![0.0f32; x.len()];
+                match self {
+                    // apply_vv's monomorphic f32 arms compute natively
+                    BinOp::Add => zip_lanes_f32(x, y, &mut out, |p, q| p + q),
+                    BinOp::Sub => zip_lanes_f32(x, y, &mut out, |p, q| p - q),
+                    BinOp::Mul => zip_lanes_f32(x, y, &mut out, |p, q| p * q),
+                    // the rest mirror apply_vv's generic through-f64 path
+                    _ => zip_lanes_f32(x, y, &mut out, |p, q| {
+                        self.eval_f64(p as f64, q as f64) as f32
+                    }),
+                }
+                Some((Buf::F32(out), 0))
+            }
+            _ => None,
+        }
+    }
+
+    /// Lane-kernel form of [`BinOp::apply_broadcast`] for f64 vectors (the
+    /// strip evaluator's `MapplyScalar`/`MapplyRow` hot dtype).
+    pub fn apply_broadcast_lanes(
+        self,
+        v: &Buf,
+        s: f64,
+        side: BroadcastSide,
+    ) -> Option<(Buf, u64)> {
+        match v {
+            Buf::F64(x) if self.out_dtype(DType::F64) == DType::F64 => {
+                let mut out = vec![0.0f64; x.len()];
+                let groups = match side {
+                    BroadcastSide::ScalarRight => {
+                        map_lanes_f64(x, &mut out, |p| self.eval_f64(p, s))
+                    }
+                    BroadcastSide::ScalarLeft => {
+                        map_lanes_f64(x, &mut out, |p| self.eval_f64(s, p))
+                    }
+                };
+                Some((Buf::F64(out), groups))
+            }
+            _ => None,
+        }
+    }
+}
+
+impl AggOp {
+    /// Lane-parallel f64 reduction: [`F64_LANES`] independent accumulators
+    /// swept over full lane groups, combined left-to-right, then the tail
+    /// folded in sequentially. **Order-changing** for `Sum` (deterministic,
+    /// but not the sequential fold `reduce` uses — hence the
+    /// `EngineConfig::simd_reductions` opt-in and the ≤4-ULP parity bound
+    /// in `tests/simd_parity.rs`); `Min`/`Max` are order-insensitive under
+    /// IEEE `min`/`max` NaN-skipping, so they stay result-identical.
+    pub fn reduce_lanes(self, a: &Buf) -> Option<Scalar> {
+        let Buf::F64(v) = a else { return None };
+        let cut = v.len() - v.len() % F64_LANES;
+        match self {
+            AggOp::Sum => {
+                let mut acc = [0.0f64; F64_LANES];
+                for x in v[..cut].chunks_exact(F64_LANES) {
+                    acc[0] += x[0];
+                    acc[1] += x[1];
+                    acc[2] += x[2];
+                    acc[3] += x[3];
+                }
+                let mut s = ((acc[0] + acc[1]) + acc[2]) + acc[3];
+                for x in &v[cut..] {
+                    s += x;
+                }
+                Some(Scalar::F64(s))
+            }
+            AggOp::Min => {
+                let mut acc = [f64::INFINITY; F64_LANES];
+                for x in v[..cut].chunks_exact(F64_LANES) {
+                    acc[0] = acc[0].min(x[0]);
+                    acc[1] = acc[1].min(x[1]);
+                    acc[2] = acc[2].min(x[2]);
+                    acc[3] = acc[3].min(x[3]);
+                }
+                let mut s = acc[0].min(acc[1]).min(acc[2]).min(acc[3]);
+                for x in &v[cut..] {
+                    s = s.min(*x);
+                }
+                Some(Scalar::F64(s))
+            }
+            AggOp::Max => {
+                let mut acc = [f64::NEG_INFINITY; F64_LANES];
+                for x in v[..cut].chunks_exact(F64_LANES) {
+                    acc[0] = acc[0].max(x[0]);
+                    acc[1] = acc[1].max(x[1]);
+                    acc[2] = acc[2].max(x[2]);
+                    acc[3] = acc[3].max(x[3]);
+                }
+                let mut s = acc[0].max(acc[1]).max(acc[2]).max(acc[3]);
+                for x in &v[cut..] {
+                    s = s.max(*x);
+                }
+                Some(Scalar::F64(s))
+            }
+            _ => None,
+        }
     }
 }
 
@@ -888,6 +1147,95 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn lane_kernels_match_plain_apply() {
+        // lengths straddle every tail remainder of both lane widths
+        let vals: Vec<f64> = vec![
+            -2.5,
+            -1.0,
+            0.0,
+            -0.0,
+            0.5,
+            1.5,
+            3.0,
+            f64::NAN,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            9.25,
+            -7.0,
+            0.125,
+            2.0,
+            -0.25,
+            4.0,
+            5.5,
+        ];
+        for len in 0..vals.len() {
+            let a64 = Buf::F64(vals[..len].to_vec());
+            let a32 = Buf::F32(vals[..len].iter().map(|x| *x as f32).collect());
+            let b64 = Buf::F64(vals[..len].iter().rev().cloned().collect());
+            let b32 = Buf::F32(vals[..len].iter().rev().map(|x| *x as f32).collect());
+            // bit-level comparison: NaN outputs must match too, which
+            // Buf's PartialEq (IEEE NaN != NaN) cannot check
+            for op in ALL_UN {
+                for a in [&a64, &a32] {
+                    if let Some((got, _)) = op.apply_lanes(a) {
+                        assert_eq!(
+                            got.to_bytes(),
+                            op.apply(a).unwrap().to_bytes(),
+                            "{op:?} {} len={len}",
+                            a.dtype()
+                        );
+                    }
+                }
+            }
+            for op in ALL_BIN {
+                for (a, b) in [(&a64, &b64), (&a32, &b32)] {
+                    if let Some((got, _)) = op.apply_vv_lanes(a, b) {
+                        assert_eq!(
+                            got.to_bytes(),
+                            op.apply_vv(a, b).unwrap().to_bytes(),
+                            "{op:?} {} len={len}",
+                            a.dtype()
+                        );
+                    }
+                }
+                for side in [BroadcastSide::ScalarRight, BroadcastSide::ScalarLeft] {
+                    if let Some((got, _)) = op.apply_broadcast_lanes(&a64, 1.5, side) {
+                        let s = Buf::from_f64(&[1.5]);
+                        assert_eq!(
+                            got.to_bytes(),
+                            op.apply_broadcast(&a64, &s, side).unwrap().to_bytes(),
+                            "{op:?} broadcast len={len}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lane_reduce_min_max_identical_sum_close() {
+        let v: Vec<f64> = (0..23).map(|i| 0.5 + (i as f64) * 0.37).collect();
+        let b = Buf::F64(v);
+        for op in [AggOp::Min, AggOp::Max] {
+            // min/max are order-insensitive: lane form is bit-identical
+            assert_eq!(op.reduce_lanes(&b).unwrap(), op.reduce(&b), "{op:?}");
+        }
+        let lanes = AggOp::Sum.reduce_lanes(&b).unwrap().as_f64();
+        let seq = AggOp::Sum.reduce(&b).as_f64();
+        let ulps = (lanes.to_bits() as i64 - seq.to_bits() as i64).unsigned_abs();
+        assert!(ulps <= 4, "lane sum drifted {ulps} ULPs");
+        // NaN-skipping min/max survive lanes: IEEE min/max drop NaN the
+        // same way in any order (all-NaN degenerates to the identity on
+        // BOTH paths — lane and sequential agree bit for bit)
+        let nan = Buf::F64(vec![f64::NAN; 7]);
+        assert_eq!(AggOp::Min.reduce_lanes(&nan).unwrap(), AggOp::Min.reduce(&nan));
+        assert_eq!(AggOp::Max.reduce_lanes(&nan).unwrap(), AggOp::Max.reduce(&nan));
+        let mixed = Buf::F64(vec![f64::NAN, 3.0, f64::NAN, -1.0, f64::NAN]);
+        assert_eq!(AggOp::Min.reduce_lanes(&mixed).unwrap(), Scalar::F64(-1.0));
+        assert_eq!(AggOp::Max.reduce_lanes(&mixed).unwrap(), Scalar::F64(3.0));
     }
 
     #[test]

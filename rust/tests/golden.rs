@@ -217,6 +217,93 @@ fn genop_pipeline_matches_jax_oracle() {
     let _ = &f.eng;
 }
 
+/// Blocked-GEMM microkernels vs the numpy oracle (`test_write_gemm_fixture`),
+/// BIT for bit: the fixture stores X·W (the `inner_prod_small` MR=8 panel
+/// kernel's orientation) and t(X)·Y (the crossprod wide-tall KB=4 kernel's)
+/// computed in the engine's exact fold order — ascending-k with the
+/// stored-zero skip, one sequential ascending-r accumulator per dot. Both
+/// orientations must reproduce every bit with `simd_kernels` off AND on:
+/// the microkernels block across independent outputs, never inside one
+/// output's accumulation. (96 rows = one partition, one CPU strip, so no
+/// cross-strip reassociation hides in the sink either.)
+#[test]
+fn gemm_microkernels_match_python_oracle_bitwise() {
+    use flashmatrix::exec::{splitmix64_at, u64_to_unit_f64};
+
+    let j = load_named_fixture("gemm_96x64x32.json");
+    let m = j.get("m").unwrap().as_u64().unwrap();
+    let kdim = j.get("k").unwrap().as_u64().unwrap();
+    let q = j.get("q").unwrap().as_u64().unwrap();
+    let x_seed = j.get("x_seed").unwrap().as_u64().unwrap();
+    let y_seed = j.get("y_seed").unwrap().as_u64().unwrap();
+    let w_seed = j.get("w_seed").unwrap().as_u64().unwrap();
+    let x_scale = j.get("x_scale").unwrap().as_f64().unwrap();
+    let x_shift = j.get("x_shift").unwrap().as_f64().unwrap();
+    let w_scale = j.get("w_scale").unwrap().as_f64().unwrap();
+    let w_shift = j.get("w_shift").unwrap().as_f64().unwrap();
+    let w_clip = j.get("w_zero_clip").unwrap().as_f64().unwrap();
+    let want_w = j.get("w").unwrap().f64_vec().unwrap();
+    let want_prod = j.get("prod").unwrap().f64_vec().unwrap();
+    let want_gram = j.get("gramian").unwrap().f64_vec().unwrap();
+
+    // W regenerated from the shared stream (row-major like the mirror)
+    let mut w = HostMat::zeros(kdim as usize, q as usize, flashmatrix::dtype::DType::F64);
+    for r in 0..kdim as usize {
+        for c in 0..q as usize {
+            let v = u64_to_unit_f64(splitmix64_at(w_seed, (r * q as usize + c) as u64))
+                * w_scale
+                + w_shift;
+            let v = if v.abs() < w_clip { 0.0 } else { v };
+            w.set(r, c, flashmatrix::dtype::Scalar::F64(v));
+        }
+    }
+    let got_w = w.to_row_major_f64();
+    for (i, (a, b)) in got_w.iter().zip(&want_w).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "w[{i}]: generator diverged from the python mirror ({a} vs {b})"
+        );
+    }
+
+    for simd in [false, true] {
+        let eng = Engine::new(EngineConfig {
+            threads: 1,
+            simd_kernels: simd,
+            xla_dispatch: false,
+            chunk_bytes: 1 << 20,
+            target_part_bytes: 1 << 20,
+            ..Default::default()
+        })
+        .unwrap();
+        let x = datasets::golden_uniform(&eng, m, kdim, x_seed, x_scale, x_shift, 0.0).unwrap();
+        let y = datasets::golden_uniform(&eng, m, q, y_seed, x_scale, x_shift, 0.0).unwrap();
+
+        let prod = x
+            .inner_prod_small(&w, BinOp::Mul, AggOp::Sum)
+            .unwrap()
+            .to_host()
+            .unwrap()
+            .to_row_major_f64();
+        for (i, (a, b)) in prod.iter().zip(&want_prod).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "simd={simd} prod[{i}]: rust {a} vs numpy {b}"
+            );
+        }
+
+        let gram = x.crossprod(&y).unwrap().to_row_major_f64();
+        for (i, (a, b)) in gram.iter().zip(&want_gram).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "simd={simd} gramian[{i}]: rust {a} vs numpy {b}"
+            );
+        }
+    }
+}
+
 /// PageRank vs the numpy oracle (`test_write_pagerank_fixture`): the
 /// engine regenerates the same synthetic graph from the fixture's seed
 /// (datasets::pagerank_graph mirrors `pagerank_graph_ref`) and the power

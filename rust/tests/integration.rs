@@ -723,6 +723,41 @@ fn logistic_out_of_core_matches_in_memory() {
     assert_rel_close(&im, &em, 1e-9, "logistic IM vs out-of-core");
 }
 
+/// SVD under the out-of-core forcing harness: the power-iteration loop's
+/// repeated Gramian passes re-read partitions the one-partition cache
+/// evicted on the previous pass, every iteration.
+#[test]
+fn svd_out_of_core_matches_in_memory() {
+    let (im, em) = flashmatrix::testutil::rerun_out_of_core("svd", |eng| {
+        let x = datasets::spectral_like(eng, 120_000, 8, 17, None).unwrap();
+        let s = flashmatrix::algs::svd(&x, 4).unwrap();
+        let mut fp = s.sigma.clone();
+        // right singular vectors up to sign (the deterministic runs agree
+        // on signs too, but the parity contract is the subspace)
+        fp.extend(s.v.iter().map(|v| v.abs()));
+        fp
+    });
+    assert_rel_close(&im, &em, 1e-9, "svd IM vs out-of-core");
+}
+
+/// Summary statistics (six fused agg.col sinks in one pass) under the
+/// same forcing: one streaming pass whose column stats must survive cache
+/// replacement mid-matrix.
+#[test]
+fn summary_out_of_core_matches_in_memory() {
+    let (im, em) = flashmatrix::testutil::rerun_out_of_core("summary", |eng| {
+        let x = datasets::uniform(eng, 130_000, 7, -2.0, 2.0, 29, None).unwrap();
+        let s = flashmatrix::algs::summary(&x).unwrap();
+        let mut fp = s.min.clone();
+        fp.extend(s.max.clone());
+        fp.extend(s.mean.clone());
+        fp.extend(s.var.clone());
+        fp.extend(s.nnz.clone());
+        fp
+    });
+    assert_rel_close(&im, &em, 1e-10, "summary IM vs out-of-core");
+}
+
 /// Min/Max aggregation must give identical results with `vectorized_udf`
 /// on and off when NaNs are present: the vectorized `reduce` fast paths
 /// (`f64::min`/`max`) and the scalar `fold_scalar` path (`<`/`>`) share

@@ -1,0 +1,457 @@
+//! SIMD/scalar parity property suite (`EngineConfig::simd_kernels`).
+//!
+//! The lane kernels and blocked GEMM microkernels are *reorderings of
+//! independent outputs*: no single output's accumulation order changes, so
+//! every default-config result must be bit-identical to the scalar path —
+//! including NaN payloads, signed zeros and infinities. This suite pins
+//! that contract at both layers:
+//!
+//! * kernel level: `vudf::*_lanes` vs the plain forms, across every dtype
+//!   (F64/F32/I64/I32/Bool), every tail remainder of the 4-wide f64 and
+//!   8-wide f32 lane groups, and generated IEEE-special placements;
+//! * engine level: a workload battery (fused elementwise chain, GEMM both
+//!   orientations, row/col aggregation, which.min) byte-compared between
+//!   `simd_kernels` on/off, in memory and out of core, for both
+//!   `vectorized_udf` modes.
+//!
+//! The one opt-in exception, `simd_reductions`, reassociates sums across
+//! four lane accumulators; its bound — at most 4 ULP per strip reduction —
+//! is asserted here too, alongside bit-identity for the order-insensitive
+//! min/max lane forms (all-NaN and first-lane-NaN included).
+
+use std::sync::Arc;
+
+use flashmatrix::config::EngineConfig;
+use flashmatrix::datasets;
+use flashmatrix::dtype::{DType, Scalar};
+use flashmatrix::fmr::{Engine, FmMatrix};
+use flashmatrix::matrix::HostMat;
+use flashmatrix::testutil::{out_of_core_config, TempDir};
+use flashmatrix::util::quickcheck::{forall, Gen};
+use flashmatrix::vudf::{self, AggOp, BinOp, Buf, UnOp, F32_LANES, F64_LANES};
+
+const SPECIALS: [f64; 5] = [f64::NAN, 0.0, -0.0, f64::INFINITY, f64::NEG_INFINITY];
+
+/// Every length 0..=17 hits every tail remainder of both lane widths
+/// (17 > 2 * F32_LANES); the const assertions keep that in sync.
+const TAIL_LENS: std::ops::RangeInclusive<usize> = 0..=17;
+const _: () = assert!(F64_LANES == 4 && F32_LANES == 8);
+
+const ALL_DTYPES: [DType; 5] = [DType::F64, DType::F32, DType::I64, DType::I32, DType::Bool];
+
+/// Random buffer of a dtype; float draws land on an IEEE special
+/// (NaN/±0.0/±Inf) roughly one time in eight so tails, lane heads and
+/// specials cross.
+fn gen_buf(g: &mut Gen, dtype: DType, len: usize) -> Buf {
+    let mut b = Buf::alloc(dtype, len);
+    for i in 0..len {
+        let mut v = g.f64_in(-3.0, 3.0);
+        if g.usize_in(0, 7) == 0 {
+            v = *g.choose(&SPECIALS);
+        }
+        let s = match dtype {
+            DType::F64 => Scalar::F64(v),
+            DType::F32 => Scalar::F32(v as f32),
+            DType::I64 => Scalar::I64(g.usize_in(0, 12) as i64 - 6),
+            DType::I32 => Scalar::I32(g.usize_in(0, 12) as i32 - 6),
+            DType::Bool => Scalar::Bool(g.bool()),
+        };
+        b.set(i, s);
+    }
+    b
+}
+
+/// Bit-exact, NaN-safe comparison (Buf's PartialEq is IEEE).
+fn same_bits(a: &Buf, b: &Buf) -> bool {
+    a.dtype() == b.dtype() && a.to_bytes() == b.to_bytes()
+}
+
+const ALL_UNOPS: [UnOp; 13] = [
+    UnOp::Neg,
+    UnOp::Abs,
+    UnOp::Sqrt,
+    UnOp::Sq,
+    UnOp::Exp,
+    UnOp::Log,
+    UnOp::Floor,
+    UnOp::Ceil,
+    UnOp::Round,
+    UnOp::Sign,
+    UnOp::Not,
+    UnOp::NotZero,
+    UnOp::IsNa,
+];
+
+const ALL_BINOPS: [BinOp; 16] = [
+    BinOp::Add,
+    BinOp::Sub,
+    BinOp::Mul,
+    BinOp::Div,
+    BinOp::Pow,
+    BinOp::Min,
+    BinOp::Max,
+    BinOp::Eq,
+    BinOp::Ne,
+    BinOp::Lt,
+    BinOp::Le,
+    BinOp::Gt,
+    BinOp::Ge,
+    BinOp::And,
+    BinOp::Or,
+    BinOp::IfElse0,
+];
+
+#[test]
+fn prop_unary_lanes_bit_exact() {
+    forall(40, |g| {
+        let dtype = *g.choose(&ALL_DTYPES);
+        let op = *g.choose(&ALL_UNOPS);
+        for len in TAIL_LENS.chain([g.usize_in(18, 400)]) {
+            let a = gen_buf(g, dtype, len);
+            match (vudf::unary(op, &a, true), vudf::unary_lanes(op, &a)) {
+                (Ok(want), Ok((got, _))) => {
+                    if !same_bits(&want, &got) {
+                        return Err(format!("{op:?} {dtype:?} len {len}: lane != plain"));
+                    }
+                }
+                (Err(_), Err(_)) => {}
+                (w, l) => {
+                    return Err(format!(
+                        "{op:?} {dtype:?} len {len}: Ok/Err disagree (plain {}, lanes {})",
+                        w.is_ok(),
+                        l.is_ok()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_binary_lanes_bit_exact() {
+    forall(40, |g| {
+        let dtype = *g.choose(&ALL_DTYPES);
+        let op = *g.choose(&ALL_BINOPS);
+        for len in TAIL_LENS.chain([g.usize_in(18, 400)]) {
+            let a = gen_buf(g, dtype, len);
+            let b = gen_buf(g, dtype, len);
+            match (vudf::binary_vv(op, &a, &b, true), vudf::binary_vv_lanes(op, &a, &b)) {
+                (Ok(want), Ok((got, _))) => {
+                    if !same_bits(&want, &got) {
+                        return Err(format!("vv {op:?} {dtype:?} len {len}: lane != plain"));
+                    }
+                }
+                (Err(_), Err(_)) => {}
+                (w, l) => {
+                    return Err(format!(
+                        "vv {op:?} {dtype:?} len {len}: Ok/Err disagree (plain {}, lanes {})",
+                        w.is_ok(),
+                        l.is_ok()
+                    ));
+                }
+            }
+            // broadcast forms, scalar sometimes an IEEE special
+            let s = if g.bool() {
+                Scalar::F64(*g.choose(&SPECIALS))
+            } else {
+                Scalar::F64(g.f64_in(-3.0, 3.0))
+            };
+            for scalar_right in [true, false] {
+                let want = if scalar_right {
+                    vudf::binary_vs(op, &a, s, true)
+                } else {
+                    vudf::binary_sv(op, s, &a, true)
+                };
+                let got = if scalar_right {
+                    vudf::binary_vs_lanes(op, &a, s)
+                } else {
+                    vudf::binary_sv_lanes(op, s, &a)
+                };
+                match (want, got) {
+                    (Ok(want), Ok((got, _))) => {
+                        if !same_bits(&want, &got) {
+                            return Err(format!(
+                                "vs/sv {op:?} {dtype:?} len {len} right={scalar_right}: \
+                                 lane != plain"
+                            ));
+                        }
+                    }
+                    (Err(_), Err(_)) => {}
+                    (w, l) => {
+                        return Err(format!(
+                            "vs/sv {op:?} {dtype:?} len {len}: Ok/Err disagree (plain {}, \
+                             lanes {})",
+                            w.is_ok(),
+                            l.is_ok()
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_row_col_vec_lanes_bit_exact() {
+    forall(60, |g| {
+        let op = *g.choose(&[BinOp::Add, BinOp::Sub, BinOp::Mul, BinOp::Div, BinOp::Max]);
+        let rows = g.usize_in(1, 21);
+        let cols = g.usize_in(1, 4);
+        let a = gen_buf(g, DType::F64, rows * cols);
+        let v = gen_buf(g, DType::F64, rows);
+        let w = gen_buf(g, DType::F64, cols);
+        let want = vudf::binary_colvec(op, &a, &v, rows, cols, true).map_err(|e| e.to_string())?;
+        let (got, _) =
+            vudf::binary_colvec_lanes(op, &a, &v, rows, cols).map_err(|e| e.to_string())?;
+        if !same_bits(&want, &got) {
+            return Err(format!("colvec {op:?} {rows}x{cols}: lane != plain"));
+        }
+        let want = vudf::binary_rowvec(op, &a, &w, rows, cols, true).map_err(|e| e.to_string())?;
+        let (got, _) =
+            vudf::binary_rowvec_lanes(op, &a, &w, rows, cols).map_err(|e| e.to_string())?;
+        if !same_bits(&want, &got) {
+            return Err(format!("rowvec {op:?} {rows}x{cols}: lane != plain"));
+        }
+        Ok(())
+    });
+}
+
+/// Monotone integer mapping of f64 for ULP distance (±0.0 coincide).
+fn ulp_ord(x: f64) -> i64 {
+    let b = x.to_bits() as i64;
+    if b < 0 {
+        i64::MIN - b
+    } else {
+        b
+    }
+}
+
+fn ulp_diff(a: f64, b: f64) -> u64 {
+    if a.is_nan() && b.is_nan() {
+        return 0;
+    }
+    if a.is_nan() != b.is_nan() {
+        return u64::MAX;
+    }
+    ulp_ord(a).abs_diff(ulp_ord(b))
+}
+
+#[test]
+fn prop_lane_reductions_min_max_exact_sum_4ulp() {
+    forall(60, |g| {
+        for len in TAIL_LENS.chain([g.usize_in(18, 600)]) {
+            let a = gen_buf(g, DType::F64, len);
+            for op in [AggOp::Min, AggOp::Max] {
+                let want = op.reduce(&a);
+                if let Some(got) = op.reduce_lanes(&a) {
+                    // min/max lane kernels are order-insensitive: bit-exact
+                    if want.as_f64().to_bits() != got.as_f64().to_bits() {
+                        return Err(format!("{op:?} len {len}: {want:?} vs {got:?}"));
+                    }
+                }
+            }
+            let want = AggOp::Sum.reduce(&a).as_f64();
+            if let Some(got) = AggOp::Sum.reduce_lanes(&a) {
+                let d = ulp_diff(want, got.as_f64());
+                if d > 4 {
+                    return Err(format!(
+                        "Sum len {len}: lane sum {} vs {} is {d} ULP apart",
+                        got.as_f64(),
+                        want
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+fn im_engine(simd: bool, vectorized: bool) -> Arc<Engine> {
+    Engine::new(EngineConfig {
+        simd_kernels: simd,
+        vectorized_udf: vectorized,
+        xla_dispatch: false,
+        chunk_bytes: 1 << 20,
+        target_part_bytes: 1 << 18,
+        ..Default::default()
+    })
+    .expect("engine")
+}
+
+/// Small weight matrix with stored zeros and negatives: pins the blocked
+/// GEMM kernels' `w != 0.0` skip (stored zero times Inf/NaN contributes
+/// nothing on either path).
+fn weights(p: usize, q: usize) -> HostMat {
+    let rows: Vec<Vec<f64>> = (0..p)
+        .map(|i| {
+            (0..q)
+                .map(|j| {
+                    if (i + j) % 3 == 0 {
+                        0.0
+                    } else {
+                        (i as f64 - 1.5) * 0.25 - j as f64 * 0.125
+                    }
+                })
+                .collect()
+        })
+        .collect();
+    HostMat::from_rows_f64(&rows)
+}
+
+/// The engine-level workload battery, serialized to bytes for exact
+/// comparison: fused elementwise chain, both GEMM orientations, row/col
+/// aggregation, full-matrix sum and which.min.
+fn battery(eng: &Arc<Engine>, n: u64, p: u64, seed: u64) -> Vec<u8> {
+    let x = datasets::uniform(eng, n, p, -2.0, 2.0, seed, None).expect("dataset");
+    let mut out = Vec::new();
+    let fused = x
+        .sq()
+        .and_then(|m| m.mapply_scalar(Scalar::F64(0.5), BinOp::Mul, true))
+        .and_then(|m| m.mapply_scalar(Scalar::F64(1.0), BinOp::Add, true))
+        .and_then(|m| m.row_sums())
+        .and_then(|m| m.to_host())
+        .expect("fused chain");
+    out.extend(fused.buf.to_bytes());
+    out.extend(x.crossprod(&x).expect("crossprod").buf.to_bytes());
+    let w = weights(p as usize, 3);
+    let ip = x
+        .inner_prod_small(&w, BinOp::Mul, AggOp::Sum)
+        .and_then(|m| m.to_host())
+        .expect("inner_prod_small");
+    out.extend(ip.buf.to_bytes());
+    out.extend(x.col_sums().expect("col_sums").buf.to_bytes());
+    out.extend(x.agg(AggOp::Sum).expect("agg").as_f64().to_bits().to_le_bytes());
+    let wm = x
+        .which_min_row()
+        .and_then(|m| m.to_host())
+        .expect("which_min_row");
+    out.extend(wm.buf.to_bytes());
+    out
+}
+
+#[test]
+fn prop_engine_simd_parity_in_memory() {
+    forall(6, |g| {
+        let n = g.usize_in(500, 4000) as u64;
+        let p = g.usize_in(1, 8) as u64;
+        let seed = g.u64();
+        for vectorized in [true, false] {
+            let want = battery(&im_engine(false, vectorized), n, p, seed);
+            let got = battery(&im_engine(true, vectorized), n, p, seed);
+            if want != got {
+                return Err(format!(
+                    "{n}x{p} seed {seed} vectorized={vectorized}: simd on/off differ"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// EM leg: the same battery out of core (tiny one-partition cache, > 1 io
+/// partition at ≤ 8 columns) must match the in-memory scalar reference
+/// bit-for-bit with the kernels on and off.
+#[test]
+fn simd_parity_out_of_core() {
+    let (n, p, seed) = (150_000u64, 6u64, 9u64);
+    let reference = battery(&im_engine(false, true), n, p, seed);
+    for simd in [false, true] {
+        let im = battery(&im_engine(simd, true), n, p, seed);
+        assert_eq!(reference, im, "IM simd={simd} diverged");
+        let dir = TempDir::new(&format!("simd-par-{simd}"));
+        let mut cfg = out_of_core_config(dir.path());
+        cfg.simd_kernels = simd;
+        let eng = Engine::new(cfg).expect("EM engine");
+        let em = battery(&eng, n, p, seed);
+        let m = eng.metrics.snapshot();
+        assert!(m.io_read_bytes > 0, "simd={simd}: EM leg never hit the store");
+        assert!(m.cache_misses > 0, "simd={simd}: EM cache never missed");
+        assert_eq!(reference, em, "EM simd={simd} diverged");
+        if simd {
+            assert!(
+                m.simd_strips > 0 && m.simd_lanes_f64 > 0 && m.gemm_panels > 0,
+                "EM simd run recorded no microkernel work: {} strips, {} lanes, {} panels",
+                m.simd_strips,
+                m.simd_lanes_f64,
+                m.gemm_panels
+            );
+        }
+    }
+}
+
+/// which.min / which.max under NaN: an all-NaN row yields NA (index 0)
+/// and a NaN in a row's first lane is skipped — identically with the lane
+/// kernels on and off (argmin/argmax stay scalar by design).
+#[test]
+fn which_extreme_nan_pins_match_across_simd() {
+    let nan = f64::NAN;
+    let rows = vec![
+        vec![nan, nan, nan, nan, nan],      // all-NaN: NA (0)
+        vec![nan, 5.0, 1.0, 7.0, 2.0],      // NaN in lane 0: skipped
+        vec![3.0, nan, nan, nan, nan],      // only lane 0 valid
+        vec![2.0, -1.0, 4.0, -1.0, 9.0],    // tie: first wins
+        vec![-0.0, 0.0, 1.0, 2.0, 3.0],     // signed-zero head
+    ];
+    let h = HostMat::from_rows_f64(&rows);
+    let mut outs: Vec<(Vec<u8>, Vec<u8>)> = Vec::new();
+    for simd in [false, true] {
+        let eng = im_engine(simd, true);
+        let x = FmMatrix::from_host(&eng, &h).expect("from_host");
+        let mins = x.which_min_row().and_then(|m| m.to_host()).expect("min");
+        let maxs = x.which_max_row().and_then(|m| m.to_host()).expect("max");
+        // pinned semantics (R match.arg style: 1-based, NA encoded as 0)
+        assert_eq!(mins.get(0, 0).as_f64(), 0.0, "all-NaN row must be NA");
+        assert_eq!(maxs.get(0, 0).as_f64(), 0.0, "all-NaN row must be NA");
+        assert_eq!(mins.get(1, 0).as_f64(), 3.0, "first-lane NaN skipped (min)");
+        assert_eq!(maxs.get(1, 0).as_f64(), 4.0, "first-lane NaN skipped (max)");
+        assert_eq!(mins.get(2, 0).as_f64(), 1.0);
+        assert_eq!(maxs.get(2, 0).as_f64(), 1.0);
+        assert_eq!(mins.get(3, 0).as_f64(), 2.0, "ties resolve to first");
+        outs.push((mins.buf.to_bytes(), maxs.buf.to_bytes()));
+    }
+    assert_eq!(outs[0], outs[1], "which.min/max diverged across simd_kernels");
+}
+
+/// The opt-in lane reductions (`simd_reductions`) may reassociate sums;
+/// engine-level results stay within a tight relative bound of the ordered
+/// path and min/max stay bit-identical.
+#[test]
+fn opt_in_lane_reductions_within_bound() {
+    let mk = |lanes: bool| {
+        Engine::new(EngineConfig {
+            simd_kernels: true,
+            simd_reductions: lanes,
+            xla_dispatch: false,
+            chunk_bytes: 1 << 20,
+            target_part_bytes: 1 << 18,
+            ..Default::default()
+        })
+        .expect("engine")
+    };
+    let (n, p, seed) = (30_000u64, 5u64, 21u64);
+    let ordered = mk(false);
+    let lanes = mk(true);
+    let xo = datasets::uniform(&ordered, n, p, -2.0, 2.0, seed, None).unwrap();
+    let xl = datasets::uniform(&lanes, n, p, -2.0, 2.0, seed, None).unwrap();
+
+    let so = xo.agg(AggOp::Sum).unwrap().as_f64();
+    let sl = xl.agg(AggOp::Sum).unwrap().as_f64();
+    let rel = (so - sl).abs() / so.abs().max(1.0);
+    assert!(rel < 1e-12, "lane sum drifted: {so} vs {sl} (rel {rel:e})");
+
+    let co = xo.col_sums().unwrap();
+    let cl = xl.col_sums().unwrap();
+    for j in 0..p as usize {
+        let (a, b) = (co.get(0, j).as_f64(), cl.get(0, j).as_f64());
+        let rel = (a - b).abs() / a.abs().max(1.0);
+        assert!(rel < 1e-12, "col {j} lane sum drifted: {a} vs {b}");
+    }
+
+    for op in [AggOp::Min, AggOp::Max] {
+        let a = xo.agg(op).unwrap().as_f64();
+        let b = xl.agg(op).unwrap().as_f64();
+        assert_eq!(a.to_bits(), b.to_bits(), "{op:?} must stay bit-identical");
+    }
+}
