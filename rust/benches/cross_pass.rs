@@ -1,0 +1,161 @@
+//! Bench: cross-pass optimizer ablation — the iterative workloads whose
+//! per-iteration batches the planner ([`flashmatrix::plan`]) fuses:
+//! 10-iteration IRLS (three sinks per Newton step) and 10-iteration
+//! PageRank (new-rank target + L1-change sink per power step), external
+//! memory with a partition cache far smaller than the dataset plus the
+//! deterministic SSD throttle, `cross_pass_opt` off vs on.
+//!
+//! Acceptance (gated by CI): with the optimizer on, each workload runs
+//! STRICTLY fewer passes and reads STRICTLY fewer bytes from the store
+//! per run, and its results are **bit-identical** to the opt-off run —
+//! the planner only drops whole redundant evaluations, never a fold
+//! order. Single-threaded so the bit-exactness claim is unconditional.
+//!
+//! Run: `cargo bench --bench cross_pass -- [--json-dir DIR]`. Emits
+//! `BENCH_cross_pass.json` for the CI gate.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use flashmatrix::algs;
+use flashmatrix::config::{EngineConfig, StorageKind, ThrottleConfig};
+use flashmatrix::datasets;
+use flashmatrix::fmr::Engine;
+use flashmatrix::harness::BenchReport;
+use flashmatrix::metrics::MetricsSnapshot;
+use flashmatrix::util::bench::{bench_args, Table};
+
+const SSD_BPS: u64 = 512 << 20;
+const ITERS: usize = 10;
+
+fn engine(dir: &std::path::Path, cache_bytes: usize, opt: bool) -> Arc<Engine> {
+    Engine::new(EngineConfig {
+        storage: StorageKind::External,
+        data_dir: dir.to_path_buf(),
+        em_cache_bytes: cache_bytes,
+        prefetch_depth: 2,
+        throttle: Some(ThrottleConfig {
+            read_bytes_per_sec: SSD_BPS,
+            write_bytes_per_sec: SSD_BPS,
+        }),
+        threads: 1, // bit-exact folds across the ablation
+        xla_dispatch: false,
+        cross_pass_opt: opt,
+        ..EngineConfig::default()
+    })
+    .expect("engine")
+}
+
+/// Cold-start the measured region: the dataset is already on the store,
+/// so drop its write-through cache copies, drain the simulated SSD and
+/// zero the counters — the run measures the iterations, not the build.
+fn cold_start(eng: &Arc<Engine>) {
+    if let Some(c) = &eng.cache {
+        c.clear();
+    }
+    eng.ssd.drain_bursts();
+    eng.metrics.reset();
+}
+
+fn irls(eng: &Arc<Engine>) -> (Vec<f64>, MetricsSnapshot, f64) {
+    // 6 columns keeps io partitions at 3 MiB so the 4 MiB cache holds one
+    let x = datasets::uniform(eng, 200_000, 6, -1.0, 1.0, 21, None).expect("x");
+    let y = datasets::logistic_labels(&x, &[1.0, -0.5, 0.25, -1.5, 0.75, 0.0], 22).expect("y");
+    cold_start(eng);
+    let t0 = Instant::now();
+    let fit = algs::logistic(&x, &y, ITERS, 1e-8).expect("irls");
+    let secs = t0.elapsed().as_secs_f64();
+    let mut fp = fit.beta.clone();
+    fp.extend(fit.deviances);
+    (fp, eng.metrics.snapshot(), secs)
+}
+
+fn pagerank(eng: &Arc<Engine>) -> (Vec<f64>, MetricsSnapshot, f64) {
+    let (g, dangling) = datasets::pagerank_graph(eng, 1 << 15, 8, 99, None).expect("graph");
+    cold_start(eng);
+    let t0 = Instant::now();
+    let pr = algs::pagerank(&g, &dangling, 0.85, ITERS, 0.0).expect("pagerank");
+    let secs = t0.elapsed().as_secs_f64();
+    let mut fp = pr.ranks.clone();
+    fp.extend(pr.deltas);
+    (fp, eng.metrics.snapshot(), secs)
+}
+
+fn main() {
+    let args = bench_args();
+    let json_dir = args.get_or("json-dir", ".").to_string();
+
+    let mut t = Table::new(format!(
+        "Cross-pass optimizer ablation: {ITERS}-iteration IRLS (200000x6) + \
+         PageRank (32768 nodes), FM-EM small cache, SSD {} MiB/s",
+        SSD_BPS >> 20
+    ));
+    let mut report = BenchReport::new("cross_pass");
+    let mut ok = true;
+
+    let cases: [(&str, usize, fn(&Arc<Engine>) -> (Vec<f64>, MetricsSnapshot, f64)); 2] =
+        [("irls", 4 << 20, irls), ("pagerank", 64 << 10, pagerank)];
+    for (name, cache_bytes, workload) in cases {
+        let mut legs = Vec::new();
+        for opt in [false, true] {
+            let dir = std::env::temp_dir().join(format!(
+                "fm-cross-pass-{name}-{}-{}",
+                if opt { "on" } else { "off" },
+                std::process::id()
+            ));
+            std::fs::create_dir_all(&dir).expect("bench data dir");
+            let eng = engine(&dir, cache_bytes, opt);
+            let (fp, m, secs) = workload(&eng);
+            t.add_with(
+                format!("{name} opt-{}", if opt { "on" } else { "off" }),
+                secs,
+                "s",
+                vec![
+                    ("passes".into(), m.passes_run as f64),
+                    ("read_gb".into(), m.io_read_bytes as f64 / 1e9),
+                    ("cse_hits".into(), m.opt_cse_hits as f64),
+                    ("mat_decisions".into(), m.opt_mat_decisions as f64),
+                    ("sinks_pruned".into(), m.opt_sinks_pruned as f64),
+                ],
+            );
+            legs.push((fp, m));
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+        let (off_fp, off_m) = &legs[0];
+        let (on_fp, on_m) = &legs[1];
+        let fewer = on_m.passes_run < off_m.passes_run;
+        let less_io = on_m.io_read_bytes < off_m.io_read_bytes;
+        let identical = on_fp.len() == off_fp.len()
+            && on_fp
+                .iter()
+                .zip(off_fp)
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+        println!(
+            "{name}: passes {} -> {} ({}), read {} -> {} B ({}), results {}",
+            off_m.passes_run,
+            on_m.passes_run,
+            if fewer { "PASS" } else { "FAIL" },
+            off_m.io_read_bytes,
+            on_m.io_read_bytes,
+            if less_io { "PASS" } else { "FAIL" },
+            if identical {
+                "PASS: bit-identical"
+            } else {
+                "FAIL: diverged"
+            }
+        );
+        report.add_check(format!("fewer-passes: {name}"), fewer);
+        report.add_check(format!("less-read-io: {name}"), less_io);
+        report.add_check(format!("bit-identical: {name}"), identical);
+        ok &= fewer && less_io && identical;
+    }
+    t.print();
+    report.add_table(&t);
+    report
+        .write(std::path::Path::new(&json_dir))
+        .expect("bench json");
+    assert!(
+        ok,
+        "cross-pass optimizer must cut passes and read I/O without changing a bit"
+    );
+}

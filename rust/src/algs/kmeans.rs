@@ -12,15 +12,21 @@
 //! wcss   <- sum(fm.agg.row(D, min))                 # sink 3
 //! ```
 //!
-//! All three sinks share one scan of X (the paper's `fm.materialize` on
-//! several sinks); the M-step is a trivial host-side division. The XLA
-//! path dispatches the fused per-partition step to the kmeans artifact
-//! (Pallas distance kernel + one-hot matmul accumulation).
+//! The iteration is submitted as one *planned batch*
+//! ([`crate::fmr::engine::Engine::plan_batch`]): with `cross_pass_opt` on,
+//! the cross-pass optimizer CSEs the shared distance DAG and fuses all
+//! three sinks back into ONE scan of X (the paper's `fm.materialize` on
+//! several sinks); with it off, each statement runs as its own eager pass
+//! — the ablation `benches/cross_pass.rs` measures. The M-step is a
+//! trivial host-side division. The XLA path dispatches the fused
+//! per-partition step to the kmeans artifact (Pallas distance kernel +
+//! one-hot matmul accumulation).
 
 use crate::dtype::Scalar;
 use crate::error::Result;
 use crate::fmr::FmMatrix;
 use crate::matrix::HostMat;
+use crate::plan::PlanRequest;
 use crate::runtime::HostTensor;
 use crate::vudf::{AggOp, BinOp};
 
@@ -115,7 +121,8 @@ pub fn init_centroids(x: &FmMatrix, k: usize, seed: u64) -> Result<HostMat> {
     Ok(c)
 }
 
-/// One Lloyd iteration through GenOps (single fused pass, 3 sinks).
+/// One Lloyd iteration through GenOps: a planned batch of 3 sinks (one
+/// fused pass under `cross_pass_opt`, three eager passes without).
 fn step_genop(x: &FmMatrix, c: &HostMat, k: usize) -> Result<(Vec<f64>, Vec<f64>, f64)> {
     let p = x.ncol() as usize;
     // -2 * t(C): p×k host operand of the inner product
@@ -141,15 +148,17 @@ fn step_genop(x: &FmMatrix, c: &HostMat, k: usize) -> Result<(Vec<f64>, Vec<f64>
     let ones = FmMatrix::fill(&x.eng, Scalar::F64(1.0), x.nrow(), 1);
     let mind = d.agg_row(AggOp::Min)?;
 
-    let sinks = vec![
-        x.groupby_row_sink(&labels, k, AggOp::Sum)?,
-        ones.groupby_row_sink(&labels, k, AggOp::Sum)?,
-        mind.agg_sink(AggOp::Sum),
+    // the whole E-step as one planned batch: three independent statements
+    // the optimizer fuses back into a single scan of X
+    let reqs = vec![
+        PlanRequest::sink(x.groupby_row_sink(&labels, k, AggOp::Sum)?),
+        PlanRequest::sink(ones.groupby_row_sink(&labels, k, AggOp::Sum)?),
+        PlanRequest::sink(mind.agg_sink(AggOp::Sum)),
     ];
-    let rs = x.eng.materialize_sinks(&sinks)?;
-    let sums = rs[0].mat().to_row_major_f64(); // k×p row-major
-    let counts: Vec<f64> = rs[1].mat().buf.to_f64_vec();
-    let wcss = rs[2].scalar().as_f64();
+    let rs = x.eng.plan_batch(&reqs)?;
+    let sums = rs[0].clone().sink().mat().to_row_major_f64(); // k×p row-major
+    let counts: Vec<f64> = rs[1].clone().sink().mat().buf.to_f64_vec();
+    let wcss = rs[2].clone().sink().scalar().as_f64();
     Ok((sums, counts, wcss))
 }
 

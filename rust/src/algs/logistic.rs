@@ -1,7 +1,9 @@
 //! Logistic regression by IRLS (Fisher scoring) — the GLM workload class
 //! of FlashR's evaluation, expressed through the existing Gramian path:
-//! each iteration is ONE streaming pass over X materializing three fused
-//! sinks, then a tiny host-side solve.
+//! each iteration submits its three sinks as one *planned batch*
+//! ([`crate::fmr::engine::Engine::plan_batch`]) — a single streaming pass
+//! over X under `cross_pass_opt`, three eager passes without — then a
+//! tiny host-side solve.
 //!
 //! ```text
 //! eta  <- X %*% beta                         # inner.prod (in-DAG)
@@ -22,6 +24,7 @@ use crate::dtype::Scalar;
 use crate::error::{FmError, Result};
 use crate::fmr::FmMatrix;
 use crate::matrix::HostMat;
+use crate::plan::PlanRequest;
 use crate::vudf::{AggOp, BinOp};
 
 use super::linalg::{matmul_rm, spd_inverse_logdet};
@@ -75,20 +78,26 @@ pub fn logistic(x: &FmMatrix, y: &FmMatrix, iters: usize, ridge: f64) -> Result<
             .mapply_scalar(Scalar::F64(0.0), BinOp::Max, true)?
             .add(&eta.abs()?.neg()?.exp()?.add_scalar(1.0)?.log()?)?;
         let s_ll = y64.mul(&eta)?.sub(&softplus)?.agg_sink(AggOp::Sum);
-        let res = x.eng.materialize_sinks(&[s_xtwx, s_grad, s_ll])?;
+        // one planned batch per IRLS step: the optimizer shares the eta/mu
+        // chain across the sinks and fuses them onto one scan of X
+        let res = x.eng.plan_batch(&[
+            PlanRequest::sink(s_xtwx),
+            PlanRequest::sink(s_grad),
+            PlanRequest::sink(s_ll),
+        ])?;
 
         // host-side Newton step through the Cholesky substrate
-        let mut xtwx = res[0].mat().to_row_major_f64();
+        let mut xtwx = res[0].clone().sink().mat().to_row_major_f64();
         for j in 0..p {
             xtwx[j * p + j] += ridge;
         }
         let (inv, _logdet) = spd_inverse_logdet(&xtwx, p)?;
-        let grad = res[1].mat().to_row_major_f64();
+        let grad = res[1].clone().sink().mat().to_row_major_f64();
         let step = matmul_rm(&inv, &grad, p, p, 1);
         for (b, s) in beta.iter_mut().zip(&step) {
             *b += s;
         }
-        deviances.push(-2.0 * res[2].scalar().as_f64());
+        deviances.push(-2.0 * res[2].clone().sink().scalar().as_f64());
     }
     Ok(LogisticResult {
         beta,

@@ -1,7 +1,9 @@
 //! PageRank by power iteration over a sparse edge matrix — the
 //! graph-style workload class of FlashR's evaluation, expressed entirely
-//! in GenOps: one streaming SpMM pass per iteration fuses the multiply,
-//! the damping scale/shift and the L1 convergence sink.
+//! in GenOps: each iteration is one *planned batch*
+//! ([`crate::fmr::engine::Engine::plan_batch`]); under `cross_pass_opt`
+//! a single streaming SpMM pass fuses the multiply, the damping
+//! scale/shift and the L1 convergence sink.
 //!
 //! ```text
 //! y      <- fm.multiply(G, r)                      # SpMM, G sparse n×n
@@ -23,6 +25,7 @@ use crate::error::{FmError, Result};
 use crate::fmr::FmMatrix;
 use crate::genops;
 use crate::matrix::{DenseBuilder, HostMat, Matrix, MatrixData, Partitioning};
+use crate::plan::PlanRequest;
 use crate::vudf::{AggOp, Buf};
 
 /// PageRank output.
@@ -98,12 +101,16 @@ pub fn pagerank(
             .mul_scalar(damping)?
             .add_scalar(shift)?;
         let diff = r_new.sub(&r_prev)?.abs()?;
-        // one fused pass: SpMM + scale/shift target + L1-change sink
-        let (mats, sinks) = g
-            .eng
-            .run_pass(&[r_new.m.canonical()], &[genops::agg_full(&diff.m, AggOp::Sum)])?;
-        let r_mat = mats.into_iter().next().unwrap();
-        let delta = sinks[0].scalar().as_f64();
+        // one planned batch per iteration: the new-rank target and the
+        // L1-change sink share the SpMM chain, so under `cross_pass_opt`
+        // both ride a single edge-matrix scan; eager mode streams the
+        // edges once per statement
+        let out = g.eng.plan_batch(&[
+            PlanRequest::target(&r_new.m.canonical()),
+            PlanRequest::sink(genops::agg_full(&diff.m, AggOp::Sum)),
+        ])?;
+        let r_mat = out[0].clone().target();
+        let delta = out[1].clone().sink().scalar().as_f64();
 
         r_prev = FmMatrix {
             eng: std::sync::Arc::clone(&g.eng),

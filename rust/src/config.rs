@@ -127,6 +127,22 @@ pub struct EngineConfig {
     /// drains (`Metrics::wb_flush_waits`), keeping write-back memory as
     /// bounded as the read-ahead queue keeps prefetch memory.
     pub writeback_queue_bytes: usize,
+    /// Cross-pass lazy optimizer ([`crate::plan`]): every materialize
+    /// batch is canonicalized into a plan IR and run through structural
+    /// CSE, dead-sink/dead-target pruning and materialize-vs-recompute
+    /// planning before the strip evaluator sees it. Results stay
+    /// bit-identical to the unoptimized path — the planner only removes
+    /// or reorders whole redundant evaluations, never a fold order
+    /// (pinned by `tests/cross_pass.rs`). Off in `mllib_like` (an eager
+    /// engine has no batches to optimize); the `FLASHR_NO_CROSS_PASS_OPT`
+    /// env var forces the default off so CI can run the whole suite down
+    /// the unoptimized path. Ablated by `benches/cross_pass.rs`.
+    pub cross_pass_opt: bool,
+    /// Size ceiling in bytes for a shared intermediate the planner may
+    /// materialize (and keep cache-resident) instead of recomputing in
+    /// every pass that uses it. 0 disables materialize-vs-recompute
+    /// planning while keeping CSE/pruning active.
+    pub opt_materialize_threshold: usize,
 }
 
 impl Default for EngineConfig {
@@ -158,6 +174,8 @@ impl Default for EngineConfig {
             prefetch_depth: 2,
             writeback: true,
             writeback_queue_bytes: 32 << 20,
+            cross_pass_opt: std::env::var_os("FLASHR_NO_CROSS_PASS_OPT").is_none(),
+            opt_materialize_threshold: 16 << 20,
         }
     }
 }
@@ -178,6 +196,7 @@ impl EngineConfig {
             peephole_fuse: false,
             xla_dispatch: false,
             writeback: false,
+            cross_pass_opt: false,
             ..Default::default()
         }
     }
@@ -288,6 +307,19 @@ mod tests {
         // default results stay bit-exact vs the scalar paths
         assert!(c.simd_kernels && !c.simd_reductions);
         assert!(!EngineConfig::mllib_like().simd_kernels);
+    }
+
+    #[test]
+    fn cross_pass_knob_defaults() {
+        let c = EngineConfig::default();
+        // default follows the CI ablation env hook; absent the hook the
+        // optimizer is on, and the threshold leaves headroom for the
+        // small shared intermediates iterative algorithms produce
+        let env_off = std::env::var_os("FLASHR_NO_CROSS_PASS_OPT").is_some();
+        assert_eq!(c.cross_pass_opt, !env_off);
+        assert!(c.opt_materialize_threshold > 0);
+        // the eager baseline never batches, so it has nothing to plan
+        assert!(!EngineConfig::mllib_like().cross_pass_opt);
     }
 
     #[test]

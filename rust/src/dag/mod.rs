@@ -16,6 +16,7 @@
 //!   (§III-F).
 
 use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
 use std::sync::Arc;
 
 use crate::dtype::{DType, Scalar};
@@ -145,6 +146,222 @@ impl VKind {
             VKind::ColBind(ms) => ms.iter().collect(),
         }
     }
+
+    /// Stable discriminant for structural node identity (the planner's
+    /// hash-consing key; [`crate::plan`]).
+    pub fn code(&self) -> u8 {
+        match self {
+            VKind::Fill(_) => 0,
+            VKind::Seq { .. } => 1,
+            VKind::RandU { .. } => 2,
+            VKind::RandN { .. } => 3,
+            VKind::Sapply { .. } => 4,
+            VKind::Mapply { .. } => 5,
+            VKind::MapplyScalar { .. } => 6,
+            VKind::MapplyRow { .. } => 7,
+            VKind::MapplyCol { .. } => 8,
+            VKind::RowAgg { .. } => 9,
+            VKind::RowArgExtreme { .. } => 10,
+            VKind::InnerSmall { .. } => 11,
+            VKind::Spmm { .. } => 12,
+            VKind::Cast { .. } => 13,
+            VKind::ColBind(_) => 14,
+            VKind::SelectCol { .. } => 15,
+        }
+    }
+
+    /// Hash the node-local parameters — everything that distinguishes two
+    /// nodes of the same [`code`](VKind::code) *except* their parents
+    /// (hashed separately by the interner, which knows each child's
+    /// canonical identity). With `values = false` only the *structure*
+    /// is hashed (op codes and shapes, not scalar constants, seeds or
+    /// host-operand contents): the plan cache keys a loop body's shape,
+    /// which must stay stable across iterations even though the small
+    /// host operands change every iteration.
+    pub fn hash_params<H: Hasher>(&self, h: &mut H, values: bool) {
+        self.code().hash(h);
+        match self {
+            VKind::Fill(s) => hash_scalar(s, h, values),
+            VKind::Seq { start, step } => {
+                if values {
+                    start.to_bits().hash(h);
+                    step.to_bits().hash(h);
+                }
+            }
+            VKind::RandU { seed, lo, hi } => {
+                if values {
+                    seed.hash(h);
+                    lo.to_bits().hash(h);
+                    hi.to_bits().hash(h);
+                }
+            }
+            VKind::RandN { seed, mean, sd } => {
+                if values {
+                    seed.hash(h);
+                    mean.to_bits().hash(h);
+                    sd.to_bits().hash(h);
+                }
+            }
+            VKind::Sapply { op, .. } => hash_unfn(op, h),
+            VKind::Mapply { op, .. } => (*op as u8).hash(h),
+            VKind::MapplyScalar {
+                s,
+                op,
+                scalar_right,
+                ..
+            } => {
+                hash_scalar(s, h, values);
+                (*op as u8).hash(h);
+                scalar_right.hash(h);
+            }
+            VKind::MapplyRow { w, op, .. } => {
+                hash_host(w, h, values);
+                (*op as u8).hash(h);
+            }
+            VKind::MapplyCol { op, .. } => (*op as u8).hash(h),
+            VKind::RowAgg { op, .. } => (*op as u8).hash(h),
+            VKind::RowArgExtreme { max, .. } => max.hash(h),
+            VKind::InnerSmall { b, f1, f2, .. } => {
+                hash_host(b, h, values);
+                (*f1 as u8).hash(h);
+                (*f2 as u8).hash(h);
+            }
+            // The sparse operand is a *source* (not in `parents()`): its
+            // Arc identity stands in for its contents, exactly like a
+            // dense leaf. The right operand may be as long as the DAG's
+            // long dimension, so it is identified by Arc pointer too —
+            // conservative (a content-equal clone will not hash-cons),
+            // never wrong.
+            VKind::Spmm { a, b } => {
+                if values {
+                    a.data_ptr().hash(h);
+                    (Arc::as_ptr(b) as usize).hash(h);
+                }
+            }
+            VKind::Cast { to, .. } => (*to as u8).hash(h),
+            VKind::ColBind(ms) => ms.len().hash(h),
+            VKind::SelectCol { col, .. } => col.hash(h),
+        }
+    }
+
+    /// Clone this node kind with its parents replaced by `ps`, which must
+    /// be in [`parents()`](VKind::parents) order — the planner's rewrite
+    /// step after hash-consing maps children onto canonical nodes.
+    pub fn with_parents(&self, ps: &[Matrix]) -> VKind {
+        debug_assert_eq!(ps.len(), self.parents().len());
+        match self {
+            VKind::Fill(s) => VKind::Fill(*s),
+            VKind::Seq { start, step } => VKind::Seq {
+                start: *start,
+                step: *step,
+            },
+            VKind::RandU { seed, lo, hi } => VKind::RandU {
+                seed: *seed,
+                lo: *lo,
+                hi: *hi,
+            },
+            VKind::RandN { seed, mean, sd } => VKind::RandN {
+                seed: *seed,
+                mean: *mean,
+                sd: *sd,
+            },
+            VKind::Sapply { op, .. } => VKind::Sapply {
+                a: ps[0].clone(),
+                op: op.clone(),
+            },
+            VKind::Mapply { op, .. } => VKind::Mapply {
+                a: ps[0].clone(),
+                b: ps[1].clone(),
+                op: *op,
+            },
+            VKind::MapplyScalar {
+                s, op, scalar_right, ..
+            } => VKind::MapplyScalar {
+                a: ps[0].clone(),
+                s: *s,
+                op: *op,
+                scalar_right: *scalar_right,
+            },
+            VKind::MapplyRow { w, op, .. } => VKind::MapplyRow {
+                a: ps[0].clone(),
+                w: w.clone(),
+                op: *op,
+            },
+            VKind::MapplyCol { op, .. } => VKind::MapplyCol {
+                a: ps[0].clone(),
+                v: ps[1].clone(),
+                op: *op,
+            },
+            VKind::RowAgg { op, .. } => VKind::RowAgg {
+                a: ps[0].clone(),
+                op: *op,
+            },
+            VKind::RowArgExtreme { max, .. } => VKind::RowArgExtreme {
+                a: ps[0].clone(),
+                max: *max,
+            },
+            VKind::InnerSmall { b, f1, f2, .. } => VKind::InnerSmall {
+                a: ps[0].clone(),
+                b: b.clone(),
+                f1: *f1,
+                f2: *f2,
+            },
+            VKind::Spmm { a, b } => VKind::Spmm {
+                a: a.clone(),
+                b: Arc::clone(b),
+            },
+            VKind::Cast { to, .. } => VKind::Cast {
+                a: ps[0].clone(),
+                to: *to,
+            },
+            VKind::ColBind(_) => VKind::ColBind(ps.to_vec()),
+            VKind::SelectCol { col, .. } => VKind::SelectCol {
+                a: ps[0].clone(),
+                col: *col,
+            },
+        }
+    }
+}
+
+fn hash_scalar<H: Hasher>(s: &Scalar, h: &mut H, values: bool) {
+    (s.dtype() as u8).hash(h);
+    if !values {
+        return;
+    }
+    match *s {
+        Scalar::Bool(b) => b.hash(h),
+        Scalar::I32(v) => v.hash(h),
+        Scalar::I64(v) => v.hash(h),
+        Scalar::F32(v) => v.to_bits().hash(h),
+        Scalar::F64(v) => v.to_bits().hash(h),
+    }
+}
+
+fn hash_unfn<H: Hasher>(f: &UnFn, h: &mut H) {
+    match f {
+        UnFn::Builtin(op) => {
+            0u8.hash(h);
+            (*op as u8).hash(h);
+        }
+        // a registered VUDF's name is its identity in the registry
+        UnFn::Custom(c) => {
+            1u8.hash(h);
+            c.name().hash(h);
+        }
+    }
+}
+
+/// Small host operands (`mapply.row` weights, `inner.prod` right sides)
+/// hash by content: iterative algorithms rebuild them with fresh
+/// allocations every iteration, and content equality is exactly what
+/// makes two such nodes interchangeable.
+fn hash_host<H: Hasher>(m: &HostMat, h: &mut H, values: bool) {
+    m.nrow.hash(h);
+    m.ncol.hash(h);
+    (m.buf.dtype() as u8).hash(h);
+    if values {
+        m.buf.to_bytes().hash(h);
+    }
 }
 
 /// Sink kinds: DAG-terminating aggregations (different long dimension).
@@ -161,6 +378,66 @@ pub enum SinkKind {
     /// -> ncol(A)×ncol(B). Both operands share the long dimension. The
     /// Gramian (t(X)·X) and GMM sufficient statistics use this.
     InnerWideTall { right: Matrix, f1: BinOp, f2: AggOp },
+}
+
+impl SinkKind {
+    /// Stable discriminant for structural sink identity.
+    pub fn code(&self) -> u8 {
+        match self {
+            SinkKind::AggFull(_) => 0,
+            SinkKind::AggCol(_) => 1,
+            SinkKind::GroupByRow { .. } => 2,
+            SinkKind::InnerWideTall { .. } => 3,
+        }
+    }
+
+    /// DAG-edge matrices embedded in the sink kind (the labels of a
+    /// group-by, the right operand of a wide×tall inner product) — these
+    /// participate in hash-consing exactly like node parents.
+    pub fn parents(&self) -> Vec<&Matrix> {
+        match self {
+            SinkKind::AggFull(_) | SinkKind::AggCol(_) => vec![],
+            SinkKind::GroupByRow { labels, .. } => vec![labels],
+            SinkKind::InnerWideTall { right, .. } => vec![right],
+        }
+    }
+
+    /// Hash the sink-local parameters (ops, group count) — embedded
+    /// matrices are hashed by the interner via [`parents()`](Self::parents).
+    pub fn hash_params<H: Hasher>(&self, h: &mut H) {
+        self.code().hash(h);
+        match self {
+            SinkKind::AggFull(op) | SinkKind::AggCol(op) => (*op as u8).hash(h),
+            SinkKind::GroupByRow { k, op, .. } => {
+                k.hash(h);
+                (*op as u8).hash(h);
+            }
+            SinkKind::InnerWideTall { f1, f2, .. } => {
+                (*f1 as u8).hash(h);
+                (*f2 as u8).hash(h);
+            }
+        }
+    }
+
+    /// Clone with the embedded matrices replaced, in
+    /// [`parents()`](Self::parents) order.
+    pub fn with_parents(&self, ps: &[Matrix]) -> SinkKind {
+        debug_assert_eq!(ps.len(), self.parents().len());
+        match self {
+            SinkKind::AggFull(op) => SinkKind::AggFull(*op),
+            SinkKind::AggCol(op) => SinkKind::AggCol(*op),
+            SinkKind::GroupByRow { k, op, .. } => SinkKind::GroupByRow {
+                labels: ps[0].clone(),
+                k: *k,
+                op: *op,
+            },
+            SinkKind::InnerWideTall { f1, f2, .. } => SinkKind::InnerWideTall {
+                right: ps[0].clone(),
+                f1: *f1,
+                f2: *f2,
+            },
+        }
+    }
 }
 
 /// A sink: source matrix (virtual or dense) + terminal aggregation.

@@ -112,6 +112,7 @@ pub fn run_pass_opts(
     ctx.metrics
         .fused_chain_len
         .fetch_add(prog.plan.fused_steps, Ordering::Relaxed);
+    ctx.metrics.passes_run.fetch_add(1, Ordering::Relaxed);
     let nrow = prog.nrow;
 
     // ---- pass partitioning: nest within every source's partitions
@@ -341,6 +342,26 @@ pub fn materialize(ctx: &ExecCtx<'_>, targets: &[Matrix]) -> Result<Vec<Matrix>>
 /// Materialize sinks only.
 pub fn materialize_sinks(ctx: &ExecCtx<'_>, sinks: &[SinkSpec]) -> Result<Vec<SinkResult>> {
     Ok(run_pass(ctx, &[], sinks)?.1)
+}
+
+/// One planned streaming pass: the [`crate::plan`] optimizer's unit of
+/// execution. Each group becomes exactly one [`run_pass`] call.
+pub struct PassGroup {
+    pub targets: Vec<Matrix>,
+    pub sinks: Vec<SinkSpec>,
+}
+
+/// Run the optimizer's planned pass groups, in order. Returns one
+/// `(targets, sink results)` pair per group, matching each group's
+/// request order.
+pub fn run_groups(
+    ctx: &ExecCtx<'_>,
+    groups: &[PassGroup],
+) -> Result<Vec<(Vec<Matrix>, Vec<SinkResult>)>> {
+    groups
+        .iter()
+        .map(|g| run_pass(ctx, &g.targets, &g.sinks))
+        .collect()
 }
 
 // ---------------------------------------------------------------------------

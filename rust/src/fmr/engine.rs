@@ -10,6 +10,7 @@ use crate::exec::ExecCtx;
 use crate::matrix::{Matrix, PartitionCache};
 use crate::mem::ChunkPool;
 use crate::metrics::Metrics;
+use crate::plan::{self, PlanOutput, PlanRequest, Planner};
 use crate::runtime::XlaService;
 use crate::storage::SsdSim;
 use crate::vudf::VudfRegistry;
@@ -29,6 +30,10 @@ pub struct Engine {
     xla: OnceLock<Option<XlaService>>,
     /// Serializes whole-DAG materialization passes when needed by tests.
     pub pass_lock: Mutex<()>,
+    /// Cross-pass optimizer state (`config.cross_pass_opt`): recurrence
+    /// counters, materialize-vs-recompute decisions, the memoized shared
+    /// intermediates, and the shape-keyed plan cache. See [`crate::plan`].
+    planner: Mutex<Planner>,
 }
 
 impl Engine {
@@ -63,6 +68,7 @@ impl Engine {
             registry: VudfRegistry::new(),
             xla: OnceLock::new(),
             pass_lock: Mutex::new(()),
+            planner: Mutex::new(Planner::new()),
         }))
     }
 
@@ -104,9 +110,17 @@ impl Engine {
             .as_ref()
     }
 
-    /// Materialize several virtual matrices in one fused pass.
+    /// Materialize several virtual matrices in one fused pass. With
+    /// `cross_pass_opt` the batch goes through the [`crate::plan`]
+    /// optimizer first (CSE, duplicate pruning, memoized intermediates);
+    /// the single-pass contract and all results are unchanged.
     pub fn materialize(&self, targets: &[Matrix]) -> Result<Vec<Matrix>> {
-        crate::exec::materialize(&self.ctx(), targets)
+        if !self.config.cross_pass_opt || targets.is_empty() {
+            return crate::exec::materialize(&self.ctx(), targets);
+        }
+        let reqs: Vec<PlanRequest> = targets.iter().map(PlanRequest::target).collect();
+        let out = plan::execute_batch(&self.ctx(), &self.planner, &reqs, true)?;
+        Ok(out.into_iter().map(PlanOutput::target).collect())
     }
 
     /// Materialize one-shot intermediates (the eager mode's per-operation
@@ -118,16 +132,65 @@ impl Engine {
     }
 
     /// Materialize several sinks in one fused pass (`fm.materialize`).
+    /// Optimized like [`Engine::materialize`] when `cross_pass_opt` is on.
     pub fn materialize_sinks(&self, sinks: &[SinkSpec]) -> Result<Vec<SinkResult>> {
-        crate::exec::materialize_sinks(&self.ctx(), sinks)
+        if !self.config.cross_pass_opt || sinks.is_empty() {
+            return crate::exec::materialize_sinks(&self.ctx(), sinks);
+        }
+        let reqs: Vec<PlanRequest> = sinks
+            .iter()
+            .map(|s| PlanRequest::Sink(clone_sink(s)))
+            .collect();
+        let out = plan::execute_batch(&self.ctx(), &self.planner, &reqs, true)?;
+        Ok(out.into_iter().map(PlanOutput::sink).collect())
     }
 
-    /// Mixed pass: targets + sinks share one scan (§III-F).
+    /// Mixed pass: targets + sinks share one scan (§III-F). Optimized
+    /// like [`Engine::materialize`] when `cross_pass_opt` is on.
     pub fn run_pass(
         &self,
         targets: &[Matrix],
         sinks: &[SinkSpec],
     ) -> Result<(Vec<Matrix>, Vec<SinkResult>)> {
-        crate::exec::run_pass(&self.ctx(), targets, sinks)
+        if !self.config.cross_pass_opt || (targets.is_empty() && sinks.is_empty()) {
+            return crate::exec::run_pass(&self.ctx(), targets, sinks);
+        }
+        let reqs: Vec<PlanRequest> = targets
+            .iter()
+            .map(PlanRequest::target)
+            .chain(sinks.iter().map(|s| PlanRequest::Sink(clone_sink(s))))
+            .collect();
+        let out = plan::execute_batch(&self.ctx(), &self.planner, &reqs, true)?;
+        let mut ms = Vec::with_capacity(targets.len());
+        let mut rs = Vec::with_capacity(sinks.len());
+        for o in out {
+            match o {
+                PlanOutput::Target(m) => ms.push(m),
+                PlanOutput::Sink(r) => rs.push(r),
+            }
+        }
+        Ok((ms, rs))
+    }
+
+    /// Plan and run a batch of *independent* forced materializations —
+    /// one R statement each, typically everything an iterative algorithm
+    /// needs per iteration. Unlike [`Engine::run_pass`] the batch is not
+    /// promised to be a single pass: with `cross_pass_opt` the planner
+    /// fuses requests into as few passes as the bit-identity geometry
+    /// guards allow; with it off, each request runs as its own pass
+    /// (eager-R semantics), so the optimizer's pass savings are visible
+    /// in `passes_run` / `io_read_bytes`.
+    pub fn plan_batch(&self, requests: &[PlanRequest]) -> Result<Vec<PlanOutput>> {
+        plan::execute_batch(&self.ctx(), &self.planner, requests, false)
+    }
+}
+
+/// `SinkSpec` is intentionally not `Clone` (sinks are single-use by
+/// convention); the planner needs value copies to canonicalize.
+fn clone_sink(s: &SinkSpec) -> SinkSpec {
+    let parents: Vec<Matrix> = s.kind.parents().into_iter().cloned().collect();
+    SinkSpec {
+        source: s.source.clone(),
+        kind: s.kind.with_parents(&parents),
     }
 }

@@ -460,12 +460,15 @@ pub fn fig10(s: &Scale, ks: &[usize]) -> Result<Table> {
 /// paper order: base (none) -> +mem-alloc (chunk recycling) -> +mem-fuse
 /// -> +cache-fuse, plus this repo's `+strip-fusion` step (liveness-driven
 /// register reuse, in-place kernels and peephole-fused VUDF chains in the
-/// strip evaluator) and the `+simd` step (explicit lane kernels and
-/// register-blocked GEMM microkernels, `EngineConfig::simd_kernels`).
+/// strip evaluator), the `+simd` step (explicit lane kernels and
+/// register-blocked GEMM microkernels, `EngineConfig::simd_kernels`) and
+/// the `+cross-pass` step (the [`crate::plan`] optimizer,
+/// `EngineConfig::cross_pass_opt`).
 /// Reported as speedup over base, on SSDs (EM) or in memory (IM); each
 /// row carries the strip-allocation counters (`buf_allocs` / `buf_reuses`
-/// / `inplace_ops` / `fused_chain_len`) and the microkernel counters
-/// (`simd_strips` / `simd_lanes` / `gemm_panels`).
+/// / `inplace_ops` / `fused_chain_len`), the microkernel counters
+/// (`simd_strips` / `simd_lanes` / `gemm_panels`) and the optimizer
+/// counters (`passes` / `cse_hits` / `sinks_pruned` / `mat_decisions`).
 pub fn fig11(s: &Scale, em: bool) -> Result<Table> {
     let mode = if em { Mode::FmEm } else { Mode::FmIm };
     let mut t = Table::new(format!(
@@ -473,18 +476,19 @@ pub fn fig11(s: &Scale, em: bool) -> Result<Table> {
         if em { "a: SSD" } else { "b: in-mem" },
         s.n
     ));
-    // (label, recycle, fuse_mem, fuse_cache, strip_fusion, simd)
+    // (label, recycle, fuse_mem, fuse_cache, strip_fusion, simd, cross_pass)
     let configs = [
-        ("base", false, false, false, false, false),
-        ("+mem-alloc", true, false, false, false, false),
-        ("+mem-fuse", true, true, false, false, false),
-        ("+cache-fuse", true, true, true, false, false),
-        ("+strip-fusion", true, true, true, true, false),
-        ("+simd", true, true, true, true, true),
+        ("base", false, false, false, false, false, false),
+        ("+mem-alloc", true, false, false, false, false, false),
+        ("+mem-fuse", true, true, false, false, false, false),
+        ("+cache-fuse", true, true, true, false, false, false),
+        ("+strip-fusion", true, true, true, true, false, false),
+        ("+simd", true, true, true, true, true, false),
+        ("+cross-pass", true, true, true, true, true, true),
     ];
     for alg in ALL_ALGS {
         let mut base_secs = None;
-        for (label, recycle, fm, fc, sf, simd) in configs {
+        for (label, recycle, fm, fc, sf, simd, xp) in configs {
             let mut cfg = config_for(s, mode, s.threads);
             cfg.recycle_chunks = recycle;
             cfg.fuse_mem = fm;
@@ -492,6 +496,7 @@ pub fn fig11(s: &Scale, em: bool) -> Result<Table> {
             cfg.inplace_ops = sf;
             cfg.peephole_fuse = sf;
             cfg.simd_kernels = simd;
+            cfg.cross_pass_opt = xp;
             cfg.xla_dispatch = false; // isolate the engine
             let eng = Engine::new(cfg)?;
             let x = dataset(&eng, s.n, 32)?;
@@ -516,6 +521,10 @@ pub fn fig11(s: &Scale, em: bool) -> Result<Table> {
                     ("simd_strips".into(), m.simd_strips as f64),
                     ("simd_lanes".into(), m.simd_lanes_f64 as f64),
                     ("gemm_panels".into(), m.gemm_panels as f64),
+                    ("passes".into(), m.passes_run as f64),
+                    ("cse_hits".into(), m.opt_cse_hits as f64),
+                    ("sinks_pruned".into(), m.opt_sinks_pruned as f64),
+                    ("mat_decisions".into(), m.opt_mat_decisions as f64),
                 ],
             );
         }

@@ -12,8 +12,10 @@
 //!   functions are built from (paper §III-C).
 //! * [`vudf`] — vectorized user-defined functions with the paper's multiple
 //!   *forms* (`uVUDF`, `bVUDF1/2/3`, `aVUDF1/2`) (§III-D).
-//! * [`dag`] + [`exec`] — lazy evaluation, operation fusion and the
-//!   two-level-partitioned parallel materializer (§III-E/F).
+//! * [`dag`] + [`plan`] + [`exec`] — lazy evaluation, the cross-pass
+//!   optimizer (structural CSE, dead-sink pruning and materialize-vs-
+//!   recompute planning over whole materialize batches), operation fusion
+//!   and the two-level-partitioned parallel materializer (§III-E/F).
 //! * [`matrix`], [`mem`], [`storage`] — dense matrices (row/col-major,
 //!   tall/wide, virtual, grouped), the recycled memory-chunk pool, the
 //!   SAFS-like streaming external-memory store, and the write-through
@@ -45,6 +47,7 @@ pub mod harness;
 pub mod matrix;
 pub mod mem;
 pub mod metrics;
+pub mod plan;
 pub mod runtime;
 pub mod storage;
 pub mod testutil;

@@ -445,6 +445,19 @@ impl PartitionCache {
         self.inner.lock().unwrap().bytes_used
     }
 
+    /// Bytes currently shielded from eviction by pins: the cross-pass
+    /// optimizer's memoized intermediates (the [`crate::plan`] residency
+    /// hint) plus transient read-ahead pins. Observability for tests and
+    /// the figure harness.
+    pub fn pinned_bytes(&self) -> usize {
+        let g = self.inner.lock().unwrap();
+        g.map
+            .values()
+            .filter(|e| e.pins > 0)
+            .map(|e| e.bytes.len())
+            .sum()
+    }
+
     /// Number of resident partitions.
     pub fn len(&self) -> usize {
         self.inner.lock().unwrap().map.len()

@@ -197,6 +197,40 @@ impl DenseData {
         }
     }
 
+    /// Residency hint for planner-materialized intermediates
+    /// ([`crate::plan`]): pin every partition of this matrix that is
+    /// currently resident in the engine's write-through partition cache,
+    /// shielding it from LRU eviction until
+    /// [`unpin_resident`](Self::unpin_resident) releases it. Returns the
+    /// pinned partition indices (pass them back to `unpin_resident`).
+    /// No-op (empty) for in-memory or uncached matrices.
+    pub fn pin_resident(&self) -> Vec<usize> {
+        let mut pinned = Vec::new();
+        if let Backing::Ext {
+            pcache: Some(h), ..
+        } = &self.backing
+        {
+            for i in 0..self.parts.n_parts() {
+                if h.cache.pin(h.matrix_id, i) {
+                    pinned.push(i);
+                }
+            }
+        }
+        pinned
+    }
+
+    /// Release residency pins taken by [`pin_resident`](Self::pin_resident).
+    pub fn unpin_resident(&self, pinned: &[usize]) {
+        if let Backing::Ext {
+            pcache: Some(h), ..
+        } = &self.backing
+        {
+            for &i in pinned {
+                h.cache.unpin(h.matrix_id, i);
+            }
+        }
+    }
+
     /// Partition `i` decoded as a typed buffer (col-major).
     pub fn partition_buf(&self, i: usize) -> Result<Buf> {
         Buf::from_bytes(self.dtype, &self.partition_bytes(i)?)

@@ -83,6 +83,24 @@ pub struct Metrics {
     /// Queued write-back partitions discarded by an aborted pass (dirty
     /// data that never reached the disk — by design).
     pub wb_discarded: AtomicU64,
+    /// Streaming passes executed (every [`crate::exec::run_pass_opts`]
+    /// call, planned or eager). The cross-pass optimizer's headline
+    /// number: iterative loops run strictly fewer passes with it on.
+    pub passes_run: AtomicU64,
+    /// Structurally-equal DAG nodes the planner's hash-consing pass
+    /// merged onto one canonical node (each hit is one whole redundant
+    /// evaluation eliminated from a pass).
+    pub opt_cse_hits: AtomicU64,
+    /// Requested targets/sinks the planner pruned as dead because an
+    /// identical request in the same batch already produces the result.
+    pub opt_sinks_pruned: AtomicU64,
+    /// Cost-model decisions to materialize a shared intermediate through
+    /// the cache/write-back path (or to substitute an already
+    /// materialized copy) instead of recomputing it in the fused pass.
+    pub opt_mat_decisions: AtomicU64,
+    /// Batches whose optimized pass grouping was served from the
+    /// per-engine plan cache (iteration 2..n of a loop).
+    pub opt_plan_cache_hits: AtomicU64,
 }
 
 impl Metrics {
@@ -140,6 +158,11 @@ impl Metrics {
             wb_coalesced: self.wb_coalesced.load(Ordering::Relaxed),
             wb_flush_waits: self.wb_flush_waits.load(Ordering::Relaxed),
             wb_discarded: self.wb_discarded.load(Ordering::Relaxed),
+            passes_run: self.passes_run.load(Ordering::Relaxed),
+            opt_cse_hits: self.opt_cse_hits.load(Ordering::Relaxed),
+            opt_sinks_pruned: self.opt_sinks_pruned.load(Ordering::Relaxed),
+            opt_mat_decisions: self.opt_mat_decisions.load(Ordering::Relaxed),
+            opt_plan_cache_hits: self.opt_plan_cache_hits.load(Ordering::Relaxed),
         }
     }
 
@@ -176,6 +199,11 @@ impl Metrics {
             &s.wb_coalesced,
             &s.wb_flush_waits,
             &s.wb_discarded,
+            &s.passes_run,
+            &s.opt_cse_hits,
+            &s.opt_sinks_pruned,
+            &s.opt_mat_decisions,
+            &s.opt_plan_cache_hits,
         ] {
             c.store(0, Ordering::Relaxed);
         }
@@ -214,6 +242,11 @@ pub struct MetricsSnapshot {
     pub wb_coalesced: u64,
     pub wb_flush_waits: u64,
     pub wb_discarded: u64,
+    pub passes_run: u64,
+    pub opt_cse_hits: u64,
+    pub opt_sinks_pruned: u64,
+    pub opt_mat_decisions: u64,
+    pub opt_plan_cache_hits: u64,
 }
 
 impl MetricsSnapshot {
@@ -249,6 +282,11 @@ impl MetricsSnapshot {
             wb_coalesced: self.wb_coalesced - earlier.wb_coalesced,
             wb_flush_waits: self.wb_flush_waits - earlier.wb_flush_waits,
             wb_discarded: self.wb_discarded - earlier.wb_discarded,
+            passes_run: self.passes_run - earlier.passes_run,
+            opt_cse_hits: self.opt_cse_hits - earlier.opt_cse_hits,
+            opt_sinks_pruned: self.opt_sinks_pruned - earlier.opt_sinks_pruned,
+            opt_mat_decisions: self.opt_mat_decisions - earlier.opt_mat_decisions,
+            opt_plan_cache_hits: self.opt_plan_cache_hits - earlier.opt_plan_cache_hits,
         }
     }
 }

@@ -1,0 +1,1400 @@
+//! Cross-pass lazy optimizer: the plan IR between the virtual-matrix DAG
+//! (§III-E) and the strip evaluator ([`crate::exec`]).
+//!
+//! Every materialize batch — the `fm.materialize` surface
+//! ([`crate::fmr::engine::Engine::{materialize, materialize_sinks,
+//! run_pass, plan_batch}`](crate::fmr::engine::Engine)) — is canonicalized
+//! into a plan IR and run through three optimizer passes before any pass
+//! streams:
+//!
+//! 1. **Structural CSE** (hash-consing): every [`VKind`] node gets a
+//!    structural value key — kind + parameters + canonical child keys —
+//!    and structurally-equal nodes are merged onto one canonical node, so
+//!    repeated `sapply`/`mapply`/inner-product chains evaluate once per
+//!    pass even when callers rebuilt them from scratch
+//!    (`Metrics::opt_cse_hits`).
+//! 2. **Dead-sink/dead-target pruning**: requests whose structural key
+//!    already appears earlier in the batch are dead — they are pruned and
+//!    fed from the surviving request's result
+//!    (`Metrics::opt_sinks_pruned`).
+//! 3. **Materialize-vs-recompute planning**: a shared intermediate that
+//!    recurs across batches (iteration 2..n of a loop) is either
+//!    materialized once through the `PartitionCache`/write-back path —
+//!    with a residency pin ([`crate::matrix::DenseData::pin_resident`]) —
+//!    or recomputed
+//!    inside every fused pass, decided by a byte-cost model (bytes moved
+//!    under the current cache budget vs. re-streamed compute, calibrated
+//!    against the existing [`Metrics`](crate::metrics::Metrics) byte
+//!    counters; `Metrics::opt_mat_decisions`).
+//!
+//! A small per-engine **plan cache** keyed by the batch's DAG *shape*
+//! (structure only — not the constants and small host operands an
+//! iterative loop changes every iteration) lets iteration 2..n of a loop
+//! reuse the optimized pass grouping (`Metrics::opt_plan_cache_hits`).
+//!
+//! # Bit-identity
+//!
+//! The optimizer may only eliminate or reorder **whole redundant
+//! evaluations** — never any single output's fold order. Three guards
+//! enforce that:
+//!
+//! * CSE merges change neither the pass's source set nor its instruction
+//!   shapes (leaves are keyed by `Arc` identity), so pass geometry —
+//!   `pass_io`, the locality unit, the partition grid — is untouched.
+//! * Requests merge into one pass only when the merged pass geometry
+//!   equals each request's solo-pass geometry ([`Geometry`]), so a
+//!   sink's per-worker partial boundaries and a target's stored
+//!   partitioning are identical to the unoptimized schedule.
+//! * A memoized intermediate substitutes into a pass only when the
+//!   substituted DAG's geometry equals the recompute DAG's geometry; the
+//!   memo value itself was materialized on that same grid.
+//!
+//! `tests/cross_pass.rs` pins optimizer-on vs optimizer-off byte equality
+//! across IM/EM × `vectorized_udf` × `simd_kernels` on the iterative
+//! workloads; `benches/cross_pass.rs` gates the pass/IO win.
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::{HashMap, HashSet};
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::Ordering;
+use std::sync::Mutex;
+
+use crate::config::StorageKind;
+use crate::dag::{SinkResult, SinkSpec, VKind, VNode};
+use crate::error::Result;
+use crate::exec::{self, ExecCtx, PassGroup};
+use crate::matrix::{io_rows_for, Matrix, MatrixData, Partitioning};
+
+/// One forced materialization in a batch: a target matrix or a sink.
+/// Logically each request is its own R statement — the planner decides
+/// how many streaming passes actually run.
+pub enum PlanRequest {
+    Target(Matrix),
+    Sink(SinkSpec),
+}
+
+impl PlanRequest {
+    /// Target request from any matrix handle (the view is preserved).
+    pub fn target(m: &Matrix) -> PlanRequest {
+        PlanRequest::Target(m.clone())
+    }
+
+    /// Sink request.
+    pub fn sink(s: SinkSpec) -> PlanRequest {
+        PlanRequest::Sink(s)
+    }
+}
+
+/// Result of one [`PlanRequest`], in request order.
+#[derive(Clone)]
+pub enum PlanOutput {
+    Target(Matrix),
+    Sink(SinkResult),
+}
+
+impl PlanOutput {
+    pub fn target(self) -> Matrix {
+        match self {
+            PlanOutput::Target(m) => m,
+            PlanOutput::Sink(_) => panic!("request produced a sink result, not a target"),
+        }
+    }
+
+    pub fn sink(self) -> SinkResult {
+        match self {
+            PlanOutput::Sink(s) => s,
+            PlanOutput::Target(_) => panic!("request produced a target, not a sink result"),
+        }
+    }
+}
+
+/// Maximum memoized intermediates kept per engine (LRU beyond this).
+const MEMO_CAP: usize = 8;
+/// Maximum cached plans / recurrence keys before the maps are reset
+/// (bounds unrelated-workload growth; iteration loops never get close).
+const STATE_CAP: usize = 4096;
+
+/// A materialized shared intermediate, keyed by its structural value key.
+/// The entry holds the canonical virtual subtree it replaces: that keeps
+/// every `Arc` identity the key hashes alive, so a recycled allocation
+/// can never alias an existing key.
+struct MemoEntry {
+    key: u64,
+    value: Matrix,
+    _subtree: Matrix,
+    /// Partitions pinned in the partition cache (residency hint);
+    /// released on eviction.
+    pinned: Vec<usize>,
+    stamp: u64,
+}
+
+/// Cached pass grouping for one batch shape.
+struct CachedPlan {
+    n_unique: usize,
+    /// Unique-request indices per pass group, in execution order.
+    groups: Vec<Vec<usize>>,
+    /// Long dimension per group (validated against the next batch).
+    long_dims: Vec<u64>,
+}
+
+/// Per-engine optimizer state ([`crate::fmr::engine::Engine::planner`]).
+#[derive(Default)]
+pub struct Planner {
+    /// Structural key -> batches it appeared in (recurrence detection).
+    seen: HashMap<u64, u32>,
+    /// Structural key -> cost-model outcome, decided once when the key
+    /// first recurs.
+    decided: HashMap<u64, bool>,
+    memo: Vec<MemoEntry>,
+    plans: HashMap<u64, CachedPlan>,
+    stamp: u64,
+}
+
+impl Planner {
+    pub fn new() -> Planner {
+        Planner::default()
+    }
+
+    fn memo_get(&mut self, key: u64) -> Option<Matrix> {
+        let stamp = self.stamp;
+        self.memo.iter_mut().find(|e| e.key == key).map(|e| {
+            e.stamp = stamp;
+            e.value.clone()
+        })
+    }
+
+    fn memo_insert(&mut self, key: u64, value: Matrix, subtree: Matrix) {
+        let pinned = match &*value.data {
+            MatrixData::Dense(d) => d.pin_resident(),
+            _ => Vec::new(),
+        };
+        self.memo.push(MemoEntry {
+            key,
+            value,
+            _subtree: subtree,
+            pinned,
+            stamp: self.stamp,
+        });
+        while self.memo.len() > MEMO_CAP {
+            let (i, _) = self
+                .memo
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.stamp)
+                .expect("non-empty memo");
+            let e = self.memo.swap_remove(i);
+            if let MatrixData::Dense(d) = &*e.value.data {
+                d.unpin_resident(&e.pinned);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pass 1: canonicalization + structural CSE (hash-consing)
+
+struct NodeInfo {
+    /// Structural value key (parameters + canonical child identities).
+    vkey: u64,
+    /// Structural shape key (structure only; plan-cache identity).
+    skey: u64,
+    /// CSE-canonical node (no memo substitution).
+    plain: Matrix,
+    /// Canonical node with memoized intermediates substituted in.
+    sub: Matrix,
+}
+
+struct Interner {
+    /// Original `data_ptr` -> interned info.
+    nodes: HashMap<usize, NodeInfo>,
+    /// Value key -> canonical plain node (the hash-cons table).
+    canon: HashMap<u64, Matrix>,
+    /// Value key -> (plain, sub) canonical pair for virtual nodes.
+    virt: HashMap<u64, (Matrix, Matrix)>,
+    /// Leaf `data_ptr` -> first-visit ordinal (shape-key identity).
+    leaf_ord: HashMap<usize, u64>,
+    /// Snapshot of the planner's memoized intermediates (key, value).
+    memo: Vec<(u64, Matrix)>,
+    /// Memo keys substituted somewhere in this batch.
+    memo_used: Vec<u64>,
+    cse_hits: u64,
+}
+
+impl Interner {
+    fn new(memo: Vec<(u64, Matrix)>) -> Interner {
+        Interner {
+            nodes: HashMap::new(),
+            canon: HashMap::new(),
+            virt: HashMap::new(),
+            leaf_ord: HashMap::new(),
+            memo,
+            memo_used: Vec::new(),
+            cse_hits: 0,
+        }
+    }
+
+    /// Intern the matrix's *data* (the transpose flag belongs to the use
+    /// site and is hashed by the consumer edge). Returns (vkey, skey).
+    fn intern(&mut self, m: &Matrix) -> (u64, u64) {
+        let ptr = m.data_ptr();
+        if let Some(i) = self.nodes.get(&ptr) {
+            return (i.vkey, i.skey);
+        }
+        let info = match &*m.data {
+            MatrixData::Virtual(v) => {
+                let parents: Vec<Matrix> = v.kind.parents().into_iter().cloned().collect();
+                let mut edges: Vec<(u64, u64, bool)> = Vec::with_capacity(parents.len());
+                for p in &parents {
+                    let (vk, sk) = self.intern(p);
+                    edges.push((vk, sk, p.transposed));
+                }
+                let mut hv = DefaultHasher::new();
+                let mut hs = DefaultHasher::new();
+                for h in [&mut hv, &mut hs] {
+                    b"vnode".hash(h);
+                    v.nrow.hash(h);
+                    v.ncol.hash(h);
+                    (v.dtype as u8).hash(h);
+                }
+                v.kind.hash_params(&mut hv, true);
+                v.kind.hash_params(&mut hs, false);
+                // SpMM's operands are sources, not `parents()`: anchor
+                // the structural key on the sparse operand's grid, so two
+                // same-shaped graphs over different matrices cannot alias
+                // one cached plan (pass geometry follows that grid)
+                if let VKind::Spmm { a, .. } = &v.kind {
+                    a.data.nrow().hash(&mut hs);
+                    a.data.ncol().hash(&mut hs);
+                    (a.data.dtype() as u8).hash(&mut hs);
+                    if let Some(io) = leaf_io_rows(&a.data) {
+                        io.hash(&mut hs);
+                    }
+                }
+                for (vk, sk, t) in &edges {
+                    (vk, t).hash(&mut hv);
+                    (sk, t).hash(&mut hs);
+                }
+                let (vkey, skey) = (hv.finish(), hs.finish());
+
+                let plain = match self.canon.get(&vkey) {
+                    Some(c) => {
+                        if c.data_ptr() != ptr {
+                            self.cse_hits += 1;
+                        }
+                        c.clone()
+                    }
+                    None => {
+                        let p = self.rebuild(m, v, &parents, false);
+                        self.canon.insert(vkey, p.clone());
+                        p
+                    }
+                };
+                // substitute a memoized materialization of this exact
+                // value, if one exists (shape-checked against the node:
+                // a 64-bit key collision must not slip a wrong matrix in)
+                let hit = self.memo.iter().find(|(k, mv)| {
+                    *k == vkey
+                        && mv.data.nrow() == v.nrow
+                        && mv.data.ncol() == v.ncol
+                        && mv.data.dtype() == v.dtype
+                });
+                let sub = match hit {
+                    Some((_, mv)) => {
+                        let mv = mv.clone();
+                        if !self.memo_used.contains(&vkey) {
+                            self.memo_used.push(vkey);
+                        }
+                        mv
+                    }
+                    None => self.rebuild(m, v, &parents, true),
+                };
+                self.virt
+                    .entry(vkey)
+                    .or_insert_with(|| (plain.clone(), sub.clone()));
+                NodeInfo {
+                    vkey,
+                    skey,
+                    plain,
+                    sub,
+                }
+            }
+            _ => {
+                // leaf (dense / sparse / group): Arc identity IS the value
+                let ord = self.leaf_ord.len() as u64;
+                let ord = *self.leaf_ord.entry(ptr).or_insert(ord);
+                let mut hv = DefaultHasher::new();
+                b"leaf".hash(&mut hv);
+                ptr.hash(&mut hv);
+                let mut hs = DefaultHasher::new();
+                b"leaf".hash(&mut hs);
+                ord.hash(&mut hs);
+                m.data.nrow().hash(&mut hs);
+                m.data.ncol().hash(&mut hs);
+                (m.data.dtype() as u8).hash(&mut hs);
+                // actual stored partitioning feeds pass geometry, so it is
+                // part of the *shape* a cached plan may be reused for
+                if let Some(io) = leaf_io_rows(&m.data) {
+                    io.hash(&mut hs);
+                }
+                NodeInfo {
+                    vkey: hv.finish(),
+                    skey: hs.finish(),
+                    plain: m.canonical(),
+                    sub: m.canonical(),
+                }
+            }
+        };
+        let out = (info.vkey, info.skey);
+        self.nodes.insert(ptr, info);
+        out
+    }
+
+    /// Canonical rebuild: children replaced by their canonical
+    /// representatives (plain or memo-substituted); reuses the original
+    /// `Arc` when nothing below it changed.
+    fn rebuild(&self, m: &Matrix, v: &VNode, parents: &[Matrix], sub: bool) -> Matrix {
+        let reps: Vec<Matrix> = parents
+            .iter()
+            .map(|p| {
+                let info = &self.nodes[&p.data_ptr()];
+                let rep = if sub { &info.sub } else { &info.plain };
+                Matrix {
+                    data: rep.data.clone(),
+                    transposed: p.transposed,
+                }
+            })
+            .collect();
+        if reps
+            .iter()
+            .zip(parents)
+            .all(|(r, p)| r.data_ptr() == p.data_ptr())
+        {
+            return m.canonical();
+        }
+        Matrix::new(MatrixData::Virtual(VNode {
+            nrow: v.nrow,
+            ncol: v.ncol,
+            dtype: v.dtype,
+            kind: v.kind.with_parents(&reps),
+        }))
+    }
+
+    /// Intern a sink: source + embedded matrices by canonical identity,
+    /// kind parameters by value. Returns (vkey, skey, plain, sub).
+    fn intern_sink(&mut self, s: &SinkSpec) -> (u64, u64, SinkSpec, SinkSpec) {
+        let (src_vk, src_sk) = self.intern(&s.source);
+        let kparents: Vec<Matrix> = s.kind.parents().into_iter().cloned().collect();
+        let mut edges: Vec<(u64, u64, bool)> = Vec::with_capacity(kparents.len());
+        for p in &kparents {
+            let (vk, sk) = self.intern(p);
+            edges.push((vk, sk, p.transposed));
+        }
+        let mut hv = DefaultHasher::new();
+        let mut hs = DefaultHasher::new();
+        for h in [&mut hv, &mut hs] {
+            b"sink".hash(h);
+            s.kind.hash_params(h);
+        }
+        (src_vk, s.source.transposed).hash(&mut hv);
+        (src_sk, s.source.transposed).hash(&mut hs);
+        for (vk, sk, t) in &edges {
+            (vk, t).hash(&mut hv);
+            (sk, t).hash(&mut hs);
+        }
+        let rebuilt = |iner: &Interner, sub: bool| -> SinkSpec {
+            let pick = |p: &Matrix| {
+                let info = &iner.nodes[&p.data_ptr()];
+                let rep = if sub { &info.sub } else { &info.plain };
+                Matrix {
+                    data: rep.data.clone(),
+                    transposed: p.transposed,
+                }
+            };
+            let reps: Vec<Matrix> = kparents.iter().map(&pick).collect();
+            SinkSpec {
+                source: pick(&s.source),
+                kind: s.kind.with_parents(&reps),
+            }
+        };
+        (
+            hv.finish(),
+            hs.finish(),
+            rebuilt(self, false),
+            rebuilt(self, true),
+        )
+    }
+}
+
+fn leaf_io_rows(d: &MatrixData) -> Option<u64> {
+    match d {
+        MatrixData::Dense(dd) => Some(dd.parts.io_rows),
+        MatrixData::Sparse(sp) => Some(sp.parts.io_rows),
+        _ => None,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pass geometry (exec::run_pass_opts's partitioning decisions, taken from
+// the actually-compiled program)
+
+/// The pass-shaping quantities of a (targets, sinks) DAG: everything that
+/// determines partition boundaries, per-worker ranges and strip heights —
+/// and therefore sink fold grouping and target partitioning. Computed
+/// from the same compiled [`pipeline::Program`](crate::exec::pipeline)
+/// the evaluator would run, so the mirror cannot drift from exec.
+/// `None` when the DAG does not compile or would violate exec's
+/// source-divisibility rule: the planner then refuses to merge or
+/// substitute, which is always safe.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+struct Geometry {
+    pass_io: u64,
+    unit_io: u64,
+    n_parts: usize,
+    /// Widest instruction of the compiled program: with `fuse_cache` on
+    /// it sets the CPU-strip heights, which group sink folds.
+    widest: u64,
+}
+
+fn geometry(ctx: &ExecCtx<'_>, targets: &[&Matrix], sinks: &[&SinkSpec]) -> Option<Geometry> {
+    let ts: Vec<Matrix> = targets.iter().map(|t| (*t).clone()).collect();
+    let ss: Vec<SinkSpec> = sinks.iter().map(|s| clone_spec(s)).collect();
+    let prog = exec::pipeline::compile_opts(
+        &ts,
+        &ss,
+        exec::pipeline::CompileOpts {
+            peephole_fuse: ctx.config.peephole_fuse,
+            inplace_ops: ctx.config.inplace_ops,
+        },
+    )
+    .ok()?;
+    let mut pass_io = u64::MAX;
+    for s in &prog.sources {
+        if let Some(io) = leaf_io_rows(s.as_ref()) {
+            pass_io = pass_io.min(io);
+        }
+    }
+    for t in targets {
+        pass_io = pass_io.min(io_rows_for(t.ncol()));
+    }
+    let widest = prog.instrs.iter().map(|i| i.ncol).max().unwrap_or(1);
+    if pass_io == u64::MAX {
+        // sinks over generator-only DAGs
+        pass_io = io_rows_for(widest);
+    }
+    for s in &prog.sources {
+        if let Some(io) = leaf_io_rows(s.as_ref()) {
+            if io % pass_io != 0 {
+                // exec rejects such passes outright; never plan one
+                return None;
+            }
+        }
+    }
+    let mut unit_io = pass_io;
+    for s in &prog.sources {
+        if let Some(io) = leaf_io_rows(s.as_ref()) {
+            unit_io = unit_io.max(io);
+        }
+    }
+    let n_parts = Partitioning::with_io_rows(prog.nrow, 1, pass_io).n_parts();
+    Some(Geometry {
+        pass_io,
+        unit_io,
+        n_parts,
+        widest,
+    })
+}
+
+/// Value copy of a sink spec (`SinkSpec` is intentionally not `Clone`).
+fn clone_spec(s: &SinkSpec) -> SinkSpec {
+    SinkSpec {
+        source: s.source.clone(),
+        kind: s
+            .kind
+            .with_parents(&s.kind.parents().into_iter().cloned().collect::<Vec<_>>()),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pass 3: materialize-vs-recompute cost model
+
+/// Relative cost of a byte moved through the external store vs a byte of
+/// streamed compute. Calibrated against the engine's own counters: the
+/// vectorized GenOp path streams ~4x the bytes/sec of the (throttled)
+/// SSD model (`benches/genops_micro.rs` GB/s rows vs `ThrottleConfig`),
+/// and in-memory "I/O" is another ~8x cheaper than that.
+const COMPUTE_DISCOUNT: f64 = 4.0;
+const IN_MEM_IO_DISCOUNT: f64 = 8.0;
+
+/// Decide whether the shared intermediate `cand` (canonical plain node)
+/// should be materialized once and re-read, rather than recomputed inside
+/// every pass that uses it. `roots` are the batch's canonical roots —
+/// a source feeding the rest of the batch even without `cand` is not
+/// chargeable to recomputation.
+fn should_materialize(ctx: &ExecCtx<'_>, cand: &Matrix, roots: &[Matrix]) -> bool {
+    let threshold = ctx.config.opt_materialize_threshold as u64;
+    if threshold == 0 {
+        return false;
+    }
+    let v = match &*cand.data {
+        MatrixData::Virtual(v) => v,
+        _ => return false,
+    };
+    let bytes = v.nrow * v.ncol * v.dtype.size() as u64;
+    if bytes == 0 || bytes > threshold {
+        return false;
+    }
+
+    // subtree accounting: streamed compute bytes + leaf sources
+    let mut compute_bytes: u64 = 0;
+    let mut leaves: HashMap<usize, u64> = HashMap::new();
+    let mut visited: HashSet<usize> = HashSet::new();
+    let mut stack = vec![cand.canonical()];
+    while let Some(m) = stack.pop() {
+        if !visited.insert(m.data_ptr()) {
+            continue;
+        }
+        match &*m.data {
+            MatrixData::Virtual(vv) => {
+                compute_bytes += vv.nrow * vv.ncol * 8;
+                for p in vv.kind.parents() {
+                    stack.push(p.canonical());
+                }
+                if let crate::dag::VKind::Spmm { a, .. } = &vv.kind {
+                    stack.push(a.canonical());
+                }
+            }
+            MatrixData::Dense(d) => {
+                leaves.insert(m.data_ptr(), d.nrow() * d.ncol() * d.dtype().size() as u64);
+            }
+            MatrixData::Sparse(sp) => {
+                // nnz is not tracked on the handle; a row-index estimate
+                // keeps sparse-fed candidates conservative
+                leaves.insert(m.data_ptr(), sp.nrow() * 16);
+            }
+            MatrixData::Group(_) => return false,
+        }
+    }
+
+    // leaves still reachable from the batch with `cand` cut out are
+    // streamed anyway — only exclusive leaves charge to recomputation
+    let cand_ptr = cand.data_ptr();
+    let mut shared: HashSet<usize> = HashSet::new();
+    let mut visited: HashSet<usize> = HashSet::new();
+    let mut stack: Vec<Matrix> = roots.iter().map(|r| r.canonical()).collect();
+    while let Some(m) = stack.pop() {
+        let ptr = m.data_ptr();
+        if ptr == cand_ptr || !visited.insert(ptr) {
+            continue;
+        }
+        match &*m.data {
+            MatrixData::Virtual(vv) => {
+                for p in vv.kind.parents() {
+                    stack.push(p.canonical());
+                }
+                if let crate::dag::VKind::Spmm { a, .. } = &vv.kind {
+                    stack.push(a.canonical());
+                }
+            }
+            _ => {
+                shared.insert(ptr);
+            }
+        }
+    }
+    let exclusive_bytes: u64 = leaves
+        .iter()
+        .filter(|(ptr, _)| !shared.contains(*ptr))
+        .map(|(_, b)| *b)
+        .sum();
+
+    let io_unit = match ctx.config.storage {
+        StorageKind::External => 1.0,
+        StorageKind::InMem => 1.0 / IN_MEM_IO_DISCOUNT,
+    };
+    let recompute = exclusive_bytes as f64 * io_unit + compute_bytes as f64 / COMPUTE_DISCOUNT;
+    let write = bytes as f64 * io_unit;
+    let fits_cache = ctx.config.storage == StorageKind::InMem
+        || (ctx.cache.is_some() && (bytes as usize).saturating_mul(4) <= ctx.config.em_cache_bytes);
+    let read_back = if fits_cache { 0.0 } else { bytes as f64 * io_unit };
+    write + read_back < recompute
+}
+
+// ---------------------------------------------------------------------------
+// Batch planning + execution
+
+/// Planned form of one unique (post-pruning) request.
+enum Unique {
+    Target {
+        plain: Matrix,
+        sub: Matrix,
+        vkey: u64,
+        transposed: bool,
+    },
+    Sink {
+        plain: SinkSpec,
+        sub: SinkSpec,
+    },
+}
+
+impl Unique {
+    fn long_dim(&self) -> u64 {
+        match self {
+            Unique::Target {
+                plain, transposed, ..
+            } => view(plain, *transposed).nrow(),
+            Unique::Sink { plain, .. } => plain.source.nrow(),
+        }
+    }
+
+    /// The target node actually sent to the pass: children may be
+    /// substituted with memoized copies, the root never is (a substituted
+    /// root would return a matrix whose stored partitioning depends on
+    /// the pass it was memoized from — not on this request).
+    fn target_node<'a>(plain: &'a Matrix, sub: &'a Matrix, use_sub: bool) -> &'a Matrix {
+        if use_sub && sub.data.is_virtual() {
+            sub
+        } else {
+            plain
+        }
+    }
+
+    fn solo_geometry(&self, ctx: &ExecCtx<'_>, sub: bool) -> Option<Geometry> {
+        match self {
+            Unique::Target {
+                plain,
+                sub: s,
+                transposed,
+                ..
+            } => {
+                let m = view(Unique::target_node(plain, s, sub), *transposed);
+                geometry(ctx, &[&m], &[])
+            }
+            Unique::Sink { plain, sub: s } => geometry(ctx, &[], &[if sub { s } else { plain }]),
+        }
+    }
+}
+
+fn view(m: &Matrix, transposed: bool) -> Matrix {
+    Matrix {
+        data: m.data.clone(),
+        transposed,
+    }
+}
+
+/// Execute a batch of requests through the optimizer.
+///
+/// `fused = true` preserves the explicit batch surfaces' contract — the
+/// whole batch is one hand-fused pass (`fm.materialize`); `false` is the
+/// [`Engine::plan_batch`](crate::fmr::engine::Engine::plan_batch)
+/// surface, where each request is an independent forced materialization
+/// and the planner chooses the pass grouping. With `cross_pass_opt` off,
+/// `fused` batches run exactly the legacy single pass and un-fused
+/// batches run one pass per request.
+pub fn execute_batch(
+    ctx: &ExecCtx<'_>,
+    planner: &Mutex<Planner>,
+    requests: &[PlanRequest],
+    fused: bool,
+) -> Result<Vec<PlanOutput>> {
+    if requests.is_empty() {
+        return Ok(Vec::new());
+    }
+    if !ctx.config.cross_pass_opt {
+        return execute_unplanned(ctx, requests, fused);
+    }
+    let mut pl = planner.lock().unwrap();
+    pl.stamp += 1;
+
+    // ---- optimizer pass 1+2: canonicalize, hash-cons, prune duplicates
+    let memo_snapshot: Vec<(u64, Matrix)> =
+        pl.memo.iter().map(|e| (e.key, e.value.clone())).collect();
+    let mut it = Interner::new(memo_snapshot);
+    let mut uniques: Vec<Unique> = Vec::new();
+    let mut shape = DefaultHasher::new();
+    fused.hash(&mut shape);
+    let mut unique_of: Vec<usize> = Vec::with_capacity(requests.len());
+    let mut by_key: HashMap<u64, usize> = HashMap::new();
+    for r in requests {
+        let (key, skey, u) = match r {
+            PlanRequest::Target(t) => {
+                let (vk, sk) = it.intern(t);
+                let mut h = DefaultHasher::new();
+                (b"t", vk, t.transposed).hash(&mut h);
+                let info = &it.nodes[&t.data_ptr()];
+                (
+                    h.finish(),
+                    sk,
+                    Unique::Target {
+                        plain: info.plain.clone(),
+                        sub: info.sub.clone(),
+                        vkey: vk,
+                        transposed: t.transposed,
+                    },
+                )
+            }
+            PlanRequest::Sink(s) => {
+                let (vk, sk, plain, sub) = it.intern_sink(s);
+                let mut h = DefaultHasher::new();
+                (b"s", vk).hash(&mut h);
+                (h.finish(), sk, Unique::Sink { plain, sub })
+            }
+        };
+        let root_t = match &u {
+            Unique::Target { transposed, .. } => *transposed,
+            Unique::Sink { .. } => false,
+        };
+        let ui = match by_key.get(&key) {
+            Some(&ui) => ui,
+            None => {
+                let next = uniques.len();
+                by_key.insert(key, next);
+                uniques.push(u);
+                next
+            }
+        };
+        unique_of.push(ui);
+        // plan-cache key: *structural* shape only. `skey` ignores leaf
+        // `Arc` identity, so iteration 2..n of a loop — fresh data and
+        // fresh host operands, same statement list — lands on the same
+        // cached grouping; `ui` folds in this batch's value-level dedup
+        // pattern and `root_t` the requested view, neither of which the
+        // structural key can see.
+        (skey, root_t, ui).hash(&mut shape);
+    }
+    let pruned = (requests.len() - uniques.len()) as u64;
+    if pruned > 0 {
+        ctx.metrics.opt_sinks_pruned.fetch_add(pruned, Ordering::Relaxed);
+    }
+    if it.cse_hits > 0 {
+        ctx.metrics
+            .opt_cse_hits
+            .fetch_add(it.cse_hits, Ordering::Relaxed);
+    }
+    let shape_key = shape.finish();
+
+    // ---- recurrence bookkeeping + one-shot cost decisions
+    if pl.seen.len() > STATE_CAP {
+        pl.seen.clear();
+    }
+    let batch_roots: Vec<Matrix> = uniques
+        .iter()
+        .flat_map(|u| match u {
+            Unique::Target { plain, .. } => vec![plain.clone()],
+            Unique::Sink { plain, .. } => {
+                let mut v = vec![plain.source.canonical()];
+                v.extend(plain.kind.parents().into_iter().map(|p| p.canonical()));
+                v
+            }
+        })
+        .collect();
+    let target_root_keys: HashSet<u64> = uniques
+        .iter()
+        .filter_map(|u| match u {
+            Unique::Target { vkey, .. } => Some(*vkey),
+            Unique::Sink { .. } => None,
+        })
+        .collect();
+    let mut to_materialize: Vec<u64> = Vec::new();
+    let virt_keys: Vec<u64> = it.virt.keys().copied().collect();
+    for vk in virt_keys {
+        let count = {
+            let c = pl.seen.entry(vk).or_insert(0);
+            *c += 1;
+            *c
+        };
+        // a target's result is never memoized: its key embeds the batch's
+        // per-iteration leaves, so it cannot recur — and it is already
+        // being materialized for the caller
+        if target_root_keys.contains(&vk) {
+            continue;
+        }
+        if count == 2 && !pl.decided.contains_key(&vk) {
+            let cand = it.virt[&vk].0.clone();
+            let mat = should_materialize(ctx, &cand, &batch_roots);
+            if pl.decided.len() > STATE_CAP {
+                pl.decided.clear();
+            }
+            pl.decided.insert(vk, mat);
+        }
+        if pl.decided.get(&vk) == Some(&true)
+            && pl.memo.iter().all(|e| e.key != vk)
+            && !to_materialize.contains(&vk)
+        {
+            to_materialize.push(vk);
+        }
+    }
+
+    // ---- pass grouping: plan cache, else long-dim grouping + the
+    // geometry fixpoint that keeps every merged request on its solo grid
+    let long_dims: Vec<u64> = uniques.iter().map(|u| u.long_dim()).collect();
+    let cached = pl.plans.get(&shape_key).and_then(|p| {
+        let valid = p.n_unique == uniques.len()
+            && p.groups.len() == p.long_dims.len()
+            && p.groups.iter().zip(&p.long_dims).all(|(g, ld)| {
+                !g.is_empty() && g.iter().all(|&ui| ui < uniques.len() && long_dims[ui] == *ld)
+            });
+        if valid {
+            Some(p.groups.clone())
+        } else {
+            None
+        }
+    });
+    let groups: Vec<Vec<usize>> = match cached {
+        Some(g) => {
+            ctx.metrics.opt_plan_cache_hits.fetch_add(1, Ordering::Relaxed);
+            g
+        }
+        None => {
+            let groups = if fused {
+                vec![(0..uniques.len()).collect::<Vec<usize>>()]
+            } else {
+                plan_groups(ctx, &uniques, &long_dims)
+            };
+            if pl.plans.len() > STATE_CAP {
+                pl.plans.clear();
+            }
+            pl.plans.insert(
+                shape_key,
+                CachedPlan {
+                    n_unique: uniques.len(),
+                    groups: groups.clone(),
+                    long_dims: groups
+                        .iter()
+                        .map(|g| long_dims[g[0]])
+                        .collect(),
+                },
+            );
+            groups
+        }
+    };
+
+    // ---- assemble pass groups; decide memo substitution per group
+    let mut outputs: Vec<Option<PlanOutput>> = vec![None; uniques.len()];
+    let mut pass_groups: Vec<PassGroup> = Vec::new();
+    // per pass group: (target unique ids, sink unique ids, extra keys)
+    let mut group_meta: Vec<(Vec<usize>, Vec<usize>, Vec<u64>)> = Vec::new();
+    let mut subs_used = false;
+    for g in &groups {
+        let mut t_ids: Vec<usize> = Vec::new();
+        let mut s_ids: Vec<usize> = Vec::new();
+        for &ui in g {
+            match &uniques[ui] {
+                Unique::Target { .. } => t_ids.push(ui),
+                Unique::Sink { .. } => s_ids.push(ui),
+            }
+        }
+        // substitute memoized intermediates only when the rewritten DAG
+        // keeps the exact pass geometry of the recompute DAG
+        let use_sub = if it.memo_used.is_empty() {
+            false
+        } else {
+            let geo_of = |sub: bool| {
+                let ts: Vec<Matrix> = t_ids
+                    .iter()
+                    .map(|&ui| match &uniques[ui] {
+                        Unique::Target {
+                            plain,
+                            sub: s,
+                            transposed,
+                            ..
+                        } => view(Unique::target_node(plain, s, sub), *transposed),
+                        Unique::Sink { .. } => unreachable!(),
+                    })
+                    .collect();
+                let ss: Vec<&SinkSpec> = s_ids
+                    .iter()
+                    .map(|&ui| match &uniques[ui] {
+                        Unique::Sink { plain, sub: s } => {
+                            if sub {
+                                s
+                            } else {
+                                plain
+                            }
+                        }
+                        Unique::Target { .. } => unreachable!(),
+                    })
+                    .collect();
+                let trefs: Vec<&Matrix> = ts.iter().collect();
+                geometry(ctx, &trefs, &ss)
+            };
+            match (geo_of(false), geo_of(true)) {
+                (Some(a), Some(b)) => a == b,
+                _ => false,
+            }
+        };
+        if use_sub {
+            subs_used = true;
+        }
+
+        let mut targets: Vec<Matrix> = Vec::new();
+        for &ui in &t_ids {
+            if let Unique::Target {
+                plain,
+                sub,
+                transposed,
+                ..
+            } = &uniques[ui]
+            {
+                targets.push(view(Unique::target_node(plain, sub, use_sub), *transposed));
+            }
+        }
+        let sinks: Vec<SinkSpec> = s_ids
+            .iter()
+            .map(|&ui| match &uniques[ui] {
+                Unique::Sink { plain, sub } => {
+                    let s = if use_sub { sub } else { plain };
+                    SinkSpec {
+                        source: s.source.clone(),
+                        kind: s.kind.with_parents(
+                            &s.kind.parents().into_iter().cloned().collect::<Vec<_>>(),
+                        ),
+                    }
+                }
+                Unique::Target { .. } => unreachable!(),
+            })
+            .collect();
+        if targets.is_empty() && sinks.is_empty() {
+            continue;
+        }
+
+        // cost-model extra targets: materialize recurring intermediates
+        // in the pass that already computes them — but only when writing
+        // the extra output leaves the pass geometry exactly as it was
+        // (an extra target enters exec's `pass_io` min, so this is
+        // re-checked with the full geometry mirror, not just a bound)
+        let mut extras: Vec<u64> = Vec::new();
+        let mut extra_targets: Vec<Matrix> = Vec::new();
+        if !to_materialize.is_empty() {
+            let srefs: Vec<&SinkSpec> = sinks.iter().collect();
+            let base: Vec<&Matrix> = targets.iter().collect();
+            if let Some(geo) = geometry(ctx, &base, &srefs) {
+                let mut reach: HashSet<usize> = HashSet::new();
+                {
+                    let mut stack: Vec<Matrix> = targets.iter().map(|t| t.canonical()).collect();
+                    for s in &sinks {
+                        stack.push(s.source.canonical());
+                        for p in s.kind.parents() {
+                            stack.push(p.canonical());
+                        }
+                    }
+                    while let Some(m) = stack.pop() {
+                        if !reach.insert(m.data_ptr()) {
+                            continue;
+                        }
+                        if let MatrixData::Virtual(v) = &*m.data {
+                            for p in v.kind.parents() {
+                                stack.push(p.canonical());
+                            }
+                        }
+                    }
+                }
+                for &vk in &to_materialize {
+                    let node = &it.virt[&vk];
+                    let node = if use_sub { &node.1 } else { &node.0 };
+                    if !node.data.is_virtual() || !reach.contains(&node.data_ptr()) {
+                        continue;
+                    }
+                    let cand = node.canonical();
+                    let trial: Vec<&Matrix> = targets
+                        .iter()
+                        .chain(extra_targets.iter())
+                        .chain(std::iter::once(&cand))
+                        .collect();
+                    if geometry(ctx, &trial, &srefs) == Some(geo) {
+                        extra_targets.push(cand);
+                        extras.push(vk);
+                    }
+                }
+            }
+        }
+        targets.extend(extra_targets);
+        to_materialize.retain(|vk| !extras.contains(vk));
+
+        pass_groups.push(PassGroup { targets, sinks });
+        group_meta.push((t_ids, s_ids, extras));
+    }
+    if subs_used {
+        ctx.metrics
+            .opt_mat_decisions
+            .fetch_add(it.memo_used.len() as u64, Ordering::Relaxed);
+        for &vk in &it.memo_used {
+            let _ = pl.memo_get(vk); // refresh LRU stamps
+        }
+    }
+
+    // ---- execute the planned pass groups
+    let results = exec::run_groups(ctx, &pass_groups)?;
+    for (ri, (out_targets, out_sinks)) in results.into_iter().enumerate() {
+        let (t_ids, s_ids, extras) = &group_meta[ri];
+        let mut ot = out_targets.into_iter();
+        for &ui in t_ids {
+            outputs[ui] = Some(PlanOutput::Target(ot.next().expect("target result")));
+        }
+        for (&vk, value) in extras.iter().zip(ot) {
+            ctx.metrics.opt_mat_decisions.fetch_add(1, Ordering::Relaxed);
+            let subtree = it.virt[&vk].0.clone();
+            pl.memo_insert(vk, value, subtree);
+        }
+        for (&ui, sr) in s_ids.iter().zip(out_sinks) {
+            outputs[ui] = Some(PlanOutput::Sink(sr));
+        }
+    }
+
+    Ok(unique_of
+        .into_iter()
+        .map(|ui| outputs[ui].clone().expect("planned request resolved"))
+        .collect())
+}
+
+/// Long-dim grouping with the geometry fixpoint: requests merge into one
+/// pass only while the merged pass keeps every member's solo geometry
+/// (identical partition grid and per-worker ranges ⇒ identical fold
+/// grouping). Members that would shift the grid run as their own passes —
+/// still CSE-canonicalized, never reshaped.
+fn plan_groups(ctx: &ExecCtx<'_>, uniques: &[Unique], long_dims: &[u64]) -> Vec<Vec<usize>> {
+    let mut groups: Vec<Vec<usize>> = Vec::new();
+    let mut dim_group: HashMap<u64, usize> = HashMap::new();
+    for (ui, ld) in long_dims.iter().enumerate() {
+        match dim_group.get(ld) {
+            Some(&g) => groups[g].push(ui),
+            None => {
+                dim_group.insert(*ld, groups.len());
+                groups.push(vec![ui]);
+            }
+        }
+    }
+    let mut out: Vec<Vec<usize>> = Vec::new();
+    for mut g in groups {
+        // fixpoint: dropping a member can change the merged geometry, so
+        // re-evaluate until a round drops nobody
+        while g.len() > 1 {
+            let ts: Vec<Matrix> = g
+                .iter()
+                .filter_map(|&ui| match &uniques[ui] {
+                    Unique::Target {
+                        plain, transposed, ..
+                    } => Some(view(plain, *transposed)),
+                    Unique::Sink { .. } => None,
+                })
+                .collect();
+            let ss: Vec<&SinkSpec> = g
+                .iter()
+                .filter_map(|&ui| match &uniques[ui] {
+                    Unique::Sink { plain, .. } => Some(plain),
+                    Unique::Target { .. } => None,
+                })
+                .collect();
+            let trefs: Vec<&Matrix> = ts.iter().collect();
+            let merged = match geometry(ctx, &trefs, &ss) {
+                Some(m) => m,
+                None => {
+                    // unmodeled source kind: fall back to solo passes
+                    for ui in g.drain(..) {
+                        out.push(vec![ui]);
+                    }
+                    break;
+                }
+            };
+            let before = g.len();
+            g.retain(|&ui| {
+                let keep = match uniques[ui].solo_geometry(ctx, false) {
+                    Some(solo) => match &uniques[ui] {
+                        // target values are row-local: only the stored
+                        // partitioning (pass_io) must match the solo run
+                        Unique::Target { .. } => solo.pass_io == merged.pass_io,
+                        // sink folds group by partition AND strip: the
+                        // merged program must reproduce both boundaries
+                        Unique::Sink { .. } => {
+                            solo.widest == merged.widest
+                                && ((solo.pass_io == merged.pass_io
+                                    && solo.unit_io == merged.unit_io)
+                                    || (solo.n_parts == 1 && merged.n_parts == 1))
+                        }
+                    },
+                    None => false,
+                };
+                if !keep {
+                    out.push(vec![ui]);
+                }
+                keep
+            });
+            if g.len() == before {
+                break;
+            }
+        }
+        if !g.is_empty() {
+            out.push(g);
+        }
+    }
+    out
+}
+
+/// The unoptimized execution paths: the legacy single fused pass for the
+/// explicit batch surfaces, or one pass per request for `plan_batch`.
+fn execute_unplanned(
+    ctx: &ExecCtx<'_>,
+    requests: &[PlanRequest],
+    fused: bool,
+) -> Result<Vec<PlanOutput>> {
+    if fused {
+        let targets: Vec<Matrix> = requests
+            .iter()
+            .filter_map(|r| match r {
+                PlanRequest::Target(t) => Some(t.clone()),
+                PlanRequest::Sink(_) => None,
+            })
+            .collect();
+        let sinks: Vec<SinkSpec> = requests
+            .iter()
+            .filter_map(|r| match r {
+                PlanRequest::Sink(s) => Some(SinkSpec {
+                    source: s.source.clone(),
+                    kind: s
+                        .kind
+                        .with_parents(&s.kind.parents().into_iter().cloned().collect::<Vec<_>>()),
+                }),
+                PlanRequest::Target(_) => None,
+            })
+            .collect();
+        let (out_t, out_s) = exec::run_pass(ctx, &targets, &sinks)?;
+        let mut ti = out_t.into_iter();
+        let mut si = out_s.into_iter();
+        return Ok(requests
+            .iter()
+            .map(|r| match r {
+                PlanRequest::Target(_) => PlanOutput::Target(ti.next().expect("target result")),
+                PlanRequest::Sink(_) => PlanOutput::Sink(si.next().expect("sink result")),
+            })
+            .collect());
+    }
+    requests
+        .iter()
+        .map(|r| match r {
+            PlanRequest::Target(t) => {
+                let (out, _) = exec::run_pass(ctx, std::slice::from_ref(t), &[])?;
+                Ok(PlanOutput::Target(out.into_iter().next().expect("target")))
+            }
+            PlanRequest::Sink(s) => {
+                let spec = SinkSpec {
+                    source: s.source.clone(),
+                    kind: s
+                        .kind
+                        .with_parents(&s.kind.parents().into_iter().cloned().collect::<Vec<_>>()),
+                };
+                let (_, out) = exec::run_pass(ctx, &[], &[spec])?;
+                Ok(PlanOutput::Sink(out.into_iter().next().expect("sink")))
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineConfig;
+    use crate::dag::UnFn;
+    use crate::dtype::Scalar;
+    use crate::fmr::FmMatrix;
+    use crate::genops;
+    use crate::matrix::HostMat;
+    use crate::vudf::{AggOp, BinOp, UnOp};
+    use crate::Engine;
+    use std::sync::Arc;
+
+    /// Engine with the optimizer forced on, independent of the
+    /// `FLASHR_NO_CROSS_PASS_OPT` environment override.
+    fn opt_engine() -> Arc<Engine> {
+        let c = EngineConfig {
+            cross_pass_opt: true,
+            opt_materialize_threshold: 16 << 20,
+            ..EngineConfig::default()
+        };
+        Engine::new(c).unwrap()
+    }
+
+    fn host(eng: &Arc<Engine>, m: &Matrix) -> HostMat {
+        FmMatrix {
+            eng: Arc::clone(eng),
+            m: m.clone(),
+        }
+        .to_host()
+        .unwrap()
+    }
+
+    #[test]
+    fn cse_merges_structural_duplicates_in_one_pass() {
+        let eng = opt_engine();
+        let x = FmMatrix::runif_matrix(&eng, 2048, 2, 0.0, 1.0, 7);
+        // two structurally identical chains built from scratch: distinct
+        // Arcs, same recorded computation
+        let a1 = genops::sapply(&x.m, UnFn::Builtin(UnOp::Sqrt));
+        let a2 = genops::sapply(&x.m, UnFn::Builtin(UnOp::Sqrt));
+        assert_ne!(a1.data_ptr(), a2.data_ptr());
+        let before = eng.metrics.snapshot();
+        let out = eng.materialize(&[a1, a2]).unwrap();
+        let after = eng.metrics.snapshot();
+        assert_eq!(after.passes_run - before.passes_run, 1);
+        assert_eq!(after.opt_cse_hits - before.opt_cse_hits, 1);
+        // CSE merged them onto one canonical node -> one evaluation,
+        // one shared result
+        assert_eq!(out[0].data_ptr(), out[1].data_ptr());
+        assert_eq!(host(&eng, &out[0]), host(&eng, &out[1]));
+    }
+
+    #[test]
+    fn duplicate_targets_and_sinks_are_pruned() {
+        let eng = opt_engine();
+        let y = FmMatrix::runif_matrix(&eng, 2048, 2, 0.0, 1.0, 9);
+        let v = genops::sapply(&y.m, UnFn::Builtin(UnOp::Abs));
+
+        let before = eng.metrics.snapshot();
+        let out = eng.materialize(&[v.clone(), v.clone()]).unwrap();
+        let mid = eng.metrics.snapshot();
+        assert_eq!(mid.passes_run - before.passes_run, 1);
+        assert_eq!(mid.opt_sinks_pruned - before.opt_sinks_pruned, 1);
+        assert_eq!(out[0].data_ptr(), out[1].data_ptr());
+
+        let s1 = genops::agg_full(&v, AggOp::Sum);
+        let s2 = genops::agg_full(&v, AggOp::Sum);
+        let r = eng.materialize_sinks(&[s1, s2]).unwrap();
+        let after = eng.metrics.snapshot();
+        assert_eq!(after.passes_run - mid.passes_run, 1);
+        assert_eq!(after.opt_sinks_pruned - mid.opt_sinks_pruned, 1);
+        assert_eq!(r[0].scalar(), r[1].scalar());
+    }
+
+    #[test]
+    fn plan_cache_hits_on_repeated_batch_shape() {
+        let eng = opt_engine();
+        let before = eng.metrics.snapshot();
+        let mut sums = Vec::new();
+        for _ in 0..2 {
+            // rebuilt from scratch each round, like a loop iteration
+            let x = FmMatrix::runif_matrix(&eng, 2048, 2, 0.0, 1.0, 11);
+            let t = genops::sapply(&x.m, UnFn::Builtin(UnOp::Sqrt));
+            let s = genops::agg_full(&t, AggOp::Sum);
+            let reqs = [PlanRequest::target(&t), PlanRequest::Sink(s)];
+            let out = eng.plan_batch(&reqs).unwrap();
+            sums.push(out[1].clone().sink().scalar());
+        }
+        let after = eng.metrics.snapshot();
+        assert!(after.opt_plan_cache_hits - before.opt_plan_cache_hits >= 1);
+        assert_eq!(sums[0], sums[1]);
+    }
+
+    /// A recurring shared intermediate is materialized once (round 2) and
+    /// substituted from the memo afterwards (round 3) — with identical
+    /// results every round.
+    #[test]
+    fn recurring_intermediate_is_memoized() {
+        let eng = opt_engine();
+        let before = eng.metrics.snapshot();
+        let mut hosts = Vec::new();
+        let mut scalars = Vec::new();
+        // the data leaf is the loop-invariant part (like X in IRLS):
+        // recurrence is *value* identity, so the virtual chains are
+        // rebuilt from scratch each round over the same `Arc`
+        let x = FmMatrix::runif_matrix(&eng, 2048, 2, 0.0, 1.0, 13);
+        for _ in 0..3 {
+            let shared = genops::sapply(&x.m, UnFn::Builtin(UnOp::Sqrt));
+            let t = genops::mapply_scalar(&shared, Scalar::F64(2.0), BinOp::Mul, true);
+            let s_src = genops::mapply_scalar(&shared, Scalar::F64(1.0), BinOp::Add, true);
+            let s = genops::agg_full(&s_src, AggOp::Sum);
+            let reqs = [PlanRequest::target(&t), PlanRequest::Sink(s)];
+            let out = eng.plan_batch(&reqs).unwrap();
+            hosts.push(host(&eng, &out[0].clone().target()));
+            scalars.push(out[1].clone().sink().scalar());
+            let snap = eng.metrics.snapshot();
+            assert_eq!(snap.passes_run - before.passes_run, hosts.len() as u64);
+        }
+        let after = eng.metrics.snapshot();
+        // round 2 materializes the recurring intermediates, round 3
+        // substitutes them
+        assert!(after.opt_mat_decisions - before.opt_mat_decisions >= 2);
+        assert_eq!(hosts[0], hosts[1]);
+        assert_eq!(hosts[0], hosts[2]);
+        assert_eq!(scalars[0], scalars[1]);
+        assert_eq!(scalars[0], scalars[2]);
+    }
+
+    #[test]
+    fn zero_threshold_disables_materialize_planning() {
+        let c = EngineConfig {
+            cross_pass_opt: true,
+            opt_materialize_threshold: 0,
+            ..EngineConfig::default()
+        };
+        let eng = Engine::new(c).unwrap();
+        let before = eng.metrics.snapshot();
+        let mut scalars = Vec::new();
+        let x = FmMatrix::runif_matrix(&eng, 2048, 2, 0.0, 1.0, 13);
+        for _ in 0..3 {
+            let shared = genops::sapply(&x.m, UnFn::Builtin(UnOp::Sqrt));
+            let s_src = genops::mapply_scalar(&shared, Scalar::F64(1.0), BinOp::Add, true);
+            let reqs = [PlanRequest::Sink(genops::agg_full(&s_src, AggOp::Sum))];
+            let out = eng.plan_batch(&reqs).unwrap();
+            scalars.push(out[0].clone().sink().scalar());
+        }
+        let after = eng.metrics.snapshot();
+        assert_eq!(after.opt_mat_decisions - before.opt_mat_decisions, 0);
+        assert_eq!(scalars[0], scalars[1]);
+        assert_eq!(scalars[0], scalars[2]);
+    }
+
+    /// Requests whose solo pass geometry disagrees are not merged: the
+    /// planner runs them as separate passes, exactly as the eager path
+    /// would, so their stored partitionings never change.
+    #[test]
+    fn incompatible_geometry_splits_passes() {
+        let eng = opt_engine();
+        // io_rows_for(1024) = 1024 rows, io_rows_for(2) = 65536 rows
+        let wide = FmMatrix::runif_matrix(&eng, 4096, 1024, 0.0, 1.0, 17);
+        let narrow = FmMatrix::runif_matrix(&eng, 4096, 2, 0.0, 1.0, 19);
+        let tw = genops::sapply(&wide.m, UnFn::Builtin(UnOp::Sqrt));
+        let tn = genops::sapply(&narrow.m, UnFn::Builtin(UnOp::Sqrt));
+        let before = eng.metrics.snapshot();
+        let out = eng
+            .plan_batch(&[PlanRequest::target(&tw), PlanRequest::target(&tn)])
+            .unwrap();
+        let after = eng.metrics.snapshot();
+        assert_eq!(after.passes_run - before.passes_run, 2);
+
+        // byte-identical to solo materialization on a fresh engine
+        let eng2 = opt_engine();
+        let wide2 = FmMatrix::runif_matrix(&eng2, 4096, 1024, 0.0, 1.0, 17);
+        let narrow2 = FmMatrix::runif_matrix(&eng2, 4096, 2, 0.0, 1.0, 19);
+        let tw2 = genops::sapply(&wide2.m, UnFn::Builtin(UnOp::Sqrt));
+        let tn2 = genops::sapply(&narrow2.m, UnFn::Builtin(UnOp::Sqrt));
+        assert_eq!(
+            host(&eng, &out[0].clone().target()),
+            host(&eng2, &eng2.materialize(&[tw2]).unwrap()[0])
+        );
+        assert_eq!(
+            host(&eng, &out[1].clone().target()),
+            host(&eng2, &eng2.materialize(&[tn2]).unwrap()[0])
+        );
+    }
+
+    /// With the optimizer off, the explicit batch surfaces run the legacy
+    /// single fused pass and produce the same bytes as with it on.
+    #[test]
+    fn opt_off_matches_opt_on() {
+        let eng_on = opt_engine();
+        let c = EngineConfig {
+            cross_pass_opt: false,
+            ..EngineConfig::default()
+        };
+        let eng_off = Engine::new(c).unwrap();
+        let mk = |eng: &Arc<Engine>| {
+            let x = FmMatrix::runif_matrix(eng, 2048, 3, -1.0, 1.0, 23);
+            let t = genops::sapply(&x.m, UnFn::Builtin(UnOp::Abs));
+            let s = genops::agg_full(&t, AggOp::Sum);
+            (t, s)
+        };
+        let (t_on, s_on) = mk(&eng_on);
+        let (t_off, s_off) = mk(&eng_off);
+        let (m_on, r_on) = eng_on.run_pass(&[t_on], &[s_on]).unwrap();
+        let (m_off, r_off) = eng_off.run_pass(&[t_off], &[s_off]).unwrap();
+        assert_eq!(host(&eng_on, &m_on[0]), host(&eng_off, &m_off[0]));
+        assert_eq!(r_on[0].scalar(), r_off[0].scalar());
+    }
+}

@@ -111,3 +111,50 @@ pub fn rerun_out_of_core<T>(tag: &str, f: impl Fn(&Arc<Engine>) -> T) -> (T, T) 
     );
     (im, em)
 }
+
+/// Cross-pass-optimizer parity battery: run `f` under matched engine
+/// pairs that differ ONLY in [`EngineConfig::cross_pass_opt`], across
+/// storage (IM / tiny-cache EM) × `vectorized_udf` × `simd_kernels`.
+/// Returns one `(label, opt_on, opt_off)` row per combination for the
+/// caller's bitwise assertion: the planner may only drop or share whole
+/// redundant evaluations, never change any single output's fold order,
+/// so every pair must match exactly — no tolerance.
+pub fn rerun_opt_ablation<T>(tag: &str, f: impl Fn(&Arc<Engine>) -> T) -> Vec<(String, T, T)> {
+    let mut rows = Vec::new();
+    for em in [false, true] {
+        for vudf in [false, true] {
+            for simd in [false, true] {
+                let label = format!(
+                    "{}/{}/{}",
+                    if em { "em" } else { "im" },
+                    if vudf { "vudf" } else { "boxed" },
+                    if simd { "simd" } else { "scalar" }
+                );
+                let run = |opt: bool| {
+                    // fresh store per engine so the EM legs never share files
+                    let dir = em.then(|| TempDir::new(&format!("xpass-{tag}")));
+                    let mut cfg = match &dir {
+                        Some(d) => out_of_core_config(d.path()),
+                        None => EngineConfig {
+                            chunk_bytes: 4 << 20,
+                            target_part_bytes: 1 << 20,
+                            xla_dispatch: false,
+                            ..EngineConfig::default()
+                        },
+                    };
+                    cfg.vectorized_udf = vudf;
+                    cfg.simd_kernels = simd;
+                    cfg.cross_pass_opt = opt;
+                    // sink partials merge in worker-completion order, so
+                    // bitwise comparisons are only meaningful at 1 thread
+                    // (same restriction as the spmm_pagerank bit-exactness
+                    // pins) — the planner parity claim is orthogonal to it
+                    cfg.threads = 1;
+                    f(&Engine::new(cfg).expect("opt-ablation engine"))
+                };
+                rows.push((label, run(true), run(false)));
+            }
+        }
+    }
+    rows
+}

@@ -1,0 +1,148 @@
+//! Cross-pass optimizer property tests: `cross_pass_opt` must change
+//! WHAT gets evaluated (fewer passes, less read I/O), never WHAT comes
+//! out — every workload must be **byte-identical** with the optimizer on
+//! and off, across storage modes (IM / tiny-cache EM), `vectorized_udf`
+//! and `simd_kernels` (the [`flashmatrix::testutil::rerun_opt_ablation`]
+//! battery). Single-threaded inside the battery so fold order is the
+//! only variable under test.
+
+use std::sync::Arc;
+
+use flashmatrix::algs;
+use flashmatrix::config::EngineConfig;
+use flashmatrix::datasets;
+use flashmatrix::fmr::Engine;
+use flashmatrix::testutil::{rerun_opt_ablation, TempDir};
+
+fn assert_bitwise(rows: &[(String, Vec<f64>, Vec<f64>)], what: &str) {
+    for (label, on, off) in rows {
+        assert_eq!(on.len(), off.len(), "{what}/{label}: fingerprint length");
+        for (i, (a, b)) in on.iter().zip(off).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{what}/{label}[{i}]: opt-on {a} != opt-off {b}"
+            );
+        }
+    }
+}
+
+/// K-means: three grouped sinks per Lloyd iteration submitted as one
+/// planned batch — the optimizer fuses them; results must not move a bit.
+#[test]
+fn kmeans_opt_on_bitwise_equals_opt_off() {
+    let rows = rerun_opt_ablation("kmeans", |eng| {
+        let (x, _) = datasets::mix_gaussian(eng, 100_000, 6, 3, 8.0, 3, None).unwrap();
+        let km = algs::kmeans(&x, 3, 3, 1).unwrap();
+        let mut fp = km.wcss.clone();
+        fp.extend(km.centroids.buf.to_f64_vec());
+        fp.extend(km.sizes.clone());
+        fp
+    });
+    assert_bitwise(&rows, "kmeans");
+}
+
+/// IRLS: the three per-step sinks (XtWX, gradient, log-likelihood) share
+/// the eta/mu chain; fused or eager, coefficients and deviances match.
+#[test]
+fn irls_opt_on_bitwise_equals_opt_off() {
+    let rows = rerun_opt_ablation("irls", |eng| {
+        let x = datasets::uniform(eng, 80_000, 4, -1.0, 1.0, 21, None).unwrap();
+        let y = datasets::logistic_labels(&x, &[1.0, -0.5, 0.25, -1.5], 22).unwrap();
+        let fit = algs::logistic(&x, &y, 4, 1e-8).unwrap();
+        let mut fp = fit.beta.clone();
+        fp.extend(fit.deviances);
+        fp
+    });
+    assert_bitwise(&rows, "irls");
+}
+
+/// PageRank: the new-rank target and the L1-delta sink share the SpMM
+/// chain; ranks and the convergence log must match bitwise.
+#[test]
+fn pagerank_opt_on_bitwise_equals_opt_off() {
+    let rows = rerun_opt_ablation("pagerank", |eng| {
+        let (g, dangling) = datasets::pagerank_graph(eng, 1 << 13, 6, 17, None).unwrap();
+        let pr = algs::pagerank(&g, &dangling, 0.85, 6, 0.0).unwrap();
+        let mut fp = pr.ranks.clone();
+        fp.extend(pr.deltas);
+        fp
+    });
+    assert_bitwise(&rows, "pagerank");
+}
+
+/// The optimizer's whole point: an IRLS iteration is one planned pass
+/// instead of three eager ones — strictly fewer `passes_run` for the
+/// same (bit-identical) coefficients.
+#[test]
+fn irls_runs_strictly_fewer_passes_with_opt_on() {
+    let run = |opt: bool| {
+        let eng = Engine::new(EngineConfig {
+            threads: 1,
+            xla_dispatch: false,
+            chunk_bytes: 4 << 20,
+            target_part_bytes: 1 << 20,
+            cross_pass_opt: opt,
+            ..EngineConfig::default()
+        })
+        .unwrap();
+        let x = datasets::uniform(&eng, 60_000, 6, -1.0, 1.0, 31, None).unwrap();
+        let y =
+            datasets::logistic_labels(&x, &[1.0, -0.5, 0.25, -1.5, 0.75, 0.0], 32).unwrap();
+        eng.metrics.reset();
+        let fit = algs::logistic(&x, &y, 4, 1e-8).unwrap();
+        (fit.beta, eng.metrics.snapshot())
+    };
+    let (beta_off, m_off) = run(false);
+    let (beta_on, m_on) = run(true);
+    assert!(
+        m_on.passes_run < m_off.passes_run,
+        "opt-on must run strictly fewer passes: {} vs {}",
+        m_on.passes_run,
+        m_off.passes_run
+    );
+    for (i, (a, b)) in beta_on.iter().zip(&beta_off).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "beta[{i}]: {a} vs {b}");
+    }
+}
+
+/// Out of core the pass savings become I/O savings: with a partition
+/// cache far smaller than the edge matrix, every eliminated pass is an
+/// eliminated re-stream of the edges — strictly fewer read bytes per
+/// PageRank run, bit-identical ranks.
+#[test]
+fn pagerank_out_of_core_reads_strictly_less_with_opt_on() {
+    let run = |opt: bool| {
+        let dir = TempDir::new("xpass-io");
+        let mut cfg = flashmatrix::testutil::out_of_core_config(dir.path());
+        cfg.threads = 1;
+        cfg.em_cache_bytes = 64 << 10; // « the ~1.7 MiB edge matrix
+        cfg.cross_pass_opt = opt;
+        let eng: Arc<Engine> = Engine::new(cfg).unwrap();
+        let (g, dangling) = datasets::pagerank_graph(&eng, 1 << 14, 8, 7, None).unwrap();
+        if let Some(c) = &eng.cache {
+            c.clear(); // cold start: drop the write-through copies
+        }
+        eng.metrics.reset();
+        let pr = algs::pagerank(&g, &dangling, 0.85, 6, 0.0).unwrap();
+        (pr.ranks, eng.metrics.snapshot())
+    };
+    let (ranks_off, m_off) = run(false);
+    let (ranks_on, m_on) = run(true);
+    assert!(
+        m_on.passes_run < m_off.passes_run,
+        "opt-on must run strictly fewer passes: {} vs {}",
+        m_on.passes_run,
+        m_off.passes_run
+    );
+    assert!(
+        m_on.io_read_bytes < m_off.io_read_bytes,
+        "opt-on must read strictly less: {} vs {} bytes",
+        m_on.io_read_bytes,
+        m_off.io_read_bytes
+    );
+    assert!(m_off.io_read_bytes > 0, "EM leg never touched the store");
+    for (i, (a, b)) in ranks_on.iter().zip(&ranks_off).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "rank[{i}]: {a} vs {b}");
+    }
+}
