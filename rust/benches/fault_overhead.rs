@@ -1,0 +1,184 @@
+//! Bench: what the always-on fault-tolerance machinery costs when
+//! nothing fails (PR 8's acceptance bound: <= 5% wall-time).
+//!
+//! The protections wired through [`flashmatrix::storage::FileStore`] —
+//! per-partition CRC32 recorded on write and verified on cold reads,
+//! plus the transient-retry loop around every positioned op — run on
+//! every out-of-core pass whether or not a fault plan is active. Fault
+//! *injection* is test-only, but this cost is production cost, so it is
+//! gated: `protections on` must stay within 5% of `protections off` on a
+//! throttled streaming workload. The bound is deterministic for the same
+//! reason the write-back bench's is: wall-time is dominated by the
+//! token-bucket SSD model, and the CRC slice-by-8 pass (GB/s-class) runs
+//! while the bucket refills, so the checksum work hides behind the
+//! modeled I/O exactly like compute does.
+//!
+//! A third, ungated row runs the same workload under a live transient
+//! fault plan (the chaos suite's spec at bench scale): it records how
+//! much absorbed faults cost and re-asserts the core robustness contract
+//! — the target is bit-identical to the fault-free runs.
+//!
+//! Run: `cargo bench --bench fault_overhead -- [--iters N] [--reps N] [--json-dir DIR]`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use flashmatrix::config::{EngineConfig, StorageKind, ThrottleConfig};
+use flashmatrix::datasets;
+use flashmatrix::fmr::{Engine, FmMatrix};
+use flashmatrix::harness::BenchReport;
+use flashmatrix::matrix::HostMat;
+use flashmatrix::storage::FaultConfig;
+use flashmatrix::util::bench::{bench_args, Table};
+
+/// Symmetric budget, same geometry as `benches/writeback.rs`: 32 MiB of
+/// reads + 32 MiB of writes per pass at 256 MiB/s each way.
+const SSD_BPS: u64 = 256 << 20;
+/// Far smaller than the matrix: every pass streams cold.
+const CACHE_BYTES: usize = 8 << 20;
+const ROWS: u64 = 1 << 19; // x 8 cols x 8 B = 32 MiB
+const COLS: u64 = 8;
+
+fn engine(
+    label: &str,
+    dir: &std::path::Path,
+    checksums: bool,
+    faults: Option<FaultConfig>,
+) -> Arc<Engine> {
+    Engine::new(EngineConfig {
+        storage: StorageKind::External,
+        data_dir: dir.join(label.replace(' ', "-")),
+        em_cache_bytes: CACHE_BYTES,
+        prefetch_depth: 0, // synchronous demand I/O: nothing hides the CRC cost for us
+        writeback: false,
+        io_checksums: checksums,
+        fault_injection: faults,
+        throttle: Some(ThrottleConfig {
+            read_bytes_per_sec: SSD_BPS,
+            write_bytes_per_sec: SSD_BPS,
+        }),
+        threads: 1, // bit-exact targets across configurations
+        xla_dispatch: false,
+        ..EngineConfig::default()
+    })
+    .expect("engine")
+}
+
+/// One timed measurement: `iters` map-materialize passes (read 32 MiB +
+/// write 32 MiB each, flush barrier included). Returns the wall seconds
+/// and the final target for the bit-exactness check (read back untimed).
+fn run(eng: &Arc<Engine>, x: &FmMatrix, iters: usize) -> (f64, HostMat) {
+    if let Some(c) = &eng.cache {
+        c.clear(); // start cold: every pass pays its reads
+    }
+    eng.ssd.drain_bursts();
+    let mut last = None;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        last = Some(x.sq().and_then(|y| y.materialize()).expect("map pass"));
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let host = last.expect("at least one iter").to_host().expect("readback");
+    (secs, host)
+}
+
+/// Median of `reps` measurements on one engine.
+fn median_run(eng: &Arc<Engine>, iters: usize, reps: usize) -> (f64, HostMat) {
+    let x = datasets::uniform(eng, ROWS, COLS, -1.0, 1.0, 7, None).expect("dataset");
+    let mut secs = Vec::with_capacity(reps);
+    let mut host = None;
+    for _ in 0..reps {
+        let (s, h) = run(eng, &x, iters);
+        secs.push(s);
+        host = Some(h);
+    }
+    secs.sort_by(f64::total_cmp);
+    (secs[reps / 2], host.expect("at least one rep"))
+}
+
+fn main() {
+    let args = bench_args();
+    let iters = args.usize_or("iters", 3);
+    let reps = args.usize_or("reps", 3);
+    let json_dir = args.get_or("json-dir", ".").to_string();
+    let dir = std::env::temp_dir().join(format!("fm-fault-overhead-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("bench data dir");
+
+    // The chaos suite's transient spec at bench scale: every fault heals
+    // within one retry / one checksum re-read, so results cannot move.
+    let transient =
+        FaultConfig::parse("seed=3201,eio=0.1,short=0.05,torn=0.05,bitflip=0.05,max_duration=1")
+            .expect("transient spec");
+
+    let mut t = Table::new(format!(
+        "fault-tolerance overhead: {iters} sq() materialize passes x {reps} reps over \
+         {} MiB EM (cache {} MiB, SSD {} MiB/s each way)",
+        (ROWS * COLS * 8) >> 20,
+        CACHE_BYTES >> 20,
+        SSD_BPS >> 20
+    ));
+
+    let configs: [(&str, bool, Option<FaultConfig>); 3] = [
+        ("protections-off", false, None),
+        ("protections-on", true, None),
+        ("faults-absorbed", true, Some(transient)),
+    ];
+    let mut medians = Vec::new();
+    let mut targets: Vec<HostMat> = Vec::new();
+    for (label, checksums, faults) in configs {
+        let eng = engine(label, &dir, checksums, faults);
+        eng.metrics.reset();
+        let (secs, host) = median_run(&eng, iters, reps);
+        let m = eng.metrics.snapshot();
+        medians.push(secs);
+        targets.push(host);
+        t.add_with(
+            label,
+            secs,
+            "s",
+            vec![
+                ("read_gb".into(), m.io_read_bytes as f64 / 1e9),
+                ("write_gb".into(), m.io_write_bytes as f64 / 1e9),
+                ("faults_injected".into(), m.faults_injected as f64),
+                ("io_retries".into(), m.io_retries as f64),
+                ("checksum_failures".into(), m.checksum_failures as f64),
+            ],
+        );
+    }
+    t.print();
+
+    let ratio = medians[1] / medians[0];
+    let within_bound = ratio <= 1.05;
+    let bitexact = targets[1] == targets[0] && targets[2] == targets[0];
+    println!(
+        "\nchecksums+retry machinery: {:.1}% overhead fault-free — {}",
+        (ratio - 1.0) * 100.0,
+        if within_bound {
+            "PASS: within the 5% acceptance bound"
+        } else {
+            "FAIL: protections cost more than 5% wall-time"
+        }
+    );
+    println!(
+        "targets {}",
+        if bitexact {
+            "PASS: bit-identical across all three configurations"
+        } else {
+            "FAIL: fault tolerance changed the result"
+        }
+    );
+
+    let mut report = BenchReport::new("fault_overhead");
+    report.add_table(&t);
+    report.add_check("checksum-overhead<=5pct", within_bound);
+    report.add_check("bit-identical-protected", bitexact);
+    report.write(std::path::Path::new(&json_dir)).expect("bench json");
+
+    let _ = std::fs::remove_dir_all(&dir);
+    // fail loudly after the report is written: CI records the numbers
+    // either way, and the gate also checks the `checks` array
+    assert!(
+        within_bound && bitexact,
+        "fault-overhead acceptance failed (ratio {ratio:.3}, bitexact {bitexact})"
+    );
+}

@@ -6,6 +6,8 @@
 
 use std::path::PathBuf;
 
+use crate::storage::FaultConfig;
+
 /// Where materialized matrices live.
 #[derive(Clone, Debug, PartialEq)]
 pub enum StorageKind {
@@ -143,6 +145,24 @@ pub struct EngineConfig {
     /// every pass that uses it. 0 disables materialize-vs-recompute
     /// planning while keeping CSE/pruning active.
     pub opt_materialize_threshold: usize,
+    /// Deterministic I/O fault injection ([`crate::storage::fault`]):
+    /// a seeded schedule of transient/persistent `EIO`, short reads,
+    /// torn write-back partitions, bit flips and latency spikes applied
+    /// to every [`crate::storage::FileStore`] of the engine. `None`
+    /// (production) injects nothing. The default honors the
+    /// `FLASHR_FAULTS` env spec (`seed=42,eio=0.01,...` — see
+    /// [`FaultConfig::parse`]) so CI chaos jobs can fault an unmodified
+    /// test suite, mirroring the `FLASHR_NO_CROSS_PASS_OPT` hook.
+    pub fault_injection: Option<FaultConfig>,
+    /// Max retries (with backoff) of one positioned I/O after a
+    /// transient failure before the error aborts the pass.
+    pub io_retry_limit: u32,
+    /// Record a CRC32 per written partition and verify it on every
+    /// exactly-matching read; a mismatch gets one re-read, then surfaces
+    /// as [`crate::FmError::Corrupt`]. Cheap (slice-by-8, hidden under
+    /// the SSD throttle; gated ≤5% by `benches/fault_overhead.rs`) —
+    /// off only for benches isolating raw I/O cost.
+    pub io_checksums: bool,
 }
 
 impl Default for EngineConfig {
@@ -176,6 +196,17 @@ impl Default for EngineConfig {
             writeback_queue_bytes: 32 << 20,
             cross_pass_opt: std::env::var_os("FLASHR_NO_CROSS_PASS_OPT").is_none(),
             opt_materialize_threshold: 16 << 20,
+            fault_injection: std::env::var("FLASHR_FAULTS")
+                .ok()
+                .and_then(|spec| match FaultConfig::parse(&spec) {
+                    Ok(c) => Some(c),
+                    Err(e) => {
+                        eprintln!("ignoring invalid FLASHR_FAULTS: {e}");
+                        None
+                    }
+                }),
+            io_retry_limit: 3,
+            io_checksums: true,
         }
     }
 }
@@ -238,6 +269,16 @@ impl EngineConfig {
             return Err(crate::FmError::Config(
                 "writeback requires writeback_queue_bytes > 0".into(),
             ));
+        }
+        if let Some(f) = &self.fault_injection {
+            f.validate()?;
+            if f.bit_flip > 0.0 && !self.io_checksums {
+                return Err(crate::FmError::Config(
+                    "bit-flip injection without io_checksums would corrupt results \
+                     silently; enable io_checksums"
+                        .into(),
+                ));
+            }
         }
         Ok(())
     }
@@ -320,6 +361,36 @@ mod tests {
         assert!(c.opt_materialize_threshold > 0);
         // the eager baseline never batches, so it has nothing to plan
         assert!(!EngineConfig::mllib_like().cross_pass_opt);
+    }
+
+    #[test]
+    fn fault_knob_defaults_and_validation() {
+        let c = EngineConfig::default();
+        // production default: tolerance on, chaos off (unless the
+        // FLASHR_FAULTS hook is set, as in the CI chaos job)
+        assert!(c.io_checksums);
+        assert_eq!(c.io_retry_limit, 3);
+        if std::env::var_os("FLASHR_FAULTS").is_none() {
+            assert!(c.fault_injection.is_none());
+        }
+        c.validate().unwrap();
+        let bad = EngineConfig {
+            fault_injection: Some(FaultConfig {
+                bit_flip: 0.5,
+                ..FaultConfig::default()
+            }),
+            io_checksums: false,
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err(), "bit flips need checksums");
+        let bad_p = EngineConfig {
+            fault_injection: Some(FaultConfig {
+                eio: 2.0,
+                ..FaultConfig::default()
+            }),
+            ..Default::default()
+        };
+        assert!(bad_p.validate().is_err(), "fault config is validated too");
     }
 
     #[test]

@@ -22,6 +22,7 @@ use crate::error::Result;
 use crate::exec::{splitmix64_at, u64_to_unit_f64};
 use crate::fmr::{Engine, FmMatrix};
 use crate::matrix::{DenseBuilder, HostMat, Matrix, Partitioning};
+use crate::util::sync::LockExt;
 use crate::vudf::Buf;
 use crate::StorageKind;
 
@@ -72,7 +73,7 @@ pub fn from_fn(
                     }
                 }
                 if let Err(e) = builder.write_partition_buf(i, &buf) {
-                    let mut g = err.lock().unwrap();
+                    let mut g = err.lock_recover();
                     if g.is_none() {
                         *g = Some(e);
                     }
@@ -81,7 +82,7 @@ pub fn from_fn(
             });
         }
     });
-    if let Some(e) = err.into_inner().unwrap() {
+    if let Some(e) = err.into_inner_recover() {
         return Err(e);
     }
     Ok(FmMatrix {

@@ -16,6 +16,11 @@ pub enum FmError {
     Config(String),
     Io(std::io::Error),
     Json(String),
+    /// Data failed an integrity check (partition checksum mismatch that
+    /// survived a re-read, or a structurally invalid CSR block). Unlike
+    /// [`FmError::Io`] this is *not* retried: the bytes are wrong, not
+    /// merely unavailable.
+    Corrupt(String),
 }
 
 impl fmt::Display for FmError {
@@ -29,6 +34,7 @@ impl fmt::Display for FmError {
             FmError::Config(m) => write!(f, "configuration error: {m}"),
             FmError::Io(e) => write!(f, "{e}"),
             FmError::Json(m) => write!(f, "json error: {m}"),
+            FmError::Corrupt(m) => write!(f, "data corruption: {m}"),
         }
     }
 }

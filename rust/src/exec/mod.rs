@@ -41,6 +41,7 @@
 pub mod pipeline;
 pub mod sched;
 
+use std::panic::AssertUnwindSafe;
 use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
 
@@ -52,6 +53,7 @@ use crate::matrix::{DenseBuilder, HostMat, Matrix, MatrixData, PartitionCache, P
 use crate::mem::{ChunkPool, StripPool};
 use crate::metrics::Metrics;
 use crate::storage::SsdSim;
+use crate::util::sync::LockExt;
 use crate::vudf::{AggOp, Buf};
 
 use pipeline::{EvalOpts, Program, SinkInstrKind, SourceStrip};
@@ -241,18 +243,36 @@ pub fn run_pass_opts(
                         if sched.aborted() {
                             break 'pass;
                         }
-                        if let Err(e) = process_partition(
-                            &prog,
-                            &pass_parts,
-                            pi,
-                            cfg,
-                            builders,
-                            &mut accs,
-                            &mut cache,
-                            &window,
-                            &mut spool,
-                        ) {
-                            let mut fe = first_err.lock().unwrap();
+                        // contain worker panics (a UDF index bug, an
+                        // injected-fault path nobody hardened): the unit
+                        // becomes a pass abort like any other partition
+                        // error instead of unwinding through the scope
+                        // and poisoning every shared lock
+                        let unit_res = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                            process_partition(
+                                &prog,
+                                &pass_parts,
+                                pi,
+                                cfg,
+                                builders,
+                                &mut accs,
+                                &mut cache,
+                                &window,
+                                &mut spool,
+                            )
+                        }))
+                        .unwrap_or_else(|p| {
+                            let msg = p
+                                .downcast_ref::<&str>()
+                                .map(|s| (*s).to_string())
+                                .or_else(|| p.downcast_ref::<String>().cloned())
+                                .unwrap_or_else(|| "opaque panic payload".into());
+                            Err(FmError::Runtime(format!(
+                                "worker panicked in partition {pi}: {msg}"
+                            )))
+                        });
+                        if let Err(e) = unit_res {
+                            let mut fe = first_err.lock_recover();
                             if fe.is_none() {
                                 *fe = Some(e);
                             }
@@ -263,7 +283,7 @@ pub fn run_pass_opts(
                         metrics.native_partitions.fetch_add(1, Ordering::Relaxed);
                     }
                 }
-                merged.lock().unwrap().push(accs);
+                merged.lock_recover().push(accs);
             });
         }
     });
@@ -304,7 +324,7 @@ pub fn run_pass_opts(
     } else {
         for b in &builders {
             if let Err(e) = b.flush_writes() {
-                let mut fe = first_err.lock().unwrap();
+                let mut fe = first_err.lock_recover();
                 if fe.is_none() {
                     *fe = Some(e);
                 }
@@ -312,12 +332,12 @@ pub fn run_pass_opts(
         }
     }
 
-    if let Some(e) = first_err.into_inner().unwrap() {
+    if let Some(e) = first_err.into_inner_recover() {
         return Err(e);
     }
 
     // ---- merge per-thread sink partials (aVUDF2 combine)
-    let mut parts_iter = merged.into_inner().unwrap().into_iter();
+    let mut parts_iter = merged.into_inner_recover().into_iter();
     let mut total = parts_iter
         .next()
         .ok_or_else(|| FmError::Shape("no worker results".into()))?;

@@ -31,6 +31,8 @@
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use crate::util::sync::LockExt;
+
 /// Contiguous-range work scheduler with half-stealing and simulated NUMA
 /// affinity. One instance per materialization pass.
 pub struct RangeScheduler {
@@ -98,7 +100,7 @@ impl RangeScheduler {
                 return None;
             }
             {
-                let mut own = self.ranges[w].lock().unwrap();
+                let mut own = self.ranges[w].lock_recover();
                 if own.0 < own.1 {
                     let u = own.0;
                     own.0 += 1;
@@ -118,7 +120,7 @@ impl RangeScheduler {
     /// it — a wasted prefetch, never a correctness problem (single-flight
     /// coalesces any resulting duplicate read).
     pub fn peek_next(&self, w: usize) -> Option<usize> {
-        let own = self.ranges[w].lock().unwrap();
+        let own = self.ranges[w].lock_recover();
         if own.0 < own.1 {
             Some(own.0)
         } else {
@@ -134,7 +136,7 @@ impl RangeScheduler {
                 if v == w || (!remote_pass && self.node_of[v] != self.node_of[w]) {
                     continue;
                 }
-                let r = self.ranges[v].lock().unwrap();
+                let r = self.ranges[v].lock_recover();
                 let remaining = r.1.saturating_sub(r.0);
                 if remaining > 0 && best.map(|(_, n)| remaining > n).unwrap_or(true) {
                     best = Some((v, remaining));
@@ -142,7 +144,7 @@ impl RangeScheduler {
             }
             if let Some((victim, _)) = best {
                 let stolen = {
-                    let mut r = self.ranges[victim].lock().unwrap();
+                    let mut r = self.ranges[victim].lock_recover();
                     let remaining = r.1.saturating_sub(r.0);
                     if remaining == 0 {
                         // drained between the scan and the lock — rescan
@@ -160,7 +162,7 @@ impl RangeScheduler {
                     self.steals_remote.fetch_add(1, Ordering::Relaxed);
                 }
                 let u = stolen.0;
-                let mut own = self.ranges[w].lock().unwrap();
+                let mut own = self.ranges[w].lock_recover();
                 *own = (stolen.0 + 1, stolen.1);
                 drop(own);
                 return StealOutcome::Stole(u);

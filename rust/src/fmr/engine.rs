@@ -42,7 +42,12 @@ impl Engine {
         config.validate()?;
         let metrics = Arc::new(Metrics::new());
         let pool = ChunkPool::new(config.chunk_bytes, config.recycle_chunks, Arc::clone(&metrics));
-        let ssd = Arc::new(SsdSim::new(config.throttle.as_ref()));
+        let ssd = Arc::new(SsdSim::with_policy(
+            config.throttle.as_ref(),
+            config.fault_injection.clone(),
+            config.io_retry_limit,
+            config.io_checksums,
+        ));
         let cache = if config.em_cache_bytes > 0 {
             Some(PartitionCache::new(
                 config.em_cache_bytes,

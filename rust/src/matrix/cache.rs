@@ -57,6 +57,7 @@
 //! [`crate::fmr::engine::Engine::materialize_intermediate`]).
 
 use std::collections::{HashMap, HashSet, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, SyncSender};
 use std::sync::{Arc, Condvar, Mutex};
@@ -64,6 +65,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use crate::error::{FmError, Result};
 use crate::metrics::Metrics;
 use crate::storage::FileStore;
+use crate::util::sync::{wait_recover, LockExt};
 
 /// One cached I/O-level partition.
 struct Entry {
@@ -151,30 +153,44 @@ impl WriteBack {
     fn writer_loop(wb: Arc<WriteBack>) {
         loop {
             let (key, entry) = {
-                let mut st = wb.state.lock().unwrap();
+                let mut st = wb.state.lock_recover();
                 loop {
                     if let Some(key) = st.queue.pop_front() {
-                        let entry = st
-                            .pending
-                            .remove(&key)
-                            .expect("queued write-back key must have bytes");
+                        // a queued key always has bytes in `pending`; if
+                        // the invariant was broken (state poisoned mid-
+                        // update by a panicking peer), skip the key
+                        // rather than killing the writer — a dead writer
+                        // deadlocks every flush barrier
+                        let Some(entry) = st.pending.remove(&key) else {
+                            continue;
+                        };
                         st.inflight = Some(key);
                         break (key, entry);
                     }
                     if st.shutdown {
                         return;
                     }
-                    st = wb.work_cv.wait(st).unwrap();
+                    st = wait_recover(&wb.work_cv, st);
                 }
             };
-            let res = entry.store.write_at(entry.off, &entry.bytes);
+            // a panic inside the (throttled, fault-injected) write must
+            // not take the writer thread down — it is surfaced like any
+            // other write error through the matrix's flush barrier
+            let res = catch_unwind(AssertUnwindSafe(|| {
+                entry.store.write_at(entry.off, &entry.bytes)
+            }))
+            .unwrap_or_else(|_| {
+                Err(FmError::Runtime(
+                    "write-back writer panicked mid-write".into(),
+                ))
+            });
             let len = entry.bytes.len();
             // release the entry (and its FileStore Arc) BEFORE waking the
             // barriers: when a flush/discard observes inflight == None,
             // the writer must hold no reference to the matrix's backing
             // file — an aborted pass unlinks it right after
             drop(entry);
-            let mut st = wb.state.lock().unwrap();
+            let mut st = wb.state.lock_recover();
             st.inflight = None;
             st.bytes -= len;
             if let Err(e) = res {
@@ -218,7 +234,7 @@ struct InflightGuard<'a> {
 
 impl Drop for InflightGuard<'_> {
     fn drop(&mut self) {
-        self.cache.inflight.lock().unwrap().remove(&self.key);
+        self.cache.inflight.lock_recover().remove(&self.key);
         self.cache.inflight_cv.notify_all();
     }
 }
@@ -292,38 +308,45 @@ impl PartitionCache {
                 .name("fm-prefetch".into())
                 .spawn(move || {
                     while let Ok(req) = rx.recv() {
-                        // stale request: the pass that issued it is over,
-                        // nobody will consume (and unpin) the read-ahead
-                        if req.epoch != req.cache.epoch.load(Ordering::Relaxed) {
-                            continue;
-                        }
-                        // the consumer may have read the partition while
-                        // this request sat in the queue — don't pay a
-                        // second (throttled) store read for it
-                        if req.cache.contains(req.matrix_id, req.part) {
-                            continue;
-                        }
-                        // single-flight: a demand read of the same
-                        // partition is already on the file — coalesce
-                        let Some(guard) = req.cache.begin_read(req.matrix_id, req.part) else {
-                            req.cache
-                                .metrics
-                                .singleflight_coalesced
-                                .fetch_add(1, Ordering::Relaxed);
-                            continue;
-                        };
-                        // a demand read may have completed between the
-                        // contains() check and winning the slot
-                        if req.cache.contains(req.matrix_id, req.part) {
+                        // a panicking store read must not kill read-ahead
+                        // for the engine's lifetime: contain it, drop the
+                        // one request (the InflightGuard's Drop still
+                        // releases the single-flight slot during unwind)
+                        let _ = catch_unwind(AssertUnwindSafe(|| {
+                            // stale request: the pass that issued it is over,
+                            // nobody will consume (and unpin) the read-ahead
+                            if req.epoch != req.cache.epoch.load(Ordering::Relaxed) {
+                                return;
+                            }
+                            // the consumer may have read the partition while
+                            // this request sat in the queue — don't pay a
+                            // second (throttled) store read for it
+                            if req.cache.contains(req.matrix_id, req.part) {
+                                return;
+                            }
+                            // single-flight: a demand read of the same
+                            // partition is already on the file — coalesce
+                            let Some(guard) = req.cache.begin_read(req.matrix_id, req.part)
+                            else {
+                                req.cache
+                                    .metrics
+                                    .singleflight_coalesced
+                                    .fetch_add(1, Ordering::Relaxed);
+                                return;
+                            };
+                            // a demand read may have completed between the
+                            // contains() check and winning the slot
+                            if req.cache.contains(req.matrix_id, req.part) {
+                                drop(guard);
+                                return;
+                            }
+                            let mut buf = vec![0u8; req.len];
+                            if req.store.read_at(req.off, &mut buf).is_ok() {
+                                req.cache
+                                    .insert_prefetched(req.matrix_id, req.part, buf, req.epoch);
+                            }
                             drop(guard);
-                            continue;
-                        }
-                        let mut buf = vec![0u8; req.len];
-                        if req.store.read_at(req.off, &mut buf).is_ok() {
-                            req.cache
-                                .insert_prefetched(req.matrix_id, req.part, buf, req.epoch);
-                        }
-                        drop(guard);
+                        }));
                     }
                 });
         }
@@ -336,7 +359,7 @@ impl PartitionCache {
     /// partition is already in flight.
     fn begin_read(&self, matrix_id: u64, part: usize) -> Option<InflightGuard<'_>> {
         let key = (matrix_id, part);
-        if self.inflight.lock().unwrap().insert(key) {
+        if self.inflight.lock_recover().insert(key) {
             Some(InflightGuard { cache: self, key })
         } else {
             None
@@ -346,9 +369,9 @@ impl PartitionCache {
     /// Block until no read of `(matrix_id, part)` is in flight.
     fn wait_read(&self, matrix_id: u64, part: usize) {
         let key = (matrix_id, part);
-        let mut g = self.inflight.lock().unwrap();
+        let mut g = self.inflight.lock_recover();
         while g.contains(&key) {
-            g = self.inflight_cv.wait(g).unwrap();
+            g = wait_recover(&self.inflight_cv, g);
         }
     }
 
@@ -431,7 +454,7 @@ impl PartitionCache {
     /// and mark it live for prefetch admission.
     pub fn alloc_matrix_id(&self) -> u64 {
         let id = self.next_matrix_id.fetch_add(1, Ordering::Relaxed);
-        self.inner.lock().unwrap().live.insert(id);
+        self.inner.lock_recover().live.insert(id);
         id
     }
 
@@ -442,7 +465,7 @@ impl PartitionCache {
 
     /// Bytes currently resident.
     pub fn bytes_used(&self) -> usize {
-        self.inner.lock().unwrap().bytes_used
+        self.inner.lock_recover().bytes_used
     }
 
     /// Bytes currently shielded from eviction by pins: the cross-pass
@@ -450,7 +473,7 @@ impl PartitionCache {
     /// hint) plus transient read-ahead pins. Observability for tests and
     /// the figure harness.
     pub fn pinned_bytes(&self) -> usize {
-        let g = self.inner.lock().unwrap();
+        let g = self.inner.lock_recover();
         g.map
             .values()
             .filter(|e| e.pins > 0)
@@ -460,7 +483,7 @@ impl PartitionCache {
 
     /// Number of resident partitions.
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().map.len()
+        self.inner.lock_recover().map.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -470,8 +493,7 @@ impl PartitionCache {
     /// Whether a partition is resident (no metric bump, no LRU touch).
     pub fn contains(&self, matrix_id: u64, part: usize) -> bool {
         self.inner
-            .lock()
-            .unwrap()
+            .lock_recover()
             .map
             .contains_key(&(matrix_id, part))
     }
@@ -492,7 +514,7 @@ impl PartitionCache {
     }
 
     fn lookup(&self, matrix_id: u64, part: usize, count: bool) -> Option<Arc<Vec<u8>>> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock_recover();
         g.clock += 1;
         let clock = g.clock;
         let found = match g.map.get_mut(&(matrix_id, part)) {
@@ -556,7 +578,7 @@ impl PartitionCache {
         if len > self.capacity {
             return;
         }
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock_recover();
         let inner = &mut *g;
         inner.clock += 1;
         let stamp = inner.clock;
@@ -636,7 +658,7 @@ impl PartitionCache {
     /// pin is released. Returns `false` when the partition is not
     /// resident (nothing to pin).
     pub fn pin(&self, matrix_id: u64, part: usize) -> bool {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock_recover();
         match g.map.get_mut(&(matrix_id, part)) {
             Some(e) => {
                 e.pins += 1;
@@ -648,7 +670,7 @@ impl PartitionCache {
 
     /// Release one pin of a resident partition.
     pub fn unpin(&self, matrix_id: u64, part: usize) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock_recover();
         if let Some(e) = g.map.get_mut(&(matrix_id, part)) {
             e.pins = e.pins.saturating_sub(1);
             e.unpin_on_hit = false;
@@ -675,7 +697,7 @@ impl PartitionCache {
     /// the epoch bump may drop its queued read-aheads) — its demand
     /// reads stay correct either way.
     pub fn release_prefetch_pins(&self, matrix_id: u64) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock_recover();
         for (k, e) in g.map.iter_mut() {
             if k.0 == matrix_id && e.unpin_on_hit {
                 e.unpin_on_hit = false;
@@ -689,7 +711,7 @@ impl PartitionCache {
     /// scan without re-registering matrices. Pins are ignored and nothing
     /// is counted as a capacity eviction.
     pub fn clear(&self) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock_recover();
         g.map.clear();
         g.bytes_used = 0;
     }
@@ -698,7 +720,7 @@ impl PartitionCache {
     /// Ignores pins — the owner is gone, nothing can consume them — and
     /// retires the id so late prefetch completions are not admitted.
     pub fn evict_matrix(&self, matrix_id: u64) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock_recover();
         let inner = &mut *g;
         inner.live.remove(&matrix_id);
         let keys: Vec<(u64, usize)> = inner
@@ -790,7 +812,7 @@ impl PartitionCache {
         let Some(wb) = &self.wb else { return false };
         let key = (matrix_id, part);
         let len = bytes.len();
-        let mut g = wb.state.lock().unwrap();
+        let mut g = wb.state.lock_recover();
         {
             let st = &mut *g;
             if let Some(e) = st.pending.get_mut(&key) {
@@ -810,7 +832,7 @@ impl PartitionCache {
                 waited = true;
                 self.metrics.wb_flush_waits.fetch_add(1, Ordering::Relaxed);
             }
-            g = wb.done_cv.wait(g).unwrap();
+            g = wait_recover(&wb.done_cv, g);
         }
         g.bytes += len;
         g.pending.insert(
@@ -838,7 +860,7 @@ impl PartitionCache {
     /// before any reader can exist.
     pub fn flush_writes(&self, matrix_id: u64) -> Result<()> {
         let Some(wb) = &self.wb else { return Ok(()) };
-        let mut g = wb.state.lock().unwrap();
+        let mut g = wb.state.lock_recover();
         let mut waited = false;
         while g.pending.keys().any(|k| k.0 == matrix_id)
             || g.inflight.map(|k| k.0 == matrix_id).unwrap_or(false)
@@ -847,7 +869,7 @@ impl PartitionCache {
                 waited = true;
                 self.metrics.wb_flush_waits.fetch_add(1, Ordering::Relaxed);
             }
-            g = wb.done_cv.wait(g).unwrap();
+            g = wait_recover(&wb.done_cv, g);
         }
         match g.errs.remove(&matrix_id) {
             Some(e) => Err(e),
@@ -863,7 +885,7 @@ impl PartitionCache {
     /// id: concurrent passes' writes are untouched.
     pub fn discard_writes(&self, matrix_id: u64) {
         let Some(wb) = &self.wb else { return };
-        let mut g = wb.state.lock().unwrap();
+        let mut g = wb.state.lock_recover();
         {
             let st = &mut *g;
             let before = st.queue.len();
@@ -889,7 +911,7 @@ impl PartitionCache {
         // an in-flight write cannot be recalled mid-pwrite; wait it out
         // so the partition on disk is whole, never partial
         while g.inflight.map(|k| k.0 == matrix_id).unwrap_or(false) {
-            g = wb.done_cv.wait(g).unwrap();
+            g = wait_recover(&wb.done_cv, g);
         }
         // the discarded matrix's recorded write error dies with it (after
         // the inflight wait, so a just-failed write cannot re-insert it):
@@ -906,7 +928,7 @@ impl Drop for PartitionCache {
         // stop the write-back writer; it drains the remaining queue
         // first, so pending clean-pass writes still land
         if let Some(wb) = &self.wb {
-            wb.state.lock().unwrap().shutdown = true;
+            wb.state.lock_recover().shutdown = true;
             wb.work_cv.notify_all();
         }
     }

@@ -24,6 +24,7 @@ use crate::error::{FmError, Result};
 use crate::mem::{Chunk, ChunkPool};
 use crate::metrics::Metrics;
 use crate::storage::{FileStore, SsdSim, StreamReader};
+use crate::util::sync::LockExt;
 use crate::vudf::Buf;
 
 use super::cache::{CacheHandle, PartitionCache};
@@ -488,7 +489,7 @@ impl DenseBuilder {
         match &self.mode {
             BuilderMode::Mem { chunks, slots } => {
                 let (ci, off) = slots[i];
-                let mut chunk = chunks[ci].lock().unwrap();
+                let mut chunk = chunks[ci].lock_recover();
                 chunk.bytes_mut()[off..off + bytes.len()].copy_from_slice(bytes);
                 Ok(())
             }
@@ -530,7 +531,7 @@ impl DenseBuilder {
                     let prows = self.parts.rows_in(i) as usize;
                     let cached_bytes = cc * prows * esz;
                     let cache_off = ((off / self.parts.ncol) * cc as u64) as usize;
-                    c.lock().unwrap()[cache_off..cache_off + cached_bytes]
+                    c.lock_recover()[cache_off..cache_off + cached_bytes]
                         .copy_from_slice(&bytes[..cached_bytes]);
                 }
                 Ok(())
@@ -554,7 +555,7 @@ impl DenseBuilder {
     pub fn finish(self) -> DenseData {
         let backing = match self.mode {
             BuilderMode::Mem { chunks, slots } => Backing::Mem {
-                chunks: chunks.into_iter().map(|m| m.into_inner().unwrap()).collect(),
+                chunks: chunks.into_iter().map(LockExt::into_inner_recover).collect(),
                 slots,
             },
             BuilderMode::Ext {
@@ -569,7 +570,7 @@ impl DenseBuilder {
             } => Backing::Ext {
                 store,
                 cache_cols,
-                cache: cache.map(|m| m.into_inner().unwrap()),
+                cache: cache.map(LockExt::into_inner_recover),
                 metrics,
                 pcache,
             },

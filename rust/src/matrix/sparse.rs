@@ -97,27 +97,62 @@ pub struct SparsePartView<'a> {
 
 impl<'a> SparsePartView<'a> {
     /// Parse (and bounds-check) a partition of `prows` rows.
+    ///
+    /// The block may come off disk, so every structural field is treated
+    /// as hostile: an oversized `nnz` must not overflow the size
+    /// arithmetic, and the `row_ptr` table must be monotone and end at
+    /// `nnz` — otherwise [`row_range`](Self::row_range)/
+    /// [`entry`](Self::entry) (which trust the view after this gate)
+    /// could index out of bounds. A corrupt block surfaces as
+    /// [`FmError::Corrupt`], never a panic.
     pub fn parse(bytes: &'a [u8], prows: usize) -> Result<SparsePartView<'a>> {
         if bytes.len() < 8 + (prows + 1) * 8 {
-            return Err(FmError::Shape(format!(
+            return Err(FmError::Corrupt(format!(
                 "sparse partition too short: {} bytes for {prows} rows",
                 bytes.len()
             )));
         }
-        let nnz = u64::from_le_bytes(bytes[0..8].try_into().unwrap()) as usize;
+        let nnz64 = u64::from_le_bytes(bytes[0..8].try_into().unwrap());
         let rp_end = 8 + (prows + 1) * 8;
+        let v_end = usize::try_from(nnz64)
+            .ok()
+            .and_then(|n| n.checked_mul(ENTRY_BYTES))
+            .and_then(|b| b.checked_add(rp_end));
+        let (nnz, v_end) = match v_end {
+            // an absurd nnz (e.g. bit-flipped high byte) overflows here
+            // instead of wrapping into a bogus "valid" length
+            Some(v) if v == bytes.len() => (nnz64 as usize, v),
+            _ => {
+                return Err(FmError::Corrupt(format!(
+                    "sparse partition: {} bytes inconsistent with header \
+                     ({prows} rows, nnz {nnz64})",
+                    bytes.len()
+                )))
+            }
+        };
         let ci_end = rp_end + nnz * 4;
-        let v_end = ci_end + nnz * 8;
-        if bytes.len() != v_end {
-            return Err(FmError::Shape(format!(
-                "sparse partition: {} bytes, want {v_end} ({prows} rows, {nnz} nnz)",
-                bytes.len()
+        let row_ptr = &bytes[8..rp_end];
+        // row_ptr must be monotone within [0, nnz] and exhaust the
+        // entries, or the per-row entry ranges would escape the block
+        let mut prev = 0u64;
+        for r in 0..=prows {
+            let p = u64::from_le_bytes(row_ptr[r * 8..r * 8 + 8].try_into().unwrap());
+            if p < prev || p > nnz64 {
+                return Err(FmError::Corrupt(format!(
+                    "sparse partition: row_ptr[{r}] = {p} out of order (prev {prev}, nnz {nnz64})"
+                )));
+            }
+            prev = p;
+        }
+        if prev != nnz64 {
+            return Err(FmError::Corrupt(format!(
+                "sparse partition: row_ptr ends at {prev}, want nnz {nnz64}"
             )));
         }
         Ok(SparsePartView {
             prows,
             nnz,
-            row_ptr: &bytes[8..rp_end],
+            row_ptr,
             col_idx: &bytes[rp_end..ci_end],
             values: &bytes[ci_end..v_end],
         })
@@ -262,6 +297,15 @@ impl SparseData {
             ssd,
             Arc::clone(&metrics),
         )?);
+        // re-arm the persisted partition checksums: corruption of the
+        // dataset at rest is caught on the first read, not silently
+        // folded into results
+        store.checksums().seed(
+            meta.parts
+                .iter()
+                .zip(&meta.crcs)
+                .filter_map(|((off, len), crc)| crc.map(|c| (*off, *len, c))),
+        );
         Ok(SparseData {
             dtype: DType::F64,
             parts: Partitioning::with_io_rows(meta.nrow, meta.ncol, meta.io_rows),
@@ -398,6 +442,9 @@ impl SparseBuilder {
                 io_rows: self.parts.io_rows,
                 nnz: self.nnz,
                 parts: part_locs.clone(),
+                // persist the partition checksums the writes recorded so
+                // a reopened dataset verifies reads across runs
+                crcs: store.checksums().export(&part_locs),
             }
             .save(&dir.join(format!("{n}.sparse.json")))?;
         }
@@ -447,6 +494,82 @@ mod tests {
         assert!(SparsePartView::parse(&b[..b.len() - 1], 3).is_err());
         assert!(SparsePartView::parse(&b, 2).is_err());
         assert!(SparsePartView::parse(&[0u8; 4], 1).is_err());
+    }
+
+    #[test]
+    fn parse_rejects_corrupt_header_and_row_ptr() {
+        // oversized nnz (flipped high byte): must be a typed error, not
+        // an arithmetic overflow / huge-slice panic
+        let mut b = encode_partition(&mut rows3());
+        b[7] = 0xFF;
+        let err = SparsePartView::parse(&b, 3).unwrap_err();
+        assert!(matches!(err, FmError::Corrupt(_)), "got: {err}");
+        // nnz = usize::MAX-ish so nnz * ENTRY_BYTES would wrap
+        let mut b = encode_partition(&mut rows3());
+        b[0..8].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(matches!(
+            SparsePartView::parse(&b, 3).unwrap_err(),
+            FmError::Corrupt(_)
+        ));
+        // non-monotone row_ptr: row 1's pointer rewound below row 0's
+        let mut b = encode_partition(&mut rows3());
+        b[16..24].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(matches!(
+            SparsePartView::parse(&b, 3).unwrap_err(),
+            FmError::Corrupt(_)
+        ));
+        // row_ptr ending short of nnz leaves unreachable entries
+        let mut b = encode_partition(&mut rows3());
+        let last = 8 + 3 * 8; // row_ptr[3] of 4 pointers
+        b[last..last + 8].copy_from_slice(&1u64.to_le_bytes());
+        assert!(matches!(
+            SparsePartView::parse(&b, 3).unwrap_err(),
+            FmError::Corrupt(_)
+        ));
+    }
+
+    #[test]
+    fn reopened_dataset_verifies_persisted_checksums() {
+        let tmp = crate::testutil::TempDir::new("sparse-crc");
+        let ssd = Arc::new(SsdSim::new(None));
+        let metrics = Arc::new(Metrics::new());
+        let parts = Partitioning::with_io_rows(4, 3, 2);
+        let mut b = SparseBuilder::new(parts);
+        b.push_partition(&mut [vec![(0, 1.0), (2, 2.0)], vec![(1, 3.0)]])
+            .unwrap();
+        b.push_partition(&mut [vec![], vec![(2, -1.0)]]).unwrap();
+        let m = b
+            .finish_ext(
+                tmp.path(),
+                Some("crc.mat"),
+                Arc::clone(&ssd),
+                Arc::clone(&metrics),
+                None,
+            )
+            .unwrap();
+        drop(m);
+        // flip one payload byte of partition 0 on disk
+        {
+            use std::os::unix::fs::FileExt;
+            let f = std::fs::OpenOptions::new()
+                .write(true)
+                .open(tmp.path().join("crc.mat"))
+                .unwrap();
+            f.write_all_at(&[0xAA], 40).unwrap();
+        }
+        let m2 = SparseData::open_named(
+            tmp.path(),
+            "crc.mat",
+            ssd,
+            Arc::clone(&metrics),
+            None,
+        )
+        .unwrap();
+        let err = m2.partition_bytes_shared(0).unwrap_err();
+        assert!(matches!(err, FmError::Corrupt(_)), "got: {err}");
+        assert!(metrics.snapshot().checksum_failures >= 1);
+        // the untouched partition still reads fine
+        m2.partition_bytes_shared(1).unwrap();
     }
 
     #[test]

@@ -13,6 +13,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::dtype::DType;
 use crate::metrics::Metrics;
+use crate::util::sync::LockExt;
 use crate::vudf::Buf;
 
 /// A fixed-size recycled memory chunk. Returned to its pool on drop.
@@ -57,7 +58,7 @@ impl ChunkPoolInner {
     fn release(&self, buf: Vec<u8>) {
         self.metrics.mem_release(buf.len() as u64);
         if self.recycling.load(Ordering::Relaxed) && buf.len() == self.chunk_bytes {
-            self.free.lock().unwrap().push(buf);
+            self.free.lock_recover().push(buf);
         }
         // else: dropped, freeing to the OS (the unoptimized mode)
     }
@@ -92,7 +93,7 @@ impl ChunkPool {
     pub fn acquire(&self) -> Chunk {
         let m = &self.inner.metrics;
         let buf = if self.inner.recycling.load(Ordering::Relaxed) {
-            self.inner.free.lock().unwrap().pop()
+            self.inner.free.lock_recover().pop()
         } else {
             None
         };
@@ -127,14 +128,14 @@ impl ChunkPool {
 
     /// Number of chunks currently parked in the free list.
     pub fn free_chunks(&self) -> usize {
-        self.inner.free.lock().unwrap().len()
+        self.inner.free.lock_recover().len()
     }
 
     /// Toggle recycling (ablation control).
     pub fn set_recycling(&self, on: bool) {
         self.inner.recycling.store(on, Ordering::Relaxed);
         if !on {
-            self.inner.free.lock().unwrap().clear();
+            self.inner.free.lock_recover().clear();
         }
     }
 

@@ -101,6 +101,17 @@ pub struct Metrics {
     /// Batches whose optimized pass grouping was served from the
     /// per-engine plan cache (iteration 2..n of a loop).
     pub opt_plan_cache_hits: AtomicU64,
+    /// Faults injected by the deterministic [`crate::storage::fault`]
+    /// layer (EIO, short reads, torn writes, bit flips, latency spikes).
+    /// Zero unless a fault plan is configured.
+    pub faults_injected: AtomicU64,
+    /// Positioned-I/O attempts retried after a transient error or a
+    /// failed write read-back (the bounded retry-with-backoff loop in
+    /// [`crate::storage::FileStore`]).
+    pub io_retries: AtomicU64,
+    /// Partition checksum verifications that failed (each triggers one
+    /// re-read before surfacing [`crate::FmError::Corrupt`]).
+    pub checksum_failures: AtomicU64,
 }
 
 impl Metrics {
@@ -163,6 +174,9 @@ impl Metrics {
             opt_sinks_pruned: self.opt_sinks_pruned.load(Ordering::Relaxed),
             opt_mat_decisions: self.opt_mat_decisions.load(Ordering::Relaxed),
             opt_plan_cache_hits: self.opt_plan_cache_hits.load(Ordering::Relaxed),
+            faults_injected: self.faults_injected.load(Ordering::Relaxed),
+            io_retries: self.io_retries.load(Ordering::Relaxed),
+            checksum_failures: self.checksum_failures.load(Ordering::Relaxed),
         }
     }
 
@@ -204,6 +218,9 @@ impl Metrics {
             &s.opt_sinks_pruned,
             &s.opt_mat_decisions,
             &s.opt_plan_cache_hits,
+            &s.faults_injected,
+            &s.io_retries,
+            &s.checksum_failures,
         ] {
             c.store(0, Ordering::Relaxed);
         }
@@ -247,6 +264,9 @@ pub struct MetricsSnapshot {
     pub opt_sinks_pruned: u64,
     pub opt_mat_decisions: u64,
     pub opt_plan_cache_hits: u64,
+    pub faults_injected: u64,
+    pub io_retries: u64,
+    pub checksum_failures: u64,
 }
 
 impl MetricsSnapshot {
@@ -287,6 +307,9 @@ impl MetricsSnapshot {
             opt_sinks_pruned: self.opt_sinks_pruned - earlier.opt_sinks_pruned,
             opt_mat_decisions: self.opt_mat_decisions - earlier.opt_mat_decisions,
             opt_plan_cache_hits: self.opt_plan_cache_hits - earlier.opt_plan_cache_hits,
+            faults_injected: self.faults_injected - earlier.faults_injected,
+            io_retries: self.io_retries - earlier.io_retries,
+            checksum_failures: self.checksum_failures - earlier.checksum_failures,
         }
     }
 }

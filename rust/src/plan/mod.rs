@@ -62,6 +62,7 @@ use std::sync::Mutex;
 use crate::config::StorageKind;
 use crate::dag::{SinkResult, SinkSpec, VKind, VNode};
 use crate::error::Result;
+use crate::util::sync::LockExt;
 use crate::exec::{self, ExecCtx, PassGroup};
 use crate::matrix::{io_rows_for, Matrix, MatrixData, Partitioning};
 
@@ -701,7 +702,7 @@ pub fn execute_batch(
     if !ctx.config.cross_pass_opt {
         return execute_unplanned(ctx, requests, fused);
     }
-    let mut pl = planner.lock().unwrap();
+    let mut pl = planner.lock_recover();
     pl.stamp += 1;
 
     // ---- optimizer pass 1+2: canonicalize, hash-cons, prune duplicates

@@ -127,9 +127,19 @@ pub struct SparseMeta {
     pub nnz: u64,
     /// Byte `(offset, len)` of each partition in the packed file.
     pub parts: Vec<(u64, usize)>,
+    /// CRC32 of each partition's bytes, parallel to `parts` (`None` for
+    /// a partition whose checksum was never recorded — e.g. a sidecar
+    /// written before checksums existed). Reopening a named dataset
+    /// seeds the store's [`crate::storage::ChecksumTable`] from these,
+    /// so corruption of data at rest is caught on first read.
+    pub crcs: Vec<Option<u32>>,
 }
 
 impl SparseMeta {
+    /// Crash-consistent save: write `<path>.tmp`, fsync, rename over
+    /// `path`. A crash mid-save leaves either the old manifest or a
+    /// stray `.tmp` that [`load`](Self::load) never looks at — readers
+    /// see a complete sidecar or none.
     pub fn save(&self, path: &Path) -> Result<()> {
         let j = crate::util::json::obj(vec![
             ("nrow", self.nrow.into()),
@@ -144,8 +154,36 @@ impl SparseMeta {
                 "lens",
                 Json::Arr(self.parts.iter().map(|(_, l)| (*l).into()).collect()),
             ),
+            (
+                "crcs",
+                Json::Arr(
+                    self.crcs
+                        .iter()
+                        .map(|c| match c {
+                            Some(v) => (*v as u64).into(),
+                            None => Json::Null,
+                        })
+                        .collect(),
+                ),
+            ),
         ]);
-        std::fs::write(path, j.to_string())?;
+        let fname = path
+            .file_name()
+            .ok_or_else(|| FmError::Storage(format!("bad manifest path {}", path.display())))?;
+        let tmp = path.with_file_name(format!("{}.tmp", fname.to_string_lossy()));
+        {
+            use std::io::Write;
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(j.to_string().as_bytes())?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, path)?;
+        // make the rename itself durable where the platform allows
+        if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+            if let Ok(d) = std::fs::File::open(dir) {
+                let _ = d.sync_all();
+            }
+        }
         Ok(())
     }
 
@@ -169,12 +207,31 @@ impl SparseMeta {
                 "sparse manifest: offsets/lens length mismatch".into(),
             ));
         }
+        // pre-checksum sidecars have no "crcs" key: every partition
+        // simply stays unverified rather than failing to open
+        let crcs: Vec<Option<u32>> = match j.get("crcs") {
+            Ok(arr) => arr
+                .as_arr()?
+                .iter()
+                .map(|v| match v {
+                    Json::Null => Ok(None),
+                    other => Ok(Some(other.as_u64()? as u32)),
+                })
+                .collect::<Result<_>>()?,
+            Err(_) => vec![None; offs.len()],
+        };
+        if crcs.len() != offs.len() {
+            return Err(FmError::Storage(
+                "sparse manifest: crcs/offsets length mismatch".into(),
+            ));
+        }
         Ok(SparseMeta {
             nrow: j.get("nrow")?.as_u64()?,
             ncol: j.get("ncol")?.as_u64()?,
             io_rows: j.get("io_rows")?.as_u64()?,
             nnz: j.get("nnz")?.as_u64()?,
             parts: offs.into_iter().zip(lens).collect(),
+            crcs,
         })
     }
 }
@@ -192,10 +249,45 @@ mod tests {
             io_rows: 1024,
             nnz: 12345,
             parts: vec![(0, 4096), (4096, 2048), (6144, 512)],
+            crcs: vec![Some(0xDEAD_BEEF), None, Some(7)],
         };
         let p = tmp.path().join("edges.sparse.json");
         meta.save(&p).unwrap();
         assert_eq!(SparseMeta::load(&p).unwrap(), meta);
+        // atomic save leaves no temp file behind
+        assert!(!p.with_file_name("edges.sparse.json.tmp").exists());
+    }
+
+    #[test]
+    fn sparse_meta_load_ignores_crashed_tmp_and_old_schema() {
+        let tmp = crate::testutil::TempDir::new("sparse-meta-crash");
+        let meta = SparseMeta {
+            nrow: 100,
+            ncol: 8,
+            io_rows: 64,
+            nnz: 10,
+            parts: vec![(0, 128), (128, 64)],
+            crcs: vec![Some(1), Some(2)],
+        };
+        let p = tmp.path().join("m.sparse.json");
+        meta.save(&p).unwrap();
+        // simulate a crash mid-save of a NEWER manifest: a stray .tmp
+        // with garbage next to the good sidecar must be ignored
+        std::fs::write(p.with_file_name("m.sparse.json.tmp"), b"{trunc").unwrap();
+        assert_eq!(SparseMeta::load(&p).unwrap(), meta);
+        // and saving again replaces the stray tmp without error
+        meta.save(&p).unwrap();
+        assert!(!p.with_file_name("m.sparse.json.tmp").exists());
+
+        // a pre-checksum sidecar (no "crcs" key) still opens: every
+        // partition is just unverified
+        let old = r#"{"nrow":100,"ncol":8,"io_rows":64,"nnz":10,
+                      "offsets":[0,128],"lens":[128,64]}"#;
+        let p_old = tmp.path().join("old.sparse.json");
+        std::fs::write(&p_old, old).unwrap();
+        let m = SparseMeta::load(&p_old).unwrap();
+        assert_eq!(m.crcs, vec![None, None]);
+        assert_eq!(m.parts, vec![(0, 128), (128, 64)]);
     }
 
     #[test]

@@ -24,6 +24,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::dtype::DType;
 use crate::error::{FmError, Result};
+use crate::util::sync::LockExt;
 // The `xla` name resolves to the in-tree stub unless the real crate is
 // wired in (see src/xla_stub.rs).
 use crate::xla_stub as xla;
@@ -133,7 +134,7 @@ impl XlaService {
     pub fn lookup(&self, kind: &str, p: u64, k: u64) -> Option<&ArtifactMeta> {
         let idx = *self.by_key.get(&(kind.to_string(), p, k))?;
         let m = &self.metas[idx];
-        if self.poisoned.lock().unwrap().contains(&m.name) {
+        if self.poisoned.lock_recover().contains(&m.name) {
             None
         } else {
             Some(m)
@@ -158,7 +159,7 @@ impl XlaService {
             .recv()
             .map_err(|_| FmError::Runtime("xla service dropped reply".into()))?;
         if res.is_err() {
-            self.poisoned.lock().unwrap().insert(name.to_string());
+            self.poisoned.lock_recover().insert(name.to_string());
         }
         res
     }

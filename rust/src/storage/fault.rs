@@ -1,0 +1,578 @@
+//! Deterministic I/O fault injection + partition checksums.
+//!
+//! The paper trusts SSDs as the backing store for billion-point EM passes
+//! (§III, SAFS); this module extends the seeded-determinism discipline the
+//! [`TokenBucket`](super::TokenBucket) throttle applies to *bandwidth*
+//! (DESIGN.md §Substitutions) to *failures*, so the tolerance machinery in
+//! [`FileStore`](super::FileStore) can be exercised reproducibly:
+//!
+//! * [`FaultPlan`] — a seeded (SplitMix64) schedule of injected faults.
+//!   Every positioned I/O has a stable **site** — `(store namespace, op,
+//!   offset)` — and the plan draws the site's fate once, purely from
+//!   `(seed, site)`: which fault kind fires (transient/persistent `EIO`,
+//!   short read, torn write, single-bit payload corruption, latency
+//!   spike) and for how many attempts (its *duration*). Per-site attempt
+//!   counters then accumulate **across retries and across passes**, so a
+//!   schedule is deterministic regardless of thread interleaving, a
+//!   fault with duration ≤ the retry budget is absorbed transparently,
+//!   and one that outlives the budget aborts the pass but heals for the
+//!   caller's retried pass — the abort/recover path is testable.
+//! * [`ChecksumTable`] + [`crc32`] — per-partition CRC32 (hand-rolled
+//!   slice-by-8 table; the crate is std-only) recorded on every write and
+//!   verified on every exactly-matching read, persisted for named sparse
+//!   datasets through the manifest sidecar.
+//!
+//! Configuration enters through [`crate::config::EngineConfig`]
+//! (`fault_injection`, parsed from the `FLASHR_FAULTS` env spec by
+//! default) and is carried by [`SsdSim`](super::SsdSim) so every store of
+//! an engine shares one plan. Injections are counted in
+//! [`Metrics::faults_injected`](crate::metrics::Metrics).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::error::{FmError, Result};
+use crate::exec::{splitmix64_at, u64_to_unit_f64};
+use crate::metrics::Metrics;
+use crate::util::sync::LockExt;
+
+// ---------------------------------------------------------------------------
+// CRC32 (IEEE, reflected) — hand-rolled slice-by-8 tables, std-only
+// ---------------------------------------------------------------------------
+
+const CRC_POLY: u32 = 0xEDB8_8320; // reflected IEEE 802.3 polynomial
+
+const fn crc_tables() -> [[u32; 256]; 8] {
+    let mut t = [[0u32; 256]; 8];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { (c >> 1) ^ CRC_POLY } else { c >> 1 };
+            k += 1;
+        }
+        t[0][i] = c;
+        i += 1;
+    }
+    let mut s = 1;
+    while s < 8 {
+        let mut i = 0;
+        while i < 256 {
+            let prev = t[s - 1][i];
+            t[s][i] = t[0][(prev & 0xFF) as usize] ^ (prev >> 8);
+            i += 1;
+        }
+        s += 1;
+    }
+    t
+}
+
+static CRC_TABLES: [[u32; 256]; 8] = crc_tables();
+
+/// CRC32 (IEEE) of `data`. Slice-by-8: fast enough (> 1 GB/s) that the
+/// checksum cost hides under the simulated-SSD token bucket's earned
+/// tokens on throttled workloads — `benches/fault_overhead.rs` gates the
+/// fault-free overhead at ≤ 5%.
+pub fn crc32(data: &[u8]) -> u32 {
+    let t = &CRC_TABLES;
+    let mut crc = !0u32;
+    let mut chunks = data.chunks_exact(8);
+    for c in &mut chunks {
+        let lo = u32::from_le_bytes([c[0], c[1], c[2], c[3]]) ^ crc;
+        let hi = u32::from_le_bytes([c[4], c[5], c[6], c[7]]);
+        crc = t[7][(lo & 0xFF) as usize]
+            ^ t[6][((lo >> 8) & 0xFF) as usize]
+            ^ t[5][((lo >> 16) & 0xFF) as usize]
+            ^ t[4][(lo >> 24) as usize]
+            ^ t[3][(hi & 0xFF) as usize]
+            ^ t[2][((hi >> 8) & 0xFF) as usize]
+            ^ t[1][((hi >> 16) & 0xFF) as usize]
+            ^ t[0][(hi >> 24) as usize];
+    }
+    for &b in chunks.remainder() {
+        crc = t[0][((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    !crc
+}
+
+// ---------------------------------------------------------------------------
+// Per-store checksum table
+// ---------------------------------------------------------------------------
+
+/// Expected CRC32 of every partition written to one
+/// [`FileStore`](super::FileStore), keyed by byte offset. Reads verify
+/// only on an exact `(offset, len)` match, so partial reads (the dense
+/// column cache) skip verification naturally instead of false-failing.
+#[derive(Default)]
+pub struct ChecksumTable {
+    map: Mutex<HashMap<u64, (u32, usize)>>,
+}
+
+impl ChecksumTable {
+    pub fn new() -> ChecksumTable {
+        ChecksumTable::default()
+    }
+
+    /// Record the checksum of a successful write at `off`.
+    pub fn record(&self, off: u64, len: usize, crc: u32) {
+        self.map.lock_recover().insert(off, (crc, len));
+    }
+
+    /// Expected CRC for a read at `(off, len)`, if one partition was
+    /// written there with exactly that length.
+    pub fn expected(&self, off: u64, len: usize) -> Option<u32> {
+        match self.map.lock_recover().get(&off) {
+            Some((crc, l)) if *l == len => Some(*crc),
+            _ => None,
+        }
+    }
+
+    /// Number of recorded partitions (tests/benches).
+    pub fn len(&self) -> usize {
+        self.map.lock_recover().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// CRCs for `parts` in order (sidecar persistence; `None` for a
+    /// partition never written through this store handle).
+    pub fn export(&self, parts: &[(u64, usize)]) -> Vec<Option<u32>> {
+        let m = self.map.lock_recover();
+        parts
+            .iter()
+            .map(|(o, l)| match m.get(o) {
+                Some((crc, len)) if len == l => Some(*crc),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Seed the table from a sidecar's persisted `(off, len, crc)` rows
+    /// (reopening a named dataset).
+    pub fn seed(&self, rows: impl IntoIterator<Item = (u64, usize, u32)>) {
+        let mut m = self.map.lock_recover();
+        for (off, len, crc) in rows {
+            m.insert(off, (crc, len));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fault configuration
+// ---------------------------------------------------------------------------
+
+/// Deterministic fault-injection schedule parameters
+/// ([`crate::config::EngineConfig::fault_injection`]). Probabilities are
+/// per *site* — one positioned-I/O `(store, op, offset)` — not per
+/// attempt: a site either never faults or faults for its whole drawn
+/// duration, which is what makes retry/abort behaviour reproducible.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultConfig {
+    /// Seed of the SplitMix64 schedule (same discipline as `datasets`).
+    pub seed: u64,
+    /// P(site returns `EIO`) — reads and writes.
+    pub eio: f64,
+    /// P(read site short-reads) — surfaces as a retryable
+    /// `UnexpectedEof`.
+    pub short_read: f64,
+    /// P(write site tears) — only a prefix of the partition persists and
+    /// the write *reports success*; caught by the write-side read-back
+    /// verify, or by the partition checksum on a later read.
+    pub torn_write: f64,
+    /// P(read site flips one payload bit) — silent corruption; caught by
+    /// the partition checksum.
+    pub bit_flip: f64,
+    /// P(site stalls for [`latency_ms`](Self::latency_ms)) — reads and
+    /// writes; the op still succeeds.
+    pub latency: f64,
+    /// Stall length for latency-spike sites.
+    pub latency_ms: u64,
+    /// P(a faulting site is *persistent* — never heals). Everything else
+    /// is transient with a drawn duration.
+    pub persistent: f64,
+    /// Transient fault duration ceiling in attempts: each transient site
+    /// fails its first `1..=max_duration` attempts (drawn per site), then
+    /// heals. Durations ≤ the retry budget are absorbed transparently;
+    /// longer ones abort the pass but heal for a retried pass.
+    pub max_duration: u32,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            seed: 0x5EED,
+            eio: 0.0,
+            short_read: 0.0,
+            torn_write: 0.0,
+            bit_flip: 0.0,
+            latency: 0.0,
+            latency_ms: 1,
+            persistent: 0.0,
+            max_duration: 2,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// Parse a `FLASHR_FAULTS` spec:
+    /// `seed=42,eio=0.01,short=0.005,torn=0.005,bitflip=0.005,latency=0.001,latency_ms=2,persistent=0.0,max_duration=2`.
+    /// Every key is optional; unknown keys are errors so typos don't
+    /// silently disable chaos runs.
+    pub fn parse(spec: &str) -> Result<FaultConfig> {
+        let mut c = FaultConfig::default();
+        for kv in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (k, v) = kv.split_once('=').ok_or_else(|| {
+                FmError::Config(format!("fault spec '{kv}': expected key=value"))
+            })?;
+            let bad = |e: &dyn std::fmt::Display| {
+                FmError::Config(format!("fault spec '{kv}': {e}"))
+            };
+            match k.trim() {
+                "seed" => c.seed = v.trim().parse().map_err(|e| bad(&e))?,
+                "eio" => c.eio = v.trim().parse().map_err(|e| bad(&e))?,
+                "short" => c.short_read = v.trim().parse().map_err(|e| bad(&e))?,
+                "torn" => c.torn_write = v.trim().parse().map_err(|e| bad(&e))?,
+                "bitflip" => c.bit_flip = v.trim().parse().map_err(|e| bad(&e))?,
+                "latency" => c.latency = v.trim().parse().map_err(|e| bad(&e))?,
+                "latency_ms" => c.latency_ms = v.trim().parse().map_err(|e| bad(&e))?,
+                "persistent" => c.persistent = v.trim().parse().map_err(|e| bad(&e))?,
+                "max_duration" => c.max_duration = v.trim().parse().map_err(|e| bad(&e))?,
+                other => {
+                    return Err(FmError::Config(format!(
+                        "fault spec: unknown key '{other}'"
+                    )))
+                }
+            }
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        for (name, p) in [
+            ("eio", self.eio),
+            ("short", self.short_read),
+            ("torn", self.torn_write),
+            ("bitflip", self.bit_flip),
+            ("latency", self.latency),
+            ("persistent", self.persistent),
+        ] {
+            if !(0.0..=1.0).contains(&p) {
+                return Err(FmError::Config(format!(
+                    "fault probability {name}={p} outside [0,1]"
+                )));
+            }
+        }
+        if self.eio + self.short_read + self.bit_flip + self.latency > 1.0 {
+            return Err(FmError::Config(
+                "read fault probabilities (eio+short+bitflip+latency) sum past 1".into(),
+            ));
+        }
+        if self.eio + self.torn_write + self.latency > 1.0 {
+            return Err(FmError::Config(
+                "write fault probabilities (eio+torn+latency) sum past 1".into(),
+            ));
+        }
+        if self.max_duration == 0 {
+            return Err(FmError::Config("max_duration must be > 0".into()));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fault plan
+// ---------------------------------------------------------------------------
+
+/// Which way a site misbehaves (drawn once per site from the seed).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// Transient/persistent I/O error (retryable).
+    Eio,
+    /// Read returns fewer bytes than asked (retryable `UnexpectedEof`).
+    ShortRead,
+    /// Write persists only a prefix yet reports success (silent; caught
+    /// by read-back verify / checksums).
+    TornWrite,
+    /// One payload bit flips on the way back (silent; caught by
+    /// checksums).
+    BitFlip,
+    /// The op stalls but succeeds.
+    Latency,
+}
+
+/// What [`FaultPlan::draw`] tells [`FileStore`](super::FileStore) to do to
+/// the current attempt.
+pub enum Injection {
+    /// Fail the attempt with this (retryable) error.
+    Fail(FmError),
+    /// Persist/return only the first `n` bytes, report success.
+    Truncate(usize),
+    /// Flip bit `bit` of payload byte `byte` after a successful read.
+    FlipBit { byte: usize, bit: u8 },
+}
+
+/// I/O direction of a site (part of the site key: a read and a write at
+/// the same offset are independent sites).
+#[derive(Clone, Copy)]
+pub enum Op {
+    Read,
+    Write,
+}
+
+/// Seeded, site-keyed fault schedule shared by every store of an engine.
+pub struct FaultPlan {
+    cfg: FaultConfig,
+    /// Attempts seen per faulting site — the only mutable state, and it
+    /// only ever *advances*, so schedules are interleaving-independent.
+    attempts: Mutex<HashMap<u64, u32>>,
+}
+
+impl FaultPlan {
+    pub fn new(cfg: FaultConfig) -> FaultPlan {
+        FaultPlan {
+            cfg,
+            attempts: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn config(&self) -> &FaultConfig {
+        &self.cfg
+    }
+
+    fn site_key(ns: u64, op: Op, off: u64) -> u64 {
+        let op = match op {
+            Op::Read => 0x52,
+            Op::Write => 0x57,
+        };
+        // one SplitMix64 round mixes the triple into a well-spread key
+        splitmix64_at(ns ^ (op as u64) << 56, off)
+    }
+
+    /// The site's drawn fate: `None` = never faults, else the kind and
+    /// how many attempts it fails/affects before healing
+    /// (`u32::MAX` = persistent).
+    fn fate(&self, site: u64, op: Op) -> Option<(FaultKind, u32)> {
+        let u = u64_to_unit_f64(splitmix64_at(self.cfg.seed, site));
+        let c = &self.cfg;
+        let mut lo = 0.0;
+        let mut pick = None;
+        let kinds: &[(FaultKind, f64)] = match op {
+            Op::Read => &[
+                (FaultKind::Eio, c.eio),
+                (FaultKind::ShortRead, c.short_read),
+                (FaultKind::BitFlip, c.bit_flip),
+                (FaultKind::Latency, c.latency),
+            ],
+            Op::Write => &[
+                (FaultKind::Eio, c.eio),
+                (FaultKind::TornWrite, c.torn_write),
+                (FaultKind::Latency, c.latency),
+            ],
+        };
+        for &(kind, p) in kinds {
+            if u >= lo && u < lo + p {
+                pick = Some(kind);
+                break;
+            }
+            lo += p;
+        }
+        let kind = pick?;
+        let persistent =
+            u64_to_unit_f64(splitmix64_at(self.cfg.seed ^ 0x9E3779B9, site)) < c.persistent;
+        let duration = if persistent {
+            u32::MAX
+        } else {
+            1 + (splitmix64_at(self.cfg.seed ^ 0x7F4A7C15, site) % c.max_duration as u64) as u32
+        };
+        Some((kind, duration))
+    }
+
+    /// Decide this attempt's injection for the positioned op
+    /// `(ns, op, off)` over `len` payload bytes. Advances the site's
+    /// attempt counter only while the site is still within its faulting
+    /// duration, so healed sites cost one map probe and faultless sites
+    /// only arithmetic.
+    pub fn draw(&self, ns: u64, op: Op, off: u64, len: usize, metrics: &Metrics) -> Option<Injection> {
+        let site = Self::site_key(ns, op, off);
+        let (kind, duration) = self.fate(site, op)?;
+        let attempt = {
+            let mut m = self.attempts.lock_recover();
+            let a = m.entry(site).or_insert(0);
+            let cur = *a;
+            if cur >= duration {
+                return None; // healed
+            }
+            *a = a.saturating_add(1);
+            cur
+        };
+        metrics
+            .faults_injected
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        // per-attempt salt so e.g. the flipped bit moves between attempts
+        let z = splitmix64_at(self.cfg.seed ^ site, attempt as u64);
+        Some(match kind {
+            FaultKind::Eio => Injection::Fail(FmError::Io(std::io::Error::new(
+                std::io::ErrorKind::Other,
+                format!("injected EIO (site {site:#x}, attempt {attempt})"),
+            ))),
+            FaultKind::ShortRead => Injection::Fail(FmError::Io(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                format!("injected short read (site {site:#x}, attempt {attempt})"),
+            ))),
+            FaultKind::TornWrite => Injection::Truncate(if len <= 1 {
+                0
+            } else {
+                1 + (z % (len as u64 - 1)) as usize
+            }),
+            FaultKind::BitFlip => Injection::FlipBit {
+                byte: if len == 0 { 0 } else { (z % len as u64) as usize },
+                bit: (z >> 32) as u8 & 7,
+            },
+            FaultKind::Latency => {
+                std::thread::sleep(std::time::Duration::from_millis(self.cfg.latency_ms));
+                return None; // op proceeds normally after the stall
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vectors() {
+        // canonical IEEE CRC32 check values
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn crc32_slice_by_8_matches_bytewise() {
+        // lengths straddling the 8-byte fast path + tail
+        let data: Vec<u8> = (0..4099u32).map(|i| (i.wrapping_mul(2654435761) >> 13) as u8).collect();
+        for take in [0, 1, 7, 8, 9, 64, 4099] {
+            let d = &data[..take];
+            let mut crc = !0u32;
+            for &b in d {
+                crc ^= b as u32;
+                for _ in 0..8 {
+                    crc = if crc & 1 != 0 { (crc >> 1) ^ CRC_POLY } else { crc >> 1 };
+                }
+            }
+            assert_eq!(crc32(d), !crc, "len {take}");
+        }
+    }
+
+    #[test]
+    fn checksum_table_exact_match_only() {
+        let t = ChecksumTable::new();
+        t.record(64, 16, 0xDEAD);
+        assert_eq!(t.expected(64, 16), Some(0xDEAD));
+        assert_eq!(t.expected(64, 8), None, "partial read skips verify");
+        assert_eq!(t.expected(0, 16), None);
+        assert_eq!(t.export(&[(64, 16), (0, 4)]), vec![Some(0xDEAD), None]);
+        let t2 = ChecksumTable::new();
+        t2.seed([(64, 16, 0xDEAD)]);
+        assert_eq!(t2.expected(64, 16), Some(0xDEAD));
+    }
+
+    #[test]
+    fn spec_parses_and_rejects() {
+        let c = FaultConfig::parse("seed=7, eio=0.25, torn=0.5, max_duration=4").unwrap();
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.eio, 0.25);
+        assert_eq!(c.torn_write, 0.5);
+        assert_eq!(c.max_duration, 4);
+        assert!(FaultConfig::parse("bogus=1").is_err(), "unknown key");
+        assert!(FaultConfig::parse("eio").is_err(), "missing value");
+        assert!(FaultConfig::parse("eio=1.5").is_err(), "p outside [0,1]");
+        assert!(FaultConfig::parse("eio=0.8,bitflip=0.5").is_err(), "sum past 1");
+        assert_eq!(FaultConfig::parse("").unwrap(), FaultConfig::default());
+    }
+
+    #[test]
+    fn schedule_is_deterministic_and_heals() {
+        let cfg = FaultConfig {
+            eio: 1.0,
+            persistent: 0.0,
+            max_duration: 2,
+            ..FaultConfig::default()
+        };
+        let metrics = Metrics::new();
+        let fates: Vec<_> = (0..16)
+            .map(|i| {
+                let p = FaultPlan::new(cfg.clone());
+                let mut fails = 0;
+                // attempts accumulate: the site must heal within max_duration
+                while let Some(Injection::Fail(_)) =
+                    p.draw(1, Op::Read, i * 4096, 4096, &metrics)
+                {
+                    fails += 1;
+                    assert!(fails <= cfg.max_duration, "site never healed");
+                }
+                fails
+            })
+            .collect();
+        assert!(fates.iter().all(|&f| (1..=2).contains(&f)));
+        // same seed, fresh plan => identical schedule
+        let rerun: Vec<_> = (0..16)
+            .map(|i| {
+                let p = FaultPlan::new(cfg.clone());
+                let mut fails = 0;
+                while let Some(Injection::Fail(_)) =
+                    p.draw(1, Op::Read, i * 4096, 4096, &metrics)
+                {
+                    fails += 1;
+                }
+                fails
+            })
+            .collect();
+        assert_eq!(fates, rerun);
+        assert!(metrics.snapshot().faults_injected > 0);
+    }
+
+    #[test]
+    fn persistent_sites_never_heal() {
+        let cfg = FaultConfig {
+            bit_flip: 1.0,
+            persistent: 1.0,
+            ..FaultConfig::default()
+        };
+        let p = FaultPlan::new(cfg);
+        let metrics = Metrics::new();
+        for _ in 0..64 {
+            match p.draw(9, Op::Read, 0, 4096, &metrics) {
+                Some(Injection::FlipBit { byte, bit }) => {
+                    assert!(byte < 4096);
+                    assert!(bit < 8);
+                }
+                _ => panic!("persistent bit-flip site must fire every attempt"),
+            }
+        }
+    }
+
+    #[test]
+    fn read_and_write_sites_are_independent() {
+        // eio=1.0 on both: the read site consuming attempts must not
+        // advance the write site's counter
+        let cfg = FaultConfig {
+            eio: 1.0,
+            max_duration: 1,
+            ..FaultConfig::default()
+        };
+        let p = FaultPlan::new(cfg);
+        let m = Metrics::new();
+        assert!(matches!(p.draw(3, Op::Read, 0, 64, &m), Some(Injection::Fail(_))));
+        assert!(p.draw(3, Op::Read, 0, 64, &m).is_none(), "read healed");
+        assert!(
+            matches!(p.draw(3, Op::Write, 0, 64, &m), Some(Injection::Fail(_))),
+            "write site still has its own first attempt"
+        );
+    }
+}

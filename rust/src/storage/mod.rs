@@ -29,8 +29,10 @@
 //! touch one store concurrently without coordination. See
 //! `docs/ARCHITECTURE.md` for the full paper-section-to-module map.
 
+pub mod fault;
 pub mod throttle;
 
+pub use fault::{crc32, ChecksumTable, FaultConfig, FaultPlan};
 pub use throttle::TokenBucket;
 
 use std::fs::{File, OpenOptions};
@@ -44,19 +46,59 @@ use crate::config::ThrottleConfig;
 use crate::error::{FmError, Result};
 use crate::metrics::Metrics;
 
-/// Simulated SSD-array bandwidth model shared by every [`FileStore`] of an
-/// engine. `None` buckets = run at raw disk speed.
+use fault::{Injection, Op};
+
+/// Simulated SSD-array model shared by every [`FileStore`] of an engine:
+/// the bandwidth buckets (`None` = raw disk speed) plus the engine-wide
+/// I/O *policy* — the deterministic fault plan, the transient-retry
+/// budget and the partition-checksum switch — so stores created anywhere
+/// in the engine inherit one consistent failure model.
 pub struct SsdSim {
     read_bucket: Option<TokenBucket>,
     write_bucket: Option<TokenBucket>,
+    faults: Option<FaultPlan>,
+    retry_limit: u32,
+    checksums: bool,
 }
 
 impl SsdSim {
+    /// Throttle-only simulator with the default tolerance policy
+    /// (checksums on, 3 retries, no injected faults).
     pub fn new(cfg: Option<&ThrottleConfig>) -> Self {
+        Self::with_policy(cfg, None, 3, true)
+    }
+
+    /// Full policy constructor ([`crate::fmr::Engine`] feeds this from
+    /// `EngineConfig::{throttle, fault_injection, io_retry_limit,
+    /// io_checksums}`).
+    pub fn with_policy(
+        cfg: Option<&ThrottleConfig>,
+        faults: Option<FaultConfig>,
+        retry_limit: u32,
+        checksums: bool,
+    ) -> Self {
         SsdSim {
             read_bucket: cfg.map(|c| TokenBucket::new(c.read_bytes_per_sec)),
             write_bucket: cfg.map(|c| TokenBucket::new(c.write_bytes_per_sec)),
+            faults: faults.map(FaultPlan::new),
+            retry_limit,
+            checksums,
         }
+    }
+
+    /// The engine's fault schedule, if chaos is configured.
+    pub fn fault_plan(&self) -> Option<&FaultPlan> {
+        self.faults.as_ref()
+    }
+
+    /// Whether partition checksums are recorded/verified.
+    pub fn checksums_enabled(&self) -> bool {
+        self.checksums
+    }
+
+    /// Max retries after a transient I/O failure (per positioned op).
+    pub fn retry_limit(&self) -> u32 {
+        self.retry_limit
     }
 
     fn charge_read(&self, bytes: u64) {
@@ -89,6 +131,19 @@ impl SsdSim {
 /// Monotonic id for unnamed external matrices.
 static NEXT_FILE_ID: AtomicU64 = AtomicU64::new(0);
 
+/// Stable fault-site namespace for a store: named datasets hash their
+/// file name (so a reopened dataset keeps its schedule), anonymous
+/// intermediates embed a unique id in theirs (fresh sites per target
+/// file, which is what lets a *retried* pass write clean partitions).
+fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
 /// One external-memory matrix file.
 pub struct FileStore {
     path: PathBuf,
@@ -96,6 +151,11 @@ pub struct FileStore {
     len: u64,
     ssd: Arc<SsdSim>,
     metrics: Arc<Metrics>,
+    /// Fault-site namespace (hash of the file name).
+    ns: u64,
+    /// Expected CRC32 per written partition; verified on every
+    /// exactly-matching read when the policy enables checksums.
+    crcs: ChecksumTable,
     /// Delete the backing file when the store is dropped (anonymous
     /// intermediates; named datasets are kept).
     unlink_on_drop: bool,
@@ -130,12 +190,15 @@ impl FileStore {
             .truncate(true)
             .open(&path)?;
         file.set_len(len)?;
+        let ns = fnv1a(&path.file_name().unwrap_or_default().to_string_lossy());
         Ok(FileStore {
             path,
             file,
             len,
             ssd,
             metrics,
+            ns,
+            crcs: ChecksumTable::new(),
             unlink_on_drop: unlink,
         })
     }
@@ -144,12 +207,15 @@ impl FileStore {
     pub fn open(path: &Path, ssd: Arc<SsdSim>, metrics: Arc<Metrics>) -> Result<FileStore> {
         let file = OpenOptions::new().read(true).write(true).open(path)?;
         let len = file.metadata()?.len();
+        let ns = fnv1a(&path.file_name().unwrap_or_default().to_string_lossy());
         Ok(FileStore {
             path: path.to_path_buf(),
             file,
             len,
             ssd,
             metrics,
+            ns,
+            crcs: ChecksumTable::new(),
             unlink_on_drop: false,
         })
     }
@@ -166,7 +232,51 @@ impl FileStore {
         &self.path
     }
 
+    /// The store's checksum table (sidecar persistence for named
+    /// datasets; tests).
+    pub fn checksums(&self) -> &ChecksumTable {
+        &self.crcs
+    }
+
+    /// Whether a transient failure of one attempt is worth another try.
+    fn retryable(e: &FmError) -> bool {
+        matches!(e, FmError::Io(_))
+    }
+
+    /// Short exponential backoff between retries of one positioned op.
+    fn backoff(attempt: u32) {
+        std::thread::sleep(std::time::Duration::from_micros(50 << attempt.min(6)));
+    }
+
+    /// One physical read attempt: fault pre-hook, throttle charge, pread,
+    /// payload-corruption post-hook.
+    fn read_attempt(&self, off: u64, buf: &mut [u8]) -> Result<()> {
+        let flip = match self.ssd.fault_plan() {
+            Some(plan) => match plan.draw(self.ns, Op::Read, off, buf.len(), &self.metrics) {
+                Some(Injection::Fail(e)) => return Err(e),
+                Some(Injection::FlipBit { byte, bit }) => Some((byte, bit)),
+                _ => None,
+            },
+            None => None,
+        };
+        self.ssd.charge_read(buf.len() as u64);
+        self.file.read_exact_at(buf, off)?;
+        if let Some((byte, bit)) = flip {
+            if !buf.is_empty() {
+                buf[byte] ^= 1 << bit;
+            }
+        }
+        Ok(())
+    }
+
     /// Read exactly `buf.len()` bytes at `off` (one I/O-level partition).
+    ///
+    /// Tolerance: transient failures (real or injected `EIO`/short reads)
+    /// are retried up to [`SsdSim::retry_limit`] times with backoff
+    /// (`Metrics::io_retries`); when a partition checksum is on record
+    /// for exactly `(off, len)`, the payload is verified and a mismatch
+    /// triggers **one** re-read before surfacing [`FmError::Corrupt`]
+    /// (`Metrics::checksum_failures`).
     pub fn read_at(&self, off: u64, buf: &mut [u8]) -> Result<()> {
         if off + buf.len() as u64 > self.len {
             return Err(FmError::Storage(format!(
@@ -175,9 +285,74 @@ impl FileStore {
                 self.len
             )));
         }
-        self.ssd.charge_read(buf.len() as u64);
-        self.file.read_exact_at(buf, off)?;
-        self.metrics.add_read(buf.len() as u64);
+        let mut io_attempt = 0u32;
+        let mut reread_after_mismatch = false;
+        loop {
+            match self.read_attempt(off, buf) {
+                Ok(()) => {
+                    let want = self
+                        .ssd
+                        .checksums_enabled()
+                        .then(|| self.crcs.expected(off, buf.len()))
+                        .flatten();
+                    if let Some(want) = want {
+                        let got = crc32(buf);
+                        if got != want {
+                            self.metrics
+                                .checksum_failures
+                                .fetch_add(1, Ordering::Relaxed);
+                            if !reread_after_mismatch {
+                                reread_after_mismatch = true;
+                                continue;
+                            }
+                            return Err(FmError::Corrupt(format!(
+                                "partition checksum mismatch at off={off} len={} \
+                                 (want {want:#010x}, got {got:#010x}) in {} after re-read",
+                                buf.len(),
+                                self.path.display()
+                            )));
+                        }
+                    }
+                    self.metrics.add_read(buf.len() as u64);
+                    return Ok(());
+                }
+                Err(e) if Self::retryable(&e) && io_attempt < self.ssd.retry_limit() => {
+                    io_attempt += 1;
+                    self.metrics.io_retries.fetch_add(1, Ordering::Relaxed);
+                    Self::backoff(io_attempt);
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// One physical write attempt. A torn-write injection persists only a
+    /// prefix yet "succeeds", so under an active fault plan every attempt
+    /// is read back raw (no throttle/injection — a verification probe,
+    /// not modeled I/O) and a mismatch is surfaced for the retry loop;
+    /// fault-free runs skip the probe so checksums cost no extra I/O.
+    fn write_attempt(&self, off: u64, buf: &[u8]) -> Result<()> {
+        let mut persist = buf.len();
+        if let Some(plan) = self.ssd.fault_plan() {
+            match plan.draw(self.ns, Op::Write, off, buf.len(), &self.metrics) {
+                Some(Injection::Fail(e)) => return Err(e),
+                Some(Injection::Truncate(n)) => persist = n.min(buf.len()),
+                _ => {}
+            }
+        }
+        self.ssd.charge_write(buf.len() as u64);
+        self.file.write_all_at(&buf[..persist], off)?;
+        if self.ssd.fault_plan().is_some() {
+            let mut back = vec![0u8; buf.len()];
+            self.file.read_exact_at(&mut back, off)?;
+            if back != buf {
+                return Err(FmError::Corrupt(format!(
+                    "write read-back mismatch at off={off} len={} in {} (torn write)",
+                    buf.len(),
+                    self.path.display()
+                )));
+            }
+        }
         Ok(())
     }
 
@@ -185,6 +360,12 @@ impl FileStore {
     /// [`read_at`](Self::read_at); under write-back this runs on the
     /// cache's background writer thread, which is where the throttled
     /// write cost is paid while pass workers keep computing.
+    ///
+    /// Tolerance mirrors the read side: transient failures and torn
+    /// writes (caught by the read-back probe) are retried with backoff;
+    /// a successful write records the partition's CRC32 for later read
+    /// verification. A tear that survives every retry surfaces as
+    /// [`FmError::Corrupt`].
     pub fn write_at(&self, off: u64, buf: &[u8]) -> Result<()> {
         if off + buf.len() as u64 > self.len {
             return Err(FmError::Storage(format!(
@@ -193,10 +374,30 @@ impl FileStore {
                 self.len
             )));
         }
-        self.ssd.charge_write(buf.len() as u64);
-        self.file.write_all_at(buf, off)?;
-        self.metrics.add_write(buf.len() as u64);
-        Ok(())
+        let mut attempt = 0u32;
+        loop {
+            match self.write_attempt(off, buf) {
+                Ok(()) => {
+                    if self.ssd.checksums_enabled() {
+                        self.crcs.record(off, buf.len(), crc32(buf));
+                    }
+                    self.metrics.add_write(buf.len() as u64);
+                    return Ok(());
+                }
+                // a torn write (Corrupt from the read-back probe) is as
+                // retryable as an EIO at this layer: the data is still in
+                // hand, so rewriting can heal it
+                Err(e)
+                    if (Self::retryable(&e) || matches!(e, FmError::Corrupt(_)))
+                        && attempt < self.ssd.retry_limit() =>
+                {
+                    attempt += 1;
+                    self.metrics.io_retries.fetch_add(1, Ordering::Relaxed);
+                    Self::backoff(attempt);
+                }
+                Err(e) => return Err(e),
+            }
+        }
     }
 }
 
@@ -367,6 +568,110 @@ mod tests {
         // ordering: the slow consumer still sees submission order
         assert_eq!(seen, (0..64u8).collect::<Vec<_>>());
         assert!(r.next().is_none());
+    }
+
+    fn mk_faulty(
+        len: u64,
+        cfg: FaultConfig,
+        retry_limit: u32,
+    ) -> (FileStore, Arc<Metrics>, tempdir::TempDir) {
+        let dir = tempdir::TempDir::new();
+        let ssd = Arc::new(SsdSim::with_policy(None, Some(cfg), retry_limit, true));
+        let m = Arc::new(Metrics::new());
+        let s = FileStore::create(dir.path(), None, len, ssd, Arc::clone(&m)).unwrap();
+        (s, m, dir)
+    }
+
+    #[test]
+    fn transient_eio_absorbed_with_pinned_retry_counts() {
+        // every site fails exactly its first attempt (max_duration=1)
+        let cfg = FaultConfig {
+            eio: 1.0,
+            max_duration: 1,
+            ..FaultConfig::default()
+        };
+        let (s, m, _d) = mk_faulty(64, cfg, 3);
+        s.write_at(0, &[7u8; 64]).unwrap();
+        let mut buf = [0u8; 64];
+        s.read_at(0, &mut buf).unwrap();
+        assert_eq!(buf, [7u8; 64]);
+        let snap = m.snapshot();
+        // one injected failure per op, each absorbed by exactly one retry
+        assert_eq!(snap.io_retries, 2, "write retry + read retry");
+        assert_eq!(snap.faults_injected, 2);
+        assert_eq!(snap.checksum_failures, 0);
+    }
+
+    #[test]
+    fn persistent_eio_exhausts_retries_into_typed_error() {
+        let cfg = FaultConfig {
+            eio: 1.0,
+            persistent: 1.0,
+            ..FaultConfig::default()
+        };
+        let (s, m, _d) = mk_faulty(64, cfg, 2);
+        let mut buf = [0u8; 64];
+        let err = s.read_at(0, &mut buf).unwrap_err();
+        assert!(matches!(err, FmError::Io(_)), "typed error, not a panic: {err}");
+        assert_eq!(m.snapshot().io_retries, 2, "budget spent exactly");
+    }
+
+    #[test]
+    fn torn_write_caught_by_readback_and_healed() {
+        let cfg = FaultConfig {
+            torn_write: 1.0,
+            max_duration: 1,
+            ..FaultConfig::default()
+        };
+        let (s, m, _d) = mk_faulty(4096, cfg, 3);
+        let pat: Vec<u8> = (0..4096u32).map(|i| (i % 251) as u8).collect();
+        s.write_at(0, &pat).unwrap();
+        let mut back = vec![0u8; 4096];
+        s.read_at(0, &mut back).unwrap();
+        assert_eq!(back, pat, "healed write persisted the full partition");
+        let snap = m.snapshot();
+        assert!(snap.io_retries >= 1, "tear was caught and retried");
+        assert!(snap.faults_injected >= 1);
+    }
+
+    #[test]
+    fn out_of_band_corruption_surfaces_corrupt_after_one_reread() {
+        let (s, _d) = mk(64);
+        let m = Arc::clone(&s.metrics);
+        s.write_at(0, &[5u8; 64]).unwrap();
+        // corrupt the file behind the store's back (no fault plan: this
+        // models real silent media corruption)
+        {
+            let f = OpenOptions::new().write(true).open(s.path()).unwrap();
+            f.write_all_at(&[6u8], 10).unwrap();
+        }
+        let mut buf = [0u8; 64];
+        let err = s.read_at(0, &mut buf).unwrap_err();
+        assert!(matches!(err, FmError::Corrupt(_)), "got: {err}");
+        // first verify fails, the single re-read fails again => 2
+        assert_eq!(m.snapshot().checksum_failures, 2);
+        // partial reads have no recorded checksum => still served
+        let mut half = [0u8; 32];
+        s.read_at(16, &mut half).unwrap();
+    }
+
+    #[test]
+    fn bitflip_read_healed_by_checksum_reread() {
+        // bit flips on the first attempt of every read site, then heals:
+        // the checksum catches it and the single re-read returns clean
+        // bytes transparently
+        let cfg = FaultConfig {
+            bit_flip: 1.0,
+            max_duration: 1,
+            ..FaultConfig::default()
+        };
+        let (s, m, _d) = mk_faulty(64, cfg, 3);
+        s.write_at(0, &[9u8; 64]).unwrap();
+        let mut buf = [0u8; 64];
+        s.read_at(0, &mut buf).unwrap();
+        assert_eq!(buf, [9u8; 64]);
+        let snap = m.snapshot();
+        assert_eq!(snap.checksum_failures, 1, "one caught flip");
     }
 
     #[test]

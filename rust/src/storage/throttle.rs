@@ -15,6 +15,8 @@
 //! wall-time win; determinism of the buckets makes it CI-gateable).
 
 use std::sync::Mutex;
+
+use crate::util::sync::LockExt;
 use std::time::{Duration, Instant};
 
 /// Classic token bucket: capacity of one second of budget, refilled by
@@ -51,7 +53,7 @@ impl TokenBucket {
     /// to make token-bucket costs deterministic from `t = 0`
     /// ([`crate::storage::SsdSim::drain_bursts`]).
     pub fn drain(&self) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock_recover();
         st.available = 0.0;
         st.last = Instant::now();
     }
@@ -62,7 +64,7 @@ impl TokenBucket {
         let mut remaining = bytes as f64;
         loop {
             let wait = {
-                let mut st = self.state.lock().unwrap();
+                let mut st = self.state.lock_recover();
                 let now = Instant::now();
                 let dt = now.duration_since(st.last).as_secs_f64();
                 st.last = now;

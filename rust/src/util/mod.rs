@@ -8,8 +8,11 @@
 //!   is not vendored; benches are `harness = false` mains).
 //! * [`quickcheck`] — property-test case generation on top of the
 //!   deterministic SplitMix64 generator (proptest substitute).
+//! * [`sync`] — poison-recovering `Mutex`/`Condvar` helpers so a
+//!   contained worker panic cannot wedge shared engine state.
 
 pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod quickcheck;
+pub mod sync;

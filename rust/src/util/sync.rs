@@ -1,0 +1,73 @@
+//! Poison-recovering lock primitives.
+//!
+//! A worker panic contained by `catch_unwind` (see `exec::run_pass` and
+//! the cache's background threads) still *poisons* any `Mutex` it held —
+//! and with `.lock().unwrap()` that poison cascades: every later pass
+//! touching the same cache/pool state panics too, turning one contained
+//! fault into a wedged engine. All shared engine state guards protect
+//! plain data whose invariants are re-established by the abort path
+//! (dirty queues discarded, in-flight registries cleared), so recovering
+//! the guard is always safe here; these helpers make that the one-line
+//! default.
+
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
+
+/// `Mutex` extension: acquire the guard even when a previous holder
+/// panicked.
+pub trait LockExt<T> {
+    /// `lock()` that shrugs off poison instead of panicking.
+    fn lock_recover(&self) -> MutexGuard<'_, T>;
+    /// `into_inner()` that shrugs off poison instead of panicking.
+    fn into_inner_recover(self) -> T;
+}
+
+impl<T> LockExt<T> for Mutex<T> {
+    fn lock_recover(&self) -> MutexGuard<'_, T> {
+        self.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    fn into_inner_recover(self) -> T {
+        self.into_inner().unwrap_or_else(PoisonError::into_inner)
+    }
+}
+
+/// `Condvar::wait` that recovers a poisoned guard instead of panicking
+/// (the waiting side of the same cascade `lock_recover` breaks).
+pub fn wait_recover<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn lock_recover_survives_poison() {
+        let m = Arc::new(Mutex::new(7usize));
+        let m2 = Arc::clone(&m);
+        // poison the mutex from a panicking thread
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex should be poisoned");
+        assert_eq!(*m.lock_recover(), 7);
+        *m.lock_recover() = 8;
+        assert_eq!(*m.lock_recover(), 8);
+    }
+
+    #[test]
+    fn into_inner_recover_survives_poison() {
+        let m = Arc::new(Mutex::new(vec![1, 2, 3]));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        let m = Arc::into_inner(m).expect("sole owner");
+        assert_eq!(m.into_inner_recover(), vec![1, 2, 3]);
+    }
+}
