@@ -1,0 +1,230 @@
+//! Bench: multi-tenant serving — three tenants (k-means, PageRank, IRLS)
+//! interleaved as [`flashmatrix::Session`]s over ONE shared engine vs the
+//! same three workloads serialized on the root engine (the pre-session
+//! one-pass-at-a-time regime). External memory, shared partition cache,
+//! deterministic SSD throttle, `threads = 1` per tenant so each
+//! workload's fold order is fixed and the only variable is the
+//! interleaving itself.
+//!
+//! Acceptance (gated by CI):
+//! * every tenant's result is **bit-identical** to its serialized run —
+//!   concurrency must be invisible to results;
+//! * aggregate wall time interleaved is STRICTLY below serialized — the
+//!   sessions really overlap (one tenant's I/O waits hide another's
+//!   compute) instead of convoying on a cache-global barrier;
+//! * cross-tenant evictions stay zero: every tenant's working set fits
+//!   its fair share, so no tenant's residency is sacrificed to another's
+//!   streaming (the isolation half of the fair-share policy).
+//!
+//! Run: `cargo bench --bench multitenant -- [--json-dir DIR]`. Emits
+//! `BENCH_multitenant.json` for the CI gate.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use flashmatrix::algs;
+use flashmatrix::config::{EngineConfig, StorageKind, ThrottleConfig};
+use flashmatrix::datasets;
+use flashmatrix::fmr::{Engine, Session};
+use flashmatrix::harness::BenchReport;
+use flashmatrix::metrics::MetricsSnapshot;
+use flashmatrix::util::bench::{bench_args, Table};
+
+const SSD_BPS: u64 = 512 << 20;
+/// Shared cache: comfortably above the sum of the three tenants' working
+/// sets, so evictions — and in particular cross-tenant evictions — are
+/// not forced by capacity and the isolation check is deterministic.
+const CACHE_BYTES: usize = 24 << 20;
+/// Per-tenant fair share: each workload below is sized to stay inside it.
+const SESSION_SHARE: usize = 8 << 20;
+
+fn root_engine(dir: &std::path::Path) -> Arc<Engine> {
+    Engine::new(EngineConfig {
+        storage: StorageKind::External,
+        data_dir: dir.to_path_buf(),
+        em_cache_bytes: CACHE_BYTES,
+        prefetch_depth: 2,
+        throttle: Some(ThrottleConfig {
+            read_bytes_per_sec: SSD_BPS,
+            write_bytes_per_sec: SSD_BPS,
+        }),
+        threads: 1, // bit-exact folds: interleaving is the only variable
+        xla_dispatch: false,
+        ..EngineConfig::default()
+    })
+    .expect("engine")
+}
+
+fn session_config(dir: &std::path::Path) -> EngineConfig {
+    EngineConfig {
+        storage: StorageKind::External,
+        data_dir: dir.to_path_buf(),
+        threads: 1,
+        xla_dispatch: false,
+        session_mem_bytes: SESSION_SHARE,
+        ..EngineConfig::default()
+    }
+}
+
+// -- the three tenant workloads (each builds its own data, then fits) -------
+
+fn kmeans(eng: &Arc<Engine>) -> Vec<f64> {
+    let (x, _) = datasets::mix_gaussian(eng, 100_000, 6, 3, 8.0, 3, None).expect("x");
+    let km = algs::kmeans(&x, 3, 5, 1).expect("kmeans");
+    let mut fp = km.wcss.clone();
+    fp.extend(km.centroids.buf.to_f64_vec());
+    fp.extend(km.sizes.clone());
+    fp
+}
+
+fn pagerank(eng: &Arc<Engine>) -> Vec<f64> {
+    let (g, dangling) = datasets::pagerank_graph(eng, 1 << 14, 8, 99, None).expect("graph");
+    let pr = algs::pagerank(&g, &dangling, 0.85, 10, 0.0).expect("pagerank");
+    let mut fp = pr.ranks.clone();
+    fp.extend(pr.deltas);
+    fp
+}
+
+fn irls(eng: &Arc<Engine>) -> Vec<f64> {
+    let x = datasets::uniform(eng, 120_000, 6, -1.0, 1.0, 21, None).expect("x");
+    let y = datasets::logistic_labels(&x, &[1.0, -0.5, 0.25, -1.5, 0.75, 0.0], 22).expect("y");
+    let fit = algs::logistic(&x, &y, 5, 1e-8).expect("irls");
+    let mut fp = fit.beta.clone();
+    fp.extend(fit.deviances);
+    fp
+}
+
+const TENANTS: [(&str, fn(&Arc<Engine>) -> Vec<f64>); 3] =
+    [("kmeans", kmeans), ("pagerank", pagerank), ("irls", irls)];
+
+fn main() {
+    let args = bench_args();
+    let json_dir = args.get_or("json-dir", ".").to_string();
+
+    let mut t = Table::new(format!(
+        "Multi-tenant serving: kmeans + PageRank + IRLS, 3 sessions over a \
+         {} MiB shared cache ({} MiB share each), FM-EM, SSD {} MiB/s, \
+         1 thread/tenant",
+        CACHE_BYTES >> 20,
+        SESSION_SHARE >> 20,
+        SSD_BPS >> 20
+    ));
+    let mut report = BenchReport::new("multitenant");
+
+    // -- serialized baseline: one tenant at a time on the root engine ------
+    let ser_dir = std::env::temp_dir().join(format!("fm-mt-serial-{}", std::process::id()));
+    std::fs::create_dir_all(&ser_dir).expect("bench data dir");
+    let (serial_fps, serial_secs, serial_m) = {
+        let root = root_engine(&ser_dir);
+        let t0 = Instant::now();
+        let fps: Vec<Vec<f64>> = TENANTS.iter().map(|(_, f)| f(&root)).collect();
+        (fps, t0.elapsed().as_secs_f64(), root.metrics.snapshot())
+    };
+    let _ = std::fs::remove_dir_all(&ser_dir);
+    t.add_with(
+        "serialized total",
+        serial_secs,
+        "s",
+        vec![
+            ("passes".into(), serial_m.passes_run as f64),
+            ("read_gb".into(), serial_m.io_read_bytes as f64 / 1e9),
+        ],
+    );
+
+    // -- interleaved: one session per tenant, all three at once ------------
+    let int_dir = std::env::temp_dir().join(format!("fm-mt-inter-{}", std::process::id()));
+    std::fs::create_dir_all(&int_dir).expect("bench data dir");
+    let root = root_engine(&int_dir);
+    let sessions: Vec<Session> = TENANTS
+        .iter()
+        .map(|_| Session::open(&root, session_config(&int_dir)).expect("session"))
+        .collect();
+    let t0 = Instant::now();
+    let mut inter_fps: Vec<Option<Vec<f64>>> = vec![None; TENANTS.len()];
+    std::thread::scope(|s| {
+        let handles: Vec<_> = TENANTS
+            .iter()
+            .zip(&sessions)
+            .map(|((_, f), sess)| {
+                let eng = Arc::clone(sess.engine());
+                s.spawn(move || f(&eng))
+            })
+            .collect();
+        for (slot, h) in inter_fps.iter_mut().zip(handles) {
+            *slot = Some(h.join().expect("tenant panicked"));
+        }
+    });
+    let inter_secs = t0.elapsed().as_secs_f64();
+    let tenant_ms: Vec<MetricsSnapshot> =
+        sessions.iter().map(|s| s.metrics().snapshot()).collect();
+
+    let mut cross_total = 0u64;
+    for ((name, _), m) in TENANTS.iter().zip(&tenant_ms) {
+        t.add_with(
+            format!("tenant {name}"),
+            0.0,
+            "s",
+            vec![
+                ("hits".into(), m.cache_hits as f64),
+                ("misses".into(), m.cache_misses as f64),
+                ("cross_evictions".into(), m.cache_cross_evictions as f64),
+                ("passes".into(), m.passes_run as f64),
+            ],
+        );
+        cross_total += m.cache_cross_evictions;
+    }
+    t.add_with(
+        "interleaved total",
+        inter_secs,
+        "s",
+        vec![
+            ("sessions".into(), sessions.len() as f64),
+            ("cross_evictions".into(), cross_total as f64),
+        ],
+    );
+    drop(sessions);
+    drop(root);
+    let _ = std::fs::remove_dir_all(&int_dir);
+
+    // -- acceptance ---------------------------------------------------------
+    let mut ok = true;
+    for (((name, _), a), b) in TENANTS.iter().zip(&serial_fps).zip(&inter_fps) {
+        let b = b.as_ref().expect("joined above");
+        let identical =
+            a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits());
+        println!(
+            "{name}: serialized vs interleaved {}",
+            if identical {
+                "PASS: bit-identical"
+            } else {
+                "FAIL: diverged"
+            }
+        );
+        report.add_check(format!("bit-identical: {name}"), identical);
+        ok &= identical;
+    }
+    let faster = inter_secs < serial_secs;
+    println!(
+        "aggregate: serialized {serial_secs:.3}s vs interleaved {inter_secs:.3}s ({})",
+        if faster { "PASS" } else { "FAIL" }
+    );
+    report.add_check("aggregate-faster-than-serialized", faster);
+    let bounded = cross_total == 0;
+    println!(
+        "cross-tenant evictions: {cross_total} ({})",
+        if bounded { "PASS" } else { "FAIL" }
+    );
+    report.add_check("bounded-cross-tenant-evictions", bounded);
+    ok &= faster && bounded;
+
+    t.print();
+    report.add_table(&t);
+    report
+        .write(std::path::Path::new(&json_dir))
+        .expect("bench json");
+    assert!(
+        ok,
+        "interleaved tenants must be faster in aggregate, bit-identical \
+         per tenant, and isolated (no cross-tenant evictions)"
+    );
+}

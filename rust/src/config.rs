@@ -8,6 +8,26 @@ use std::path::PathBuf;
 
 use crate::storage::FaultConfig;
 
+/// One truthy-value grammar for every boolean `FLASHR_*` env knob:
+/// `1`/`true`/`yes`/`on` (case-insensitive) are true; `0`/`false`/`no`/
+/// `off` and the empty string are false; anything else is false too (a
+/// typo must fail safe, not silently flip a default). Historically
+/// `FLASHR_NO_CROSS_PASS_OPT` was presence-tested (`is_none()`), so
+/// `FLASHR_NO_CROSS_PASS_OPT=0` *disabled* the optimizer while
+/// `FLASHR_TEST_EM=0` did nothing — every knob now parses through here.
+fn truthy(v: &str) -> bool {
+    matches!(
+        v.trim().to_ascii_lowercase().as_str(),
+        "1" | "true" | "yes" | "on"
+    )
+}
+
+/// Read a boolean env knob: `None` when unset, `Some(truthy(value))`
+/// otherwise (non-UTF-8 values read as false).
+pub fn env_flag(name: &str) -> Option<bool> {
+    std::env::var_os(name).map(|v| truthy(&v.to_string_lossy()))
+}
+
 /// Where materialized matrices live.
 #[derive(Clone, Debug, PartialEq)]
 pub enum StorageKind {
@@ -163,6 +183,19 @@ pub struct EngineConfig {
     /// the SSD throttle; gated ≤5% by `benches/fault_overhead.rs`) —
     /// off only for benches isolating raw I/O cost.
     pub io_checksums: bool,
+    /// Fair-share residency budget in bytes for this engine's matrices
+    /// when several engine **sessions** share one partition cache
+    /// ([`crate::fmr::Session`]): a tenant within its budget is shielded
+    /// from other tenants' eviction pressure; one over it becomes a
+    /// preferred victim. 0 = dynamic (an equal split of the shared
+    /// cache's capacity across registered sessions). Ignored by a
+    /// single-tenant engine.
+    pub session_mem_bytes: usize,
+    /// Cap on passes executing concurrently against this engine's
+    /// partition cache (admission control for the multi-tenant serving
+    /// path): the pass that would exceed it blocks until a slot frees.
+    /// 0 = unlimited. Derived sessions share the root engine's cap.
+    pub max_concurrent_passes: usize,
 }
 
 impl Default for EngineConfig {
@@ -194,7 +227,7 @@ impl Default for EngineConfig {
             prefetch_depth: 2,
             writeback: true,
             writeback_queue_bytes: 32 << 20,
-            cross_pass_opt: std::env::var_os("FLASHR_NO_CROSS_PASS_OPT").is_none(),
+            cross_pass_opt: !env_flag("FLASHR_NO_CROSS_PASS_OPT").unwrap_or(false),
             opt_materialize_threshold: 16 << 20,
             fault_injection: std::env::var("FLASHR_FAULTS")
                 .ok()
@@ -207,6 +240,8 @@ impl Default for EngineConfig {
                 }),
             io_retry_limit: 3,
             io_checksums: true,
+            session_mem_bytes: 0,
+            max_concurrent_passes: 0,
         }
     }
 }
@@ -353,14 +388,46 @@ mod tests {
     #[test]
     fn cross_pass_knob_defaults() {
         let c = EngineConfig::default();
-        // default follows the CI ablation env hook; absent the hook the
-        // optimizer is on, and the threshold leaves headroom for the
-        // small shared intermediates iterative algorithms produce
-        let env_off = std::env::var_os("FLASHR_NO_CROSS_PASS_OPT").is_some();
+        // default follows the CI ablation env hook; absent the hook (or
+        // with a falsy value like "0") the optimizer is on, and the
+        // threshold leaves headroom for the small shared intermediates
+        // iterative algorithms produce
+        let env_off = env_flag("FLASHR_NO_CROSS_PASS_OPT").unwrap_or(false);
         assert_eq!(c.cross_pass_opt, !env_off);
         assert!(c.opt_materialize_threshold > 0);
         // the eager baseline never batches, so it has nothing to plan
         assert!(!EngineConfig::mllib_like().cross_pass_opt);
+    }
+
+    #[test]
+    fn truthy_grammar_is_uniform() {
+        // the one parser every FLASHR_* boolean knob goes through:
+        // FLASHR_NO_CROSS_PASS_OPT=0 must no longer disable the
+        // optimizer, and FLASHR_TEST_EM=true must now enable EM forcing
+        for v in ["1", "true", "TRUE", "yes", "on", " 1 ", "On"] {
+            assert!(truthy(v), "{v:?} must parse as true");
+        }
+        for v in ["0", "", "false", "no", "off", "OFF", " ", "2", "bogus"] {
+            assert!(!truthy(v), "{v:?} must parse as false");
+        }
+    }
+
+    #[test]
+    fn env_flag_distinguishes_unset_from_falsy() {
+        // a name no test sets: unset reads as None, not Some(false) —
+        // callers choose their own default via unwrap_or
+        assert_eq!(env_flag("FLASHR_TEST_KNOB_THAT_IS_NEVER_SET"), None);
+    }
+
+    #[test]
+    fn session_knob_defaults() {
+        let c = EngineConfig::default();
+        // multi-tenant knobs default to "off": dynamic fair share and
+        // unlimited concurrent passes, so single-tenant behavior (and
+        // every existing test) is unchanged
+        assert_eq!(c.session_mem_bytes, 0);
+        assert_eq!(c.max_concurrent_passes, 0);
+        c.validate().unwrap();
     }
 
     #[test]

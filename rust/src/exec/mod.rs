@@ -67,6 +67,11 @@ pub struct ExecCtx<'a> {
     /// Engine-wide write-through partition cache (§III-B3); `None` when
     /// `em_cache_bytes == 0` (the ablation's cache-off configuration).
     pub cache: Option<Arc<PartitionCache>>,
+    /// Cache tenant id of the submitting session (0 = the root engine).
+    /// Materialized cache-resident targets are tagged with this owner so
+    /// fair-share eviction and per-session hit accounting can attribute
+    /// them to the right tenant.
+    pub session: u64,
 }
 
 /// Materialize `targets` (virtual matrices) and `sinks` in ONE streaming
@@ -184,8 +189,22 @@ pub fn run_pass_opts(
                 b
             }
         };
+        // Tag cache-resident targets with the submitting tenant so the
+        // fair-share eviction policy charges their bytes to this session.
+        if ctx.session != 0 {
+            if let (Some(c), Some(id)) = (&ctx.cache, b.cache_matrix_id()) {
+                c.set_matrix_owner(id, ctx.session);
+            }
+        }
         builders.push(b);
     }
+
+    // ---- per-pass read-ahead generation (§III-B3): register this pass
+    // with the cache so its prefetches stay pinned until *this* pass ends,
+    // independent of any concurrent tenant's pass. `begin_pass` is also
+    // the `max_concurrent_passes` admission gate.
+    let pass_guard = ctx.cache.as_ref().map(|c| c.begin_pass());
+    let pass_id = pass_guard.as_ref().map_or(0, |g| g.id());
 
     // ---- parallel pass: locality-aware range scheduling (§III-F)
     let threads = ctx.config.threads.max(1).min(n_parts.max(1));
@@ -259,6 +278,7 @@ pub fn run_pass_opts(
                                 &mut cache,
                                 &window,
                                 &mut spool,
+                                pass_id,
                             )
                         }))
                         .unwrap_or_else(|p| {
@@ -295,15 +315,13 @@ pub fn run_pass_opts(
         .sched_steals_remote
         .fetch_add(sched.steals_remote(), Ordering::Relaxed);
 
-    // Retire this pass's read-ahead generation: leftover queued prefetch
-    // requests are dropped (in-flight ones land unpinned), and any
+    // Retire this pass's read-ahead generation: dropping the pass guard
+    // removes the pass id from the cache's active set, so leftover queued
+    // prefetch requests are dropped (in-flight ones land unpinned), and any
     // prefetched partition nobody consumed — an aborted pass, a stolen
-    // unit's wasted hint — loses its pin. Orphaned read-aheads must not
-    // outlive the pass that issued them, or they would shrink the cache
-    // until the matrix is next scanned.
-    if let Some(c) = &ctx.cache {
-        c.advance_prefetch_epoch();
-    }
+    // unit's wasted hint — loses its pin. Only THIS pass's generation is
+    // retired: a concurrent tenant's pass keeps its read-aheads pinned.
+    drop(pass_guard);
     for s in &prog.sources {
         match &**s {
             MatrixData::Dense(d) => d.release_prefetch_pins(),
@@ -406,11 +424,12 @@ fn source_partition_bytes(s: &MatrixData, i: usize) -> Result<Arc<Vec<u8>>> {
     }
 }
 
-/// Queue the async read-ahead of source partition `i`.
-fn source_prefetch(s: &MatrixData, i: usize) {
+/// Queue the async read-ahead of source partition `i`, stamped with the
+/// issuing pass's id so only that pass's end retires it.
+fn source_prefetch(s: &MatrixData, i: usize, pass: u64) {
     match s {
-        MatrixData::Dense(d) => d.prefetch_partition(i),
-        MatrixData::Sparse(sp) => sp.prefetch_partition(i),
+        MatrixData::Dense(d) => d.prefetch_partition(i, pass),
+        MatrixData::Sparse(sp) => sp.prefetch_partition(i, pass),
         _ => {}
     }
 }
@@ -465,6 +484,7 @@ fn process_partition(
     cache: &mut SourceCache,
     window: &PrefetchWindow,
     spool: &mut StripPool,
+    pass: u64,
 ) -> Result<()> {
     let (g0, g1) = pass_parts.part_rows(pi);
     let prows = (g1 - g0) as usize;
@@ -489,7 +509,7 @@ fn process_partition(
             // too, without double reads.
             let next_row0 = (spi as u64 + 1) * parts.io_rows;
             if window.owns(next_row0) {
-                source_prefetch(s, spi + 1);
+                source_prefetch(s, spi + 1, pass);
             }
         }
         src_meta.push(((s1 - s0) as usize, (g0 - s0) as usize));

@@ -34,6 +34,10 @@ pub struct Engine {
     /// counters, materialize-vs-recompute decisions, the memoized shared
     /// intermediates, and the shape-keyed plan cache. See [`crate::plan`].
     planner: Mutex<Planner>,
+    /// Cache tenant id of this engine: 0 for a root engine (the cache's
+    /// implicit default tenant), non-zero for a [`Engine::session`]
+    /// engine registered with a shared parent cache. Unregistered on drop.
+    cache_session: u64,
 }
 
 impl Engine {
@@ -64,6 +68,9 @@ impl Engine {
         } else {
             None
         };
+        if let Some(c) = &cache {
+            c.set_max_concurrent_passes(config.max_concurrent_passes);
+        }
         Ok(Arc::new(Engine {
             config,
             pool,
@@ -74,7 +81,55 @@ impl Engine {
             xla: OnceLock::new(),
             pass_lock: Mutex::new(()),
             planner: Mutex::new(Planner::new()),
+            cache_session: 0,
         }))
+    }
+
+    /// Derive a *session engine* sharing this engine's storage model and
+    /// write-through partition cache, but carrying its own configuration,
+    /// metrics, chunk pool, plan cache and VUDF registry — one tenant of
+    /// the multi-tenant serving surface. The session is registered with
+    /// the shared cache (`config.session_mem_bytes` is its fair-share
+    /// eviction budget; 0 = an equal split of the cache) and unregistered
+    /// when the returned engine drops. Cache-resident matrices the
+    /// session materializes are charged to its budget, and its cache
+    /// hits/misses land in its own [`Metrics`].
+    ///
+    /// Cache-level knobs (`em_cache_bytes`, `prefetch_depth`,
+    /// `writeback*`, throttle/fault policy) stay the parent's: sessions
+    /// share one §III-B3 hierarchy by construction.
+    pub fn session(parent: &Arc<Engine>, mut config: EngineConfig) -> Result<Arc<Engine>> {
+        // the shared hierarchy is the parent's; keep the session's copy
+        // of these knobs truthful so `ctx()` decisions match it
+        config.em_cache_bytes = parent.config.em_cache_bytes;
+        config.prefetch_depth = parent.config.prefetch_depth;
+        config.writeback = parent.config.writeback;
+        config.writeback_queue_bytes = parent.config.writeback_queue_bytes;
+        config.validate()?;
+        let metrics = Arc::new(Metrics::new());
+        let pool = ChunkPool::new(config.chunk_bytes, config.recycle_chunks, Arc::clone(&metrics));
+        let cache_session = parent
+            .cache
+            .as_ref()
+            .map(|c| c.register_session(Arc::clone(&metrics), config.session_mem_bytes))
+            .unwrap_or(0);
+        Ok(Arc::new(Engine {
+            config,
+            pool,
+            metrics,
+            ssd: Arc::clone(&parent.ssd),
+            cache: parent.cache.clone(),
+            registry: VudfRegistry::new(),
+            xla: OnceLock::new(),
+            pass_lock: Mutex::new(()),
+            planner: Mutex::new(Planner::new()),
+            cache_session,
+        }))
+    }
+
+    /// Cache tenant id of this engine (0 = root tenant).
+    pub fn session_id(&self) -> u64 {
+        self.cache_session
     }
 
     /// Default in-memory engine.
@@ -90,6 +145,7 @@ impl Engine {
             metrics: &self.metrics,
             ssd: &self.ssd,
             cache: self.cache.clone(),
+            session: self.cache_session,
         }
     }
 
@@ -187,6 +243,16 @@ impl Engine {
     /// in `passes_run` / `io_read_bytes`.
     pub fn plan_batch(&self, requests: &[PlanRequest]) -> Result<Vec<PlanOutput>> {
         plan::execute_batch(&self.ctx(), &self.planner, requests, false)
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        if self.cache_session != 0 {
+            if let Some(c) = &self.cache {
+                c.unregister_session(self.cache_session);
+            }
+        }
     }
 }
 

@@ -17,6 +17,7 @@
 //!   the pool (the paper's GC).
 
 pub mod engine;
+pub mod session;
 
 use std::sync::Arc;
 
@@ -28,6 +29,7 @@ use crate::matrix::{DenseBuilder, HostMat, Matrix, MatrixData, Partitioning};
 use crate::vudf::{AggOp, BinOp, Buf, UnOp};
 
 pub use engine::Engine;
+pub use session::Session;
 
 /// A FlashMatrix matrix handle bound to an engine.
 #[derive(Clone)]

@@ -1,0 +1,118 @@
+//! Multi-tenant sessions: many independent callers sharing one engine's
+//! §III-B3 memory hierarchy.
+//!
+//! A [`Session`] is a tenant of a root [`Engine`]: it carries its own
+//! `EngineConfig` (threads, optimizer toggles, laziness policy), its own
+//! [`Metrics`], chunk pool and plan cache, but shares the parent's
+//! simulated SSD and write-through [`crate::matrix::PartitionCache`].
+//! The cache registers the session as a tenant so that
+//!
+//! * cache-resident matrices the session materializes are charged to its
+//!   fair-share budget (`EngineConfig::session_mem_bytes`, or an equal
+//!   split of the cache when 0), and one tenant's streaming scan evicts
+//!   its own LRU entries before touching another tenant's working set;
+//! * its hits/misses/evictions land in its own `Metrics`, so per-tenant
+//!   hit rates are observable;
+//! * its share of the write-back dirty queue is bounded, so a bursting
+//!   tenant blocks on its own quota instead of starving the others.
+//!
+//! Concurrent passes from different sessions are safe: each pass holds
+//! its own prefetch generation ([`crate::matrix::cache::PassGuard`]),
+//! and `EngineConfig::max_concurrent_passes` on the root engine bounds
+//! how many run at once. Dropping the `Session` unregisters the tenant
+//! and releases its cache accounting.
+
+use std::sync::Arc;
+
+use crate::config::EngineConfig;
+use crate::error::Result;
+use crate::metrics::Metrics;
+
+use super::Engine;
+
+/// One tenant of a shared engine. Cloneable handle; the underlying
+/// session engine (and its cache registration) lives until the last
+/// clone drops.
+#[derive(Clone)]
+pub struct Session {
+    eng: Arc<Engine>,
+}
+
+impl Session {
+    /// Open a session against `parent`, sharing its storage and cache.
+    /// `config` is this tenant's private configuration; cache-level knobs
+    /// are inherited from the parent (see [`Engine::session`]).
+    pub fn open(parent: &Arc<Engine>, config: EngineConfig) -> Result<Session> {
+        Ok(Session {
+            eng: Engine::session(parent, config)?,
+        })
+    }
+
+    /// The session's engine: pass it anywhere an `Arc<Engine>` goes
+    /// (`FmMatrix` constructors, `datasets::*`, `algs::*`).
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.eng
+    }
+
+    /// Cache tenant id (0 means the parent had no partition cache and
+    /// the session runs unaccounted).
+    pub fn id(&self) -> u64 {
+        self.eng.session_id()
+    }
+
+    /// This tenant's private metrics.
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.eng.metrics
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtype::Scalar;
+    use crate::fmr::FmMatrix;
+    use crate::testutil::{out_of_core_config, TempDir};
+
+    #[test]
+    fn sessions_share_cache_with_private_metrics() {
+        let dir = TempDir::new("session-shared");
+        let root = Engine::new(out_of_core_config(dir.path())).unwrap();
+        let s1 = Session::open(&root, out_of_core_config(dir.path())).unwrap();
+        let s2 = Session::open(&root, out_of_core_config(dir.path())).unwrap();
+        assert_ne!(s1.id(), 0);
+        assert_ne!(s1.id(), s2.id());
+        assert_eq!(root.cache.as_ref().unwrap().session_count(), 2);
+
+        let a = FmMatrix::fill(s1.engine(), Scalar::F64(2.0), 40_000, 4);
+        let b = FmMatrix::fill(s2.engine(), Scalar::F64(3.0), 40_000, 4);
+        let sa = a.materialize().unwrap().sum().unwrap();
+        let sb = b.materialize().unwrap().sum().unwrap();
+        assert_eq!(sa, 2.0 * 40_000.0 * 4.0);
+        assert_eq!(sb, 3.0 * 40_000.0 * 4.0);
+
+        // each tenant's pass activity lands in its own metrics, not the
+        // root's pass counters
+        assert!(s1.metrics().snapshot().passes_run > 0);
+        assert!(s2.metrics().snapshot().passes_run > 0);
+
+        drop(s1);
+        drop(s2);
+        assert_eq!(root.cache.as_ref().unwrap().session_count(), 0);
+    }
+
+    #[test]
+    fn session_results_match_root_results() {
+        let dir = TempDir::new("session-parity");
+        let root = Engine::new(out_of_core_config(dir.path())).unwrap();
+        let via_root = {
+            let x = FmMatrix::runif_matrix(&root, 30_000, 4, -1.0, 1.0, 11);
+            x.sq().unwrap().sum().unwrap()
+        };
+        let s = Session::open(&root, out_of_core_config(dir.path())).unwrap();
+        let via_session = {
+            let x = FmMatrix::runif_matrix(s.engine(), 30_000, 4, -1.0, 1.0, 11);
+            x.sq().unwrap().sum().unwrap()
+        };
+        assert_eq!(via_root.to_bits(), via_session.to_bits());
+    }
+}

@@ -57,5 +57,6 @@ pub(crate) mod xla_stub;
 pub use config::{EngineConfig, StorageKind};
 pub use error::{FmError, Result};
 pub use fmr::engine::Engine;
-pub use fmr::FmMatrix;
+pub use fmr::{FmMatrix, Session};
+pub use runtime::jobs::{JobQueue, Ticket};
 pub mod util;

@@ -43,6 +43,18 @@
 //!   reader holds a finished matrix before its creating pass's flush
 //!   barrier completed.
 //!
+//! With several engine **sessions** sharing one cache (multi-tenant
+//! serving), eviction is fair-share: each registered tenant owns its
+//! matrices' partitions ([`PartitionCache::set_matrix_owner`]) and a
+//! tenant within its byte share is shielded from another tenant's
+//! eviction pressure (cross-tenant evictions are charged to the victim's
+//! own [`Metrics`]). Read-ahead requests are keyed by **pass id**
+//! ([`PartitionCache::begin_pass`]), never a cache-global generation, so
+//! one pass ending cannot retire a concurrent pass's prefetches; the
+//! write-back dirty bound is split per tenant the same way; and
+//! [`PartitionCache::set_max_concurrent_passes`] gates how many passes
+//! may execute at once.
+//!
 //! Capacity comes from [`crate::config::EngineConfig::em_cache_bytes`]
 //! (0 disables the cache — the Fig 11-style ablation knob, exercised by
 //! `benches/cache_ablation.rs`); the read-ahead queue depth from
@@ -58,7 +70,7 @@
 
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, SyncSender};
 use std::sync::{Arc, Condvar, Mutex};
 
@@ -78,6 +90,18 @@ struct Entry {
     unpin_on_hit: bool,
 }
 
+/// One registered tenant of a shared cache (an engine session).
+struct SessionSlot {
+    /// Fair-share residency budget in bytes; 0 = dynamic (an equal split
+    /// of the cache capacity across registered tenants).
+    share: usize,
+    /// The tenant's own metrics: hits/misses/cross-evictions of its
+    /// matrices land here, not on the cache-owning engine's counters.
+    metrics: Arc<Metrics>,
+    /// Resident bytes currently owned by this tenant.
+    resident: usize,
+}
+
 struct Inner {
     map: HashMap<(u64, usize), Entry>,
     bytes_used: usize,
@@ -87,6 +111,49 @@ struct Inner {
     /// after its matrix was dropped would admit a pinned entry nothing
     /// can ever consume or evict.
     live: std::collections::HashSet<u64>,
+    /// Passes currently executing (between [`PartitionCache::begin_pass`]
+    /// and the [`PassGuard`] drop). A prefetch completion whose issuing
+    /// pass is no longer here is stale — admitted unpinned.
+    active_passes: HashSet<u64>,
+    /// Matrix id -> owning session. Absent = the root tenant (id 0).
+    owner: HashMap<u64, u64>,
+    /// Registered tenants sharing this cache, by session id.
+    sessions: HashMap<u64, SessionSlot>,
+}
+
+impl Inner {
+    fn session_of(&self, matrix_id: u64) -> u64 {
+        self.owner.get(&matrix_id).copied().unwrap_or(0)
+    }
+
+    fn add_resident(&mut self, matrix_id: u64, len: usize) {
+        let s = self.session_of(matrix_id);
+        if let Some(slot) = self.sessions.get_mut(&s) {
+            slot.resident += len;
+        }
+    }
+
+    fn sub_resident(&mut self, matrix_id: u64, len: usize) {
+        let s = self.session_of(matrix_id);
+        if let Some(slot) = self.sessions.get_mut(&s) {
+            slot.resident = slot.resident.saturating_sub(len);
+        }
+    }
+
+    fn resident_of(&self, session: u64) -> usize {
+        self.sessions.get(&session).map_or(0, |s| s.resident)
+    }
+
+    /// A tenant's fair-share budget: its configured share, or an equal
+    /// split of capacity when unset. Unregistered tenants get 0, so
+    /// their entries are always preferred victims under contention.
+    fn share_of(&self, session: u64, capacity: usize) -> usize {
+        match self.sessions.get(&session) {
+            Some(slot) if slot.share > 0 => slot.share,
+            Some(_) => capacity / self.sessions.len().max(1),
+            None => 0,
+        }
+    }
 }
 
 /// An asynchronous read request executed by the prefetch thread.
@@ -97,10 +164,11 @@ struct PrefetchReq {
     part: usize,
     off: u64,
     len: usize,
-    /// Read-ahead generation at issue time; a request whose generation
-    /// has been retired (its pass ended) is stale — dropped before the
-    /// read, or admitted unpinned after it.
-    epoch: u64,
+    /// Id of the pass that issued the read-ahead; a request whose pass
+    /// has ended is stale — dropped before the read, or admitted
+    /// unpinned after it. Keyed per pass (not cache-global) so one pass
+    /// ending cannot retire a concurrent pass's read-aheads.
+    pass: u64,
 }
 
 /// One queued asynchronous partition write. Holding the `Arc<FileStore>`
@@ -110,6 +178,8 @@ struct WbEntry {
     store: Arc<FileStore>,
     off: u64,
     bytes: Arc<Vec<u8>>,
+    /// Tenant that enqueued the write (for the per-tenant dirty budget).
+    session: u64,
 }
 
 /// Dirty-partition state shared between enqueuers, the flush/discard
@@ -123,6 +193,10 @@ struct WbState {
     pending: HashMap<(u64, usize), WbEntry>,
     /// Bytes held by queued + in-flight entries (the bounded dirty set).
     bytes: usize,
+    /// Dirty bytes per tenant: with >= 2 registered sessions each tenant
+    /// is bounded to its split of `capacity`, so one tenant's write
+    /// burst cannot monopolize the shared queue (admission control).
+    session_bytes: HashMap<u64, usize>,
     /// Key the writer thread is writing right now, if any.
     inflight: Option<(u64, usize)>,
     /// First write error per matrix id since that matrix's last flush.
@@ -185,6 +259,7 @@ impl WriteBack {
                 ))
             });
             let len = entry.bytes.len();
+            let session = entry.session;
             // release the entry (and its FileStore Arc) BEFORE waking the
             // barriers: when a flush/discard observes inflight == None,
             // the writer must hold no reference to the matrix's backing
@@ -193,6 +268,9 @@ impl WriteBack {
             let mut st = wb.state.lock_recover();
             st.inflight = None;
             st.bytes -= len;
+            if let Some(b) = st.session_bytes.get_mut(&session) {
+                *b = b.saturating_sub(len);
+            }
             if let Err(e) = res {
                 st.errs.entry(key.0).or_insert(e);
             }
@@ -217,9 +295,16 @@ pub struct PartitionCache {
     /// issuing its own file read.
     inflight: Mutex<HashSet<(u64, usize)>>,
     inflight_cv: Condvar,
-    /// Read-ahead generation: bumped when a pass ends so its leftover
-    /// prefetch requests cannot pin entries no consumer will release.
-    epoch: AtomicU64,
+    /// Pass-id allocator for [`begin_pass`](Self::begin_pass); starts at
+    /// 1 so 0 can mean "no pass" (a prefetch issued outside any pass is
+    /// immediately stale and lands unpinned).
+    next_pass_id: AtomicU64,
+    /// Wakes passes blocked on the `max_passes` admission gate.
+    pass_cv: Condvar,
+    /// Cap on concurrently executing passes (0 = unlimited).
+    max_passes: AtomicUsize,
+    /// Session-id allocator; starts at 1 (0 = the root tenant).
+    next_session_id: AtomicU64,
     /// Asynchronous write-back pipeline; `None` = synchronous
     /// write-through (the `writeback` knob off, or queue sized 0).
     wb: Option<Arc<WriteBack>>,
@@ -262,6 +347,7 @@ impl PartitionCache {
                     queue: VecDeque::new(),
                     pending: HashMap::new(),
                     bytes: 0,
+                    session_bytes: HashMap::new(),
                     inflight: None,
                     errs: HashMap::new(),
                     shutdown: false,
@@ -290,6 +376,9 @@ impl PartitionCache {
                 bytes_used: 0,
                 clock: 0,
                 live: std::collections::HashSet::new(),
+                active_passes: HashSet::new(),
+                owner: HashMap::new(),
+                sessions: HashMap::new(),
             }),
             capacity,
             metrics,
@@ -297,7 +386,10 @@ impl PartitionCache {
             prefetch_tx: tx,
             inflight: Mutex::new(HashSet::new()),
             inflight_cv: Condvar::new(),
-            epoch: AtomicU64::new(0),
+            next_pass_id: AtomicU64::new(1),
+            pass_cv: Condvar::new(),
+            max_passes: AtomicUsize::new(0),
+            next_session_id: AtomicU64::new(1),
             wb,
         });
         if let Some(rx) = rx {
@@ -315,7 +407,7 @@ impl PartitionCache {
                         let _ = catch_unwind(AssertUnwindSafe(|| {
                             // stale request: the pass that issued it is over,
                             // nobody will consume (and unpin) the read-ahead
-                            if req.epoch != req.cache.epoch.load(Ordering::Relaxed) {
+                            if !req.cache.pass_active(req.pass) {
                                 return;
                             }
                             // the consumer may have read the partition while
@@ -343,7 +435,7 @@ impl PartitionCache {
                             let mut buf = vec![0u8; req.len];
                             if req.store.read_at(req.off, &mut buf).is_ok() {
                                 req.cache
-                                    .insert_prefetched(req.matrix_id, req.part, buf, req.epoch);
+                                    .insert_prefetched(req.matrix_id, req.part, buf, req.pass);
                             }
                             drop(guard);
                         }));
@@ -528,12 +620,27 @@ impl PartitionCache {
             }
             None => None,
         };
+        // hits/misses are attributed to the matrix's owning tenant so
+        // per-session hit rates stay meaningful under interleaving (a
+        // single-tenant engine registers its own metrics, so this is the
+        // engine's counter as before); resolved under the lock, bumped
+        // after dropping it
+        let metrics = if count {
+            Some(
+                g.sessions
+                    .get(&g.session_of(matrix_id))
+                    .map(|slot| Arc::clone(&slot.metrics))
+                    .unwrap_or_else(|| Arc::clone(&self.metrics)),
+            )
+        } else {
+            None
+        };
         drop(g);
-        if count {
+        if let Some(m) = metrics {
             if found.is_some() {
-                self.metrics.cache_hits.fetch_add(1, Ordering::Relaxed);
+                m.cache_hits.fetch_add(1, Ordering::Relaxed);
             } else {
-                self.metrics.cache_misses.fetch_add(1, Ordering::Relaxed);
+                m.cache_misses.fetch_add(1, Ordering::Relaxed);
             }
         }
         found
@@ -559,12 +666,12 @@ impl PartitionCache {
     /// Prefetch insert: like [`insert`](Self::insert) but the entry holds
     /// one pin until its first hit, so eviction pressure cannot undo the
     /// read-ahead before its consumer arrives. If the consumer beat the
-    /// prefetch the existing entry is kept untouched. `epoch` is the
-    /// read-ahead generation at issue time: a completion from a retired
-    /// generation is admitted *unpinned* (the bytes are still useful, but
-    /// no consumer remains to release a pin).
-    fn insert_prefetched(&self, matrix_id: u64, part: usize, bytes: Vec<u8>, epoch: u64) {
-        self.insert_entry(matrix_id, part, Arc::new(bytes), Some(epoch));
+    /// prefetch the existing entry is kept untouched. `pass` is the id of
+    /// the pass that issued the read-ahead: a completion from a pass that
+    /// has since ended is admitted *unpinned* (the bytes are still
+    /// useful, but no consumer remains to release a pin).
+    fn insert_prefetched(&self, matrix_id: u64, part: usize, bytes: Vec<u8>, pass: u64) {
+        self.insert_entry(matrix_id, part, Arc::new(bytes), Some(pass));
     }
 
     fn insert_entry(
@@ -572,7 +679,7 @@ impl PartitionCache {
         matrix_id: u64,
         part: usize,
         bytes: Arc<Vec<u8>>,
-        prefetched_epoch: Option<u64>,
+        prefetched_pass: Option<u64>,
     ) {
         let len = bytes.len();
         if len > self.capacity {
@@ -582,15 +689,16 @@ impl PartitionCache {
         let inner = &mut *g;
         inner.clock += 1;
         let stamp = inner.clock;
-        // epoch checked under the inner lock: the pass-end sweep
-        // (advance_prefetch_epoch then release_prefetch_pins) also takes
-        // it, so a late completion can never re-pin after the sweep
-        let prefetched = match prefetched_epoch {
-            Some(e) => {
+        // pass liveness checked under the inner lock: the pass-end sweep
+        // (PassGuard drop, then release_prefetch_pins) also takes it, so
+        // a late completion can never re-pin after the sweep — and only
+        // the issuing pass's own end retires it, never a concurrent one
+        let prefetched = match prefetched_pass {
+            Some(p) => {
                 if !inner.live.contains(&matrix_id) {
                     return; // matrix dropped while the read-ahead was in flight
                 }
-                e == self.epoch.load(Ordering::Relaxed)
+                inner.active_passes.contains(&p)
             }
             None => false,
         };
@@ -605,23 +713,61 @@ impl PartitionCache {
                 e.unpin_on_hit = false;
                 e.pins = e.pins.saturating_sub(1);
             }
-            inner.bytes_used = inner.bytes_used - e.bytes.len() + len;
+            let old = e.bytes.len();
             e.bytes = bytes;
             e.stamp = stamp;
+            inner.bytes_used = inner.bytes_used - old + len;
+            inner.sub_resident(matrix_id, old);
+            inner.add_resident(matrix_id, len);
             return;
         }
+        // fair-share victim selection only kicks in with >= 2 registered
+        // tenants; a single-engine cache keeps plain global LRU
+        let fair = inner.sessions.len() >= 2;
+        let inserter = inner.session_of(matrix_id);
         let mut evicted = 0u64;
+        let mut cross_victims: Vec<u64> = Vec::new();
         while inner.bytes_used + len > self.capacity {
-            let victim = inner
-                .map
-                .iter()
-                .filter(|(_, e)| e.pins == 0)
-                .min_by_key(|(_, e)| e.stamp)
-                .map(|(k, _)| *k);
+            let global_lru = |inner: &Inner| {
+                inner
+                    .map
+                    .iter()
+                    .filter(|(_, e)| e.pins == 0)
+                    .min_by_key(|(_, e)| e.stamp)
+                    .map(|(k, _)| *k)
+            };
+            let victim = if fair {
+                // prefer victims the inserting tenant is entitled to
+                // displace — its own entries, or a tenant over its byte
+                // share — so one tenant's streaming scan cannot flush
+                // another tenant's in-budget working set. If every
+                // tenant is within budget, fall back to global LRU so
+                // admission never fails while unpinned bytes exist.
+                inner
+                    .map
+                    .iter()
+                    .filter(|(_, e)| e.pins == 0)
+                    .filter(|(k, _)| {
+                        let vs = inner.session_of(k.0);
+                        vs == inserter
+                            || inner.resident_of(vs) > inner.share_of(vs, self.capacity)
+                    })
+                    .min_by_key(|(_, e)| e.stamp)
+                    .map(|(k, _)| *k)
+                    .or_else(|| global_lru(inner))
+            } else {
+                global_lru(inner)
+            };
             match victim {
                 Some(k) => {
                     if let Some(e) = inner.map.remove(&k) {
-                        inner.bytes_used -= e.bytes.len();
+                        let vlen = e.bytes.len();
+                        inner.bytes_used -= vlen;
+                        inner.sub_resident(k.0, vlen);
+                        let vs = inner.session_of(k.0);
+                        if fair && vs != inserter {
+                            cross_victims.push(vs);
+                        }
                     }
                     evicted += 1;
                 }
@@ -637,6 +783,7 @@ impl PartitionCache {
             }
         }
         inner.bytes_used += len;
+        inner.add_resident(matrix_id, len);
         inner.map.insert(
             (matrix_id, part),
             Entry {
@@ -646,11 +793,26 @@ impl PartitionCache {
                 unpin_on_hit: prefetched,
             },
         );
+        // cross-tenant evictions are charged to the *victim's* metrics —
+        // that is the tenant whose working set shrank (isolation signal)
+        let cross_metrics: Vec<Arc<Metrics>> = cross_victims
+            .iter()
+            .map(|s| {
+                inner
+                    .sessions
+                    .get(s)
+                    .map(|slot| Arc::clone(&slot.metrics))
+                    .unwrap_or_else(|| Arc::clone(&self.metrics))
+            })
+            .collect();
         drop(g);
         if evicted > 0 {
             self.metrics
                 .cache_evictions
                 .fetch_add(evicted, Ordering::Relaxed);
+        }
+        for m in cross_metrics {
+            m.cache_cross_evictions.fetch_add(1, Ordering::Relaxed);
         }
     }
 
@@ -677,14 +839,121 @@ impl PartitionCache {
         }
     }
 
-    /// Retire the current read-ahead generation: queued prefetch requests
-    /// issued before this call are dropped at dequeue, and in-flight ones
-    /// land unpinned. Called at every pass end (success or abort) so a
-    /// pass's leftover read-aheads cannot pin entries no consumer will
-    /// ever release. Concurrent passes on the same engine lose at most
-    /// their queued read-aheads (their demand reads are unaffected).
-    pub fn advance_prefetch_epoch(&self) {
-        self.epoch.fetch_add(1, Ordering::Relaxed);
+    /// Begin a pass: allocate the id that keys its read-ahead requests
+    /// and, when [`set_max_concurrent_passes`] is set, wait for an
+    /// execution slot (admission control for multi-tenant serving). The
+    /// returned guard retires the pass on drop — success or abort — so
+    /// its leftover prefetch requests are dropped at dequeue and
+    /// in-flight ones land unpinned. Because retirement is keyed per
+    /// pass id, one pass ending can never invalidate a concurrent
+    /// pass's queued read-aheads or drop its prefetch pins (the old
+    /// cache-global epoch did exactly that).
+    ///
+    /// [`set_max_concurrent_passes`]: Self::set_max_concurrent_passes
+    pub fn begin_pass(self: &Arc<Self>) -> PassGuard {
+        let id = self.next_pass_id.fetch_add(1, Ordering::Relaxed);
+        let mut g = self.inner.lock_recover();
+        loop {
+            let max = self.max_passes.load(Ordering::Relaxed);
+            if max == 0 || g.active_passes.len() < max {
+                break;
+            }
+            g = wait_recover(&self.pass_cv, g);
+        }
+        g.active_passes.insert(id);
+        drop(g);
+        PassGuard {
+            cache: Arc::clone(self),
+            id,
+        }
+    }
+
+    /// Whether a pass is still executing (its read-aheads may still pin).
+    fn pass_active(&self, pass: u64) -> bool {
+        self.inner.lock_recover().active_passes.contains(&pass)
+    }
+
+    fn end_pass(&self, id: u64) {
+        self.inner.lock_recover().active_passes.remove(&id);
+        self.pass_cv.notify_all();
+    }
+
+    /// Cap on concurrently executing passes (0 = unlimited):
+    /// [`begin_pass`](Self::begin_pass) blocks past the cap. From
+    /// [`crate::config::EngineConfig::max_concurrent_passes`].
+    pub fn set_max_concurrent_passes(&self, max: usize) {
+        self.max_passes.store(max, Ordering::Relaxed);
+        self.pass_cv.notify_all();
+    }
+
+    // -- multi-tenant sessions ----------------------------------------------
+
+    /// Register a tenant: cache hits/misses/cross-evictions of its
+    /// matrices are attributed to `metrics`, and `share_bytes` (0 = an
+    /// equal split of capacity) bounds how many resident bytes it may
+    /// hold before its entries become preferred eviction victims.
+    /// Fair-share victim selection activates only once >= 2 tenants are
+    /// registered, so a single-engine cache behaves exactly as before.
+    pub fn register_session(&self, metrics: Arc<Metrics>, share_bytes: usize) -> u64 {
+        let id = self.next_session_id.fetch_add(1, Ordering::Relaxed);
+        self.inner.lock_recover().sessions.insert(
+            id,
+            SessionSlot {
+                share: share_bytes,
+                metrics,
+                resident: 0,
+            },
+        );
+        id
+    }
+
+    /// Drop a tenant registration. Its matrices fall back to the root
+    /// tenant (id 0): still resident, but preferred victims from now on.
+    pub fn unregister_session(&self, session: u64) {
+        let mut g = self.inner.lock_recover();
+        g.sessions.remove(&session);
+        g.owner.retain(|_, s| *s != session);
+        drop(g);
+        // one fewer tenant widens the per-tenant dirty split and may
+        // relax the fair-share picture; wake anyone blocked on either
+        if let Some(wb) = &self.wb {
+            wb.done_cv.notify_all();
+        }
+        self.pass_cv.notify_all();
+    }
+
+    /// Attribute a matrix (its residency, hits/misses and dirty bytes)
+    /// to a tenant. Already-resident bytes move between ledgers.
+    pub fn set_matrix_owner(&self, matrix_id: u64, session: u64) {
+        let mut g = self.inner.lock_recover();
+        let bytes: usize = g
+            .map
+            .iter()
+            .filter(|(k, _)| k.0 == matrix_id)
+            .map(|(_, e)| e.bytes.len())
+            .sum();
+        if bytes > 0 {
+            g.sub_resident(matrix_id, bytes);
+        }
+        if session == 0 {
+            g.owner.remove(&matrix_id);
+        } else {
+            g.owner.insert(matrix_id, session);
+        }
+        if bytes > 0 {
+            g.add_resident(matrix_id, bytes);
+        }
+    }
+
+    /// Resident bytes currently owned by one tenant (observability for
+    /// the fair-share tests and the multitenant bench).
+    pub fn session_resident_bytes(&self, session: u64) -> usize {
+        self.inner.lock_recover().resident_of(session)
+    }
+
+    /// Number of registered tenants.
+    pub fn session_count(&self) -> usize {
+        self.inner.lock_recover().sessions.len()
     }
 
     /// Release one matrix's outstanding read-ahead pins (entries
@@ -693,8 +962,8 @@ impl PartitionCache {
     /// sweep the pin would shield the entry from eviction for the
     /// matrix's lifetime and permanently shrink the cache. Scoping by
     /// matrix id limits the blast radius: a concurrent pass only loses
-    /// pins when it scans one of the sweeping pass's own matrices (and
-    /// the epoch bump may drop its queued read-aheads) — its demand
+    /// pins when it scans one of the sweeping pass's own matrices — its
+    /// queued read-aheads (keyed by its own pass id) and its demand
     /// reads stay correct either way.
     pub fn release_prefetch_pins(&self, matrix_id: u64) {
         let mut g = self.inner.lock_recover();
@@ -714,6 +983,9 @@ impl PartitionCache {
         let mut g = self.inner.lock_recover();
         g.map.clear();
         g.bytes_used = 0;
+        for slot in g.sessions.values_mut() {
+            slot.resident = 0;
+        }
     }
 
     /// Drop every partition of one matrix (its handle was dropped).
@@ -731,9 +1003,12 @@ impl PartitionCache {
             .collect();
         for k in keys {
             if let Some(e) = inner.map.remove(&k) {
-                inner.bytes_used -= e.bytes.len();
+                let len = e.bytes.len();
+                inner.bytes_used -= len;
+                inner.sub_resident(k.0, len);
             }
         }
+        inner.owner.remove(&matrix_id);
     }
 
     /// Queue an asynchronous read of one partition into the cache. Best
@@ -747,6 +1022,7 @@ impl PartitionCache {
         part: usize,
         off: u64,
         len: usize,
+        pass: u64,
     ) {
         let Some(tx) = &cache.prefetch_tx else { return };
         // a partition larger than the whole cache can never be admitted:
@@ -762,7 +1038,7 @@ impl PartitionCache {
             part,
             off,
             len,
-            epoch: cache.epoch.load(Ordering::Relaxed),
+            pass,
         };
         if tx.try_send(req).is_ok() {
             cache
@@ -796,11 +1072,13 @@ impl PartitionCache {
     ///
     /// Blocks while the dirty set is at capacity
     /// (`Metrics::wb_flush_waits`) — back-pressure, mirroring the
-    /// read-ahead queue's bound. A re-enqueue of a still-queued key
-    /// replaces its bytes in place (`Metrics::wb_coalesced`): one file
-    /// write, newest bytes. Ordering per key is preserved — a key whose
-    /// write is already in flight is re-queued behind it, so the newest
-    /// bytes always land last.
+    /// read-ahead queue's bound. With >= 2 registered tenants the bound
+    /// is additionally split per tenant (admission control): one
+    /// tenant's write burst blocks only itself, never the whole queue.
+    /// A re-enqueue of a still-queued key replaces its bytes in place
+    /// (`Metrics::wb_coalesced`): one file write, newest bytes. Ordering
+    /// per key is preserved — a key whose write is already in flight is
+    /// re-queued behind it, so the newest bytes always land last.
     pub fn enqueue_write(
         &self,
         store: &Arc<FileStore>,
@@ -812,11 +1090,23 @@ impl PartitionCache {
         let Some(wb) = &self.wb else { return false };
         let key = (matrix_id, part);
         let len = bytes.len();
+        // resolve the writing tenant and its dirty budget first: inner
+        // lock, then wb lock — the two are never held together
+        let (session, session_cap) = {
+            let g = self.inner.lock_recover();
+            let n = g.sessions.len();
+            let cap = if n >= 2 { wb.capacity / n } else { wb.capacity };
+            (g.session_of(matrix_id), cap)
+        };
         let mut g = wb.state.lock_recover();
         {
             let st = &mut *g;
             if let Some(e) = st.pending.get_mut(&key) {
-                st.bytes = st.bytes - e.bytes.len() + len;
+                let old = e.bytes.len();
+                st.bytes = st.bytes - old + len;
+                if let Some(b) = st.session_bytes.get_mut(&e.session) {
+                    *b = b.saturating_sub(old) + len;
+                }
                 e.off = off;
                 e.bytes = bytes;
                 self.metrics.wb_coalesced.fetch_add(1, Ordering::Relaxed);
@@ -825,9 +1115,16 @@ impl PartitionCache {
         }
         // bounded dirty capacity: wait for the writer to drain. A single
         // entry larger than the whole bound is admitted alone (when the
-        // queue is otherwise empty) rather than deadlocking.
+        // queue is otherwise empty) rather than deadlocking; the same
+        // exemption applies to the per-tenant split.
         let mut waited = false;
-        while g.bytes > 0 && g.bytes + len > wb.capacity {
+        loop {
+            let sb = g.session_bytes.get(&session).copied().unwrap_or(0);
+            let global_full = g.bytes > 0 && g.bytes + len > wb.capacity;
+            let tenant_full = sb > 0 && sb + len > session_cap;
+            if !global_full && !tenant_full {
+                break;
+            }
             if !waited {
                 waited = true;
                 self.metrics.wb_flush_waits.fetch_add(1, Ordering::Relaxed);
@@ -835,12 +1132,14 @@ impl PartitionCache {
             g = wait_recover(&wb.done_cv, g);
         }
         g.bytes += len;
+        *g.session_bytes.entry(session).or_insert(0) += len;
         g.pending.insert(
             key,
             WbEntry {
                 store: Arc::clone(store),
                 off,
                 bytes,
+                session,
             },
         );
         g.queue.push_back(key);
@@ -900,7 +1199,11 @@ impl PartitionCache {
                     .collect();
                 for k in keys {
                     if let Some(e) = st.pending.remove(&k) {
-                        st.bytes -= e.bytes.len();
+                        let len = e.bytes.len();
+                        st.bytes -= len;
+                        if let Some(b) = st.session_bytes.get_mut(&e.session) {
+                            *b = b.saturating_sub(len);
+                        }
                     }
                 }
                 self.metrics
@@ -952,6 +1255,29 @@ impl CacheHandle {
 impl Drop for CacheHandle {
     fn drop(&mut self) {
         self.cache.evict_matrix(self.matrix_id);
+    }
+}
+
+/// RAII registration of one executing pass, from
+/// [`PartitionCache::begin_pass`]. [`id`](PassGuard::id) keys the pass's
+/// read-ahead requests; dropping the guard retires exactly this pass's
+/// prefetches (queued ones are dropped at dequeue, in-flight ones land
+/// unpinned) and frees its `max_concurrent_passes` slot.
+pub struct PassGuard {
+    cache: Arc<PartitionCache>,
+    id: u64,
+}
+
+impl PassGuard {
+    /// The pass id to stamp on [`PartitionCache::prefetch`] requests.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+}
+
+impl Drop for PassGuard {
+    fn drop(&mut self) {
+        self.cache.end_pass(self.id);
     }
 }
 
@@ -1055,7 +1381,8 @@ mod tests {
         // prefetch only lands for live (registered) matrix ids
         let h = CacheHandle::register(Arc::clone(&c));
         let id = h.matrix_id;
-        PartitionCache::prefetch(&c, &store, id, 0, 0, 256);
+        let pass = c.begin_pass();
+        PartitionCache::prefetch(&c, &store, id, 0, 0, 256, pass.id());
         for _ in 0..2000 {
             if c.contains(id, 0) {
                 break;
@@ -1083,7 +1410,8 @@ mod tests {
         let c = cache(300);
         let h = CacheHandle::register(Arc::clone(&c));
         let id = h.matrix_id;
-        c.insert_prefetched(id, 0, vec![1u8; 100], c.epoch.load(Ordering::Relaxed));
+        let pass = c.begin_pass();
+        c.insert_prefetched(id, 0, vec![1u8; 100], pass.id());
         c.insert(id, 0, vec![2u8; 100]); // consumer refill
         c.insert(id, 1, vec![0u8; 100]);
         c.insert(id, 2, vec![0u8; 100]);
@@ -1149,9 +1477,9 @@ mod tests {
         let h1 = CacheHandle::register(Arc::clone(&c));
         let h2 = CacheHandle::register(Arc::clone(&c));
         let (id1, id2) = (h1.matrix_id, h2.matrix_id);
-        let e = c.epoch.load(Ordering::Relaxed);
-        c.insert_prefetched(id1, 0, vec![1u8; 100], e);
-        c.insert_prefetched(id2, 0, vec![1u8; 100], e);
+        let pass = c.begin_pass();
+        c.insert_prefetched(id1, 0, vec![1u8; 100], pass.id());
+        c.insert_prefetched(id2, 0, vec![1u8; 100], pass.id());
         // orphaned read-ahead pins block every admission
         c.insert(id1, 2, vec![0u8; 100]);
         assert!(!c.contains(id1, 2), "fully pinned cache must skip admission");
@@ -1173,20 +1501,22 @@ mod tests {
         assert!(c.is_empty());
         assert_eq!(c.bytes_used(), 0);
         // the matrix id is still live: read-ahead completions still land
-        c.insert_prefetched(h.matrix_id, 0, vec![1u8; 64], c.epoch.load(Ordering::Relaxed));
+        let pass = c.begin_pass();
+        c.insert_prefetched(h.matrix_id, 0, vec![1u8; 64], pass.id());
         assert!(c.contains(h.matrix_id, 0));
     }
 
     #[test]
-    fn stale_epoch_prefetch_lands_unpinned() {
+    fn stale_pass_prefetch_lands_unpinned() {
         let c = cache(200);
         let h = CacheHandle::register(Arc::clone(&c));
         let id = h.matrix_id;
-        let old = c.epoch.load(Ordering::Relaxed);
-        c.advance_prefetch_epoch(); // the issuing pass ended
+        let pass = c.begin_pass();
+        let stale = pass.id();
+        drop(pass); // the issuing pass ended
         // a late read-ahead completion: still useful bytes, but with no
         // consumer left it must not carry a pin nothing will release
-        c.insert_prefetched(id, 0, vec![1u8; 100], old);
+        c.insert_prefetched(id, 0, vec![1u8; 100], stale);
         assert!(c.contains(id, 0));
         c.insert(id, 1, vec![0u8; 100]);
         c.insert(id, 2, vec![0u8; 100]); // pressure: (id,0) must be evictable
@@ -1195,13 +1525,217 @@ mod tests {
     }
 
     #[test]
+    fn concurrent_pass_end_keeps_other_pass_prefetch_pinned() {
+        // the PR 9 bugfix pinned: with a cache-global epoch, pass B
+        // ending retired pass A's read-aheads and dropped their pins —
+        // per-pass ids must keep A's prefetch pinned until A consumes
+        // it (or A itself ends)
+        let c = cache(200);
+        let h = CacheHandle::register(Arc::clone(&c));
+        let id = h.matrix_id;
+        let pass_a = c.begin_pass();
+        let pass_b = c.begin_pass();
+        assert_ne!(pass_a.id(), pass_b.id());
+        c.insert_prefetched(id, 0, vec![7u8; 100], pass_a.id());
+        drop(pass_b); // a concurrent pass ends — must not touch A's pins
+        c.insert(id, 1, vec![0u8; 100]);
+        c.insert(id, 2, vec![0u8; 100]); // pressure
+        assert!(
+            c.contains(id, 0),
+            "pass B ending must not unpin pass A's read-ahead"
+        );
+        assert!(!c.contains(id, 1), "the unpinned entry is the victim");
+        // A's own end is what retires its late completions...
+        let stale = pass_a.id();
+        drop(pass_a);
+        c.insert_prefetched(id, 3, vec![1u8; 100], stale);
+        // ...and the per-matrix sweep is what releases the consumed pin
+        c.release_prefetch_pins(id);
+        c.insert(id, 4, vec![0u8; 100]);
+        c.insert(id, 5, vec![0u8; 100]);
+        assert!(!c.contains(id, 0), "released pin must be evictable again");
+    }
+
+    #[test]
     fn late_prefetch_for_dropped_matrix_not_admitted() {
         let c = cache(1000);
         let h = CacheHandle::register(Arc::clone(&c));
         let id = h.matrix_id;
+        let pass = c.begin_pass();
         drop(h); // matrix gone; a read-ahead completing now must be dropped
-        c.insert_prefetched(id, 0, vec![0u8; 64], c.epoch.load(Ordering::Relaxed));
+        c.insert_prefetched(id, 0, vec![0u8; 64], pass.id());
         assert!(c.is_empty(), "dead-matrix prefetch was admitted");
+    }
+
+    #[test]
+    fn max_concurrent_passes_gates_admission() {
+        let c = cache(1000);
+        c.set_max_concurrent_passes(1);
+        let first = c.begin_pass();
+        let c2 = Arc::clone(&c);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let t = std::thread::spawn(move || {
+            let g = c2.begin_pass(); // must block until `first` drops
+            tx.send(()).unwrap();
+            drop(g);
+        });
+        assert!(
+            rx.recv_timeout(std::time::Duration::from_millis(100)).is_err(),
+            "second pass must wait for the admission slot"
+        );
+        drop(first);
+        rx.recv_timeout(std::time::Duration::from_secs(5))
+            .expect("blocked pass must be admitted once the slot frees");
+        t.join().unwrap();
+    }
+
+    // -- multi-tenant fair share --------------------------------------------
+
+    #[test]
+    fn fair_share_streaming_tenant_evicts_itself_first() {
+        let c = cache(400);
+        let ma = Arc::new(Metrics::new());
+        let mb = Arc::new(Metrics::new());
+        let sa = c.register_session(Arc::clone(&ma), 200);
+        let sb = c.register_session(Arc::clone(&mb), 200);
+        c.set_matrix_owner(1, sa);
+        c.set_matrix_owner(2, sb);
+        // tenant A's hot set sits exactly at its 200 B share
+        c.insert(1, 0, vec![0u8; 100]);
+        c.insert(1, 1, vec![0u8; 100]);
+        assert_eq!(c.session_resident_bytes(sa), 200);
+        // tenant B streams 3 partitions through a full cache: victims
+        // must be B's own older entries, never A's in-budget hot set
+        c.insert(2, 0, vec![0u8; 100]);
+        c.insert(2, 1, vec![0u8; 100]);
+        c.insert(2, 2, vec![0u8; 100]);
+        assert!(c.contains(1, 0) && c.contains(1, 1), "A's hot set was flushed");
+        assert!(!c.contains(2, 0), "B's own LRU entry is the victim");
+        assert!(c.contains(2, 2));
+        assert_eq!(ma.snapshot().cache_cross_evictions, 0);
+        assert_eq!(mb.snapshot().cache_cross_evictions, 0);
+    }
+
+    #[test]
+    fn fair_share_over_budget_tenant_is_cross_evicted_and_charged() {
+        let c = cache(400);
+        let ma = Arc::new(Metrics::new());
+        let mb = Arc::new(Metrics::new());
+        let sa = c.register_session(Arc::clone(&ma), 100);
+        let sb = c.register_session(Arc::clone(&mb), 300);
+        c.set_matrix_owner(1, sa);
+        c.set_matrix_owner(2, sb);
+        // tenant A overruns its 100 B share with 400 B
+        for p in 0..4 {
+            c.insert(1, p, vec![0u8; 100]);
+        }
+        // tenant B inserting may displace the over-budget tenant; the
+        // cross-tenant eviction is charged to the victim (A)
+        c.insert(2, 0, vec![0u8; 100]);
+        assert!(c.contains(2, 0));
+        assert_eq!(c.session_resident_bytes(sa), 300);
+        assert_eq!(ma.snapshot().cache_cross_evictions, 1);
+        assert_eq!(mb.snapshot().cache_cross_evictions, 0);
+        // per-tenant hit/miss attribution: A's lookups land on A's metrics
+        assert!(c.get(1, 3).is_some());
+        assert!(c.get(2, 9).is_none());
+        assert_eq!(ma.snapshot().cache_hits, 1);
+        assert_eq!(mb.snapshot().cache_misses, 1);
+        // unregistering a tenant reverts its matrices to the root tenant
+        c.unregister_session(sa);
+        assert_eq!(c.session_count(), 1);
+        assert_eq!(c.session_resident_bytes(sa), 0);
+    }
+
+    #[test]
+    fn clear_resets_tenant_residency_ledger() {
+        let c = cache(1000);
+        let sa = c.register_session(Arc::new(Metrics::new()), 0);
+        c.set_matrix_owner(5, sa);
+        c.insert(5, 0, vec![0u8; 64]);
+        assert_eq!(c.session_resident_bytes(sa), 64);
+        c.clear();
+        assert_eq!(c.session_resident_bytes(sa), 0);
+        c.insert(5, 1, vec![0u8; 32]);
+        assert_eq!(c.session_resident_bytes(sa), 32);
+    }
+
+    // -- clear() concurrent safety (hand-rolled stress, std-only) -----------
+
+    #[test]
+    fn clear_races_single_flight_reads_without_corruption() {
+        // clear() while single-flight reads are landing: registrations
+        // survive, byte accounting stays exact, and every reader still
+        // gets its bytes (from the cache or its own read)
+        let c = cache(64 << 10);
+        let h = CacheHandle::register(Arc::clone(&c));
+        let id = h.matrix_id;
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let c = Arc::clone(&c);
+                s.spawn(move || {
+                    for i in 0..200 {
+                        let part = (t * 200 + i) % 16;
+                        let b = c
+                            .get_or_read(id, part, || Ok(vec![part as u8; 128]))
+                            .unwrap();
+                        assert_eq!(b[0], part as u8);
+                    }
+                });
+            }
+            let c = Arc::clone(&c);
+            s.spawn(move || {
+                for _ in 0..100 {
+                    c.clear();
+                    std::thread::yield_now();
+                }
+            });
+        });
+        // accounting must still be exact after the dust settles
+        let g = c.inner.lock_recover();
+        let recomputed: usize = g.map.values().map(|e| e.bytes.len()).sum();
+        assert_eq!(g.bytes_used, recomputed, "bytes_used drifted from the map");
+        assert!(g.live.contains(&id), "clear() must keep registrations");
+    }
+
+    #[test]
+    fn clear_while_other_tenant_holds_pins_stays_consistent() {
+        // a second session pinning entries while another clears: clear
+        // drops everything (pins are advisory for eviction, not clear),
+        // but pin/unpin racing clear must never corrupt accounting
+        let c = cache(64 << 10);
+        let sa = c.register_session(Arc::new(Metrics::new()), 0);
+        let h = CacheHandle::register(Arc::clone(&c));
+        let id = h.matrix_id;
+        c.set_matrix_owner(id, sa);
+        std::thread::scope(|s| {
+            {
+                let c = Arc::clone(&c);
+                s.spawn(move || {
+                    for i in 0..500usize {
+                        let part = i % 8;
+                        c.insert(id, part, vec![1u8; 256]);
+                        if c.pin(id, part) {
+                            std::thread::yield_now();
+                            c.unpin(id, part);
+                        }
+                    }
+                });
+            }
+            let c = Arc::clone(&c);
+            s.spawn(move || {
+                for _ in 0..100 {
+                    c.clear();
+                    std::thread::yield_now();
+                }
+            });
+        });
+        c.clear();
+        assert_eq!(c.bytes_used(), 0);
+        assert_eq!(c.session_resident_bytes(sa), 0);
+        // the pipeline still works end to end after the race
+        c.insert(id, 0, vec![3u8; 64]);
+        assert_eq!(c.get(id, 0).unwrap()[0], 3);
     }
 
     // -- write-back pipeline ------------------------------------------------
@@ -1313,6 +1847,47 @@ mod tests {
         let mut head = [0u8; 4];
         store.read_at(0, &mut head).unwrap();
         assert_eq!(head, [6u8; 4], "other matrices' writes are untouched");
+    }
+
+    #[test]
+    fn writeback_tenant_split_blocks_only_the_bursting_tenant() {
+        let dir = crate::testutil::TempDir::new("wb-tenant");
+        let metrics = Arc::new(Metrics::new());
+        // dirty bound 2000 B, two tenants -> 1000 B split each
+        let c = PartitionCache::new(1024, 0, 2000, Arc::clone(&metrics));
+        let sa = c.register_session(Arc::new(Metrics::new()), 0);
+        let sb = c.register_session(Arc::new(Metrics::new()), 0);
+        let a = c.alloc_wb_id();
+        let b = c.alloc_wb_id();
+        c.set_matrix_owner(a, sa);
+        c.set_matrix_owner(b, sb);
+        // throttle (512 B/s, 512 B burst): each 700 B write keeps the
+        // writer busy long enough for the admission checks to observe
+        let store = wb_store(dir.path(), 4096, Some(512), &metrics);
+        assert!(c.enqueue_write(&store, a, 0, 0, Arc::new(vec![1u8; 700])));
+        let c2 = Arc::clone(&c);
+        let store2 = Arc::clone(&store);
+        let t = std::thread::spawn(move || {
+            let t0 = std::time::Instant::now();
+            // tenant A overruns its 1000 B split (700 + 700): must wait
+            assert!(c2.enqueue_write(&store2, a, 1, 700, Arc::new(vec![2u8; 700])));
+            t0.elapsed()
+        });
+        // tenant B is within its split AND the global bound: no wait
+        let t0 = std::time::Instant::now();
+        assert!(c.enqueue_write(&store, b, 0, 1400, Arc::new(vec![3u8; 700])));
+        let b_wait = t0.elapsed();
+        let a_wait = t.join().unwrap();
+        assert!(
+            a_wait.as_secs_f64() > 0.15,
+            "bursting tenant must block on its dirty split (waited {a_wait:?})"
+        );
+        assert!(
+            b_wait < a_wait,
+            "the in-budget tenant must not pay the burster's wait"
+        );
+        c.flush_writes(a).unwrap();
+        c.flush_writes(b).unwrap();
     }
 
     #[test]

@@ -162,8 +162,10 @@ impl DenseData {
     /// cache so a following [`partition_bytes`](Self::partition_bytes)
     /// hits memory — I/O overlapped with compute (§III-B3). No-op for
     /// in-memory matrices, uncached matrices, out-of-range indices, or
-    /// when read-ahead is disabled/backlogged.
-    pub fn prefetch_partition(&self, i: usize) {
+    /// when read-ahead is disabled/backlogged. `pass` is the issuing
+    /// pass's id (from [`PartitionCache::begin_pass`]); the prefetched
+    /// partition stays pinned only while that pass is active.
+    pub fn prefetch_partition(&self, i: usize, pass: u64) {
         if i >= self.parts.n_parts() {
             return;
         }
@@ -181,7 +183,21 @@ impl DenseData {
                 i,
                 self.parts.part_offset(i, esz),
                 self.parts.part_bytes(i, esz),
+                pass,
             );
+        }
+    }
+
+    /// Cache registration id of this matrix, if it reads through the
+    /// engine's partition cache (`None` for in-memory / uncached
+    /// matrices). Used by the multi-tenant layer to tag cache entries
+    /// with their owning session.
+    pub fn cache_matrix_id(&self) -> Option<u64> {
+        match &self.backing {
+            Backing::Ext {
+                pcache: Some(h), ..
+            } => Some(h.matrix_id),
+            _ => None,
         }
     }
 
@@ -466,6 +482,19 @@ impl DenseBuilder {
 
     pub fn dtype(&self) -> DType {
         self.dtype
+    }
+
+    /// Cache registration id of the matrix being built, if its partitions
+    /// land in the engine's partition cache (`None` for in-memory or
+    /// non-resident builders). Lets the exec layer tag the entries with
+    /// the submitting session before any partition is written.
+    pub fn cache_matrix_id(&self) -> Option<u64> {
+        match &self.mode {
+            BuilderMode::Ext {
+                pcache: Some(h), ..
+            } => Some(h.matrix_id),
+            _ => None,
+        }
     }
 
     /// Write partition `i` from col-major bytes. Thread-safe across

@@ -255,7 +255,7 @@ impl SparseData {
     /// Queue an async read-ahead of partition `i` (no-op in memory, when
     /// uncached, or out of range) — same contract as the dense
     /// [`super::DenseData::prefetch_partition`].
-    pub fn prefetch_partition(&self, i: usize) {
+    pub fn prefetch_partition(&self, i: usize, pass: u64) {
         if i >= self.parts.n_parts() {
             return;
         }
@@ -266,7 +266,18 @@ impl SparseData {
         } = &self.backing
         {
             let (off, len) = self.part_locs[i];
-            PartitionCache::prefetch(&h.cache, store, h.matrix_id, i, off, len);
+            PartitionCache::prefetch(&h.cache, store, h.matrix_id, i, off, len, pass);
+        }
+    }
+
+    /// Cache registration id, if this matrix reads through the engine's
+    /// partition cache (multi-tenant owner tagging).
+    pub fn cache_matrix_id(&self) -> Option<u64> {
+        match &self.backing {
+            SparseBacking::Ext {
+                pcache: Some(h), ..
+            } => Some(h.matrix_id),
+            _ => None,
         }
     }
 

@@ -32,6 +32,10 @@ pub struct Metrics {
     pub cache_misses: AtomicU64,
     /// Partitions evicted from the matrix cache under capacity pressure.
     pub cache_evictions: AtomicU64,
+    /// Capacity evictions where the victim partition belonged to a
+    /// *different* tenant than the inserter (multi-tenant fair-share
+    /// isolation signal; charged to the victim session's metrics).
+    pub cache_cross_evictions: AtomicU64,
     /// Async partition read-aheads queued to the prefetch thread.
     pub prefetch_issued: AtomicU64,
     /// Reads that coalesced onto an in-flight read of the same partition
@@ -152,6 +156,7 @@ impl Metrics {
             cache_hits: self.cache_hits.load(Ordering::Relaxed),
             cache_misses: self.cache_misses.load(Ordering::Relaxed),
             cache_evictions: self.cache_evictions.load(Ordering::Relaxed),
+            cache_cross_evictions: self.cache_cross_evictions.load(Ordering::Relaxed),
             prefetch_issued: self.prefetch_issued.load(Ordering::Relaxed),
             singleflight_coalesced: self.singleflight_coalesced.load(Ordering::Relaxed),
             sched_steals: self.sched_steals.load(Ordering::Relaxed),
@@ -196,6 +201,7 @@ impl Metrics {
             &s.cache_hits,
             &s.cache_misses,
             &s.cache_evictions,
+            &s.cache_cross_evictions,
             &s.prefetch_issued,
             &s.singleflight_coalesced,
             &s.sched_steals,
@@ -242,6 +248,7 @@ pub struct MetricsSnapshot {
     pub cache_hits: u64,
     pub cache_misses: u64,
     pub cache_evictions: u64,
+    pub cache_cross_evictions: u64,
     pub prefetch_issued: u64,
     pub singleflight_coalesced: u64,
     pub sched_steals: u64,
@@ -285,6 +292,7 @@ impl MetricsSnapshot {
             cache_hits: self.cache_hits - earlier.cache_hits,
             cache_misses: self.cache_misses - earlier.cache_misses,
             cache_evictions: self.cache_evictions - earlier.cache_evictions,
+            cache_cross_evictions: self.cache_cross_evictions - earlier.cache_cross_evictions,
             prefetch_issued: self.prefetch_issued - earlier.prefetch_issued,
             singleflight_coalesced: self.singleflight_coalesced - earlier.singleflight_coalesced,
             sched_steals: self.sched_steals - earlier.sched_steals,

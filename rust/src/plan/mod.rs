@@ -123,10 +123,42 @@ struct MemoEntry {
     key: u64,
     value: Matrix,
     _subtree: Matrix,
-    /// Partitions pinned in the partition cache (residency hint);
-    /// released on eviction.
-    pinned: Vec<usize>,
+    /// Partition-cache residency pins (RAII: released when the entry
+    /// drops, on any path).
+    _pins: PinGuard,
     stamp: u64,
+}
+
+/// RAII residency pins for a memoized intermediate. Pinning and
+/// unpinning used to be two separate calls with every error path in
+/// between able to leak the pins (shrinking the shared cache until
+/// engine teardown); the guard ties the release to the entry's lifetime,
+/// so memo eviction, planner resets, aborted batches and panics all
+/// unpin.
+struct PinGuard {
+    value: Matrix,
+    pinned: Vec<usize>,
+}
+
+impl PinGuard {
+    fn pin(value: &Matrix) -> PinGuard {
+        let pinned = match &*value.data {
+            MatrixData::Dense(d) => d.pin_resident(),
+            _ => Vec::new(),
+        };
+        PinGuard {
+            value: value.clone(),
+            pinned,
+        }
+    }
+}
+
+impl Drop for PinGuard {
+    fn drop(&mut self) {
+        if let MatrixData::Dense(d) = &*self.value.data {
+            d.unpin_resident(&self.pinned);
+        }
+    }
 }
 
 /// Cached pass grouping for one batch shape.
@@ -165,15 +197,12 @@ impl Planner {
     }
 
     fn memo_insert(&mut self, key: u64, value: Matrix, subtree: Matrix) {
-        let pinned = match &*value.data {
-            MatrixData::Dense(d) => d.pin_resident(),
-            _ => Vec::new(),
-        };
+        let pins = PinGuard::pin(&value);
         self.memo.push(MemoEntry {
             key,
             value,
             _subtree: subtree,
-            pinned,
+            _pins: pins,
             stamp: self.stamp,
         });
         while self.memo.len() > MEMO_CAP {
@@ -183,10 +212,8 @@ impl Planner {
                 .enumerate()
                 .min_by_key(|(_, e)| e.stamp)
                 .expect("non-empty memo");
-            let e = self.memo.swap_remove(i);
-            if let MatrixData::Dense(d) = &*e.value.data {
-                d.unpin_resident(&e.pinned);
-            }
+            // dropping the entry's PinGuard releases its residency pins
+            self.memo.swap_remove(i);
         }
     }
 }
@@ -1023,7 +1050,19 @@ pub fn execute_batch(
     }
 
     // ---- execute the planned pass groups
-    let results = exec::run_groups(ctx, &pass_groups)?;
+    let results = match exec::run_groups(ctx, &pass_groups) {
+        Ok(r) => r,
+        Err(e) => {
+            // An aborted batch must not strand residency pins: the memo
+            // may reference intermediates whose backing pass never
+            // flushed, and pins held past the abort would shrink the
+            // shared cache for every tenant. Dropping the memo releases
+            // each entry's PinGuard, so `pinned_bytes` returns to the
+            // pre-batch level.
+            pl.memo.clear();
+            return Err(e);
+        }
+    };
     for (ri, (out_targets, out_sinks)) in results.into_iter().enumerate() {
         let (t_ids, s_ids, extras) = &group_meta[ri];
         let mut ot = out_targets.into_iter();

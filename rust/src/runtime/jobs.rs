@@ -1,0 +1,289 @@
+//! Async job-queue serving surface (submit → ticket → poll/wait).
+//!
+//! The multi-tenant front end: callers — one per [`crate::fmr::Session`],
+//! typically — submit closures that run a workload against their session
+//! engine, and get back a [`Ticket`] they can poll or block on. A small
+//! fixed pool of worker threads drains the queue FIFO; per-pass
+//! concurrency against the shared cache is governed separately by
+//! `EngineConfig::max_concurrent_passes` (the cache's pass admission
+//! gate), so the pool size only bounds how many jobs are *runnable*, not
+//! how many passes touch the cache at once.
+//!
+//! Worker panics are contained: a panicking job resolves its ticket with
+//! `FmError::Runtime` instead of wedging the queue. Dropping the queue
+//! joins the workers (finishing jobs already dequeued) and then runs any
+//! never-started jobs inline, so every issued ticket resolves.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::error::{FmError, Result};
+use crate::util::sync::{wait_recover, LockExt};
+
+/// Result slot shared between a worker and the ticket holder.
+enum TicketState<T> {
+    Pending,
+    Done(Result<T>),
+    /// The result was already consumed by `wait`/`poll`.
+    Taken,
+}
+
+struct TicketShared<T> {
+    state: Mutex<TicketState<T>>,
+    cv: Condvar,
+}
+
+/// Handle to one submitted job.
+pub struct Ticket<T> {
+    shared: Arc<TicketShared<T>>,
+}
+
+impl<T> Ticket<T> {
+    fn new() -> (Ticket<T>, Arc<TicketShared<T>>) {
+        let shared = Arc::new(TicketShared {
+            state: Mutex::new(TicketState::Pending),
+            cv: Condvar::new(),
+        });
+        (
+            Ticket {
+                shared: Arc::clone(&shared),
+            },
+            shared,
+        )
+    }
+
+    /// Non-blocking: `None` while the job is still queued or running,
+    /// `Some(result)` exactly once when it finished (subsequent polls
+    /// after the result was taken return an error result).
+    pub fn poll(&self) -> Option<Result<T>> {
+        let mut st = self.shared.state.lock_recover();
+        match &*st {
+            TicketState::Pending => None,
+            _ => Some(take_state(&mut st)),
+        }
+    }
+
+    /// Block until the job finishes and return its result.
+    pub fn wait(self) -> Result<T> {
+        let mut st = self.shared.state.lock_recover();
+        while matches!(*st, TicketState::Pending) {
+            st = wait_recover(&self.shared.cv, st);
+        }
+        take_state(&mut st)
+    }
+
+    /// Whether the job has finished (without consuming the result).
+    pub fn is_done(&self) -> bool {
+        !matches!(*self.shared.state.lock_recover(), TicketState::Pending)
+    }
+}
+
+fn take_state<T>(st: &mut TicketState<T>) -> Result<T> {
+    match std::mem::replace(st, TicketState::Taken) {
+        TicketState::Done(r) => r,
+        TicketState::Taken => Err(FmError::Runtime("ticket result already taken".into())),
+        TicketState::Pending => unreachable!("caller checked Pending"),
+    }
+}
+
+type Job = Box<dyn FnOnce() + Send>;
+
+struct QueueInner {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+struct QueueShared {
+    inner: Mutex<QueueInner>,
+    cv: Condvar,
+}
+
+/// Fixed-pool FIFO job queue.
+pub struct JobQueue {
+    shared: Arc<QueueShared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl JobQueue {
+    /// Start a queue with `workers` threads (at least 1).
+    pub fn new(workers: usize) -> JobQueue {
+        let shared = Arc::new(QueueShared {
+            inner: Mutex::new(QueueInner {
+                jobs: VecDeque::new(),
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+        });
+        let workers = (0..workers.max(1))
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("fm-job-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn job worker")
+            })
+            .collect();
+        JobQueue { shared, workers }
+    }
+
+    /// Submit a job; returns immediately with its ticket. A job
+    /// submitted after shutdown began runs inline on the submitting
+    /// thread (the ticket still resolves — nobody hangs).
+    pub fn submit<T, F>(&self, job: F) -> Ticket<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> Result<T> + Send + 'static,
+    {
+        let (ticket, slot) = Ticket::new();
+        let run: Job = Box::new(move || {
+            let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job))
+                .unwrap_or_else(|p| {
+                    let msg = p
+                        .downcast_ref::<&str>()
+                        .map(|s| (*s).to_string())
+                        .or_else(|| p.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "opaque panic payload".into());
+                    Err(FmError::Runtime(format!("job panicked: {msg}")))
+                });
+            *slot.state.lock_recover() = TicketState::Done(res);
+            slot.cv.notify_all();
+        });
+        let mut g = self.shared.inner.lock_recover();
+        if g.shutdown {
+            // the workers are gone; run inline so the ticket resolves
+            drop(g);
+            run();
+        } else {
+            g.jobs.push_back(run);
+            drop(g);
+            self.shared.cv.notify_one();
+        }
+        ticket
+    }
+
+    /// Jobs still queued (not yet picked up by a worker).
+    pub fn backlog(&self) -> usize {
+        self.shared.inner.lock_recover().jobs.len()
+    }
+}
+
+fn worker_loop(shared: &QueueShared) {
+    loop {
+        let job = {
+            let mut g = shared.inner.lock_recover();
+            loop {
+                if let Some(j) = g.jobs.pop_front() {
+                    break j;
+                }
+                if g.shutdown {
+                    return;
+                }
+                g = wait_recover(&shared.cv, g);
+            }
+        };
+        job();
+    }
+}
+
+impl Drop for JobQueue {
+    fn drop(&mut self) {
+        {
+            let mut g = self.shared.inner.lock_recover();
+            g.shutdown = true;
+        }
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        // fail whatever never got picked up (each closure resolves its
+        // own ticket; running it inline here keeps waiters live, and the
+        // workers are already gone so there is no double-run risk)
+        let leftovers: Vec<Job> = {
+            let mut g = self.shared.inner.lock_recover();
+            g.jobs.drain(..).collect()
+        };
+        for j in leftovers {
+            j();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Duration;
+
+    #[test]
+    fn submit_poll_wait_roundtrip() {
+        let q = JobQueue::new(2);
+        let t = q.submit(|| Ok(21 * 2));
+        assert_eq!(t.wait().unwrap(), 42);
+
+        let slow = q.submit(|| {
+            std::thread::sleep(Duration::from_millis(30));
+            Ok("done".to_string())
+        });
+        // poll may race the worker; eventually it must yield the value
+        let mut got = None;
+        for _ in 0..200 {
+            if let Some(r) = slow.poll() {
+                got = Some(r);
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(got.unwrap().unwrap(), "done");
+    }
+
+    #[test]
+    fn jobs_run_concurrently_across_workers() {
+        let q = JobQueue::new(4);
+        let running = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let tickets: Vec<_> = (0..4)
+            .map(|_| {
+                let running = Arc::clone(&running);
+                let peak = Arc::clone(&peak);
+                q.submit(move || {
+                    let now = running.fetch_add(1, Ordering::SeqCst) + 1;
+                    peak.fetch_max(now, Ordering::SeqCst);
+                    std::thread::sleep(Duration::from_millis(50));
+                    running.fetch_sub(1, Ordering::SeqCst);
+                    Ok(())
+                })
+            })
+            .collect();
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        assert!(
+            peak.load(Ordering::SeqCst) >= 2,
+            "4 jobs on 4 workers never overlapped"
+        );
+    }
+
+    #[test]
+    fn panicking_job_resolves_ticket_with_error() {
+        let q = JobQueue::new(1);
+        let t = q.submit::<(), _>(|| panic!("boom"));
+        let err = t.wait().unwrap_err();
+        assert!(format!("{err}").contains("boom"));
+        // the worker survived the panic
+        let t2 = q.submit(|| Ok(7));
+        assert_eq!(t2.wait().unwrap(), 7);
+    }
+
+    #[test]
+    fn drop_resolves_unstarted_jobs() {
+        let q = JobQueue::new(1);
+        let block = q.submit(|| {
+            std::thread::sleep(Duration::from_millis(50));
+            Ok(1)
+        });
+        let queued = q.submit(|| Ok(2));
+        drop(q);
+        assert_eq!(block.wait().unwrap(), 1);
+        assert_eq!(queued.wait().unwrap(), 2);
+    }
+}

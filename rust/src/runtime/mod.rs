@@ -13,8 +13,10 @@
 //! [`HostTensor`]s over a channel. Executables compile lazily on first use
 //! and are cached for the life of the service.
 
+pub mod jobs;
 pub mod manifest;
 
+pub use jobs::{JobQueue, Ticket};
 pub use manifest::{ArtifactMeta, TensorSpec};
 
 use std::collections::HashMap;

@@ -43,7 +43,7 @@ impl Drop for TempDir {
 /// [`rerun_out_of_core`] then adds a deterministic bandwidth throttle so
 /// the simulated-SSD path is exercised too, not only the file reads.
 pub fn em_forcing_enabled() -> bool {
-    std::env::var("FLASHR_TEST_EM").map(|v| v == "1").unwrap_or(false)
+    crate::config::env_flag("FLASHR_TEST_EM").unwrap_or(false)
 }
 
 /// Configuration that *forces* the out-of-core machinery even at test

@@ -338,3 +338,88 @@ fn fault_specs_are_validated() {
         "bit flips without checksums would corrupt results silently"
     );
 }
+
+// ---------------------------------------------------------------------------
+// Aborted planned batches must not strand residency pins (PR 9)
+// ---------------------------------------------------------------------------
+
+/// The cross-pass optimizer pins its memoized intermediates resident in
+/// the shared partition cache (the [`flashmatrix::plan`] residency hint).
+/// Those pins are tenant-invisible cache pressure, so an injected-fault
+/// abort of a later planned batch must release every one of them:
+/// `pinned_bytes` returns to zero, and the same engine keeps producing
+/// clean answers afterwards.
+///
+/// Recipe: three rounds of the recurring-intermediate chain on a small,
+/// fully-cached dataset memoize (and pin) the shared intermediate while
+/// never touching the (persistently corrupting) store; a larger second
+/// dataset then forces cold reads, every one of which flips a bit, so its
+/// batch deterministically aborts with the memo populated.
+#[test]
+fn aborted_planned_batch_strands_no_residency_pins() {
+    use flashmatrix::dag::UnFn;
+    use flashmatrix::dtype::Scalar;
+    use flashmatrix::genops;
+    use flashmatrix::plan::PlanRequest;
+    use flashmatrix::vudf::{AggOp, BinOp, UnOp};
+
+    let dir = TempDir::new("chaos-pins");
+    let corrupt = FaultConfig {
+        seed: 23,
+        bit_flip: 1.0,
+        persistent: 1.0,
+        ..FaultConfig::default()
+    };
+    let mut cfg = em_cfg(dir.path(), Some(corrupt));
+    cfg.cross_pass_opt = true; // independent of FLASHR_NO_CROSS_PASS_OPT
+    cfg.prefetch_depth = 0; // no read-ahead pins: memo pins only
+    let eng = Engine::new(cfg).unwrap();
+    let cache = eng.cache.clone().expect("EM config has a partition cache");
+
+    // 32 KiB dataset « 4 MiB cache: every round is served write-through,
+    // the corrupting store is never read, and round 2 materializes +
+    // round 3 substitutes the shared intermediate (plan unit tests pin
+    // this exact recurrence recipe)
+    let x = datasets::uniform(&eng, 2048, 2, 0.0, 1.0, 13, Some("chaos-pins.mat")).unwrap();
+    for _ in 0..3 {
+        let shared = genops::sapply(&x.m, UnFn::Builtin(UnOp::Sqrt));
+        let t = genops::mapply_scalar(&shared, Scalar::F64(2.0), BinOp::Mul, true);
+        let s_src = genops::mapply_scalar(&shared, Scalar::F64(1.0), BinOp::Add, true);
+        let s = genops::agg_full(&s_src, AggOp::Sum);
+        eng.plan_batch(&[PlanRequest::target(&t), PlanRequest::sink(s)])
+            .unwrap();
+    }
+    assert!(
+        cache.pinned_bytes() > 0,
+        "the memoized intermediate must be pinned resident before the abort"
+    );
+
+    // 9.6 MiB » cache: the scan reads cold partitions from the store,
+    // every read flips a bit, the checksum catches it and the planned
+    // batch aborts — with the memo still holding its pins
+    let aborted = datasets::uniform(&eng, 200_000, 6, -1.0, 1.0, 9, None)
+        .and_then(|big| big.col_sums());
+    match aborted {
+        Err(FmError::Corrupt(_)) | Err(FmError::Io(_)) => {}
+        Err(e) => panic!("expected a typed I/O/corruption abort, got: {e}"),
+        Ok(_) => panic!("persistent bit flips on cold reads must abort the batch"),
+    }
+    assert!(eng.metrics.snapshot().faults_injected > 0, "no fault ever fired");
+    assert_eq!(
+        cache.pinned_bytes(),
+        0,
+        "aborted batch stranded memo residency pins in the shared cache"
+    );
+
+    // the engine is reusable and the small, fully-cached chain still
+    // produces results after the abort released the memo
+    let s = genops::agg_full(
+        &genops::sapply(&x.m, UnFn::Builtin(UnOp::Sqrt)),
+        AggOp::Sum,
+    );
+    let out = eng.plan_batch(&[PlanRequest::sink(s)]).unwrap();
+    match out[0].clone().sink().scalar() {
+        Scalar::F64(v) => assert!(v.is_finite() && v > 0.0),
+        other => panic!("unexpected sink dtype: {other:?}"),
+    }
+}

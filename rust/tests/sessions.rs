@@ -1,0 +1,210 @@
+//! Multi-tenant serving end to end: N concurrent [`Session`]s over one
+//! shared engine must be **invisible to results** — every workload's
+//! output is bit-identical to a serialized run on the root engine — while
+//! the cache stays shared (one §III-B3 hierarchy) and per-tenant
+//! accounting holds (fair-share eviction, private hit/miss metrics).
+//!
+//! Every engine here runs `threads = 1` so fold order inside a workload
+//! is deterministic and "bit-identical" is a meaningful claim; the
+//! concurrency under test is *between* sessions, not inside a pass. The
+//! suite runs in both storage modes (IM and tiny-cache EM) and is the
+//! body of the `concurrent-tests` CI job (`FLASHR_TEST_EM=1`).
+
+use std::sync::Arc;
+
+use flashmatrix::algs;
+use flashmatrix::config::EngineConfig;
+use flashmatrix::datasets;
+use flashmatrix::fmr::Engine;
+use flashmatrix::testutil::{out_of_core_config, TempDir};
+use flashmatrix::{JobQueue, Session};
+
+// -- the three tenant workloads (kmeans / PageRank / IRLS) ------------------
+
+fn kmeans_fp(eng: &Arc<Engine>) -> Vec<f64> {
+    let (x, _) = datasets::mix_gaussian(eng, 60_000, 6, 3, 8.0, 3, None).unwrap();
+    let km = algs::kmeans(&x, 3, 3, 1).unwrap();
+    let mut fp = km.wcss.clone();
+    fp.extend(km.centroids.buf.to_f64_vec());
+    fp.extend(km.sizes.clone());
+    fp
+}
+
+fn pagerank_fp(eng: &Arc<Engine>) -> Vec<f64> {
+    let (g, dangling) = datasets::pagerank_graph(eng, 1 << 13, 6, 17, None).unwrap();
+    let pr = algs::pagerank(&g, &dangling, 0.85, 5, 0.0).unwrap();
+    let mut fp = pr.ranks.clone();
+    fp.extend(pr.deltas);
+    fp
+}
+
+fn irls_fp(eng: &Arc<Engine>) -> Vec<f64> {
+    let x = datasets::uniform(eng, 60_000, 4, -1.0, 1.0, 21, None).unwrap();
+    let y = datasets::logistic_labels(&x, &[1.0, -0.5, 0.25, -1.5], 22).unwrap();
+    let fit = algs::logistic(&x, &y, 3, 1e-8).unwrap();
+    let mut fp = fit.beta.clone();
+    fp.extend(fit.deviances);
+    fp
+}
+
+const WORKLOADS: [(&str, fn(&Arc<Engine>) -> Vec<f64>); 3] =
+    [("kmeans", kmeans_fp), ("pagerank", pagerank_fp), ("irls", irls_fp)];
+
+fn im_config() -> EngineConfig {
+    EngineConfig {
+        threads: 1,
+        xla_dispatch: false,
+        chunk_bytes: 4 << 20,
+        target_part_bytes: 1 << 20,
+        ..EngineConfig::default()
+    }
+}
+
+fn em_config(dir: &std::path::Path) -> EngineConfig {
+    let mut cfg = out_of_core_config(dir);
+    cfg.threads = 1;
+    cfg
+}
+
+/// Serialized baseline: the three workloads one after another on the
+/// root engine itself (the pre-PR-9 one-pass-at-a-time regime).
+fn serialized(root: &Arc<Engine>) -> Vec<Vec<f64>> {
+    WORKLOADS.iter().map(|(_, f)| f(root)).collect()
+}
+
+/// Interleaved: one session per workload, all three running at once on
+/// their own OS threads against the shared cache.
+fn interleaved(root: &Arc<Engine>, session_cfg: &EngineConfig) -> Vec<Vec<f64>> {
+    let sessions: Vec<Session> = WORKLOADS
+        .iter()
+        .map(|_| Session::open(root, session_cfg.clone()).unwrap())
+        .collect();
+    let mut out: Vec<Option<Vec<f64>>> = vec![None; WORKLOADS.len()];
+    std::thread::scope(|s| {
+        let handles: Vec<_> = WORKLOADS
+            .iter()
+            .zip(&sessions)
+            .map(|((_, f), sess)| {
+                let eng = Arc::clone(sess.engine());
+                s.spawn(move || f(&eng))
+            })
+            .collect();
+        for (slot, h) in out.iter_mut().zip(handles) {
+            *slot = Some(h.join().expect("tenant workload panicked"));
+        }
+    });
+    out.into_iter().map(Option::unwrap).collect()
+}
+
+fn assert_bitwise(serial: &[Vec<f64>], inter: &[Vec<f64>], mode: &str) {
+    for (((label, _), a), b) in WORKLOADS.iter().zip(serial).zip(inter) {
+        assert_eq!(a.len(), b.len(), "{mode}/{label}: fingerprint length");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{mode}/{label}[{i}]: serialized {x} != interleaved {y}"
+            );
+        }
+    }
+}
+
+/// In memory: three interleaved tenants match the serialized run bitwise.
+#[test]
+fn interleaved_sessions_bit_identical_to_serialized_im() {
+    let root = Engine::new(im_config()).unwrap();
+    let serial = serialized(&root);
+    let inter = interleaved(&root, &im_config());
+    assert_bitwise(&serial, &inter, "im");
+}
+
+/// Out of core, through the shared tiny partition cache, with the pass
+/// admission gate engaged (`max_concurrent_passes = 2` forces at least
+/// one tenant to wait at a pass boundary mid-run): still bit-identical.
+#[test]
+fn interleaved_sessions_bit_identical_to_serialized_em() {
+    let dir = TempDir::new("sessions-em");
+    let mut cfg = em_config(dir.path());
+    cfg.max_concurrent_passes = 2;
+    let root = Engine::new(cfg).unwrap();
+    let serial = serialized(&root);
+    let inter = interleaved(&root, &em_config(dir.path()));
+    assert_bitwise(&serial, &inter, "em");
+
+    // the tenants really went through the shared cache: every session
+    // engine is gone, so its registration must be released too
+    assert_eq!(root.cache.as_ref().unwrap().session_count(), 0);
+}
+
+/// The async serving front end: submit → ticket → wait drives the same
+/// three workloads through a [`JobQueue`], one session opened per job,
+/// and the results match the serialized run bitwise.
+#[test]
+fn job_queue_tickets_drive_sessions_end_to_end() {
+    let dir = TempDir::new("sessions-jobs");
+    let root = Engine::new(em_config(dir.path())).unwrap();
+    let serial = serialized(&root);
+
+    let q = JobQueue::new(WORKLOADS.len());
+    let tickets: Vec<_> = WORKLOADS
+        .iter()
+        .map(|(_, f)| {
+            let root = Arc::clone(&root);
+            let dir = dir.path().to_path_buf();
+            let f = *f;
+            q.submit(move || {
+                let s = Session::open(&root, em_config(&dir))?;
+                Ok(f(s.engine()))
+            })
+        })
+        .collect();
+    let inter: Vec<Vec<f64>> = tickets
+        .into_iter()
+        .map(|t| t.wait().expect("job failed"))
+        .collect();
+    assert_bitwise(&serial, &inter, "jobs");
+    assert_eq!(q.backlog(), 0);
+    assert_eq!(root.cache.as_ref().unwrap().session_count(), 0);
+}
+
+/// Isolation: a tenant whose working set fits its fair share keeps it
+/// (and its hit rate) while a second tenant streams a larger matrix
+/// through the same cache — the streamer evicts its own LRU entries,
+/// and the cross-tenant eviction count on the hot tenant stays zero.
+#[test]
+fn streaming_tenant_does_not_flush_hot_tenant_within_share() {
+    let dir = TempDir::new("sessions-iso");
+    // 4 MiB shared cache; each tenant gets a 2 MiB share
+    let root = Engine::new(em_config(dir.path())).unwrap();
+    let mut scfg = em_config(dir.path());
+    scfg.session_mem_bytes = 2 << 20;
+    let hot = Session::open(&root, scfg.clone()).unwrap();
+    let streamer = Session::open(&root, scfg).unwrap();
+
+    // hot tenant: one ~1.6 MiB partition, resident within its share
+    let hx = datasets::uniform(hot.engine(), 50_000, 4, -1.0, 1.0, 41, None).unwrap();
+    let hsum = hx.sum().unwrap();
+    let warm = hot.metrics().snapshot();
+
+    // streamer: ~6 MiB in ~2 MiB partitions > its share; its own older
+    // partitions are the victims, never the hot tenant's working set
+    let sx = datasets::uniform(streamer.engine(), 200_000, 4, -1.0, 1.0, 42, None).unwrap();
+    let _ = sx.sum().unwrap();
+
+    // the hot tenant re-reads its partition from the cache: hits, and
+    // the same bytes
+    let again = hx.sum().unwrap();
+    assert_eq!(hsum.to_bits(), again.to_bits());
+    let after = hot.metrics().snapshot();
+    assert!(
+        after.cache_hits > warm.cache_hits,
+        "hot tenant's re-read must hit the shared cache \
+         (hits {} -> {})",
+        warm.cache_hits,
+        after.cache_hits
+    );
+    assert_eq!(
+        after.cache_cross_evictions, 0,
+        "an in-budget tenant must never be cross-evicted"
+    );
+}
