@@ -9,7 +9,7 @@
 use std::sync::Arc;
 
 use flashmatrix::dtype::DType;
-use flashmatrix::fmr::{Engine, FmMatrix};
+use flashmatrix::fmr::{Engine, EngineExt};
 use flashmatrix::vudf::{Buf, CustomVudf};
 use flashmatrix::EngineConfig;
 
@@ -55,7 +55,7 @@ fn main() -> flashmatrix::Result<()> {
     eng.registry.register(Arc::new(SoftThreshold { lambda: 0.5 }));
     println!("registered VUDFs: {:?}", eng.registry.names());
 
-    let x = FmMatrix::runif_matrix(&eng, 2_000_000, 8, -1.0, 1.0, 7);
+    let x = eng.runif_matrix(2_000_000, 8, -1.0, 1.0, 7);
 
     // shrunk = sapply(x, soft_threshold); fuses with downstream ops
     let shrunk = x.sapply_custom("soft_threshold")?;

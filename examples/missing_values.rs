@@ -14,7 +14,7 @@
 //!
 //! Run: `cargo run --release --example missing_values`
 
-use flashmatrix::fmr::{Engine, FmMatrix};
+use flashmatrix::fmr::{Engine, EngineExt};
 use flashmatrix::vudf::{AggOp, BinOp, UnOp};
 use flashmatrix::EngineConfig;
 
@@ -24,15 +24,15 @@ fn main() -> flashmatrix::Result<()> {
 
     // X ~ N(3, 2) with ~5% NaN entries (NaN injected through an expression:
     // where u < 0.05, 0/0 = NaN, else x)
-    let x_clean = FmMatrix::rnorm_matrix(&eng, n_rows, 1, 3.0, 2.0, 11);
-    let u = FmMatrix::runif_matrix(&eng, n_rows, 1, 0.0, 1.0, 12);
+    let x_clean = eng.rnorm_matrix(n_rows, 1, 3.0, 2.0, 11);
+    let u = eng.runif_matrix(n_rows, 1, 0.0, 1.0, 12);
     let mask = u
         .mapply_scalar(flashmatrix::dtype::Scalar::F64(0.05), BinOp::Lt, true)?
         .cast(flashmatrix::dtype::DType::F64)?;
     let notmask = mask.mapply_scalar(flashmatrix::dtype::Scalar::F64(1.0), BinOp::Sub, false)?; // 1-mask
     // x = ifelse0(x_clean, mask) + ifelse0(NaN, !mask):
     //   unmasked rows keep x_clean (+0); masked rows get 0 + NaN = NaN
-    let nan = FmMatrix::fill(&eng, flashmatrix::dtype::Scalar::F64(f64::NAN), n_rows, 1);
+    let nan = eng.fill(flashmatrix::dtype::Scalar::F64(f64::NAN), n_rows, 1);
     let x = x_clean
         .mapply(&mask, BinOp::IfElse0)?
         .add(&nan.mapply(&notmask, BinOp::IfElse0)?)?;

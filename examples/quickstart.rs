@@ -7,7 +7,7 @@
 //! Run: `cargo run --release --example quickstart`
 
 use flashmatrix::dtype::Scalar;
-use flashmatrix::fmr::{Engine, FmMatrix};
+use flashmatrix::fmr::{Engine, EngineExt};
 use flashmatrix::vudf::AggOp;
 use flashmatrix::EngineConfig;
 
@@ -17,7 +17,7 @@ fn main() -> flashmatrix::Result<()> {
 
     // fm.runif.matrix(1e6, 4): a million-row random matrix. Nothing is
     // computed yet — this is a virtual matrix.
-    let x = FmMatrix::runif_matrix(&eng, 1_000_000, 4, -1.0, 1.0, 42);
+    let x = eng.runif_matrix(1_000_000, 4, -1.0, 1.0, 42);
 
     // R: y <- abs(x) + x^2 * 0.5       (still virtual: a 4-node DAG)
     let y = x.abs()?.add(&x.sq()?.mul_scalar(0.5)?)?;

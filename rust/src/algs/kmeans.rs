@@ -24,7 +24,7 @@
 
 use crate::dtype::Scalar;
 use crate::error::Result;
-use crate::fmr::FmMatrix;
+use crate::fmr::{EngineExt, FmMatrix};
 use crate::matrix::HostMat;
 use crate::plan::PlanRequest;
 use crate::runtime::HostTensor;
@@ -145,7 +145,7 @@ fn step_genop(x: &FmMatrix, c: &HostMat, k: usize) -> Result<(Vec<f64>, Vec<f64>
     let labels = d
         .which_min_row()?
         .mapply_scalar(Scalar::I32(1), BinOp::Sub, true)?; // 0-based
-    let ones = FmMatrix::fill(&x.eng, Scalar::F64(1.0), x.nrow(), 1);
+    let ones = x.eng.fill(Scalar::F64(1.0), x.nrow(), 1);
     let mind = d.agg_row(AggOp::Min)?;
 
     // the whole E-step as one planned batch: three independent statements

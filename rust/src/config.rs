@@ -196,6 +196,14 @@ pub struct EngineConfig {
     /// path): the pass that would exceed it blocks until a slot frees.
     /// 0 = unlimited. Derived sessions share the root engine's cap.
     pub max_concurrent_passes: usize,
+    /// Parse workers for delimited-text ingestion ([`crate::ingest`]):
+    /// both the chunk-scan and the partition-parse phases run on this
+    /// many threads. 0 = use `threads`.
+    pub ingest_workers: usize,
+    /// Target text-chunk size in bytes for the ingestion scanner; each
+    /// chunk is extended to the next record (newline) boundary, so this
+    /// also bounds per-worker text memory during a load.
+    pub ingest_chunk_bytes: usize,
 }
 
 impl Default for EngineConfig {
@@ -242,6 +250,8 @@ impl Default for EngineConfig {
             io_checksums: true,
             session_mem_bytes: 0,
             max_concurrent_passes: 0,
+            ingest_workers: 0,
+            ingest_chunk_bytes: 4 << 20,
         }
     }
 }
@@ -303,6 +313,11 @@ impl EngineConfig {
         if self.writeback && self.writeback_queue_bytes == 0 {
             return Err(crate::FmError::Config(
                 "writeback requires writeback_queue_bytes > 0".into(),
+            ));
+        }
+        if self.ingest_chunk_bytes == 0 {
+            return Err(crate::FmError::Config(
+                "ingest_chunk_bytes must be > 0".into(),
             ));
         }
         if let Some(f) = &self.fault_injection {
@@ -458,6 +473,21 @@ mod tests {
             ..Default::default()
         };
         assert!(bad_p.validate().is_err(), "fault config is validated too");
+    }
+
+    #[test]
+    fn ingest_knob_defaults_and_validation() {
+        let c = EngineConfig::default();
+        // ingestion follows the engine's thread pool by default, with a
+        // multi-MB chunk so the scan amortizes per-read overheads
+        assert_eq!(c.ingest_workers, 0);
+        assert!(c.ingest_chunk_bytes >= 1 << 20);
+        c.validate().unwrap();
+        let bad = EngineConfig {
+            ingest_chunk_bytes: 0,
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -22,7 +22,7 @@ use std::sync::Arc;
 use crate::dtype::{DType, Scalar};
 use crate::error::{FmError, Result};
 use crate::matrix::{HostMat, Matrix, MatrixData};
-use crate::vudf::{AggOp, BinOp, CustomVudf, UnOp};
+use crate::vudf::{AggOp, BinOp, CustomVudf, NaMode, UnOp};
 
 /// Unary op reference: built-in (enum fast path) or registered custom VUDF.
 #[derive(Clone)]
@@ -92,8 +92,9 @@ pub enum VKind {
     /// normalization pipelines fuse).
     MapplyCol { a: Matrix, v: Matrix, op: BinOp },
     /// `fm.agg.row` on a tall matrix: per-row reduction, n×1 output —
-    /// stays in the DAG (paper §III-E "first type").
-    RowAgg { a: Matrix, op: AggOp },
+    /// stays in the DAG (paper §III-E "first type"). `na` selects the
+    /// NA handling (`NaMode::Off` = legacy NA-oblivious kernels).
+    RowAgg { a: Matrix, op: AggOp, na: NaMode },
     /// Per-row index of the extreme value (1-based like R's which.min);
     /// i32 output. Backs `fm.agg.row(which.min/which.max)`.
     RowArgExtreme { a: Matrix, max: bool },
@@ -219,7 +220,10 @@ impl VKind {
                 (*op as u8).hash(h);
             }
             VKind::MapplyCol { op, .. } => (*op as u8).hash(h),
-            VKind::RowAgg { op, .. } => (*op as u8).hash(h),
+            VKind::RowAgg { op, na, .. } => {
+                (*op as u8).hash(h);
+                na.code().hash(h);
+            }
             VKind::RowArgExtreme { max, .. } => max.hash(h),
             VKind::InnerSmall { b, f1, f2, .. } => {
                 hash_host(b, h, values);
@@ -292,9 +296,10 @@ impl VKind {
                 v: ps[1].clone(),
                 op: *op,
             },
-            VKind::RowAgg { op, .. } => VKind::RowAgg {
+            VKind::RowAgg { op, na, .. } => VKind::RowAgg {
                 a: ps[0].clone(),
                 op: *op,
+                na: *na,
             },
             VKind::RowArgExtreme { max, .. } => VKind::RowArgExtreme {
                 a: ps[0].clone(),
@@ -366,10 +371,11 @@ fn hash_host<H: Hasher>(m: &HostMat, h: &mut H, values: bool) {
 
 /// Sink kinds: DAG-terminating aggregations (different long dimension).
 pub enum SinkKind {
-    /// `fm.agg`: whole-matrix reduction to one scalar.
-    AggFull(AggOp),
+    /// `fm.agg`: whole-matrix reduction to one scalar. The [`NaMode`]
+    /// selects NA handling (`Off` = legacy NA-oblivious kernels).
+    AggFull(AggOp, NaMode),
     /// `fm.agg.col` on a tall matrix: per-column reduction -> 1×ncol.
-    AggCol(AggOp),
+    AggCol(AggOp, NaMode),
     /// `fm.groupby.row`: rows grouped by an n×1 i32 label matrix (values in
     /// `0..k`), reduced per group -> k×ncol. Labels may be virtual and are
     /// evaluated in the same fused pass (k-means' one-pass update).
@@ -384,8 +390,8 @@ impl SinkKind {
     /// Stable discriminant for structural sink identity.
     pub fn code(&self) -> u8 {
         match self {
-            SinkKind::AggFull(_) => 0,
-            SinkKind::AggCol(_) => 1,
+            SinkKind::AggFull(..) => 0,
+            SinkKind::AggCol(..) => 1,
             SinkKind::GroupByRow { .. } => 2,
             SinkKind::InnerWideTall { .. } => 3,
         }
@@ -396,7 +402,7 @@ impl SinkKind {
     /// participate in hash-consing exactly like node parents.
     pub fn parents(&self) -> Vec<&Matrix> {
         match self {
-            SinkKind::AggFull(_) | SinkKind::AggCol(_) => vec![],
+            SinkKind::AggFull(..) | SinkKind::AggCol(..) => vec![],
             SinkKind::GroupByRow { labels, .. } => vec![labels],
             SinkKind::InnerWideTall { right, .. } => vec![right],
         }
@@ -407,7 +413,10 @@ impl SinkKind {
     pub fn hash_params<H: Hasher>(&self, h: &mut H) {
         self.code().hash(h);
         match self {
-            SinkKind::AggFull(op) | SinkKind::AggCol(op) => (*op as u8).hash(h),
+            SinkKind::AggFull(op, na) | SinkKind::AggCol(op, na) => {
+                (*op as u8).hash(h);
+                na.code().hash(h);
+            }
             SinkKind::GroupByRow { k, op, .. } => {
                 k.hash(h);
                 (*op as u8).hash(h);
@@ -424,8 +433,8 @@ impl SinkKind {
     pub fn with_parents(&self, ps: &[Matrix]) -> SinkKind {
         debug_assert_eq!(ps.len(), self.parents().len());
         match self {
-            SinkKind::AggFull(op) => SinkKind::AggFull(*op),
-            SinkKind::AggCol(op) => SinkKind::AggCol(*op),
+            SinkKind::AggFull(op, na) => SinkKind::AggFull(*op, *na),
+            SinkKind::AggCol(op, na) => SinkKind::AggCol(*op, *na),
             SinkKind::GroupByRow { k, op, .. } => SinkKind::GroupByRow {
                 labels: ps[0].clone(),
                 k: *k,

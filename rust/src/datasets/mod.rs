@@ -20,7 +20,7 @@ use std::sync::Arc;
 use crate::dtype::{DType, Scalar};
 use crate::error::Result;
 use crate::exec::{splitmix64_at, u64_to_unit_f64};
-use crate::fmr::{Engine, FmMatrix};
+use crate::fmr::{Engine, EngineExt, FmMatrix};
 use crate::matrix::{DenseBuilder, HostMat, Matrix, Partitioning};
 use crate::util::sync::LockExt;
 use crate::vudf::Buf;
@@ -85,9 +85,17 @@ pub fn from_fn(
     if let Some(e) = err.into_inner_recover() {
         return Err(e);
     }
+    let data = builder.finish();
+    // named EM datasets are reopenable across engine restarts
+    // (EngineExt::get_dense_matrix): persist the dense sidecar with the
+    // dtype, shape and write-time partition checksums. Generators have
+    // no ingestion schema, hence the empty column list.
+    if let (StorageKind::External, Some(nm)) = (&eng.config.storage, name) {
+        data.save_named_meta(&eng.config.data_dir, nm, &[])?;
+    }
     Ok(FmMatrix {
         eng: Arc::clone(eng),
-        m: Matrix::from_dense(builder.finish()),
+        m: Matrix::from_dense(data),
     })
 }
 
@@ -267,7 +275,7 @@ pub fn logistic_labels(
         bh.set(j, 0, Scalar::F64(*b));
     }
     let pmu = x.matmul_small(&bh)?.sigmoid()?;
-    let u = FmMatrix::runif_matrix(&x.eng, x.nrow(), 1, 0.0, 1.0, seed);
+    let u = x.eng.runif_matrix(x.nrow(), 1, 0.0, 1.0, seed);
     u.mapply(&pmu, crate::vudf::BinOp::Lt)?
         .cast(DType::F64)?
         .materialize()
@@ -352,13 +360,92 @@ mod tests {
         assert!(ss.buf.get(0).as_f64() > 4.0 * ss.buf.get(7).as_f64());
     }
 
+    fn em_eng(dir: &std::path::Path) -> Arc<Engine> {
+        Engine::new(EngineConfig {
+            xla_dispatch: false,
+            storage: StorageKind::External,
+            data_dir: dir.to_path_buf(),
+            chunk_bytes: 1 << 20,
+            target_part_bytes: 1 << 16,
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn named_em_dataset_reopens_via_sidecar() {
+        let tmp = crate::testutil::TempDir::new("ds-sidecar");
+        let e = em_eng(tmp.path());
+        let a = uniform(&e, 4000, 3, -1.0, 1.0, 13, Some("unif")).unwrap();
+        let want = a.to_host().unwrap();
+        assert!(tmp.path().join("unif.dense.json").exists());
+        // reattach through the manifest alone (fresh handle, same engine)
+        let b = e.get_dense_matrix("unif").unwrap();
+        assert_eq!(b.dtype(), DType::F64);
+        assert_eq!((b.nrow(), b.ncol()), (4000, 3));
+        assert_eq!(b.to_host().unwrap(), want);
+        assert!(e.get_dense_matrix("no-such").is_err());
+    }
+
+    #[test]
+    fn dense_sidecar_roundtrips_every_dtype() {
+        use crate::matrix::Partitioning;
+        let tmp = crate::testutil::TempDir::new("ds-dtypes");
+        let e = em_eng(tmp.path());
+        for (k, dt) in [
+            DType::F64,
+            DType::F32,
+            DType::I64,
+            DType::I32,
+            DType::Bool,
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let name = format!("m-{dt}");
+            let parts = Partitioning::new(300, 2);
+            let b = DenseBuilder::new_ext(
+                dt,
+                parts.clone(),
+                &e.config.data_dir,
+                Some(&name),
+                0,
+                Arc::clone(&e.ssd),
+                Arc::clone(&e.metrics),
+                e.cache.clone(),
+            )
+            .unwrap();
+            for i in 0..parts.n_parts() {
+                let prows = parts.rows_in(i) as usize;
+                let mut buf = Buf::alloc(dt, prows * 2);
+                for r in 0..buf.len() {
+                    buf.set(r, Scalar::F64(((k + 1) * (r % 97)) as f64).cast(dt));
+                }
+                b.write_partition_buf(i, &buf).unwrap();
+            }
+            let data = b.finish();
+            let want = data.to_buf().unwrap();
+            data.save_named_meta(&e.config.data_dir, &name, &[]).unwrap();
+            drop(data);
+            // the sidecar must restore the dtype — the file alone cannot
+            let again = e.get_dense_matrix(&name).unwrap();
+            assert_eq!(again.dtype(), dt, "{name}");
+            match &*again.m.data {
+                crate::matrix::MatrixData::Dense(d) => {
+                    assert_eq!(d.to_buf().unwrap(), want, "{name}")
+                }
+                _ => unreachable!(),
+            }
+        }
+    }
+
     #[test]
     fn generation_matches_virtual_randu() {
         // datasets::uniform must agree with the lazy VKind::RandU node
         // (same counter-based stream)
         let e = eng();
         let a = uniform(&e, 3000, 3, 0.0, 2.0, 21, None).unwrap();
-        let v = FmMatrix::runif_matrix(&e, 3000, 3, 0.0, 2.0, 21);
+        let v = e.runif_matrix(3000, 3, 0.0, 2.0, 21);
         let d = a.sub(&v).unwrap().abs().unwrap().max().unwrap();
         assert_eq!(d, 0.0);
     }

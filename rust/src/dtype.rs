@@ -133,6 +133,31 @@ impl Scalar {
         }
     }
 
+    /// Whether this value is the NA of its dtype (R's missing-value
+    /// convention): floats use NaN, integers use the most negative value
+    /// (R's `NA_integer_` is `INT_MIN`). `Bool` has no NA representation.
+    pub fn is_na(self) -> bool {
+        match self {
+            Scalar::Bool(_) => false,
+            Scalar::I32(v) => v == i32::MIN,
+            Scalar::I64(v) => v == i64::MIN,
+            Scalar::F32(v) => v.is_nan(),
+            Scalar::F64(v) => v.is_nan(),
+        }
+    }
+
+    /// The canonical NA of a dtype (`Bool` has none and falls back to
+    /// `false`, which the NA-aware kernels never produce).
+    pub fn na(dt: DType) -> Scalar {
+        match dt {
+            DType::Bool => Scalar::Bool(false),
+            DType::I32 => Scalar::I32(i32::MIN),
+            DType::I64 => Scalar::I64(i64::MIN),
+            DType::F32 => Scalar::F32(f32::NAN),
+            DType::F64 => Scalar::F64(f64::NAN),
+        }
+    }
+
     /// Cast to a target dtype (R-style numeric coercion).
     pub fn cast(self, to: DType) -> Scalar {
         match to {

@@ -21,6 +21,16 @@ pub enum FmError {
     /// [`FmError::Io`] this is *not* retried: the bytes are wrong, not
     /// merely unavailable.
     Corrupt(String),
+    /// Delimited-text ingestion rejected the input. Carries the source
+    /// file, the 1-based line within it, the 1-based column (field)
+    /// index, and what was wrong — malformed input is a *data* problem
+    /// the caller must see precisely located, not an I/O condition.
+    Parse {
+        file: String,
+        line: u64,
+        col: u64,
+        msg: String,
+    },
 }
 
 impl fmt::Display for FmError {
@@ -35,6 +45,12 @@ impl fmt::Display for FmError {
             FmError::Io(e) => write!(f, "{e}"),
             FmError::Json(m) => write!(f, "json error: {m}"),
             FmError::Corrupt(m) => write!(f, "data corruption: {m}"),
+            FmError::Parse {
+                file,
+                line,
+                col,
+                msg,
+            } => write!(f, "parse error: {file}:{line}:{col}: {msg}"),
         }
     }
 }

@@ -54,7 +54,7 @@ use crate::mem::{ChunkPool, StripPool};
 use crate::metrics::Metrics;
 use crate::storage::SsdSim;
 use crate::util::sync::LockExt;
-use crate::vudf::{AggOp, Buf};
+use crate::vudf::{AggOp, Buf, NaMode};
 
 use pipeline::{EvalOpts, Program, SinkInstrKind, SourceStrip};
 
@@ -583,8 +583,8 @@ fn process_partition(
 // ---------------------------------------------------------------------------
 
 enum SinkAcc {
-    Full { acc: Scalar, op: AggOp },
-    Col { acc: Buf, op: AggOp },
+    Full { acc: Scalar, op: AggOp, na: NaMode },
+    Col { acc: Buf, op: AggOp, na: NaMode },
     Group { acc: Buf, k: usize, op: AggOp },
     Inner { acc: Buf, f2: AggOp },
 }
@@ -601,18 +601,30 @@ impl SinkAccSet {
             .map(|s| {
                 let src_dt = prog.instrs[s.src_reg].dtype;
                 match &s.kind {
-                    SinkInstrKind::AggFull(op) => {
+                    SinkInstrKind::AggFull(op, na) => {
                         let dt = op.acc_dtype(src_dt);
+                        let id = if *na == NaMode::Off {
+                            op.identity(dt)
+                        } else {
+                            op.identity_na(dt)
+                        };
                         SinkAcc::Full {
-                            acc: op.identity(dt),
+                            acc: id,
                             op: *op,
+                            na: *na,
                         }
                     }
-                    SinkInstrKind::AggCol(op) => {
+                    SinkInstrKind::AggCol(op, na) => {
                         let dt = op.acc_dtype(src_dt);
+                        let id = if *na == NaMode::Off {
+                            op.identity(dt)
+                        } else {
+                            op.identity_na(dt)
+                        };
                         SinkAcc::Col {
-                            acc: Buf::fill(dt, s.ncol as usize, op.identity(dt)),
+                            acc: Buf::fill(dt, s.ncol as usize, id),
                             op: *op,
+                            na: *na,
                         }
                     }
                     SinkInstrKind::GroupByRow { k, op, .. } => {
@@ -658,7 +670,18 @@ impl SinkAccSet {
             let src = &regs[sink.src_reg];
             let ncol = sink.ncol as usize;
             match (&mut self.accs[si], &sink.kind) {
-                (SinkAcc::Full { acc, op }, _) => {
+                (SinkAcc::Full { acc, op, na }, _) => {
+                    if *na != NaMode::Off {
+                        // NA-aware: reduce the *uncast* strip so integer
+                        // NA sentinels are seen before any widening cast.
+                        let part = if vectorized {
+                            op.reduce_na(src, *na)
+                        } else {
+                            op.reduce_na_scalar_mode(src, *na)
+                        };
+                        *acc = op.fold_scalar_na(*acc, part, *na);
+                        continue;
+                    }
                     let dt = acc.dtype();
                     // borrow, don't copy, when the strip already has the
                     // accumulator dtype (the homogeneous-f64 fast case)
@@ -675,7 +698,19 @@ impl SinkAccSet {
                     };
                     *acc = op.fold_scalar(*acc, part);
                 }
-                (SinkAcc::Col { acc, op }, _) => {
+                (SinkAcc::Col { acc, op, na }, _) => {
+                    if *na != NaMode::Off {
+                        for j in 0..ncol {
+                            let col = src.slice(j * rows, rows);
+                            let part = if vectorized {
+                                op.reduce_na(&col, *na)
+                            } else {
+                                op.reduce_na_scalar_mode(&col, *na)
+                            };
+                            acc.set(j, op.fold_scalar_na(acc.get(j), part, *na));
+                        }
+                        continue;
+                    }
                     let dt = acc.dtype();
                     let cast = src.cast_ref(dt)?;
                     for j in 0..ncol {
@@ -745,11 +780,11 @@ impl SinkAccSet {
     fn merge(&mut self, other: SinkAccSet) -> Result<()> {
         for (mine, theirs) in self.accs.iter_mut().zip(other.accs) {
             match (mine, theirs) {
-                (SinkAcc::Full { acc, op }, SinkAcc::Full { acc: o, .. }) => {
-                    *acc = op.fold_scalar(*acc, o);
+                (SinkAcc::Full { acc, op, na }, SinkAcc::Full { acc: o, .. }) => {
+                    *acc = op.fold_scalar_na(*acc, o, *na);
                 }
-                (SinkAcc::Col { acc, op }, SinkAcc::Col { acc: o, .. }) => {
-                    op.combine(acc, &o)?;
+                (SinkAcc::Col { acc, op, na }, SinkAcc::Col { acc: o, .. }) => {
+                    op.combine_na(acc, &o, *na)?;
                 }
                 (SinkAcc::Group { acc, op, .. }, SinkAcc::Group { acc: o, .. }) => {
                     op.combine(acc, &o)?;

@@ -32,7 +32,7 @@ use crate::dtype::{DType, Scalar};
 use crate::error::{FmError, Result};
 use crate::matrix::{HostMat, Matrix, MatrixData};
 use crate::mem::StripPool;
-use crate::vudf::{self, AggOp, BinOp, Buf, UnOp};
+use crate::vudf::{self, AggOp, BinOp, Buf, NaMode, UnOp};
 
 /// One compiled DAG node.
 pub struct Instr {
@@ -58,7 +58,7 @@ pub enum InstrKind {
     MapplyScalar { a: usize, s: Scalar, op: BinOp, scalar_right: bool },
     MapplyRow { a: usize, w: Buf, op: BinOp },
     MapplyCol { a: usize, v: usize, op: BinOp },
-    RowAgg { a: usize, op: AggOp },
+    RowAgg { a: usize, op: AggOp, na: NaMode },
     RowArgExtreme { a: usize, max: bool },
     InnerSmall { a: usize, b: HostMat, f1: BinOp, f2: AggOp },
     /// Streaming SpMM: decode the CSR rows of sparse source `src` covering
@@ -119,8 +119,8 @@ pub struct SinkInstr {
 }
 
 pub enum SinkInstrKind {
-    AggFull(AggOp),
-    AggCol(AggOp),
+    AggFull(AggOp, NaMode),
+    AggCol(AggOp, NaMode),
     GroupByRow { labels_reg: usize, k: usize, op: AggOp },
     InnerWideTall { right_reg: usize, f1: BinOp, f2: AggOp },
 }
@@ -275,8 +275,8 @@ pub fn compile_opts(targets: &[Matrix], sinks: &[SinkSpec], opts: CompileOpts) -
             let src_reg = reg_of[&s.source.data_ptr()];
             let ncol = s.source.data.ncol();
             let kind = match &s.kind {
-                SinkKind::AggFull(op) => SinkInstrKind::AggFull(*op),
-                SinkKind::AggCol(op) => SinkInstrKind::AggCol(*op),
+                SinkKind::AggFull(op, na) => SinkInstrKind::AggFull(*op, *na),
+                SinkKind::AggCol(op, na) => SinkInstrKind::AggCol(*op, *na),
                 SinkKind::GroupByRow { labels, k, op } => SinkInstrKind::GroupByRow {
                     labels_reg: reg_of[&labels.data_ptr()],
                     k: *k,
@@ -669,7 +669,11 @@ fn compile_vkind(kind: &VKind, reg_of: &HashMap<usize, usize>) -> Result<InstrKi
             v: r(v),
             op: *op,
         },
-        VKind::RowAgg { a, op } => InstrKind::RowAgg { a: r(a), op: *op },
+        VKind::RowAgg { a, op, na } => InstrKind::RowAgg {
+            a: r(a),
+            op: *op,
+            na: *na,
+        },
         VKind::RowArgExtreme { a, max } => InstrKind::RowArgExtreme { a: r(a), max: *max },
         VKind::InnerSmall { a, b, f1, f2 } => InstrKind::InnerSmall {
             a: r(a),
@@ -968,7 +972,7 @@ pub fn eval_strip(
                 pool.count_alloc();
                 r
             }
-            InstrKind::RowAgg { a, op } => row_agg(&regs[*a], rows, *op, opts, pool),
+            InstrKind::RowAgg { a, op, na } => row_agg(&regs[*a], rows, *op, *na, opts, pool),
             InstrKind::RowArgExtreme { a, max } => row_arg_extreme(&regs[*a], rows, *max, pool),
             InstrKind::InnerSmall { a, b, f1, f2 } => {
                 inner_small(&regs[*a], rows, b, *f1, *f2, simd, pool)?
@@ -1266,9 +1270,24 @@ fn spmm_strip(
 /// Row reductions accumulate across *columns*, so the rows of one strip
 /// are independent outputs: the `opts.simd` lane form processes four rows
 /// per group with each row's column-sweep order unchanged — bit-exact.
-fn row_agg(a: &Buf, rows: usize, op: AggOp, opts: EvalOpts, pool: &mut StripPool) -> Buf {
+fn row_agg(a: &Buf, rows: usize, op: AggOp, na: NaMode, opts: EvalOpts, pool: &mut StripPool) -> Buf {
     let ncol = a.len() / rows.max(1);
     let acc_dt = op.acc_dtype(a.dtype());
+    if na != NaMode::Off {
+        // NA-aware path (`na.rm=`): one general column-sweep fold via the
+        // NA-aware scalar kernels — rows are independent, and the per-row
+        // fold order matches the NA-oblivious sweep, so NA-free data
+        // produces identical results.
+        let mut out = pool.acquire(acc_dt, rows);
+        for r in 0..rows {
+            let mut acc = op.identity_na(acc_dt);
+            for j in 0..ncol {
+                acc = op.fold_scalar_na(acc, a.get(j * rows + r), na);
+            }
+            out.set(r, acc);
+        }
+        return out;
+    }
     // fast path: f64 sum/min/max with column-sweep accumulation
     if opts.vectorized && a.dtype() == DType::F64 && acc_dt == DType::F64 {
         if let Buf::F64(v) = a {
@@ -1539,9 +1558,9 @@ mod tests {
         let mut p = test_pool();
         // strip 2 rows x 3 cols, col-major: cols [1,5], [2,4], [0,6]
         let a = Buf::from_f64(&[1.0, 5.0, 2.0, 4.0, 0.0, 6.0]);
-        let sums = row_agg(&a, 2, AggOp::Sum, EvalOpts::plain(true), &mut p);
+        let sums = row_agg(&a, 2, AggOp::Sum, NaMode::Off, EvalOpts::plain(true), &mut p);
         assert_eq!(sums.to_f64_vec(), vec![3.0, 15.0]);
-        let mins = row_agg(&a, 2, AggOp::Min, EvalOpts::plain(true), &mut p);
+        let mins = row_agg(&a, 2, AggOp::Min, NaMode::Off, EvalOpts::plain(true), &mut p);
         assert_eq!(mins.to_f64_vec(), vec![0.0, 4.0]);
         let am = row_arg_extreme(&a, 2, false, &mut p);
         assert_eq!(am.as_i32(), &[3, 2]); // 1-based
@@ -1551,13 +1570,40 @@ mod tests {
     fn row_agg_reuses_released_buffers() {
         let mut p = test_pool();
         let a = Buf::from_f64(&[1.0, 5.0, 2.0, 4.0, 0.0, 6.0]);
-        let sums = row_agg(&a, 2, AggOp::Sum, EvalOpts::plain(true), &mut p);
+        let sums = row_agg(&a, 2, AggOp::Sum, NaMode::Off, EvalOpts::plain(true), &mut p);
         p.release(sums);
         // a recycled buffer must give the same answer as a fresh one
-        let again = row_agg(&a, 2, AggOp::Sum, EvalOpts::plain(true), &mut p);
+        let again = row_agg(&a, 2, AggOp::Sum, NaMode::Off, EvalOpts::plain(true), &mut p);
         assert_eq!(again.to_f64_vec(), vec![3.0, 15.0]);
-        let mins = row_agg(&a, 2, AggOp::Min, EvalOpts::plain(true), &mut p);
+        let mins = row_agg(&a, 2, AggOp::Min, NaMode::Off, EvalOpts::plain(true), &mut p);
         assert_eq!(mins.to_f64_vec(), vec![0.0, 4.0]);
+    }
+
+    #[test]
+    fn row_agg_na_modes() {
+        let mut p = test_pool();
+        // 2 rows x 3 cols col-major: cols [1,NaN], [2,4], [NaN,6]
+        let a = Buf::from_f64(&[1.0, f64::NAN, 2.0, 4.0, f64::NAN, 6.0]);
+        let rm = row_agg(&a, 2, AggOp::Sum, NaMode::Remove, EvalOpts::plain(true), &mut p);
+        assert_eq!(rm.to_f64_vec(), vec![3.0, 10.0]);
+        let pr = row_agg(
+            &a,
+            2,
+            AggOp::Sum,
+            NaMode::Propagate,
+            EvalOpts::plain(true),
+            &mut p,
+        );
+        assert!(pr.get(0).is_na() && pr.get(1).is_na());
+        // NA-free data: NA-aware modes match the legacy kernel bit for bit
+        let clean = Buf::from_f64(&[1.0, 5.0, 2.0, 4.0, 0.0, 6.0]);
+        for na in [NaMode::Propagate, NaMode::Remove] {
+            for op in [AggOp::Sum, AggOp::Min, AggOp::Max, AggOp::Prod] {
+                let v = row_agg(&clean, 2, op, na, EvalOpts::plain(true), &mut p);
+                let off = row_agg(&clean, 2, op, NaMode::Off, EvalOpts::plain(true), &mut p);
+                assert_eq!(v.to_f64_vec(), off.to_f64_vec(), "{op:?}/{na:?}");
+            }
+        }
     }
 
     #[test]

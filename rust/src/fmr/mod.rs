@@ -19,14 +19,17 @@
 pub mod engine;
 pub mod session;
 
-use std::sync::Arc;
+use std::collections::{BTreeSet, HashMap};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex as StdMutex};
 
 use crate::dag::{SinkResult, SinkSpec, UnFn};
 use crate::dtype::{DType, Scalar};
 use crate::error::{FmError, Result};
 use crate::genops::{self, RowAggResult};
 use crate::matrix::{DenseBuilder, HostMat, Matrix, MatrixData, Partitioning};
-use crate::vudf::{AggOp, BinOp, Buf, UnOp};
+use crate::util::sync::LockExt;
+use crate::vudf::{AggOp, BinOp, Buf, NaMode, UnOp};
 
 pub use engine::Engine;
 pub use session::Session;
@@ -87,48 +90,32 @@ impl FmMatrix {
     }
 
     // -- constructors (Table II) --------------------------------------------
+    //
+    // The canonical constructor surface is [`EngineExt`]:
+    // `eng.fill(...)`, `eng.seq_int(...)`, `eng.runif_matrix(...)`.
+    // The old free-standing forms below survive as thin deprecated
+    // shims (see ARCHITECTURE.md for the old→new mapping).
 
-    /// `fm.rep.int(value, n)` — constant n×1 vector.
+    /// Deprecated shim — use [`EngineExt::rep_int`]: `eng.rep_int(...)`.
+    #[deprecated(note = "use EngineExt: eng.rep_int(value, n)")]
     pub fn rep_int(eng: &Arc<Engine>, value: Scalar, n: u64) -> FmMatrix {
-        FmMatrix::wrap(
-            eng,
-            Matrix::new(MatrixData::Virtual(crate::dag::VNode {
-                nrow: n,
-                ncol: 1,
-                dtype: value.dtype(),
-                kind: crate::dag::VKind::Fill(value),
-            })),
-        )
+        eng.rep_int(value, n)
     }
 
-    /// Constant n×p matrix.
+    /// Deprecated shim — use [`EngineExt::fill`]: `eng.fill(...)`.
+    #[deprecated(note = "use EngineExt: eng.fill(value, nrow, ncol)")]
     pub fn fill(eng: &Arc<Engine>, value: Scalar, nrow: u64, ncol: u64) -> FmMatrix {
-        FmMatrix::wrap(
-            eng,
-            Matrix::new(MatrixData::Virtual(crate::dag::VNode {
-                nrow,
-                ncol,
-                dtype: value.dtype(),
-                kind: crate::dag::VKind::Fill(value),
-            })),
-        )
+        eng.fill(value, nrow, ncol)
     }
 
-    /// `fm.seq.int(start, by, n)` — arithmetic sequence, n×1.
+    /// Deprecated shim — use [`EngineExt::seq_int`]: `eng.seq_int(...)`.
+    #[deprecated(note = "use EngineExt: eng.seq_int(start, by, n)")]
     pub fn seq_int(eng: &Arc<Engine>, start: f64, by: f64, n: u64) -> FmMatrix {
-        FmMatrix::wrap(
-            eng,
-            Matrix::new(MatrixData::Virtual(crate::dag::VNode {
-                nrow: n,
-                ncol: 1,
-                dtype: DType::F64,
-                kind: crate::dag::VKind::Seq { start, step: by },
-            })),
-        )
+        eng.seq_int(start, by, n)
     }
 
-    /// `fm.runif.matrix(n, p, min, max)` — deterministic counter-based
-    /// uniform matrix (virtual; materializes on demand).
+    /// Deprecated shim — use [`EngineExt::runif_matrix`].
+    #[deprecated(note = "use EngineExt: eng.runif_matrix(nrow, ncol, lo, hi, seed)")]
     pub fn runif_matrix(
         eng: &Arc<Engine>,
         nrow: u64,
@@ -137,18 +124,11 @@ impl FmMatrix {
         hi: f64,
         seed: u64,
     ) -> FmMatrix {
-        FmMatrix::wrap(
-            eng,
-            Matrix::new(MatrixData::Virtual(crate::dag::VNode {
-                nrow,
-                ncol,
-                dtype: DType::F64,
-                kind: crate::dag::VKind::RandU { seed, lo, hi },
-            })),
-        )
+        eng.runif_matrix(nrow, ncol, lo, hi, seed)
     }
 
-    /// `fm.rnorm.matrix(n, p, mean, sd)`.
+    /// Deprecated shim — use [`EngineExt::rnorm_matrix`].
+    #[deprecated(note = "use EngineExt: eng.rnorm_matrix(nrow, ncol, mean, sd, seed)")]
     pub fn rnorm_matrix(
         eng: &Arc<Engine>,
         nrow: u64,
@@ -157,18 +137,11 @@ impl FmMatrix {
         sd: f64,
         seed: u64,
     ) -> FmMatrix {
-        FmMatrix::wrap(
-            eng,
-            Matrix::new(MatrixData::Virtual(crate::dag::VNode {
-                nrow,
-                ncol,
-                dtype: DType::F64,
-                kind: crate::dag::VKind::RandN { seed, mean, sd },
-            })),
-        )
+        eng.rnorm_matrix(nrow, ncol, mean, sd, seed)
     }
 
     /// `fm.conv.R2FM` — import a small host matrix as a dense FM matrix.
+    /// (Also available engine-anchored as [`EngineExt::from_host`].)
     pub fn from_host(eng: &Arc<Engine>, h: &HostMat) -> Result<FmMatrix> {
         let parts = Partitioning::new(h.nrow as u64, h.ncol as u64);
         let b = DenseBuilder::new_mem(h.buf.dtype(), parts.clone(), &eng.pool)?;
@@ -252,7 +225,18 @@ impl FmMatrix {
 
     /// `fm.agg(A, f)` — whole-matrix aggregate.
     pub fn agg(&self, op: AggOp) -> Result<Scalar> {
-        let r = self.eng.materialize_sinks(&[genops::agg_full(&self.m, op)])?;
+        self.agg_na(op, NaMode::Off)
+    }
+
+    /// `fm.agg(A, f, na.rm=)` — NA-aware whole-matrix aggregate.
+    /// [`NaMode::Remove`] mirrors R's `na.rm=TRUE` (skip NA cells);
+    /// [`NaMode::Propagate`] mirrors `na.rm=FALSE` (any NA poisons the
+    /// result). NA is NaN for float dtypes and `i32::MIN`/`i64::MIN`
+    /// (R's `NA_integer_`) for integer dtypes.
+    pub fn agg_na(&self, op: AggOp, na: NaMode) -> Result<Scalar> {
+        let r = self
+            .eng
+            .materialize_sinks(&[genops::agg_full_na(&self.m, op, na)])?;
         Ok(r.into_iter().next().unwrap().scalar())
     }
 
@@ -264,7 +248,12 @@ impl FmMatrix {
     /// `fm.agg.row(A, f)` — per-row aggregate (n×1; stays lazy on tall
     /// matrices).
     pub fn agg_row(&self, op: AggOp) -> Result<FmMatrix> {
-        match genops::agg_row(&self.m, op) {
+        self.agg_row_na(op, NaMode::Off)
+    }
+
+    /// NA-aware `fm.agg.row` (see [`FmMatrix::agg_na`]).
+    pub fn agg_row_na(&self, op: AggOp, na: NaMode) -> Result<FmMatrix> {
+        match genops::agg_row_na(&self.m, op, na) {
             RowAggResult::InDag(v) => FmMatrix::wrap(&self.eng, v).policy(),
             RowAggResult::Sink(s) => {
                 let r = self.eng.materialize_sinks(&[s])?;
@@ -283,7 +272,12 @@ impl FmMatrix {
 
     /// `fm.agg.col(A, f)` — per-column aggregate as a small host matrix.
     pub fn agg_col(&self, op: AggOp) -> Result<HostMat> {
-        match genops::agg_col(&self.m, op) {
+        self.agg_col_na(op, NaMode::Off)
+    }
+
+    /// NA-aware `fm.agg.col` (see [`FmMatrix::agg_na`]).
+    pub fn agg_col_na(&self, op: AggOp, na: NaMode) -> Result<HostMat> {
+        match genops::agg_col_na(&self.m, op, na) {
             RowAggResult::Sink(s) => {
                 let r = self.eng.materialize_sinks(&[s])?;
                 match r.into_iter().next().unwrap() {
@@ -415,10 +409,17 @@ impl FmMatrix {
         FmMatrix::wrap(&self.eng, genops::cast(&self.m, to)).policy()
     }
 
-    /// `fm.conv.store` — move a matrix to the given storage (Table II).
-    /// Streams the matrix once through a copy pass; the result is a dense
-    /// matrix backed by memory chunks or an SSD file.
-    pub fn conv_store(&self, kind: crate::StorageKind) -> Result<FmMatrix> {
+    /// `fm.conv.store(A, in.mem=)` — move a matrix to the given storage
+    /// (Table II). `in_mem = true` produces a matrix backed by memory
+    /// chunks, `false` an SSD-backed (external-memory) matrix — the same
+    /// vocabulary as [`LoadOptions::in_mem`](crate::ingest::LoadOptions).
+    /// Streams the matrix once through a copy pass.
+    pub fn conv_store(&self, in_mem: bool) -> Result<FmMatrix> {
+        let kind = if in_mem {
+            crate::StorageKind::InMem
+        } else {
+            crate::StorageKind::External
+        };
         // identity node so dense inputs also stream through the pass
         let id = genops::mapply_scalar(
             &self.m.canonical(),
@@ -431,6 +432,150 @@ impl FmMatrix {
         let mut m = mats.remove(0);
         m.transposed = self.m.transposed;
         Ok(FmMatrix::wrap(&self.eng, m))
+    }
+
+    /// Deprecated shim — use [`FmMatrix::conv_store`] with the loader's
+    /// `in_mem` vocabulary.
+    #[deprecated(note = "use conv_store(in_mem: bool)")]
+    pub fn conv_store_kind(&self, kind: crate::StorageKind) -> Result<FmMatrix> {
+        self.conv_store(kind == crate::StorageKind::InMem)
+    }
+
+    /// R's `as.factor` on an integer column (FlashR `fm.as.factor`):
+    /// two streaming passes over the n×1 matrix — collect the distinct
+    /// non-NA values, sort them into the level table, then recode every
+    /// cell to its 1-based level index as `i32`. NA cells stay NA
+    /// (`i32::MIN`). The level table keeps the original values as
+    /// strings, like R's `levels()`; text columns get their factor codes
+    /// at load time instead ([`crate::ingest::ColType::Factor`]).
+    ///
+    /// The recoded vector lands on the engine's default storage, so an
+    /// EM pipeline stays out-of-core through factorization.
+    pub fn as_factor(&self) -> Result<FmVector> {
+        if self.ncol() != 1 || self.m.transposed {
+            return Err(FmError::Shape(format!(
+                "as_factor: expected an n x 1 column, got {}x{}",
+                self.nrow(),
+                self.ncol()
+            )));
+        }
+        if !matches!(self.dtype(), DType::I32 | DType::I64) {
+            return Err(FmError::Unsupported(format!(
+                "as_factor: integer column required, got {}",
+                self.dtype()
+            )));
+        }
+        let mat = if self.m.is_virtual() {
+            self.eng
+                .materialize_intermediate(&[self.m.canonical()])?
+                .into_iter()
+                .next()
+                .unwrap()
+        } else {
+            self.m.clone()
+        };
+        let d = match &*mat.data {
+            MatrixData::Dense(d) => d,
+            _ => {
+                return Err(FmError::Unsupported(
+                    "as_factor: materialized dense column required".into(),
+                ))
+            }
+        };
+        let n_parts = d.parts.n_parts();
+        let threads = self.eng.config.threads.max(1).min(n_parts.max(1));
+
+        // pass 1: distinct non-NA values, merged across partition workers
+        let uniq: StdMutex<BTreeSet<i64>> = StdMutex::new(BTreeSet::new());
+        let err1: StdMutex<Option<FmError>> = StdMutex::new(None);
+        let next1 = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                s.spawn(|| loop {
+                    let i = next1.fetch_add(1, Ordering::Relaxed);
+                    if i >= n_parts || err1.lock_recover().is_some() {
+                        return;
+                    }
+                    match d.partition_buf(i) {
+                        Ok(buf) => {
+                            let mut local = BTreeSet::new();
+                            for r in 0..buf.len() {
+                                let v = buf.get(r);
+                                if !v.is_na() {
+                                    local.insert(v.as_i64());
+                                }
+                            }
+                            uniq.lock_recover().extend(local);
+                        }
+                        Err(e) => {
+                            *err1.lock_recover() = Some(e);
+                            return;
+                        }
+                    }
+                });
+            }
+        });
+        if let Some(e) = err1.into_inner_recover() {
+            return Err(e);
+        }
+        let values: Vec<i64> = uniq.into_inner_recover().into_iter().collect();
+        if values.len() >= i32::MAX as usize {
+            return Err(FmError::Unsupported(format!(
+                "as_factor: {} distinct values exceed the i32 code space",
+                values.len()
+            )));
+        }
+        let code_of: HashMap<i64, i32> = values
+            .iter()
+            .enumerate()
+            .map(|(k, &v)| (v, k as i32 + 1))
+            .collect();
+
+        // pass 2: recode each partition to 1-based level indices
+        let b = crate::ingest::make_builder(
+            &self.eng,
+            DType::I32,
+            d.parts.clone(),
+            &self.eng.config.storage,
+            None,
+        )?;
+        let err2: StdMutex<Option<FmError>> = StdMutex::new(None);
+        let next2 = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                s.spawn(|| loop {
+                    let i = next2.fetch_add(1, Ordering::Relaxed);
+                    if i >= n_parts || err2.lock_recover().is_some() {
+                        return;
+                    }
+                    let step = || -> Result<()> {
+                        let src = d.partition_buf(i)?;
+                        let mut out = Buf::alloc(DType::I32, src.len());
+                        for r in 0..src.len() {
+                            let v = src.get(r);
+                            let code = if v.is_na() {
+                                i32::MIN
+                            } else {
+                                code_of[&v.as_i64()]
+                            };
+                            out.set(r, Scalar::I32(code));
+                        }
+                        b.write_partition_buf(i, &out)
+                    };
+                    if let Err(e) = step() {
+                        *err2.lock_recover() = Some(e);
+                        return;
+                    }
+                });
+            }
+        });
+        if let Some(e) = err2.into_inner_recover() {
+            return Err(e);
+        }
+        Ok(FmVector {
+            v: FmMatrix::wrap(&self.eng, Matrix::from_dense(b.finish())),
+            levels: Some(Arc::new(values.iter().map(|v| v.to_string()).collect())),
+        })
     }
 
     /// A *group of dense matrices* standing for one wider matrix
@@ -567,6 +712,45 @@ impl FmMatrix {
         Ok(self.agg(AggOp::Max)?.as_f64())
     }
 
+    /// `sum(A, na.rm=)` / `min(A, na.rm=)` / `max(A, na.rm=)`.
+    /// With `na_rm = false` any NA cell makes the result NaN (R's
+    /// propagate semantics); with `na_rm = true` NA cells are skipped
+    /// and the R empty-set identities apply (`sum` 0, `min` `Inf`,
+    /// `max` `-Inf` when every cell is NA).
+    pub fn sum_na(&self, na_rm: bool) -> Result<f64> {
+        let s = self.agg_na(AggOp::Sum, NaMode::from_na_rm(na_rm))?;
+        Ok(if s.is_na() { f64::NAN } else { s.as_f64() })
+    }
+
+    pub fn min_na(&self, na_rm: bool) -> Result<f64> {
+        let s = self.agg_na(AggOp::Min, NaMode::from_na_rm(na_rm))?;
+        Ok(if s.is_na() { f64::NAN } else { s.as_f64() })
+    }
+
+    pub fn max_na(&self, na_rm: bool) -> Result<f64> {
+        let s = self.agg_na(AggOp::Max, NaMode::from_na_rm(na_rm))?;
+        Ok(if s.is_na() { f64::NAN } else { s.as_f64() })
+    }
+
+    /// `mean(A, na.rm=)` — NA-removing mean divides by the count of
+    /// non-NA cells, exactly like R. Sum and count are batched as two
+    /// sinks over one shared scan.
+    pub fn mean(&self, na_rm: bool) -> Result<f64> {
+        let na = NaMode::from_na_rm(na_rm);
+        let sinks = [
+            genops::agg_full_na(&self.m, AggOp::Sum, na),
+            genops::agg_full_na(&self.m, AggOp::Count, na),
+        ];
+        let r = self.eng.materialize_sinks(&sinks)?;
+        let mut it = r.into_iter();
+        let s = it.next().unwrap().scalar();
+        let c = it.next().unwrap().scalar();
+        if s.is_na() || c.is_na() {
+            return Ok(f64::NAN);
+        }
+        Ok(s.as_f64() / c.as_f64())
+    }
+
     /// `any(A)` / `all(A)` on a logical matrix.
     pub fn any(&self) -> Result<bool> {
         Ok(self.agg(AggOp::Any)?.as_bool())
@@ -581,9 +765,19 @@ impl FmMatrix {
         self.agg_row(AggOp::Sum)
     }
 
+    /// `rowSums(A, na.rm=)`.
+    pub fn row_sums_na(&self, na_rm: bool) -> Result<FmMatrix> {
+        self.agg_row_na(AggOp::Sum, NaMode::from_na_rm(na_rm))
+    }
+
     /// `colSums(A)` — 1×p host vector.
     pub fn col_sums(&self) -> Result<HostMat> {
         self.agg_col(AggOp::Sum)
+    }
+
+    /// `colSums(A, na.rm=)`.
+    pub fn col_sums_na(&self, na_rm: bool) -> Result<HostMat> {
+        self.agg_col_na(AggOp::Sum, NaMode::from_na_rm(na_rm))
     }
 
     /// `colMeans(A)`.
@@ -595,6 +789,221 @@ impl FmMatrix {
             s.buf.set(j, Scalar::F64(v));
         }
         Ok(s)
+    }
+}
+
+/// Engine-anchored constructors and loaders — the canonical creation
+/// surface. Everything that *creates* data in an engine hangs off the
+/// engine handle itself:
+///
+/// ```
+/// use flashmatrix::fmr::{Engine, EngineExt};
+/// let eng = Engine::default_engine().unwrap();
+/// let x = eng.seq_int(0.0, 1.0, 10);
+/// assert_eq!(x.sum().unwrap(), 45.0);
+/// ```
+///
+/// Implemented for `Arc<Engine>` (an [`FmMatrix`] keeps a strong
+/// reference to its engine, so constructors need the `Arc`, not a bare
+/// `&Engine`). The old free-standing `eng.seq_int(...)`
+/// constructor zoo is deprecated in favor of this trait; ARCHITECTURE.md
+/// documents the old→new mapping.
+/// A column vector with optional factor metadata: the n×1 [`FmMatrix`]
+/// plus, for factor columns, the sorted level table mapping codes
+/// `1..=k` back to the original strings (R's `levels(f)`). Produced by
+/// the list-of-vectors loader ([`EngineExt::load_list_vecs`]) and by
+/// [`FmMatrix::as_factor`]; consumed by [`EngineExt::cbind_list`].
+#[derive(Clone)]
+pub struct FmVector {
+    pub v: FmMatrix,
+    pub levels: Option<Arc<Vec<String>>>,
+}
+
+impl FmVector {
+    /// A plain (non-factor) vector.
+    pub fn plain(v: FmMatrix) -> FmVector {
+        FmVector { v, levels: None }
+    }
+
+    /// Number of factor levels (0 for a non-factor vector).
+    pub fn n_levels(&self) -> usize {
+        self.levels.as_ref().map(|l| l.len()).unwrap_or(0)
+    }
+}
+
+pub trait EngineExt {
+    /// `fm.rep.int(value, n)` — constant n×1 vector.
+    fn rep_int(&self, value: Scalar, n: u64) -> FmMatrix;
+
+    /// Constant n×p matrix.
+    fn fill(&self, value: Scalar, nrow: u64, ncol: u64) -> FmMatrix;
+
+    /// `fm.seq.int(start, by, n)` — arithmetic sequence, n×1.
+    fn seq_int(&self, start: f64, by: f64, n: u64) -> FmMatrix;
+
+    /// `fm.runif.matrix(n, p, min, max)` — deterministic counter-based
+    /// uniform matrix (virtual; materializes on demand).
+    fn runif_matrix(&self, nrow: u64, ncol: u64, lo: f64, hi: f64, seed: u64) -> FmMatrix;
+
+    /// `fm.rnorm.matrix(n, p, mean, sd)`.
+    fn rnorm_matrix(&self, nrow: u64, ncol: u64, mean: f64, sd: f64, seed: u64) -> FmMatrix;
+
+    /// `fm.conv.R2FM` — import a small host matrix.
+    fn from_host(&self, h: &HostMat) -> Result<FmMatrix>;
+
+    /// `fm.cbind` — column concatenation (lazy).
+    fn cbind(&self, ms: &[&FmMatrix]) -> Result<FmMatrix>;
+
+    /// A group of dense matrices standing for one wider matrix
+    /// (see [`FmMatrix::group`] for member requirements).
+    fn group(&self, members: &[&FmMatrix]) -> Result<FmMatrix>;
+
+    /// FlashR's `fm.load.dense.matrix` — parse delimited text files into
+    /// one typed matrix (see [`crate::ingest`] for the two-phase
+    /// out-of-core pipeline and [`crate::ingest::LoadOptions`]).
+    fn load_dense_matrix<P: AsRef<std::path::Path>>(
+        &self,
+        paths: &[P],
+        opts: &crate::ingest::LoadOptions,
+    ) -> Result<FmMatrix>;
+
+    /// FlashR's `fm.load.list.vecs` — parse delimited text files into
+    /// one vector per column, each at its own dtype, with factor level
+    /// tables attached.
+    fn load_list_vecs<P: AsRef<std::path::Path>>(
+        &self,
+        paths: &[P],
+        opts: &crate::ingest::LoadOptions,
+    ) -> Result<Vec<FmVector>>;
+
+    /// FlashR's `fm.cbind.list` — bind loaded column vectors into one
+    /// matrix. Mixed dtypes promote like R: any float column promotes
+    /// the result to `f64`, else any `i64` widens to `i64`; narrower
+    /// columns are cast (lazily) on the way in.
+    fn cbind_list(&self, vs: &[FmVector]) -> Result<FmMatrix>;
+
+    /// FlashR's `fm.get.dense.matrix` — reattach a *named* dense dataset
+    /// persisted in `data_dir` (its `<name>.dense.json` sidecar carries
+    /// dtype, shape and write-time partition checksums).
+    fn get_dense_matrix(&self, name: &str) -> Result<FmMatrix>;
+}
+
+impl EngineExt for Arc<Engine> {
+    fn rep_int(&self, value: Scalar, n: u64) -> FmMatrix {
+        self.fill(value, n, 1)
+    }
+
+    fn fill(&self, value: Scalar, nrow: u64, ncol: u64) -> FmMatrix {
+        FmMatrix::wrap(
+            self,
+            Matrix::new(MatrixData::Virtual(crate::dag::VNode {
+                nrow,
+                ncol,
+                dtype: value.dtype(),
+                kind: crate::dag::VKind::Fill(value),
+            })),
+        )
+    }
+
+    fn seq_int(&self, start: f64, by: f64, n: u64) -> FmMatrix {
+        FmMatrix::wrap(
+            self,
+            Matrix::new(MatrixData::Virtual(crate::dag::VNode {
+                nrow: n,
+                ncol: 1,
+                dtype: DType::F64,
+                kind: crate::dag::VKind::Seq { start, step: by },
+            })),
+        )
+    }
+
+    fn runif_matrix(&self, nrow: u64, ncol: u64, lo: f64, hi: f64, seed: u64) -> FmMatrix {
+        FmMatrix::wrap(
+            self,
+            Matrix::new(MatrixData::Virtual(crate::dag::VNode {
+                nrow,
+                ncol,
+                dtype: DType::F64,
+                kind: crate::dag::VKind::RandU { seed, lo, hi },
+            })),
+        )
+    }
+
+    fn rnorm_matrix(&self, nrow: u64, ncol: u64, mean: f64, sd: f64, seed: u64) -> FmMatrix {
+        FmMatrix::wrap(
+            self,
+            Matrix::new(MatrixData::Virtual(crate::dag::VNode {
+                nrow,
+                ncol,
+                dtype: DType::F64,
+                kind: crate::dag::VKind::RandN { seed, mean, sd },
+            })),
+        )
+    }
+
+    fn from_host(&self, h: &HostMat) -> Result<FmMatrix> {
+        FmMatrix::from_host(self, h)
+    }
+
+    fn cbind(&self, ms: &[&FmMatrix]) -> Result<FmMatrix> {
+        FmMatrix::cbind(self, ms)
+    }
+
+    fn group(&self, members: &[&FmMatrix]) -> Result<FmMatrix> {
+        FmMatrix::group(self, members)
+    }
+
+    fn load_dense_matrix<P: AsRef<std::path::Path>>(
+        &self,
+        paths: &[P],
+        opts: &crate::ingest::LoadOptions,
+    ) -> Result<FmMatrix> {
+        crate::ingest::load_dense_matrix(self, paths, opts)
+    }
+
+    fn load_list_vecs<P: AsRef<std::path::Path>>(
+        &self,
+        paths: &[P],
+        opts: &crate::ingest::LoadOptions,
+    ) -> Result<Vec<FmVector>> {
+        crate::ingest::load_list_vecs(self, paths, opts)
+    }
+
+    fn cbind_list(&self, vs: &[FmVector]) -> Result<FmMatrix> {
+        if vs.is_empty() {
+            return Err(FmError::Shape("cbind_list: empty vector list".into()));
+        }
+        let dtypes: Vec<DType> = vs.iter().map(|v| v.v.dtype()).collect();
+        let promoted = if dtypes.iter().any(|d| matches!(d, DType::F64 | DType::F32)) {
+            DType::F64
+        } else if dtypes.iter().any(|d| *d == DType::I64) {
+            DType::I64
+        } else {
+            dtypes[0]
+        };
+        let cast: Vec<FmMatrix> = vs
+            .iter()
+            .map(|v| {
+                if v.v.dtype() == promoted {
+                    Ok(v.v.clone())
+                } else {
+                    v.v.cast(promoted)
+                }
+            })
+            .collect::<Result<_>>()?;
+        let refs: Vec<&FmMatrix> = cast.iter().collect();
+        FmMatrix::cbind(self, &refs)
+    }
+
+    fn get_dense_matrix(&self, name: &str) -> Result<FmMatrix> {
+        let (data, _meta) = crate::matrix::DenseData::open_named(
+            &self.config.data_dir,
+            name,
+            Arc::clone(&self.ssd),
+            Arc::clone(&self.metrics),
+            self.cache.clone(),
+        )?;
+        Ok(FmMatrix::wrap(self, Matrix::from_dense(data)))
     }
 }
 
@@ -636,7 +1045,7 @@ mod tests {
     #[test]
     fn fill_sum_and_means() {
         let e = eng();
-        let a = FmMatrix::fill(&e, Scalar::F64(2.0), 1000, 3);
+        let a = e.fill(Scalar::F64(2.0), 1000, 3);
         assert_eq!(a.sum().unwrap(), 6000.0);
         let cm = a.col_means().unwrap();
         assert_eq!(cm.buf.to_f64_vec(), vec![2.0, 2.0, 2.0]);
@@ -646,7 +1055,7 @@ mod tests {
     fn seq_and_row_sums() {
         let e = eng();
         // seq 0..9 as a column; rowSums of 1 col = itself; sum = 45
-        let s = FmMatrix::seq_int(&e, 0.0, 1.0, 10);
+        let s = e.seq_int(0.0, 1.0, 10);
         assert_eq!(s.sum().unwrap(), 45.0);
         let h = s.to_host().unwrap();
         assert_eq!(h.get(3, 0).as_f64(), 3.0);
@@ -665,7 +1074,7 @@ mod tests {
                 ..Default::default()
             })
             .unwrap();
-            let x = FmMatrix::runif_matrix(&e, 5000, 4, -1.0, 1.0, 7);
+            let x = e.runif_matrix(5000, 4, -1.0, 1.0, 7);
             let expr = x.abs().unwrap().add(&x.sq().unwrap()).unwrap();
             expr.sum().unwrap()
         };
@@ -740,10 +1149,44 @@ mod tests {
     }
 
     #[test]
+    fn na_rm_aggregates_match_r() {
+        let e = eng();
+        let h = HostMat::from_rows_f64(&[
+            vec![1.0, f64::NAN],
+            vec![2.0, 5.0],
+            vec![f64::NAN, 7.0],
+        ]);
+        let x = FmMatrix::from_host(&e, &h).unwrap();
+        // na.rm=TRUE skips NA cells
+        assert_eq!(x.sum_na(true).unwrap(), 15.0);
+        assert_eq!(x.min_na(true).unwrap(), 1.0);
+        assert_eq!(x.max_na(true).unwrap(), 7.0);
+        assert_eq!(x.mean(true).unwrap(), 15.0 / 4.0);
+        // na.rm=FALSE propagates
+        assert!(x.sum_na(false).unwrap().is_nan());
+        assert!(x.mean(false).unwrap().is_nan());
+        // per-column sums with na.rm
+        let cs = x.col_sums_na(true).unwrap();
+        assert_eq!(cs.buf.to_f64_vec(), vec![3.0, 12.0]);
+        let cs = x.col_sums_na(false).unwrap();
+        assert!(cs.buf.get(0).as_f64().is_nan());
+        // per-row sums with na.rm (in-DAG path)
+        let rs = x.row_sums_na(true).unwrap().to_host().unwrap();
+        assert_eq!(rs.get(0, 0).as_f64(), 1.0);
+        assert_eq!(rs.get(1, 0).as_f64(), 7.0);
+        assert_eq!(rs.get(2, 0).as_f64(), 7.0);
+        // NA-free data: na.rm variants agree with the legacy path
+        let y = e.fill(Scalar::F64(2.0), 100, 3);
+        assert_eq!(y.sum_na(true).unwrap(), y.sum().unwrap());
+        assert_eq!(y.sum_na(false).unwrap(), y.sum().unwrap());
+        assert_eq!(y.mean(false).unwrap(), 2.0);
+    }
+
+    #[test]
     fn mixed_dtype_promotes() {
         let e = eng();
-        let a = FmMatrix::fill(&e, Scalar::I32(3), 100, 2);
-        let b = FmMatrix::fill(&e, Scalar::F64(0.5), 100, 2);
+        let a = e.fill(Scalar::I32(3), 100, 2);
+        let b = e.fill(Scalar::F64(0.5), 100, 2);
         let c = a.add(&b).unwrap();
         assert_eq!(c.dtype(), DType::F64);
         assert_eq!(c.sum().unwrap(), 700.0);

@@ -70,7 +70,7 @@ impl Session {
 mod tests {
     use super::*;
     use crate::dtype::Scalar;
-    use crate::fmr::FmMatrix;
+    use crate::fmr::EngineExt;
     use crate::testutil::{out_of_core_config, TempDir};
 
     #[test]
@@ -83,8 +83,8 @@ mod tests {
         assert_ne!(s1.id(), s2.id());
         assert_eq!(root.cache.as_ref().unwrap().session_count(), 2);
 
-        let a = FmMatrix::fill(s1.engine(), Scalar::F64(2.0), 40_000, 4);
-        let b = FmMatrix::fill(s2.engine(), Scalar::F64(3.0), 40_000, 4);
+        let a = s1.engine().fill(Scalar::F64(2.0), 40_000, 4);
+        let b = s2.engine().fill(Scalar::F64(3.0), 40_000, 4);
         let sa = a.materialize().unwrap().sum().unwrap();
         let sb = b.materialize().unwrap().sum().unwrap();
         assert_eq!(sa, 2.0 * 40_000.0 * 4.0);
@@ -105,12 +105,12 @@ mod tests {
         let dir = TempDir::new("session-parity");
         let root = Engine::new(out_of_core_config(dir.path())).unwrap();
         let via_root = {
-            let x = FmMatrix::runif_matrix(&root, 30_000, 4, -1.0, 1.0, 11);
+            let x = root.runif_matrix(30_000, 4, -1.0, 1.0, 11);
             x.sq().unwrap().sum().unwrap()
         };
         let s = Session::open(&root, out_of_core_config(dir.path())).unwrap();
         let via_session = {
-            let x = FmMatrix::runif_matrix(s.engine(), 30_000, 4, -1.0, 1.0, 11);
+            let x = s.engine().runif_matrix(30_000, 4, -1.0, 1.0, 11);
             x.sq().unwrap().sum().unwrap()
         };
         assert_eq!(via_root.to_bits(), via_session.to_bits());

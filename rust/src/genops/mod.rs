@@ -20,7 +20,7 @@
 //! and forcing a sink runs the whole chain in one fused parallel pass:
 //!
 //! ```
-//! use flashmatrix::fmr::{Engine, FmMatrix};
+//! use flashmatrix::fmr::{Engine, EngineExt, FmMatrix};
 //! use flashmatrix::vudf::AggOp;
 //! use flashmatrix::EngineConfig;
 //!
@@ -29,7 +29,7 @@
 //!     ..Default::default()
 //! })
 //! .unwrap();
-//! let x = FmMatrix::runif_matrix(&eng, 10_000, 4, 0.0, 1.0, 7);
+//! let x = eng.runif_matrix(10_000, 4, 0.0, 1.0, 7);
 //! let total = x.sq().unwrap().agg(AggOp::Sum).unwrap().as_f64();
 //! assert!(total > 0.0 && total < 10_000.0 * 4.0);
 //! ```
@@ -38,7 +38,7 @@ use crate::dag::{SinkKind, SinkSpec, UnFn, VKind, VNode};
 use crate::dtype::{DType, Scalar};
 use crate::error::{FmError, Result};
 use crate::matrix::{HostMat, Matrix, MatrixData};
-use crate::vudf::{AggOp, BinOp};
+use crate::vudf::{AggOp, BinOp, NaMode};
 
 fn vmat(nrow: u64, ncol: u64, dtype: DType, kind: VKind) -> Matrix {
     Matrix::new(MatrixData::Virtual(VNode {
@@ -356,10 +356,16 @@ pub enum RowAggResult {
 /// ));
 /// ```
 pub fn agg_row(a: &Matrix, op: AggOp) -> RowAggResult {
+    agg_row_na(a, op, NaMode::Off)
+}
+
+/// [`agg_row`] with explicit NA handling (R's `na.rm=`; see
+/// [`NaMode`]).
+pub fn agg_row_na(a: &Matrix, op: AggOp, na: NaMode) -> RowAggResult {
     if a.transposed {
         RowAggResult::Sink(SinkSpec {
             source: a.canonical(),
-            kind: SinkKind::AggCol(op),
+            kind: SinkKind::AggCol(op, na),
         })
     } else {
         let dt = op.acc_dtype(a.dtype());
@@ -370,6 +376,7 @@ pub fn agg_row(a: &Matrix, op: AggOp) -> RowAggResult {
             VKind::RowAgg {
                 a: a.canonical(),
                 op,
+                na,
             },
         ))
     }
@@ -378,6 +385,11 @@ pub fn agg_row(a: &Matrix, op: AggOp) -> RowAggResult {
 /// `fm.agg.col(A, f)` on a tall matrix: sink. On a wide view: in-DAG
 /// per-row reduction of the canonical data.
 pub fn agg_col(a: &Matrix, op: AggOp) -> RowAggResult {
+    agg_col_na(a, op, NaMode::Off)
+}
+
+/// [`agg_col`] with explicit NA handling.
+pub fn agg_col_na(a: &Matrix, op: AggOp, na: NaMode) -> RowAggResult {
     if a.transposed {
         let dt = op.acc_dtype(a.dtype());
         RowAggResult::InDag(vmat(
@@ -387,12 +399,13 @@ pub fn agg_col(a: &Matrix, op: AggOp) -> RowAggResult {
             VKind::RowAgg {
                 a: a.canonical(),
                 op,
+                na,
             },
         ))
     } else {
         RowAggResult::Sink(SinkSpec {
             source: a.canonical(),
-            kind: SinkKind::AggCol(op),
+            kind: SinkKind::AggCol(op, na),
         })
     }
 }
@@ -413,12 +426,17 @@ pub fn agg_col(a: &Matrix, op: AggOp) -> RowAggResult {
 /// #     kind: VKind::Fill(Scalar::F64(1.0)),
 /// # }));
 /// let sink = genops::agg_full(&a, AggOp::Max);
-/// assert!(matches!(sink.kind, SinkKind::AggFull(AggOp::Max)));
+/// assert!(matches!(sink.kind, SinkKind::AggFull(AggOp::Max, _)));
 /// ```
 pub fn agg_full(a: &Matrix, op: AggOp) -> SinkSpec {
+    agg_full_na(a, op, NaMode::Off)
+}
+
+/// [`agg_full`] with explicit NA handling (R's `na.rm=`).
+pub fn agg_full_na(a: &Matrix, op: AggOp, na: NaMode) -> SinkSpec {
     SinkSpec {
         source: a.canonical(),
-        kind: SinkKind::AggFull(op),
+        kind: SinkKind::AggFull(op, na),
     }
 }
 
@@ -685,7 +703,7 @@ mod tests {
         }
         match agg_row(&a.t(), AggOp::Sum) {
             RowAggResult::Sink(s) => {
-                assert!(matches!(s.kind, SinkKind::AggCol(AggOp::Sum)))
+                assert!(matches!(s.kind, SinkKind::AggCol(AggOp::Sum, NaMode::Off)))
             }
             _ => panic!("wide agg.row must be a sink"),
         }

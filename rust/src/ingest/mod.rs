@@ -1,0 +1,1209 @@
+//! Streaming delimited-text ingestion: parallel, out-of-core text →
+//! typed EM matrices (FlashR's `fm.load.dense.matrix` /
+//! `fm.load.list.vecs`).
+//!
+//! Two-phase loader over newline-aligned chunks:
+//!
+//! 1. **Scan** — every chunk is read once, in parallel, to count records,
+//!    collect factor vocabularies and NA cells, validate record shape and
+//!    record a CRC32 of the raw text. Prefix sums over the per-chunk
+//!    counts give every chunk its global row offset (and per-file line
+//!    offset, for error reporting).
+//! 2. **Parse** — one task per *output partition*: the chunks overlapping
+//!    the partition's row range are re-read (verified against the phase-1
+//!    CRC; one re-read, then [`FmError::Corrupt`]), parsed into col-major
+//!    buffers and written through the ordinary
+//!    [`DenseBuilder`](crate::matrix::DenseBuilder) path — ingestion rides
+//!    the same §III-B3 memory hierarchy, fault injection and bounded-retry
+//!    machinery as every other external matrix.
+//!
+//! Memory stays bounded by `workers × (chunk + partition)` regardless of
+//! input size. Column types follow FlashR's `ele.types` schema codes:
+//! `I` integer, `F` float, `H` hashed (feature-hashing trick), `X` factor
+//! (categorical; levels collected in the scan phase, sorted, coded 1..k —
+//! R's 1-based sorted-levels convention).
+//!
+//! Input grammar: records are `\n`-terminated (a trailing `\r` is
+//! stripped, so CRLF files load), completely blank lines are skipped but
+//! still counted for error line numbers, and every record must have
+//! exactly `schema.len()` fields — a trailing delimiter therefore reads
+//! as one extra (empty) field and is rejected as a ragged row. Fields
+//! are ASCII-whitespace-trimmed before NA matching and parsing.
+
+use std::collections::{BTreeSet, HashMap};
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::dtype::{DType, Scalar};
+use crate::error::{FmError, Result};
+use crate::fmr::{Engine, FmMatrix, FmVector};
+use crate::matrix::{DenseBuilder, Matrix, Partitioning};
+use crate::runtime::manifest::DenseColMeta;
+use crate::storage::{crc32, FileStore};
+use crate::util::sync::LockExt;
+use crate::vudf::Buf;
+use crate::StorageKind;
+
+/// Default bucket count for `H` (hashed) columns: 2^20, the order of the
+/// hashing-trick width used for the Criteo categorical features.
+pub const DEFAULT_HASH_BUCKETS: u32 = 1 << 20;
+
+/// Type of one input column (FlashR's `ele.types` codes).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ColType {
+    /// `I`: decimal integer → `i32` (NA stored as `i32::MIN`).
+    Int,
+    /// `F`: decimal float → `f64` (NA stored as NaN).
+    Float,
+    /// `H`: feature-hashed bytes → `i32` code in `1..=buckets`
+    /// (FNV-1a 64 of the trimmed field, mod `buckets`, plus 1).
+    Hashed { buckets: u32 },
+    /// `X`: factor (categorical string) → `i32` code in `1..=k` over the
+    /// sorted level set collected in the scan phase.
+    Factor,
+}
+
+impl ColType {
+    /// One-character schema code (`I`/`F`/`H`/`X`).
+    pub fn code(&self) -> char {
+        match self {
+            ColType::Int => 'I',
+            ColType::Float => 'F',
+            ColType::Hashed { .. } => 'H',
+            ColType::Factor => 'X',
+        }
+    }
+
+    /// Storage dtype of a single column of this type.
+    pub fn dtype(&self) -> DType {
+        match self {
+            ColType::Float => DType::F64,
+            ColType::Int | ColType::Hashed { .. } | ColType::Factor => DType::I32,
+        }
+    }
+}
+
+/// Typed column schema of a delimited file: one [`ColType`] per field.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Schema {
+    pub cols: Vec<ColType>,
+}
+
+impl Schema {
+    /// Parse a code string, e.g. `"IIFXH"` — the compact spelling of
+    /// FlashR's `ele.types` vector. `H` columns get
+    /// [`DEFAULT_HASH_BUCKETS`]; use [`Schema::of`] for custom buckets.
+    pub fn parse(codes: &str) -> Result<Schema> {
+        let cols = codes
+            .chars()
+            .map(|c| match c {
+                'I' => Ok(ColType::Int),
+                'F' => Ok(ColType::Float),
+                'H' => Ok(ColType::Hashed {
+                    buckets: DEFAULT_HASH_BUCKETS,
+                }),
+                'X' => Ok(ColType::Factor),
+                other => Err(FmError::Config(format!(
+                    "ingest: unknown schema code '{other}' (want I, F, H or X)"
+                ))),
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Schema { cols })
+    }
+
+    /// Schema from explicit column types.
+    pub fn of(cols: Vec<ColType>) -> Schema {
+        Schema { cols }
+    }
+
+    /// `n` columns of one type (e.g. all-float feature blocks).
+    pub fn repeated(col: ColType, n: usize) -> Schema {
+        Schema {
+            cols: vec![col; n],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.cols.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cols.is_empty()
+    }
+
+    /// Storage dtype of the single dense matrix holding every column:
+    /// f64 when any `F` column is present, else i32.
+    pub fn uniform_dtype(&self) -> DType {
+        if self.cols.iter().any(|c| matches!(c, ColType::Float)) {
+            DType::F64
+        } else {
+            DType::I32
+        }
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.cols.is_empty() {
+            return Err(FmError::Config("ingest: empty schema".into()));
+        }
+        for c in &self.cols {
+            if let ColType::Hashed { buckets: 0 } = c {
+                return Err(FmError::Config(
+                    "ingest: hashed column needs buckets > 0".into(),
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Options for [`load_dense_matrix`] / [`load_list_vecs`] — the builder
+/// mirror of FlashR's `fm.load.*` keyword arguments.
+#[derive(Clone, Debug)]
+pub struct LoadOptions {
+    pub schema: Schema,
+    /// Field delimiter byte (default `,`; Criteo uses `\t`).
+    pub delim: u8,
+    /// `Some(true)` forces in-memory, `Some(false)` forces external
+    /// storage; `None` follows [`EngineConfig::storage`]
+    /// (`crate::EngineConfig::storage`).
+    pub in_mem: Option<bool>,
+    /// Persist the loaded matrix under this name (external storage
+    /// only): named backing file(s) plus a `<name>.dense.json` sidecar,
+    /// reopenable across runs with `Engine::get_dense_matrix`.
+    pub name: Option<String>,
+    /// Field spellings that read as NA, compared after ASCII-whitespace
+    /// trim (default: the empty field and `NA`).
+    pub na_values: Vec<String>,
+}
+
+impl LoadOptions {
+    pub fn new(schema: Schema) -> LoadOptions {
+        LoadOptions {
+            schema,
+            delim: b',',
+            in_mem: None,
+            name: None,
+            na_values: vec![String::new(), "NA".to_string()],
+        }
+    }
+
+    pub fn delim(mut self, d: u8) -> Self {
+        self.delim = d;
+        self
+    }
+
+    pub fn in_mem(mut self, v: bool) -> Self {
+        self.in_mem = Some(v);
+        self
+    }
+
+    pub fn name(mut self, n: impl Into<String>) -> Self {
+        self.name = Some(n.into());
+        self
+    }
+
+    pub fn na_values(mut self, vals: &[&str]) -> Self {
+        self.na_values = vals.iter().map(|s| s.to_string()).collect();
+        self
+    }
+}
+
+// ---------------------------------------------------------------------------
+// field-level parsing
+
+/// FNV-1a 64 over raw bytes (the hashing-trick hash for `H` columns).
+fn fnv1a64(b: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &c in b {
+        h ^= c as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// ASCII-whitespace trim of a field's bytes.
+fn trim(b: &[u8]) -> &[u8] {
+    let s = b
+        .iter()
+        .position(|c| !c.is_ascii_whitespace())
+        .unwrap_or(b.len());
+    let e = b
+        .iter()
+        .rposition(|c| !c.is_ascii_whitespace())
+        .map(|p| p + 1)
+        .unwrap_or(s);
+    &b[s..e]
+}
+
+/// A parsed cell before it is written at the sink's storage dtype.
+enum CellVal {
+    I(i32),
+    F(f64),
+    Na,
+}
+
+/// Parse one field. Errors are bare messages; the caller attaches the
+/// (file, line, col) location.
+fn parse_field(
+    raw: &[u8],
+    ct: &ColType,
+    na: &[&[u8]],
+    levels: Option<&HashMap<String, i32>>,
+) -> std::result::Result<CellVal, String> {
+    let f = trim(raw);
+    if na.iter().any(|n| *n == f) {
+        return Ok(CellVal::Na);
+    }
+    match ct {
+        ColType::Int => {
+            let t = std::str::from_utf8(f)
+                .map_err(|_| "invalid UTF-8 in integer field".to_string())?;
+            let v: i64 = t
+                .parse()
+                .map_err(|_| format!("invalid integer '{t}'"))?;
+            // i32::MIN is the NA sentinel: an input spelling it must be
+            // rejected, not silently read back as NA
+            if v <= i32::MIN as i64 || v > i32::MAX as i64 {
+                return Err(format!("integer '{t}' out of i32 range"));
+            }
+            Ok(CellVal::I(v as i32))
+        }
+        ColType::Float => {
+            let t = std::str::from_utf8(f)
+                .map_err(|_| "invalid UTF-8 in float field".to_string())?;
+            let v: f64 = t.parse().map_err(|_| format!("invalid float '{t}'"))?;
+            Ok(CellVal::F(v))
+        }
+        ColType::Hashed { buckets } => {
+            Ok(CellVal::I((fnv1a64(f) % *buckets as u64) as i32 + 1))
+        }
+        ColType::Factor => {
+            let t = std::str::from_utf8(f)
+                .map_err(|_| "invalid UTF-8 in factor field".to_string())?;
+            match levels.and_then(|m| m.get(t)) {
+                Some(code) => Ok(CellVal::I(*code)),
+                None => Err(format!("factor level '{t}' not in scanned vocabulary")),
+            }
+        }
+    }
+}
+
+/// Widen a parsed cell to the sink's storage dtype (I32 or F64).
+fn cell_scalar(v: CellVal, dt: DType) -> Scalar {
+    match (v, dt) {
+        (CellVal::Na, DType::F64) => Scalar::F64(f64::NAN),
+        (CellVal::Na, _) => Scalar::I32(i32::MIN),
+        (CellVal::I(x), DType::F64) => Scalar::F64(x as f64),
+        (CellVal::I(x), _) => Scalar::I32(x),
+        (CellVal::F(x), _) => Scalar::F64(x),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// phase 1: chunk planning + scan
+
+/// One newline-aligned text chunk after the scan phase.
+struct ChunkMeta {
+    /// Index into the loader's path/store lists.
+    file: usize,
+    off: u64,
+    len: usize,
+    /// Data records (non-blank lines) in the chunk.
+    rows: u64,
+    /// CRC32 of the raw chunk bytes, re-verified in the parse phase.
+    crc: u32,
+    /// Global first row of the chunk (rows concatenate across files).
+    row0: u64,
+    /// Physical lines before this chunk *within its file* (0-based).
+    line0: u64,
+}
+
+/// Physical lines in a chunk: newline count plus an unterminated tail.
+fn count_lines(bytes: &[u8]) -> u64 {
+    let nl = bytes.iter().filter(|b| **b == b'\n').count() as u64;
+    nl + u64::from(bytes.last().map_or(false, |b| *b != b'\n'))
+}
+
+/// First record start at or after `nominal`: the byte after the first
+/// newline in `[nominal - 1, flen)`. Probes are small reads through the
+/// same fault-injected store as the scan itself.
+fn next_record_start(store: &FileStore, nominal: u64, flen: u64) -> Result<Option<u64>> {
+    const PROBE: usize = 64 << 10;
+    let mut p = nominal - 1;
+    let mut buf = vec![0u8; PROBE];
+    while p < flen {
+        let n = PROBE.min((flen - p) as usize);
+        store.read_at(p, &mut buf[..n])?;
+        if let Some(i) = buf[..n].iter().position(|b| *b == b'\n') {
+            return Ok(Some(p + i as u64 + 1));
+        }
+        p += n as u64;
+    }
+    Ok(None)
+}
+
+/// Newline-aligned chunk table of one file: every chunk starts at byte 0
+/// or right after a newline, and only the file's last chunk may end
+/// without one.
+fn chunk_bounds(store: &FileStore, chunk_bytes: usize) -> Result<Vec<(u64, usize)>> {
+    let flen = store.len();
+    let mut starts = vec![0u64];
+    loop {
+        let nominal = *starts.last().unwrap() + chunk_bytes as u64;
+        if nominal >= flen {
+            break;
+        }
+        match next_record_start(store, nominal, flen)? {
+            Some(s) if s < flen => starts.push(s),
+            _ => break,
+        }
+    }
+    Ok(starts
+        .iter()
+        .enumerate()
+        .map(|(i, &s)| {
+            let end = starts.get(i + 1).copied().unwrap_or(flen);
+            (s, (end - s) as usize)
+        })
+        .filter(|(_, l)| *l > 0)
+        .collect())
+}
+
+/// Per-chunk result of the scan phase.
+struct ChunkScan {
+    rows: u64,
+    lines: u64,
+    crc: u32,
+    na_cells: u64,
+    /// One vocabulary per factor column, in schema order.
+    vocabs: Vec<BTreeSet<String>>,
+    /// First structural error: (0-based line in chunk, 1-based col, msg).
+    err: Option<(u64, u64, String)>,
+}
+
+/// Scan one chunk: validate record shape, count rows/NA cells, collect
+/// factor vocabularies. `vocab_idx[j]` maps schema column j to its slot
+/// in `vocabs` (None for non-factor columns).
+fn scan_chunk(
+    bytes: &[u8],
+    o: &LoadOptions,
+    na: &[&[u8]],
+    vocab_idx: &[Option<usize>],
+    n_factors: usize,
+) -> ChunkScan {
+    let want = o.schema.len();
+    let mut s = ChunkScan {
+        rows: 0,
+        lines: count_lines(bytes),
+        crc: crc32(bytes),
+        na_cells: 0,
+        vocabs: vec![BTreeSet::new(); n_factors],
+        err: None,
+    };
+    let mut line = 0u64;
+    let mut start = 0usize;
+    while start < bytes.len() {
+        let end = bytes[start..]
+            .iter()
+            .position(|b| *b == b'\n')
+            .map(|q| start + q)
+            .unwrap_or(bytes.len());
+        let mut rec = &bytes[start..end];
+        if rec.last() == Some(&b'\r') {
+            rec = &rec[..rec.len() - 1];
+        }
+        if !rec.is_empty() {
+            let mut nf = 0usize;
+            for (j, field) in rec.split(|b| *b == o.delim).enumerate() {
+                nf += 1;
+                if j >= want {
+                    continue; // counted; rejected below with the full count
+                }
+                let f = trim(field);
+                if na.iter().any(|n| *n == f) {
+                    s.na_cells += 1;
+                } else if let Some(vi) = vocab_idx[j] {
+                    match std::str::from_utf8(f) {
+                        Ok(t) => {
+                            s.vocabs[vi].insert(t.to_string());
+                        }
+                        Err(_) => {
+                            s.err = Some((
+                                line,
+                                j as u64 + 1,
+                                "invalid UTF-8 in factor field".into(),
+                            ));
+                            return s;
+                        }
+                    }
+                }
+            }
+            if nf != want {
+                s.err = Some((
+                    line,
+                    nf as u64,
+                    format!("expected {want} fields, found {nf}"),
+                ));
+                return s;
+            }
+            s.rows += 1;
+        }
+        line += 1;
+        start = end + 1;
+    }
+    s
+}
+
+/// Everything the parse phase needs from the scan phase.
+struct ScanResult {
+    stores: Vec<Arc<FileStore>>,
+    chunks: Vec<ChunkMeta>,
+    nrow: u64,
+    /// Per schema column: sorted factor levels (None for non-factors).
+    levels: Vec<Option<Arc<Vec<String>>>>,
+}
+
+fn ingest_worker_count(eng: &Engine) -> usize {
+    let w = if eng.config.ingest_workers == 0 {
+        eng.config.threads
+    } else {
+        eng.config.ingest_workers
+    };
+    w.max(1)
+}
+
+fn scan_phase<P: AsRef<Path>>(
+    eng: &Arc<Engine>,
+    paths: &[P],
+    o: &LoadOptions,
+) -> Result<ScanResult> {
+    o.schema.validate()?;
+    if paths.is_empty() {
+        return Err(FmError::Config("ingest: no input files".into()));
+    }
+    let mut stores = Vec::with_capacity(paths.len());
+    let mut raw: Vec<(usize, u64, usize)> = Vec::new();
+    for (fi, p) in paths.iter().enumerate() {
+        let p = p.as_ref();
+        let store = FileStore::open(p, Arc::clone(&eng.ssd), Arc::clone(&eng.metrics))
+            .map_err(|e| {
+                FmError::Storage(format!("ingest: cannot open {}: {e}", p.display()))
+            })?;
+        for (off, len) in chunk_bounds(&store, eng.config.ingest_chunk_bytes.max(1))? {
+            raw.push((fi, off, len));
+        }
+        stores.push(Arc::new(store));
+    }
+
+    let mut vocab_idx: Vec<Option<usize>> = Vec::with_capacity(o.schema.len());
+    let mut n_factors = 0usize;
+    for c in &o.schema.cols {
+        if matches!(c, ColType::Factor) {
+            vocab_idx.push(Some(n_factors));
+            n_factors += 1;
+        } else {
+            vocab_idx.push(None);
+        }
+    }
+    let na: Vec<&[u8]> = o.na_values.iter().map(|s| s.as_bytes()).collect();
+
+    // parallel scan, one claim per chunk (the datasets::from_fn idiom)
+    let n_chunks = raw.len();
+    let scans: Vec<Mutex<Option<ChunkScan>>> = (0..n_chunks).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    let workers = ingest_worker_count(eng).min(n_chunks.max(1));
+    let io_err: Mutex<Option<FmError>> = Mutex::new(None);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n_chunks {
+                    break;
+                }
+                let (fi, off, len) = raw[i];
+                let mut bytes = vec![0u8; len];
+                if let Err(e) = stores[fi].read_at(off, &mut bytes) {
+                    let mut g = io_err.lock_recover();
+                    if g.is_none() {
+                        *g = Some(e);
+                    }
+                    break;
+                }
+                *scans[i].lock_recover() =
+                    Some(scan_chunk(&bytes, o, &na, &vocab_idx, n_factors));
+            });
+        }
+    });
+    if let Some(e) = io_err.into_inner_recover() {
+        return Err(e);
+    }
+    let scans: Vec<ChunkScan> = scans
+        .into_iter()
+        .map(|m| m.into_inner_recover().expect("chunk scanned"))
+        .collect();
+
+    // first structural error in (file, offset) order — deterministic
+    // under any thread schedule; line numbers fixed up via prefix sums
+    let mut file_lines = vec![0u64; stores.len()];
+    for (i, sc) in scans.iter().enumerate() {
+        let fi = raw[i].0;
+        if let Some((l, c, m)) = &sc.err {
+            return Err(FmError::Parse {
+                file: paths[fi].as_ref().display().to_string(),
+                line: file_lines[fi] + l + 1,
+                col: *c,
+                msg: m.clone(),
+            });
+        }
+        file_lines[fi] += sc.lines;
+    }
+
+    // prefix sums: global rows (across files), per-file lines; merge vocabs
+    let mut chunks = Vec::with_capacity(n_chunks);
+    let mut row0 = 0u64;
+    let mut line_off = vec![0u64; stores.len()];
+    let mut na_cells = 0u64;
+    let mut vocabs: Vec<BTreeSet<String>> = vec![BTreeSet::new(); n_factors];
+    for (i, sc) in scans.into_iter().enumerate() {
+        let (fi, off, len) = raw[i];
+        chunks.push(ChunkMeta {
+            file: fi,
+            off,
+            len,
+            rows: sc.rows,
+            crc: sc.crc,
+            row0,
+            line0: line_off[fi],
+        });
+        row0 += sc.rows;
+        line_off[fi] += sc.lines;
+        na_cells += sc.na_cells;
+        for (v, s) in vocabs.iter_mut().zip(sc.vocabs) {
+            v.extend(s);
+        }
+    }
+    if row0 == 0 {
+        return Err(FmError::Shape("ingest: input contains no data rows".into()));
+    }
+    eng.metrics
+        .ingest_chunks
+        .fetch_add(n_chunks as u64, Ordering::Relaxed);
+    eng.metrics.ingest_rows.fetch_add(row0, Ordering::Relaxed);
+    eng.metrics
+        .ingest_na_cells
+        .fetch_add(na_cells, Ordering::Relaxed);
+
+    let mut vocabs = vocabs.into_iter();
+    let levels = o
+        .schema
+        .cols
+        .iter()
+        .map(|c| {
+            matches!(c, ColType::Factor)
+                .then(|| Arc::new(vocabs.next().expect("factor vocab").into_iter().collect()))
+        })
+        .collect();
+    Ok(ScanResult {
+        stores,
+        chunks,
+        nrow: row0,
+        levels,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// phase 2: partition-aligned parse + write
+
+/// Output shape of the parse phase: one p-column matrix builder, or one
+/// single-column builder per schema column (sharing one n×1 row grid).
+enum SinkSet<'a> {
+    One(&'a DenseBuilder),
+    PerCol(&'a [DenseBuilder]),
+}
+
+fn parse_err<P: AsRef<Path>>(
+    paths: &[P],
+    fi: usize,
+    line: u64,
+    col: u64,
+    msg: String,
+) -> FmError {
+    FmError::Parse {
+        file: paths[fi].as_ref().display().to_string(),
+        line,
+        col,
+        msg,
+    }
+}
+
+/// Read a chunk's bytes and verify them against the scan-phase CRC: one
+/// re-read on mismatch, then the corruption surfaces. (Text files have
+/// no write-time checksum table, so this cross-phase check is what keeps
+/// the two phases bit-consistent.)
+fn read_chunk_verified(eng: &Engine, store: &FileStore, c: &ChunkMeta) -> Result<Vec<u8>> {
+    let mut bytes = vec![0u8; c.len];
+    store.read_at(c.off, &mut bytes)?;
+    if crc32(&bytes) == c.crc {
+        return Ok(bytes);
+    }
+    eng.metrics
+        .checksum_failures
+        .fetch_add(1, Ordering::Relaxed);
+    store.read_at(c.off, &mut bytes)?;
+    if crc32(&bytes) == c.crc {
+        return Ok(bytes);
+    }
+    Err(FmError::Corrupt(format!(
+        "ingest: text chunk at bytes {}..{} failed its scan-phase checksum after a re-read",
+        c.off,
+        c.off + c.len as u64
+    )))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn parse_partition<P: AsRef<Path>>(
+    eng: &Engine,
+    i: usize,
+    paths: &[P],
+    o: &LoadOptions,
+    scan: &ScanResult,
+    grid: &Partitioning,
+    sinks: &SinkSet,
+    na: &[&[u8]],
+    maps: &[Option<HashMap<String, i32>>],
+) -> Result<()> {
+    let (r0, r1) = grid.part_rows(i);
+    let prows = (r1 - r0) as usize;
+    let p = o.schema.len();
+    let mut bufs: Vec<Buf> = match sinks {
+        SinkSet::One(b) => vec![Buf::alloc(b.dtype(), prows * p)],
+        SinkSet::PerCol(bs) => bs.iter().map(|b| Buf::alloc(b.dtype(), prows)).collect(),
+    };
+    let c0 = scan
+        .chunks
+        .partition_point(|c| c.row0 + c.rows <= r0);
+    for c in &scan.chunks[c0..] {
+        if c.row0 >= r1 {
+            break;
+        }
+        let bytes = read_chunk_verified(eng, &scan.stores[c.file], c)?;
+        let mut grow = c.row0;
+        let mut line = c.line0; // physical line within the file, 0-based
+        let mut start = 0usize;
+        while start < bytes.len() && grow < r1 {
+            let end = bytes[start..]
+                .iter()
+                .position(|b| *b == b'\n')
+                .map(|q| start + q)
+                .unwrap_or(bytes.len());
+            let mut rec = &bytes[start..end];
+            if rec.last() == Some(&b'\r') {
+                rec = &rec[..rec.len() - 1];
+            }
+            line += 1;
+            start = end + 1;
+            if rec.is_empty() {
+                continue;
+            }
+            let row = grow;
+            grow += 1;
+            if row < r0 {
+                continue;
+            }
+            let ri = (row - r0) as usize;
+            let mut fields = rec.split(|b| *b == o.delim);
+            for j in 0..p {
+                let field = fields.next().ok_or_else(|| {
+                    parse_err(paths, c.file, line, j as u64 + 1, format!("expected {p} fields"))
+                })?;
+                let cv = parse_field(field, &o.schema.cols[j], na, maps[j].as_ref())
+                    .map_err(|m| parse_err(paths, c.file, line, j as u64 + 1, m))?;
+                match sinks {
+                    SinkSet::One(b) => bufs[0].set(j * prows + ri, cell_scalar(cv, b.dtype())),
+                    SinkSet::PerCol(bs) => bufs[j].set(ri, cell_scalar(cv, bs[j].dtype())),
+                }
+            }
+        }
+    }
+    match sinks {
+        SinkSet::One(b) => b.write_partition_buf(i, &bufs[0])?,
+        SinkSet::PerCol(bs) => {
+            for (j, b) in bs.iter().enumerate() {
+                b.write_partition_buf(i, &bufs[j])?;
+            }
+        }
+    }
+    Ok(())
+}
+
+fn parse_phase<P: AsRef<Path>>(
+    eng: &Arc<Engine>,
+    paths: &[P],
+    o: &LoadOptions,
+    scan: &ScanResult,
+    grid: &Partitioning,
+    sinks: &SinkSet,
+) -> Result<()> {
+    let na: Vec<&[u8]> = o.na_values.iter().map(|s| s.as_bytes()).collect();
+    // factor code maps: level -> 1-based rank in the sorted level table
+    let maps: Vec<Option<HashMap<String, i32>>> = scan
+        .levels
+        .iter()
+        .map(|ls| {
+            ls.as_ref().map(|ls| {
+                ls.iter()
+                    .enumerate()
+                    .map(|(i, l)| (l.clone(), i as i32 + 1))
+                    .collect()
+            })
+        })
+        .collect();
+    let n_parts = grid.n_parts();
+    let next = AtomicUsize::new(0);
+    let workers = ingest_worker_count(eng).min(n_parts.max(1));
+    // keep the error of the smallest partition index: claims are issued
+    // in ascending order, so this is deterministic under any schedule
+    let err: Mutex<Option<(usize, FmError)>> = Mutex::new(None);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n_parts {
+                    break;
+                }
+                if let Err(e) = parse_partition(eng, i, paths, o, scan, grid, sinks, &na, &maps)
+                {
+                    let mut g = err.lock_recover();
+                    if g.as_ref().map_or(true, |(pi, _)| i < *pi) {
+                        *g = Some((i, e));
+                    }
+                    break;
+                }
+            });
+        }
+    });
+    if let Some((_, e)) = err.into_inner_recover() {
+        return Err(e);
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// public loaders
+
+fn effective_storage(eng: &Engine, o: &LoadOptions) -> StorageKind {
+    match o.in_mem {
+        Some(true) => StorageKind::InMem,
+        Some(false) => StorageKind::External,
+        None => eng.config.storage.clone(),
+    }
+}
+
+pub(crate) fn make_builder(
+    eng: &Arc<Engine>,
+    dtype: DType,
+    parts: Partitioning,
+    storage: &StorageKind,
+    name: Option<&str>,
+) -> Result<DenseBuilder> {
+    match storage {
+        StorageKind::InMem => DenseBuilder::new_mem(dtype, parts, &eng.pool),
+        StorageKind::External => DenseBuilder::new_ext(
+            dtype,
+            parts,
+            &eng.config.data_dir,
+            name,
+            eng.config.em_cache_cols as u64,
+            Arc::clone(&eng.ssd),
+            Arc::clone(&eng.metrics),
+            // loaded datasets are the repeatedly-scanned inputs of EM
+            // algorithms: cache-resident, like generated ones (§III-B3)
+            eng.cache.clone(),
+        ),
+    }
+}
+
+fn col_metas(o: &LoadOptions, scan: &ScanResult) -> Vec<DenseColMeta> {
+    o.schema
+        .cols
+        .iter()
+        .zip(&scan.levels)
+        .map(|(c, ls)| DenseColMeta {
+            code: c.code(),
+            levels: ls.as_ref().map(|l| l.as_ref().clone()).unwrap_or_default(),
+        })
+        .collect()
+}
+
+/// Load delimited files into **one dense matrix**, rows concatenated in
+/// `paths` order. Storage dtype is [`Schema::uniform_dtype`] (f64 when
+/// any `F` column is present, else i32); factor/hashed columns load as
+/// their integer codes. With external storage and a
+/// [`LoadOptions::name`], the matrix and a sidecar manifest (schema
+/// codes + factor levels) persist across runs.
+pub fn load_dense_matrix<P: AsRef<Path>>(
+    eng: &Arc<Engine>,
+    paths: &[P],
+    opts: &LoadOptions,
+) -> Result<FmMatrix> {
+    let scan = scan_phase(eng, paths, opts)?;
+    let storage = effective_storage(eng, opts);
+    let dtype = opts.schema.uniform_dtype();
+    let grid = Partitioning::new(scan.nrow, opts.schema.len() as u64);
+    let b = make_builder(eng, dtype, grid.clone(), &storage, opts.name.as_deref())?;
+    parse_phase(eng, paths, opts, &scan, &grid, &SinkSet::One(&b))?;
+    let data = b.finish();
+    if let (StorageKind::External, Some(nm)) = (&storage, opts.name.as_deref()) {
+        data.save_named_meta(&eng.config.data_dir, nm, &col_metas(opts, &scan))?;
+    }
+    Ok(FmMatrix {
+        eng: Arc::clone(eng),
+        m: Matrix::from_dense(data),
+    })
+}
+
+/// Load delimited files into **one vector per column** — FlashR's
+/// `fm.load.list.vecs`. Every vector shares one n×1 row grid, so the
+/// text is parsed once per partition and scattered to all column
+/// builders; each column stores at its own dtype ([`ColType::dtype`]).
+/// `X` columns come back with their sorted level tables attached
+/// ([`FmVector::levels`]). A [`LoadOptions::name`] persists column `j`
+/// as `<name>.c<j>` (external storage).
+pub fn load_list_vecs<P: AsRef<Path>>(
+    eng: &Arc<Engine>,
+    paths: &[P],
+    opts: &LoadOptions,
+) -> Result<Vec<FmVector>> {
+    let scan = scan_phase(eng, paths, opts)?;
+    let storage = effective_storage(eng, opts);
+    let grid = Partitioning::new(scan.nrow, 1);
+    let names: Vec<Option<String>> = (0..opts.schema.len())
+        .map(|j| opts.name.as_ref().map(|n| format!("{n}.c{j}")))
+        .collect();
+    let bs: Vec<DenseBuilder> = opts
+        .schema
+        .cols
+        .iter()
+        .zip(&names)
+        .map(|(c, nm)| make_builder(eng, c.dtype(), grid.clone(), &storage, nm.as_deref()))
+        .collect::<Result<_>>()?;
+    parse_phase(eng, paths, opts, &scan, &grid, &SinkSet::PerCol(&bs))?;
+    let mut out = Vec::with_capacity(bs.len());
+    for (j, b) in bs.into_iter().enumerate() {
+        let data = b.finish();
+        if let (StorageKind::External, Some(nm)) = (&storage, names[j].as_deref()) {
+            let cm = DenseColMeta {
+                code: opts.schema.cols[j].code(),
+                levels: scan.levels[j]
+                    .as_ref()
+                    .map(|l| l.as_ref().clone())
+                    .unwrap_or_default(),
+            };
+            data.save_named_meta(&eng.config.data_dir, nm, std::slice::from_ref(&cm))?;
+        }
+        out.push(FmVector {
+            v: FmMatrix {
+                eng: Arc::clone(eng),
+                m: Matrix::from_dense(data),
+            },
+            levels: scan.levels[j].clone(),
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineConfig;
+    use crate::testutil::TempDir;
+
+    fn eng() -> Arc<Engine> {
+        Engine::new(EngineConfig {
+            xla_dispatch: false,
+            chunk_bytes: 1 << 22,
+            target_part_bytes: 1 << 20,
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    fn write_file(dir: &TempDir, name: &str, text: &[u8]) -> std::path::PathBuf {
+        let p = dir.path().join(name);
+        std::fs::write(&p, text).unwrap();
+        p
+    }
+
+    #[test]
+    fn schema_codes_roundtrip() {
+        let s = Schema::parse("IFHX").unwrap();
+        assert_eq!(
+            s.cols,
+            vec![
+                ColType::Int,
+                ColType::Float,
+                ColType::Hashed {
+                    buckets: DEFAULT_HASH_BUCKETS
+                },
+                ColType::Factor
+            ]
+        );
+        let codes: String = s.cols.iter().map(|c| c.code()).collect();
+        assert_eq!(codes, "IFHX");
+        assert_eq!(s.uniform_dtype(), DType::F64);
+        assert_eq!(Schema::parse("IIH").unwrap().uniform_dtype(), DType::I32);
+        assert!(Schema::parse("IQ").is_err());
+        assert!(Schema::parse("").unwrap().validate().is_err());
+        assert!(Schema::of(vec![ColType::Hashed { buckets: 0 }])
+            .validate()
+            .is_err());
+    }
+
+    #[test]
+    fn field_parse_semantics() {
+        let na: Vec<&[u8]> = vec![b"", b"NA"];
+        let to_i = |r: std::result::Result<CellVal, String>| match r.unwrap() {
+            CellVal::I(v) => v,
+            _ => panic!("want int"),
+        };
+        assert_eq!(to_i(parse_field(b" 42 ", &ColType::Int, &na, None)), 42);
+        assert!(matches!(
+            parse_field(b"NA", &ColType::Int, &na, None).unwrap(),
+            CellVal::Na
+        ));
+        assert!(matches!(
+            parse_field(b"", &ColType::Float, &na, None).unwrap(),
+            CellVal::Na
+        ));
+        // the NA sentinel itself is rejected, not silently read as NA
+        assert!(parse_field(b"-2147483648", &ColType::Int, &na, None).is_err());
+        assert!(parse_field(b"2147483648", &ColType::Int, &na, None).is_err());
+        assert!(parse_field(b"4x", &ColType::Int, &na, None).is_err());
+        assert!(parse_field(b"1.5.2", &ColType::Float, &na, None).is_err());
+        // hashing is deterministic, bucketed, 1-based
+        let h = |b: &[u8]| {
+            to_i(parse_field(
+                b,
+                &ColType::Hashed { buckets: 100 },
+                &na,
+                None,
+            ))
+        };
+        assert_eq!(h(b"abc"), h(b" abc "));
+        assert!(h(b"abc") >= 1 && h(b"abc") <= 100);
+        // factor lookup against the scanned vocabulary
+        let m: HashMap<String, i32> = [("a".to_string(), 1), ("b".to_string(), 2)]
+            .into_iter()
+            .collect();
+        assert_eq!(to_i(parse_field(b"b", &ColType::Factor, &na, Some(&m))), 2);
+        assert!(parse_field(b"zz", &ColType::Factor, &na, Some(&m)).is_err());
+    }
+
+    #[test]
+    fn chunk_bounds_are_newline_aligned() {
+        let tmp = TempDir::new("ingest-bounds");
+        let e = eng();
+        // 40 rows of "rowNN\n" (6 bytes each)
+        let text: String = (0..40).map(|i| format!("row{i:02}\n")).collect();
+        let p = write_file(&tmp, "t.csv", text.as_bytes());
+        let store =
+            FileStore::open(&p, Arc::clone(&e.ssd), Arc::clone(&e.metrics)).unwrap();
+        for cb in [1usize, 7, 16, 64, 10_000] {
+            let bounds = chunk_bounds(&store, cb).unwrap();
+            let total: usize = bounds.iter().map(|(_, l)| l).sum();
+            assert_eq!(total, text.len(), "chunk_bytes={cb}");
+            for (off, len) in &bounds {
+                assert!(*len > 0);
+                // every chunk starts at 0 or right after a newline
+                if *off > 0 {
+                    assert_eq!(text.as_bytes()[*off as usize - 1], b'\n');
+                }
+                let _ = len;
+            }
+        }
+    }
+
+    #[test]
+    fn loads_typed_matrix_with_na_and_crlf() {
+        let tmp = TempDir::new("ingest-typed");
+        let e = eng();
+        let p = write_file(
+            &tmp,
+            "t.csv",
+            b"1,1.5\r\n2,NA\r\n\r\nNA,-3.25\r\n4,0\r\n",
+        );
+        let before = e.metrics.snapshot();
+        let x = load_dense_matrix(
+            &e,
+            &[&p],
+            &LoadOptions::new(Schema::parse("IF").unwrap()),
+        )
+        .unwrap();
+        assert_eq!((x.nrow(), x.ncol()), (4, 2));
+        let h = x.to_host().unwrap();
+        // any F column promotes the whole matrix to f64; int NA reads NaN
+        assert_eq!(h.get(0, 0).as_f64(), 1.0);
+        assert_eq!(h.get(0, 1).as_f64(), 1.5);
+        assert!(h.get(1, 1).as_f64().is_nan());
+        assert!(h.get(2, 0).as_f64().is_nan());
+        assert_eq!(h.get(2, 1).as_f64(), -3.25);
+        assert_eq!(h.get(3, 0).as_f64(), 4.0);
+        let d = e.metrics.snapshot().delta_since(&before);
+        assert_eq!(d.ingest_rows, 4);
+        assert!(d.ingest_chunks >= 1);
+        assert_eq!(d.ingest_na_cells, 2);
+    }
+
+    #[test]
+    fn int_only_schema_stores_i32_with_sentinel_na() {
+        let tmp = TempDir::new("ingest-int");
+        let e = eng();
+        let p = write_file(&tmp, "t.csv", b"7,1\nNA,2\n-5,3\n");
+        let x = load_dense_matrix(
+            &e,
+            &[&p],
+            &LoadOptions::new(Schema::parse("II").unwrap()),
+        )
+        .unwrap();
+        assert_eq!(x.dtype(), DType::I32);
+        let h = x.to_host().unwrap();
+        assert_eq!(h.get(0, 0), Scalar::I32(7));
+        assert_eq!(h.get(1, 0), Scalar::I32(i32::MIN));
+        assert_eq!(h.get(2, 0), Scalar::I32(-5));
+        assert_eq!(h.get(2, 1), Scalar::I32(3));
+    }
+
+    #[test]
+    fn list_vecs_factor_levels_sorted_and_coded() {
+        let tmp = TempDir::new("ingest-vecs");
+        let e = eng();
+        let p = write_file(&tmp, "t.tsv", b"1\tcherry\n2\tapple\n3\tNA\n4\tbanana\n5\tapple\n");
+        let vecs = load_list_vecs(
+            &e,
+            &[&p],
+            &LoadOptions::new(Schema::parse("IX").unwrap()).delim(b'\t'),
+        )
+        .unwrap();
+        assert_eq!(vecs.len(), 2);
+        assert!(vecs[0].levels.is_none());
+        let f = &vecs[1];
+        assert_eq!(
+            f.levels.as_ref().unwrap().as_ref().clone(),
+            vec!["apple".to_string(), "banana".to_string(), "cherry".to_string()]
+        );
+        let h = f.v.to_host().unwrap();
+        assert_eq!(h.get(0, 0), Scalar::I32(3)); // cherry
+        assert_eq!(h.get(1, 0), Scalar::I32(1)); // apple
+        assert_eq!(h.get(2, 0), Scalar::I32(i32::MIN)); // NA
+        assert_eq!(h.get(3, 0), Scalar::I32(2)); // banana
+        assert_eq!(h.get(4, 0), Scalar::I32(1)); // apple
+    }
+
+    #[test]
+    fn multi_file_rows_concatenate_in_path_order() {
+        let tmp = TempDir::new("ingest-multi");
+        let e = eng();
+        let a = write_file(&tmp, "a.csv", b"1\n2\n");
+        let b = write_file(&tmp, "b.csv", b"3\n");
+        let c = write_file(&tmp, "c.csv", b"4\n5\n6\n");
+        let x = load_dense_matrix(
+            &e,
+            &[&a, &b, &c],
+            &LoadOptions::new(Schema::parse("I").unwrap()),
+        )
+        .unwrap();
+        let h = x.to_host().unwrap();
+        assert_eq!(x.nrow(), 6);
+        for r in 0..6 {
+            assert_eq!(h.get(r, 0), Scalar::I32(r as i32 + 1));
+        }
+    }
+
+    #[test]
+    fn ragged_and_malformed_rows_carry_location() {
+        let tmp = TempDir::new("ingest-err");
+        let e = eng();
+        let o = LoadOptions::new(Schema::parse("IF").unwrap());
+
+        // ragged row (line 3): 3 fields for a 2-column schema
+        let p = write_file(&tmp, "ragged.csv", b"1,1.0\n2,2.0\n3,3.0,9\n4,4.0\n");
+        match load_dense_matrix(&e, &[&p], &o) {
+            Err(FmError::Parse { file, line, col, .. }) => {
+                assert!(file.ends_with("ragged.csv"));
+                assert_eq!((line, col), (3, 3));
+            }
+            other => panic!("want Parse error, got {other:?}"),
+        }
+
+        // trailing delimiter reads as an extra empty field
+        let p = write_file(&tmp, "trail.csv", b"1,1.0\n2,2.0,\n");
+        match load_dense_matrix(&e, &[&p], &o) {
+            Err(FmError::Parse { line, col, .. }) => assert_eq!((line, col), (2, 3)),
+            other => panic!("want Parse error, got {other:?}"),
+        }
+
+        // malformed float (line 2, col 2) surfaces from the parse phase
+        let p = write_file(&tmp, "badnum.csv", b"1,1.0\n2,oops\n");
+        match load_dense_matrix(&e, &[&p], &o) {
+            Err(FmError::Parse { line, col, msg, .. }) => {
+                assert_eq!((line, col), (2, 2));
+                assert!(msg.contains("oops"));
+            }
+            other => panic!("want Parse error, got {other:?}"),
+        }
+
+        // non-UTF8 bytes in a numeric field
+        let p = write_file(&tmp, "bin.csv", b"1,1.0\n2,\xff\xfe\n");
+        match load_dense_matrix(&e, &[&p], &o) {
+            Err(FmError::Parse { line, col, msg, .. }) => {
+                assert_eq!((line, col), (2, 2));
+                assert!(msg.contains("UTF-8"));
+            }
+            other => panic!("want Parse error, got {other:?}"),
+        }
+
+        // non-UTF8 bytes in a factor field are caught in the scan phase
+        let p = write_file(&tmp, "binx.csv", b"a\n\xff\xfe\n");
+        match load_dense_matrix(&e, &[&p], &LoadOptions::new(Schema::parse("X").unwrap())) {
+            Err(FmError::Parse { line, col, .. }) => assert_eq!((line, col), (2, 1)),
+            other => panic!("want Parse error, got {other:?}"),
+        }
+
+        // empty input
+        let p = write_file(&tmp, "empty.csv", b"\n\n");
+        assert!(matches!(
+            load_dense_matrix(&e, &[&p], &o),
+            Err(FmError::Shape(_))
+        ));
+    }
+
+    #[test]
+    fn tiny_chunks_match_one_big_chunk_bitwise() {
+        let tmp = TempDir::new("ingest-chunks");
+        let text: String = (0..500)
+            .map(|i| format!("{},{}.25,k{}\n", i, i * 2, i % 7))
+            .collect();
+        let o = LoadOptions::new(Schema::parse("IFX").unwrap());
+
+        let one = {
+            let e = eng();
+            let p = write_file(&tmp, "one.csv", text.as_bytes());
+            load_dense_matrix(&e, &[&p], &o).unwrap().to_host().unwrap()
+        };
+        let tiny = {
+            let e = Engine::new(EngineConfig {
+                xla_dispatch: false,
+                chunk_bytes: 1 << 22,
+                target_part_bytes: 1 << 20,
+                ingest_chunk_bytes: 64, // dozens of chunks
+                ingest_workers: 3,
+                ..Default::default()
+            })
+            .unwrap();
+            let p = write_file(&tmp, "tiny.csv", text.as_bytes());
+            load_dense_matrix(&e, &[&p], &o).unwrap().to_host().unwrap()
+        };
+        assert_eq!(one, tiny);
+    }
+}

@@ -44,6 +44,7 @@ pub mod exec;
 pub mod fmr;
 pub mod genops;
 pub mod harness;
+pub mod ingest;
 pub mod matrix;
 pub mod mem;
 pub mod metrics;
@@ -57,6 +58,7 @@ pub(crate) mod xla_stub;
 pub use config::{EngineConfig, StorageKind};
 pub use error::{FmError, Result};
 pub use fmr::engine::Engine;
-pub use fmr::{FmMatrix, Session};
+pub use fmr::{EngineExt, FmMatrix, FmVector, Session};
+pub use ingest::{ColType, LoadOptions, Schema};
 pub use runtime::jobs::{JobQueue, Ticket};
 pub mod util;

@@ -23,6 +23,7 @@ use crate::dtype::DType;
 use crate::error::{FmError, Result};
 use crate::mem::{Chunk, ChunkPool};
 use crate::metrics::Metrics;
+use crate::runtime::manifest::{DenseColMeta, DenseMeta};
 use crate::storage::{FileStore, SsdSim, StreamReader};
 use crate::util::sync::LockExt;
 use crate::vudf::Buf;
@@ -320,6 +321,96 @@ impl DenseData {
             }
         }
         Ok(out)
+    }
+
+    /// Per-partition `(offset, len)` table of this matrix's packed file
+    /// layout, in partition order.
+    fn part_table(&self) -> Vec<(u64, usize)> {
+        let esz = self.dtype.size();
+        (0..self.parts.n_parts())
+            .map(|i| (self.parts.part_offset(i, esz), self.parts.part_bytes(i, esz)))
+            .collect()
+    }
+
+    /// Persist the `<name>.dense.json` sidecar for a *named* external
+    /// matrix, so [`open_named`](Self::open_named) can reattach across
+    /// engine restarts with the dtype, shape, and write-time partition
+    /// CRCs intact. `cols` carries the ingestion column schema
+    /// ([`crate::ingest`]); pass `&[]` for schema-less datasets.
+    pub fn save_named_meta(
+        &self,
+        dir: &std::path::Path,
+        name: &str,
+        cols: &[DenseColMeta],
+    ) -> Result<()> {
+        let store = match &self.backing {
+            Backing::Ext { store, .. } => store,
+            Backing::Mem { .. } => {
+                return Err(FmError::Unsupported(
+                    "save_named_meta: matrix is in-memory, not a named external file".into(),
+                ))
+            }
+        };
+        let meta = DenseMeta {
+            nrow: self.parts.nrow,
+            ncol: self.parts.ncol,
+            io_rows: self.parts.io_rows,
+            dtype: self.dtype,
+            crcs: store.checksums().export(&self.part_table()),
+            cols: cols.to_vec(),
+        };
+        meta.save(&dir.join(format!("{name}.dense.json")))
+    }
+
+    /// Reopen a *named* external dense matrix saved in `dir`: load the
+    /// `<name>.dense.json` sidecar, open the packed file, verify its
+    /// length against the recorded partitioning, and seed the store's
+    /// checksum table from the sidecar CRCs so at-rest corruption
+    /// surfaces on first read (same contract as
+    /// [`SparseData::open_named`](crate::matrix::SparseData::open_named)).
+    /// Returns the matrix plus its sidecar (for factor level tables).
+    pub fn open_named(
+        dir: &std::path::Path,
+        name: &str,
+        ssd: Arc<SsdSim>,
+        metrics: Arc<Metrics>,
+        pcache: Option<Arc<PartitionCache>>,
+    ) -> Result<(DenseData, DenseMeta)> {
+        let meta = DenseMeta::load(&dir.join(format!("{name}.dense.json")))?;
+        let parts = Partitioning::with_io_rows(meta.nrow, meta.ncol, meta.io_rows);
+        let store = FileStore::open(&dir.join(name), ssd, Arc::clone(&metrics))?;
+        let want = parts.total_bytes(meta.dtype.size());
+        if store.len() != want {
+            return Err(FmError::Corrupt(format!(
+                "dense dataset '{name}': file is {} bytes, manifest implies {want}",
+                store.len()
+            )));
+        }
+        if meta.crcs.len() != parts.n_parts() {
+            return Err(FmError::Corrupt(format!(
+                "dense dataset '{name}': {} checksums for {} partitions",
+                meta.crcs.len(),
+                parts.n_parts()
+            )));
+        }
+        let esz = meta.dtype.size();
+        store.checksums().seed((0..parts.n_parts()).filter_map(|i| {
+            meta.crcs[i].map(|crc| (parts.part_offset(i, esz), parts.part_bytes(i, esz), crc))
+        }));
+        Ok((
+            DenseData {
+                dtype: meta.dtype,
+                parts,
+                backing: Backing::Ext {
+                    store: Arc::new(store),
+                    cache_cols: 0,
+                    cache: None,
+                    metrics,
+                    pcache: pcache.map(CacheHandle::register),
+                },
+            },
+            meta,
+        ))
     }
 }
 

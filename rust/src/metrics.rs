@@ -116,6 +116,14 @@ pub struct Metrics {
     /// Partition checksum verifications that failed (each triggers one
     /// re-read before surfacing [`crate::FmError::Corrupt`]).
     pub checksum_failures: AtomicU64,
+    /// Newline-aligned text chunks scanned by the delimited-ingestion
+    /// loader ([`crate::ingest`], phase 1).
+    pub ingest_chunks: AtomicU64,
+    /// Data rows parsed into matrices by the ingestion loader.
+    pub ingest_rows: AtomicU64,
+    /// Cells that matched an NA spelling during ingestion (stored as the
+    /// dtype's NA sentinel: NaN for floats, `i32::MIN` for ints).
+    pub ingest_na_cells: AtomicU64,
 }
 
 impl Metrics {
@@ -182,6 +190,9 @@ impl Metrics {
             faults_injected: self.faults_injected.load(Ordering::Relaxed),
             io_retries: self.io_retries.load(Ordering::Relaxed),
             checksum_failures: self.checksum_failures.load(Ordering::Relaxed),
+            ingest_chunks: self.ingest_chunks.load(Ordering::Relaxed),
+            ingest_rows: self.ingest_rows.load(Ordering::Relaxed),
+            ingest_na_cells: self.ingest_na_cells.load(Ordering::Relaxed),
         }
     }
 
@@ -227,6 +238,9 @@ impl Metrics {
             &s.faults_injected,
             &s.io_retries,
             &s.checksum_failures,
+            &s.ingest_chunks,
+            &s.ingest_rows,
+            &s.ingest_na_cells,
         ] {
             c.store(0, Ordering::Relaxed);
         }
@@ -274,6 +288,9 @@ pub struct MetricsSnapshot {
     pub faults_injected: u64,
     pub io_retries: u64,
     pub checksum_failures: u64,
+    pub ingest_chunks: u64,
+    pub ingest_rows: u64,
+    pub ingest_na_cells: u64,
 }
 
 impl MetricsSnapshot {
@@ -318,6 +335,9 @@ impl MetricsSnapshot {
             faults_injected: self.faults_injected - earlier.faults_injected,
             io_retries: self.io_retries - earlier.io_retries,
             checksum_failures: self.checksum_failures - earlier.checksum_failures,
+            ingest_chunks: self.ingest_chunks - earlier.ingest_chunks,
+            ingest_rows: self.ingest_rows - earlier.ingest_rows,
+            ingest_na_cells: self.ingest_na_cells - earlier.ingest_na_cells,
         }
     }
 }

@@ -1233,7 +1233,7 @@ mod tests {
     use crate::config::EngineConfig;
     use crate::dag::UnFn;
     use crate::dtype::Scalar;
-    use crate::fmr::FmMatrix;
+    use crate::fmr::{EngineExt, FmMatrix};
     use crate::genops;
     use crate::matrix::HostMat;
     use crate::vudf::{AggOp, BinOp, UnOp};
@@ -1263,7 +1263,7 @@ mod tests {
     #[test]
     fn cse_merges_structural_duplicates_in_one_pass() {
         let eng = opt_engine();
-        let x = FmMatrix::runif_matrix(&eng, 2048, 2, 0.0, 1.0, 7);
+        let x = eng.runif_matrix(2048, 2, 0.0, 1.0, 7);
         // two structurally identical chains built from scratch: distinct
         // Arcs, same recorded computation
         let a1 = genops::sapply(&x.m, UnFn::Builtin(UnOp::Sqrt));
@@ -1283,7 +1283,7 @@ mod tests {
     #[test]
     fn duplicate_targets_and_sinks_are_pruned() {
         let eng = opt_engine();
-        let y = FmMatrix::runif_matrix(&eng, 2048, 2, 0.0, 1.0, 9);
+        let y = eng.runif_matrix(2048, 2, 0.0, 1.0, 9);
         let v = genops::sapply(&y.m, UnFn::Builtin(UnOp::Abs));
 
         let before = eng.metrics.snapshot();
@@ -1309,7 +1309,7 @@ mod tests {
         let mut sums = Vec::new();
         for _ in 0..2 {
             // rebuilt from scratch each round, like a loop iteration
-            let x = FmMatrix::runif_matrix(&eng, 2048, 2, 0.0, 1.0, 11);
+            let x = eng.runif_matrix(2048, 2, 0.0, 1.0, 11);
             let t = genops::sapply(&x.m, UnFn::Builtin(UnOp::Sqrt));
             let s = genops::agg_full(&t, AggOp::Sum);
             let reqs = [PlanRequest::target(&t), PlanRequest::Sink(s)];
@@ -1333,7 +1333,7 @@ mod tests {
         // the data leaf is the loop-invariant part (like X in IRLS):
         // recurrence is *value* identity, so the virtual chains are
         // rebuilt from scratch each round over the same `Arc`
-        let x = FmMatrix::runif_matrix(&eng, 2048, 2, 0.0, 1.0, 13);
+        let x = eng.runif_matrix(2048, 2, 0.0, 1.0, 13);
         for _ in 0..3 {
             let shared = genops::sapply(&x.m, UnFn::Builtin(UnOp::Sqrt));
             let t = genops::mapply_scalar(&shared, Scalar::F64(2.0), BinOp::Mul, true);
@@ -1366,7 +1366,7 @@ mod tests {
         let eng = Engine::new(c).unwrap();
         let before = eng.metrics.snapshot();
         let mut scalars = Vec::new();
-        let x = FmMatrix::runif_matrix(&eng, 2048, 2, 0.0, 1.0, 13);
+        let x = eng.runif_matrix(2048, 2, 0.0, 1.0, 13);
         for _ in 0..3 {
             let shared = genops::sapply(&x.m, UnFn::Builtin(UnOp::Sqrt));
             let s_src = genops::mapply_scalar(&shared, Scalar::F64(1.0), BinOp::Add, true);
@@ -1387,8 +1387,8 @@ mod tests {
     fn incompatible_geometry_splits_passes() {
         let eng = opt_engine();
         // io_rows_for(1024) = 1024 rows, io_rows_for(2) = 65536 rows
-        let wide = FmMatrix::runif_matrix(&eng, 4096, 1024, 0.0, 1.0, 17);
-        let narrow = FmMatrix::runif_matrix(&eng, 4096, 2, 0.0, 1.0, 19);
+        let wide = eng.runif_matrix(4096, 1024, 0.0, 1.0, 17);
+        let narrow = eng.runif_matrix(4096, 2, 0.0, 1.0, 19);
         let tw = genops::sapply(&wide.m, UnFn::Builtin(UnOp::Sqrt));
         let tn = genops::sapply(&narrow.m, UnFn::Builtin(UnOp::Sqrt));
         let before = eng.metrics.snapshot();
@@ -1400,8 +1400,8 @@ mod tests {
 
         // byte-identical to solo materialization on a fresh engine
         let eng2 = opt_engine();
-        let wide2 = FmMatrix::runif_matrix(&eng2, 4096, 1024, 0.0, 1.0, 17);
-        let narrow2 = FmMatrix::runif_matrix(&eng2, 4096, 2, 0.0, 1.0, 19);
+        let wide2 = eng2.runif_matrix(4096, 1024, 0.0, 1.0, 17);
+        let narrow2 = eng2.runif_matrix(4096, 2, 0.0, 1.0, 19);
         let tw2 = genops::sapply(&wide2.m, UnFn::Builtin(UnOp::Sqrt));
         let tn2 = genops::sapply(&narrow2.m, UnFn::Builtin(UnOp::Sqrt));
         assert_eq!(
@@ -1425,7 +1425,7 @@ mod tests {
         };
         let eng_off = Engine::new(c).unwrap();
         let mk = |eng: &Arc<Engine>| {
-            let x = FmMatrix::runif_matrix(eng, 2048, 3, -1.0, 1.0, 23);
+            let x = eng.runif_matrix(2048, 3, -1.0, 1.0, 23);
             let t = genops::sapply(&x.m, UnFn::Builtin(UnOp::Abs));
             let s = genops::agg_full(&t, AggOp::Sum);
             (t, s)

@@ -57,6 +57,18 @@ fn parse_dtype(s: &str) -> Result<DType> {
     })
 }
 
+/// Canonical on-disk name of a dtype, the inverse of the manifest's
+/// dtype parser (both sidecars and artifact manifests use these names).
+pub fn dtype_name(dt: DType) -> &'static str {
+    match dt {
+        DType::F64 => "float64",
+        DType::F32 => "float32",
+        DType::I64 => "int64",
+        DType::I32 => "int32",
+        DType::Bool => "bool",
+    }
+}
+
 fn parse_specs(j: &Json) -> Result<Vec<TensorSpec>> {
     j.as_arr()?
         .iter()
@@ -236,6 +248,151 @@ impl SparseMeta {
     }
 }
 
+/// Per-column metadata in a dense sidecar: the ingestion schema code
+/// (`I`/`F`/`H`/`X`, see [`crate::ingest::ColType`]) plus, for factor
+/// columns, the sorted level table that maps codes `1..=k` back to the
+/// original strings. Non-ingested datasets use an empty `cols` list.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseColMeta {
+    pub code: char,
+    pub levels: Vec<String>,
+}
+
+/// Sidecar manifest for a *named* external dense matrix
+/// ([`crate::matrix::DenseData`]), written as `<name>.dense.json` next
+/// to the matrix file. Dense partition offsets follow from the
+/// partitioning formula, so unlike [`SparseMeta`] no byte table is
+/// needed — the sidecar carries the shape, dtype, per-partition CRCs
+/// and (for ingested data) the column schema + factor level tables.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseMeta {
+    pub nrow: u64,
+    pub ncol: u64,
+    pub io_rows: u64,
+    pub dtype: DType,
+    /// CRC32 per partition (`None` = never recorded); seeds the store's
+    /// [`crate::storage::ChecksumTable`] on reopen, same contract as
+    /// [`SparseMeta::crcs`].
+    pub crcs: Vec<Option<u32>>,
+    pub cols: Vec<DenseColMeta>,
+}
+
+impl DenseMeta {
+    /// Crash-consistent save (tmp + fsync + rename + dir sync), same
+    /// protocol as [`SparseMeta::save`].
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let j = crate::util::json::obj(vec![
+            ("nrow", self.nrow.into()),
+            ("ncol", self.ncol.into()),
+            ("io_rows", self.io_rows.into()),
+            ("dtype", dtype_name(self.dtype).into()),
+            (
+                "crcs",
+                Json::Arr(
+                    self.crcs
+                        .iter()
+                        .map(|c| match c {
+                            Some(v) => (*v as u64).into(),
+                            None => Json::Null,
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "cols",
+                Json::Arr(
+                    self.cols
+                        .iter()
+                        .map(|c| {
+                            crate::util::json::obj(vec![
+                                ("code", c.code.to_string().into()),
+                                (
+                                    "levels",
+                                    Json::Arr(
+                                        c.levels.iter().map(|l| l.as_str().into()).collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]);
+        let fname = path
+            .file_name()
+            .ok_or_else(|| FmError::Storage(format!("bad manifest path {}", path.display())))?;
+        let tmp = path.with_file_name(format!("{}.tmp", fname.to_string_lossy()));
+        {
+            use std::io::Write;
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(j.to_string().as_bytes())?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, path)?;
+        if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+            if let Ok(d) = std::fs::File::open(dir) {
+                let _ = d.sync_all();
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<DenseMeta> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            FmError::Storage(format!(
+                "cannot read dense manifest {} ({e})",
+                path.display()
+            ))
+        })?;
+        let j = Json::parse(&text)?;
+        let crcs: Vec<Option<u32>> = j
+            .get("crcs")?
+            .as_arr()?
+            .iter()
+            .map(|v| match v {
+                Json::Null => Ok(None),
+                other => Ok(Some(other.as_u64()? as u32)),
+            })
+            .collect::<Result<_>>()?;
+        // sidecars written by plain dataset builders (no ingestion
+        // schema) may omit "cols" entirely
+        let cols = match j.get("cols") {
+            Ok(arr) => arr
+                .as_arr()?
+                .iter()
+                .map(|c| {
+                    let code_s = c.get("code")?.as_str()?.to_string();
+                    let mut it = code_s.chars();
+                    let code = it.next().ok_or_else(|| {
+                        FmError::Storage("dense manifest: empty column code".into())
+                    })?;
+                    if it.next().is_some() {
+                        return Err(FmError::Storage(format!(
+                            "dense manifest: bad column code '{code_s}'"
+                        )));
+                    }
+                    let levels = c
+                        .get("levels")?
+                        .as_arr()?
+                        .iter()
+                        .map(|l| Ok(l.as_str()?.to_string()))
+                        .collect::<Result<_>>()?;
+                    Ok(DenseColMeta { code, levels })
+                })
+                .collect::<Result<Vec<_>>>()?,
+            Err(_) => Vec::new(),
+        };
+        Ok(DenseMeta {
+            nrow: j.get("nrow")?.as_u64()?,
+            ncol: j.get("ncol")?.as_u64()?,
+            io_rows: j.get("io_rows")?.as_u64()?,
+            dtype: parse_dtype(j.get("dtype")?.as_str()?)?,
+            crcs,
+            cols,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -288,6 +445,62 @@ mod tests {
         let m = SparseMeta::load(&p_old).unwrap();
         assert_eq!(m.crcs, vec![None, None]);
         assert_eq!(m.parts, vec![(0, 128), (128, 64)]);
+    }
+
+    #[test]
+    fn dense_meta_roundtrips_with_factor_levels() {
+        let tmp = crate::testutil::TempDir::new("dense-meta");
+        let meta = DenseMeta {
+            nrow: 4000,
+            ncol: 3,
+            io_rows: 1024,
+            dtype: DType::I32,
+            crcs: vec![Some(42), None, Some(0xFFFF_FFFF), Some(0)],
+            cols: vec![
+                DenseColMeta {
+                    code: 'I',
+                    levels: vec![],
+                },
+                DenseColMeta {
+                    code: 'X',
+                    levels: vec!["ad".into(), "news".into(), "video".into()],
+                },
+                DenseColMeta {
+                    code: 'H',
+                    levels: vec![],
+                },
+            ],
+        };
+        let p = tmp.path().join("train.dense.json");
+        meta.save(&p).unwrap();
+        assert_eq!(DenseMeta::load(&p).unwrap(), meta);
+        assert!(!p.with_file_name("train.dense.json.tmp").exists());
+    }
+
+    #[test]
+    fn dense_meta_tolerates_missing_cols_and_rejects_bad_codes() {
+        let tmp = crate::testutil::TempDir::new("dense-meta-old");
+        // a dataset-builder sidecar with no ingestion schema
+        let old = r#"{"nrow":64,"ncol":2,"io_rows":32,"dtype":"float32",
+                      "crcs":[null,7]}"#;
+        let p = tmp.path().join("d.dense.json");
+        std::fs::write(&p, old).unwrap();
+        let m = DenseMeta::load(&p).unwrap();
+        assert_eq!(m.dtype, DType::F32);
+        assert_eq!(m.crcs, vec![None, Some(7)]);
+        assert!(m.cols.is_empty());
+
+        let bad = r#"{"nrow":1,"ncol":1,"io_rows":1,"dtype":"float64",
+                      "crcs":[null],"cols":[{"code":"XY","levels":[]}]}"#;
+        std::fs::write(&p, bad).unwrap();
+        assert!(DenseMeta::load(&p).is_err());
+    }
+
+    #[test]
+    fn dtype_name_is_inverse_of_parse() {
+        for dt in [DType::F64, DType::F32, DType::I64, DType::I32, DType::Bool] {
+            assert_eq!(parse_dtype(dtype_name(dt)).unwrap(), dt);
+        }
     }
 
     #[test]

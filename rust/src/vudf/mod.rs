@@ -26,7 +26,7 @@ pub mod ops;
 pub mod registry;
 
 pub use buf::Buf;
-pub use ops::{AggOp, BinOp, UnOp, F32_LANES, F64_LANES};
+pub use ops::{AggOp, BinOp, NaMode, UnOp, F32_LANES, F64_LANES};
 pub use registry::{CustomVudf, VudfRegistry};
 
 use crate::error::{FmError, Result};

@@ -724,6 +724,206 @@ impl AggOp {
 }
 
 // ---------------------------------------------------------------------------
+// NA-aware reductions (R's `na.rm=` semantics)
+// ---------------------------------------------------------------------------
+
+/// How an aggregation treats NA elements (NaN for floats, the most
+/// negative value for integers — R's sentinels; see [`Scalar::is_na`]).
+///
+/// `Off` is the NA-oblivious legacy path and stays bit-identical to the
+/// kernels above; `Propagate`/`Remove` are R's `na.rm=FALSE/TRUE`. The
+/// which.min/which.max row kernels already pin R's NaN handling; this
+/// extends the same discipline to Sum/Prod/Min/Max (`fm.sum(x, na.rm=)`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
+pub enum NaMode {
+    /// Legacy kernels, NA-oblivious (exact historical bit patterns).
+    #[default]
+    Off,
+    /// `na.rm=FALSE`: any NA in the input makes the result NA.
+    Propagate,
+    /// `na.rm=TRUE`: NA elements are skipped.
+    Remove,
+}
+
+impl NaMode {
+    /// R's flag form; `Off` never comes from user code.
+    pub fn from_na_rm(na_rm: bool) -> NaMode {
+        if na_rm {
+            NaMode::Remove
+        } else {
+            NaMode::Propagate
+        }
+    }
+
+    /// Stable discriminant for plan hashing.
+    pub fn code(self) -> u8 {
+        match self {
+            NaMode::Off => 0,
+            NaMode::Propagate => 1,
+            NaMode::Remove => 2,
+        }
+    }
+}
+
+impl AggOp {
+    /// Identity element for the NA-aware paths. Identical to
+    /// [`identity`](AggOp::identity) except integer `Max`, whose natural
+    /// identity (`i32::MIN`/`i64::MIN`) *is* the integer NA sentinel:
+    /// the NA-aware fold starts one above it so an untouched accumulator
+    /// is not mistaken for a poisoned one. (A data value equal to the
+    /// sentinel is NA by definition, so no representable non-NA input is
+    /// lost.)
+    pub fn identity_na(self, acc_dt: DType) -> Scalar {
+        match (self, acc_dt) {
+            (AggOp::Max, DType::I32) => Scalar::I32(i32::MIN + 1),
+            (AggOp::Max, DType::I64) => Scalar::I64(i64::MIN + 1),
+            _ => self.identity(acc_dt),
+        }
+    }
+
+    /// NA-aware `combine` fold. `x` is checked for NA in *its own* dtype
+    /// (before any accumulator cast), so integer sentinels are seen even
+    /// when the accumulator is wider.
+    pub fn fold_scalar_na(self, acc: Scalar, x: Scalar, na: NaMode) -> Scalar {
+        match na {
+            NaMode::Off => self.fold_scalar(acc, x),
+            NaMode::Remove => {
+                if x.is_na() {
+                    acc
+                } else {
+                    self.fold_scalar(acc, x)
+                }
+            }
+            NaMode::Propagate => {
+                if acc.is_na() {
+                    acc
+                } else if x.is_na() {
+                    Scalar::na(acc.dtype())
+                } else {
+                    self.fold_scalar(acc, x)
+                }
+            }
+        }
+    }
+
+    /// NA-aware aVUDF1: reduce a vector (in its *input* dtype) to one
+    /// accumulator-dtype scalar. Monomorphic f64 fast paths keep the same
+    /// left-to-right accumulation order as the scalar reference
+    /// ([`reduce_na_scalar_mode`](AggOp::reduce_na_scalar_mode)), so the
+    /// two are bit-identical (pinned by a property test).
+    pub fn reduce_na(self, a: &Buf, na: NaMode) -> Scalar {
+        if na == NaMode::Off {
+            return self.reduce(a);
+        }
+        let acc_dt = self.acc_dtype(a.dtype());
+        match (self, a, na) {
+            (AggOp::Sum, Buf::F64(v), NaMode::Remove) => {
+                let mut s = 0.0;
+                for &x in v {
+                    if !x.is_nan() {
+                        s += x;
+                    }
+                }
+                Scalar::F64(s)
+            }
+            (AggOp::Sum, Buf::F64(v), NaMode::Propagate) => {
+                let mut s = 0.0;
+                for &x in v {
+                    if x.is_nan() {
+                        return Scalar::na(acc_dt);
+                    }
+                    s += x;
+                }
+                Scalar::F64(s)
+            }
+            (AggOp::Min, Buf::F64(v), NaMode::Remove) => {
+                let mut m = f64::INFINITY;
+                for &x in v {
+                    if !x.is_nan() && x < m {
+                        m = x;
+                    }
+                }
+                Scalar::F64(m)
+            }
+            (AggOp::Max, Buf::F64(v), NaMode::Remove) => {
+                let mut m = f64::NEG_INFINITY;
+                for &x in v {
+                    if !x.is_nan() && x > m {
+                        m = x;
+                    }
+                }
+                Scalar::F64(m)
+            }
+            (AggOp::Min, Buf::F64(v), NaMode::Propagate) => {
+                let mut m = f64::INFINITY;
+                for &x in v {
+                    if x.is_nan() {
+                        return Scalar::na(acc_dt);
+                    }
+                    if x < m {
+                        m = x;
+                    }
+                }
+                Scalar::F64(m)
+            }
+            (AggOp::Max, Buf::F64(v), NaMode::Propagate) => {
+                let mut m = f64::NEG_INFINITY;
+                for &x in v {
+                    if x.is_nan() {
+                        return Scalar::na(acc_dt);
+                    }
+                    if x > m {
+                        m = x;
+                    }
+                }
+                Scalar::F64(m)
+            }
+            _ => {
+                let mut acc = self.identity_na(acc_dt);
+                for i in 0..a.len() {
+                    acc = self.fold_scalar_na(acc, a.get(i), na);
+                }
+                acc
+            }
+        }
+    }
+
+    /// NA-aware aVUDF1 in per-element boxed-call mode — the bit-parity
+    /// reference for [`reduce_na`](AggOp::reduce_na).
+    pub fn reduce_na_scalar_mode(self, a: &Buf, na: NaMode) -> Scalar {
+        if na == NaMode::Off {
+            return self.reduce_scalar_mode(a);
+        }
+        let acc_dt = self.acc_dtype(a.dtype());
+        let mut acc = self.identity_na(acc_dt);
+        for i in 0..a.len() {
+            acc = black_box(self.fold_scalar_na(black_box(acc), black_box(a.get(i)), na));
+        }
+        acc
+    }
+
+    /// NA-aware aVUDF2: elementwise combine of two partial-accumulator
+    /// vectors (both already in the accumulator dtype).
+    pub fn combine_na(self, acc: &mut Buf, x: &Buf, na: NaMode) -> Result<()> {
+        if na == NaMode::Off {
+            return self.combine(acc, x);
+        }
+        if acc.len() != x.len() {
+            return Err(FmError::Shape(format!(
+                "combine length mismatch: {} vs {}",
+                acc.len(),
+                x.len()
+            )));
+        }
+        for i in 0..x.len() {
+            let folded = self.fold_scalar_na(acc.get(i), x.get(i), na);
+            acc.set(i, folded);
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Explicit SIMD lane kernels (`EngineConfig::simd_kernels`)
 // ---------------------------------------------------------------------------
 //
@@ -1248,5 +1448,95 @@ mod tests {
             assert_eq!(r, Scalar::F64(2.5), "{op:?}");
         }
         let _ = v;
+    }
+
+    /// Bitwise scalar comparison that treats two NaNs as equal (NA == NA
+    /// for parity purposes; payload bits are canonical on both paths).
+    fn scalar_bits_eq(a: Scalar, b: Scalar) -> bool {
+        match (a, b) {
+            (Scalar::F64(x), Scalar::F64(y)) => x.to_bits() == y.to_bits(),
+            (Scalar::F32(x), Scalar::F32(y)) => x.to_bits() == y.to_bits(),
+            _ => a == b,
+        }
+    }
+
+    /// Property: the monomorphic NA-aware reduce is bit-identical to the
+    /// boxed-scalar reference fold, for every op × mode × dtype over
+    /// deterministic pseudo-random data salted with NA sentinels.
+    #[test]
+    fn na_reduce_matches_scalar_reference() {
+        let mut state = 0x9E3779B97F4A7C15u64;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        for trial in 0..64 {
+            let n = 1 + (next() % 97) as usize;
+            let mut f64s = Vec::with_capacity(n);
+            let mut i32s = Vec::with_capacity(n);
+            for _ in 0..n {
+                let r = next();
+                if r % 5 == 0 && trial % 3 != 0 {
+                    f64s.push(f64::NAN);
+                    i32s.push(i32::MIN);
+                } else {
+                    f64s.push(((r % 2001) as f64 - 1000.0) / 8.0);
+                    i32s.push((r % 2001) as i32 - 1000);
+                }
+            }
+            for buf in [Buf::F64(f64s.clone()), Buf::I32(i32s.clone())] {
+                for op in [AggOp::Sum, AggOp::Prod, AggOp::Min, AggOp::Max] {
+                    for na in [NaMode::Off, NaMode::Propagate, NaMode::Remove] {
+                        let fast = op.reduce_na(&buf, na);
+                        let slow = op.reduce_na_scalar_mode(&buf, na);
+                        assert!(
+                            scalar_bits_eq(fast, slow),
+                            "{op:?}/{na:?}/{:?}: {fast:?} vs {slow:?}",
+                            buf.dtype()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Pin the R semantics table: na.rm=FALSE propagates, na.rm=TRUE
+    /// skips, and all-NA inputs degrade to the identity (R's empty-set
+    /// results) for Remove.
+    #[test]
+    fn na_modes_pin_r_semantics() {
+        let v = Buf::F64(vec![1.0, f64::NAN, 2.0]);
+        assert!(AggOp::Sum.reduce_na(&v, NaMode::Propagate).is_na());
+        assert!(AggOp::Min.reduce_na(&v, NaMode::Propagate).is_na());
+        assert!(AggOp::Max.reduce_na(&v, NaMode::Propagate).is_na());
+        assert!(AggOp::Prod.reduce_na(&v, NaMode::Propagate).is_na());
+        assert_eq!(AggOp::Sum.reduce_na(&v, NaMode::Remove), Scalar::F64(3.0));
+        assert_eq!(AggOp::Min.reduce_na(&v, NaMode::Remove), Scalar::F64(1.0));
+        assert_eq!(AggOp::Max.reduce_na(&v, NaMode::Remove), Scalar::F64(2.0));
+        assert_eq!(AggOp::Prod.reduce_na(&v, NaMode::Remove), Scalar::F64(2.0));
+        // all-NA: sum -> 0, min -> Inf, max -> -Inf (like R's empty set)
+        let all = Buf::F64(vec![f64::NAN; 4]);
+        assert_eq!(AggOp::Sum.reduce_na(&all, NaMode::Remove), Scalar::F64(0.0));
+        assert_eq!(
+            AggOp::Min.reduce_na(&all, NaMode::Remove),
+            Scalar::F64(f64::INFINITY)
+        );
+        assert_eq!(
+            AggOp::Max.reduce_na(&all, NaMode::Remove),
+            Scalar::F64(f64::NEG_INFINITY)
+        );
+        // integer sentinels: i32::MIN is NA_integer_
+        let iv = Buf::I32(vec![5, i32::MIN, -3]);
+        assert!(AggOp::Sum.reduce_na(&iv, NaMode::Propagate).is_na());
+        assert_eq!(AggOp::Sum.reduce_na(&iv, NaMode::Remove), Scalar::I32(2));
+        assert_eq!(AggOp::Min.reduce_na(&iv, NaMode::Remove), Scalar::I32(-3));
+        assert_eq!(AggOp::Max.reduce_na(&iv, NaMode::Remove), Scalar::I32(5));
+        // Off keeps the NA-oblivious legacy kernels byte for byte
+        assert_eq!(
+            AggOp::Min.reduce_na(&v, NaMode::Off),
+            AggOp::Min.reduce(&v)
+        );
     }
 }

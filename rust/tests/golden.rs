@@ -424,3 +424,109 @@ fn logistic_matches_python_oracle() {
         );
     }
 }
+
+/// Delimited ingestion vs the python mirror: `test_golden.py` writes two
+/// literal text files plus every typed cell it expects — ints, floats,
+/// FNV-1a hash buckets, sorted 1-based factor codes, and `null` where a
+/// cell is NA. Both the per-column (`load_list_vecs`) and the uniform-F64
+/// (`load_dense_matrix`) views must reproduce the oracle exactly; this
+/// pins the parse spec (trimming, NA set, sentinel choices, level order,
+/// hash function) against an independent implementation.
+#[test]
+fn ingestion_matches_python_oracle() {
+    use flashmatrix::dtype::{DType, Scalar};
+    use flashmatrix::ingest::DEFAULT_HASH_BUCKETS;
+    use flashmatrix::testutil::TempDir;
+    use flashmatrix::{EngineExt, LoadOptions, Schema};
+
+    let j = load_named_fixture("ingest_7x4.json");
+    let schema = Schema::parse(j.get("schema").unwrap().as_str().unwrap()).unwrap();
+    assert_eq!(
+        j.get("buckets").unwrap().as_u64().unwrap(),
+        u64::from(DEFAULT_HASH_BUCKETS),
+        "python mirror hashes into a different bucket count"
+    );
+    let delim = j.get("delim").unwrap().as_str().unwrap().as_bytes()[0];
+    let nas: Vec<&str> = j
+        .get("na_values")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_str().unwrap())
+        .collect();
+    let o = LoadOptions::new(schema).delim(delim).na_values(&nas);
+
+    let tmp = TempDir::new("golden-ingest");
+    let mut paths = Vec::new();
+    for (i, f) in j.get("files").unwrap().as_arr().unwrap().iter().enumerate() {
+        let p = tmp.path().join(format!("part-{i}.txt"));
+        std::fs::write(&p, f.as_str().unwrap()).unwrap();
+        paths.push(p);
+    }
+
+    let eng = Engine::new(EngineConfig {
+        xla_dispatch: false,
+        chunk_bytes: 1 << 20,
+        target_part_bytes: 1 << 20,
+        ..Default::default()
+    })
+    .unwrap();
+    let nrow = j.get("nrow").unwrap().as_u64().unwrap();
+    let cols = j.get("cols").unwrap().as_arr().unwrap();
+
+    // Typed per-column view: exact values, NA sentinels, factor levels.
+    let vecs = eng.load_list_vecs(&paths, &o).unwrap();
+    assert_eq!(vecs.len(), cols.len());
+    let want_dtypes = [DType::I32, DType::F64, DType::I32, DType::I32];
+    for (ci, (v, want)) in vecs.iter().zip(cols).enumerate() {
+        assert_eq!(v.v.nrow(), nrow, "col {ci} row count");
+        assert_eq!(v.v.dtype(), want_dtypes[ci], "col {ci} dtype");
+        let host = v.v.to_host().unwrap();
+        for (r, w) in want.as_arr().unwrap().iter().enumerate() {
+            let got = host.get(r, 0);
+            match (w, got) {
+                (Json::Null, Scalar::I32(g)) => {
+                    assert_eq!(g, i32::MIN, "col {ci} row {r}: expected int NA")
+                }
+                (Json::Null, Scalar::F64(g)) => {
+                    assert!(g.is_nan(), "col {ci} row {r}: expected NaN, got {g}")
+                }
+                (w, Scalar::I32(g)) => {
+                    assert_eq!(i64::from(g), w.as_f64().unwrap() as i64, "col {ci} row {r}")
+                }
+                (w, Scalar::F64(g)) => {
+                    assert_eq!(g, w.as_f64().unwrap(), "col {ci} row {r}")
+                }
+                (w, g) => panic!("col {ci} row {r}: oracle {w:?} vs rust {g:?}"),
+            }
+        }
+    }
+    let want_levels: Vec<&str> = j
+        .get("levels")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_str().unwrap())
+        .collect();
+    let levels = vecs[2].levels.as_ref().expect("factor column carries levels");
+    assert_eq!(levels.as_slice(), want_levels.as_slice());
+    assert!(vecs[0].levels.is_none() && vecs[3].levels.is_none());
+
+    // Uniform-F64 matrix view: every NA (whatever the column type)
+    // becomes NaN; everything else is exactly the typed value as f64.
+    let x = eng.load_dense_matrix(&paths, &o).unwrap();
+    assert_eq!((x.nrow(), x.ncol()), (nrow, cols.len() as u64));
+    assert_eq!(x.dtype(), DType::F64);
+    let host = x.to_host().unwrap();
+    for (ci, want) in cols.iter().enumerate() {
+        for (r, w) in want.as_arr().unwrap().iter().enumerate() {
+            let g = host.get(r, ci).as_f64();
+            match w {
+                Json::Null => assert!(g.is_nan(), "dense [{r},{ci}]: want NaN, got {g}"),
+                w => assert_eq!(g, w.as_f64().unwrap(), "dense [{r},{ci}]"),
+            }
+        }
+    }
+}

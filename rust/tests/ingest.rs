@@ -1,0 +1,295 @@
+//! Ingestion integration suite: the redesigned loader API end to end.
+//!
+//! The contract under test, from `docs/ARCHITECTURE.md`'s ingestion
+//! section:
+//! * an EM multi-file corpus load (partition cache smaller than the
+//!   data), followed by `as_factor` + `cbind_list` + logistic IRLS, is
+//!   **bit-identical** to the same pipeline run fully in memory;
+//! * ingestion rides the PR 8 fault-tolerance machinery: with a seeded
+//!   transient fault plan on the engine, the loaded matrix is
+//!   bit-identical to a fault-free load (text-chunk CRCs recorded in the
+//!   scan phase catch corrupted re-reads; bounded retries absorb
+//!   EIO/short reads/torn writes);
+//! * malformed input surfaces as a typed [`FmError::Parse`] carrying the
+//!   (file, line, column) location, and named loads persist factor level
+//!   tables in the `<name>.dense.json` sidecar.
+//!
+//! Workloads run `threads: 1` so sink merge order is part of the
+//! fingerprint (same restriction as `tests/chaos.rs`); the ingest worker
+//! pool is ramped independently via `ingest_workers`, whose schedule
+//! cannot affect bytes (each partition is parsed and written by exactly
+//! one worker from an exclusive newline-aligned byte range).
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use flashmatrix::algs;
+use flashmatrix::config::EngineConfig;
+use flashmatrix::datasets;
+use flashmatrix::fmr::Engine;
+use flashmatrix::storage::FaultConfig;
+use flashmatrix::testutil::{out_of_core_config, TempDir};
+use flashmatrix::{EngineExt, FmError, LoadOptions, Schema, StorageKind};
+
+/// Deterministic delimited corpus, schema `FFFI`: three float features
+/// and one small-range integer category, with NA cells sprinkled into
+/// the second float column and whitespace padding on some rows. Values
+/// are counter-based on the global row id, so any (files × rows_per)
+/// split of the same total row count produces the same logical table.
+fn write_corpus(dir: &Path, files: usize, rows_per: u64) -> Vec<PathBuf> {
+    use std::fmt::Write as _;
+    let mut paths = Vec::new();
+    for f in 0..files {
+        let mut text = String::new();
+        for r in 0..rows_per {
+            let g = f as u64 * rows_per + r;
+            let a = (g.wrapping_mul(2654435761) % 1000) as f64 / 500.0 - 1.0;
+            let b = (g.wrapping_mul(40503) % 777) as f64 / 388.5 - 1.0;
+            let c = (g.wrapping_mul(9176) % 333) as f64 / 166.5 - 1.0;
+            let cat = g % 5;
+            if g % 97 == 13 {
+                writeln!(text, "{a},NA,{c},{cat}").unwrap();
+            } else if g % 101 == 7 {
+                writeln!(text, " {a} , {b} ,{c},{cat}").unwrap();
+            } else {
+                writeln!(text, "{a},{b},{c},{cat}").unwrap();
+            }
+        }
+        let p = dir.join(format!("part-{f}.csv"));
+        std::fs::write(&p, text).unwrap();
+        paths.push(p);
+    }
+    paths
+}
+
+fn opts() -> LoadOptions {
+    LoadOptions::new(Schema::parse("FFFI").unwrap())
+}
+
+fn assert_bits(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: fingerprint length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}[{i}]: {x} != {y}");
+    }
+}
+
+/// The full redesigned-API pipeline: `fm.load.list.vecs` →
+/// `fm.as.factor` on the category column → `fm.cbind.list` →
+/// NA-aware mean on the NA-bearing column → logistic IRLS on the bound
+/// design matrix. Returns a fingerprint of every stage.
+fn pipeline_fp(eng: &Arc<Engine>, paths: &[PathBuf]) -> Vec<f64> {
+    let vecs = eng.load_list_vecs(paths, &opts()).unwrap();
+    assert_eq!(vecs.len(), 4);
+
+    let f = vecs[3].v.as_factor().unwrap();
+    let levels = f.levels.as_ref().unwrap();
+    assert_eq!(
+        levels.as_slice(),
+        ["0", "1", "2", "3", "4"],
+        "categories 0..5 must sort into five levels"
+    );
+
+    // na.rm mean of the NA-bearing float column (the NA-aware kernels)
+    let b_mean = vecs[1].v.mean(true).unwrap();
+
+    let x = eng
+        .cbind_list(&[vecs[0].clone(), vecs[2].clone(), f])
+        .unwrap()
+        .materialize()
+        .unwrap();
+    assert_eq!(x.ncol(), 3);
+    assert_eq!(x.dtype(), flashmatrix::dtype::DType::F64);
+
+    let y = datasets::logistic_labels(&x, &[0.75, -0.5, 0.25], 91).unwrap();
+    let fit = algs::logistic(&x, &y, 4, 1e-8).unwrap();
+
+    let mut fp = vec![b_mean, x.nrow() as f64, y.sum().unwrap()];
+    fp.extend(fit.beta);
+    fp.extend(fit.deviances);
+    fp
+}
+
+/// ISSUE acceptance: EM corpus load (cache < data) + as_factor +
+/// cbind_list + logistic IRLS, bit-identical to the fully-in-memory
+/// pipeline — with the EM leg's parse phase running on several workers.
+#[test]
+fn em_pipeline_bit_identical_to_in_memory() {
+    let src = TempDir::new("ingest-e2e-src");
+    let paths = write_corpus(src.path(), 3, 20_000);
+    let text_bytes: u64 = paths
+        .iter()
+        .map(|p| std::fs::metadata(p).unwrap().len())
+        .sum();
+
+    let im = Engine::new(EngineConfig {
+        storage: StorageKind::InMem,
+        threads: 1,
+        ingest_workers: 1,
+        chunk_bytes: 4 << 20,
+        target_part_bytes: 1 << 20,
+        xla_dispatch: false,
+        ..EngineConfig::default()
+    })
+    .unwrap();
+    let im_fp = pipeline_fp(&im, &paths);
+
+    let dir = TempDir::new("ingest-e2e-em");
+    let em = Engine::new(EngineConfig {
+        threads: 1,
+        ingest_workers: 4,
+        ingest_chunk_bytes: 64 << 10, // many chunks per file
+        em_cache_bytes: 512 << 10,
+        ..out_of_core_config(dir.path())
+    })
+    .unwrap();
+    let cap = em.cache.as_ref().unwrap().capacity() as u64;
+    assert!(
+        cap < text_bytes,
+        "cache {cap} must be smaller than the corpus ({text_bytes} B)"
+    );
+    let em_fp = pipeline_fp(&em, &paths);
+
+    let m = em.metrics.snapshot();
+    assert_eq!(m.ingest_rows, 60_000, "the loader saw every corpus row");
+    assert!(m.ingest_na_cells > 0, "corpus carries NA cells");
+    assert!(m.ingest_chunks > 2 * 3, "chunking never split the files");
+    assert!(m.io_read_bytes > 0, "EM leg never touched the store");
+
+    assert_bits(&im_fp, &em_fp, "ingest pipeline IM vs EM");
+}
+
+/// Chunking and worker count must not leak into the bytes: 1 worker with
+/// one big chunk vs many workers with tiny chunks, same matrix.
+#[test]
+fn worker_and_chunk_geometry_is_invisible() {
+    let src = TempDir::new("ingest-geom-src");
+    let paths = write_corpus(src.path(), 2, 5_000);
+    let run = |workers: usize, chunk: usize| {
+        let eng = Engine::new(EngineConfig {
+            storage: StorageKind::InMem,
+            threads: 1,
+            ingest_workers: workers,
+            ingest_chunk_bytes: chunk,
+            chunk_bytes: 4 << 20,
+            target_part_bytes: 1 << 20,
+            xla_dispatch: false,
+            ..EngineConfig::default()
+        })
+        .unwrap();
+        let x = eng.load_dense_matrix(&paths, &opts()).unwrap();
+        x.to_host().unwrap().buf.to_f64_vec()
+    };
+    let one = run(1, 8 << 20);
+    let many = run(5, 4 << 10);
+    assert_bits(&one, &many, "1-worker/1-chunk vs 5-worker/tiny-chunk");
+}
+
+/// Ingestion chaos, riding PR 8: a pinned transient fault plan (EIO +
+/// short reads + torn writes, all healing within the retry budget; no
+/// bit flips — plain text has no write-time checksum to catch a flip
+/// injected on the *first* read of a chunk, so a flip is outside the
+/// text reader's detection contract) must leave the loaded matrix
+/// bit-identical to a fault-free load, with faults provably injected
+/// and transparently recovered.
+#[test]
+fn ingestion_absorbs_transient_faults_bit_identically() {
+    let src = TempDir::new("ingest-chaos-src");
+    let paths = write_corpus(src.path(), 3, 8_000);
+    let faults = || {
+        FaultConfig::parse("seed=4117,eio=0.8,short=0.1,torn=0.1,max_duration=2")
+            .expect("valid FLASHR_FAULTS spec")
+    };
+    let run = |plan: Option<FaultConfig>, tag: &str| {
+        let dir = TempDir::new(tag);
+        let eng = Engine::new(EngineConfig {
+            threads: 1,
+            ingest_workers: 3,
+            ingest_chunk_bytes: 64 << 10,
+            fault_injection: plan,
+            ..out_of_core_config(dir.path())
+        })
+        .unwrap();
+        let x = eng.load_dense_matrix(&paths, &opts()).unwrap();
+        let host = x.to_host().unwrap().buf.to_f64_vec();
+        (host, eng, dir)
+    };
+    let (clean, _e0, _d0) = run(None, "ingest-chaos-clean");
+    let (faulty, eng, _d1) = run(Some(faults()), "ingest-chaos-faulty");
+    let m = eng.metrics.snapshot();
+    assert!(m.faults_injected > 0, "fault plan never fired");
+    assert!(m.io_retries > 0, "no transparent recovery exercised");
+    assert_bits(&clean, &faulty, "ingest EM faulty-vs-clean");
+}
+
+/// Malformed input surfaces as FmError::Parse with an exact location,
+/// pointing at the right file of a multi-file load.
+#[test]
+fn parse_errors_locate_file_line_and_column() {
+    let src = TempDir::new("ingest-err-src");
+    let good = src.path().join("good.csv");
+    std::fs::write(&good, "1.0,2.0,3.0,4\n5.0,6.0,7.0,8\n").unwrap();
+    let bad = src.path().join("bad.csv");
+    std::fs::write(&bad, "1.0,2.0,3.0,0\n2.5,oops,3.5,1\n").unwrap();
+    let eng = Engine::new(EngineConfig {
+        storage: StorageKind::InMem,
+        xla_dispatch: false,
+        chunk_bytes: 4 << 20,
+        target_part_bytes: 1 << 20,
+        ..EngineConfig::default()
+    })
+    .unwrap();
+    match eng.load_dense_matrix(&[&good, &bad], &opts()) {
+        Err(FmError::Parse { file, line, col, .. }) => {
+            assert!(file.ends_with("bad.csv"), "wrong file: {file}");
+            assert_eq!((line, col), (2, 2), "location of the bad field");
+        }
+        Err(other) => panic!("expected FmError::Parse, got {other}"),
+        Ok(_) => panic!("bad float must fail the load"),
+    }
+    // the error Display carries the clickable location
+    match eng.load_dense_matrix(&[&bad], &opts()) {
+        Err(e) => {
+            let shown = format!("{e}");
+            assert!(shown.contains("bad.csv:2:2"), "display: {shown}");
+        }
+        Ok(_) => panic!("bad float must fail the load"),
+    }
+}
+
+/// Named EM loads persist the column schema and factor level tables in
+/// the dense sidecar; `get_dense_matrix` reattaches bit-identically and
+/// the sidecar alone restores the levels.
+#[test]
+fn named_load_persists_schema_and_levels() {
+    let dir = TempDir::new("ingest-named");
+    let eng = Engine::new(EngineConfig {
+        threads: 1,
+        ..out_of_core_config(dir.path())
+    })
+    .unwrap();
+    let csv = dir.path().join("animals.csv");
+    std::fs::write(
+        &csv,
+        "1,0.5,cat\n2,NA,dog\n3,1.5,ant\n4,2.5,cat\n5,-0.5,dog\n",
+    )
+    .unwrap();
+    let o = LoadOptions::new(Schema::parse("IFX").unwrap()).name("animals");
+    let x = eng.load_dense_matrix(&[&csv], &o).unwrap();
+    let want = x.to_host().unwrap();
+
+    let again = eng.get_dense_matrix("animals").unwrap();
+    assert_eq!(again.dtype(), flashmatrix::dtype::DType::F64);
+    assert_eq!(again.to_host().unwrap(), want);
+
+    let meta = flashmatrix::runtime::manifest::DenseMeta::load(
+        &dir.path().join("animals.dense.json"),
+    )
+    .unwrap();
+    let codes: Vec<char> = meta.cols.iter().map(|c| c.code).collect();
+    assert_eq!(codes, ['I', 'F', 'X']);
+    assert_eq!(meta.cols[2].levels, ["ant", "cat", "dog"]);
+    assert!(
+        meta.crcs.iter().all(|c| c.is_some()),
+        "write-time partition checksums must be persisted"
+    );
+}

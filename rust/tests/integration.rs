@@ -7,7 +7,7 @@ use std::sync::Arc;
 
 use flashmatrix::config::{EngineConfig, StorageKind, ThrottleConfig};
 use flashmatrix::datasets;
-use flashmatrix::fmr::{Engine, FmMatrix};
+use flashmatrix::fmr::{Engine, EngineExt, FmMatrix};
 use flashmatrix::vudf::AggOp;
 
 fn tmpdir(tag: &str) -> std::path::PathBuf {
@@ -226,9 +226,9 @@ fn conv_store_roundtrips_between_storages() {
     let x = datasets::uniform(&eng, 40_000, 4, -1.0, 1.0, 17, None).unwrap();
     let sum_em = x.sum().unwrap();
     // move SSD -> memory and back; values identical
-    let x_im = x.conv_store(flashmatrix::StorageKind::InMem).unwrap();
+    let x_im = x.conv_store(true).unwrap();
     assert_eq!(x_im.sum().unwrap(), sum_em);
-    let x_em2 = x_im.conv_store(flashmatrix::StorageKind::External).unwrap();
+    let x_em2 = x_im.conv_store(false).unwrap();
     assert_eq!(x_em2.sum().unwrap(), sum_em);
     assert!(eng.metrics.snapshot().io_write_bytes > 0);
 }
@@ -334,7 +334,7 @@ fn scheduler_steals_surface_in_metrics() {
     // Worker 1 finishes its fast units while worker 0 crawls through
     // partition 0, so unit 1 must be stolen.
     let n = 4u64 * 65536;
-    let x = FmMatrix::seq_int(&eng, 0.0, 1.0, n);
+    let x = eng.seq_int(0.0, 1.0, n);
     eng.metrics.reset();
     let s = x.sapply_custom("slow-first-partition").unwrap().sum().unwrap();
     let m = eng.metrics.snapshot();
@@ -380,7 +380,7 @@ fn failing_partition_aborts_pass_early() {
     let eng = Engine::new(cfg).unwrap();
     eng.registry.register(std::sync::Arc::new(Probe));
     // 16 pass partitions (io_rows_for(1) = 65536)
-    let x = FmMatrix::seq_int(&eng, 0.0, 1.0, 16 * 65536);
+    let x = eng.seq_int(0.0, 1.0, 16 * 65536);
     eng.metrics.reset();
     let r = x.sapply_custom("abort-probe").unwrap().sum();
     assert!(r.is_err(), "the failing partition's error must propagate");
@@ -441,7 +441,7 @@ fn writeback_abort_discards_dirty_partitions() {
     let eng = Engine::new(cfg).unwrap();
     eng.registry.register(Arc::new(FailAtRow((n - 1) as f64)));
 
-    let x = FmMatrix::seq_int(&eng, 0.0, 1.0, n);
+    let x = eng.seq_int(0.0, 1.0, n);
     eng.metrics.reset();
     let r = x.sapply_custom("wb-abort-probe").unwrap().materialize();
     assert!(r.is_err(), "the failing partition's error must propagate");
@@ -471,7 +471,7 @@ fn writeback_abort_discards_dirty_partitions() {
     // the engine, cache and writer thread stay usable: a clean pass on
     // the same engine flushes, and the file alone (cache cleared) holds
     // the full result
-    let z = FmMatrix::seq_int(&eng, 0.0, 1.0, 65536);
+    let z = eng.seq_int(0.0, 1.0, 65536);
     let z2 = z.sq().unwrap().materialize().unwrap();
     if let Some(c) = &eng.cache {
         c.clear();
@@ -598,7 +598,7 @@ fn groupby_empty_group_yields_zero_row() {
     assert_eq!(sums.get(1, 1).as_f64(), 0.0);
     assert_eq!(sums.get(2, 0).as_f64(), 2.0);
     // counts via groupby of ones: the empty group counts zero
-    let ones = FmMatrix::fill(&eng, flashmatrix::dtype::Scalar::F64(1.0), 3, 1);
+    let ones = eng.fill(flashmatrix::dtype::Scalar::F64(1.0), 3, 1);
     let counts = ones.groupby_row(&labels, 3, AggOp::Sum).unwrap();
     assert_eq!(counts.get(1, 0).as_f64(), 0.0);
 }

@@ -7,7 +7,7 @@
 use flashmatrix::config::EngineConfig;
 use flashmatrix::datasets;
 use flashmatrix::dtype::{DType, Scalar};
-use flashmatrix::fmr::{Engine, FmMatrix};
+use flashmatrix::fmr::{Engine, EngineExt, FmMatrix};
 use flashmatrix::matrix::{io_rows_for, HostMat, Partitioning};
 use flashmatrix::util::quickcheck::forall;
 use flashmatrix::vudf::{AggOp, BinOp, UnOp};
@@ -153,7 +153,7 @@ fn prop_groupby_total_preserved() {
         let eng = eng_with(g.usize_in(1, 3), g.bool());
         let x = datasets::uniform(&eng, n as u64, p as u64, -1.0, 1.0, seed, None).unwrap();
         // labels = floor(u * k) from an independent column
-        let u = FmMatrix::runif_matrix(&eng, n as u64, 1, 0.0, k as f64, seed ^ 1);
+        let u = eng.runif_matrix(n as u64, 1, 0.0, k as f64, seed ^ 1);
         let labels = u
             .sapply(UnOp::Floor)
             .unwrap()
@@ -166,7 +166,7 @@ fn prop_groupby_total_preserved() {
             return Err(format!("groupby lost mass: {total_grouped} vs {total}"));
         }
         // counts per group sum to n
-        let ones = FmMatrix::fill(&eng, Scalar::F64(1.0), n as u64, 1);
+        let ones = eng.fill(Scalar::F64(1.0), n as u64, 1);
         let counts = ones.groupby_row(&labels, k, AggOp::Sum).unwrap();
         let csum: f64 = counts.buf.to_f64_vec().iter().sum();
         if csum != n as f64 {
@@ -225,8 +225,8 @@ fn prop_dtype_promotion_safe() {
         let n = g.usize_in(10, 2000) as u64;
         let eng = eng_with(1, true);
         let dt = *g.choose(&[DType::Bool, DType::I32, DType::I64, DType::F32, DType::F64]);
-        let a = FmMatrix::fill(&eng, Scalar::F64(1.0).cast(dt), n, 2);
-        let b = FmMatrix::fill(&eng, Scalar::F64(2.0), n, 2);
+        let a = eng.fill(Scalar::F64(1.0).cast(dt), n, 2);
+        let b = eng.fill(Scalar::F64(2.0), n, 2);
         let c = a.add(&b).unwrap();
         let s = c.sum().unwrap();
         if s != 3.0 * 2.0 * n as f64 {
